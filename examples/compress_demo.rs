@@ -1,0 +1,100 @@
+//! Compress-and-Route close-up: run the §5.2 extractive pipeline on a
+//! borderline RAG-style prompt, show the stage scores, the hard OOM
+//! guarantee, and the Table-7 fidelity metrics (including the
+//! model-embedding cosine when artifacts are built).
+//!
+//! ```bash
+//! cargo run --release --example compress_demo
+//! ```
+
+use fleetopt::compress::corpus::{generate_borderline, generate_code};
+use fleetopt::compress::doc::Document;
+use fleetopt::compress::extractive::compress_doc;
+use fleetopt::compress::gate::{compression_budget, gate, GateDecision};
+use fleetopt::compress::scoring::score;
+use fleetopt::compress::tokenizer::count_tokens;
+use fleetopt::compress::{fidelity, GateDecision as _GD};
+use fleetopt::router::classify;
+use fleetopt::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let _ = _GD::RouteShort; // silence unused import lint on re-export check
+    let b_short = 8192u32;
+    let gamma = 1.5;
+    let l_out = 512u32;
+    let mut rng = Rng::new(42);
+
+    // A borderline prompt: 8K-12K tokens of RAG-ish prose.
+    let doc_text = generate_borderline(b_short, gamma, &mut rng);
+    let l_total = count_tokens(&doc_text) + l_out;
+    let category = classify(&doc_text);
+    println!(
+        "prompt: {} tokens (+{} output budget) category={:?}",
+        count_tokens(&doc_text),
+        l_out,
+        category
+    );
+
+    // Gate (paper §5.1-5.2).
+    let decision = gate(l_total, b_short, gamma, category);
+    println!("gate decision: {decision:?}");
+    assert_eq!(decision, GateDecision::CompressAndRoute);
+
+    // Stage scores for the first few sentences.
+    let doc = Document::parse(&doc_text);
+    let scores = score(&doc);
+    println!("\nfirst 6 sentences (textrank/position/tfidf/novelty -> composite):");
+    for i in 0..6.min(doc.n_sentences()) {
+        println!(
+            "  [{i}] {:.2}/{:.2}/{:.2}/{:.2} -> {:.3}  {:.60}...",
+            scores.textrank[i],
+            scores.position[i],
+            scores.tfidf[i],
+            scores.novelty[i],
+            scores.composite[i],
+            doc.sentences[i]
+        );
+    }
+
+    // Compress to T_c = B_short - L_out (Eq. 15).
+    let budget = compression_budget(b_short, l_out).unwrap();
+    let t0 = std::time::Instant::now();
+    let c = compress_doc(&doc, budget);
+    println!(
+        "\ncompressed {} -> {} tokens (budget {budget}) in {:.1} ms; ok={}",
+        c.original_tokens,
+        c.compressed_tokens,
+        t0.elapsed().as_secs_f64() * 1e3,
+        c.ok
+    );
+    assert!(c.compressed_tokens + l_out <= b_short, "OOM guarantee violated!");
+    println!("hard OOM guarantee: {} + {} <= {}", c.compressed_tokens, l_out, b_short);
+
+    // Fidelity (Table 7 metrics).
+    let f = fidelity::measure(&doc_text, &c.text);
+    println!(
+        "fidelity: ROUGE-L recall={:.3} TF-IDF cosine={:.3} reduction={:.1}%",
+        f.rouge_l_recall,
+        f.tfidf_cosine,
+        f.token_reduction * 100.0
+    );
+    if let Some(dir) = fleetopt::experiments::artifacts_dir() {
+        let rt = fleetopt::runtime::ModelRuntime::load(dir)?;
+        let ea = rt.embed_text(&doc_text)?;
+        let eb = rt.embed_text(&c.text)?;
+        println!(
+            "embedding cosine (L1/L2 stack, BERTScore proxy): {:.3}",
+            fleetopt::runtime::cosine(&ea, &eb)
+        );
+    } else {
+        println!("(embedding cosine skipped: run `make artifacts`)");
+    }
+
+    // The safety gate: code is never compressed.
+    let code = generate_code(10_000, &mut rng);
+    let code_cat = classify(&code);
+    let code_decision = gate(count_tokens(&code) + l_out, b_short, gamma, code_cat);
+    println!("\ncode prompt: category={code_cat:?} -> {code_decision:?} (never compressed)");
+    assert_eq!(code_decision, GateDecision::BandButUnsafe);
+    Ok(())
+}

@@ -1,0 +1,64 @@
+//! Planner deep-dive: the full Algorithm-1 sweep, the marginal-cost (FOC)
+//! profile behind Proposition 1, and the mu_l-recalibration ablation the
+//! paper calls "critical" (§6).
+//!
+//! ```bash
+//! cargo run --release --example planner_sweep
+//! ```
+
+use fleetopt::planner::marginal::foc_profile;
+use fleetopt::planner::{
+    candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, sweep_full, PlanInput,
+};
+use fleetopt::workload::traces;
+
+fn main() -> anyhow::Result<()> {
+    for w in traces::all() {
+        let input = PlanInput::new(w.clone(), 1000.0);
+        println!("\n=== {} ===", w.name);
+
+        // Full (B, gamma) sweep.
+        let t0 = std::time::Instant::now();
+        let (best, grid) = sweep_full(&input)?;
+        println!(
+            "optimum: B*={} gamma*={:.1} -> {} GPUs (${:.0}K/yr); {} cells in {:.1} ms",
+            best.b_short,
+            best.gamma,
+            best.total_gpus(),
+            best.cost_yr / 1e3,
+            grid.len(),
+            t0.elapsed().as_secs_f64() * 1e3
+        );
+
+        // Proposition 1: the marginal-cost gap across boundaries. Negative
+        // everywhere => the short pool is marginally cheaper at every
+        // feasible B, and the planner raises the *effective* boundary via
+        // gamma instead (the C&R virtual pool).
+        let cands = candidate_boundaries(&input);
+        let prof = foc_profile(&input, &cands, 1.0);
+        println!("FOC gap (c_s dn_s/dl - c_l dn_l/dl), $/hr per req/s:");
+        for (b, gap) in prof {
+            println!("  B={b:6}: {gap:+.3}");
+        }
+
+        // The recalibration ablation: skipping the post-compression mu_l
+        // recalibration underestimates the long pool (over-promises
+        // savings) — exactly the failure mode §6 warns about.
+        let correct = plan_fleet(&input, w.b_short, 2.0)?;
+        let wrong = plan_fleet_no_recalibration(&input, w.b_short, 2.0)?;
+        println!(
+            "recalibration ablation at gamma=2.0: correct n_l={}, naive n_l={} ({}%)",
+            correct.long.n_gpus,
+            wrong.long.n_gpus,
+            if correct.long.n_gpus > 0 {
+                format!(
+                    "{:+.0}",
+                    100.0 * (wrong.long.n_gpus as f64 / correct.long.n_gpus as f64 - 1.0)
+                )
+            } else {
+                "n/a".into()
+            }
+        );
+    }
+    Ok(())
+}

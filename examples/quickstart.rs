@@ -1,0 +1,46 @@
+//! Quickstart: plan a minimum-cost fleet from a workload CDF in ~20 lines.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use fleetopt::planner::{plan_fleet, plan_homogeneous, sweep_gamma, PlanInput};
+use fleetopt::workload::traces;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Pick a workload CDF (here: the Azure-trace-calibrated generator)
+    //    and an arrival rate.
+    let workload = traces::azure();
+    let input = PlanInput::new(workload.clone(), 1000.0); // 1,000 req/s
+
+    // 2. Baselines: homogeneous 64K fleet and plain pool routing.
+    let homo = plan_homogeneous(&input)?;
+    let pr = plan_fleet(&input, workload.b_short, 1.0)?;
+
+    // 3. FleetOpt: sweep gamma at the boundary; C&R makes the optimal
+    //    boundary achievable (paper Algorithm 1).
+    let best = sweep_gamma(&input, workload.b_short)?;
+
+    println!("workload          : {}", workload.name);
+    println!("alpha / beta      : {:.3} / {:.3}", workload.alpha(), workload.beta());
+    println!("homogeneous fleet : {} GPUs (${:.0}K/yr)", homo.total_gpus(), homo.cost_yr / 1e3);
+    println!(
+        "pool routing      : {} GPUs ({:.1}% saved)",
+        pr.total_gpus(),
+        100.0 * (1.0 - pr.cost_yr / homo.cost_yr)
+    );
+    println!(
+        "fleetopt (g*={:.1}) : {} GPUs = {} short + {} long ({:.1}% saved)",
+        best.gamma,
+        best.total_gpus(),
+        best.short.n_gpus,
+        best.long.n_gpus,
+        100.0 * (1.0 - best.cost_yr / homo.cost_yr)
+    );
+    println!(
+        "pool utilization  : short {:.3}, long {:.3} (cap 0.85)",
+        best.short.rho_ana(),
+        best.long.rho_ana()
+    );
+    Ok(())
+}

@@ -1,0 +1,167 @@
+"""AOT export: lower the L2/L1 graph to HLO *text* artifacts for the Rust
+runtime.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()`` —
+jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the HLO text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Outputs (artifacts/):
+  decode_short.hlo.txt   one lockstep decode iteration, short pool (S=8, C=256)
+  prefill_short.hlo.txt  one prefill chunk for a short-pool slot
+  decode_long.hlo.txt    long pool (S=2, C=1024)
+  prefill_long.hlo.txt
+  embed.hlo.txt          mean-pooled text embedding (fidelity study, Table 7)
+  weights.bin            manifest-ordered flat little-endian f32 weights
+  manifest.json          shapes + arg order + pool configs for the Rust side
+
+Python runs ONCE at build time; the Rust binary is self-contained after
+``make artifacts``.
+"""
+
+import argparse
+import functools
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from compile.model import ModelConfig, decode_step, embed_text, init_params, param_manifest, prefill_chunk
+
+# Live-path pool configs (scaled-down; DESIGN.md §4). The cliff ratio
+# rho_live = n_slots_short / n_slots_long = 4, mirroring the paper's
+# short-vs-long slot asymmetry at equal KV budget (8*256 == 2*1024).
+POOLS = {
+    "short": {"n_slots": 8, "ctx": 256},
+    "long": {"n_slots": 2, "ctx": 1024},
+}
+CHUNK = 64      # live C_chunk
+EMBED_LEN = 256  # fixed token window for embed_text
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def build_artifacts(out_dir: str, seed: int = 0) -> None:
+    cfg = ModelConfig()
+    params = init_params(cfg, seed=seed)
+    param_specs = [spec(p.shape) for p in params]
+    L, H, D = cfg.n_layers, cfg.n_heads, cfg.head_dim
+
+    os.makedirs(out_dir, exist_ok=True)
+    artifacts = {}
+
+    for pool, pc in POOLS.items():
+        S, C = pc["n_slots"], pc["ctx"]
+
+        dec = functools.partial(decode_step, cfg=cfg)
+        lowered = jax.jit(dec).lower(
+            param_specs,
+            spec((S, L, C, H, D)),
+            spec((S, L, C, H, D)),
+            spec((S,), jnp.int32),
+            spec((S,), jnp.int32),
+        )
+        name = f"decode_{pool}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts[name] = {
+            "pool": pool,
+            "kind": "decode",
+            "n_slots": S,
+            "ctx": C,
+            "args": "params*, k_cache[S,L,C,H,D], v_cache, tokens[S]i32, pos[S]i32",
+            "outputs": "logits[S,V], k_cache, v_cache",
+        }
+
+        pre = functools.partial(prefill_chunk, cfg=cfg)
+        lowered = jax.jit(pre).lower(
+            param_specs,
+            spec((L, C, H, D)),
+            spec((L, C, H, D)),
+            spec((CHUNK,), jnp.int32),
+            spec((), jnp.int32),
+        )
+        name = f"prefill_{pool}"
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(to_hlo_text(lowered))
+        artifacts[name] = {
+            "pool": pool,
+            "kind": "prefill",
+            "chunk": CHUNK,
+            "ctx": C,
+            "args": "params*, k_cache[L,C,H,D], v_cache, tokens[T]i32, pos_base i32",
+            "outputs": "logits[T,V], k_cache, v_cache",
+        }
+
+    emb = functools.partial(embed_text, cfg=cfg)
+    lowered = jax.jit(emb).lower(
+        param_specs, spec((EMBED_LEN,), jnp.int32), spec((), jnp.int32)
+    )
+    with open(os.path.join(out_dir, "embed.hlo.txt"), "w") as f:
+        f.write(to_hlo_text(lowered))
+    artifacts["embed"] = {
+        "kind": "embed",
+        "len": EMBED_LEN,
+        "args": "params*, tokens[T]i32, valid_len i32",
+        "outputs": "embedding[d]",
+    }
+
+    # Flat weights + manifest.
+    blob = b"".join(np.asarray(p, dtype="<f4").tobytes() for p in params)
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        f.write(blob)
+
+    manifest = {
+        "model": {
+            "vocab": cfg.vocab,
+            "d_model": cfg.d_model,
+            "n_layers": cfg.n_layers,
+            "n_heads": cfg.n_heads,
+            "head_dim": cfg.head_dim,
+            "ffn_dim": cfg.ffn_dim,
+            "rope_theta": cfg.rope_theta,
+            "seed": seed,
+        },
+        "pools": POOLS,
+        "chunk": CHUNK,
+        "embed_len": EMBED_LEN,
+        "params": [
+            {"name": n, "shape": list(s)} for n, s in param_manifest(cfg)
+        ],
+        "weights_sha256": hashlib.sha256(blob).hexdigest(),
+        "artifacts": artifacts,
+    }
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    total = sum(int(np.prod(s)) for _, s in param_manifest(cfg))
+    print(f"wrote {len(artifacts)} HLO artifacts + {total} weights to {out_dir}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    build_artifacts(args.out, seed=args.seed)
+
+
+if __name__ == "__main__":
+    main()

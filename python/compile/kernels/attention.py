@@ -1,0 +1,221 @@
+"""L1 Pallas kernels: the serving hot-spot (KV-cache attention).
+
+Two kernels, both written TPU-first and executed with ``interpret=True`` on
+this CPU-only image (real-TPU lowering emits a Mosaic custom-call the CPU
+PJRT plugin cannot run — see DESIGN.md §Hardware-Adaptation):
+
+* ``decode_attention`` — batched single-token decode over the KV cache,
+  FlashAttention-style online softmax over KV *pages*. The page loop is a
+  grid dimension, so on a real TPU each page's K/V tiles are staged
+  HBM→VMEM by the Pallas pipeline while the previous page is being reduced
+  (the role threadblock double-buffering plays in the CUDA formulation).
+  Running max / denominator / weighted accumulator live in VMEM scratch.
+* ``prefill_attention`` — chunked-prefill attention for one slot: the
+  chunk's T queries attend causally to the cache prefix plus the chunk
+  itself. T×page score tiles are MXU-shaped matmuls.
+
+Both are validated against ``ref.py`` by pytest + hypothesis sweeps over
+shapes, page sizes, and positions.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+                   *, page: int, pages: int):
+    """One (slot, head, kv-page) grid step of online-softmax decode.
+
+    Block shapes:
+      pos_ref: [1]        (SMEM-ish scalar: newest-token index for the slot)
+      q_ref:   [1, 1, D]
+      k_ref:   [1, P, 1, D]
+      v_ref:   [1, P, 1, D]
+      o_ref:   [1, 1, D]  (revisited across the page grid dimension)
+      scratch: m [1, 1], l [1, 1], acc [1, D]
+    """
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0, :]                      # [D]
+    k = k_ref[0, :, 0, :]                   # [P, D]
+    v = v_ref[0, :, 0, :]                   # [P, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    # [P] scores for this page; MXU-friendly as a [P, D] x [D] contraction.
+    s = jnp.dot(k, q, preferred_element_type=jnp.float32) * scale
+
+    # Causal / length mask: global cache index <= pos (newest token incl.).
+    base = p * page
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, (page, 1), 0)[:, 0]
+    s = jnp.where(idx <= pos_ref[0], s, NEG_INF)
+
+    # Online softmax update.
+    m_prev = m_ref[0, 0]
+    m_new = jnp.maximum(m_prev, jnp.max(s))
+    alpha = jnp.exp(m_prev - m_new)
+    p_exp = jnp.exp(s - m_new)              # [P]
+    l_ref[0, 0] = l_ref[0, 0] * alpha + jnp.sum(p_exp)
+    acc_ref[0, :] = acc_ref[0, :] * alpha + jnp.dot(
+        p_exp, v, preferred_element_type=jnp.float32
+    )
+    m_ref[0, 0] = m_new
+
+    @pl.when(p == pages - 1)
+    def _finalize():
+        o_ref[0, 0, :] = (acc_ref[0, :] / l_ref[0, 0]).astype(o_ref.dtype)
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, page: int = 128):
+    """Batched decode attention. See ``ref.decode_attention_ref``.
+
+    Args:
+      q:        [S, H, D] new-token queries (RoPE applied).
+      k_cache:  [S, C, H, D]; position ``pos[s]`` already holds the new key.
+      v_cache:  [S, C, H, D].
+      pos:      [S] int32 newest-token index per slot.
+      page:     KV page length staged through VMEM per grid step.
+
+    Returns:
+      [S, H, D] attention output.
+    """
+    S, C, H, D = k_cache.shape
+    if C % page != 0:
+        page = C  # degenerate single-page fallback for odd shapes
+    pages = C // page
+
+    kernel = functools.partial(_decode_kernel, page=page, pages=pages)
+    return pl.pallas_call(
+        kernel,
+        grid=(S, H, pages),
+        in_specs=[
+            pl.BlockSpec((1,), lambda s, h, p: (s,)),
+            pl.BlockSpec((1, 1, D), lambda s, h, p: (s, h, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda s, h, p: (s, p, h, 0)),
+            pl.BlockSpec((1, page, 1, D), lambda s, h, p: (s, p, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, D), lambda s, h, p: (s, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((S, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, D), jnp.float32),
+        ],
+        interpret=True,
+    )(pos, q, k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# prefill (chunked) attention
+# ---------------------------------------------------------------------------
+
+
+def _prefill_kernel(base_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref,
+                    acc_ref, *, page: int, pages: int, chunk: int):
+    """One (head, kv-page) grid step of chunked-prefill flash attention.
+
+    Block shapes:
+      base_ref: [1]          (pos_base: tokens already in cache before chunk)
+      q_ref:    [T, 1, D]
+      k_ref:    [P, 1, D]
+      v_ref:    [P, 1, D]
+      o_ref:    [T, 1, D]    (revisited across pages)
+      scratch:  m [T, 1], l [T, 1], acc [T, D]
+    """
+    p = pl.program_id(1)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[:, 0, :]                      # [T, D]
+    k = k_ref[:, 0, :]                      # [P, D]
+    v = v_ref[:, 0, :]                      # [P, D]
+    d = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(d, dtype=q.dtype))
+
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale  # [T, P]
+
+    # Row i (global position base + i) attends to cache index <= base + i.
+    base = base_ref[0]
+    rows = jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 0)
+    cols = p * page + jax.lax.broadcasted_iota(jnp.int32, (chunk, page), 1)
+    s = jnp.where(cols <= base + rows, s, NEG_INF)
+
+    m_prev = m_ref[:, 0]                    # [T]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    alpha = jnp.exp(m_prev - m_new)         # [T]
+    p_exp = jnp.exp(s - m_new[:, None])     # [T, P]
+    l_ref[:, 0] = l_ref[:, 0] * alpha + jnp.sum(p_exp, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(
+        p_exp, v, preferred_element_type=jnp.float32
+    )
+    m_ref[:, 0] = m_new
+
+    @pl.when(p == pages - 1)
+    def _finalize():
+        o_ref[:, 0, :] = (acc_ref[...] / l_ref[:, 0][:, None]).astype(
+            o_ref.dtype
+        )
+
+
+def prefill_attention(q, k_cache, v_cache, pos_base, *, page: int = 128):
+    """Chunked-prefill attention for one slot. See ``ref.prefill_attention_ref``.
+
+    Args:
+      q:        [T, H, D] chunk queries (RoPE applied at pos_base..pos_base+T-1).
+      k_cache:  [C, H, D]; ``[pos_base : pos_base+T]`` already holds the chunk.
+      v_cache:  [C, H, D].
+      pos_base: [] or [1] int32.
+      page:     KV page length per grid step.
+
+    Returns:
+      [T, H, D] attention output for the chunk.
+    """
+    T, H, D = q.shape
+    C = k_cache.shape[0]
+    if C % page != 0:
+        page = C
+    pages = C // page
+    base = jnp.reshape(jnp.asarray(pos_base, dtype=jnp.int32), (1,))
+
+    kernel = functools.partial(
+        _prefill_kernel, page=page, pages=pages, chunk=T
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=(H, pages),
+        in_specs=[
+            pl.BlockSpec((1,), lambda h, p: (0,)),
+            pl.BlockSpec((T, 1, D), lambda h, p: (0, h, 0)),
+            pl.BlockSpec((page, 1, D), lambda h, p: (p, h, 0)),
+            pl.BlockSpec((page, 1, D), lambda h, p: (p, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((T, 1, D), lambda h, p: (0, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, H, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, 1), jnp.float32),
+            pltpu.VMEM((T, D), jnp.float32),
+        ],
+        interpret=True,
+    )(base, q, k_cache, v_cache)

@@ -1,0 +1,65 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the L1 kernels are validated against (pytest +
+hypothesis). They are deliberately written in the most direct way possible —
+no tiling, no online softmax — so that a mismatch always implicates the
+kernel, not the oracle.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k_cache, v_cache, pos):
+    """Batched single-token decode attention over a KV cache.
+
+    Args:
+      q:        [S, H, D]  query for the token just written at index ``pos``.
+      k_cache:  [S, C, H, D] key cache (position ``pos`` already updated).
+      v_cache:  [S, C, H, D] value cache.
+      pos:      [S] int32, index of the newest token per slot. Slot ``s``
+                attends to cache positions ``0..pos[s]`` inclusive.
+
+    Returns:
+      [S, H, D] attention output.
+    """
+    S, C, H, D = k_cache.shape
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, dtype=q.dtype))
+    # scores[s, h, c] = q[s, h, :] . k_cache[s, c, h, :]
+    scores = jnp.einsum("shd,schd->shc", q, k_cache) * scale
+    idx = jnp.arange(C)[None, None, :]
+    mask = idx <= pos[:, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("shc,schd->shd", probs, v_cache)
+
+
+def prefill_attention_ref(q, k_cache, v_cache, pos_base):
+    """Chunked-prefill attention for a single slot.
+
+    Query row ``i`` (global position ``pos_base + i``) attends to cache
+    positions ``0..pos_base + i`` inclusive. The cache must already contain
+    the chunk's keys/values at ``[pos_base : pos_base + T]``.
+
+    Args:
+      q:        [T, H, D] chunk queries (RoPE already applied).
+      k_cache:  [C, H, D] key cache.
+      v_cache:  [C, H, D] value cache.
+      pos_base: scalar int32, number of tokens in the cache before the chunk.
+
+    Returns:
+      [T, H, D] attention output for the chunk.
+    """
+    T, H, D = q.shape
+    C = k_cache.shape[0]
+    scale = 1.0 / jnp.sqrt(jnp.asarray(D, dtype=q.dtype))
+    scores = jnp.einsum("thd,chd->htc", q, k_cache) * scale  # [H, T, C]
+    rows = jnp.arange(T)[:, None]
+    cols = jnp.arange(C)[None, :]
+    mask = cols <= (pos_base + rows)  # [T, C]
+    scores = jnp.where(mask[None, :, :], scores, NEG_INF)
+    probs = jnp.exp(scores - scores.max(axis=-1, keepdims=True))
+    probs = probs / probs.sum(axis=-1, keepdims=True)
+    return jnp.einsum("htc,chd->thd", probs, v_cache)

@@ -1,0 +1,258 @@
+"""L2: Llama-style transformer with an explicit KV cache, built on the L1
+Pallas attention kernels.
+
+This is the *compute graph* the Rust coordinator serves. Three entrypoints,
+each AOT-lowered to HLO text per pool configuration by ``aot.py``:
+
+* ``decode_step``    — one continuous-batching iteration: every occupied KV
+                       slot advances by one token (the paper's Eq. 3 lockstep
+                       model).
+* ``prefill_chunk``  — one chunked-prefill iteration for a single slot
+                       (chunk size C_chunk, the paper's Eq. 4 ceil(L_in/C_chunk)
+                       term).
+* ``embed_text``     — mean-pooled final hidden state; used by the fidelity
+                       study (Table 7) as the semantic-similarity proxy in
+                       place of BERTScore (see DESIGN.md §1).
+
+Weights are *runtime arguments*, not baked constants: ``aot.py`` writes them
+to ``artifacts/weights.bin`` (flat f32, manifest-ordered) and the Rust
+runtime feeds them as leading PJRT inputs. This keeps the HLO text small and
+lets one artifact serve any checkpoint with the same shapes.
+"""
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.attention import decode_attention, prefill_attention
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Scaled-down Llama-style config (see DESIGN.md §4 live-path scaling)."""
+
+    vocab: int = 256
+    d_model: int = 64
+    n_layers: int = 2
+    n_heads: int = 4
+    head_dim: int = 16
+    ffn_dim: int = 128
+    rope_theta: float = 10000.0
+
+    @property
+    def qkv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+# Parameter manifest: (name, shape) in the exact argument order the HLO
+# expects. Rust replays this order when loading weights.bin.
+def param_manifest(cfg: ModelConfig):
+    entries = [("tok_emb", (cfg.vocab, cfg.d_model))]
+    for layer in range(cfg.n_layers):
+        p = f"layer{layer}."
+        entries += [
+            (p + "attn_norm", (cfg.d_model,)),
+            (p + "wq", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wk", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wv", (cfg.d_model, cfg.qkv_dim)),
+            (p + "wo", (cfg.qkv_dim, cfg.d_model)),
+            (p + "mlp_norm", (cfg.d_model,)),
+            (p + "w_gate", (cfg.d_model, cfg.ffn_dim)),
+            (p + "w_up", (cfg.d_model, cfg.ffn_dim)),
+            (p + "w_down", (cfg.ffn_dim, cfg.d_model)),
+        ]
+    entries += [("final_norm", (cfg.d_model,)), ("lm_head", (cfg.d_model, cfg.vocab))]
+    return entries
+
+
+def init_params(cfg: ModelConfig, seed: int = 0) -> List[jax.Array]:
+    """Seeded synthetic weights (no pretrained checkpoint is available
+    offline; see DESIGN.md §1 substitutions)."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_manifest(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            params.append(jnp.ones(shape, jnp.float32))
+        else:
+            fan_in = shape[0] if len(shape) > 1 else 1
+            params.append(
+                jax.random.normal(sub, shape, jnp.float32) / jnp.sqrt(fan_in)
+            )
+    return params
+
+
+# ---------------------------------------------------------------------------
+# building blocks
+# ---------------------------------------------------------------------------
+
+
+def rms_norm(x, weight, eps=1e-5):
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return x * jax.lax.rsqrt(var + eps) * weight
+
+
+def rope(x, positions, theta):
+    """Rotary embedding. x: [N, H, D]; positions: [N] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None, None].astype(jnp.float32) * freqs  # [N, 1, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def swiglu(x, w_gate, w_up, w_down):
+    return (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+
+
+def _unpack(params, cfg: ModelConfig):
+    tok_emb = params[0]
+    layers = []
+    idx = 1
+    for _ in range(cfg.n_layers):
+        layers.append(params[idx : idx + 9])
+        idx += 9
+    final_norm, lm_head = params[idx], params[idx + 1]
+    return tok_emb, layers, final_norm, lm_head
+
+
+# ---------------------------------------------------------------------------
+# decode: one lockstep iteration over all S slots
+# ---------------------------------------------------------------------------
+
+
+def decode_step(params, k_cache, v_cache, tokens, pos, cfg: ModelConfig):
+    """Advance every slot by one token.
+
+    The cache layout is [S, L, C, H, D] — slot-major — so each slot's block
+    is contiguous and identical to ``prefill_chunk``'s [L, C, H, D] layout;
+    the Rust coordinator moves slots between prefill and batched decode with
+    plain memcpys.
+
+    Args:
+      params:  manifest-ordered weight list.
+      k_cache: [S, L, C, H, D] key cache.
+      v_cache: [S, L, C, H, D] value cache.
+      tokens:  [S] int32 the token sampled at the previous step.
+      pos:     [S] int32 index this token occupies (its KV write position).
+
+    Returns:
+      (logits [S, V], k_cache', v_cache')
+    """
+    tok_emb, layers, final_norm, lm_head = _unpack(params, cfg)
+    S = tokens.shape[0]
+    H, D = cfg.n_heads, cfg.head_dim
+    x = tok_emb[tokens]  # [S, d]
+
+    def write(cache, val):
+        def one(slot_cache, slot_val, slot_pos):
+            return jax.lax.dynamic_update_slice(
+                slot_cache, slot_val[None], (slot_pos, 0, 0)
+            )
+
+        return jax.vmap(one)(cache, val, pos)
+
+    new_k, new_v = [], []
+    for li, (attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd) in enumerate(layers):
+        h = rms_norm(x, attn_norm)
+        q = (h @ wq).reshape(S, H, D)
+        k = (h @ wk).reshape(S, H, D)
+        v = (h @ wv).reshape(S, H, D)
+        q = rope(q, pos, cfg.rope_theta)
+        k = rope(k, pos, cfg.rope_theta)
+
+        # Scatter the new k/v into each slot's cache at its own position.
+        kc = write(k_cache[:, li], k)  # [S, C, H, D]
+        vc = write(v_cache[:, li], v)
+        new_k.append(kc)
+        new_v.append(vc)
+
+        attn = decode_attention(q, kc, vc, pos)  # L1 Pallas kernel
+        x = x + attn.reshape(S, H * D) @ wo
+        x = x + swiglu(rms_norm(x, mlp_norm), wg, wu, wd)
+
+    logits = rms_norm(x, final_norm) @ lm_head
+    return logits, jnp.stack(new_k, axis=1), jnp.stack(new_v, axis=1)
+
+
+# ---------------------------------------------------------------------------
+# prefill: one chunk for a single slot
+# ---------------------------------------------------------------------------
+
+
+def prefill_chunk(params, k_cache, v_cache, tokens, pos_base, cfg: ModelConfig):
+    """Process one C_chunk-sized slice of a prompt for one slot.
+
+    Args:
+      params:   manifest-ordered weight list.
+      k_cache:  [L, C, H, D] this slot's key cache (prefix already filled).
+      v_cache:  [L, C, H, D].
+      tokens:   [T] int32 chunk tokens (padded; caller tracks valid length).
+      pos_base: [] int32 number of tokens already in the cache.
+
+    Returns:
+      (logits [T, V], k_cache', v_cache')
+    """
+    tok_emb, layers, final_norm, lm_head = _unpack(params, cfg)
+    T = tokens.shape[0]
+    H, D = cfg.n_heads, cfg.head_dim
+    positions = pos_base + jnp.arange(T, dtype=jnp.int32)
+    x = tok_emb[tokens]  # [T, d]
+
+    new_k, new_v = [], []
+    for li, (attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd) in enumerate(layers):
+        h = rms_norm(x, attn_norm)
+        q = (h @ wq).reshape(T, H, D)
+        k = (h @ wk).reshape(T, H, D)
+        v = (h @ wv).reshape(T, H, D)
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+
+        kc = jax.lax.dynamic_update_slice(k_cache[li], k, (pos_base, 0, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[li], v, (pos_base, 0, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+
+        attn = prefill_attention(q, kc, vc, pos_base)  # L1 Pallas kernel
+        x = x + attn.reshape(T, H * D) @ wo
+        x = x + swiglu(rms_norm(x, mlp_norm), wg, wu, wd)
+
+    logits = rms_norm(x, final_norm) @ lm_head
+    return logits, jnp.stack(new_k), jnp.stack(new_v)
+
+
+# ---------------------------------------------------------------------------
+# embedding head for the fidelity study
+# ---------------------------------------------------------------------------
+
+
+def embed_text(params, tokens, valid_len, cfg: ModelConfig):
+    """Mean-pooled final hidden state over the first ``valid_len`` tokens.
+
+    Runs the full transformer without a persistent cache (pos_base = 0) so
+    the HLO is self-contained. Used by Table 7 as the semantic-similarity
+    proxy (BERTScore substitute; DESIGN.md §1).
+    """
+    T = tokens.shape[0]
+    H, D = cfg.n_heads, cfg.head_dim
+
+    tok_emb, layers, final_norm, _ = _unpack(params, cfg)
+    positions = jnp.arange(T, dtype=jnp.int32)
+    x = tok_emb[tokens]
+    for li, (attn_norm, wq, wk, wv, wo, mlp_norm, wg, wu, wd) in enumerate(layers):
+        h = rms_norm(x, attn_norm)
+        q = rope((h @ wq).reshape(T, H, D), positions, cfg.rope_theta)
+        k = rope((h @ wk).reshape(T, H, D), positions, cfg.rope_theta)
+        v = (h @ wv).reshape(T, H, D)
+        attn = prefill_attention(q, k, v, jnp.int32(0))  # causal, full chunk
+        x = x + attn.reshape(T, H * D) @ wo
+        x = x + swiglu(rms_norm(x, mlp_norm), wg, wu, wd)
+    hidden = rms_norm(x, final_norm)  # [T, d]
+
+    mask = (jnp.arange(T) < valid_len).astype(jnp.float32)[:, None]
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.sum(hidden * mask, axis=0) / denom

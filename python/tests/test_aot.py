@@ -1,0 +1,79 @@
+"""AOT contract tests: the manifest/weights/HLO bundle the Rust runtime
+consumes must stay consistent with model.py."""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from compile.model import ModelConfig, param_manifest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="artifacts not built (run `make artifacts`)",
+)
+
+
+@pytest.fixture(scope="module")
+def manifest():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_matches_model_config(manifest):
+    cfg = ModelConfig()
+    m = manifest["model"]
+    assert m["vocab"] == cfg.vocab
+    assert m["d_model"] == cfg.d_model
+    assert m["n_layers"] == cfg.n_layers
+    assert m["n_heads"] == cfg.n_heads
+    assert m["head_dim"] == cfg.head_dim
+
+
+def test_param_order_matches(manifest):
+    cfg = ModelConfig()
+    want = [(n, list(s)) for n, s in param_manifest(cfg)]
+    got = [(p["name"], p["shape"]) for p in manifest["params"]]
+    assert got == want
+
+
+def test_weights_bin_size_and_values(manifest):
+    total = sum(int(np.prod(p["shape"])) for p in manifest["params"])
+    blob = np.fromfile(os.path.join(ART, "weights.bin"), dtype="<f4")
+    assert blob.size == total
+    assert np.all(np.isfinite(blob))
+    # Norm layers are ones.
+    off = 0
+    for p in manifest["params"]:
+        n = int(np.prod(p["shape"]))
+        if p["name"].endswith("norm"):
+            assert np.all(blob[off : off + n] == 1.0), p["name"]
+        off += n
+
+
+def test_live_pools_express_a_cliff(manifest):
+    pools = manifest["pools"]
+    s, l = pools["short"], pools["long"]
+    # Equal KV budget, slot-count cliff (DESIGN.md §4).
+    assert s["n_slots"] * s["ctx"] == l["n_slots"] * l["ctx"]
+    assert s["n_slots"] > l["n_slots"]
+
+
+def test_all_hlo_artifacts_exist(manifest):
+    for name in manifest["artifacts"]:
+        path = os.path.join(ART, f"{name}.hlo.txt")
+        assert os.path.exists(path), name
+        with open(path) as f:
+            head = f.read(4096)
+        assert "HloModule" in head, f"{name} is not HLO text"
+
+
+def test_weights_sha_matches(manifest):
+    import hashlib
+
+    with open(os.path.join(ART, "weights.bin"), "rb") as f:
+        blob = f.read()
+    assert hashlib.sha256(blob).hexdigest() == manifest["weights_sha256"]

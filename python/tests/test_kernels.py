@@ -1,0 +1,156 @@
+"""L1 kernel correctness: Pallas vs pure-jnp oracle.
+
+Hypothesis sweeps shapes, page sizes, and cache positions; every example
+asserts allclose against ref.py. This is the core correctness signal for
+the kernels that end up inside the AOT artifacts.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.attention import decode_attention, prefill_attention
+from compile.kernels.ref import decode_attention_ref, prefill_attention_ref
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+
+
+class TestDecodeAttention:
+    @pytest.mark.parametrize("S", [1, 2, 8])
+    @pytest.mark.parametrize("C,page", [(64, 32), (128, 128), (256, 64)])
+    def test_matches_ref_grid(self, S, C, page):
+        H, D = 4, 16
+        q = rand(1, (S, H, D))
+        k = rand(2, (S, C, H, D))
+        v = rand(3, (S, C, H, D))
+        pos = jnp.asarray(np.arange(S) * (C // max(S, 1)) % C, jnp.int32)
+        out = decode_attention(q, k, v, pos, page=page)
+        ref = decode_attention_ref(q, k, v, pos)
+        np.testing.assert_allclose(out, ref, **TOL)
+
+    def test_pos_zero_attends_only_first(self):
+        """pos=0 means only cache index 0 is visible: output == v[:, 0]."""
+        S, C, H, D = 2, 64, 2, 8
+        q = rand(4, (S, H, D))
+        k = rand(5, (S, C, H, D))
+        v = rand(6, (S, C, H, D))
+        pos = jnp.zeros((S,), jnp.int32)
+        out = decode_attention(q, k, v, pos, page=32)
+        np.testing.assert_allclose(out, v[:, 0], **TOL)
+
+    def test_garbage_beyond_pos_is_masked(self):
+        """Poisoning the cache beyond pos must not change the output."""
+        S, C, H, D = 2, 128, 2, 8
+        q = rand(7, (S, H, D))
+        k = rand(8, (S, C, H, D))
+        v = rand(9, (S, C, H, D))
+        pos = jnp.asarray([10, 63], jnp.int32)
+        out1 = decode_attention(q, k, v, pos, page=64)
+        k2 = k.at[:, 90:].set(1e9)
+        v2 = v.at[:, 90:].set(-1e9)
+        out2 = decode_attention(q, k2, v2, pos, page=64)
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    def test_odd_context_falls_back_to_single_page(self):
+        S, C, H, D = 1, 96, 2, 8  # 96 % 64 != 0 -> single page
+        q = rand(10, (S, H, D))
+        k = rand(11, (S, C, H, D))
+        v = rand(12, (S, C, H, D))
+        pos = jnp.asarray([50], jnp.int32)
+        out = decode_attention(q, k, v, pos, page=64)
+        ref = decode_attention_ref(q, k, v, pos)
+        np.testing.assert_allclose(out, ref, **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        S=st.integers(1, 6),
+        logC=st.integers(5, 9),
+        H=st.sampled_from([1, 2, 4]),
+        D=st.sampled_from([8, 16, 32]),
+        page_div=st.sampled_from([1, 2, 4]),
+    )
+    def test_hypothesis_sweep(self, seed, S, logC, H, D, page_div):
+        C = 1 << logC
+        page = C // page_div
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(S, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(S, C, H, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(S, C, H, D)), jnp.float32)
+        pos = jnp.asarray(rng.integers(0, C, size=S), jnp.int32)
+        out = decode_attention(q, k, v, pos, page=page)
+        ref = decode_attention_ref(q, k, v, pos)
+        np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)
+
+
+# ---------------------------------------------------------------------------
+# prefill attention
+# ---------------------------------------------------------------------------
+
+
+class TestPrefillAttention:
+    @pytest.mark.parametrize("T", [1, 16, 64])
+    @pytest.mark.parametrize("C,page", [(128, 64), (256, 256), (512, 128)])
+    def test_matches_ref_grid(self, T, C, page):
+        H, D = 4, 16
+        q = rand(20, (T, H, D))
+        k = rand(21, (C, H, D))
+        v = rand(22, (C, H, D))
+        base = min(C - T, 37)
+        out = prefill_attention(q, k, v, base, page=page)
+        ref = prefill_attention_ref(q, k, v, base)
+        np.testing.assert_allclose(out, ref, **TOL)
+
+    def test_base_zero_first_row_sees_only_itself(self):
+        """Row 0 at base 0 attends only to cache[0]: output == v[0]."""
+        T, C, H, D = 8, 64, 2, 8
+        q = rand(23, (T, H, D))
+        k = rand(24, (C, H, D))
+        v = rand(25, (C, H, D))
+        out = prefill_attention(q, k, v, 0, page=32)
+        np.testing.assert_allclose(out[0], v[0], **TOL)
+
+    def test_causality_future_cache_is_masked(self):
+        T, C, H, D = 16, 128, 2, 8
+        q = rand(26, (T, H, D))
+        k = rand(27, (C, H, D))
+        v = rand(28, (C, H, D))
+        base = 30
+        out1 = prefill_attention(q, k, v, base, page=64)
+        # poison strictly-future cache (> base + T - 1)
+        k2 = k.at[base + T :].set(1e9)
+        v2 = v.at[base + T :].set(-1e9)
+        out2 = prefill_attention(q, k2, v2, base, page=64)
+        np.testing.assert_allclose(out1, out2, **TOL)
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        seed=st.integers(0, 10_000),
+        T=st.sampled_from([1, 4, 16, 32]),
+        logC=st.integers(6, 9),
+        H=st.sampled_from([1, 2, 4]),
+        D=st.sampled_from([8, 16]),
+        page_div=st.sampled_from([1, 2, 4]),
+    )
+    def test_hypothesis_sweep(self, seed, T, logC, H, D, page_div):
+        C = 1 << logC
+        page = C // page_div
+        rng = np.random.default_rng(seed)
+        q = jnp.asarray(rng.normal(size=(T, H, D)), jnp.float32)
+        k = jnp.asarray(rng.normal(size=(C, H, D)), jnp.float32)
+        v = jnp.asarray(rng.normal(size=(C, H, D)), jnp.float32)
+        base = int(rng.integers(0, C - T + 1))
+        out = prefill_attention(q, k, v, base, page=page)
+        ref = prefill_attention_ref(q, k, v, base)
+        np.testing.assert_allclose(out, ref, rtol=5e-5, atol=5e-5)

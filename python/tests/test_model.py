@@ -1,0 +1,162 @@
+"""L2 model correctness: shapes, prefill/decode consistency, embed masking."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ModelConfig,
+    decode_step,
+    embed_text,
+    init_params,
+    param_manifest,
+    prefill_chunk,
+)
+
+CFG = ModelConfig()
+PARAMS = init_params(CFG, seed=0)
+TOL = dict(rtol=2e-4, atol=2e-4)
+
+
+def zero_cache(S=None, C=64):
+    # Decode caches are slot-major [S, L, C, H, D]; prefill is [L, C, H, D].
+    L, H, D = CFG.n_layers, CFG.n_heads, CFG.head_dim
+    shape = (S, L, C, H, D) if S is not None else (L, C, H, D)
+    return jnp.zeros(shape, jnp.float32), jnp.zeros(shape, jnp.float32)
+
+
+def toks(seed, n):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray(rng.integers(0, CFG.vocab, size=n), jnp.int32)
+
+
+class TestManifest:
+    def test_param_count_matches_manifest(self):
+        assert len(PARAMS) == len(param_manifest(CFG))
+
+    def test_manifest_shapes_match(self):
+        for p, (name, shape) in zip(PARAMS, param_manifest(CFG)):
+            assert p.shape == shape, name
+
+    def test_manifest_order_is_stable(self):
+        names = [n for n, _ in param_manifest(CFG)]
+        assert names[0] == "tok_emb"
+        assert names[-1] == "lm_head"
+        assert names[1] == "layer0.attn_norm"
+
+
+class TestPrefill:
+    def test_shapes(self):
+        C, T = 64, 16
+        kc, vc = zero_cache(C=C)
+        logits, kc2, vc2 = prefill_chunk(PARAMS, kc, vc, toks(0, T), jnp.int32(0), CFG)
+        assert logits.shape == (T, CFG.vocab)
+        assert kc2.shape == kc.shape and vc2.shape == vc.shape
+
+    def test_chunked_equals_oneshot(self):
+        """Prefilling in two chunks must produce the same logits and cache
+        as one big chunk — the invariant the scheduler relies on."""
+        C, T = 128, 32
+        tokens = toks(1, T)
+        kc, vc = zero_cache(C=C)
+        logits_full, kcf, vcf = prefill_chunk(PARAMS, kc, vc, tokens, jnp.int32(0), CFG)
+
+        kc1, vc1 = zero_cache(C=C)
+        logits_a, kc1, vc1 = prefill_chunk(PARAMS, kc1, vc1, tokens[:16], jnp.int32(0), CFG)
+        logits_b, kc1, vc1 = prefill_chunk(PARAMS, kc1, vc1, tokens[16:], jnp.int32(16), CFG)
+
+        np.testing.assert_allclose(logits_full[:16], logits_a, **TOL)
+        np.testing.assert_allclose(logits_full[16:], logits_b, **TOL)
+        np.testing.assert_allclose(kcf[:, :T], kc1[:, :T], **TOL)
+
+    def test_cache_prefix_untouched(self):
+        """A chunk at pos_base=b must not modify cache entries < b."""
+        C = 128
+        kc, vc = zero_cache(C=C)
+        _, kc, vc = prefill_chunk(PARAMS, kc, vc, toks(2, 16), jnp.int32(0), CFG)
+        before_k = kc[:, :16].copy()
+        _, kc2, _ = prefill_chunk(PARAMS, kc, vc, toks(3, 16), jnp.int32(16), CFG)
+        np.testing.assert_allclose(kc2[:, :16], before_k, rtol=0, atol=0)
+
+
+class TestDecode:
+    def test_shapes(self):
+        S, C = 4, 64
+        kc, vc = zero_cache(S=S, C=C)
+        tokens = toks(4, S)
+        pos = jnp.zeros((S,), jnp.int32)
+        logits, kc2, vc2 = decode_step(PARAMS, kc, vc, tokens, pos, CFG)
+        assert logits.shape == (S, CFG.vocab)
+        assert kc2.shape == kc.shape
+
+    def test_decode_consistent_with_prefill(self):
+        """decode_step(t_n at pos n) after prefill(t_0..t_{n-1}) must equal
+        the last-row logits of prefill(t_0..t_n)."""
+        C, n = 128, 20
+        tokens = toks(5, n + 1)
+
+        kc, vc = zero_cache(C=C)
+        logits_full, _, _ = prefill_chunk(PARAMS, kc, vc, tokens, jnp.int32(0), CFG)
+        want = logits_full[n]
+
+        kc, vc = zero_cache(C=C)
+        _, kc, vc = prefill_chunk(PARAMS, kc, vc, tokens[:n], jnp.int32(0), CFG)
+        # lift the single-slot cache into a batched [1, L, C, H, D] cache
+        kcb, vcb = kc[None], vc[None]
+        got, _, _ = decode_step(
+            PARAMS, kcb, vcb, tokens[n:][:1], jnp.asarray([n], jnp.int32), CFG
+        )
+        np.testing.assert_allclose(got[0], want, rtol=5e-4, atol=5e-4)
+
+    def test_slots_are_independent(self):
+        """Changing slot 1's cache/token must not change slot 0's logits."""
+        S, C = 2, 64
+        kc, vc = zero_cache(S=S, C=C)
+        tokens = toks(6, S)
+        pos = jnp.asarray([3, 7], jnp.int32)
+        l1, _, _ = decode_step(PARAMS, kc, vc, tokens, pos, CFG)
+        kc2 = kc.at[1].set(9.0)
+        tokens2 = tokens.at[1].set((tokens[1] + 1) % CFG.vocab)
+        l2, _, _ = decode_step(PARAMS, kc2, vc, tokens2, pos, CFG)
+        np.testing.assert_allclose(l1[0], l2[0], **TOL)
+        assert not np.allclose(l1[1], l2[1], **TOL)
+
+    def test_greedy_generation_runs(self):
+        """Short end-to-end generation loop: prefill then 8 greedy steps."""
+        C, n = 64, 10
+        prompt = toks(7, n)
+        kc, vc = zero_cache(C=C)
+        logits, kc, vc = prefill_chunk(PARAMS, kc, vc, prompt, jnp.int32(0), CFG)
+        tok = jnp.argmax(logits[n - 1]).astype(jnp.int32)
+        kcb, vcb = kc[None], vc[None]
+        out = []
+        for i in range(8):
+            logits, kcb, vcb = decode_step(
+                PARAMS, kcb, vcb, tok[None], jnp.asarray([n + i], jnp.int32), CFG
+            )
+            tok = jnp.argmax(logits[0]).astype(jnp.int32)
+            out.append(int(tok))
+        assert len(out) == 8
+        assert all(0 <= t < CFG.vocab for t in out)
+
+
+class TestEmbed:
+    def test_shape_and_finite(self):
+        emb = embed_text(PARAMS, toks(8, 64), jnp.int32(40), CFG)
+        assert emb.shape == (CFG.d_model,)
+        assert bool(jnp.all(jnp.isfinite(emb)))
+
+    def test_padding_invariance(self):
+        """Tokens beyond valid_len must not affect the embedding (causal
+        attention + masked mean-pool)."""
+        tokens = toks(9, 64)
+        emb1 = embed_text(PARAMS, tokens, jnp.int32(30), CFG)
+        poisoned = tokens.at[30:].set(5)
+        emb2 = embed_text(PARAMS, poisoned, jnp.int32(30), CFG)
+        np.testing.assert_allclose(emb1, emb2, rtol=1e-5, atol=1e-5)
+
+    def test_different_text_different_embedding(self):
+        emb1 = embed_text(PARAMS, toks(10, 64), jnp.int32(64), CFG)
+        emb2 = embed_text(PARAMS, toks(11, 64), jnp.int32(64), CFG)
+        assert not np.allclose(emb1, emb2, rtol=1e-3, atol=1e-3)

@@ -1,0 +1,37 @@
+//! Bench E9 / §Perf — planner wall-clock. The paper claims the full
+//! Algorithm-1 sweep completes in under 1 ms; this bench times single
+//! cells, the fixed-B gamma sweep, and the full (B, gamma) sweep for each
+//! workload, and reports per-stage costs for the optimization log.
+
+use std::time::Instant;
+
+use fleetopt::planner::{plan_fleet, sweep_full, sweep_gamma, PlanInput};
+use fleetopt::workload::traces;
+
+fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e3 / reps as f64
+}
+
+fn main() {
+    for w in traces::all() {
+        let input = PlanInput::new(w.clone(), 1000.0);
+        let cell = time_ms(10, || {
+            std::hint::black_box(plan_fleet(&input, w.b_short, 1.5).unwrap());
+        });
+        let gsweep = time_ms(5, || {
+            std::hint::black_box(sweep_gamma(&input, w.b_short).unwrap());
+        });
+        let full = time_ms(3, || {
+            std::hint::black_box(sweep_full(&input).unwrap());
+        });
+        println!(
+            "{:12} cell={cell:7.3} ms | gamma-sweep(11)={gsweep:8.3} ms | full-sweep={full:8.3} ms",
+            w.name
+        );
+    }
+    println!("paper §6: full sweep < 1 ms (target for the §Perf pass)");
+}

@@ -1,0 +1,27 @@
+//! Bench E1 — regenerates paper Table 1 (the cost cliff at B = 8,192).
+//! Also sweeps the cliff ratio across boundaries (the 8x-42x range of §2.2).
+
+use fleetopt::config::GpuProfile;
+use fleetopt::experiments;
+use fleetopt::util::table::Table;
+
+fn main() {
+    experiments::table1().print();
+
+    // The rho sweep behind "8x-42x depending on the context window ratio".
+    let g = GpuProfile::a100_llama70b();
+    let mut t = Table::new(
+        "Cliff ratio rho vs boundary (C_max^l = 65,536)",
+        &["B_short", "n_max^s", "n_max^l", "rho"],
+    );
+    for b in [1536u32, 2048, 4096, 8192, 16384] {
+        t.row(&[
+            b.to_string(),
+            g.n_max(b).to_string(),
+            g.n_max_long().to_string(),
+            format!("{:.1}x", g.cliff_ratio(b)),
+        ]);
+    }
+    t.print();
+    println!("paper: 42x at 1,536 | 16x at 4,096 | 8x at 8,192 — see EXPERIMENTS.md E1");
+}

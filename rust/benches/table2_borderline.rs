@@ -1,0 +1,16 @@
+//! Bench E2 — regenerates paper Table 2 (borderline fractions and
+//! archetypes) and the §4.2 borderline-share-of-above-threshold claim.
+
+use fleetopt::experiments;
+use fleetopt::workload::traces;
+
+fn main() {
+    experiments::table2().print();
+
+    println!("borderline share of above-threshold traffic (paper: 43-76%):");
+    for w in traces::all() {
+        let share = w.beta() / (1.0 - w.alpha());
+        println!("  {:12} beta/(1-alpha) = {:.1}%", w.name, share * 100.0);
+    }
+    println!("paper Table 2: Azure a=0.898 b=0.078 | LMSYS a=0.909 b=0.046 | Agent a=0.740 b=0.112");
+}

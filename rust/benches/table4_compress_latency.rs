@@ -1,0 +1,73 @@
+//! Bench E4 — regenerates paper Table 4 (compressor latency on each
+//! workload's borderline band) and breaks the pipeline into stages for the
+//! §Perf analysis.
+
+use std::time::Instant;
+
+use fleetopt::compress::corpus;
+use fleetopt::compress::doc::Document;
+use fleetopt::compress::extractive::compress_doc;
+use fleetopt::compress::scoring;
+use fleetopt::compress::textrank::textrank;
+use fleetopt::compress::tfidf::sentence_scores;
+use fleetopt::experiments;
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::traces;
+
+fn main() {
+    let docs = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(60);
+    let t = experiments::table4(docs);
+    t.print();
+    println!("paper Table 4 (Xeon 8568Y+): Azure p50 1.8 p99 6.5 | LMSYS 1.2/5.2 | Agent 3.4/7.8 ms");
+
+    // Stage breakdown on the heaviest band (Agent, 8K-12K tokens).
+    let w = traces::agent_heavy();
+    let mut rng = Rng::new(99);
+    let text = corpus::generate_borderline(w.b_short, w.gamma, &mut rng);
+    let reps = 5;
+
+    let t0 = Instant::now();
+    let mut doc = Document::parse(&text);
+    for _ in 1..reps {
+        doc = Document::parse(&text);
+    }
+    let parse_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(textrank(&doc));
+    }
+    let textrank_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(sentence_scores(&doc));
+    }
+    let tfidf_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(scoring::novelty_scores(&doc));
+    }
+    let novelty_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        std::hint::black_box(compress_doc(&doc, w.b_short - 512));
+    }
+    let select_ms = t0.elapsed().as_secs_f64() * 1e3 / reps as f64;
+
+    println!(
+        "\nstage breakdown ({} sentences, {} tokens):",
+        doc.n_sentences(),
+        doc.total_tokens()
+    );
+    println!("  parse+tokenize : {parse_ms:8.2} ms");
+    println!("  textrank       : {textrank_ms:8.2} ms");
+    println!("  tf-idf         : {tfidf_ms:8.2} ms");
+    println!("  novelty        : {novelty_ms:8.2} ms");
+    println!("  score+select   : {select_ms:8.2} ms (includes all scoring)");
+}

@@ -1,0 +1,13 @@
+//! Bench E6 — regenerates paper Table 6: arrival-rate sensitivity for the
+//! Agent-heavy workload (savings stability across a 20x lambda range).
+
+use fleetopt::experiments;
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let t = experiments::table6(&[100.0, 200.0, 500.0, 1000.0, 2000.0]);
+    t.print();
+    println!("generated in {:.1} ms", t0.elapsed().as_secs_f64() * 1e3);
+    println!("paper Table 6: PR saving stable 5.4-5.5%; FleetOpt 6.2-6.8% across the range");
+    println!("shape check: savings should be near-constant in lambda (proportional scaling)");
+}

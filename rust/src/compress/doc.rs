@@ -1,0 +1,172 @@
+//! Tokenized document representation shared by the scoring stages: interned
+//! word ids, per-sentence sorted word sets, and token counts. Building this
+//! once keeps TextRank / TF-IDF / novelty passes allocation-light (the
+//! compressor's 2–7 ms latency target, Table 4).
+
+use std::collections::HashMap;
+
+use crate::compress::sentence::split_sentences;
+use crate::compress::tokenizer::{count_tokens, words};
+
+/// A prompt split into sentences with interned word ids.
+#[derive(Clone, Debug)]
+pub struct Document {
+    /// Original sentences, in order.
+    pub sentences: Vec<String>,
+    /// Word-id sequence per sentence.
+    pub word_seqs: Vec<Vec<u32>>,
+    /// Sorted, deduplicated word ids per sentence (for O(a+b) overlap).
+    pub word_sets: Vec<Vec<u32>>,
+    /// 128-bit bloom signature of each word set: cheap popcount-based
+    /// upper bound on set overlap, used as a prefilter by the novelty
+    /// pass (§Perf).
+    pub signatures: Vec<[u64; 2]>,
+    /// Content-word sets: `word_sets` minus words appearing in more than
+    /// ~20% of sentences. TextRank builds its similarity graph over these
+    /// — function words both blur centrality and densify the O(S^2) edge
+    /// construction that dominated the compressor profile (§Perf).
+    pub content_sets: Vec<Vec<u32>>,
+    /// LLM-token count per sentence (budget currency, Eq. 15).
+    pub token_counts: Vec<u32>,
+    /// Interned vocabulary size.
+    pub vocab: usize,
+}
+
+impl Document {
+    pub fn parse(text: &str) -> Self {
+        let sentences = split_sentences(text);
+        let mut intern: HashMap<String, u32> = HashMap::new();
+        let mut word_seqs = Vec::with_capacity(sentences.len());
+        let mut word_sets = Vec::with_capacity(sentences.len());
+        let mut signatures = Vec::with_capacity(sentences.len());
+        let mut token_counts = Vec::with_capacity(sentences.len());
+        for s in &sentences {
+            let seq: Vec<u32> = words(s)
+                .into_iter()
+                .map(|w| {
+                    let next = intern.len() as u32;
+                    *intern.entry(w).or_insert(next)
+                })
+                .collect();
+            let mut set = seq.clone();
+            set.sort_unstable();
+            set.dedup();
+            let mut sig = [0u64; 2];
+            for &w in &set {
+                let h = (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 57; // 7 bits
+                sig[(h >> 6) as usize] |= 1u64 << (h & 63);
+            }
+            word_seqs.push(seq);
+            word_sets.push(set);
+            signatures.push(sig);
+            token_counts.push(count_tokens(s));
+        }
+        // Second pass: document frequency -> content-word sets.
+        let vocab = intern.len();
+        let mut df = vec![0u32; vocab];
+        for set in &word_sets {
+            for &w in set {
+                df[w as usize] += 1;
+            }
+        }
+        let df_cap = ((sentences.len() as f64 * 0.2).ceil() as u32).max(3);
+        let content_sets = word_sets
+            .iter()
+            .map(|set| {
+                set.iter()
+                    .copied()
+                    .filter(|&w| df[w as usize] <= df_cap)
+                    .collect()
+            })
+            .collect();
+        Document {
+            sentences,
+            word_seqs,
+            word_sets,
+            signatures,
+            content_sets,
+            token_counts,
+            vocab,
+        }
+    }
+
+    pub fn n_sentences(&self) -> usize {
+        self.sentences.len()
+    }
+
+    pub fn total_tokens(&self) -> u32 {
+        self.token_counts.iter().sum()
+    }
+}
+
+/// Size of the intersection of two sorted, deduplicated id slices.
+pub fn overlap(a: &[u32], b: &[u32]) -> usize {
+    let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
+    while i < a.len() && j < b.len() {
+        match a[i].cmp(&b[j]) {
+            std::cmp::Ordering::Less => i += 1,
+            std::cmp::Ordering::Greater => j += 1,
+            std::cmp::Ordering::Equal => {
+                n += 1;
+                i += 1;
+                j += 1;
+            }
+        }
+    }
+    n
+}
+
+/// Jaccard similarity of two sorted id sets.
+pub fn jaccard(a: &[u32], b: &[u32]) -> f64 {
+    if a.is_empty() && b.is_empty() {
+        return 1.0;
+    }
+    let inter = overlap(a, b);
+    let union = a.len() + b.len() - inter;
+    inter as f64 / union as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_counts_align() {
+        let d = Document::parse("Alpha beta gamma. Beta gamma delta. Epsilon!");
+        assert_eq!(d.n_sentences(), 3);
+        assert_eq!(d.word_seqs.len(), 3);
+        assert_eq!(d.token_counts.len(), 3);
+        assert!(d.vocab >= 5);
+    }
+
+    #[test]
+    fn interning_shares_ids_across_sentences() {
+        let d = Document::parse("Alpha beta. Beta alpha.");
+        let mut a = d.word_sets[0].clone();
+        let mut b = d.word_sets[1].clone();
+        a.sort_unstable();
+        b.sort_unstable();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn overlap_and_jaccard() {
+        assert_eq!(overlap(&[1, 2, 3], &[2, 3, 4]), 2);
+        assert_eq!(overlap(&[], &[1]), 0);
+        assert!((jaccard(&[1, 2, 3], &[2, 3, 4]) - 0.5).abs() < 1e-12);
+        assert!((jaccard(&[1], &[1]) - 1.0).abs() < 1e-12);
+        assert_eq!(jaccard(&[1], &[2]), 0.0);
+    }
+
+    #[test]
+    fn total_tokens_matches_whole_text_roughly() {
+        let text = "The borderline band holds most above-threshold traffic. \
+                    Extractive compression trims it below the boundary. \
+                    The long pool shrinks accordingly.";
+        let d = Document::parse(text);
+        let whole = crate::compress::tokenizer::count_tokens(text);
+        let sum = d.total_tokens();
+        // Sentence-wise counting equals whole-text counting (whitespace split).
+        assert_eq!(sum, whole);
+    }
+}

@@ -1,0 +1,277 @@
+//! The extractive compression pipeline (paper §5.2): split → score →
+//! greedy-select under the hard token budget `T_c = B_short - L_out`
+//! (Eq. 15), always retaining the first 3 and last 2 sentences
+//! (primacy/recency invariant).
+//!
+//! The budget is enforced against the same tokenizer the gateway uses, so
+//! no compressed request can overflow the short pool's KV cache — the
+//! "hard OOM guarantee" is by construction, and is property-tested.
+
+use crate::compress::doc::Document;
+use crate::compress::scoring::score;
+
+/// Number of leading sentences always retained.
+pub const KEEP_FIRST: usize = 3;
+/// Number of trailing sentences always retained.
+pub const KEEP_LAST: usize = 2;
+
+/// Outcome of one compression attempt.
+#[derive(Clone, Debug)]
+pub struct Compression {
+    /// The compressed prompt (selected sentences in original order).
+    pub text: String,
+    /// Token count of the original prompt.
+    pub original_tokens: u32,
+    /// Token count of the compressed prompt (<= budget when `ok`).
+    pub compressed_tokens: u32,
+    /// Indices of the selected sentences.
+    pub selected: Vec<usize>,
+    /// Whether the result fits the budget (the p_c success indicator).
+    pub ok: bool,
+}
+
+impl Compression {
+    /// Fraction of tokens removed (Table 7's "mean token reduction").
+    pub fn token_reduction(&self) -> f64 {
+        if self.original_tokens == 0 {
+            0.0
+        } else {
+            1.0 - self.compressed_tokens as f64 / self.original_tokens as f64
+        }
+    }
+}
+
+/// Compress `text` to at most `budget_tokens` tokens (T_c of Eq. 15).
+///
+/// Fails (`ok = false`) when even the mandatory primacy/recency sentences
+/// exceed the budget — such requests count against p_c and stay in the
+/// long pool.
+pub fn compress(text: &str, budget_tokens: u32) -> Compression {
+    let doc = Document::parse(text);
+    compress_doc(&doc, budget_tokens)
+}
+
+/// Compression over a pre-parsed document (lets callers reuse the parse).
+pub fn compress_doc(doc: &Document, budget_tokens: u32) -> Compression {
+    let n = doc.n_sentences();
+    let original_tokens = doc.total_tokens();
+    if n == 0 {
+        return Compression {
+            text: String::new(),
+            original_tokens,
+            compressed_tokens: 0,
+            selected: Vec::new(),
+            ok: budget_tokens > 0,
+        };
+    }
+    // Already within budget: identity compression.
+    if original_tokens <= budget_tokens {
+        return Compression {
+            text: doc.sentences.join(" "),
+            original_tokens,
+            compressed_tokens: original_tokens,
+            selected: (0..n).collect(),
+            ok: true,
+        };
+    }
+
+    let mut selected = vec![false; n];
+    let mut used: u32 = 0;
+
+    // Step 3 invariant: always retain the first 3 and last 2 sentences.
+    let mut mandatory: Vec<usize> = (0..n.min(KEEP_FIRST)).collect();
+    for i in n.saturating_sub(KEEP_LAST)..n {
+        if !mandatory.contains(&i) {
+            mandatory.push(i);
+        }
+    }
+    for &i in &mandatory {
+        selected[i] = true;
+        used += doc.token_counts[i];
+    }
+    if used > budget_tokens {
+        // Even the skeleton does not fit: compression fails.
+        return Compression {
+            text: String::new(),
+            original_tokens,
+            compressed_tokens: used,
+            selected: Vec::new(),
+            ok: false,
+        };
+    }
+
+    // Steps 2+3: greedy selection in composite-score order.
+    let scores = score(doc);
+    let mut order: Vec<usize> = (0..n).filter(|i| !selected[*i]).collect();
+    order.sort_by(|&a, &b| {
+        scores.composite[b]
+            .partial_cmp(&scores.composite[a])
+            .unwrap()
+            .then(a.cmp(&b)) // stable tie-break by position
+    });
+
+    // Step 4: stop when the budget is reached (skip-and-continue lets short
+    // high-value sentences fill remaining space).
+    for &i in &order {
+        let cost = doc.token_counts[i];
+        if used + cost <= budget_tokens {
+            selected[i] = true;
+            used += cost;
+        }
+    }
+
+    let idx: Vec<usize> = (0..n).filter(|&i| selected[i]).collect();
+    let text: String = idx
+        .iter()
+        .map(|&i| doc.sentences[i].as_str())
+        .collect::<Vec<_>>()
+        .join(" ");
+    Compression {
+        compressed_tokens: used,
+        original_tokens,
+        selected: idx,
+        ok: used <= budget_tokens,
+        text,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::tokenizer::count_tokens;
+
+    fn long_doc(n: usize) -> String {
+        (0..n)
+            .map(|i| {
+                format!(
+                    "Sentence number {i} elaborates on topic {} with supporting detail \
+                     about provisioning and compression mechanics.",
+                    i % 9
+                )
+            })
+            .collect::<Vec<_>>()
+            .join(" ")
+    }
+
+    #[test]
+    fn respects_budget_exactly() {
+        let text = long_doc(60);
+        let total = count_tokens(&text);
+        let budget = total / 2;
+        let c = compress(&text, budget);
+        assert!(c.ok);
+        assert!(c.compressed_tokens <= budget, "{} > {budget}", c.compressed_tokens);
+        // Recount from the emitted text: the hard OOM guarantee is about
+        // actual tokens, not bookkeeping.
+        assert!(count_tokens(&c.text) <= budget);
+    }
+
+    #[test]
+    fn keeps_first_three_and_last_two() {
+        let text = long_doc(40);
+        let c = compress(&text, count_tokens(&text) / 2);
+        assert!(c.ok);
+        for i in 0..3 {
+            assert!(c.selected.contains(&i), "first-3 invariant: {:?}", c.selected);
+        }
+        for i in 38..40 {
+            assert!(c.selected.contains(&i), "last-2 invariant: {:?}", c.selected);
+        }
+    }
+
+    #[test]
+    fn preserves_sentence_order() {
+        let text = long_doc(30);
+        let c = compress(&text, count_tokens(&text) * 2 / 3);
+        let mut sorted = c.selected.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, c.selected);
+    }
+
+    #[test]
+    fn identity_when_within_budget() {
+        let text = "Short prompt. Nothing to trim here.";
+        let c = compress(text, 1_000);
+        assert!(c.ok);
+        assert_eq!(c.compressed_tokens, c.original_tokens);
+        assert_eq!(c.token_reduction(), 0.0);
+    }
+
+    #[test]
+    fn fails_when_skeleton_exceeds_budget() {
+        let text = long_doc(10);
+        let c = compress(&text, 5); // absurd budget
+        assert!(!c.ok);
+        assert!(c.selected.is_empty());
+    }
+
+    #[test]
+    fn empty_text() {
+        let c = compress("", 100);
+        assert!(c.ok);
+        assert_eq!(c.compressed_tokens, 0);
+    }
+
+    #[test]
+    fn budget_pressure_drops_exactly_the_overflow() {
+        // 8 sentences, budget = total minus ~one sentence: exactly one of
+        // the three droppable middle sentences must be cut, never the
+        // mandatory first-3/last-2.
+        let text = long_doc(8);
+        let total = count_tokens(&text);
+        let c = compress(&text, total - 10);
+        assert!(c.ok);
+        assert_eq!(c.selected.len(), 7, "{:?}", c.selected);
+        for i in [0usize, 1, 2, 6, 7] {
+            assert!(c.selected.contains(&i), "mandatory {i} missing: {:?}", c.selected);
+        }
+    }
+
+    #[test]
+    fn selection_is_deterministic() {
+        let text = long_doc(25);
+        let budget = count_tokens(&text) / 2;
+        let a = compress(&text, budget);
+        let b = compress(&text, budget);
+        assert_eq!(a.selected, b.selected);
+        assert_eq!(a.text, b.text);
+    }
+
+    #[test]
+    fn token_reduction_matches_counts() {
+        let text = long_doc(50);
+        let c = compress(&text, count_tokens(&text) / 3);
+        assert!(c.ok);
+        let want = 1.0 - c.compressed_tokens as f64 / c.original_tokens as f64;
+        assert!((c.token_reduction() - want).abs() < 1e-12);
+        assert!(c.token_reduction() > 0.5);
+    }
+
+    #[test]
+    fn oom_guarantee_property() {
+        // Property test: for random budgets, ok => recounted tokens fit.
+        crate::util::check::forall(
+            "compress-oom-guarantee",
+            25,
+            |rng| {
+                let n = rng.range(6, 50);
+                let frac = rng.uniform(0.1, 1.2);
+                (n, frac)
+            },
+            |&(n, frac)| {
+                let text = long_doc(n);
+                let total = count_tokens(&text);
+                let budget = ((total as f64) * frac) as u32;
+                let c = compress(&text, budget);
+                if c.ok {
+                    crate::util::check::ensure(
+                        count_tokens(&c.text) <= budget,
+                        format!("OOM guarantee violated: {} > {budget}", count_tokens(&c.text)),
+                    )
+                } else {
+                    Ok(())
+                }
+            },
+        );
+    }
+}

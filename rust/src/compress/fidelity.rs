@@ -1,0 +1,184 @@
+//! Compression fidelity metrics (paper Appendix C / Table 7): ROUGE-L
+//! recall and TF-IDF cosine, plus the embedding-cosine proxy computed by
+//! the live runtime (BERTScore substitute — DESIGN.md §1).
+//!
+//! ROUGE-L uses a bit-parallel LCS (Allison–Dix) over words: O(n·m/64),
+//! comfortably fast for 12K-token prompts.
+
+use std::collections::HashMap;
+
+use crate::compress::tokenizer::words;
+
+/// Length of the longest common subsequence of two word sequences,
+/// bit-parallel over 64-word blocks of `a`.
+pub fn lcs_len(a: &[u32], b: &[u32]) -> usize {
+    if a.is_empty() || b.is_empty() {
+        return 0;
+    }
+    let n = a.len();
+    let blocks = n.div_ceil(64);
+    // Per-symbol occurrence bitmasks over `a`.
+    let mut masks: HashMap<u32, Vec<u64>> = HashMap::new();
+    for (i, &s) in a.iter().enumerate() {
+        masks
+            .entry(s)
+            .or_insert_with(|| vec![0u64; blocks])[i / 64] |= 1u64 << (i % 64);
+    }
+    let zeros = vec![0u64; blocks];
+    let mut row = vec![!0u64; blocks];
+    // Trim the last block's unused high bits.
+    if n % 64 != 0 {
+        row[blocks - 1] = (1u64 << (n % 64)) - 1;
+    }
+    let tail_mask = row[blocks - 1];
+
+    // Hyyrö's update: u = V & M; V = (V + u) | (V - u), with add-carry and
+    // sub-borrow propagated across 64-bit blocks.
+    for &s in b {
+        let m = masks.get(&s).unwrap_or(&zeros);
+        let mut carry = 0u64;
+        let mut borrow = 0u64;
+        for blk in 0..blocks {
+            let v = row[blk];
+            let u = v & m[blk];
+            let (sum1, o1) = v.overflowing_add(u);
+            let (sum2, o2) = sum1.overflowing_add(carry);
+            carry = (o1 as u64) | (o2 as u64);
+            let (dif1, b1) = v.overflowing_sub(u);
+            let (dif2, b2) = dif1.overflowing_sub(borrow);
+            borrow = (b1 as u64) | (b2 as u64);
+            row[blk] = sum2 | dif2;
+        }
+        row[blocks - 1] &= tail_mask;
+    }
+    // LCS length = number of zero bits among the first n positions.
+    let ones: usize = row.iter().map(|b| b.count_ones() as usize).sum();
+    n - ones
+}
+
+/// ROUGE-L recall of `compressed` against `original`:
+/// `LCS(original, compressed) / len(original)` over words.
+pub fn rouge_l_recall(original: &str, compressed: &str) -> f64 {
+    let (wa, ids_a, ids_b) = intern_pair(original, compressed);
+    if wa == 0 {
+        return if compressed.trim().is_empty() { 1.0 } else { 0.0 };
+    }
+    lcs_len(&ids_a, &ids_b) as f64 / wa as f64
+}
+
+fn intern_pair(a: &str, b: &str) -> (usize, Vec<u32>, Vec<u32>) {
+    let mut intern: HashMap<String, u32> = HashMap::new();
+    let id = |w: String, intern: &mut HashMap<String, u32>| {
+        let next = intern.len() as u32;
+        *intern.entry(w).or_insert(next)
+    };
+    let ids_a: Vec<u32> = words(a).into_iter().map(|w| id(w, &mut intern)).collect();
+    let ids_b: Vec<u32> = words(b).into_iter().map(|w| id(w, &mut intern)).collect();
+    (ids_a.len(), ids_a, ids_b)
+}
+
+/// Fidelity bundle for one (original, compressed) pair.
+#[derive(Clone, Debug)]
+pub struct Fidelity {
+    pub rouge_l_recall: f64,
+    pub tfidf_cosine: f64,
+    pub token_reduction: f64,
+}
+
+pub fn measure(original: &str, compressed: &str) -> Fidelity {
+    use crate::compress::tokenizer::count_tokens;
+    let orig_t = count_tokens(original) as f64;
+    let comp_t = count_tokens(compressed) as f64;
+    Fidelity {
+        rouge_l_recall: rouge_l_recall(original, compressed),
+        tfidf_cosine: crate::compress::tfidf::tfidf_cosine(original, compressed),
+        token_reduction: if orig_t > 0.0 { 1.0 - comp_t / orig_t } else { 0.0 },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Naive O(nm) LCS for cross-checking the bit-parallel version.
+    fn lcs_naive(a: &[u32], b: &[u32]) -> usize {
+        let mut dp = vec![0usize; b.len() + 1];
+        for &x in a {
+            let mut prev = 0;
+            for (j, &y) in b.iter().enumerate() {
+                let cur = dp[j + 1];
+                dp[j + 1] = if x == y { prev + 1 } else { dp[j + 1].max(dp[j]) };
+                prev = cur;
+            }
+        }
+        dp[b.len()]
+    }
+
+    #[test]
+    fn lcs_simple_cases() {
+        assert_eq!(lcs_len(&[1, 2, 3], &[1, 2, 3]), 3);
+        assert_eq!(lcs_len(&[1, 2, 3], &[3, 2, 1]), 1);
+        assert_eq!(lcs_len(&[1, 2, 3], &[]), 0);
+        assert_eq!(lcs_len(&[1, 2, 3, 4], &[2, 4]), 2);
+    }
+
+    #[test]
+    fn lcs_matches_naive_random() {
+        crate::util::check::forall(
+            "lcs-bitparallel-vs-naive",
+            40,
+            |rng| {
+                let n = rng.range(1, 200);
+                let m = rng.range(1, 200);
+                let k = rng.range(2, 12) as u32;
+                let a: Vec<u32> = (0..n).map(|_| rng.below(k as u64) as u32).collect();
+                let b: Vec<u32> = (0..m).map(|_| rng.below(k as u64) as u32).collect();
+                (a, b)
+            },
+            |(a, b)| {
+                crate::util::check::ensure(
+                    lcs_len(a, b) == lcs_naive(a, b),
+                    format!("bitparallel {} != naive {}", lcs_len(a, b), lcs_naive(a, b)),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn lcs_crosses_block_boundaries() {
+        // > 64 symbols forces multi-block carries.
+        let a: Vec<u32> = (0..200).map(|i| i % 7).collect();
+        let b: Vec<u32> = (0..150).map(|i| i % 5).collect();
+        assert_eq!(lcs_len(&a, &b), lcs_naive(&a, &b));
+    }
+
+    #[test]
+    fn rouge_recall_of_subset_is_reduction_complement() {
+        // An extractive summary is a subsequence of the original, so
+        // LCS = summary length and recall = kept fraction of words.
+        let orig = "alpha beta gamma delta epsilon zeta eta theta";
+        let comp = "alpha gamma epsilon theta";
+        assert!((rouge_l_recall(orig, comp) - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_identity() {
+        let t = "the same text verbatim";
+        assert!((rouge_l_recall(t, t) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rouge_disjoint_is_zero() {
+        assert_eq!(rouge_l_recall("alpha beta", "gamma delta"), 0.0);
+    }
+
+    #[test]
+    fn measure_bundles_consistently() {
+        let orig = "First fact stands. Second fact holds. Third fact remains. Fourth fact stays.";
+        let comp = "First fact stands. Third fact remains.";
+        let f = measure(orig, comp);
+        assert!(f.rouge_l_recall > 0.4 && f.rouge_l_recall < 0.7);
+        assert!(f.tfidf_cosine > 0.5);
+        assert!(f.token_reduction > 0.3 && f.token_reduction < 0.7);
+    }
+}

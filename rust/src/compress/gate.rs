@@ -1,0 +1,117 @@
+//! The content-type safety gate and C&R band check (paper §5.1–5.2):
+//! compression applies only to borderline requests (`B < L_total <= gamma B`)
+//! whose category is structurally safe to extract (RAG / prose; code is
+//! excluded). The category signal reuses the router's per-request estimate
+//! at zero additional cost.
+
+use crate::workload::request::Category;
+
+/// Gate decision for a request at the gateway.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GateDecision {
+    /// Below or at the boundary: route short, no compression needed.
+    RouteShort,
+    /// In the borderline band and category-safe: compress then route short.
+    CompressAndRoute,
+    /// In the band but category-unsafe (code/tool-use): route long.
+    BandButUnsafe,
+    /// Above the band: genuinely long, route long.
+    RouteLong,
+}
+
+/// Apply the gate (Eq. 14's p_c is the realized fraction of
+/// `CompressAndRoute` among band members).
+pub fn gate(l_total: u32, b_short: u32, gamma: f64, category: Category) -> GateDecision {
+    if l_total <= b_short {
+        return GateDecision::RouteShort;
+    }
+    let band_hi = (gamma * b_short as f64).floor() as u32;
+    if l_total <= band_hi {
+        if category.compressible() {
+            GateDecision::CompressAndRoute
+        } else {
+            GateDecision::BandButUnsafe
+        }
+    } else {
+        GateDecision::RouteLong
+    }
+}
+
+/// The compressed token budget T_c = B_short - L_out (Eq. 15): chosen so
+/// `T_c + L_out = B_short` and KV overflow is impossible by construction.
+/// Returns None when the output budget alone exceeds the boundary (such
+/// requests cannot be made short no matter the compression).
+pub fn compression_budget(b_short: u32, l_out: u32) -> Option<u32> {
+    if l_out >= b_short {
+        None
+    } else {
+        Some(b_short - l_out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const B: u32 = 8192;
+
+    #[test]
+    fn below_boundary_routes_short() {
+        assert_eq!(gate(B, B, 1.5, Category::Rag), GateDecision::RouteShort);
+        assert_eq!(gate(1, B, 1.5, Category::Code), GateDecision::RouteShort);
+    }
+
+    #[test]
+    fn band_prose_compresses() {
+        assert_eq!(
+            gate(B + 1, B, 1.5, Category::Rag),
+            GateDecision::CompressAndRoute
+        );
+        assert_eq!(
+            gate(12_288, B, 1.5, Category::Conversational),
+            GateDecision::CompressAndRoute
+        );
+    }
+
+    #[test]
+    fn band_code_is_excluded() {
+        // Paper §5.2: code is excluded from compression.
+        assert_eq!(
+            gate(B + 100, B, 1.5, Category::Code),
+            GateDecision::BandButUnsafe
+        );
+        assert_eq!(
+            gate(B + 100, B, 1.5, Category::ToolUse),
+            GateDecision::BandButUnsafe
+        );
+    }
+
+    #[test]
+    fn above_band_routes_long() {
+        assert_eq!(
+            gate(12_289, B, 1.5, Category::Rag),
+            GateDecision::RouteLong
+        );
+        assert_eq!(gate(65_536, B, 1.5, Category::Rag), GateDecision::RouteLong);
+    }
+
+    #[test]
+    fn gamma_one_has_empty_band() {
+        assert_eq!(gate(B + 1, B, 1.0, Category::Rag), GateDecision::RouteLong);
+    }
+
+    #[test]
+    fn budget_identity_eq15() {
+        // T_c + L_out = B_short, always.
+        for l_out in [1u32, 100, 4000, 8191] {
+            let t_c = compression_budget(B, l_out).unwrap();
+            assert_eq!(t_c + l_out, B);
+        }
+    }
+
+    #[test]
+    fn budget_impossible_when_output_fills_boundary() {
+        assert_eq!(compression_budget(B, B), None);
+        assert_eq!(compression_budget(B, B + 10), None);
+    }
+}

@@ -1,0 +1,24 @@
+//! Compress-and-Route: the gateway-layer extractive compression pipeline
+//! (paper §5) that converts the hard pool boundary into a software knob.
+//!
+//! Pipeline (§5.2): [`sentence`] split → composite [`scoring`]
+//! (TextRank 0.20 / Position 0.40 / TF-IDF 0.35 / Novelty 0.05) →
+//! [`extractive`] greedy selection under the hard budget
+//! `T_c = B_short − L_out` (Eq. 15) with the first-3/last-2 invariant.
+//! [`gate`] applies the content-type safety gate (code excluded);
+//! [`fidelity`] implements the Table-7 metrics; [`corpus`] generates the
+//! study documents (DESIGN.md §1 substitution for LMSYS prompts).
+
+pub mod corpus;
+pub mod doc;
+pub mod extractive;
+pub mod fidelity;
+pub mod gate;
+pub mod scoring;
+pub mod sentence;
+pub mod textrank;
+pub mod tfidf;
+pub mod tokenizer;
+
+pub use extractive::{compress, Compression};
+pub use gate::{compression_budget, gate, GateDecision};

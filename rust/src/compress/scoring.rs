@@ -1,0 +1,170 @@
+//! Composite sentence scoring (paper §5.2 step 2): TextRank (w = 0.20),
+//! Position (w = 0.40), TF-IDF (w = 0.35), Novelty (w = 0.05). Each
+//! component is min-max normalized to [0, 1] before weighting so the
+//! published weights are meaningful across prompts.
+
+use crate::compress::doc::{jaccard, Document};
+use crate::compress::textrank::textrank;
+use crate::compress::tfidf::sentence_scores;
+
+pub const W_TEXTRANK: f64 = 0.20;
+pub const W_POSITION: f64 = 0.40;
+pub const W_TFIDF: f64 = 0.35;
+pub const W_NOVELTY: f64 = 0.05;
+
+/// Per-sentence component and composite scores.
+#[derive(Clone, Debug)]
+pub struct SentenceScores {
+    pub textrank: Vec<f64>,
+    pub position: Vec<f64>,
+    pub tfidf: Vec<f64>,
+    pub novelty: Vec<f64>,
+    pub composite: Vec<f64>,
+}
+
+/// Position prior: strong primacy decay with a recency bump — document
+/// openings state the task, endings carry the actual question (the
+/// first-3/last-2 retention invariant is enforced separately at selection).
+pub fn position_scores(n: usize) -> Vec<f64> {
+    (0..n)
+        .map(|i| {
+            let primacy = (-(i as f64) / (n as f64 / 4.0).max(1.0)).exp();
+            let from_end = n - 1 - i;
+            let recency = if from_end < 2 { 0.6 - 0.1 * from_end as f64 } else { 0.0 };
+            primacy.max(recency)
+        })
+        .collect()
+}
+
+/// Novelty: 1 minus the max Jaccard similarity against any *earlier*
+/// sentence — a redundancy penalty for repeated content (RAG payloads
+/// routinely duplicate retrieved passages).
+pub fn novelty_scores(doc: &Document) -> Vec<f64> {
+    let n = doc.n_sentences();
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let a = &doc.word_sets[i];
+        let sig_a = doc.signatures[i];
+        let mut max_sim: f64 = 0.0;
+        for j in 0..i {
+            let b = &doc.word_sets[j];
+            // Size-ratio upper bound on Jaccard: |A∩B|/|A∪B| <= min/max.
+            // Skipping pairs that cannot beat the running max cuts the
+            // O(S^2) pass substantially on mixed-length documents (§Perf).
+            let (lo, hi) = if a.len() < b.len() {
+                (a.len(), b.len())
+            } else {
+                (b.len(), a.len())
+            };
+            if hi == 0 || (lo as f64 / hi as f64) <= max_sim {
+                continue;
+            }
+            // Bloom-signature upper bound on the intersection: cheap
+            // popcounts reject most non-duplicate pairs before the exact
+            // merge (§Perf).
+            let sig_b = doc.signatures[j];
+            let inter_ub = ((sig_a[0] & sig_b[0]).count_ones()
+                + (sig_a[1] & sig_b[1]).count_ones()) as f64;
+            let union_lb = hi as f64;
+            if inter_ub / union_lb <= max_sim {
+                continue;
+            }
+            max_sim = max_sim.max(jaccard(a, b));
+            if max_sim >= 1.0 {
+                break;
+            }
+        }
+        out.push(1.0 - max_sim);
+    }
+    out
+}
+
+fn minmax_normalize(xs: &[f64]) -> Vec<f64> {
+    if xs.is_empty() {
+        return Vec::new();
+    }
+    let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
+    let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    if hi - lo < 1e-12 {
+        return vec![0.5; xs.len()];
+    }
+    xs.iter().map(|x| (x - lo) / (hi - lo)).collect()
+}
+
+/// Score all sentences of a document.
+pub fn score(doc: &Document) -> SentenceScores {
+    let tr = minmax_normalize(&textrank(doc));
+    let pos = minmax_normalize(&position_scores(doc.n_sentences()));
+    let tf = minmax_normalize(&sentence_scores(doc));
+    let nov = minmax_normalize(&novelty_scores(doc));
+    let composite = (0..doc.n_sentences())
+        .map(|i| W_TEXTRANK * tr[i] + W_POSITION * pos[i] + W_TFIDF * tf[i] + W_NOVELTY * nov[i])
+        .collect();
+    SentenceScores {
+        textrank: tr,
+        position: pos,
+        tfidf: tf,
+        novelty: nov,
+        composite,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn weights_sum_to_one() {
+        assert!((W_TEXTRANK + W_POSITION + W_TFIDF + W_NOVELTY - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn position_first_is_max() {
+        let p = position_scores(20);
+        assert_eq!(p.len(), 20);
+        let max = p.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+        assert_eq!(p[0], max);
+        // Recency bump: last sentence beats the middle.
+        assert!(p[19] > p[10]);
+    }
+
+    #[test]
+    fn novelty_penalizes_duplicates() {
+        let d = Document::parse(
+            "The retrieved passage describes fleet provisioning mechanisms. \
+             Unrelated content about compression pipelines sits here. \
+             The retrieved passage describes fleet provisioning mechanisms.",
+        );
+        let nv = novelty_scores(&d);
+        assert_eq!(nv[0], 1.0); // first sentence is always novel
+        assert!(nv[2] < 0.1, "duplicate should score near zero: {nv:?}");
+        assert!(nv[1] > nv[2]);
+    }
+
+    #[test]
+    fn composite_in_unit_interval() {
+        let text = (0..30)
+            .map(|i| format!("Sentence {i} covers topic {} in detail.", i % 7))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let d = Document::parse(&text);
+        let s = score(&d);
+        assert_eq!(s.composite.len(), 30);
+        for v in &s.composite {
+            assert!((0.0..=1.0).contains(v), "{v}");
+        }
+    }
+
+    #[test]
+    fn constant_components_normalize_to_half() {
+        assert_eq!(minmax_normalize(&[3.0, 3.0, 3.0]), vec![0.5, 0.5, 0.5]);
+    }
+
+    #[test]
+    fn deterministic() {
+        let d = Document::parse("One sentence here. Another sentence there. Final words now.");
+        let a = score(&d);
+        let b = score(&d);
+        assert_eq!(a.composite, b.composite);
+    }
+}

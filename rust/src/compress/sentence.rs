@@ -1,0 +1,206 @@
+//! Unicode-aware sentence splitting (paper §5.2 step 1).
+//!
+//! Heuristic splitter: a sentence ends at `.`, `!`, `?`, `…` (or CJK
+//! equivalents) followed by whitespace and an upper-case/digit/quote
+//! opener, or at blank lines. A small abbreviation list suppresses false
+//! boundaries ("e.g.", "Dr.", "vs.").
+
+/// Terminator characters that may end a sentence.
+const TERMINATORS: [char; 6] = ['.', '!', '?', '…', '。', '！'];
+
+/// Abbreviations that do not end a sentence even when followed by a space
+/// and a capital (lower-cased, without the trailing dot).
+const ABBREVIATIONS: [&str; 14] = [
+    "e.g", "i.e", "etc", "vs", "dr", "mr", "mrs", "ms", "prof", "fig", "eq", "cf", "al",
+    "approx",
+];
+
+fn ends_with_abbreviation(text: &str) -> bool {
+    // The last whitespace-delimited word (sans trailing dots) must equal an
+    // abbreviation exactly — suffix matching would eat words like
+    // "mechanisms" (ends in "ms").
+    let Some(last) = text.split_whitespace().last() else {
+        return false;
+    };
+    let word = last.trim_end_matches('.').to_lowercase();
+    ABBREVIATIONS.iter().any(|a| word == *a)
+}
+
+/// Split text into sentences (returned as owned trimmed strings, in order).
+pub fn split_sentences(text: &str) -> Vec<String> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut sentences = Vec::new();
+    let mut start = 0usize;
+
+    let mut i = 0usize;
+    while i < chars.len() {
+        let c = chars[i];
+        let mut boundary = false;
+
+        if TERMINATORS.contains(&c) {
+            // Consume a run of terminators/closing quotes.
+            let mut j = i + 1;
+            while j < chars.len() && (TERMINATORS.contains(&chars[j]) || "\"')]”’".contains(chars[j]))
+            {
+                j += 1;
+            }
+            // Boundary if at end of text, or whitespace followed by an
+            // opener (uppercase, digit, opening quote/bracket).
+            if j >= chars.len() {
+                boundary = true;
+            } else if chars[j].is_whitespace() {
+                let mut k = j;
+                while k < chars.len() && chars[k].is_whitespace() {
+                    k += 1;
+                }
+                if k >= chars.len() {
+                    boundary = true;
+                } else {
+                    let next = chars[k];
+                    if next.is_uppercase()
+                        || next.is_numeric()
+                        || "\"'“‘([".contains(next)
+                    {
+                        boundary = true;
+                    }
+                }
+            }
+            if boundary && c == '.' {
+                let prefix: String = chars[start..=i.min(chars.len() - 1)].iter().collect();
+                let before_dot = prefix.trim_end_matches('.');
+                if ends_with_abbreviation(before_dot) {
+                    boundary = false;
+                }
+                // Also suppress splits after single initials ("J. Smith").
+                if let Some(last) = before_dot.split_whitespace().last() {
+                    // Single *alphabetic* char = an initial ("J. Smith");
+                    // single digits ("topic 4.") do end sentences.
+                    if last.chars().count() == 1
+                        && last.chars().next().unwrap().is_alphabetic()
+                    {
+                        boundary = false;
+                    }
+                }
+            }
+            if boundary {
+                i = j;
+                let s: String = chars[start..i].iter().collect();
+                let s = s.trim();
+                if !s.is_empty() {
+                    sentences.push(s.to_string());
+                }
+                start = i;
+                continue;
+            }
+        } else if c == '\n' {
+            // Blank line = paragraph boundary = sentence boundary.
+            let mut j = i + 1;
+            let mut newlines = 1;
+            while j < chars.len() && chars[j].is_whitespace() {
+                if chars[j] == '\n' {
+                    newlines += 1;
+                }
+                j += 1;
+            }
+            if newlines >= 2 {
+                let s: String = chars[start..i].iter().collect();
+                let s = s.trim();
+                if !s.is_empty() {
+                    sentences.push(s.to_string());
+                }
+                start = j;
+                i = j;
+                continue;
+            }
+        }
+        i += 1;
+    }
+    let tail: String = chars[start..].iter().collect();
+    let tail = tail.trim();
+    if !tail.is_empty() {
+        sentences.push(tail.to_string());
+    }
+    sentences
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splits_simple_sentences() {
+        let s = split_sentences("The fleet is large. It costs money. We optimize it.");
+        assert_eq!(s.len(), 3);
+        assert_eq!(s[0], "The fleet is large.");
+        assert_eq!(s[2], "We optimize it.");
+    }
+
+    #[test]
+    fn handles_exclamation_and_question() {
+        let s = split_sentences("Is it optimal? No! Compress it.");
+        assert_eq!(s.len(), 3);
+    }
+
+    #[test]
+    fn does_not_split_abbreviations() {
+        let s = split_sentences("Routing, e.g. pool routing, saves cost. Dr. Chen agrees.");
+        assert_eq!(s.len(), 2, "{s:?}");
+        assert!(s[0].contains("e.g. pool routing"));
+        assert!(s[1].starts_with("Dr. Chen"));
+    }
+
+    #[test]
+    fn does_not_split_initials() {
+        let s = split_sentences("The result follows J. Smith et al. closely here.");
+        assert_eq!(s.len(), 1, "{s:?}");
+    }
+
+    #[test]
+    fn does_not_split_decimal_numbers() {
+        let s = split_sentences("Utilization is 0.85 under the cap. Done.");
+        assert_eq!(s.len(), 2, "{s:?}");
+        assert!(s[0].contains("0.85"));
+    }
+
+    #[test]
+    fn paragraph_breaks_split() {
+        let s = split_sentences("First paragraph without terminator\n\nSecond paragraph.");
+        assert_eq!(s.len(), 2);
+    }
+
+    #[test]
+    fn trailing_text_without_terminator_kept() {
+        let s = split_sentences("Complete sentence. Trailing fragment without end");
+        assert_eq!(s.len(), 2);
+        assert_eq!(s[1], "Trailing fragment without end");
+    }
+
+    #[test]
+    fn unicode_terminators() {
+        let s = split_sentences("第一句话。第二句话。 Final sentence…");
+        assert!(s.len() >= 2, "{s:?}");
+    }
+
+    #[test]
+    fn empty_input() {
+        assert!(split_sentences("").is_empty());
+        assert!(split_sentences("   \n\n  ").is_empty());
+    }
+
+    #[test]
+    fn quotes_after_terminator_stay_with_sentence() {
+        let s = split_sentences("He said \"stop.\" Then he left.");
+        assert_eq!(s.len(), 2, "{s:?}");
+        assert!(s[0].ends_with("\"stop.\""), "{s:?}");
+    }
+
+    #[test]
+    fn order_is_preserved_and_content_covered() {
+        let text = "Alpha beta gamma. Delta epsilon zeta! Eta theta iota?";
+        let s = split_sentences(text);
+        let joined = s.join(" ");
+        for w in ["Alpha", "Delta", "Eta", "iota"] {
+            assert!(joined.contains(w));
+        }
+    }
+}

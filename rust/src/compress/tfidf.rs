@@ -1,0 +1,180 @@
+//! TF-IDF sentence salience — 35% of the composite score (paper §5.2,
+//! cf. Li et al. 2023a) — plus the document-level TF-IDF vectors used by
+//! the fidelity study's cosine similarity (Table 7).
+//!
+//! IDF is computed *within* the document over sentences (df = number of
+//! sentences containing the word): no external corpus is needed at the
+//! gateway, and rare-within-prompt terms are exactly the ones extraction
+//! must keep.
+
+use crate::compress::doc::Document;
+
+/// Per-sentence mean TF-IDF salience.
+pub fn sentence_scores(doc: &Document) -> Vec<f64> {
+    let n = doc.n_sentences();
+    if n == 0 {
+        return Vec::new();
+    }
+    // Document frequency per word id.
+    let mut df = vec![0u32; doc.vocab];
+    for set in &doc.word_sets {
+        for &w in set {
+            df[w as usize] += 1;
+        }
+    }
+    // Term frequency over the whole document.
+    let mut tf = vec![0u32; doc.vocab];
+    let mut total_words = 0u64;
+    for seq in &doc.word_seqs {
+        for &w in seq {
+            tf[w as usize] += 1;
+        }
+        total_words += seq.len() as u64;
+    }
+    let idf = |w: u32| ((n as f64 + 1.0) / (df[w as usize] as f64 + 0.5)).ln();
+
+    doc.word_seqs
+        .iter()
+        .map(|seq| {
+            if seq.is_empty() {
+                return 0.0;
+            }
+            let sum: f64 = seq
+                .iter()
+                .map(|&w| {
+                    let tfw = tf[w as usize] as f64 / total_words.max(1) as f64;
+                    tfw * idf(w)
+                })
+                .sum();
+            sum / seq.len() as f64
+        })
+        .collect()
+}
+
+/// Sparse TF-IDF vector for a full text against its own sentence-level IDF.
+/// Returned sorted by word id; used for cosine similarity.
+pub fn doc_vector(doc: &Document) -> Vec<(u32, f64)> {
+    let n = doc.n_sentences().max(1);
+    let mut df = vec![0u32; doc.vocab];
+    for set in &doc.word_sets {
+        for &w in set {
+            df[w as usize] += 1;
+        }
+    }
+    let mut tf = vec![0u32; doc.vocab];
+    for seq in &doc.word_seqs {
+        for &w in seq {
+            tf[w as usize] += 1;
+        }
+    }
+    (0..doc.vocab as u32)
+        .filter(|&w| tf[w as usize] > 0)
+        .map(|w| {
+            let idf = ((n as f64 + 1.0) / (df[w as usize] as f64 + 0.5)).ln();
+            (w, tf[w as usize] as f64 * idf)
+        })
+        .collect()
+}
+
+/// Cosine similarity between two **word-count** histograms built over a
+/// shared vocabulary — the Table-7 "TF-IDF cosine" metric between original
+/// and compressed prompt. Word strings (not per-doc interned ids) keep the
+/// two texts in one space.
+pub fn tfidf_cosine(original: &str, compressed: &str) -> f64 {
+    use std::collections::HashMap;
+
+    let wa = crate::compress::tokenizer::words(original);
+    let wb = crate::compress::tokenizer::words(compressed);
+    if wa.is_empty() || wb.is_empty() {
+        return 0.0;
+    }
+    let mut ca: HashMap<&str, f64> = HashMap::new();
+    for w in &wa {
+        *ca.entry(w.as_str()).or_insert(0.0) += 1.0;
+    }
+    let mut cb: HashMap<&str, f64> = HashMap::new();
+    for w in &wb {
+        *cb.entry(w.as_str()).or_insert(0.0) += 1.0;
+    }
+    // IDF over the two-document "corpus" is constant for shared terms; a
+    // plain count cosine is the standard implementation of this metric.
+    let dot: f64 = ca
+        .iter()
+        .filter_map(|(w, a)| cb.get(w).map(|b| a * b))
+        .sum();
+    let na: f64 = ca.values().map(|a| a * a).sum::<f64>().sqrt();
+    let nb: f64 = cb.values().map(|b| b * b).sum::<f64>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rare_term_sentences_score_higher() {
+        // "hyperparameter" appears once; "routing" appears everywhere.
+        let d = Document::parse(
+            "Routing moves traffic. Routing saves cost. \
+             Routing hyperparameter tuning dominates the outcome. \
+             Routing is simple.",
+        );
+        let s = sentence_scores(&d);
+        let max_idx = s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        assert_eq!(max_idx, 2, "scores {s:?}");
+    }
+
+    #[test]
+    fn empty_doc() {
+        let d = Document::parse("");
+        assert!(sentence_scores(&d).is_empty());
+        assert!(doc_vector(&d).is_empty());
+    }
+
+    #[test]
+    fn doc_vector_sorted_and_positive() {
+        let d = Document::parse("Alpha beta. Beta gamma. Gamma delta epsilon.");
+        let v = doc_vector(&d);
+        assert!(!v.is_empty());
+        for w in v.windows(2) {
+            assert!(w[0].0 < w[1].0);
+        }
+        assert!(v.iter().all(|(_, x)| *x > 0.0));
+    }
+
+    #[test]
+    fn cosine_identity_is_one() {
+        let t = "The long pool absorbs borderline traffic at high cost.";
+        assert!((tfidf_cosine(t, t) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cosine_disjoint_is_zero() {
+        assert_eq!(tfidf_cosine("alpha beta gamma", "delta epsilon zeta"), 0.0);
+    }
+
+    #[test]
+    fn cosine_of_subset_is_high() {
+        let orig = "The planner derives the optimal fleet. The planner sweeps gamma. \
+                    Extra filler sentence about unrelated matters.";
+        let comp = "The planner derives the optimal fleet. The planner sweeps gamma.";
+        let c = tfidf_cosine(orig, comp);
+        assert!(c > 0.8, "cosine={c}");
+    }
+
+    #[test]
+    fn cosine_symmetric() {
+        let a = "alpha beta beta gamma";
+        let b = "beta gamma gamma delta";
+        assert!((tfidf_cosine(a, b) - tfidf_cosine(b, a)).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,156 @@
+//! Approximate LLM tokenizer: deterministic word/subword token counting.
+//!
+//! No pretrained BPE vocabulary is available offline, so token counts use
+//! the standard ~4-chars-per-token heuristic at subword granularity: every
+//! whitespace-delimited word contributes `ceil(len/4)` tokens and
+//! punctuation runs contribute one token each. The *same* counter is used
+//! by the compressor's budget enforcement, the gateway's EMA calibration,
+//! and the live path's hash-tokenizer, so the hard OOM guarantee (Eq. 15)
+//! is enforced against a single consistent measure.
+
+/// Number of tokens for a text under the subword heuristic.
+pub fn count_tokens(text: &str) -> u32 {
+    let mut tokens = 0u32;
+    for word in text.split_whitespace() {
+        tokens += word_tokens(word);
+    }
+    tokens
+}
+
+fn word_tokens(word: &str) -> u32 {
+    // Split the word into alphanumeric runs and punctuation runs; each
+    // punctuation run is one token, alnum runs cost ceil(chars/4).
+    let mut tokens = 0u32;
+    let mut alnum_run = 0u32;
+    for c in word.chars() {
+        if c.is_alphanumeric() {
+            alnum_run += 1;
+        } else {
+            if alnum_run > 0 {
+                tokens += alnum_run.div_ceil(4);
+                alnum_run = 0;
+            }
+            tokens += 1; // punctuation char
+        }
+    }
+    if alnum_run > 0 {
+        tokens += alnum_run.div_ceil(4);
+    }
+    tokens.max(1)
+}
+
+/// Lowercased alphanumeric words (the unit for TextRank / TF-IDF / ROUGE).
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for c in text.chars() {
+        if c.is_alphanumeric() {
+            for lc in c.to_lowercase() {
+                cur.push(lc);
+            }
+        } else if !cur.is_empty() {
+            out.push(std::mem::take(&mut cur));
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Map text to live-path token ids (hash into the scaled-down model's
+/// vocabulary). Used by the embedding fidelity proxy and the e2e example.
+pub fn hash_tokens(text: &str, vocab: u32) -> Vec<i32> {
+    words(text)
+        .iter()
+        .map(|w| {
+            let mut h = 1469598103934665603u64; // FNV-1a
+            for b in w.as_bytes() {
+                h ^= *b as u64;
+                h = h.wrapping_mul(1099511628211);
+            }
+            (h % vocab as u64) as i32
+        })
+        .collect()
+}
+
+/// Bytes-per-token of a text (the quantity the router's EMA tracks, §2.1).
+pub fn bytes_per_token(text: &str) -> f64 {
+    let t = count_tokens(text);
+    if t == 0 {
+        4.0
+    } else {
+        text.len() as f64 / t as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_is_zero() {
+        assert_eq!(count_tokens(""), 0);
+        assert_eq!(count_tokens("   \n\t "), 0);
+    }
+
+    #[test]
+    fn short_words_one_token() {
+        assert_eq!(count_tokens("the cat sat"), 3);
+    }
+
+    #[test]
+    fn long_words_split_into_subwords() {
+        // 14 chars -> ceil(14/4) = 4 tokens.
+        assert_eq!(count_tokens("internationali"), 4);
+    }
+
+    #[test]
+    fn punctuation_costs_tokens() {
+        assert_eq!(count_tokens("end."), 2); // "end" + "."
+        assert!(count_tokens("a,b,c") >= 5);
+    }
+
+    #[test]
+    fn count_is_additive_over_whitespace_join() {
+        let a = "retrieval augmented generation pipeline";
+        let b = "compresses borderline requests.";
+        assert_eq!(
+            count_tokens(&format!("{a} {b}")),
+            count_tokens(a) + count_tokens(b)
+        );
+    }
+
+    #[test]
+    fn words_lowercase_alnum() {
+        assert_eq!(words("The KV-cache, 320KB!"), vec!["the", "kv", "cache", "320kb"]);
+    }
+
+    #[test]
+    fn hash_tokens_in_vocab_and_deterministic() {
+        let t1 = hash_tokens("hello world hello", 256);
+        let t2 = hash_tokens("hello world hello", 256);
+        assert_eq!(t1, t2);
+        assert_eq!(t1[0], t1[2]); // same word, same id
+        assert!(t1.iter().all(|&t| (0..256).contains(&t)));
+    }
+
+    #[test]
+    fn bytes_per_token_is_near_four_for_prose() {
+        let b = bytes_per_token(
+            "The quick brown fox jumps over the lazy dog near the riverbank today.",
+        );
+        assert!((2.0..=7.0).contains(&b), "b={b}");
+    }
+
+    #[test]
+    fn realistic_prose_rate() {
+        // ~1 token per ~4 chars on running prose.
+        let text = "Fleet provisioning for large language model inference is \
+                    typically driven by worst-case context lengths, which the \
+                    vast majority of production requests never approach.";
+        let t = count_tokens(text) as f64;
+        let chars = text.len() as f64;
+        assert!((chars / t) > 2.5 && (chars / t) < 6.5);
+    }
+}

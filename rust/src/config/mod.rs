@@ -1,0 +1,191 @@
+//! Configuration layer: GPU profiles, SLO targets, planner settings.
+//!
+//! The same `GpuProfile` feeds the analytical model (§3), the planner (§6),
+//! the DES (§7.4) and — scaled down — the live serving coordinator, so a
+//! fleet prescribed by the planner is directly instantiable.
+
+use crate::util::json::Json;
+
+/// Hardware calibration for one GPU type (paper §7.1 "Simulation
+/// parameters", calibrated to Llama-3-70B on an A100-80GB 8-GPU TP node).
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuProfile {
+    /// Baseline per-iteration compute, W (ms). Paper: 8 ms.
+    pub w_ms: f64,
+    /// Per-slot memory-bandwidth cost, H (ms/slot). Paper: 0.65 ms.
+    pub h_ms_per_slot: f64,
+    /// Prefill chunk size C_chunk (tokens). Paper: 512.
+    pub chunk: u32,
+    /// KV-cache growth per token (KB). Paper: 320 KB (Llama-3-70B fp16).
+    pub kv_kb_per_token: f64,
+    /// Slot-count calibration: n_max(C) = n_max_calib * c_calib / C.
+    /// Paper: 128 slots at 8,192 tokens (=> 256 at 4K, 682 at 1.5K, 16 at 64K).
+    pub n_max_calib: u32,
+    pub c_calib: u32,
+    /// Long-pool context window C_max^(l) (tokens). Paper: 65,536.
+    pub c_max_long: u32,
+    /// GPU cost, $/GPU-hr. Paper: $2.21 for both pools (phi = 1).
+    pub cost_short_hr: f64,
+    pub cost_long_hr: f64,
+}
+
+impl GpuProfile {
+    /// The paper's A100-80GB / Llama-3-70B calibration.
+    pub fn a100_llama70b() -> Self {
+        GpuProfile {
+            w_ms: 8.0,
+            h_ms_per_slot: 0.65,
+            chunk: 512,
+            kv_kb_per_token: 320.0,
+            n_max_calib: 128,
+            c_calib: 8192,
+            c_max_long: 65_536,
+            cost_short_hr: 2.21,
+            cost_long_hr: 2.21,
+        }
+    }
+
+    /// Concurrent KV slots per GPU for a context window of `c_max` tokens
+    /// (§2.2): the KV budget is fixed, so slots scale inversely with the
+    /// per-slot context size.
+    pub fn n_max(&self, c_max: u32) -> u32 {
+        ((self.n_max_calib as u64 * self.c_calib as u64) / c_max as u64).max(1) as u32
+    }
+
+    /// Slots per GPU in the long pool.
+    pub fn n_max_long(&self) -> u32 {
+        self.n_max(self.c_max_long)
+    }
+
+    /// The cost-cliff ratio rho = n_max^(s) / n_max^(l) at a short-pool
+    /// boundary of `b_short` tokens (§2.2): 8x at 8K, 16x at 4K, 42x at 1.5K.
+    pub fn cliff_ratio(&self, b_short: u32) -> f64 {
+        self.n_max(b_short) as f64 / self.n_max_long() as f64
+    }
+
+    /// GPU iteration latency under continuous batching (Eq. 3), seconds.
+    /// All `n_slots` slots advance in lockstep per iteration.
+    pub fn t_iter_s(&self, n_slots: u32) -> f64 {
+        (self.w_ms + self.h_ms_per_slot * n_slots as f64) / 1000.0
+    }
+
+    /// KV memory per slot (GB) for a context window of `c_max` tokens.
+    pub fn kv_gb_per_slot(&self, c_max: u32) -> f64 {
+        c_max as f64 * self.kv_kb_per_token / 1024.0 / 1024.0
+    }
+
+    /// GPU cost ratio phi = c_l / c_s (§3.3).
+    pub fn phi(&self) -> f64 {
+        self.cost_long_hr / self.cost_short_hr
+    }
+
+    /// Parse a profile from a JSON config object; missing keys fall back to
+    /// the A100/Llama-3-70B defaults.
+    pub fn from_json(j: &Json) -> Self {
+        let d = GpuProfile::a100_llama70b();
+        let f = |k: &str, def: f64| j.get(k).and_then(Json::as_f64).unwrap_or(def);
+        GpuProfile {
+            w_ms: f("w_ms", d.w_ms),
+            h_ms_per_slot: f("h_ms_per_slot", d.h_ms_per_slot),
+            chunk: f("chunk", d.chunk as f64) as u32,
+            kv_kb_per_token: f("kv_kb_per_token", d.kv_kb_per_token),
+            n_max_calib: f("n_max_calib", d.n_max_calib as f64) as u32,
+            c_calib: f("c_calib", d.c_calib as f64) as u32,
+            c_max_long: f("c_max_long", d.c_max_long as f64) as u32,
+            cost_short_hr: f("cost_short_hr", d.cost_short_hr),
+            cost_long_hr: f("cost_long_hr", d.cost_long_hr),
+        }
+    }
+}
+
+/// Service-level objective (§3.2).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Slo {
+    /// P99 TTFT target, seconds. Paper: 0.5 s.
+    pub p99_ttft_s: f64,
+}
+
+impl Default for Slo {
+    fn default() -> Self {
+        Slo { p99_ttft_s: 0.5 }
+    }
+}
+
+/// Planner settings (§4.1, §6).
+#[derive(Clone, Debug)]
+pub struct PlannerConfig {
+    /// Utilization cap rho_max for analytical stability. Paper: 0.85.
+    pub rho_max: f64,
+    /// Gamma sweep grid. Paper: {1.0, 1.1, ..., 2.0}.
+    pub gammas: Vec<f64>,
+    /// Monte-Carlo samples for (E[S], C_s^2) calibration.
+    pub mc_samples: usize,
+    /// Seed for the calibration sampler (determinism).
+    pub seed: u64,
+}
+
+impl Default for PlannerConfig {
+    fn default() -> Self {
+        PlannerConfig {
+            rho_max: 0.85,
+            gammas: (0..=10).map(|i| 1.0 + i as f64 * 0.1).collect(),
+            mc_samples: 20_000,
+            seed: 0xF1EE7,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_slot_counts() {
+        let g = GpuProfile::a100_llama70b();
+        // Paper §7.1: 256 slots at 4K, 682 at 1.5K, 128 at 8K, 16 at 64K.
+        assert_eq!(g.n_max(4096), 256);
+        assert_eq!(g.n_max(1536), 682);
+        assert_eq!(g.n_max(8192), 128);
+        assert_eq!(g.n_max_long(), 16);
+    }
+
+    #[test]
+    fn paper_cliff_ratios() {
+        let g = GpuProfile::a100_llama70b();
+        // Paper §2.2: 8x at 8,192; 16x at 4,096; ~42x at 1,536.
+        assert_eq!(g.cliff_ratio(8192), 8.0);
+        assert_eq!(g.cliff_ratio(4096), 16.0);
+        assert!((g.cliff_ratio(1536) - 42.625).abs() < 0.01);
+    }
+
+    #[test]
+    fn t_iter_matches_paper() {
+        let g = GpuProfile::a100_llama70b();
+        // W + H*16 = 8 + 10.4 = 18.4 ms for the long pool.
+        assert!((g.t_iter_s(16) - 0.0184).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kv_gb_per_slot_long_pool() {
+        let g = GpuProfile::a100_llama70b();
+        // Paper Table 1: ~20.0 GB per 64K slot at 320 KB/token.
+        let gb = g.kv_gb_per_slot(65_536);
+        assert!((gb - 20.0).abs() < 0.01, "gb={gb}");
+    }
+
+    #[test]
+    fn gamma_grid_matches_paper() {
+        let c = PlannerConfig::default();
+        assert_eq!(c.gammas.len(), 11);
+        assert!((c.gammas[0] - 1.0).abs() < 1e-12);
+        assert!((c.gammas[10] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn from_json_defaults_and_overrides() {
+        let j = Json::parse(r#"{"w_ms": 10.0}"#).unwrap();
+        let g = GpuProfile::from_json(&j);
+        assert_eq!(g.w_ms, 10.0);
+        assert_eq!(g.chunk, 512);
+    }
+}

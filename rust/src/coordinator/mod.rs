@@ -1,0 +1,9 @@
+//! The live serving coordinator: engine replicas (KV-slot manager +
+//! continuous batcher + chunked-prefill/decode scheduler) and the threaded
+//! two-pool serving loop fed by the gateway.
+
+pub mod replica;
+pub mod serve;
+
+pub use replica::{FinishedRequest, LiveRequest, Replica};
+pub use serve::{serve, ServeConfig, ServeItem, ServeReport};

@@ -1,0 +1,199 @@
+//! The serving loop: gateway → per-pool FCFS queues → replica threads.
+//!
+//! Threads + channels stand in for an async runtime (no tokio offline;
+//! DESIGN.md §1): each replica runs on its own thread, pulling from its
+//! pool's shared queue at iteration boundaries — the same admission
+//! discipline as the DES, so live TTFTs decompose exactly like Eq. 7.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::replica::{FinishedRequest, LiveRequest, Replica};
+use crate::metrics::PoolMetrics;
+use crate::router::{Gateway, GatewayConfig};
+use crate::runtime::{ModelRuntime, PoolKind};
+
+/// Live fleet configuration.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub gateway: GatewayConfig,
+    pub replicas_short: usize,
+    pub replicas_long: usize,
+}
+
+/// One pool's shared state.
+struct PoolState {
+    queue: Mutex<VecDeque<LiveRequest>>,
+    wake: Condvar,
+}
+
+impl PoolState {
+    fn new() -> Self {
+        PoolState {
+            queue: Mutex::new(VecDeque::new()),
+            wake: Condvar::new(),
+        }
+    }
+}
+
+/// Aggregated serving results.
+#[derive(Debug)]
+pub struct ServeReport {
+    pub short: PoolMetrics,
+    pub long: PoolMetrics,
+    /// Wall-clock duration of the run, seconds.
+    pub duration_s: f64,
+    /// Requests completed per second over the run.
+    pub throughput_rps: f64,
+    /// Gateway counters.
+    pub n_compressed: u64,
+    pub n_routed_short: u64,
+    pub n_routed_long: u64,
+    /// Mean gateway (routing + compression) overhead per request, seconds.
+    pub mean_gateway_s: f64,
+}
+
+/// A workload item for the live fleet: prompt text, output budget, and the
+/// arrival offset from run start (seconds).
+#[derive(Clone, Debug)]
+pub struct ServeItem {
+    pub text: String,
+    pub max_output: u32,
+    pub arrival_offset_s: f64,
+}
+
+/// Drive `items` through a live two-pool fleet. Arrivals are paced in real
+/// time by `time_scale` (0.1 = 10x faster than the offsets say); the
+/// gateway (classification + C&R compression) runs on the driver thread,
+/// exactly as a real deployment's ingress does.
+///
+/// Each replica thread owns its own `ModelRuntime` (PJRT client +
+/// executables): the `xla` crate's handles are not `Send`/`Sync`, and a
+/// per-replica client also mirrors the one-engine-per-GPU deployment shape.
+pub fn serve(
+    artifacts_dir: &std::path::Path,
+    cfg: &ServeConfig,
+    items: Vec<ServeItem>,
+    time_scale: f64,
+) -> Result<ServeReport> {
+    let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
+    let pools: [Arc<PoolState>; 2] = [Arc::new(PoolState::new()), Arc::new(PoolState::new())];
+    let done_feeding = Arc::new(AtomicBool::new(false));
+    let in_flight = Arc::new(AtomicU64::new(0));
+    let results: Arc<Mutex<Vec<(PoolKind, FinishedRequest)>>> =
+        Arc::new(Mutex::new(Vec::new()));
+
+    let mut handles = Vec::new();
+    for (kind, count) in [
+        (PoolKind::Short, cfg.replicas_short),
+        (PoolKind::Long, cfg.replicas_long),
+    ] {
+        let pool_idx = match kind {
+            PoolKind::Short => 0,
+            PoolKind::Long => 1,
+        };
+        for _ in 0..count {
+            let dir = artifacts_dir.to_path_buf();
+            let pool = pools[pool_idx].clone();
+            let done = done_feeding.clone();
+            let in_flight = in_flight.clone();
+            let results = results.clone();
+            handles.push(std::thread::spawn(move || -> Result<()> {
+                let rt = Arc::new(ModelRuntime::load(&dir)?);
+                let mut replica = Replica::new(rt, kind);
+                loop {
+                    // Admit as many queued requests as there are free slots.
+                    {
+                        let mut q = pool.queue.lock().unwrap();
+                        while replica.n_free() > 0 {
+                            let Some(req) = q.pop_front() else { break };
+                            assert!(replica.admit(req));
+                        }
+                        if !replica.has_work() {
+                            if done.load(Ordering::Acquire) && q.is_empty() {
+                                return Ok(());
+                            }
+                            // Sleep until an arrival wakes this pool.
+                            let (guard, _) = pool
+                                .wake
+                                .wait_timeout(q, std::time::Duration::from_millis(20))
+                                .unwrap();
+                            drop(guard);
+                            continue;
+                        }
+                    }
+                    for fin in replica.step()? {
+                        in_flight.fetch_sub(1, Ordering::AcqRel);
+                        results.lock().unwrap().push((kind, fin));
+                    }
+                }
+            }));
+        }
+    }
+
+    // Driver: route + feed with paced arrivals.
+    let mut gateway = Gateway::new(cfg.gateway.clone());
+    let vocab = manifest.model.vocab as u32;
+    let start = Instant::now();
+    let mut gateway_total_s = 0.0;
+    let n_items = items.len() as u64;
+    for (i, item) in items.into_iter().enumerate() {
+        let target = item.arrival_offset_s * time_scale;
+        let elapsed = start.elapsed().as_secs_f64();
+        if target > elapsed {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
+        }
+        let routed = gateway.route(&item.text, item.max_output);
+        gateway_total_s += routed.gateway_s;
+        let req = LiveRequest {
+            id: i as u64,
+            tokens: crate::compress::tokenizer::hash_tokens(&routed.text, vocab),
+            max_output: routed.max_output_tokens,
+            arrival: Instant::now(),
+        };
+        let pool_idx = match routed.pool {
+            PoolKind::Short => 0,
+            PoolKind::Long => 1,
+        };
+        in_flight.fetch_add(1, Ordering::AcqRel);
+        {
+            let mut q = pools[pool_idx].queue.lock().unwrap();
+            q.push_back(req);
+        }
+        pools[pool_idx].wake.notify_all();
+    }
+    done_feeding.store(true, Ordering::Release);
+    for p in &pools {
+        p.wake.notify_all();
+    }
+    for h in handles {
+        h.join().expect("replica thread panicked")?;
+    }
+    let duration_s = start.elapsed().as_secs_f64();
+
+    let mut short = PoolMetrics::new("short");
+    let mut long = PoolMetrics::new("long");
+    let all = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
+    let completed = all.len() as u64;
+    for (kind, fin) in all {
+        match kind {
+            PoolKind::Short => short.record(&fin),
+            PoolKind::Long => long.record(&fin),
+        }
+    }
+    assert_eq!(in_flight.load(Ordering::Acquire), 0, "requests lost in flight");
+    Ok(ServeReport {
+        short,
+        long,
+        duration_s,
+        throughput_rps: completed as f64 / duration_s.max(1e-9),
+        n_compressed: gateway.n_compressed,
+        n_routed_short: gateway.n_routed_short,
+        n_routed_long: gateway.n_routed_long,
+        mean_gateway_s: gateway_total_s / n_items.max(1) as f64,
+    })
+}

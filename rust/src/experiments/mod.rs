@@ -1,0 +1,9 @@
+//! Experiment drivers: one function per paper table (1–7), shared by the
+//! CLI (`fleetopt tables`) and the bench binaries (`cargo bench`). Each
+//! regenerates the corresponding table's rows from this implementation so
+//! measured values can be laid side-by-side with the published ones
+//! (EXPERIMENTS.md).
+
+pub mod tables;
+
+pub use tables::*;

@@ -1,0 +1,480 @@
+//! Table generators for the paper's evaluation (§7, Tables 1–7).
+
+use std::time::Instant;
+
+use crate::compress::corpus;
+use crate::compress::extractive::compress;
+use crate::compress::fidelity;
+use crate::compress::tokenizer::count_tokens;
+use crate::config::GpuProfile;
+use crate::fleetsim::fleet::FleetSimResult;
+use crate::fleetsim::sim::{simulate_pool, SimConfig};
+use crate::model::kv::cliff_row;
+use crate::planner::{
+    plan_fleet, plan_homogeneous, sweep_gamma, Plan, PlanInput,
+};
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::util::table::{fmt_int, fmt_pct, Table};
+use crate::workload::archetype;
+use crate::workload::traces::{self, Workload};
+
+// ---------------------------------------------------------------------------
+// Table 1: the cost cliff
+// ---------------------------------------------------------------------------
+
+/// Paper Table 1: throughput capacity consumed around B_short = 8,192 for
+/// Llama-3-70B / A100-80GB.
+pub fn table1() -> Table {
+    let g = GpuProfile::a100_llama70b();
+    let b = 8192;
+    let mut t = Table::new(
+        "Table 1 — the cost cliff at B_short = 8,192 (Llama-3-70B, A100-80GB)",
+        &["L_total", "Pool", "Slots/GPU", "KV utilised", "Cost ratio"],
+    );
+    for l in [8192u32, 8193, 12_000, 65_536] {
+        let r = cliff_row(&g, b, l);
+        t.row(&[
+            fmt_int(l as f64),
+            format!("{:?}", r.pool),
+            r.slots_per_gpu.to_string(),
+            format!("{:.1}% ({:.1} GB/slot)", r.kv_utilized * 100.0, r.kv_used_gb),
+            format!("{:.1}x", r.cost_ratio),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 2: borderline fractions
+// ---------------------------------------------------------------------------
+
+/// Paper Table 2: alpha, beta, cliff ratio, archetype per workload.
+pub fn table2() -> Table {
+    let g = GpuProfile::a100_llama70b();
+    let mut t = Table::new(
+        "Table 2 — borderline fraction beta at representative thresholds",
+        &["Workload", "B_short", "alpha", "gamma", "beta", "Cliff rho", "Archetype"],
+    );
+    for w in traces::all() {
+        let arch = archetype::classify(&w.cdf, w.b_short, w.gamma);
+        t.row(&[
+            w.name.to_string(),
+            fmt_int(w.b_short as f64),
+            format!("{:.3}", w.alpha()),
+            format!("{:.1}", w.gamma),
+            format!("{:.3}", w.beta()),
+            format!("{:.0}x", g.cliff_ratio(w.b_short)),
+            arch.name().to_string(),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 3: fleet GPU savings
+// ---------------------------------------------------------------------------
+
+/// One Table-3 row set for a workload.
+pub struct Table3Rows {
+    pub workload: &'static str,
+    pub homo: Plan,
+    pub pr: Plan,
+    pub retrofit: Plan,
+    pub fleetopt: Plan,
+}
+
+/// Compute the Table-3 plans for one workload at `lambda` req/s.
+pub fn table3_rows(w: &Workload, lambda: f64) -> Table3Rows {
+    let input = PlanInput::new(w.clone(), lambda);
+    Table3Rows {
+        workload: w.name,
+        homo: plan_homogeneous(&input).expect("homogeneous plan"),
+        pr: plan_fleet(&input, w.b_short, 1.0).expect("PR plan"),
+        retrofit: plan_fleet(&input, w.b_short, 1.5).expect("retrofit plan"),
+        fleetopt: sweep_gamma(&input, w.b_short).expect("fleetopt plan"),
+    }
+}
+
+/// Paper Table 3: fleet GPU counts and annualized cost at 1,000 req/s.
+pub fn table3(lambda: f64) -> Table {
+    let mut t = Table::new(
+        &format!("Table 3 — fleet GPU counts and annualized cost at lambda = {lambda} req/s"),
+        &["Workload", "Method", "n_s", "n_l", "Total", "Ann. cost (K$)", "Savings"],
+    );
+    for w in traces::all() {
+        let rows = table3_rows(&w, lambda);
+        let base = rows.homo.cost_yr;
+        let mut push = |method: String, p: &Plan| {
+            t.row(&[
+                w.name.to_string(),
+                method,
+                p.short.n_gpus.to_string(),
+                p.long.n_gpus.to_string(),
+                fmt_int(p.total_gpus() as f64),
+                fmt_int(p.cost_yr / 1000.0),
+                if p.cost_yr == base {
+                    "-".into()
+                } else {
+                    fmt_pct(1.0 - p.cost_yr / base)
+                },
+            ]);
+        };
+        push("Homogeneous".into(), &rows.homo);
+        push("Pool routing (PR)".into(), &rows.pr);
+        push("PR + C&R (g=1.5)".into(), &rows.retrofit);
+        push(
+            format!("FleetOpt (g*={:.1})", rows.fleetopt.gamma),
+            &rows.fleetopt,
+        );
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 4: compressor latency
+// ---------------------------------------------------------------------------
+
+/// Latency profile of the extractive compressor on one workload's
+/// borderline band.
+pub struct CompressLatency {
+    pub workload: &'static str,
+    pub beta: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// beta-weighted mean overhead across all requests, ms.
+    pub overhead_ms: f64,
+    pub docs: usize,
+}
+
+/// Measure compressor latency on `n_docs` borderline documents.
+pub fn table4_measure(w: &Workload, n_docs: usize, seed: u64) -> CompressLatency {
+    let mut rng = Rng::new(seed);
+    let mut lat = Samples::with_capacity(n_docs);
+    for _ in 0..n_docs {
+        let doc = corpus::generate_borderline_for(w, &mut rng);
+        let l_out = w.output.sample_l_out(count_tokens(&doc) as f64, &mut rng);
+        let budget = w.b_short.saturating_sub(l_out).max(64);
+        let t0 = Instant::now();
+        let c = compress(&doc, budget);
+        lat.push(t0.elapsed().as_secs_f64() * 1e3);
+        std::hint::black_box(c.ok);
+    }
+    let mean: f64 = lat.values().iter().sum::<f64>() / lat.len() as f64;
+    CompressLatency {
+        workload: w.name,
+        beta: w.beta(),
+        p50_ms: lat.p50(),
+        p95_ms: lat.p95(),
+        p99_ms: lat.p99(),
+        overhead_ms: w.beta() * mean,
+        docs: n_docs,
+    }
+}
+
+/// Paper Table 4: end-to-end compressor latency per workload.
+pub fn table4(n_docs: usize) -> Table {
+    let mut t = Table::new(
+        "Table 4 — end-to-end compressor latency (ms, this CPU)",
+        &["Workload", "B_short", "beta", "p50", "p95", "p99", "Overhead/req"],
+    );
+    for (i, w) in traces::all().iter().enumerate() {
+        let m = table4_measure(w, n_docs, 0x7AB4 + i as u64);
+        t.row(&[
+            w.name.to_string(),
+            fmt_int(w.b_short as f64),
+            format!("{:.3}", m.beta),
+            format!("{:.1} ms", m.p50_ms),
+            format!("{:.1} ms", m.p95_ms),
+            format!("{:.1} ms", m.p99_ms),
+            format!("{:.2} ms", m.overhead_ms),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 5: analytical vs DES utilization
+// ---------------------------------------------------------------------------
+
+/// One pool's analytical-vs-DES comparison.
+pub struct DesValidation {
+    pub workload: &'static str,
+    pub pool: &'static str,
+    pub n_gpus: u64,
+    pub rho_ana: f64,
+    pub rho_des: f64,
+    /// (ana - des)/des, the paper's "Error" column.
+    pub error: f64,
+    pub ttft_p99_ana: f64,
+    pub ttft_p99_des: f64,
+}
+
+/// Run the Table-5 validation for one workload's PR (gamma = 1) fleet with
+/// ~`n_per_pool` DES requests per pool.
+pub fn table5_validate(w: &Workload, lambda: f64, n_per_pool: usize, seed: u64) -> (Vec<DesValidation>, FleetSimResult) {
+    let input = PlanInput::new(w.clone(), lambda);
+    let plan = plan_fleet(&input, w.b_short, 1.0).expect("PR plan");
+    // Scale total samples so (a) the smaller pool still sees ~n_per_pool
+    // and (b) the horizon covers the 3x-E[S] warm-up plus >= 7 further mean
+    // occupancies of the slowest pool (steady-state measurement).
+    let minority = (1.0 - plan.alpha).min(plan.alpha).max(0.02);
+    let e_s_max = plan
+        .short
+        .svc
+        .iter()
+        .chain(plan.long.svc.iter())
+        .map(|s| s.e_s)
+        .fold(0.0f64, f64::max);
+    let n_for_horizon = (lambda * 10.0 * e_s_max).ceil() as usize;
+    let n_total = ((n_per_pool as f64 / minority).ceil() as usize)
+        .max(n_for_horizon)
+        .min(n_per_pool * 40);
+    let g = input.gpu.clone();
+    let sim = crate::fleetsim::fleet::simulate_fleet(w, &plan, &g, lambda, n_total, seed);
+    let mut out = Vec::new();
+    if let Some(s) = &sim.short {
+        let mut ttft = s.ttft.clone();
+        out.push(DesValidation {
+            workload: w.name,
+            pool: "short",
+            n_gpus: plan.short.n_gpus,
+            rho_ana: plan.short.rho_ana(),
+            rho_des: s.utilization,
+            error: (plan.short.rho_ana() - s.utilization) / s.utilization,
+            ttft_p99_ana: plan.short.ttft_p99(),
+            ttft_p99_des: ttft.p99(),
+        });
+    }
+    if let Some(l) = &sim.long {
+        let mut ttft = l.ttft.clone();
+        out.push(DesValidation {
+            workload: w.name,
+            pool: "long",
+            n_gpus: plan.long.n_gpus,
+            rho_ana: plan.long.rho_ana(),
+            rho_des: l.utilization,
+            error: (plan.long.rho_ana() - l.utilization) / l.utilization,
+            ttft_p99_ana: plan.long.ttft_p99(),
+            ttft_p99_des: ttft.p99(),
+        });
+    }
+    (out, sim)
+}
+
+/// Paper Table 5: analytical vs DES GPU utilization (PR fleet, gamma = 1).
+pub fn table5(lambda: f64, n_per_pool: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Table 5 — analytical vs DES utilization at lambda = {lambda} req/s (PR fleet)"),
+        &["Workload", "Pool", "n GPUs", "rho_ana", "rho_des", "Error", "TTFT99 ana", "TTFT99 des"],
+    );
+    for (i, w) in traces::all().iter().enumerate() {
+        let (rows, _) = table5_validate(w, lambda, n_per_pool, 0x7AB5 + i as u64);
+        for r in rows {
+            t.row(&[
+                r.workload.to_string(),
+                r.pool.to_string(),
+                r.n_gpus.to_string(),
+                format!("{:.3}", r.rho_ana),
+                format!("{:.3}", r.rho_des),
+                format!("{:+.1}%", r.error * 100.0),
+                format!("{:.0} ms", r.ttft_p99_ana * 1e3),
+                format!("{:.0} ms", r.ttft_p99_des * 1e3),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 6: arrival-rate sensitivity
+// ---------------------------------------------------------------------------
+
+/// Paper Table 6: fleet size and savings vs arrival rate (Agent-heavy).
+pub fn table6(lambdas: &[f64]) -> Table {
+    let w = traces::agent_heavy();
+    let mut t = Table::new(
+        "Table 6 — fleet size and savings vs arrival rate (Agent-heavy, B = 8,192)",
+        &["lambda (req/s)", "Homo", "PR", "FleetOpt (g*)", "PR saving", "FleetOpt saving"],
+    );
+    for &lambda in lambdas {
+        let input = PlanInput::new(w.clone(), lambda);
+        let homo = plan_homogeneous(&input).unwrap();
+        let pr = plan_fleet(&input, w.b_short, 1.0).unwrap();
+        let opt = sweep_gamma(&input, w.b_short).unwrap();
+        t.row(&[
+            fmt_int(lambda),
+            fmt_int(homo.total_gpus() as f64),
+            fmt_int(pr.total_gpus() as f64),
+            format!("{} (g*={:.1})", fmt_int(opt.total_gpus() as f64), opt.gamma),
+            fmt_pct(1.0 - pr.cost_yr / homo.cost_yr),
+            fmt_pct(1.0 - opt.cost_yr / homo.cost_yr),
+        ]);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
+// Table 7: compression fidelity
+// ---------------------------------------------------------------------------
+
+/// Fidelity study results (paper Appendix C / Table 7).
+pub struct FidelityStudy {
+    pub n_prompts: usize,
+    pub p_c: f64,
+    pub rouge: Samples,
+    pub tfidf_cos: Samples,
+    pub reduction: Samples,
+    /// Embedding cosine (BERTScore substitute) when the runtime is present.
+    pub embed_cos: Option<Samples>,
+}
+
+/// Run the fidelity study on `n` borderline prompts at the Agent-heavy
+/// configuration (B = 8,192, gamma = 1.5, band 8K–12K).
+pub fn table7_study(n: usize, seed: u64, artifacts_dir: Option<&std::path::Path>) -> FidelityStudy {
+    let w = traces::agent_heavy();
+    let rt = artifacts_dir.and_then(|d| crate::runtime::ModelRuntime::load(d).ok());
+    let mut rng = Rng::new(seed);
+    let mut rouge = Samples::with_capacity(n);
+    let mut tfidf_cos = Samples::with_capacity(n);
+    let mut reduction = Samples::with_capacity(n);
+    let mut embed_cos = rt.as_ref().map(|_| Samples::with_capacity(n));
+    let mut ok = 0usize;
+    for _ in 0..n {
+        let doc = corpus::generate_borderline_for(&w, &mut rng);
+        let l_out = w.output.sample_l_out(count_tokens(&doc) as f64, &mut rng);
+        let budget = w.b_short.saturating_sub(l_out).max(64);
+        let c = compress(&doc, budget);
+        if !c.ok {
+            continue;
+        }
+        ok += 1;
+        let f = fidelity::measure(&doc, &c.text);
+        rouge.push(f.rouge_l_recall);
+        tfidf_cos.push(f.tfidf_cosine);
+        reduction.push(f.token_reduction);
+        if let (Some(rt), Some(ec)) = (&rt, embed_cos.as_mut()) {
+            let ea = rt.embed_text(&doc).unwrap();
+            let eb = rt.embed_text(&c.text).unwrap();
+            ec.push(crate::runtime::cosine(&ea, &eb));
+        }
+    }
+    FidelityStudy {
+        n_prompts: n,
+        p_c: ok as f64 / n as f64,
+        rouge,
+        tfidf_cos,
+        reduction,
+        embed_cos,
+    }
+}
+
+/// Paper Table 7: fidelity metrics (mean / p10 / p50 / p90).
+pub fn table7(n: usize, artifacts_dir: Option<&std::path::Path>) -> Table {
+    let mut s = table7_study(n, 0x7AB7, artifacts_dir);
+    let mut t = Table::new(
+        &format!("Table 7 — compression fidelity on {n} borderline prompts (B=8,192, g=1.5)"),
+        &["Metric", "Mean", "p10", "p50", "p90"],
+    );
+    t.row(&[
+        "p_c (compressibility)".into(),
+        format!("{:.2}", s.p_c),
+        "-".into(),
+        "-".into(),
+        "-".into(),
+    ]);
+    let stat_row = |name: &str, s: &mut Samples| {
+        let mean = s.values().iter().sum::<f64>() / s.len().max(1) as f64;
+        [
+            name.to_string(),
+            format!("{mean:.3}"),
+            format!("{:.3}", s.percentile(0.10)),
+            format!("{:.3}", s.percentile(0.50)),
+            format!("{:.3}", s.percentile(0.90)),
+        ]
+    };
+    let r = stat_row("ROUGE-L recall", &mut s.rouge);
+    t.row(&r);
+    let r = stat_row("TF-IDF cosine", &mut s.tfidf_cos);
+    t.row(&r);
+    if let Some(ec) = s.embed_cos.as_mut() {
+        let r = stat_row("Embedding cosine (BERTScore proxy)", ec);
+        t.row(&r);
+    }
+    let r = stat_row("Token reduction", &mut s.reduction);
+    t.row(&r);
+    t
+}
+
+// ---------------------------------------------------------------------------
+// helpers used by benches
+// ---------------------------------------------------------------------------
+
+/// Simulate one synthetic pool quickly (bench helper).
+pub fn quick_pool_sim(n_gpus: u64, n_slots: u32, lambda: f64, n: usize, seed: u64) -> f64 {
+    let g = GpuProfile::a100_llama70b();
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    let reqs: Vec<crate::fleetsim::sim::SimRequest> = (0..n)
+        .map(|_| {
+            t += rng.exp(lambda);
+            crate::fleetsim::sim::SimRequest {
+                arrival_s: t,
+                l_in: 1024,
+                l_out: 100,
+            }
+        })
+        .collect();
+    simulate_pool(&SimConfig::new(g, n_gpus, n_slots), &reqs).utilization
+}
+
+/// The default artifacts directory (exists only after `make artifacts`).
+pub fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+#[allow(unused_imports)]
+use crate::workload::cdf::LengthDist;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_has_paper_rows() {
+        let t = table1();
+        assert_eq!(t.n_rows(), 4);
+        let s = t.render();
+        assert!(s.contains("8.0x"), "{s}");
+        assert!(s.contains("128"));
+    }
+
+    #[test]
+    fn table2_has_three_workloads() {
+        let t = table2();
+        assert_eq!(t.n_rows(), 3);
+        let s = t.render();
+        assert!(s.contains("0.898") && s.contains("0.078"));
+        assert!(s.contains("16x") && s.contains("43x") || s.contains("42x"), "{s}");
+    }
+
+    #[test]
+    fn table4_latency_sane() {
+        let w = traces::lmsys();
+        let m = table4_measure(&w, 5, 1);
+        assert!(m.p50_ms > 0.0 && m.p99_ms < 5_000.0);
+        assert!(m.overhead_ms < m.p99_ms);
+    }
+
+    #[test]
+    fn table7_small_study_fidelity_bounds() {
+        let s = table7_study(5, 2, None);
+        assert!(s.p_c > 0.5, "p_c = {}", s.p_c);
+        let mut rouge = s.rouge;
+        assert!(rouge.p50() > 0.5 && rouge.p50() <= 1.0);
+        let mut cos = s.tfidf_cos;
+        assert!(cos.p50() > 0.8, "tfidf cosine {}", cos.p50());
+    }
+}

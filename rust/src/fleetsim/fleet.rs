@@ -1,0 +1,175 @@
+//! Fleet-level simulation: route a workload trace through the pool
+//! boundary (with optional C&R) and simulate both pools (Table 5).
+
+use crate::config::GpuProfile;
+use crate::fleetsim::sim::{simulate_pool, SimConfig, SimRequest, SimResult};
+use crate::planner::Plan;
+use crate::util::rng::Rng;
+use crate::workload::arrivals::PoissonArrivals;
+use crate::workload::traces::Workload;
+
+/// Where a simulated request ended up.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Route {
+    Short,
+    /// Compressed into the short pool (C&R).
+    ShortCompressed,
+    Long,
+}
+
+/// Routed per-pool traces plus bookkeeping.
+#[derive(Debug)]
+pub struct RoutedTrace {
+    pub short: Vec<SimRequest>,
+    pub long: Vec<SimRequest>,
+    pub n_compressed: u64,
+    pub n_total: u64,
+}
+
+/// Sample `n` requests at rate `lambda` and route them at boundary
+/// `b_short` with compression bandwidth `gamma` and compressibility `p_c`
+/// (the DES-side mirror of Eq. 1-2). Compressed requests enter the short
+/// pool at exactly `L_in = B - L_out` (Eq. 15).
+pub fn route_trace(
+    w: &Workload,
+    lambda: f64,
+    n: usize,
+    b_short: u32,
+    gamma: f64,
+    seed: u64,
+) -> RoutedTrace {
+    let mut rng = Rng::new(seed ^ 0xF1EE7);
+    let arrivals = PoissonArrivals::new(lambda, seed);
+    let mut short = Vec::new();
+    let mut long = Vec::new();
+    let mut n_compressed = 0u64;
+    for (i, t) in arrivals.take(n).enumerate() {
+        let r = w.sample_request(i as u64, t, &mut rng);
+        let band_hi = (gamma * b_short as f64).floor() as u32;
+        if r.l_total <= b_short {
+            short.push(SimRequest {
+                arrival_s: t,
+                l_in: r.l_in,
+                l_out: r.l_out,
+            });
+        } else if r.l_total <= band_hi
+            && r.category.compressible()
+            && r.l_out < b_short
+        {
+            // C&R: compressed to the Eq. 15 budget.
+            n_compressed += 1;
+            short.push(SimRequest {
+                arrival_s: t,
+                l_in: b_short - r.l_out,
+                l_out: r.l_out,
+            });
+        } else {
+            long.push(SimRequest {
+                arrival_s: t,
+                l_in: r.l_in,
+                l_out: r.l_out,
+            });
+        }
+    }
+    RoutedTrace {
+        short,
+        long,
+        n_compressed,
+        n_total: n as u64,
+    }
+}
+
+/// Per-pool DES results for a provisioned fleet.
+#[derive(Debug)]
+pub struct FleetSimResult {
+    pub short: Option<SimResult>,
+    pub long: Option<SimResult>,
+    pub routed: RoutedTrace,
+}
+
+/// Simulate a planned fleet against a freshly sampled trace of `n`
+/// requests (paper §7.4: 30,000 per pool).
+pub fn simulate_fleet(
+    w: &Workload,
+    plan: &Plan,
+    g: &GpuProfile,
+    lambda: f64,
+    n: usize,
+    seed: u64,
+) -> FleetSimResult {
+    let routed = route_trace(w, lambda, n, plan.b_short, plan.gamma, seed);
+    // Open the utilization window only after ~3 mean slot occupancies: an
+    // empty pool with E[S] in the tens of seconds needs that long to fill
+    // to steady state, and counting the fill-up biases rho-hat low.
+    let warm = |svc: &Option<crate::queueing::service::ServiceStats>| {
+        svc.as_ref().map(|s| 3.0 * s.e_s).unwrap_or(0.0)
+    };
+    let short = (plan.short.n_gpus > 0 && !routed.short.is_empty()).then(|| {
+        let mut cfg = SimConfig::new(g.clone(), plan.short.n_gpus, g.n_max(plan.b_short));
+        cfg.warmup_s = warm(&plan.short.svc);
+        simulate_pool(&cfg, &routed.short)
+    });
+    let long = (plan.long.n_gpus > 0 && !routed.long.is_empty()).then(|| {
+        let mut cfg = SimConfig::new(g.clone(), plan.long.n_gpus, g.n_max_long());
+        cfg.warmup_s = warm(&plan.long.svc);
+        simulate_pool(&cfg, &routed.long)
+    });
+    FleetSimResult {
+        short,
+        long,
+        routed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::traces;
+
+    #[test]
+    fn routing_fractions_match_alpha_beta() {
+        let w = traces::azure();
+        let routed = route_trace(&w, 1000.0, 50_000, 4096, 1.5, 1);
+        let short_frac = routed.short.len() as f64 / 50_000.0;
+        // alpha' = alpha + beta * p_c = 0.898 + 0.078 (p_c = 1 for Azure).
+        assert!((short_frac - 0.976).abs() < 0.01, "short frac {short_frac}");
+        let comp_frac = routed.n_compressed as f64 / 50_000.0;
+        assert!((comp_frac - 0.078).abs() < 0.01, "compressed frac {comp_frac}");
+    }
+
+    #[test]
+    fn gamma_one_disables_compression() {
+        let w = traces::azure();
+        let routed = route_trace(&w, 1000.0, 20_000, 4096, 1.0, 2);
+        assert_eq!(routed.n_compressed, 0);
+    }
+
+    #[test]
+    fn agent_code_reduces_pc() {
+        // Agent-heavy: ~25% of borderline traffic is code -> compressed
+        // fraction ~ beta * 0.75.
+        let w = traces::agent_heavy();
+        let routed = route_trace(&w, 1000.0, 50_000, 8192, 1.5, 3);
+        let comp_frac = routed.n_compressed as f64 / 50_000.0;
+        assert!(
+            (comp_frac - 0.112 * 0.75).abs() < 0.01,
+            "compressed frac {comp_frac}"
+        );
+    }
+
+    #[test]
+    fn compressed_requests_fit_boundary() {
+        let w = traces::azure();
+        let routed = route_trace(&w, 500.0, 20_000, 4096, 1.5, 4);
+        for r in &routed.short {
+            assert!(r.l_in + r.l_out <= 4096, "short-pool overflow: {r:?}");
+        }
+    }
+
+    #[test]
+    fn conservation() {
+        let w = traces::lmsys();
+        let routed = route_trace(&w, 800.0, 10_000, 1536, 1.5, 5);
+        assert_eq!(routed.short.len() + routed.long.len(), 10_000);
+    }
+}

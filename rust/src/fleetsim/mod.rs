@@ -1,0 +1,10 @@
+//! `inference-fleet-sim` (paper §7.4): a deterministic discrete-event
+//! simulator for heterogeneous multi-pool LLM fleets, used to validate the
+//! analytical model's utilization predictions within 3%.
+
+pub mod events;
+pub mod fleet;
+pub mod sim;
+
+pub use fleet::{route_trace, simulate_fleet, FleetSimResult, RoutedTrace};
+pub use sim::{simulate_pool, SimConfig, SimRequest, SimResult};

@@ -1,0 +1,382 @@
+//! inference-fleet-sim: discrete-event simulation of one pool under
+//! continuous batching (paper §7.4's validation substrate).
+//!
+//! Model: `n_gpus` GPUs, each with `n_slots` KV slots advancing in lockstep
+//! iterations of `t_iter` (Eq. 3). A request occupies one slot for
+//! `ceil(L_in / C_chunk) + L_out` iterations (Eq. 4); its first token
+//! appears after the prefill iterations plus one decode step (Eq. 7).
+//! Requests queue FCFS per pool; GPUs admit from the shared queue at
+//! iteration boundaries (and idle GPUs wake on arrival). Utilization is
+//! busy-slot-time over provisioned slot-time inside a measurement window
+//! that excludes warm-up and drain — the quantity Table 5 compares against
+//! the analytical rho.
+
+use crate::config::GpuProfile;
+use crate::fleetsim::events::EventQueue;
+use crate::util::stats::Samples;
+
+/// One simulated request (already routed to this pool; lengths are
+/// post-compression values for C&R traffic).
+#[derive(Clone, Copy, Debug)]
+pub struct SimRequest {
+    pub arrival_s: f64,
+    pub l_in: u32,
+    pub l_out: u32,
+}
+
+/// Pool simulation configuration.
+#[derive(Clone, Debug)]
+pub struct SimConfig {
+    pub gpu: GpuProfile,
+    pub n_gpus: u64,
+    /// KV slots per GPU for this pool's context window.
+    pub n_slots: u32,
+    /// Lockstep iteration latency at the configured slot count (paper §3.1
+    /// "all n_max slots advance in lockstep"). When false, t_iter follows
+    /// the instantaneous occupancy (Eq. 3 with n = busy slots) — an
+    /// ablation mode.
+    pub lockstep_full: bool,
+    /// Fraction of requests treated as warm-up (excluded from metrics).
+    pub warmup_frac: f64,
+    /// Additional absolute warm-up time (s) before the utilization window
+    /// opens. Pools with long slot occupancies (E[S] tens of seconds) need
+    /// several service times to reach steady state; callers that know E[S]
+    /// (e.g. the Table-5 validation) set this to ~3x E[S].
+    pub warmup_s: f64,
+}
+
+impl SimConfig {
+    pub fn new(gpu: GpuProfile, n_gpus: u64, n_slots: u32) -> Self {
+        SimConfig {
+            gpu,
+            n_gpus,
+            n_slots,
+            lockstep_full: true,
+            warmup_frac: 0.1,
+            warmup_s: 0.0,
+        }
+    }
+}
+
+/// Aggregate results for one pool.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Measured GPU utilization rho-hat: busy-slot-time / provisioned
+    /// slot-time within the measurement window.
+    pub utilization: f64,
+    /// TTFT samples (s), measured requests only.
+    pub ttft: Samples,
+    /// Queue-wait samples (s).
+    pub wait: Samples,
+    /// Completed requests (all, including warm-up).
+    pub completed: u64,
+    /// Measurement window (s).
+    pub window: (f64, f64),
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    req: usize,
+    /// Prefill iterations remaining before the first token.
+    prefill_left: u32,
+    /// Total iterations remaining (prefill + decode).
+    iters_left: u32,
+    /// Whether TTFT has been recorded.
+    first_token_done: bool,
+}
+
+struct Gpu {
+    slots: Vec<Option<Active>>,
+    n_busy: u32,
+    /// An iteration-completion event is in flight.
+    iterating: bool,
+    /// Integral of busy slots over time, clipped to the window.
+    busy_integral: f64,
+    last_change: f64,
+}
+
+impl Gpu {
+    fn new(n_slots: u32) -> Self {
+        Gpu {
+            slots: vec![None; n_slots as usize],
+            n_busy: 0,
+            iterating: false,
+            busy_integral: 0.0,
+            last_change: 0.0,
+        }
+    }
+
+    fn accumulate(&mut self, t: f64, window: (f64, f64)) {
+        let lo = self.last_change.max(window.0);
+        let hi = t.min(window.1);
+        if hi > lo {
+            self.busy_integral += self.n_busy as f64 * (hi - lo);
+        }
+        self.last_change = t;
+    }
+
+    fn free_slots(&self) -> u32 {
+        self.slots.len() as u32 - self.n_busy
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(usize),
+    Iteration(usize), // gpu index
+}
+
+/// Simulate one pool over a request list (must be arrival-sorted).
+pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
+    assert!(cfg.n_gpus > 0 && cfg.n_slots > 0);
+    assert!(
+        requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
+        "requests must be sorted by arrival"
+    );
+    let n_req = requests.len();
+    let warm = (n_req as f64 * cfg.warmup_frac) as usize;
+    // Measurement window: from the warm-th arrival to the last arrival
+    // (excludes the drain phase, during which no load is offered).
+    let window = if n_req == 0 {
+        (0.0, 0.0)
+    } else {
+        let lo = requests[warm.min(n_req - 1)].arrival_s.max(cfg.warmup_s);
+        let hi = requests[n_req - 1].arrival_s;
+        (lo.min(hi), hi)
+    };
+
+    let chunk = cfg.gpu.chunk;
+    let t_iter_full = cfg.gpu.t_iter_s(cfg.n_slots);
+
+    let mut gpus: Vec<Gpu> = (0..cfg.n_gpus).map(|_| Gpu::new(cfg.n_slots)).collect();
+    let mut queue: std::collections::VecDeque<usize> = Default::default();
+    let mut events: EventQueue<Ev> = EventQueue::new();
+    for (i, r) in requests.iter().enumerate() {
+        events.schedule(r.arrival_s, Ev::Arrival(i));
+    }
+
+    let mut ttft = Samples::with_capacity(n_req);
+    let mut wait = Samples::with_capacity(n_req);
+    let mut completed = 0u64;
+
+    let admit = |g: &mut Gpu,
+                 queue: &mut std::collections::VecDeque<usize>,
+                 t: f64,
+                 wait: &mut Samples,
+                 requests: &[SimRequest],
+                 warm: usize| {
+        while g.free_slots() > 0 {
+            let Some(req) = queue.pop_front() else { break };
+            let r = &requests[req];
+            let prefill = (r.l_in as u64).div_ceil(chunk as u64) as u32;
+            let slot = g.slots.iter().position(Option::is_none).unwrap();
+            g.slots[slot] = Some(Active {
+                req,
+                prefill_left: prefill,
+                iters_left: prefill + r.l_out,
+                first_token_done: false,
+            });
+            g.n_busy += 1;
+            if req >= warm {
+                wait.push(t - r.arrival_s);
+            }
+        }
+    };
+
+    while let Some((t, ev)) = events.pop() {
+        match ev {
+            Ev::Arrival(i) => {
+                queue.push_back(i);
+                // Wake an idle GPU (most free slots first for JSQ flavor).
+                if let Some(gi) = (0..gpus.len())
+                    .filter(|&gi| !gpus[gi].iterating)
+                    .max_by_key(|&gi| gpus[gi].free_slots())
+                {
+                    let g = &mut gpus[gi];
+                    g.accumulate(t, window);
+                    admit(g, &mut queue, t, &mut wait, requests, warm);
+                    if g.n_busy > 0 {
+                        let dt = if cfg.lockstep_full {
+                            t_iter_full
+                        } else {
+                            cfg.gpu.t_iter_s(g.n_busy)
+                        };
+                        g.iterating = true;
+                        events.schedule(t + dt, Ev::Iteration(gi));
+                    }
+                }
+            }
+            Ev::Iteration(gi) => {
+                let g = &mut gpus[gi];
+                g.accumulate(t, window);
+                g.iterating = false;
+                // Advance every busy slot by one iteration.
+                for slot in g.slots.iter_mut() {
+                    if let Some(a) = slot {
+                        a.iters_left -= 1;
+                        if a.prefill_left > 0 {
+                            a.prefill_left -= 1;
+                        } else if !a.first_token_done {
+                            // This iteration produced the first token.
+                            a.first_token_done = true;
+                            if a.req >= warm {
+                                ttft.push(t - requests[a.req].arrival_s);
+                            }
+                        }
+                        if a.iters_left == 0 {
+                            if !a.first_token_done && a.req >= warm {
+                                // Degenerate L_out: first token == last.
+                                ttft.push(t - requests[a.req].arrival_s);
+                            }
+                            *slot = None;
+                            g.n_busy -= 1;
+                            completed += 1;
+                        }
+                    }
+                }
+                admit(g, &mut queue, t, &mut wait, requests, warm);
+                if g.n_busy > 0 {
+                    let dt = if cfg.lockstep_full {
+                        t_iter_full
+                    } else {
+                        cfg.gpu.t_iter_s(g.n_busy)
+                    };
+                    g.iterating = true;
+                    events.schedule(t + dt, Ev::Iteration(gi));
+                }
+            }
+        }
+    }
+
+    let slot_time: f64 =
+        cfg.n_gpus as f64 * cfg.n_slots as f64 * (window.1 - window.0).max(1e-12);
+    let busy: f64 = gpus.iter().map(|g| g.busy_integral).sum();
+    SimResult {
+        utilization: busy / slot_time,
+        ttft,
+        wait,
+        completed,
+        window,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn gpu() -> GpuProfile {
+        GpuProfile::a100_llama70b()
+    }
+
+    fn poisson_requests(
+        lambda: f64,
+        n: usize,
+        l_in: u32,
+        l_out: u32,
+        seed: u64,
+    ) -> Vec<SimRequest> {
+        let mut rng = Rng::new(seed);
+        let mut t = 0.0;
+        (0..n)
+            .map(|_| {
+                t += rng.exp(lambda);
+                SimRequest {
+                    arrival_s: t,
+                    l_in,
+                    l_out,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn all_requests_complete() {
+        let cfg = SimConfig::new(gpu(), 2, 16);
+        let reqs = poisson_requests(5.0, 500, 1000, 50, 1);
+        let res = simulate_pool(&cfg, &reqs);
+        assert_eq!(res.completed, 500);
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = SimConfig::new(gpu(), 3, 16);
+        let reqs = poisson_requests(10.0, 1000, 800, 40, 2);
+        let a = simulate_pool(&cfg, &reqs);
+        let b = simulate_pool(&cfg, &reqs);
+        assert_eq!(a.utilization, b.utilization);
+        assert_eq!(a.completed, b.completed);
+    }
+
+    #[test]
+    fn utilization_matches_littles_law() {
+        // Deterministic service: E[S] = iters * t_iter; rho = lambda E[S] / c.
+        let cfg = SimConfig::new(gpu(), 4, 16);
+        let l_in = 1024u32; // 2 chunks
+        let l_out = 98u32; // total 100 iters
+        let t_iter = cfg.gpu.t_iter_s(16);
+        let e_s = 100.0 * t_iter; // 1.84 s
+        let lambda = 20.0;
+        let rho_expect = lambda * e_s / (4.0 * 16.0);
+        assert!(rho_expect < 0.85);
+        let reqs = poisson_requests(lambda, 20_000, l_in, l_out, 3);
+        let res = simulate_pool(&cfg, &reqs);
+        assert!(
+            (res.utilization - rho_expect).abs() / rho_expect < 0.03,
+            "sim {} vs analytical {rho_expect}",
+            res.utilization
+        );
+    }
+
+    #[test]
+    fn ttft_lower_bound_is_prefill_plus_decode() {
+        // An unloaded pool: TTFT = (prefill chunks + 1) * t_iter exactly.
+        let cfg = SimConfig::new(gpu(), 1, 16);
+        let reqs = vec![SimRequest {
+            arrival_s: 0.0,
+            l_in: 1024,
+            l_out: 10,
+        }];
+        let mut res = simulate_pool(&cfg, &reqs);
+        // warmup_frac 0.1 of 1 request = 0 warm-up; sample recorded.
+        let t_iter = cfg.gpu.t_iter_s(16);
+        assert_eq!(res.ttft.len(), 1);
+        assert!((res.ttft.p50() - 3.0 * t_iter).abs() < 1e-9);
+    }
+
+    #[test]
+    fn queueing_appears_under_overload() {
+        // One GPU, offered load > 1: waits must grow.
+        let cfg = SimConfig::new(gpu(), 1, 16);
+        let reqs = poisson_requests(50.0, 2_000, 2048, 100, 4);
+        let mut res = simulate_pool(&cfg, &reqs);
+        assert!(res.wait.p99() > 1.0, "p99 wait {}", res.wait.p99());
+        assert!(res.utilization > 0.95);
+    }
+
+    #[test]
+    fn occupancy_mode_faster_when_underloaded() {
+        // With few busy slots, occupancy-dependent t_iter beats lockstep.
+        let mut cfg = SimConfig::new(gpu(), 1, 128);
+        let reqs = vec![SimRequest {
+            arrival_s: 0.0,
+            l_in: 512,
+            l_out: 50,
+        }];
+        let full = simulate_pool(&cfg, &reqs);
+        cfg.lockstep_full = false;
+        let occ = simulate_pool(&cfg, &reqs);
+        let mut f = full.ttft;
+        let mut o = occ.ttft;
+        assert!(o.p50() < f.p50());
+    }
+
+    #[test]
+    fn more_gpus_reduce_waits() {
+        let reqs = poisson_requests(30.0, 3_000, 2048, 80, 5);
+        let small = simulate_pool(&SimConfig::new(gpu(), 2, 16), &reqs);
+        let big = simulate_pool(&SimConfig::new(gpu(), 8, 16), &reqs);
+        let (mut s, mut b) = (small.wait, big.wait);
+        assert!(b.p99() <= s.p99());
+    }
+}

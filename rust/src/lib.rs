@@ -1,0 +1,40 @@
+//! # FleetOpt
+//!
+//! Reproduction of *"FleetOpt: Analytical Fleet Provisioning for LLM
+//! Inference with Compress-and-Route as Implementation Mechanism"*
+//! (CS.DC 2026). See DESIGN.md for the system inventory and EXPERIMENTS.md
+//! for the paper-vs-measured record.
+//!
+//! The crate is the Layer-3 coordinator of a three-layer Rust + JAX +
+//! Pallas stack:
+//!
+//! * [`queueing`] — the analytical core: M/G/c model, log-space Erlang-C,
+//!   Kimura P99 wait approximation, service-time model (paper §3).
+//! * [`planner`] — the FleetOpt offline planner, Algorithm 1 (paper §4, §6).
+//! * [`workload`] — prompt-length CDFs, the three evaluation traces, and
+//!   Poisson arrival processes (paper §2.4, §7.1).
+//! * [`compress`] — the Compress-and-Route extractive pipeline (paper §5).
+//! * [`router`] — the gateway: token-budget estimation, category
+//!   classification, pool routing + C&R (paper §2.1, §5.1).
+//! * [`fleetsim`] — `inference-fleet-sim`, the discrete-event simulator
+//!   used to validate the analytical model (paper §7.4).
+//! * [`runtime`] — PJRT executor loading the AOT HLO-text artifacts built
+//!   by `python/compile/aot.py` (L2 JAX model + L1 Pallas kernels).
+//! * [`coordinator`] — the live serving path: KV-slot manager, continuous
+//!   batcher, chunked-prefill/decode scheduler, two-pool fleet.
+//! * [`util`] — zero-dependency substrates (RNG, JSON, stats, tables,
+//!   property-check harness).
+
+pub mod compress;
+pub mod config;
+pub mod experiments;
+pub mod coordinator;
+pub mod fleetsim;
+pub mod metrics;
+pub mod model;
+pub mod planner;
+pub mod queueing;
+pub mod router;
+pub mod runtime;
+pub mod util;
+pub mod workload;

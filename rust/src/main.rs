@@ -1,0 +1,309 @@
+//! `fleetopt` — the FleetOpt launcher.
+//!
+//! Subcommands:
+//!   plan      — plan a fleet for one workload (Algorithm 1 at a fixed B)
+//!   sweep     — full Algorithm-1 sweep over candidate boundaries
+//!   tables    — regenerate the paper's evaluation tables (1–7)
+//!   simulate  — DES validation of the analytical model (Table 5)
+//!   compress  — compress a borderline sample and report fidelity
+//!   serve     — live two-pool serving demo on the AOT artifacts
+//!
+//! Hand-rolled argument parsing (no clap offline; DESIGN.md §1).
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use fleetopt::compress::corpus::{self, CorpusConfig};
+use fleetopt::compress::extractive::compress;
+use fleetopt::compress::fidelity;
+use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
+use fleetopt::experiments;
+use fleetopt::planner::{
+    candidate_boundaries, plan_fleet, plan_homogeneous, sweep_full, sweep_gamma, Plan,
+    PlanInput,
+};
+use fleetopt::router::GatewayConfig;
+use fleetopt::util::rng::Rng;
+use fleetopt::util::table::fmt_int;
+use fleetopt::workload::traces;
+
+fn usage() -> ! {
+    eprintln!(
+        "fleetopt — analytical fleet provisioning with Compress-and-Route
+
+USAGE:
+  fleetopt plan     --workload <azure|lmsys|agent> [--config F.json] [--lambda N] [--gamma G] [--b-short B]
+  fleetopt sweep    --workload <name> [--config F.json] [--lambda N]
+  fleetopt tables   [--only 1..7] [--fast]
+  fleetopt simulate --workload <name> [--lambda N] [--requests N]
+  fleetopt compress [--tokens N] [--budget N] [--seed N]
+  fleetopt serve    [--requests N] [--rate R] [--no-cr] [--artifacts DIR]
+"
+    );
+    std::process::exit(2);
+}
+
+/// Tiny flag parser: `--key value` pairs plus positionals.
+fn parse_args(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut flags = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(key) = args[i].strip_prefix("--") {
+            if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                flags.insert(key.to_string(), args[i + 1].clone());
+                i += 2;
+            } else {
+                flags.insert(key.to_string(), "true".to_string());
+                i += 1;
+            }
+        } else {
+            pos.push(args[i].clone());
+            i += 1;
+        }
+    }
+    (pos, flags)
+}
+
+fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    match flags.get(key) {
+        None => Ok(default),
+        Some(v) => v.parse().with_context(|| format!("--{key} {v}")),
+    }
+}
+
+fn workload_arg(flags: &HashMap<String, String>) -> Result<fleetopt::workload::traces::Workload> {
+    if let Some(path) = flags.get("config") {
+        return fleetopt::workload::traces::Workload::from_config_file(path);
+    }
+    let name = flags
+        .get("workload")
+        .map(String::as_str)
+        .unwrap_or("azure");
+    traces::by_name(name).with_context(|| format!("unknown workload `{name}`"))
+}
+
+fn print_plan(label: &str, p: &Plan, baseline: Option<f64>) {
+    let savings = baseline
+        .map(|b| format!(" savings={:.1}%", (1.0 - p.cost_yr / b) * 100.0))
+        .unwrap_or_default();
+    println!(
+        "{label:28} B={:6} gamma={:.1} n_s={:5} n_l={:5} total={:5} cost/yr=${}K{}",
+        p.b_short,
+        p.gamma,
+        p.short.n_gpus,
+        p.long.n_gpus,
+        p.total_gpus(),
+        fmt_int(p.cost_yr / 1000.0),
+        savings,
+    );
+}
+
+fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
+    let w = workload_arg(flags)?;
+    let lambda = flag_f64(flags, "lambda", 1000.0)?;
+    let b_short = flag_f64(flags, "b-short", w.b_short as f64)? as u32;
+    let input = PlanInput::new(w.clone(), lambda);
+
+    let homo = plan_homogeneous(&input)?;
+    print_plan("homogeneous", &homo, None);
+    let pr = plan_fleet(&input, b_short, 1.0)?;
+    print_plan("pool-routing", &pr, Some(homo.cost_yr));
+    if let Some(g) = flags.get("gamma") {
+        let gamma: f64 = g.parse()?;
+        let p = plan_fleet(&input, b_short, gamma)?;
+        print_plan(&format!("pr+c&r (gamma={gamma})"), &p, Some(homo.cost_yr));
+    }
+    let opt = sweep_gamma(&input, b_short)?;
+    print_plan("fleetopt (gamma*)", &opt, Some(homo.cost_yr));
+    println!(
+        "\npools at gamma*: short rho={:.3} ttft99={:.0}ms | long rho={:.3} ttft99={:.0}ms",
+        opt.short.rho_ana(),
+        opt.short.ttft_p99() * 1e3,
+        opt.long.rho_ana(),
+        opt.long.ttft_p99() * 1e3,
+    );
+    Ok(())
+}
+
+fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
+    let w = workload_arg(flags)?;
+    let lambda = flag_f64(flags, "lambda", 1000.0)?;
+    let input = PlanInput::new(w.clone(), lambda);
+    let cands = candidate_boundaries(&input);
+    println!("candidate boundaries: {cands:?}");
+    let t0 = std::time::Instant::now();
+    let (best, grid) = sweep_full(&input)?;
+    let dt = t0.elapsed();
+    println!(
+        "swept {} cells in {:.1} ms",
+        grid.len(),
+        dt.as_secs_f64() * 1e3
+    );
+    print_plan("optimum", &best, None);
+    println!("\ncost grid (K$/yr), gamma -> 1.0 .. 2.0:");
+    for &b in &cands {
+        let row: Vec<String> = grid
+            .iter()
+            .filter(|(bb, _, _)| *bb == b)
+            .map(|(_, _, c)| fmt_int(c / 1000.0))
+            .collect();
+        println!("  B={b:6}: {}", row.join(" "));
+    }
+    Ok(())
+}
+
+fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
+    let fast = flags.contains_key("fast");
+    let only: Option<u32> = flags.get("only").map(|s| s.parse()).transpose()?;
+    let want = |n: u32| only.is_none() || only == Some(n);
+    let (docs, des_n, fid_n) = if fast { (10, 3_000, 30) } else { (60, 30_000, 300) };
+
+    if want(1) {
+        experiments::table1().print();
+    }
+    if want(2) {
+        experiments::table2().print();
+    }
+    if want(3) {
+        experiments::table3(1000.0).print();
+    }
+    if want(4) {
+        experiments::table4(docs).print();
+    }
+    if want(5) {
+        experiments::table5(1000.0, des_n).print();
+    }
+    if want(6) {
+        experiments::table6(&[100.0, 200.0, 500.0, 1000.0, 2000.0]).print();
+    }
+    if want(7) {
+        experiments::table7(fid_n, experiments::artifacts_dir().as_deref()).print();
+    }
+    Ok(())
+}
+
+fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    let w = workload_arg(flags)?;
+    let lambda = flag_f64(flags, "lambda", 1000.0)?;
+    let n = flag_f64(flags, "requests", 30_000.0)? as usize;
+    let (rows, _) = experiments::table5_validate(&w, lambda, n, 42);
+    for r in rows {
+        println!(
+            "{:12} {:5} n={:5} rho_ana={:.3} rho_des={:.3} err={:+.1}% ttft99 ana={:.0}ms des={:.0}ms",
+            r.workload,
+            r.pool,
+            r.n_gpus,
+            r.rho_ana,
+            r.rho_des,
+            r.error * 100.0,
+            r.ttft_p99_ana * 1e3,
+            r.ttft_p99_des * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
+    let tokens = flag_f64(flags, "tokens", 9000.0)? as u32;
+    let seed = flag_f64(flags, "seed", 7.0)? as u64;
+    let mut rng = Rng::new(seed);
+    let doc = corpus::generate_document(
+        &CorpusConfig {
+            target_tokens: tokens,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let budget = flag_f64(flags, "budget", tokens as f64 * 0.8)? as u32;
+    let t0 = std::time::Instant::now();
+    let c = compress(&doc, budget);
+    let dt = t0.elapsed().as_secs_f64() * 1e3;
+    let f = fidelity::measure(&doc, &c.text);
+    println!(
+        "compressed {} -> {} tokens (budget {budget}, ok={}) in {dt:.1} ms",
+        c.original_tokens, c.compressed_tokens, c.ok
+    );
+    println!(
+        "fidelity: rouge-l-recall={:.3} tfidf-cos={:.3} reduction={:.1}%",
+        f.rouge_l_recall,
+        f.tfidf_cosine,
+        f.token_reduction * 100.0
+    );
+    Ok(())
+}
+
+fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
+    let dir = flags
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .or_else(experiments::artifacts_dir)
+        .context("artifacts not found; run `make artifacts`")?;
+    let n = flag_f64(flags, "requests", 40.0)? as usize;
+    let rate = flag_f64(flags, "rate", 40.0)?;
+    let enable_cr = !flags.contains_key("no-cr");
+
+    let mut rng = Rng::new(11);
+    let mut t = 0.0;
+    let items: Vec<ServeItem> = (0..n)
+        .map(|i| {
+            t += rng.exp(rate);
+            let target = match i % 10 {
+                0..=6 => rng.range(40, 150) as u32,
+                7 | 8 => rng.range(240, 320) as u32,
+                _ => rng.range(400, 700) as u32,
+            };
+            ServeItem {
+                text: corpus::generate_document(
+                    &CorpusConfig {
+                        target_tokens: target,
+                        ..Default::default()
+                    },
+                    &mut rng,
+                ),
+                max_output: 16,
+                arrival_offset_s: t,
+            }
+        })
+        .collect();
+    let cfg = ServeConfig {
+        gateway: GatewayConfig {
+            b_short: 224,
+            gamma: 1.5,
+            enable_cr,
+        },
+        replicas_short: 1,
+        replicas_long: 1,
+    };
+    let mut report = serve(&dir, &cfg, items, 0.05)?;
+    println!("{}", report.short.summary());
+    println!("{}", report.long.summary());
+    println!(
+        "compressed={} short={} long={} throughput={:.1} req/s gateway={:.2} ms/req",
+        report.n_compressed,
+        report.n_routed_short,
+        report.n_routed_long,
+        report.throughput_rps,
+        report.mean_gateway_s * 1e3
+    );
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        usage();
+    }
+    let (_pos, flags) = parse_args(&args[1..]);
+    match args[0].as_str() {
+        "plan" => cmd_plan(&flags),
+        "sweep" => cmd_sweep(&flags),
+        "tables" => cmd_tables(&flags),
+        "simulate" => cmd_simulate(&flags),
+        "compress" => cmd_compress(&flags),
+        "serve" => cmd_serve(&flags),
+        "help" | "--help" | "-h" => usage(),
+        other => bail!("unknown subcommand `{other}` (try `fleetopt help`)"),
+    }
+}

@@ -1,0 +1,88 @@
+//! Serving metrics: per-pool latency recorders (TTFT, e2e, queue wait) and
+//! completion counters — the quantities the paper's SLO (Eq. 7–8) is
+//! stated over.
+
+use crate::coordinator::replica::FinishedRequest;
+use crate::util::stats::Samples;
+
+/// Latency/throughput metrics for one pool.
+#[derive(Debug)]
+pub struct PoolMetrics {
+    pub name: &'static str,
+    pub ttft: Samples,
+    pub e2e: Samples,
+    pub queue: Samples,
+    pub completed: u64,
+    pub output_tokens: u64,
+}
+
+impl PoolMetrics {
+    pub fn new(name: &'static str) -> Self {
+        PoolMetrics {
+            name,
+            ttft: Samples::new(),
+            e2e: Samples::new(),
+            queue: Samples::new(),
+            completed: 0,
+            output_tokens: 0,
+        }
+    }
+
+    pub fn record(&mut self, fin: &FinishedRequest) {
+        self.ttft.push(fin.ttft_s);
+        self.e2e.push(fin.e2e_s);
+        self.queue.push(fin.queue_s);
+        self.completed += 1;
+        self.output_tokens += fin.output.len() as u64;
+    }
+
+    /// One summary line for reports.
+    pub fn summary(&mut self) -> String {
+        if self.completed == 0 {
+            return format!("{}: no traffic", self.name);
+        }
+        format!(
+            "{}: n={} ttft p50={:.1}ms p99={:.1}ms | e2e p50={:.1}ms | queue p99={:.1}ms | out_toks={}",
+            self.name,
+            self.completed,
+            self.ttft.p50() * 1e3,
+            self.ttft.p99() * 1e3,
+            self.e2e.p50() * 1e3,
+            self.queue.p99() * 1e3,
+            self.output_tokens,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fin(ttft: f64) -> FinishedRequest {
+        FinishedRequest {
+            id: 0,
+            output: vec![1, 2, 3],
+            ttft_s: ttft,
+            e2e_s: ttft + 0.1,
+            queue_s: 0.01,
+        }
+    }
+
+    #[test]
+    fn records_accumulate() {
+        let mut m = PoolMetrics::new("short");
+        for i in 0..10 {
+            m.record(&fin(0.01 * i as f64));
+        }
+        assert_eq!(m.completed, 10);
+        assert_eq!(m.output_tokens, 30);
+        assert!(m.ttft.p99() <= 0.09 + 1e-12);
+        assert!(m.summary().contains("n=10"));
+    }
+
+    #[test]
+    fn empty_summary_safe() {
+        let mut m = PoolMetrics::new("long");
+        assert_eq!(m.summary(), "long: no traffic");
+    }
+}

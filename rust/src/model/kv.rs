@@ -1,0 +1,136 @@
+//! KV-cache memory accounting and the cost cliff (paper §2.2, Table 1).
+//!
+//! The cliff is the structural discontinuity pool routing creates at
+//! `B_short`: a request one token above the boundary is assigned a long-pool
+//! slot provisioned for the full `C_max^(l)` window, consuming
+//! `rho = n_max^(s)/n_max^(l)` times the throughput capacity of a short-pool
+//! request while using only a sliver of its KV allocation.
+
+use crate::config::GpuProfile;
+
+/// Which pool a request occupies (given a boundary `B_short`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Pool {
+    Short,
+    Long,
+}
+
+/// One row of the cost-cliff accounting (Table 1).
+#[derive(Clone, Debug)]
+pub struct CliffRow {
+    pub l_total: u32,
+    pub pool: Pool,
+    pub slots_per_gpu: u32,
+    /// Fraction of the allocated slot's KV budget actually used.
+    pub kv_utilized: f64,
+    /// KV bytes actually used, GB.
+    pub kv_used_gb: f64,
+    /// Throughput capacity consumed relative to a short-pool request
+    /// (1.0 below the boundary, rho above it).
+    pub cost_ratio: f64,
+}
+
+/// Compute the Table-1 row for a request of `l_total` tokens at boundary
+/// `b_short`.
+pub fn cliff_row(g: &GpuProfile, b_short: u32, l_total: u32) -> CliffRow {
+    let pool = if l_total <= b_short {
+        Pool::Short
+    } else {
+        Pool::Long
+    };
+    let (slots, window) = match pool {
+        Pool::Short => (g.n_max(b_short), b_short),
+        Pool::Long => (g.n_max_long(), g.c_max_long),
+    };
+    let kv_utilized = l_total as f64 / window as f64;
+    CliffRow {
+        l_total,
+        pool,
+        slots_per_gpu: slots,
+        kv_utilized,
+        kv_used_gb: g.kv_gb_per_slot(window) * kv_utilized,
+        cost_ratio: match pool {
+            Pool::Short => 1.0,
+            Pool::Long => g.cliff_ratio(b_short),
+        },
+    }
+}
+
+/// The GPU savings formula for pool routing (§2.2, from Chen et al. 2026b):
+/// `alpha * (1 - 1/rho)` where `alpha` is the short-pool traffic fraction.
+pub fn pool_routing_savings(alpha: f64, rho: f64) -> f64 {
+    alpha * (1.0 - 1.0 / rho)
+}
+
+/// Incremental savings of C&R beyond pool routing (Eq. 14):
+/// `beta * p_c * (1 - 1/rho)`.
+pub fn cr_incremental_savings(beta: f64, p_c: f64, rho: f64) -> f64 {
+    beta * p_c * (1.0 - 1.0 / rho)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuProfile;
+
+    fn g() -> GpuProfile {
+        GpuProfile::a100_llama70b()
+    }
+
+    #[test]
+    fn table1_row_at_boundary() {
+        // Paper Table 1, L_total = 8,192: short pool, 128 slots, 100% of a
+        // 2.5 GB slot, cost ratio 1.0.
+        let r = cliff_row(&g(), 8192, 8192);
+        assert_eq!(r.pool, Pool::Short);
+        assert_eq!(r.slots_per_gpu, 128);
+        assert!((r.kv_utilized - 1.0).abs() < 1e-12);
+        assert!((r.kv_used_gb - 2.5).abs() < 0.01);
+        assert_eq!(r.cost_ratio, 1.0);
+    }
+
+    #[test]
+    fn table1_row_one_token_over() {
+        // L_total = 8,193: long pool, 16 slots, 12.5% of 20 GB, 8x cost.
+        let r = cliff_row(&g(), 8192, 8193);
+        assert_eq!(r.pool, Pool::Long);
+        assert_eq!(r.slots_per_gpu, 16);
+        assert!((r.kv_utilized - 0.125).abs() < 1e-3, "{}", r.kv_utilized);
+        assert_eq!(r.cost_ratio, 8.0);
+    }
+
+    #[test]
+    fn table1_row_midband() {
+        // L_total = 12,000: 18.3% of 20 GB, still 8x.
+        let r = cliff_row(&g(), 8192, 12_000);
+        assert!((r.kv_utilized - 0.1831).abs() < 1e-3);
+        assert_eq!(r.cost_ratio, 8.0);
+    }
+
+    #[test]
+    fn table1_row_full_window() {
+        let r = cliff_row(&g(), 8192, 65_536);
+        assert!((r.kv_utilized - 1.0).abs() < 1e-12);
+        assert!((r.kv_used_gb - 20.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn savings_formula_matches_prior_work_range() {
+        // Chen et al. 2026b report 16-38% for pool routing; alpha=0.9 and
+        // rho=16 gives ~84% of alpha.
+        let s = pool_routing_savings(0.898, 16.0);
+        assert!((s - 0.8419).abs() < 1e-3);
+        // rho -> 1 collapses savings to zero.
+        assert!(pool_routing_savings(0.9, 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn cr_savings_scales_with_beta_pc_rho() {
+        let s = cr_incremental_savings(0.078, 1.0, 16.0);
+        assert!((s - 0.0731).abs() < 1e-3);
+        assert!(cr_incremental_savings(0.078, 0.0, 16.0).abs() < 1e-12);
+        assert!(
+            cr_incremental_savings(0.112, 0.75, 8.0) < cr_incremental_savings(0.112, 1.0, 8.0)
+        );
+    }
+}

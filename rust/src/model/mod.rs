@@ -1,0 +1,4 @@
+//! Engine-level models of the serving hardware: KV-cache memory accounting
+//! and the cost cliff (paper §2.2, Table 1).
+
+pub mod kv;

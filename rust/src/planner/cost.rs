@@ -1,0 +1,45 @@
+//! Fleet cost model (paper §3.3, Eq. 9–10).
+
+use crate::config::GpuProfile;
+
+/// Hours in the paper's annualization (Table 3: $/GPU-hr x 8,760 hr/yr).
+pub const HOURS_PER_YEAR: f64 = 8760.0;
+
+/// Annualized fleet cost C(n_s, n_l) = c_s n_s + c_l n_l (Eq. 9), dollars/yr.
+pub fn fleet_cost_yr(n_s: u64, n_l: u64, g: &GpuProfile) -> f64 {
+    (n_s as f64 * g.cost_short_hr + n_l as f64 * g.cost_long_hr) * HOURS_PER_YEAR
+}
+
+/// Relative savings of `cost` versus `baseline` (Table 3's "Savings" column).
+pub fn savings(baseline: f64, cost: f64) -> f64 {
+    assert!(baseline > 0.0);
+    1.0 - cost / baseline
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_homogeneous_azure_cost() {
+        // Table 3: 284 GPUs x $2.21/hr x 8,760 hr = $5,498K/yr.
+        let g = GpuProfile::a100_llama70b();
+        let c = fleet_cost_yr(0, 284, &g);
+        assert!((c / 1000.0 - 5498.0).abs() < 1.0, "cost={c}");
+    }
+
+    #[test]
+    fn savings_formula() {
+        assert!((savings(100.0, 60.0) - 0.4).abs() < 1e-12);
+        assert!(savings(100.0, 100.0).abs() < 1e-12);
+        assert!(savings(100.0, 120.0) < 0.0); // negative savings possible
+    }
+
+    #[test]
+    fn mixed_pool_costs_use_per_pool_rates() {
+        let mut g = GpuProfile::a100_llama70b();
+        g.cost_long_hr = 4.42; // phi = 2
+        let c = fleet_cost_yr(10, 5, &g);
+        assert!((c - (10.0 * 2.21 + 5.0 * 4.42) * 8760.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,90 @@
+//! Marginal-cost analysis: the equal-marginal-GPU-cost first-order
+//! condition that characterizes the optimal boundary (paper §4.2, Prop. 1,
+//! App. B).
+//!
+//! Under rho_max-dominated sizing, `dn*/dlambda ~ 1/(rho_max mu_gpu)`, so
+//! the FOC `c_s dn_s/dlambda_s = c_l dn_l/dlambda_l` reduces to
+//! `c_s / mu_s = c_l / mu_l` (per-GPU). The sweep finds the integer-optimal
+//! boundary; this module exposes the continuous FOC so benches can verify
+//! the optimum sits where the marginal-cost gap changes sign.
+
+use crate::config::GpuProfile;
+use crate::planner::sweep::{plan_fleet, PlanInput};
+use crate::queueing::service::ServiceStats;
+
+/// Marginal GPU cost of one additional req/s into a pool, $/hr per (req/s):
+/// `cost_hr * dn/dlambda` with the continuous relaxation of Eq. 11.
+pub fn marginal_cost(svc: &ServiceStats, cost_hr: f64, rho_max: f64) -> f64 {
+    cost_hr / (rho_max * svc.mu_gpu())
+}
+
+/// The FOC gap at a boundary: marginal short-pool cost minus marginal
+/// long-pool saving (Eq. 12's bracketed term, scaled by the GPU costs).
+/// Negative gap => routing more traffic short still pays; the optimum is
+/// where the gap crosses zero (or at the grid edge if it never does).
+pub fn foc_gap(input: &PlanInput, b_short: u32, gamma: f64) -> Option<f64> {
+    let plan = plan_fleet(input, b_short, gamma).ok()?;
+    let g: &GpuProfile = &input.gpu;
+    let s = plan.short.svc.as_ref()?;
+    let l = plan.long.svc.as_ref()?;
+    Some(
+        marginal_cost(s, g.cost_short_hr, input.cfg.rho_max)
+            - marginal_cost(l, g.cost_long_hr, input.cfg.rho_max),
+    )
+}
+
+/// Evaluate the FOC gap across candidate boundaries (for Prop. 1 reporting).
+pub fn foc_profile(input: &PlanInput, candidates: &[u32], gamma: f64) -> Vec<(u32, f64)> {
+    candidates
+        .iter()
+        .filter_map(|&b| foc_gap(input, b, gamma).map(|g| (b, g)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::sweep::candidate_boundaries;
+    use crate::workload::traces;
+
+    #[test]
+    fn marginal_cost_scales_inverse_mu() {
+        let w = traces::azure();
+        let g = GpuProfile::a100_llama70b();
+        let svc =
+            crate::queueing::service::calibrate(&w.cdf, &w.output, &g, 16, 5_000, 1);
+        let m = marginal_cost(&svc, 2.21, 0.85);
+        assert!((m - 2.21 / (0.85 * svc.mu_gpu())).abs() < 1e-12);
+        // Cheaper pools (higher mu) have lower marginal cost.
+        let svc_fast =
+            crate::queueing::service::calibrate(&w.cdf, &w.output, &g, 256, 5_000, 1);
+        assert!(marginal_cost(&svc_fast, 2.21, 0.85) < m);
+    }
+
+    #[test]
+    fn short_pool_marginally_cheaper_at_paper_boundary() {
+        // The whole premise of pool routing: at the evaluation boundary the
+        // short pool's marginal GPU cost per req/s is below the long pool's.
+        let mut input = PlanInput::new(traces::azure(), 1000.0);
+        input.cfg.mc_samples = 8_000;
+        let gap = foc_gap(&input, 4096, 1.0).unwrap();
+        assert!(gap < 0.0, "gap={gap}");
+    }
+
+    #[test]
+    fn foc_profile_covers_candidates() {
+        let mut input = PlanInput::new(traces::agent_heavy(), 1000.0);
+        input.cfg.mc_samples = 5_000;
+        let cands = candidate_boundaries(&input);
+        let prof = foc_profile(&input, &cands, 1.0);
+        assert_eq!(prof.len(), cands.len());
+        // For these homogeneous-cost workloads the short pool is marginally
+        // cheaper at every hardware-feasible boundary (the FOC gap never
+        // crosses zero) — the regime where the planner pushes the effective
+        // boundary up via gamma instead, consistent with gamma* -> 2.0
+        // (paper §4.3).
+        for (b, gap) in &prof {
+            assert!(*gap < 0.0, "gap at B={b} should be negative: {prof:?}");
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! The FleetOpt offline planner (paper §4, §6): per-pool Erlang-C sizing,
+//! the Algorithm-1 (B, gamma) sweep with long-pool recalibration, the cost
+//! model, and the Prop.-1 marginal-cost analysis.
+
+pub mod cost;
+pub mod marginal;
+pub mod sizing;
+pub mod sweep;
+
+pub use sweep::{
+    candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_homogeneous,
+    sweep_full, sweep_gamma, Plan, PlanInput, PoolPlan,
+};

@@ -1,0 +1,205 @@
+//! Erlang-C in a numerically stable recursive form (paper Eq. 5, App. A).
+//!
+//! `C(c, rho)` is the probability an arriving request finds all `c` servers
+//! (KV slots) busy and must queue. The naive factorial form overflows for
+//! c beyond ~170; the paper's Appendix-A reciprocal-sum form is evaluated
+//! with a downward term recurrence so it is stable to millions of slots
+//! and costs only as many iterations as there are non-negligible terms.
+
+/// Natural log of the Gamma function (Lanczos approximation, g=7, n=9).
+/// Used by tests as an independent cross-check of the recurrence.
+pub fn ln_gamma(x: f64) -> f64 {
+    const COEFFS: [f64; 9] = [
+        0.999_999_999_999_809_93,
+        676.520_368_121_885_1,
+        -1_259.139_216_722_402_8,
+        771.323_428_777_653_13,
+        -176.615_029_162_140_6,
+        12.507_343_278_686_905,
+        -0.138_571_095_265_720_12,
+        9.984_369_578_019_572e-6,
+        1.505_632_735_149_311_6e-7,
+    ];
+    if x < 0.5 {
+        // Reflection formula.
+        let pi = std::f64::consts::PI;
+        return (pi / (pi * x).sin()).ln() - ln_gamma(1.0 - x);
+    }
+    let x = x - 1.0;
+    let mut a = COEFFS[0];
+    let t = x + 7.5;
+    for (i, &c) in COEFFS.iter().enumerate().skip(1) {
+        a += c / (x + i as f64);
+    }
+    0.5 * (2.0 * std::f64::consts::PI).ln() + (x + 0.5) * t.ln() - t + a.ln()
+}
+
+/// Erlang-C probability of waiting, `C(c, rho)`, for `c` servers at offered
+/// per-server utilization `rho = lambda / (c * mu)` in [0, 1).
+///
+/// Returns 1.0 for rho >= 1 (unstable queue: waiting is certain).
+pub fn erlang_c(c: u64, rho: f64) -> f64 {
+    assert!(c >= 1, "need at least one server");
+    if rho >= 1.0 {
+        return 1.0;
+    }
+    if rho <= 0.0 {
+        return 0.0;
+    }
+    // 1/C = 1 + (1 - rho) * S,  S = sum_{k=0}^{c-1} c!/(k!) * (c rho)^(k-c).
+    // Downward recurrence from k = c-1: t_{c-1} = 1/rho,
+    // t_{k-1} = t_k * k / (c rho). Terms decay geometrically once k < c*rho.
+    let a = c as f64 * rho;
+    let mut term = 1.0 / rho;
+    let mut sum = term;
+    let mut k = (c - 1) as f64;
+    while k >= 1.0 {
+        term *= k / a;
+        sum += term;
+        if term < sum * 1e-17 {
+            break; // remaining terms are below f64 resolution
+        }
+        k -= 1.0;
+    }
+    1.0 / (1.0 + (1.0 - rho) * sum)
+}
+
+/// Erlang-C via the direct log-space sum (independent implementation used
+/// to cross-validate the recurrence in tests; O(c) ln_gamma calls).
+pub fn erlang_c_logspace(c: u64, rho: f64) -> f64 {
+    if rho >= 1.0 {
+        return 1.0;
+    }
+    if rho <= 0.0 {
+        return 0.0;
+    }
+    let a = c as f64 * rho;
+    let ln_a = a.ln();
+    let ln_top = c as f64 * ln_a - ln_gamma(c as f64 + 1.0) - (1.0 - rho).ln();
+    // ln of sum_{k=0}^{c-1} a^k/k!, computed with the log-sum-exp trick.
+    let mut max_ln = f64::NEG_INFINITY;
+    let lns: Vec<f64> = (0..c)
+        .map(|k| {
+            let l = k as f64 * ln_a - ln_gamma(k as f64 + 1.0);
+            max_ln = max_ln.max(l);
+            l
+        })
+        .collect();
+    let sum: f64 = lns.iter().map(|l| (l - max_ln).exp()).sum();
+    let ln_bottom_partial = max_ln + sum.ln();
+    // C = top / (bottom_partial + top)
+    let d = ln_top - ln_bottom_partial;
+    if d > 0.0 {
+        1.0 / (1.0 + (-d).exp())
+    } else {
+        d.exp() / (d.exp() + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ln_gamma_matches_factorials() {
+        let mut fact = 1.0f64;
+        for n in 1..=20u64 {
+            fact *= n as f64;
+            let got = ln_gamma(n as f64 + 1.0);
+            assert!(
+                (got - fact.ln()).abs() < 1e-9,
+                "ln_gamma({}) = {got}, want {}",
+                n + 1,
+                fact.ln()
+            );
+        }
+    }
+
+    #[test]
+    fn ln_gamma_half() {
+        // Gamma(1/2) = sqrt(pi).
+        let want = std::f64::consts::PI.sqrt().ln();
+        assert!((ln_gamma(0.5) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn single_server_reduces_to_rho() {
+        // M/M/1: probability of waiting = rho.
+        for rho in [0.1, 0.5, 0.9, 0.99] {
+            assert!((erlang_c(1, rho) - rho).abs() < 1e-12, "rho={rho}");
+        }
+    }
+
+    #[test]
+    fn known_values_small_c() {
+        // c=2, rho=0.5 (a=1): C = (a^2/(2!(1-rho))) / (1 + a + that) = 1/(1+1+1) ...
+        // direct: top = 1/(2*0.5)=1, bottom = 1 + 1 + 1 = 3 -> C = 1/3.
+        let c = erlang_c(2, 0.5);
+        assert!((c - 1.0 / 3.0).abs() < 1e-12, "c={c}");
+    }
+
+    #[test]
+    fn recurrence_matches_logspace_small_and_large() {
+        for &(c, rho) in &[
+            (2u64, 0.3),
+            (5, 0.7),
+            (16, 0.85),
+            (100, 0.5),
+            (1000, 0.9),
+            (10_000, 0.85),
+            (32_592, 0.85), // largest slot count in the paper's fleets
+        ] {
+            let a = erlang_c(c, rho);
+            let b = erlang_c_logspace(c, rho);
+            assert!(
+                (a - b).abs() < 1e-9 * (1.0 + b.abs()),
+                "c={c} rho={rho}: {a} vs {b}"
+            );
+        }
+    }
+
+    #[test]
+    fn monotone_in_rho() {
+        for c in [1u64, 4, 64, 512] {
+            let mut last = 0.0;
+            for i in 1..20 {
+                let rho = i as f64 / 20.0;
+                let v = erlang_c(c, rho);
+                assert!(v >= last, "C must increase with rho (c={c})");
+                last = v;
+            }
+        }
+    }
+
+    #[test]
+    fn monotone_decreasing_in_c_at_fixed_rho() {
+        // More servers at the same per-server utilization -> less waiting
+        // (statistical multiplexing).
+        let mut last = 1.0;
+        for c in [1u64, 2, 4, 8, 16, 32, 64, 128, 256] {
+            let v = erlang_c(c, 0.85);
+            assert!(v <= last + 1e-12, "C(c={c}) = {v} > {last}");
+            last = v;
+        }
+    }
+
+    #[test]
+    fn many_server_regime_vanishes() {
+        // Paper §7.4: with thousands of slots at rho <= 0.85, C ~ 0.
+        assert!(erlang_c(10_000, 0.85) < 1e-50);
+        assert!(erlang_c(1_000, 0.85) < 1e-6);
+        assert!(erlang_c(112, 0.85) < 0.1); // smallest fleet in Table 5
+    }
+
+    #[test]
+    fn saturated_queue_always_waits() {
+        assert_eq!(erlang_c(10, 1.0), 1.0);
+        assert_eq!(erlang_c(10, 1.5), 1.0);
+    }
+
+    #[test]
+    fn stable_at_extreme_scale() {
+        let v = erlang_c(1_000_000, 0.999);
+        assert!(v.is_finite() && (0.0..=1.0).contains(&v));
+    }
+}

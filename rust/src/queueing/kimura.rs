@@ -1,0 +1,118 @@
+//! Kimura's two-moment M/G/c approximation for tail waiting time
+//! (paper Eq. 6; Kimura 1994).
+//!
+//! `W99 = ln(C(c, rho) / 0.01) * (1 + Cs^2) / (2 (c mu - lambda))`
+//!
+//! The exponential-tail form: P[W > t] ~ C * exp(-2(c mu - lambda) t / (1 + Cs^2)),
+//! solved for the 99th percentile. When `C <= 0.01` an arriving request has
+//! less than a 1% chance of waiting at all, so the P99 wait is 0 — the
+//! "many-server regime" the paper's fleets operate in (§7.4).
+
+use crate::queueing::erlang::erlang_c;
+
+/// P-quantile of the queue waiting time for an M/G/c with `c` servers,
+/// per-server rate `mu`, arrival rate `lambda`, and service-time SCV `cs2`.
+/// `p` is the tail mass (0.01 for P99).
+pub fn w_quantile(c: u64, mu: f64, lambda: f64, cs2: f64, p: f64) -> f64 {
+    assert!(mu > 0.0 && lambda >= 0.0 && p > 0.0 && p < 1.0);
+    let capacity = c as f64 * mu;
+    if lambda >= capacity {
+        return f64::INFINITY;
+    }
+    if lambda == 0.0 {
+        return 0.0;
+    }
+    let rho = lambda / capacity;
+    let c_wait = erlang_c(c, rho);
+    if c_wait <= p {
+        return 0.0;
+    }
+    (c_wait / p).ln() * (1.0 + cs2) / (2.0 * (capacity - lambda))
+}
+
+/// P99 queue waiting time (paper Eq. 6).
+pub fn w99(c: u64, mu: f64, lambda: f64, cs2: f64) -> f64 {
+    w_quantile(c, mu, lambda, cs2, 0.01)
+}
+
+/// Mean waiting time under the same exponential-tail approximation
+/// (Kimura's two-moment mean): `Wq = C * (1 + Cs^2) / (2 (c mu - lambda))`.
+pub fn w_mean(c: u64, mu: f64, lambda: f64, cs2: f64) -> f64 {
+    let capacity = c as f64 * mu;
+    if lambda >= capacity {
+        return f64::INFINITY;
+    }
+    erlang_c(c, lambda / capacity) * (1.0 + cs2) / (2.0 * (capacity - lambda))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mm1_mean_wait_matches_exact() {
+        // M/M/1 (cs2 = 1): Wq = rho / (mu - lambda). Kimura's two-moment
+        // mean is exact for M/M/1.
+        let (mu, lambda) = (1.0, 0.8);
+        let got = w_mean(1, mu, lambda, 1.0);
+        let want = 0.8 / (1.0 - 0.8);
+        assert!((got - want).abs() < 1e-9, "got={got} want={want}");
+    }
+
+    #[test]
+    fn mm1_p99_matches_exact() {
+        // M/M/1: P[W > t] = rho * exp(-(mu - lambda) t); P99 wait
+        // = ln(rho/0.01)/(mu - lambda). Kimura with cs2=1 reproduces it.
+        let (mu, lambda) = (1.0, 0.8);
+        let got = w99(1, mu, lambda, 1.0);
+        let want = (0.8f64 / 0.01).ln() / (1.0 - 0.8);
+        assert!((got - want).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unstable_is_infinite() {
+        assert!(w99(4, 1.0, 4.0, 1.0).is_infinite());
+        assert!(w99(4, 1.0, 5.0, 1.0).is_infinite());
+    }
+
+    #[test]
+    fn many_server_regime_is_zero() {
+        // Paper §7.4: thousands of slots at rho = 0.85 -> W99 = 0.
+        assert_eq!(w99(2096, 1.0, 0.85 * 2096.0, 2.0), 0.0);
+    }
+
+    #[test]
+    fn higher_variance_waits_longer() {
+        // Small c and high rho so C(c, rho) > 0.01.
+        let (c, mu, lambda) = (2, 1.0, 1.9);
+        let low = w99(c, mu, lambda, 0.5);
+        let high = w99(c, mu, lambda, 4.0);
+        assert!(high > low);
+    }
+
+    #[test]
+    fn deterministic_service_halves_mm1_wait() {
+        // M/D/1 mean wait = half of M/M/1 (cs2 = 0 vs 1).
+        let (mu, lambda) = (1.0, 0.9);
+        let md1 = w_mean(1, mu, lambda, 0.0);
+        let mm1 = w_mean(1, mu, lambda, 1.0);
+        assert!((md1 * 2.0 - mm1).abs() < 1e-12);
+    }
+
+    #[test]
+    fn w99_monotone_decreasing_in_c_at_fixed_lambda() {
+        // Adding servers at fixed lambda can only reduce the P99 wait.
+        let (mu, lambda, cs2) = (1.0, 1.8, 1.5);
+        let mut last = f64::INFINITY;
+        for c in 2..12u64 {
+            let w = w99(c, mu, lambda, cs2);
+            assert!(w <= last + 1e-12, "c={c}: {w} > {last}");
+            last = w;
+        }
+    }
+
+    #[test]
+    fn zero_arrivals_zero_wait() {
+        assert_eq!(w99(4, 1.0, 0.0, 1.0), 0.0);
+    }
+}

@@ -1,0 +1,147 @@
+//! The M/G/c pool model (paper §3.1): a pool of `n` GPUs is an M/G/c queue
+//! with `c = n * n_max` KV slots as servers.
+
+use crate::queueing::kimura;
+use crate::queueing::service::ServiceStats;
+
+/// One provisioned pool under the analytical model.
+#[derive(Clone, Debug)]
+pub struct PoolModel {
+    /// Arrival rate into this pool (req/s).
+    pub lambda: f64,
+    /// GPU count.
+    pub n_gpus: u64,
+    /// Calibrated service statistics.
+    pub svc: ServiceStats,
+}
+
+impl PoolModel {
+    pub fn new(lambda: f64, n_gpus: u64, svc: ServiceStats) -> Self {
+        PoolModel {
+            lambda,
+            n_gpus,
+            svc,
+        }
+    }
+
+    /// Total KV slots c = n * n_max.
+    pub fn c_slots(&self) -> u64 {
+        self.n_gpus * self.svc.n_slots as u64
+    }
+
+    /// Offered per-slot utilization rho = lambda / (c * mu).
+    pub fn utilization(&self) -> f64 {
+        self.lambda / (self.c_slots() as f64 * self.svc.mu_slot())
+    }
+
+    /// Analytical GPU utilization rho_ana = lambda / (n * mu_gpu) (§7.4) —
+    /// identical to the per-slot utilization by construction.
+    pub fn rho_ana(&self) -> f64 {
+        self.lambda / (self.n_gpus as f64 * self.svc.mu_gpu())
+    }
+
+    /// P99 queue waiting time (Eq. 6).
+    pub fn w99(&self) -> f64 {
+        kimura::w99(
+            self.c_slots(),
+            self.svc.mu_slot(),
+            self.lambda,
+            self.svc.scv,
+        )
+    }
+
+    /// Mean queue waiting time.
+    pub fn w_mean(&self) -> f64 {
+        kimura::w_mean(
+            self.c_slots(),
+            self.svc.mu_slot(),
+            self.lambda,
+            self.svc.scv,
+        )
+    }
+
+    /// P99 TTFT decomposition (Eq. 7): queue wait + physical prefill + one
+    /// decode iteration.
+    pub fn ttft_p99(&self) -> f64 {
+        self.w99() + self.svc.p99_prefill_s + self.svc.t_iter_s
+    }
+
+    /// SLO feasibility (Eq. 8): the queue-wait budget left after prefill
+    /// and first decode must cover W99, and the queue must be stable.
+    pub fn feasible(&self, t_slo: f64, rho_max: f64) -> bool {
+        if self.utilization() > rho_max {
+            return false;
+        }
+        let budget = t_slo - self.svc.p99_prefill_s - self.svc.t_iter_s;
+        if budget < 0.0 {
+            return false;
+        }
+        self.w99() <= budget
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::GpuProfile;
+    use crate::queueing::service::calibrate;
+    use crate::workload::traces;
+
+    fn pool(lambda: f64, n_gpus: u64, n_slots: u32) -> PoolModel {
+        let w = traces::azure();
+        let g = GpuProfile::a100_llama70b();
+        let svc = calibrate(&w.cdf, &w.output, &g, n_slots, 10_000, 7);
+        PoolModel::new(lambda, n_gpus, svc)
+    }
+
+    #[test]
+    fn utilization_definitions_agree() {
+        let p = pool(100.0, 10, 128);
+        assert!((p.utilization() - p.rho_ana()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn slots_product() {
+        let p = pool(100.0, 7, 16);
+        assert_eq!(p.c_slots(), 112);
+    }
+
+    #[test]
+    fn many_server_regime_w99_zero() {
+        // A generously provisioned pool: W99 should vanish (§7.4).
+        let p = pool(100.0, 100, 128);
+        assert!(p.utilization() < 0.2);
+        assert_eq!(p.w99(), 0.0);
+        // TTFT is then prefill-dominated.
+        assert!((p.ttft_p99() - (p.svc.p99_prefill_s + p.svc.t_iter_s)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overloaded_pool_infeasible() {
+        let p = pool(1e6, 1, 16);
+        assert!(p.utilization() > 1.0);
+        assert!(!p.feasible(0.5, 0.85));
+        assert!(p.w99().is_infinite());
+    }
+
+    #[test]
+    fn feasibility_respects_rho_max() {
+        // Find a pool whose W99 is 0 but utilization exceeds the cap:
+        // must be infeasible purely due to rho_max.
+        let mut p = pool(100.0, 1, 128);
+        // scale lambda to hit utilization 0.9
+        let mu_gpu = p.svc.mu_gpu();
+        p.lambda = 0.9 * mu_gpu;
+        assert!(p.utilization() > 0.85 && p.utilization() < 1.0);
+        assert!(!p.feasible(10.0, 0.85));
+        assert!(p.feasible(10.0, 0.95));
+    }
+
+    #[test]
+    fn adding_gpus_never_hurts() {
+        let base = pool(500.0, 3, 128);
+        let more = PoolModel::new(500.0, 6, base.svc.clone());
+        assert!(more.w99() <= base.w99());
+        assert!(more.utilization() < base.utilization());
+    }
+}

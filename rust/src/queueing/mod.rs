@@ -1,0 +1,8 @@
+//! The analytical core (paper §3): M/G/c queueing with Erlang-C and the
+//! Kimura two-moment tail-wait approximation, plus the continuous-batching
+//! service-time model.
+
+pub mod erlang;
+pub mod kimura;
+pub mod mgc;
+pub mod service;

@@ -1,0 +1,334 @@
+//! Service-time model under continuous batching (paper Eq. 3–4) and the
+//! Monte-Carlo calibration of `(E[S], C_s^2)` used by the planner.
+//!
+//! A request with `L_in` input and `L_out` output tokens occupies a KV slot
+//! for `ceil(L_in / C_chunk) + L_out` lockstep iterations of duration
+//! `t_iter = W + H * n_max` — all `n_max` slots advance together, so the
+//! iteration latency is evaluated at the configured slot count (§3.1).
+
+use crate::config::GpuProfile;
+use crate::util::rng::Rng;
+use crate::util::stats::{Samples, Welford};
+use crate::workload::cdf::LengthDist;
+use crate::workload::request::OutputModel;
+
+/// Number of slot iterations a request occupies (Eq. 4's parenthesised term).
+pub fn slot_iterations(l_in: u32, l_out: u32, chunk: u32) -> u64 {
+    (l_in as u64).div_ceil(chunk as u64) + l_out as u64
+}
+
+/// Wall-clock slot occupancy E[S] for a single request, seconds (Eq. 4).
+pub fn service_time_s(l_in: u32, l_out: u32, g: &GpuProfile, n_slots: u32) -> f64 {
+    slot_iterations(l_in, l_out, g.chunk) as f64 * g.t_iter_s(n_slots)
+}
+
+/// Physical prefill time for a request, seconds (§3.2):
+/// `T_prefill = ceil(L_in / C_chunk) * t_iter`.
+pub fn prefill_time_s(l_in: u32, g: &GpuProfile, n_slots: u32) -> f64 {
+    (l_in as u64).div_ceil(g.chunk as u64) as f64 * g.t_iter_s(n_slots)
+}
+
+/// Calibrated service statistics for one pool.
+#[derive(Clone, Debug)]
+pub struct ServiceStats {
+    /// Mean slot occupancy E[S], seconds.
+    pub e_s: f64,
+    /// Squared coefficient of variation C_s^2 = Var[S]/E[S]^2.
+    pub scv: f64,
+    /// P99 physical prefill time, seconds (enters the SLO budget, Eq. 8).
+    pub p99_prefill_s: f64,
+    /// Iteration latency at the pool's configured slot count.
+    pub t_iter_s: f64,
+    /// Slots per GPU in this pool.
+    pub n_slots: u32,
+}
+
+impl ServiceStats {
+    /// Per-slot service rate mu = 1/E[S] (requests/sec/slot).
+    pub fn mu_slot(&self) -> f64 {
+        1.0 / self.e_s
+    }
+
+    /// GPU-level throughput mu_gpu = n_max / E[S] (§3.1).
+    pub fn mu_gpu(&self) -> f64 {
+        self.n_slots as f64 / self.e_s
+    }
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation,
+/// |rel err| < 1.15e-9). Used by the quadrature calibration to enumerate
+/// lognormal-jitter quantiles deterministically.
+pub fn probit(p: f64) -> f64 {
+    assert!(p > 0.0 && p < 1.0);
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    let p_low = 0.02425;
+    if p < p_low {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - p_low {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+/// Deterministic quadrature calibration: the planner's fast path
+/// (§Perf). Replaces Monte-Carlo sampling with a midpoint rule over the
+/// length distribution's quantile function crossed with a small grid of
+/// lognormal-jitter quantiles for the output model. ~100x fewer
+/// distribution evaluations than the 20k-sample MC at matching accuracy
+/// (cross-validated in tests), and exactly reproducible with no seed.
+pub fn calibrate_quadrature<D: LengthDist>(
+    dist: &D,
+    output: &OutputModel,
+    g: &GpuProfile,
+    n_slots: u32,
+    len_points: usize,
+    jitter_points: usize,
+) -> ServiceStats {
+    assert!(len_points >= 16 && jitter_points >= 1);
+    let t_iter = g.t_iter_s(n_slots);
+    // Precompute jitter factors at midpoint quantiles.
+    let jitters: Vec<f64> = (0..jitter_points)
+        .map(|j| {
+            if output.sigma == 0.0 || jitter_points == 1 {
+                1.0
+            } else {
+                let q = (j as f64 + 0.5) / jitter_points as f64;
+                (output.sigma * probit(q)).exp()
+            }
+        })
+        .collect();
+
+    let mut w = Welford::new();
+    let mut prefill = Samples::with_capacity(len_points * jitter_points);
+    for i in 0..len_points {
+        let q = (i as f64 + 0.5) / len_points as f64;
+        let l_total = dist.quantile(q).round().max(2.0);
+        for &jit in &jitters {
+            let out = (output.frac * l_total * jit).round();
+            let l_out = (out as u32)
+                .clamp(output.min_tokens, output.max_tokens)
+                .min((l_total * 0.9) as u32)
+                .max(1);
+            let l_in = (l_total as u32).saturating_sub(l_out).max(1);
+            w.push(slot_iterations(l_in, l_out, g.chunk) as f64 * t_iter);
+            prefill.push(prefill_time_s(l_in, g, n_slots));
+        }
+    }
+    ServiceStats {
+        e_s: w.mean(),
+        scv: w.scv(),
+        p99_prefill_s: prefill.p99(),
+        t_iter_s: t_iter,
+        n_slots,
+    }
+}
+
+/// Monte-Carlo calibration of `(E[S], C_s^2, P99 prefill)` from a pool's
+/// request-length distribution (paper §3.1: "estimated by Monte Carlo
+/// sampling from the pool's request distribution"). Deterministic under
+/// `seed`. The planner's hot path uses [`calibrate_quadrature`]; this MC
+/// version is the reference the quadrature is validated against.
+pub fn calibrate<D: LengthDist>(
+    dist: &D,
+    output: &OutputModel,
+    g: &GpuProfile,
+    n_slots: u32,
+    samples: usize,
+    seed: u64,
+) -> ServiceStats {
+    assert!(samples >= 100, "too few samples for a stable C_s^2");
+    let mut rng = Rng::new(seed);
+    let t_iter = g.t_iter_s(n_slots);
+    let mut w = Welford::new();
+    let mut prefill = Samples::with_capacity(samples);
+    for _ in 0..samples {
+        let l_total = dist.sample(&mut rng).round().max(2.0);
+        let l_out = output.sample_l_out(l_total, &mut rng);
+        let l_in = (l_total as u32).saturating_sub(l_out).max(1);
+        w.push(slot_iterations(l_in, l_out, g.chunk) as f64 * t_iter);
+        prefill.push(prefill_time_s(l_in, g, n_slots));
+    }
+    ServiceStats {
+        e_s: w.mean(),
+        scv: w.scv(),
+        p99_prefill_s: prefill.p99(),
+        t_iter_s: t_iter,
+        n_slots,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::AnchoredCdf;
+    use crate::workload::traces;
+
+    fn g() -> GpuProfile {
+        GpuProfile::a100_llama70b()
+    }
+
+    #[test]
+    fn slot_iterations_matches_eq4() {
+        // ceil(1000/512) + 100 = 2 + 100
+        assert_eq!(slot_iterations(1000, 100, 512), 102);
+        assert_eq!(slot_iterations(512, 1, 512), 2);
+        assert_eq!(slot_iterations(513, 1, 512), 3);
+        assert_eq!(slot_iterations(1, 1, 512), 2);
+    }
+
+    #[test]
+    fn service_time_example() {
+        // Long pool: t_iter = 18.4 ms; 10 prefill chunks + 900 decode steps.
+        let s = service_time_s(5120, 900, &g(), 16);
+        assert!((s - 910.0 * 0.0184).abs() < 1e-9);
+    }
+
+    #[test]
+    fn prefill_time_independent_of_output() {
+        let p = prefill_time_s(4096, &g(), 16);
+        assert!((p - 8.0 * 0.0184).abs() < 1e-9);
+    }
+
+    #[test]
+    fn calibrate_deterministic() {
+        let w = traces::azure();
+        let a = calibrate(&w.cdf, &w.output, &g(), 256, 5_000, 1);
+        let b = calibrate(&w.cdf, &w.output, &g(), 256, 5_000, 1);
+        assert_eq!(a.e_s, b.e_s);
+        assert_eq!(a.scv, b.scv);
+    }
+
+    #[test]
+    fn calibrate_constant_length_has_zero_ish_scv() {
+        // A point-mass length distribution with jitter-free outputs gives a
+        // (nearly) deterministic service time.
+        let dist = AnchoredCdf::new(vec![(999.999, 0.0), (1000.0, 1.0)]);
+        let output = crate::workload::request::OutputModel {
+            frac: 0.1,
+            sigma: 0.0,
+            min_tokens: 100,
+            max_tokens: 100,
+        };
+        let s = calibrate(&dist, &output, &g(), 16, 2_000, 2);
+        assert!(s.scv < 1e-6, "scv={}", s.scv);
+    }
+
+    #[test]
+    fn longer_pool_distribution_has_larger_e_s() {
+        let w = traces::agent_heavy();
+        let short = crate::workload::cdf::TruncatedDist::new(w.cdf.clone(), 64.0, 8192.0);
+        let long =
+            crate::workload::cdf::TruncatedDist::new(w.cdf.clone(), 8192.0, 65536.0);
+        let ss = calibrate(&short, &w.output, &g(), 128, 10_000, 3);
+        let sl = calibrate(&long, &w.output, &g(), 16, 10_000, 3);
+        // Long requests occupy slots for longer even at the long pool's
+        // smaller t_iter... actually t_iter long < t_iter short (16 vs 128
+        // slots), so compare iteration counts via e_s / t_iter.
+        assert!(sl.e_s / sl.t_iter_s > ss.e_s / ss.t_iter_s);
+    }
+
+    #[test]
+    fn mu_gpu_scales_with_slots() {
+        let w = traces::azure();
+        let a = calibrate(&w.cdf, &w.output, &g(), 16, 5_000, 4);
+        // mu_gpu = n_slots / E[S]
+        assert!((a.mu_gpu() - 16.0 / a.e_s).abs() < 1e-12);
+        assert!((a.mu_slot() - 1.0 / a.e_s).abs() < 1e-12);
+    }
+
+    #[test]
+    fn probit_known_values() {
+        assert!((probit(0.5)).abs() < 1e-9);
+        assert!((probit(0.975) - 1.959964).abs() < 1e-5);
+        assert!((probit(0.025) + 1.959964).abs() < 1e-5);
+        assert!((probit(0.99) - 2.326348).abs() < 1e-5);
+    }
+
+    #[test]
+    fn quadrature_matches_monte_carlo() {
+        // The fast path must agree with the 20k-sample MC reference within
+        // ~2% on E[S] and loosely on C_s^2 / p99 prefill.
+        for w in [traces::azure(), traces::agent_heavy()] {
+            for n_slots in [16u32, 128] {
+                let mc = calibrate(&w.cdf, &w.output, &g(), n_slots, 20_000, 9);
+                let quad =
+                    calibrate_quadrature(&w.cdf, &w.output, &g(), n_slots, 128, 8);
+                assert!(
+                    (quad.e_s - mc.e_s).abs() / mc.e_s < 0.02,
+                    "{} E[S]: quad {} vs mc {}",
+                    w.name,
+                    quad.e_s,
+                    mc.e_s
+                );
+                assert!(
+                    (quad.scv - mc.scv).abs() / mc.scv.max(0.1) < 0.15,
+                    "{} scv: quad {} vs mc {}",
+                    w.name,
+                    quad.scv,
+                    mc.scv
+                );
+                assert!(
+                    (quad.p99_prefill_s - mc.p99_prefill_s).abs() / mc.p99_prefill_s
+                        < 0.15,
+                    "{} p99 prefill: quad {} vs mc {}",
+                    w.name,
+                    quad.p99_prefill_s,
+                    mc.p99_prefill_s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn quadrature_is_deterministic_and_seedless() {
+        let w = traces::lmsys();
+        let a = calibrate_quadrature(&w.cdf, &w.output, &g(), 64, 96, 4);
+        let b = calibrate_quadrature(&w.cdf, &w.output, &g(), 64, 96, 4);
+        assert_eq!(a.e_s, b.e_s);
+        assert_eq!(a.scv, b.scv);
+    }
+
+    #[test]
+    fn p99_prefill_exceeds_mean_prefill() {
+        let w = traces::agent_heavy();
+        let s = calibrate(&w.cdf, &w.output, &g(), 16, 20_000, 5);
+        // Sanity: p99 prefill must be positive and > one iteration.
+        assert!(s.p99_prefill_s > s.t_iter_s);
+    }
+}

@@ -1,0 +1,139 @@
+//! Heuristic content-category classifier (paper §5.2: "the category signal
+//! reuses the per-request EMA estimate from the base router at zero
+//! additional overhead" — here, a cheap single-pass structural classifier).
+//!
+//! Code detection is what matters for safety (code must never be
+//! compressed); the prose/RAG distinction only tunes the estimator prior.
+
+use crate::workload::request::Category;
+
+/// Single-pass structural features of a prompt.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TextFeatures {
+    pub len_bytes: usize,
+    pub lines: u32,
+    pub brace_semicolon: u32,
+    pub indent_lines: u32,
+    pub code_keywords: u32,
+    pub json_punct: u32,
+    pub sentences_terminated: u32,
+    pub question_marks: u32,
+}
+
+const CODE_KEYWORDS: [&str; 14] = [
+    "fn ", "def ", "class ", "import ", "return ", "let ", "const ", "var ", "if (",
+    "for (", "while (", "#include", "pub fn", "lambda ",
+];
+
+pub fn extract_features(text: &str) -> TextFeatures {
+    let mut f = TextFeatures {
+        len_bytes: text.len(),
+        ..Default::default()
+    };
+    for line in text.lines() {
+        f.lines += 1;
+        if line.starts_with("    ") || line.starts_with('\t') {
+            f.indent_lines += 1;
+        }
+    }
+    for c in text.chars() {
+        match c {
+            '{' | '}' | ';' => f.brace_semicolon += 1,
+            ':' | '[' | ']' | '"' => f.json_punct += 1,
+            '.' | '!' => f.sentences_terminated += 1,
+            '?' => f.question_marks += 1,
+            _ => {}
+        }
+    }
+    for kw in CODE_KEYWORDS {
+        f.code_keywords += text.matches(kw).count() as u32;
+    }
+    f
+}
+
+/// Classify a prompt's content category.
+pub fn classify(text: &str) -> Category {
+    let f = extract_features(text);
+    let per_kb = |x: u32| x as f64 * 1024.0 / f.len_bytes.max(1) as f64;
+
+    let code_density = per_kb(f.brace_semicolon);
+    let kw_density = per_kb(f.code_keywords);
+    // Tool-use payloads first: JSON-ish punctuation (quotes/colons/brackets)
+    // dominating, few code keywords, few prose terminators. JSON also has
+    // braces, so this must precede the code check.
+    if per_kb(f.json_punct) > 60.0
+        && kw_density < 1.0
+        && per_kb(f.sentences_terminated) < 8.0
+    {
+        return Category::ToolUse;
+    }
+    // Code: dense braces/semicolons or code keywords with indentation.
+    if code_density > 8.0 || (kw_density > 1.5 && f.indent_lines > 2) {
+        return Category::Code;
+    }
+    // RAG: long multi-paragraph document-like payloads with low question
+    // density; conversations are shorter and more interrogative.
+    if f.len_bytes > 2048 && per_kb(f.question_marks) < 0.5 {
+        return Category::Rag;
+    }
+    Category::Conversational
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::corpus;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn detects_code() {
+        let mut rng = Rng::new(1);
+        let code = corpus::generate_code(800, &mut rng);
+        assert_eq!(classify(&code), Category::Code);
+    }
+
+    #[test]
+    fn detects_prose_as_rag_when_long() {
+        let mut rng = Rng::new(2);
+        let doc = corpus::generate_document(
+            &corpus::CorpusConfig {
+                target_tokens: 2000,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        assert_eq!(classify(&doc), Category::Rag);
+    }
+
+    #[test]
+    fn short_chat_is_conversational() {
+        assert_eq!(
+            classify("Hey, can you help me plan a trip to Kyoto next spring?"),
+            Category::Conversational
+        );
+    }
+
+    #[test]
+    fn json_is_tool_use() {
+        let json = r#"{"name": "get_weather", "arguments": {"city": "Paris", "unit": "c"}, "id": "call_1", "extra": ["a", "b", "c"], "nested": {"k": "v"}}"#;
+        assert_eq!(classify(json), Category::ToolUse);
+    }
+
+    #[test]
+    fn code_beats_rag_even_when_long() {
+        let mut rng = Rng::new(3);
+        let code = corpus::generate_code(4000, &mut rng);
+        assert_eq!(classify(&code), Category::Code);
+    }
+
+    #[test]
+    fn classification_is_gate_safe() {
+        // The safety property: generated code must never classify as a
+        // compressible category (§5.2).
+        let mut rng = Rng::new(4);
+        for _ in 0..20 {
+            let code = corpus::generate_code(200 + rng.below(4000) as u32, &mut rng);
+            assert!(!classify(&code).compressible());
+        }
+    }
+}

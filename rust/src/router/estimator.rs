@@ -1,0 +1,136 @@
+//! Token-budget estimation (paper §2.1): `L_total = ceil(|r| / c_hat_k) +
+//! max_output_tokens`, where `c_hat_k` is a per-category bytes-per-token
+//! EMA updated from post-hoc tokenizer counts.
+
+use crate::workload::request::Category;
+
+/// Per-category bytes-per-token EMA estimator.
+#[derive(Clone, Debug)]
+pub struct TokenEstimator {
+    /// EMA smoothing factor for updates.
+    alpha: f64,
+    /// c_hat per category, indexed by `idx()`.
+    c_hat: [f64; 4],
+    /// Update counts (diagnostics).
+    updates: [u64; 4],
+}
+
+fn idx(c: Category) -> usize {
+    match c {
+        Category::Conversational => 0,
+        Category::Rag => 1,
+        Category::Code => 2,
+        Category::ToolUse => 3,
+    }
+}
+
+impl Default for TokenEstimator {
+    fn default() -> Self {
+        Self::new(0.05)
+    }
+}
+
+impl TokenEstimator {
+    pub fn new(alpha: f64) -> Self {
+        assert!(alpha > 0.0 && alpha <= 1.0);
+        TokenEstimator {
+            alpha,
+            // Priors: prose ~4.4 B/tok, RAG ~4.2, code ~3.2 (denser symbol
+            // mix), tool-use/JSON ~2.8.
+            c_hat: [4.4, 4.2, 3.2, 2.8],
+            updates: [0; 4],
+        }
+    }
+
+    /// Estimated prompt tokens for `bytes` of category-`c` content.
+    pub fn estimate_prompt_tokens(&self, bytes: usize, c: Category) -> u32 {
+        (bytes as f64 / self.c_hat[idx(c)]).ceil().max(1.0) as u32
+    }
+
+    /// Estimated total budget L_total (§2.1).
+    pub fn estimate_l_total(&self, bytes: usize, max_output: u32, c: Category) -> u32 {
+        self.estimate_prompt_tokens(bytes, c) + max_output
+    }
+
+    /// Fold an observed (bytes, actual tokens) pair into the EMA.
+    pub fn update(&mut self, bytes: usize, actual_tokens: u32, c: Category) {
+        if actual_tokens == 0 {
+            return;
+        }
+        let obs = bytes as f64 / actual_tokens as f64;
+        let i = idx(c);
+        self.c_hat[i] = (1.0 - self.alpha) * self.c_hat[i] + self.alpha * obs;
+        self.updates[i] += 1;
+    }
+
+    pub fn bytes_per_token(&self, c: Category) -> f64 {
+        self.c_hat[idx(c)]
+    }
+
+    pub fn update_count(&self, c: Category) -> u64 {
+        self.updates[idx(c)]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::tokenizer::count_tokens;
+
+    #[test]
+    fn estimate_uses_category_prior() {
+        let e = TokenEstimator::default();
+        let prose = e.estimate_prompt_tokens(4400, Category::Conversational);
+        let code = e.estimate_prompt_tokens(4400, Category::Code);
+        assert!(code > prose, "denser categories estimate more tokens");
+    }
+
+    #[test]
+    fn l_total_adds_output_budget(){
+        let e = TokenEstimator::default();
+        let t = e.estimate_l_total(4400, 256, Category::Rag);
+        assert_eq!(t, e.estimate_prompt_tokens(4400, Category::Rag) + 256);
+    }
+
+    #[test]
+    fn ema_converges_to_observed_rate() {
+        let mut e = TokenEstimator::new(0.2);
+        // Feed observations at 6 bytes/token.
+        for _ in 0..100 {
+            e.update(6000, 1000, Category::Conversational);
+        }
+        assert!((e.bytes_per_token(Category::Conversational) - 6.0).abs() < 0.05);
+        // Other categories untouched.
+        assert_eq!(e.bytes_per_token(Category::Code), 3.2);
+        assert_eq!(e.update_count(Category::Conversational), 100);
+    }
+
+    #[test]
+    fn zero_token_updates_ignored() {
+        let mut e = TokenEstimator::default();
+        let before = e.bytes_per_token(Category::Rag);
+        e.update(100, 0, Category::Rag);
+        assert_eq!(e.bytes_per_token(Category::Rag), before);
+    }
+
+    #[test]
+    fn calibrated_estimator_tracks_real_tokenizer() {
+        // After updates from the shared tokenizer, estimates should land
+        // within ~15% of actual counts on same-distribution text.
+        let mut e = TokenEstimator::new(0.1);
+        let mut rng = crate::util::rng::Rng::new(42);
+        let cfg = crate::compress::corpus::CorpusConfig {
+            target_tokens: 800,
+            ..Default::default()
+        };
+        for _ in 0..50 {
+            let doc = crate::compress::corpus::generate_document(&cfg, &mut rng);
+            e.update(doc.len(), count_tokens(&doc), Category::Rag);
+        }
+        let doc = crate::compress::corpus::generate_document(&cfg, &mut rng);
+        let actual = count_tokens(&doc);
+        let est = e.estimate_prompt_tokens(doc.len(), Category::Rag);
+        let err = (est as f64 - actual as f64).abs() / actual as f64;
+        assert!(err < 0.15, "estimate {est} vs actual {actual} (err {err:.3})");
+    }
+}

@@ -1,0 +1,285 @@
+//! The gateway: classify → estimate → route, with C&R inline (paper §2.1,
+//! §5.1). This is the request-path embodiment of the planner's boundary:
+//! requests at or below `B_short` go short; borderline compressible
+//! requests are extractively compressed to `T_c = B_short − L_out` and
+//! re-routed short (the "virtual pool"); everything else goes long.
+
+use crate::compress::extractive::compress;
+use crate::compress::gate::{compression_budget, gate, GateDecision};
+use crate::compress::tokenizer::count_tokens;
+use crate::router::classify::classify;
+use crate::router::estimator::TokenEstimator;
+use crate::runtime::PoolKind;
+use crate::workload::request::Category;
+
+/// Gateway configuration: the planner's output (B_short, gamma) applied at
+/// the request path.
+#[derive(Clone, Debug)]
+pub struct GatewayConfig {
+    pub b_short: u32,
+    pub gamma: f64,
+    /// Compression enabled (false = plain pool routing baseline).
+    pub enable_cr: bool,
+}
+
+/// A routed request, ready for an engine pool.
+#[derive(Clone, Debug)]
+pub struct RoutedRequest {
+    pub pool: PoolKind,
+    /// Final prompt text (compressed when C&R fired).
+    pub text: String,
+    /// Actual prompt tokens of `text` (shared tokenizer).
+    pub prompt_tokens: u32,
+    pub max_output_tokens: u32,
+    pub category: Category,
+    /// Estimated L_total used for the routing decision.
+    pub estimated_l_total: u32,
+    pub compressed: bool,
+    /// Gateway processing time for this request, seconds.
+    pub gateway_s: f64,
+}
+
+/// The stateful gateway (one per deployment; EMA state is shared across
+/// requests exactly as in §2.1).
+#[derive(Debug)]
+pub struct Gateway {
+    pub cfg: GatewayConfig,
+    pub estimator: TokenEstimator,
+    pub n_routed_short: u64,
+    pub n_routed_long: u64,
+    pub n_compressed: u64,
+    pub n_compress_failed: u64,
+}
+
+impl Gateway {
+    pub fn new(cfg: GatewayConfig) -> Self {
+        Gateway {
+            cfg,
+            estimator: TokenEstimator::default(),
+            n_routed_short: 0,
+            n_routed_long: 0,
+            n_compressed: 0,
+            n_compress_failed: 0,
+        }
+    }
+
+    /// Route one request. The returned `text` is what the engine prefills.
+    pub fn route(&mut self, text: &str, max_output_tokens: u32) -> RoutedRequest {
+        let t0 = std::time::Instant::now();
+        let category = classify(text);
+        let est_prompt = self
+            .estimator
+            .estimate_prompt_tokens(text.len(), category);
+        let est_total = est_prompt + max_output_tokens;
+
+        // Post-hoc EMA update from the true count (the engine tokenizes
+        // anyway; the estimate must be cheap, the update can be exact).
+        let actual_prompt = count_tokens(text);
+        self.estimator.update(text.len(), actual_prompt, category);
+
+        let gamma = if self.cfg.enable_cr { self.cfg.gamma } else { 1.0 };
+        let decision = gate(est_total, self.cfg.b_short, gamma, category);
+
+        let routed = match decision {
+            GateDecision::RouteShort => RoutedRequest {
+                pool: PoolKind::Short,
+                text: text.to_string(),
+                prompt_tokens: actual_prompt,
+                max_output_tokens,
+                category,
+                estimated_l_total: est_total,
+                compressed: false,
+                gateway_s: 0.0,
+            },
+            GateDecision::CompressAndRoute => {
+                match compression_budget(self.cfg.b_short, max_output_tokens) {
+                    Some(budget) => {
+                        let c = compress(text, budget);
+                        if c.ok {
+                            self.n_compressed += 1;
+                            RoutedRequest {
+                                pool: PoolKind::Short,
+                                prompt_tokens: count_tokens(&c.text),
+                                text: c.text,
+                                max_output_tokens,
+                                category,
+                                estimated_l_total: est_total,
+                                compressed: true,
+                                gateway_s: 0.0,
+                            }
+                        } else {
+                            self.n_compress_failed += 1;
+                            self.long(text, actual_prompt, max_output_tokens, category, est_total)
+                        }
+                    }
+                    None => {
+                        self.n_compress_failed += 1;
+                        self.long(text, actual_prompt, max_output_tokens, category, est_total)
+                    }
+                }
+            }
+            GateDecision::BandButUnsafe | GateDecision::RouteLong => {
+                self.long(text, actual_prompt, max_output_tokens, category, est_total)
+            }
+        };
+        match routed.pool {
+            PoolKind::Short => self.n_routed_short += 1,
+            PoolKind::Long => self.n_routed_long += 1,
+        }
+        RoutedRequest {
+            gateway_s: t0.elapsed().as_secs_f64(),
+            ..routed
+        }
+    }
+
+    fn long(
+        &self,
+        text: &str,
+        prompt_tokens: u32,
+        max_output_tokens: u32,
+        category: Category,
+        est: u32,
+    ) -> RoutedRequest {
+        RoutedRequest {
+            pool: PoolKind::Long,
+            text: text.to_string(),
+            prompt_tokens,
+            max_output_tokens,
+            category,
+            estimated_l_total: est,
+            compressed: false,
+            gateway_s: 0.0,
+        }
+    }
+
+    /// Realized alpha' (Eq. 14 diagnostics).
+    pub fn alpha_prime(&self) -> f64 {
+        let total = self.n_routed_short + self.n_routed_long;
+        if total == 0 {
+            0.0
+        } else {
+            self.n_routed_short as f64 / total as f64
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::corpus::{self, CorpusConfig};
+    use crate::util::rng::Rng;
+
+    fn gw(b_short: u32, enable_cr: bool) -> Gateway {
+        Gateway::new(GatewayConfig {
+            b_short,
+            gamma: 1.5,
+            enable_cr,
+        })
+    }
+
+    fn doc(tokens: u32, rng: &mut Rng) -> String {
+        corpus::generate_document(
+            &CorpusConfig {
+                target_tokens: tokens,
+                ..Default::default()
+            },
+            rng,
+        )
+    }
+
+    #[test]
+    fn short_requests_route_short_untouched() {
+        let mut g = gw(2048, true);
+        let mut rng = Rng::new(1);
+        let text = doc(500, &mut rng);
+        let r = g.route(&text, 64);
+        assert_eq!(r.pool, PoolKind::Short);
+        assert!(!r.compressed);
+        assert_eq!(r.text, text);
+    }
+
+    #[test]
+    fn borderline_prose_is_compressed_short() {
+        let mut g = gw(2048, true);
+        let mut rng = Rng::new(2);
+        // ~2600 tokens: inside (2048, 3072].
+        let text = doc(2600, &mut rng);
+        let r = g.route(&text, 128);
+        assert_eq!(r.pool, PoolKind::Short, "decision for {} est tokens", r.estimated_l_total);
+        assert!(r.compressed);
+        // Hard OOM guarantee at the gateway: prompt + output <= B.
+        assert!(
+            r.prompt_tokens + r.max_output_tokens <= 2048,
+            "{} + {} > 2048",
+            r.prompt_tokens,
+            r.max_output_tokens
+        );
+        assert_eq!(g.n_compressed, 1);
+    }
+
+    #[test]
+    fn borderline_code_goes_long() {
+        let mut g = gw(2048, true);
+        let mut rng = Rng::new(3);
+        let code = corpus::generate_code(2600, &mut rng);
+        let r = g.route(&code, 128);
+        assert_eq!(r.pool, PoolKind::Long);
+        assert!(!r.compressed);
+        assert_eq!(g.n_compressed, 0);
+    }
+
+    #[test]
+    fn cr_disabled_sends_borderline_long() {
+        let mut g = gw(2048, false);
+        let mut rng = Rng::new(4);
+        let text = doc(2600, &mut rng);
+        let r = g.route(&text, 128);
+        assert_eq!(r.pool, PoolKind::Long);
+    }
+
+    #[test]
+    fn genuinely_long_routes_long() {
+        let mut g = gw(1024, true);
+        let mut rng = Rng::new(5);
+        let text = doc(4000, &mut rng); // far above gamma * B
+        let r = g.route(&text, 128);
+        assert_eq!(r.pool, PoolKind::Long);
+    }
+
+    #[test]
+    fn output_budget_exceeding_boundary_fails_safe() {
+        let mut g = gw(1024, true);
+        let mut rng = Rng::new(6);
+        // Small prompt, huge output budget: estimated L_total lands in the
+        // band but L_out >= B, so no compression can make it fit.
+        let text = doc(300, &mut rng);
+        let r = g.route(&text, 1100);
+        assert!(r.estimated_l_total > 1024 && r.estimated_l_total <= 1536);
+        assert_eq!(r.pool, PoolKind::Long);
+        assert_eq!(g.n_compress_failed, 1);
+    }
+
+    #[test]
+    fn stats_track_routing() {
+        let mut g = gw(2048, true);
+        let mut rng = Rng::new(7);
+        for _ in 0..5 {
+            let t = doc(400, &mut rng);
+            g.route(&t, 32);
+        }
+        let long_text = doc(8000, &mut rng);
+        g.route(&long_text, 32);
+        assert_eq!(g.n_routed_short, 5);
+        assert_eq!(g.n_routed_long, 1);
+        assert!((g.alpha_prime() - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn gateway_latency_is_recorded() {
+        let mut g = gw(2048, true);
+        let mut rng = Rng::new(8);
+        let text = doc(2600, &mut rng);
+        let r = g.route(&text, 64);
+        assert!(r.gateway_s > 0.0 && r.gateway_s < 1.0);
+    }
+}

@@ -1,0 +1,11 @@
+//! The gateway router (paper §2.1, §5.1): per-category token-budget
+//! estimation (EMA), content classification, and pool routing with
+//! Compress-and-Route inline on the request path.
+
+pub mod classify;
+pub mod estimator;
+pub mod gateway;
+
+pub use classify::classify;
+pub use estimator::TokenEstimator;
+pub use gateway::{Gateway, GatewayConfig, RoutedRequest};

@@ -1,0 +1,232 @@
+//! AOT artifact manifest: shapes, pool configs, and weight loading.
+//!
+//! `python/compile/aot.py` writes `manifest.json` + `weights.bin` +
+//! `*.hlo.txt` once at build time; this module is the Rust half of that
+//! contract. Weights are flat little-endian f32 in manifest order.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Model dimensions (mirrors `ModelConfig` in model.py).
+#[derive(Clone, Debug)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub ffn_dim: usize,
+}
+
+/// One pool's live-path configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct PoolShape {
+    /// Concurrent KV slots per replica (the live n_max).
+    pub n_slots: usize,
+    /// Context window per slot, tokens.
+    pub ctx: usize,
+}
+
+/// One weight tensor's manifest entry.
+#[derive(Clone, Debug)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+}
+
+impl ParamSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub model: ModelDims,
+    pub short: PoolShape,
+    pub long: PoolShape,
+    /// Prefill chunk size (live C_chunk).
+    pub chunk: usize,
+    /// Fixed token window of the embed artifact.
+    pub embed_len: usize,
+    pub params: Vec<ParamSpec>,
+}
+
+impl Manifest {
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let text = std::fs::read_to_string(dir.join("manifest.json"))
+            .with_context(|| format!("reading {}/manifest.json (run `make artifacts`)", dir.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("manifest.json: {e}"))?;
+
+        let m = j.expect("model");
+        let get = |o: &Json, k: &str| -> Result<usize> {
+            o.get(k)
+                .and_then(Json::as_usize)
+                .with_context(|| format!("manifest missing `{k}`"))
+        };
+        let model = ModelDims {
+            vocab: get(m, "vocab")?,
+            d_model: get(m, "d_model")?,
+            n_layers: get(m, "n_layers")?,
+            n_heads: get(m, "n_heads")?,
+            head_dim: get(m, "head_dim")?,
+            ffn_dim: get(m, "ffn_dim")?,
+        };
+        let pools = j.expect("pools");
+        let pool = |name: &str| -> Result<PoolShape> {
+            let p = pools
+                .get(name)
+                .with_context(|| format!("manifest missing pool `{name}`"))?;
+            Ok(PoolShape {
+                n_slots: get(p, "n_slots")?,
+                ctx: get(p, "ctx")?,
+            })
+        };
+        let params = j
+            .expect("params")
+            .as_arr()
+            .context("manifest `params` must be an array")?
+            .iter()
+            .map(|p| -> Result<ParamSpec> {
+                Ok(ParamSpec {
+                    name: p
+                        .get("name")
+                        .and_then(Json::as_str)
+                        .context("param name")?
+                        .to_string(),
+                    shape: p
+                        .get("shape")
+                        .and_then(Json::as_arr)
+                        .context("param shape")?
+                        .iter()
+                        .map(|d| d.as_usize().unwrap_or(0))
+                        .collect(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(Manifest {
+            model,
+            short: pool("short")?,
+            long: pool("long")?,
+            chunk: get(&j, "chunk")?,
+            embed_len: get(&j, "embed_len")?,
+            params,
+            dir,
+        })
+    }
+
+    /// Total weight scalars expected in weights.bin.
+    pub fn total_weights(&self) -> usize {
+        self.params.iter().map(ParamSpec::elements).sum()
+    }
+
+    /// Load weights.bin into per-parameter f32 vectors (manifest order).
+    pub fn load_weights(&self) -> Result<Vec<Vec<f32>>> {
+        let path = self.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let expect = self.total_weights() * 4;
+        if bytes.len() != expect {
+            bail!(
+                "weights.bin is {} bytes, manifest expects {expect}",
+                bytes.len()
+            );
+        }
+        let mut out = Vec::with_capacity(self.params.len());
+        let mut off = 0usize;
+        for p in &self.params {
+            let n = p.elements();
+            let mut v = Vec::with_capacity(n);
+            for i in 0..n {
+                let b = &bytes[off + i * 4..off + i * 4 + 4];
+                v.push(f32::from_le_bytes([b[0], b[1], b[2], b[3]]));
+            }
+            off += n * 4;
+            out.push(v);
+        }
+        Ok(out)
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    pub fn pool(&self, kind: PoolKind) -> PoolShape {
+        match kind {
+            PoolKind::Short => self.short,
+            PoolKind::Long => self.long,
+        }
+    }
+}
+
+/// Which live pool an engine replica belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum PoolKind {
+    Short,
+    Long,
+}
+
+impl PoolKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            PoolKind::Short => "short",
+            PoolKind::Long => "long",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn manifest_parses_when_built() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.n_heads * m.model.head_dim, m.model.d_model);
+        assert!(m.short.n_slots > m.long.n_slots, "live cliff must exist");
+        assert_eq!(m.short.n_slots * m.short.ctx, m.long.n_slots * m.long.ctx);
+        assert!(m.chunk > 0 && m.embed_len > 0);
+        assert_eq!(m.params.first().unwrap().name, "tok_emb");
+        assert_eq!(m.params.last().unwrap().name, "lm_head");
+    }
+
+    #[test]
+    fn weights_load_and_match_manifest() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let m = Manifest::load(&dir).unwrap();
+        let w = m.load_weights().unwrap();
+        assert_eq!(w.len(), m.params.len());
+        for (v, p) in w.iter().zip(&m.params) {
+            assert_eq!(v.len(), p.elements(), "{}", p.name);
+            assert!(v.iter().all(|x| x.is_finite()), "{}", p.name);
+        }
+        // Norm weights are initialized to ones.
+        let norm_idx = m.params.iter().position(|p| p.name.ends_with("norm")).unwrap();
+        assert!(w[norm_idx].iter().all(|&x| x == 1.0));
+    }
+
+    #[test]
+    fn missing_dir_errors_helpfully() {
+        let err = Manifest::load("/nonexistent/path").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"));
+    }
+}

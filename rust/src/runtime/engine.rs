@@ -1,0 +1,271 @@
+//! PJRT execution engine: loads the HLO-text artifacts and exposes typed
+//! `prefill` / `decode` / `embed` calls to the coordinator.
+//!
+//! One `ModelRuntime` per process: a CPU PJRT client, the compiled
+//! executables (one per artifact), and the weight literals fed as leading
+//! arguments on every call. Python never runs here — the HLO text was
+//! produced once by `make artifacts` (see /opt/xla-example/README.md for
+//! why text, not serialized protos).
+
+use anyhow::{Context, Result};
+use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+use crate::runtime::artifacts::{Manifest, PoolKind};
+
+/// Output of one decode/prefill call.
+pub struct StepOutput {
+    /// Row-major logits [n, vocab] (n = slots for decode, chunk for prefill).
+    pub logits: Vec<f32>,
+    /// Updated key cache (same layout as the input).
+    pub k_cache: Vec<f32>,
+    /// Updated value cache.
+    pub v_cache: Vec<f32>,
+}
+
+/// The process-wide model runtime.
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    client: PjRtClient,
+    weights: Vec<Literal>,
+    prefill_short: PjRtLoadedExecutable,
+    prefill_long: PjRtLoadedExecutable,
+    decode_short: PjRtLoadedExecutable,
+    decode_long: PjRtLoadedExecutable,
+    embed: PjRtLoadedExecutable,
+}
+
+impl ModelRuntime {
+    /// Load artifacts from `dir`, compile all executables on the CPU PJRT
+    /// client, and upload weights.
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<ModelRuntime> {
+        let manifest = Manifest::load(dir)?;
+        let client = PjRtClient::cpu().context("creating PJRT CPU client")?;
+
+        let compile = |name: &str| -> Result<PjRtLoadedExecutable> {
+            let path = manifest.hlo_path(name);
+            let proto = HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = XlaComputation::from_proto(&proto);
+            client
+                .compile(&comp)
+                .with_context(|| format!("compiling {name}"))
+        };
+
+        let weights = manifest
+            .load_weights()?
+            .into_iter()
+            .zip(&manifest.params)
+            .map(|(v, p)| {
+                let lit = Literal::vec1(&v);
+                let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims)
+                    .with_context(|| format!("reshaping {}", p.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+
+        Ok(ModelRuntime {
+            prefill_short: compile("prefill_short")?,
+            prefill_long: compile("prefill_long")?,
+            decode_short: compile("decode_short")?,
+            decode_long: compile("decode_long")?,
+            embed: compile("embed")?,
+            manifest,
+            client,
+            weights,
+        })
+    }
+
+    pub fn device_count(&self) -> usize {
+        self.client.device_count()
+    }
+
+    /// Per-slot KV cache length in f32 scalars: L * C * H * D.
+    pub fn slot_cache_len(&self, kind: PoolKind) -> usize {
+        let m = &self.manifest.model;
+        let p = self.manifest.pool(kind);
+        m.n_layers * p.ctx * m.n_heads * m.head_dim
+    }
+
+    fn run(
+        &self,
+        exe: &PjRtLoadedExecutable,
+        extra: Vec<Literal>,
+        n_outputs_logits: usize,
+    ) -> Result<StepOutput> {
+        // Weights first (manifest order), then the call-specific args.
+        let mut args: Vec<&Literal> = self.weights.iter().collect();
+        for lit in &extra {
+            args.push(lit);
+        }
+        let result = exe.execute::<&Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetching result")?;
+        let outs = result.to_tuple().context("untupling result")?;
+        anyhow::ensure!(outs.len() == 3, "expected 3 outputs, got {}", outs.len());
+        let mut it = outs.into_iter();
+        let logits_lit = it.next().unwrap();
+        let k_lit = it.next().unwrap();
+        let v_lit = it.next().unwrap();
+        let logits = logits_lit.to_vec::<f32>()?;
+        anyhow::ensure!(
+            logits.len() == n_outputs_logits,
+            "logits size {} != expected {n_outputs_logits}",
+            logits.len()
+        );
+        Ok(StepOutput {
+            logits,
+            k_cache: k_lit.to_vec::<f32>()?,
+            v_cache: v_lit.to_vec::<f32>()?,
+        })
+    }
+
+    /// One chunked-prefill iteration for a single slot.
+    ///
+    /// `k_cache`/`v_cache`: [L, C, H, D] flat; `tokens`: exactly `chunk`
+    /// ids (pad with 0; only the first `valid` matter to the caller);
+    /// `pos_base`: tokens already in the cache.
+    pub fn prefill(
+        &self,
+        kind: PoolKind,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        pos_base: i32,
+    ) -> Result<StepOutput> {
+        let m = &self.manifest;
+        anyhow::ensure!(tokens.len() == m.chunk, "prefill chunk size mismatch");
+        let slot_len = self.slot_cache_len(kind);
+        anyhow::ensure!(k_cache.len() == slot_len && v_cache.len() == slot_len);
+        let p = m.pool(kind);
+        let dims = [
+            m.model.n_layers as i64,
+            p.ctx as i64,
+            m.model.n_heads as i64,
+            m.model.head_dim as i64,
+        ];
+        let extra = vec![
+            Literal::vec1(k_cache).reshape(&dims)?,
+            Literal::vec1(v_cache).reshape(&dims)?,
+            Literal::vec1(tokens),
+            Literal::scalar(pos_base),
+        ];
+        let exe = match kind {
+            PoolKind::Short => &self.prefill_short,
+            PoolKind::Long => &self.prefill_long,
+        };
+        self.run(exe, extra, m.chunk * m.model.vocab)
+    }
+
+    /// One lockstep decode iteration over all of a replica's slots.
+    ///
+    /// `k_cache`/`v_cache`: [S, L, C, H, D] flat; `tokens`/`pos`: length S.
+    pub fn decode(
+        &self,
+        kind: PoolKind,
+        k_cache: &[f32],
+        v_cache: &[f32],
+        tokens: &[i32],
+        pos: &[i32],
+    ) -> Result<StepOutput> {
+        let m = &self.manifest;
+        let p = m.pool(kind);
+        anyhow::ensure!(tokens.len() == p.n_slots && pos.len() == p.n_slots);
+        let slot_len = self.slot_cache_len(kind);
+        anyhow::ensure!(k_cache.len() == p.n_slots * slot_len);
+        let dims = [
+            p.n_slots as i64,
+            m.model.n_layers as i64,
+            p.ctx as i64,
+            m.model.n_heads as i64,
+            m.model.head_dim as i64,
+        ];
+        let extra = vec![
+            Literal::vec1(k_cache).reshape(&dims)?,
+            Literal::vec1(v_cache).reshape(&dims)?,
+            Literal::vec1(tokens),
+            Literal::vec1(pos),
+        ];
+        let exe = match kind {
+            PoolKind::Short => &self.decode_short,
+            PoolKind::Long => &self.decode_long,
+        };
+        self.run(exe, extra, p.n_slots * m.model.vocab)
+    }
+
+    /// Mean-pooled text embedding (the Table-7 BERTScore substitute).
+    /// `tokens` is truncated/padded to the artifact's fixed window.
+    pub fn embed_tokens(&self, tokens: &[i32]) -> Result<Vec<f32>> {
+        let len = self.manifest.embed_len;
+        let valid = tokens.len().min(len) as i32;
+        let mut padded = vec![0i32; len];
+        padded[..valid as usize].copy_from_slice(&tokens[..valid as usize]);
+        // embed_text never touches lm_head, so jax prunes it from the HLO
+        // signature — feed every weight except that one.
+        let mut args: Vec<&Literal> = self
+            .weights
+            .iter()
+            .zip(&self.manifest.params)
+            .filter(|(_, p)| p.name != "lm_head")
+            .map(|(w, _)| w)
+            .collect();
+        let tok_lit = Literal::vec1(&padded);
+        let len_lit = Literal::scalar(valid);
+        args.push(&tok_lit);
+        args.push(&len_lit);
+        let result = self.embed.execute::<&Literal>(&args)?[0][0]
+            .to_literal_sync()
+            .context("fetching embedding")?;
+        // return_tuple=True -> 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Embed raw text via the shared hash tokenizer. Documents longer than
+    /// the artifact's fixed window are *stride-sampled* (evenly spaced
+    /// tokens across the whole text) rather than truncated, so the
+    /// embedding reflects the full document — essential for the Table-7
+    /// fidelity proxy, where compression edits the middle of the prompt.
+    pub fn embed_text(&self, text: &str) -> Result<Vec<f32>> {
+        let ids =
+            crate::compress::tokenizer::hash_tokens(text, self.manifest.model.vocab as u32);
+        let len = self.manifest.embed_len;
+        if ids.len() <= len {
+            return self.embed_tokens(&ids);
+        }
+        let sampled: Vec<i32> = (0..len)
+            .map(|i| ids[i * ids.len() / len])
+            .collect();
+        self.embed_tokens(&sampled)
+    }
+}
+
+/// Cosine similarity between two embeddings (Table 7's semantic proxy).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+}

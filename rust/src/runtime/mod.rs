@@ -1,0 +1,9 @@
+//! Runtime: PJRT CPU client loading the AOT HLO-text artifacts (L2 model +
+//! L1 Pallas kernels) and executing prefill/decode/embed from the Rust hot
+//! path. Python never runs at request time.
+
+pub mod artifacts;
+pub mod engine;
+
+pub use artifacts::{Manifest, PoolKind, PoolShape};
+pub use engine::{cosine, ModelRuntime, StepOutput};

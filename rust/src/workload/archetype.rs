@@ -1,0 +1,91 @@
+//! Workload CDF archetypes (paper §2.4): which remediation applies depends
+//! on where the distribution's mass sits relative to `B_short`.
+
+use crate::workload::cdf::LengthDist;
+
+/// The three qualitative workload shapes of §2.4.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Archetype {
+    /// I: sharp knee below B_short (F(B) >= ~0.9); most above-threshold
+    /// traffic is borderline, so C&R is highly effective (large rho).
+    ConcentratedBelow,
+    /// II: mass spread over decades; meaningful borderline traffic, C&R
+    /// gives meaningful incremental savings.
+    Dispersed,
+    /// III: mass above B_short; raise the boundary before compressing.
+    ConcentratedAbove,
+}
+
+impl Archetype {
+    pub fn name(self) -> &'static str {
+        match self {
+            Archetype::ConcentratedBelow => "I (concentrated-below)",
+            Archetype::Dispersed => "II (dispersed)",
+            Archetype::ConcentratedAbove => "III (concentrated-above)",
+        }
+    }
+}
+
+/// Classify per the §2.4 rules:
+/// * alpha >= 0.85 and the borderline band holds >= half of above-threshold
+///   traffic -> Archetype I;
+/// * alpha <= 0.5 -> Archetype III;
+/// * otherwise -> Archetype II.
+pub fn classify<D: LengthDist>(cdf: &D, b_short: u32, gamma: f64) -> Archetype {
+    let alpha = cdf.cdf(b_short as f64);
+    let beta = cdf.cdf(gamma * b_short as f64) - alpha;
+    if alpha <= 0.5 {
+        return Archetype::ConcentratedAbove;
+    }
+    let above = 1.0 - alpha;
+    if alpha >= 0.85 && above > 0.0 && beta / above >= 0.5 {
+        Archetype::ConcentratedBelow
+    } else {
+        Archetype::Dispersed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::cdf::AnchoredCdf;
+    use crate::workload::traces;
+
+    #[test]
+    fn paper_workload_archetypes() {
+        // Table 2: Azure and LMSYS are I/II; Agent-heavy is II.
+        let az = traces::azure();
+        assert_eq!(
+            classify(&az.cdf, az.b_short, az.gamma),
+            Archetype::ConcentratedBelow
+        );
+        let lm = traces::lmsys();
+        assert_eq!(
+            classify(&lm.cdf, lm.b_short, lm.gamma),
+            Archetype::ConcentratedBelow
+        );
+        let ag = traces::agent_heavy();
+        assert_eq!(
+            classify(&ag.cdf, ag.b_short, ag.gamma),
+            Archetype::Dispersed
+        );
+    }
+
+    #[test]
+    fn code_agent_tasks_are_type_iii() {
+        // §2.4: mass at 10-50K tokens, boundary at 8K.
+        let cdf = AnchoredCdf::new(vec![
+            (1024.0, 0.0),
+            (8192.0, 0.2),
+            (16384.0, 0.55),
+            (51200.0, 1.0),
+        ]);
+        assert_eq!(classify(&cdf, 8192, 1.5), Archetype::ConcentratedAbove);
+    }
+
+    #[test]
+    fn dispersed_when_alpha_mid() {
+        let cdf = AnchoredCdf::new(vec![(64.0, 0.0), (4096.0, 0.6), (65536.0, 1.0)]);
+        assert_eq!(classify(&cdf, 4096, 1.5), Archetype::Dispersed);
+    }
+}

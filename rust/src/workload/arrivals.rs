@@ -1,0 +1,102 @@
+//! Poisson arrival process (paper §3.1: M/G/c — Markovian arrivals).
+
+use crate::util::rng::Rng;
+use crate::workload::request::Request;
+use crate::workload::traces::Workload;
+
+/// Iterator of exponentially-spaced arrival timestamps at rate `lambda`.
+pub struct PoissonArrivals {
+    lambda: f64,
+    t: f64,
+    rng: Rng,
+}
+
+impl PoissonArrivals {
+    pub fn new(lambda: f64, seed: u64) -> Self {
+        assert!(lambda > 0.0);
+        PoissonArrivals {
+            lambda,
+            t: 0.0,
+            rng: Rng::new(seed),
+        }
+    }
+}
+
+impl Iterator for PoissonArrivals {
+    type Item = f64;
+
+    fn next(&mut self) -> Option<f64> {
+        self.t += self.rng.exp(self.lambda);
+        Some(self.t)
+    }
+}
+
+/// Generate a full trace: `n` requests with Poisson arrivals at `lambda`
+/// req/s, lengths/categories drawn from the workload.
+pub fn generate_trace(w: &Workload, lambda: f64, n: usize, seed: u64) -> Vec<Request> {
+    let mut rng = Rng::new(seed ^ 0xA11);
+    let arrivals = PoissonArrivals::new(lambda, seed);
+    arrivals
+        .take(n)
+        .enumerate()
+        .map(|(i, t)| w.sample_request(i as u64, t, &mut rng))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::traces;
+
+    #[test]
+    fn interarrival_mean_is_one_over_lambda() {
+        let lambda = 250.0;
+        let times: Vec<f64> = PoissonArrivals::new(lambda, 1).take(100_000).collect();
+        let mean_gap = times.last().unwrap() / times.len() as f64;
+        assert!((mean_gap - 1.0 / lambda).abs() / (1.0 / lambda) < 0.02);
+    }
+
+    #[test]
+    fn arrivals_strictly_increase() {
+        let mut last = 0.0;
+        for t in PoissonArrivals::new(10.0, 2).take(10_000) {
+            assert!(t > last);
+            last = t;
+        }
+    }
+
+    #[test]
+    fn interarrival_scv_near_one() {
+        // Exponential gaps => SCV = 1 (the "M" in M/G/c).
+        let times: Vec<f64> = PoissonArrivals::new(100.0, 3).take(100_000).collect();
+        let gaps: Vec<f64> = times.windows(2).map(|w| w[1] - w[0]).collect();
+        let mean = gaps.iter().sum::<f64>() / gaps.len() as f64;
+        let var =
+            gaps.iter().map(|g| (g - mean) * (g - mean)).sum::<f64>() / gaps.len() as f64;
+        let scv = var / (mean * mean);
+        assert!((scv - 1.0).abs() < 0.03, "scv={scv}");
+    }
+
+    #[test]
+    fn trace_is_deterministic_under_seed() {
+        let w = traces::azure();
+        let a = generate_trace(&w, 100.0, 1000, 42);
+        let b = generate_trace(&w, 100.0, 1000, 42);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.l_total, y.l_total);
+            assert_eq!(x.arrival_s, y.arrival_s);
+            assert_eq!(x.category, y.category);
+        }
+        let c = generate_trace(&w, 100.0, 1000, 43);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.l_total != y.l_total));
+    }
+
+    #[test]
+    fn trace_ids_sequential() {
+        let w = traces::lmsys();
+        let t = generate_trace(&w, 50.0, 100, 1);
+        for (i, r) in t.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+    }
+}

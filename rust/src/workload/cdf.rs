@@ -1,0 +1,349 @@
+//! Prompt-length distributions: the workload CDF `F` that drives the entire
+//! provisioning pipeline (paper §2.3–2.4).
+//!
+//! The production traces themselves are not available offline, so each
+//! workload is an [`AnchoredCdf`]: a piecewise log-linear CDF through anchor
+//! points taken from the paper's published statistics (quantiles, alpha and
+//! beta at the evaluation thresholds, means). The planner, the DES and the
+//! gateway all consume this one type, exactly as they would an empirical
+//! CDF from a real trace (see DESIGN.md §1 substitutions).
+
+use crate::util::rng::Rng;
+
+/// A distribution over total token budgets L_total.
+pub trait LengthDist {
+    /// F(x) = P[L_total <= x].
+    fn cdf(&self, x: f64) -> f64;
+
+    /// Inverse CDF (quantile function).
+    fn quantile(&self, q: f64) -> f64;
+
+    /// Density f(x) (used by the marginal-cost analysis, Prop. 1).
+    fn density(&self, x: f64) -> f64 {
+        let eps = (x * 1e-4).max(1e-6);
+        (self.cdf(x + eps) - self.cdf(x - eps)) / (2.0 * eps)
+    }
+
+    /// Draw one sample (inverse-transform by default).
+    fn sample(&self, rng: &mut Rng) -> f64 {
+        self.quantile(rng.f64())
+    }
+
+    /// Mean via the closed-form segment integral when available, else MC.
+    fn mean(&self) -> f64;
+}
+
+/// Piecewise log-linear CDF through `(tokens, F)` anchor points.
+///
+/// Between anchors the CDF is linear in `ln x`, which matches how
+/// prompt-length distributions look on the standard log-x CDF plots the
+/// paper's archetypes are defined over.
+#[derive(Clone, Debug)]
+pub struct AnchoredCdf {
+    /// (x, F(x)) pairs; x strictly increasing, F non-decreasing,
+    /// F(first) = 0, F(last) = 1.
+    anchors: Vec<(f64, f64)>,
+}
+
+impl AnchoredCdf {
+    pub fn new(anchors: Vec<(f64, f64)>) -> Self {
+        assert!(anchors.len() >= 2, "need at least 2 anchors");
+        for w in anchors.windows(2) {
+            assert!(w[1].0 > w[0].0, "x must be strictly increasing: {w:?}");
+            assert!(w[1].1 >= w[0].1, "F must be non-decreasing: {w:?}");
+        }
+        let first = anchors.first().unwrap();
+        let last = anchors.last().unwrap();
+        assert!(first.0 > 0.0, "log-linear interpolation needs x > 0");
+        assert!(
+            first.1 == 0.0 && (last.1 - 1.0).abs() < 1e-12,
+            "F must span [0, 1]"
+        );
+        AnchoredCdf { anchors }
+    }
+
+    pub fn anchors(&self) -> &[(f64, f64)] {
+        &self.anchors
+    }
+
+    pub fn min_tokens(&self) -> f64 {
+        self.anchors[0].0
+    }
+
+    pub fn max_tokens(&self) -> f64 {
+        self.anchors[self.anchors.len() - 1].0
+    }
+
+    fn segment_for_x(&self, x: f64) -> usize {
+        // Largest i with anchors[i].0 <= x, clamped to a valid segment start.
+        match self
+            .anchors
+            .binary_search_by(|(ax, _)| ax.partial_cmp(&x).unwrap())
+        {
+            Ok(i) => i.min(self.anchors.len() - 2),
+            Err(0) => 0,
+            Err(i) => (i - 1).min(self.anchors.len() - 2),
+        }
+    }
+}
+
+impl LengthDist for AnchoredCdf {
+    fn cdf(&self, x: f64) -> f64 {
+        if x <= self.min_tokens() {
+            return 0.0;
+        }
+        if x >= self.max_tokens() {
+            return 1.0;
+        }
+        let i = self.segment_for_x(x);
+        let (x0, f0) = self.anchors[i];
+        let (x1, f1) = self.anchors[i + 1];
+        f0 + (f1 - f0) * (x / x0).ln() / (x1 / x0).ln()
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        if q <= 0.0 {
+            return self.min_tokens();
+        }
+        if q >= 1.0 {
+            return self.max_tokens();
+        }
+        // Find segment with f0 <= q < f1 (skip flat segments).
+        let mut i = 0;
+        while i + 2 < self.anchors.len() && self.anchors[i + 1].1 <= q {
+            i += 1;
+        }
+        let (x0, f0) = self.anchors[i];
+        let (x1, f1) = self.anchors[i + 1];
+        if f1 <= f0 {
+            return x1;
+        }
+        let t = (q - f0) / (f1 - f0);
+        x0 * (x1 / x0).powf(t)
+    }
+
+    fn density(&self, x: f64) -> f64 {
+        if x <= self.min_tokens() || x >= self.max_tokens() {
+            return 0.0;
+        }
+        let i = self.segment_for_x(x);
+        let (x0, f0) = self.anchors[i];
+        let (x1, f1) = self.anchors[i + 1];
+        // d/dx [f0 + dF * ln(x/x0)/ln(x1/x0)] = dF / (x ln(x1/x0))
+        (f1 - f0) / (x * (x1 / x0).ln())
+    }
+
+    fn mean(&self) -> f64 {
+        // Closed form per segment: integral of x f(x) dx over [x0, x1]
+        // with f = dF/(x ln(x1/x0)) is dF * (x1 - x0) / ln(x1/x0).
+        self.anchors
+            .windows(2)
+            .map(|w| {
+                let (x0, f0) = w[0];
+                let (x1, f1) = w[1];
+                let df = f1 - f0;
+                if df <= 0.0 {
+                    0.0
+                } else {
+                    df * (x1 - x0) / (x1 / x0).ln()
+                }
+            })
+            .sum()
+    }
+}
+
+/// CDF restricted to an interval — the planner recalibrates pool service
+/// rates from `F` restricted to `[1, B]` (short) and `(gamma*B, inf)`
+/// (post-compression long pool; paper §6 "Critical: mu_l recalibration").
+#[derive(Clone, Debug)]
+pub struct TruncatedDist<D: LengthDist> {
+    inner: D,
+    lo: f64,
+    hi: f64,
+    f_lo: f64,
+    f_hi: f64,
+}
+
+impl<D: LengthDist> TruncatedDist<D> {
+    pub fn new(inner: D, lo: f64, hi: f64) -> Self {
+        assert!(hi > lo);
+        let f_lo = inner.cdf(lo);
+        let f_hi = inner.cdf(hi);
+        assert!(
+            f_hi > f_lo,
+            "truncation interval [{lo}, {hi}] has zero mass (F: {f_lo}..{f_hi})"
+        );
+        TruncatedDist {
+            inner,
+            lo,
+            hi,
+            f_lo,
+            f_hi,
+        }
+    }
+
+    pub fn mass(&self) -> f64 {
+        self.f_hi - self.f_lo
+    }
+}
+
+impl<D: LengthDist> LengthDist for TruncatedDist<D> {
+    fn cdf(&self, x: f64) -> f64 {
+        if x <= self.lo {
+            return 0.0;
+        }
+        if x >= self.hi {
+            return 1.0;
+        }
+        (self.inner.cdf(x) - self.f_lo) / (self.f_hi - self.f_lo)
+    }
+
+    fn quantile(&self, q: f64) -> f64 {
+        let q = q.clamp(0.0, 1.0);
+        self.inner
+            .quantile(self.f_lo + q * (self.f_hi - self.f_lo))
+            .clamp(self.lo, self.hi)
+    }
+
+    fn mean(&self) -> f64 {
+        // No closed form in general: Simpson over the quantile function,
+        // E[X] = integral_0^1 Q(q) dq.
+        let n = 2000;
+        let mut acc = 0.0;
+        for i in 0..n {
+            let q0 = i as f64 / n as f64;
+            let q1 = (i + 1) as f64 / n as f64;
+            let qm = 0.5 * (q0 + q1);
+            acc += (self.quantile(q0) + 4.0 * self.quantile(qm) + self.quantile(q1)) / 6.0
+                / n as f64;
+        }
+        acc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn simple() -> AnchoredCdf {
+        AnchoredCdf::new(vec![(10.0, 0.0), (100.0, 0.5), (1000.0, 1.0)])
+    }
+
+    #[test]
+    fn cdf_hits_anchors_exactly() {
+        let d = simple();
+        assert_eq!(d.cdf(10.0), 0.0);
+        assert!((d.cdf(100.0) - 0.5).abs() < 1e-12);
+        assert_eq!(d.cdf(1000.0), 1.0);
+    }
+
+    #[test]
+    fn cdf_log_linear_midpoint() {
+        let d = simple();
+        // Geometric midpoint of [10, 100] is ~31.6 -> F = 0.25.
+        assert!((d.cdf(31.6227766) - 0.25).abs() < 1e-6);
+    }
+
+    #[test]
+    fn quantile_inverts_cdf() {
+        let d = simple();
+        for q in [0.01, 0.1, 0.25, 0.5, 0.77, 0.95, 0.99] {
+            let x = d.quantile(q);
+            assert!((d.cdf(x) - q).abs() < 1e-9, "q={q} x={x}");
+        }
+    }
+
+    #[test]
+    fn quantile_handles_flat_segments() {
+        let d = AnchoredCdf::new(vec![
+            (10.0, 0.0),
+            (100.0, 0.5),
+            (200.0, 0.5), // flat
+            (1000.0, 1.0),
+        ]);
+        let x = d.quantile(0.5);
+        assert!((100.0..=200.0).contains(&x));
+        assert!((d.cdf(d.quantile(0.7)) - 0.7).abs() < 1e-9);
+    }
+
+    #[test]
+    fn density_integrates_to_one() {
+        let d = simple();
+        let n = 100_000;
+        let (lo, hi) = (10.0f64, 1000.0f64);
+        let mut acc = 0.0;
+        for i in 0..n {
+            // integrate in log space: dx = x dlnx
+            let lx = lo.ln() + (hi.ln() - lo.ln()) * (i as f64 + 0.5) / n as f64;
+            let x = lx.exp();
+            acc += d.density(x) * x * (hi.ln() - lo.ln()) / n as f64;
+        }
+        assert!((acc - 1.0).abs() < 1e-3, "integral={acc}");
+    }
+
+    #[test]
+    fn mean_closed_form_matches_mc() {
+        let d = simple();
+        let mut rng = Rng::new(1);
+        let n = 200_000;
+        let mc: f64 = (0..n).map(|_| d.sample(&mut rng)).sum::<f64>() / n as f64;
+        let cf = d.mean();
+        assert!(
+            (mc - cf).abs() / cf < 0.01,
+            "closed-form {cf} vs MC {mc}"
+        );
+    }
+
+    #[test]
+    fn samples_respect_support() {
+        let d = simple();
+        let mut rng = Rng::new(2);
+        for _ in 0..10_000 {
+            let x = d.sample(&mut rng);
+            assert!((10.0..=1000.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn sample_distribution_matches_cdf() {
+        let d = simple();
+        let mut rng = Rng::new(3);
+        let n = 100_000;
+        let below_100 = (0..n).filter(|_| d.sample(&mut rng) <= 100.0).count();
+        assert!((below_100 as f64 / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn truncated_restricts_support() {
+        let d = TruncatedDist::new(simple(), 100.0, 1000.0);
+        let mut rng = Rng::new(4);
+        for _ in 0..5_000 {
+            let x = d.sample(&mut rng);
+            assert!((100.0..=1000.0).contains(&x));
+        }
+        assert_eq!(d.cdf(100.0), 0.0);
+        assert_eq!(d.cdf(1000.0), 1.0);
+        assert!((d.mass() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn truncated_mean_above_cut_exceeds_full_mean() {
+        let full = simple();
+        let full_mean = full.mean();
+        let tail = TruncatedDist::new(simple(), 100.0, 1000.0);
+        assert!(tail.mean() > full_mean);
+    }
+
+    #[test]
+    #[should_panic(expected = "strictly increasing")]
+    fn rejects_unsorted_anchors() {
+        AnchoredCdf::new(vec![(10.0, 0.0), (5.0, 1.0)]);
+    }
+
+    #[test]
+    #[should_panic(expected = "zero mass")]
+    fn truncated_rejects_empty_interval() {
+        TruncatedDist::new(simple(), 2000.0, 3000.0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Workload characterization: prompt-length CDFs, the three evaluation
+//! traces, Poisson arrivals, and CDF archetypes (paper §2, §7.1).
+
+pub mod archetype;
+pub mod arrivals;
+pub mod cdf;
+pub mod request;
+pub mod traces;

@@ -1,0 +1,160 @@
+//! Request model: token budgets, categories, output-length split.
+//!
+//! A request's total token budget is `L_total = L_in + L_out` (paper §2.1:
+//! prompt estimate + max_output_tokens). The traces publish the L_total
+//! distribution; the split into input/output follows a per-workload output
+//! model documented in DESIGN.md §1 (substitutions).
+
+use crate::util::rng::Rng;
+
+/// Content category (paper §5.2: the safety gate compresses only RAG and
+/// prose; code is excluded).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Category {
+    Conversational,
+    Rag,
+    Code,
+    ToolUse,
+}
+
+impl Category {
+    /// Whether the C&R safety gate allows extractive compression (§5.2).
+    pub fn compressible(self) -> bool {
+        matches!(self, Category::Conversational | Category::Rag)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Category::Conversational => "conversational",
+            Category::Rag => "rag",
+            Category::Code => "code",
+            Category::ToolUse => "tool_use",
+        }
+    }
+}
+
+/// A serving request as seen by the gateway.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: u64,
+    /// Total token budget L_total = L_in + L_out.
+    pub l_total: u32,
+    /// Prompt tokens.
+    pub l_in: u32,
+    /// max_output_tokens.
+    pub l_out: u32,
+    pub category: Category,
+    /// Arrival time, seconds since epoch of the run.
+    pub arrival_s: f64,
+}
+
+impl Request {
+    pub fn new(
+        id: u64,
+        l_total: u32,
+        l_out: u32,
+        category: Category,
+        arrival_s: f64,
+    ) -> Self {
+        let l_out = l_out.min(l_total.saturating_sub(1)).max(1);
+        Request {
+            id,
+            l_total,
+            l_in: l_total - l_out,
+            l_out,
+            category,
+            arrival_s,
+        }
+    }
+}
+
+/// Per-workload output-length model: `L_out = clamp(frac * L_total * jitter)`
+/// with lognormal jitter — documented substitution for the traces' per-request
+/// output counts (DESIGN.md §1).
+#[derive(Clone, Copy, Debug)]
+pub struct OutputModel {
+    pub frac: f64,
+    pub sigma: f64,
+    pub min_tokens: u32,
+    pub max_tokens: u32,
+}
+
+impl OutputModel {
+    pub fn sample_l_out(&self, l_total: f64, rng: &mut Rng) -> u32 {
+        let jitter = rng.lognormal(0.0, self.sigma);
+        let out = (self.frac * l_total * jitter).round();
+        (out as u32)
+            .clamp(self.min_tokens, self.max_tokens)
+            .min((l_total * 0.9) as u32)
+            .max(1)
+    }
+
+    /// Deterministic expectation of the clamp-free model (for analytics).
+    pub fn mean_l_out(&self, l_total: f64) -> f64 {
+        // E[lognormal(0, sigma)] = exp(sigma^2 / 2)
+        (self.frac * l_total * (self.sigma * self.sigma / 2.0).exp())
+            .clamp(self.min_tokens as f64, self.max_tokens as f64)
+            .min(l_total * 0.9)
+            .max(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn category_gate_matches_paper() {
+        assert!(Category::Conversational.compressible());
+        assert!(Category::Rag.compressible());
+        assert!(!Category::Code.compressible());
+        assert!(!Category::ToolUse.compressible());
+    }
+
+    #[test]
+    fn request_split_adds_up() {
+        let r = Request::new(1, 1000, 200, Category::Rag, 0.0);
+        assert_eq!(r.l_in + r.l_out, r.l_total);
+        assert_eq!(r.l_out, 200);
+    }
+
+    #[test]
+    fn request_output_clamped_below_total() {
+        let r = Request::new(1, 100, 5000, Category::Rag, 0.0);
+        assert!(r.l_out < r.l_total);
+        assert!(r.l_in >= 1);
+    }
+
+    #[test]
+    fn output_model_within_bounds() {
+        let m = OutputModel {
+            frac: 0.15,
+            sigma: 0.3,
+            min_tokens: 16,
+            max_tokens: 2048,
+        };
+        let mut rng = Rng::new(5);
+        for _ in 0..10_000 {
+            let out = m.sample_l_out(4000.0, &mut rng);
+            assert!((16..=2048).contains(&out));
+        }
+    }
+
+    #[test]
+    fn output_model_mean_tracks_frac() {
+        let m = OutputModel {
+            frac: 0.15,
+            sigma: 0.3,
+            min_tokens: 1,
+            max_tokens: 1_000_000,
+        };
+        let mut rng = Rng::new(6);
+        let n = 100_000;
+        let mean: f64 = (0..n)
+            .map(|_| m.sample_l_out(10_000.0, &mut rng) as f64)
+            .sum::<f64>()
+            / n as f64;
+        let want = m.mean_l_out(10_000.0);
+        assert!((mean - want).abs() / want < 0.02, "mean={mean} want={want}");
+    }
+}

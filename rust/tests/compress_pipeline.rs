@@ -1,0 +1,245 @@
+//! Integration + property tests for the full C&R pipeline: the hard OOM
+//! guarantee under randomized documents and budgets, the safety gate's
+//! code exclusion, fidelity bounds, and the Eq. 14 routing arithmetic.
+
+use fleetopt::compress::corpus::{self, CorpusConfig};
+use fleetopt::compress::extractive::compress;
+use fleetopt::compress::fidelity;
+use fleetopt::compress::tokenizer::count_tokens;
+use fleetopt::compress::{compression_budget, gate, GateDecision};
+use fleetopt::router::{classify, Gateway, GatewayConfig};
+use fleetopt::util::check::{ensure, forall};
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::request::Category;
+use fleetopt::workload::traces;
+
+#[test]
+fn oom_guarantee_over_randomized_documents() {
+    // The Eq. 15 property: whenever compression reports success, the
+    // *recounted* tokens of the emitted text fit the budget.
+    forall(
+        "oom-guarantee",
+        15,
+        |rng| {
+            let target = rng.range(400, 4_000) as u32;
+            let redundancy = rng.uniform(0.0, 0.4);
+            let budget_frac = rng.uniform(0.3, 1.1);
+            (target, redundancy, budget_frac, rng.next_u64())
+        },
+        |&(target, redundancy, budget_frac, seed)| {
+            let mut rng = Rng::new(seed);
+            let doc = corpus::generate_document(
+                &CorpusConfig {
+                    target_tokens: target,
+                    redundancy,
+                    paragraph_prob: 0.1,
+                },
+                &mut rng,
+            );
+            let total = count_tokens(&doc);
+            let budget = ((total as f64) * budget_frac) as u32;
+            let c = compress(&doc, budget);
+            if c.ok {
+                ensure(
+                    count_tokens(&c.text) <= budget,
+                    format!("{} > {budget}", count_tokens(&c.text)),
+                )
+            } else {
+                // Failure is only legitimate when the mandatory skeleton
+                // cannot fit.
+                ensure(budget < total, "failed despite fitting budget")
+            }
+        },
+    );
+}
+
+#[test]
+fn compression_is_monotone_in_budget() {
+    // A larger budget never yields fewer kept tokens.
+    let mut rng = Rng::new(3);
+    let doc = corpus::generate_document(
+        &CorpusConfig {
+            target_tokens: 2_000,
+            ..Default::default()
+        },
+        &mut rng,
+    );
+    let total = count_tokens(&doc);
+    let mut last = 0u32;
+    for frac in [0.4, 0.6, 0.8, 1.0] {
+        let c = compress(&doc, (total as f64 * frac) as u32);
+        assert!(c.ok);
+        assert!(
+            c.compressed_tokens >= last,
+            "kept tokens shrank at frac {frac}"
+        );
+        last = c.compressed_tokens;
+    }
+}
+
+#[test]
+fn fidelity_bounds_hold_on_borderline_band() {
+    // ROUGE-L recall of an extractive summary ~ kept-fraction of words;
+    // TF-IDF cosine stays high (the paper's 0.981).
+    let w = traces::agent_heavy();
+    let mut rng = Rng::new(4);
+    for _ in 0..3 {
+        let doc = corpus::generate_borderline_for(&w, &mut rng);
+        let c = compress(&doc, w.b_short - 512);
+        assert!(c.ok);
+        let f = fidelity::measure(&doc, &c.text);
+        assert!(f.rouge_l_recall > 0.5, "rouge {}", f.rouge_l_recall);
+        assert!(f.tfidf_cosine > 0.9, "cosine {}", f.tfidf_cosine);
+        assert!(
+            (f.rouge_l_recall - (1.0 - f.token_reduction)).abs() < 0.15,
+            "extractive identity: recall {} vs 1-reduction {}",
+            f.rouge_l_recall,
+            1.0 - f.token_reduction
+        );
+    }
+}
+
+#[test]
+fn gate_code_never_compressed_end_to_end() {
+    // Generated code documents at borderline lengths must flow through the
+    // gateway uncompressed regardless of budget pressure.
+    let mut g = Gateway::new(GatewayConfig {
+        b_short: 2048,
+        gamma: 1.5,
+        enable_cr: true,
+    });
+    let mut rng = Rng::new(5);
+    for _ in 0..5 {
+        let code = corpus::generate_code(2_600, &mut rng);
+        let routed = g.route(&code, 128);
+        assert!(!routed.compressed, "code must never be compressed");
+        assert_eq!(routed.text.len(), code.len());
+    }
+    assert_eq!(g.n_compressed, 0);
+}
+
+#[test]
+fn gate_decision_partition_is_total() {
+    // Every (L_total, category) lands in exactly one decision; boundaries
+    // are handled consistently (property over the whole input space).
+    forall(
+        "gate-partition",
+        200,
+        |rng| {
+            let b = 1024u32;
+            let l = rng.range(1, 4096) as u32;
+            let cat = *rng.choice(&[
+                Category::Conversational,
+                Category::Rag,
+                Category::Code,
+                Category::ToolUse,
+            ]);
+            (b, l, cat)
+        },
+        |&(b, l, cat)| {
+            let d = gate(l, b, 1.5, cat);
+            let expected = if l <= b {
+                GateDecision::RouteShort
+            } else if l <= (1.5 * b as f64).floor() as u32 {
+                if cat.compressible() {
+                    GateDecision::CompressAndRoute
+                } else {
+                    GateDecision::BandButUnsafe
+                }
+            } else {
+                GateDecision::RouteLong
+            };
+            ensure(d == expected, format!("{d:?} != {expected:?} at l={l}"))
+        },
+    );
+}
+
+#[test]
+fn budget_identity_never_overflows() {
+    forall(
+        "eq15-identity",
+        300,
+        |rng| {
+            let b = rng.range(64, 65_536) as u32;
+            let out = rng.range(1, 70_000) as u32;
+            (b, out)
+        },
+        |&(b, out)| match compression_budget(b, out) {
+            Some(tc) => ensure(tc + out == b, "Tc + L_out != B"),
+            None => ensure(out >= b, "None only when L_out >= B"),
+        },
+    );
+}
+
+#[test]
+fn realized_alpha_prime_matches_eq14() {
+    // Drive the gateway with a synthetic banded mix and check the realized
+    // short fraction equals alpha + beta * p_c within sampling noise.
+    let b_short = 1024u32;
+    let mut g = Gateway::new(GatewayConfig {
+        b_short,
+        gamma: 1.5,
+        enable_cr: true,
+    });
+    let mut rng = Rng::new(6);
+    let n = 150usize;
+    let (mut alpha_n, mut beta_n) = (0usize, 0usize);
+    for i in 0..n {
+        // ~60% short, ~25% borderline prose, ~15% long.
+        let target = match i % 20 {
+            0..=11 => rng.range(100, 700) as u32,
+            12..=16 => rng.range(1200, 1450) as u32,
+            _ => rng.range(2200, 3000) as u32,
+        };
+        let doc = corpus::generate_document(
+            &CorpusConfig {
+                target_tokens: target,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let routed = g.route(&doc, 64);
+        let est = routed.estimated_l_total;
+        if est <= b_short {
+            alpha_n += 1;
+        } else if est <= (1.5 * b_short as f64) as u32 && routed.category.compressible() {
+            beta_n += 1;
+        }
+    }
+    let expect = (alpha_n + beta_n) as f64 / n as f64; // p_c = 1 for prose
+    let got = g.alpha_prime();
+    assert!(
+        (got - expect).abs() < 0.05,
+        "alpha' {got} vs alpha+beta*pc {expect}"
+    );
+}
+
+#[test]
+fn classifier_is_deterministic_and_total() {
+    let mut rng = Rng::new(7);
+    for _ in 0..10 {
+        let doc = corpus::generate_document(&Default::default(), &mut rng);
+        assert_eq!(classify(&doc), classify(&doc));
+    }
+    // Pathological inputs must not panic.
+    for s in ["", " ", "{", "\u{1F600}\u{1F600}", "a", "\n\n\n"] {
+        let _ = classify(s);
+    }
+}
+
+#[test]
+fn compressing_pathological_inputs_is_safe() {
+    // Failure injection: no sentences, one giant sentence, unicode soup.
+    for text in [
+        "",
+        "word",
+        &"x".repeat(10_000),
+        &"лорем ипсум долор сит амет ".repeat(400),
+        &"one two three ".repeat(2_000), // no terminators at all
+    ] {
+        let c = compress(text, 100);
+        if c.ok {
+            assert!(count_tokens(&c.text) <= 100);
+        }
+    }
+}

@@ -1,0 +1,144 @@
+//! Integration: the analytical model vs inference-fleet-sim (the paper's
+//! §7.4 validation, scaled for CI speed), plus DES behavioral invariants
+//! and failure injection (overload, bursty arrivals, degenerate shapes).
+
+use fleetopt::config::{GpuProfile, PlannerConfig};
+use fleetopt::experiments::table5_validate;
+use fleetopt::fleetsim::sim::{simulate_pool, SimConfig, SimRequest};
+use fleetopt::planner::{plan_fleet, PlanInput};
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::traces;
+
+fn poisson(lambda: f64, n: usize, l_in: u32, l_out: u32, seed: u64) -> Vec<SimRequest> {
+    let mut rng = Rng::new(seed);
+    let mut t = 0.0;
+    (0..n)
+        .map(|_| {
+            t += rng.exp(lambda);
+            SimRequest { arrival_s: t, l_in, l_out }
+        })
+        .collect()
+}
+
+#[test]
+fn analytical_within_3pct_of_des_all_workloads() {
+    // The paper's headline validation (Table 5), run at reduced volume:
+    // every pool's analytical utilization within 3% of the DES.
+    for (i, w) in traces::all().iter().enumerate() {
+        let (rows, _) = table5_validate(w, 1000.0, 12_000, 100 + i as u64);
+        assert_eq!(rows.len(), 2, "{}: expected two pools", w.name);
+        for r in rows {
+            assert!(
+                r.error.abs() <= 0.03,
+                "{} {} pool: ana {:.3} vs des {:.3} (err {:+.1}%)",
+                r.workload,
+                r.pool,
+                r.rho_ana,
+                r.rho_des,
+                r.error * 100.0
+            );
+        }
+    }
+}
+
+#[test]
+fn des_matches_mm_c_mean_wait() {
+    // Single-slot GPUs + exponential-ish service => M/G/c sanity: measured
+    // waits shrink as capacity grows, and utilization tracks lambda*E[S]/c.
+    let g = GpuProfile::a100_llama70b();
+    let t_iter = g.t_iter_s(16);
+    let e_s = 100.0 * t_iter;
+    for n_gpus in [2u64, 4] {
+        let c = n_gpus as f64 * 16.0;
+        let lambda = 0.7 * c / e_s;
+        let reqs = poisson(lambda, 30_000, 1024, 98, 7);
+        let mut cfg = SimConfig::new(g.clone(), n_gpus, 16);
+        cfg.warmup_s = 3.0 * e_s;
+        let res = simulate_pool(&cfg, &reqs);
+        assert!(
+            (res.utilization - 0.7).abs() < 0.02,
+            "n={n_gpus}: rho {}",
+            res.utilization
+        );
+    }
+}
+
+#[test]
+fn overload_degrades_gracefully() {
+    // Failure injection: 2x overload must not panic, lose requests, or
+    // produce nonsense metrics — it saturates and queues grow.
+    let g = GpuProfile::a100_llama70b();
+    let reqs = poisson(100.0, 5_000, 2048, 50, 9);
+    let res = simulate_pool(&SimConfig::new(g, 1, 16), &reqs);
+    assert_eq!(res.completed, 5_000);
+    assert!(res.utilization > 0.95);
+}
+
+#[test]
+fn burst_arrivals_handled() {
+    // All requests arrive at t=0 (worst-case burst).
+    let g = GpuProfile::a100_llama70b();
+    let reqs: Vec<SimRequest> = (0..500)
+        .map(|_| SimRequest { arrival_s: 0.0, l_in: 512, l_out: 20 })
+        .collect();
+    let res = simulate_pool(&SimConfig::new(g, 2, 16), &reqs);
+    assert_eq!(res.completed, 500);
+}
+
+#[test]
+fn degenerate_requests_complete() {
+    // Zero-ish inputs and outputs must not wedge the simulator.
+    let g = GpuProfile::a100_llama70b();
+    let reqs = vec![
+        SimRequest { arrival_s: 0.0, l_in: 1, l_out: 1 },
+        SimRequest { arrival_s: 0.1, l_in: 0, l_out: 1 },
+        SimRequest { arrival_s: 0.2, l_in: 65_536, l_out: 1 },
+    ];
+    let res = simulate_pool(&SimConfig::new(g, 1, 4), &reqs);
+    assert_eq!(res.completed, 3);
+}
+
+#[test]
+fn des_deterministic_across_runs() {
+    let w = traces::azure();
+    let mut input = PlanInput::new(w.clone(), 500.0);
+    input.cfg = PlannerConfig { mc_samples: 4_000, ..Default::default() };
+    let plan = plan_fleet(&input, w.b_short, 1.0).unwrap();
+    let g = input.gpu.clone();
+    let a = fleetopt::fleetsim::simulate_fleet(&w, &plan, &g, 500.0, 10_000, 77);
+    let b = fleetopt::fleetsim::simulate_fleet(&w, &plan, &g, 500.0, 10_000, 77);
+    assert_eq!(
+        a.short.as_ref().unwrap().utilization,
+        b.short.as_ref().unwrap().utilization
+    );
+    assert_eq!(
+        a.long.as_ref().unwrap().completed,
+        b.long.as_ref().unwrap().completed
+    );
+}
+
+#[test]
+fn occupancy_mode_is_faster_or_equal() {
+    // Ablation: occupancy-dependent t_iter (Eq. 3 with n = busy) can only
+    // speed iterations up relative to full-lockstep.
+    let g = GpuProfile::a100_llama70b();
+    let reqs = poisson(2.0, 500, 1024, 50, 13);
+    let full = simulate_pool(&SimConfig::new(g.clone(), 1, 128), &reqs);
+    let mut cfg = SimConfig::new(g, 1, 128);
+    cfg.lockstep_full = false;
+    let occ = simulate_pool(&cfg, &reqs);
+    let (mut f, mut o) = (full.ttft, occ.ttft);
+    assert!(o.p50() <= f.p50() + 1e-9);
+}
+
+#[test]
+fn cr_routing_shifts_des_load() {
+    // With C&R on (gamma 1.5), the DES long pool receives measurably fewer
+    // requests than at gamma 1.0 — Eq. 1-2 at the simulation layer.
+    let w = traces::azure();
+    let r_plain = fleetopt::fleetsim::route_trace(&w, 1000.0, 30_000, 4096, 1.0, 5);
+    let r_cr = fleetopt::fleetsim::route_trace(&w, 1000.0, 30_000, 4096, 1.5, 5);
+    assert!(r_cr.long.len() < r_plain.long.len());
+    let drop = (r_plain.long.len() - r_cr.long.len()) as f64 / 30_000.0;
+    assert!((drop - 0.078).abs() < 0.01, "expected ~beta drop, got {drop}");
+}

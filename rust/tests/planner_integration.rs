@@ -1,0 +1,190 @@
+//! Integration: the planner reproduces the paper's qualitative results
+//! (Table 3 orderings, Theorem 2, gamma* pattern, Table 6 stability) and
+//! its invariants hold across workloads and arrival rates.
+
+use fleetopt::config::PlannerConfig;
+use fleetopt::planner::{
+    candidate_boundaries, plan_fleet, plan_homogeneous, sweep_full, sweep_gamma, PlanInput,
+};
+use fleetopt::workload::traces;
+
+fn fast_input(w: fleetopt::workload::traces::Workload, lambda: f64) -> PlanInput {
+    let mut i = PlanInput::new(w, lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: 6_000,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+#[test]
+fn table3_method_ordering_all_workloads() {
+    // Paper Table 3: homogeneous >= PR >= PR+C&R >= FleetOpt, strictly for
+    // the first step on every workload.
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let homo = plan_homogeneous(&input).unwrap();
+        let pr = plan_fleet(&input, w.b_short, 1.0).unwrap();
+        let cr = plan_fleet(&input, w.b_short, 1.5).unwrap();
+        let opt = sweep_gamma(&input, w.b_short).unwrap();
+        assert!(pr.cost_yr < homo.cost_yr, "{}: PR must beat homogeneous", w.name);
+        assert!(cr.cost_yr <= pr.cost_yr, "{}: C&R must not lose to PR", w.name);
+        assert!(opt.cost_yr <= cr.cost_yr, "{}: co-design <= retrofit (Thm 2)", w.name);
+    }
+}
+
+#[test]
+fn savings_ordering_across_workloads_matches_paper() {
+    // Paper: Azure saves most, Agent-heavy least (Table 3's spread).
+    let mut savings = std::collections::HashMap::new();
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let homo = plan_homogeneous(&input).unwrap();
+        let opt = sweep_gamma(&input, w.b_short).unwrap();
+        savings.insert(w.name, 1.0 - opt.cost_yr / homo.cost_yr);
+    }
+    assert!(savings["azure"] > savings["agent-heavy"]);
+    assert!(savings["lmsys"] > savings["agent-heavy"]);
+    // All in a plausible band (paper: 6.7% - 82.4%).
+    for (name, s) in &savings {
+        assert!((0.05..0.9).contains(s), "{name}: savings {s}");
+    }
+}
+
+#[test]
+fn cr_increment_largest_for_azure() {
+    // Paper: C&R adds most where beta * rho is largest (Azure: 16x cliff,
+    // beta 7.8%) and least for Agent-heavy (8x, p_c 0.75).
+    let mut incr = std::collections::HashMap::new();
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let homo = plan_homogeneous(&input).unwrap().cost_yr;
+        let pr = plan_fleet(&input, w.b_short, 1.0).unwrap().cost_yr;
+        let cr = plan_fleet(&input, w.b_short, 1.5).unwrap().cost_yr;
+        incr.insert(w.name, (pr - cr) / homo);
+    }
+    assert!(
+        incr["azure"] > incr["agent-heavy"],
+        "azure {} vs agent {}",
+        incr["azure"],
+        incr["agent-heavy"]
+    );
+}
+
+#[test]
+fn gamma_star_is_two_for_archetype_one() {
+    // Paper §6: Archetype I/II workloads (Azure, LMSYS) push gamma* to 2.0.
+    for w in [traces::azure(), traces::lmsys()] {
+        let input = fast_input(w.clone(), 1000.0);
+        let opt = sweep_gamma(&input, w.b_short).unwrap();
+        assert!(opt.gamma >= 1.9, "{}: gamma* = {}", w.name, opt.gamma);
+    }
+}
+
+#[test]
+fn table6_savings_stable_across_lambda() {
+    // Paper Table 6: savings vary by < ~2pp across a 20x arrival range.
+    let w = traces::agent_heavy();
+    let mut savings = Vec::new();
+    for lambda in [100.0, 500.0, 2000.0] {
+        let input = fast_input(w.clone(), lambda);
+        let homo = plan_homogeneous(&input).unwrap();
+        let pr = plan_fleet(&input, w.b_short, 1.0).unwrap();
+        savings.push(1.0 - pr.cost_yr / homo.cost_yr);
+    }
+    let spread = savings
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max)
+        - savings.iter().cloned().fold(f64::INFINITY, f64::min);
+    assert!(spread < 0.03, "savings spread {spread} too wide: {savings:?}");
+}
+
+#[test]
+fn fleet_scales_linearly_with_lambda() {
+    let w = traces::azure();
+    let n_at = |lambda: f64| {
+        let input = fast_input(w.clone(), lambda);
+        plan_homogeneous(&input).unwrap().total_gpus() as f64
+    };
+    let (n1, n10) = (n_at(200.0), n_at(2000.0));
+    assert!((n10 / n1 - 10.0).abs() < 0.5, "ratio {}", n10 / n1);
+}
+
+#[test]
+fn full_sweep_optimum_beats_every_grid_cell() {
+    let input = fast_input(traces::lmsys(), 1000.0);
+    let (best, grid) = sweep_full(&input).unwrap();
+    for (b, g, cost) in &grid {
+        assert!(
+            best.cost_yr <= *cost + 1e-6,
+            "optimum {} beaten by B={b} gamma={g}: {cost}",
+            best.cost_yr
+        );
+    }
+}
+
+#[test]
+fn boundaries_are_workload_feasible() {
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let cands = candidate_boundaries(&input);
+        assert!(
+            (3..=15).contains(&cands.len()),
+            "{}: paper says 5-15 candidates, got {}",
+            w.name,
+            cands.len()
+        );
+        assert!(cands.contains(&w.b_short), "{}: evaluation B missing", w.name);
+    }
+}
+
+#[test]
+fn pools_never_exceed_rho_max() {
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        for gamma in [1.0, 1.5, 2.0] {
+            let p = plan_fleet(&input, w.b_short, gamma).unwrap();
+            for (name, pool) in [("short", &p.short), ("long", &p.long)] {
+                if pool.n_gpus > 0 {
+                    let rho = pool.rho_ana();
+                    assert!(
+                        rho <= 0.85 + 1e-9,
+                        "{} {} pool at gamma {gamma}: rho {rho}",
+                        w.name,
+                        name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn more_compression_never_grows_the_long_pool() {
+    // Monotonicity: raising gamma moves traffic out of the long pool, so
+    // lambda_l (and with recalibration, n_l's traffic share) shrinks.
+    let w = traces::azure();
+    let input = fast_input(w.clone(), 1000.0);
+    let mut last_lambda_l = f64::INFINITY;
+    for gamma in [1.0, 1.2, 1.5, 1.8, 2.0] {
+        let p = plan_fleet(&input, w.b_short, gamma).unwrap();
+        assert!(
+            p.long.lambda <= last_lambda_l + 1e-9,
+            "lambda_l grew at gamma {gamma}"
+        );
+        last_lambda_l = p.long.lambda;
+    }
+}
+
+#[test]
+fn higher_slo_never_cheaper() {
+    let w = traces::azure();
+    let mut tight = fast_input(w.clone(), 1000.0);
+    tight.slo.p99_ttft_s = 0.2;
+    let mut loose = fast_input(w, 1000.0);
+    loose.slo.p99_ttft_s = 5.0;
+    let pt = plan_fleet(&tight, 4096, 1.0).unwrap();
+    let pl = plan_fleet(&loose, 4096, 1.0).unwrap();
+    assert!(pt.cost_yr >= pl.cost_yr);
+}

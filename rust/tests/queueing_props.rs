@@ -1,0 +1,255 @@
+//! Property tests on the analytical core: Erlang-C/Kimura invariants,
+//! sizing monotonicity, Little's-law consistency between the service model
+//! and the DES, and stability boundaries.
+
+use fleetopt::config::GpuProfile;
+use fleetopt::fleetsim::sim::{simulate_pool, SimConfig, SimRequest};
+use fleetopt::planner::sizing::{continuous_gpus, min_gpus};
+use fleetopt::queueing::erlang::{erlang_c, erlang_c_logspace};
+use fleetopt::queueing::kimura::{w99, w_mean};
+use fleetopt::queueing::service::{calibrate, slot_iterations};
+use fleetopt::util::check::{ensure, forall};
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::cdf::{AnchoredCdf, LengthDist};
+use fleetopt::workload::request::OutputModel;
+
+#[test]
+fn erlang_probability_bounds() {
+    forall(
+        "erlang-in-unit-interval",
+        300,
+        |rng| (rng.range(1, 5_000) as u64, rng.uniform(0.01, 0.999)),
+        |&(c, rho)| {
+            let v = erlang_c(c, rho);
+            ensure(
+                (0.0..=1.0).contains(&v) && v.is_finite(),
+                format!("C({c},{rho}) = {v}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn erlang_recurrence_agrees_with_logspace() {
+    forall(
+        "erlang-two-impls",
+        60,
+        |rng| (rng.range(1, 2_000) as u64, rng.uniform(0.05, 0.99)),
+        |&(c, rho)| {
+            let a = erlang_c(c, rho);
+            let b = erlang_c_logspace(c, rho);
+            ensure(
+                (a - b).abs() <= 1e-8 * (1.0 + b),
+                format!("C({c},{rho}): {a} vs {b}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn erlang_monotone_in_rho_property() {
+    forall(
+        "erlang-monotone-rho",
+        100,
+        |rng| {
+            let c = rng.range(1, 500) as u64;
+            let r1 = rng.uniform(0.01, 0.95);
+            let r2 = rng.uniform(0.01, 0.95);
+            (c, r1.min(r2), r1.max(r2))
+        },
+        |&(c, lo, hi)| {
+            ensure(
+                erlang_c(c, lo) <= erlang_c(c, hi) + 1e-12,
+                "C must be monotone in rho",
+            )
+        },
+    );
+}
+
+#[test]
+fn kimura_wait_nonnegative_and_stability() {
+    forall(
+        "kimura-nonneg",
+        200,
+        |rng| {
+            let c = rng.range(1, 1_000) as u64;
+            let mu = rng.uniform(0.01, 10.0);
+            let rho = rng.uniform(0.01, 1.3); // includes unstable region
+            let cs2 = rng.uniform(0.0, 8.0);
+            (c, mu, rho, cs2)
+        },
+        |&(c, mu, rho, cs2)| {
+            let lambda = rho * c as f64 * mu;
+            let w = w99(c, mu, lambda, cs2);
+            if rho >= 1.0 {
+                ensure(w.is_infinite(), "unstable queue must have infinite W99")
+            } else {
+                ensure(w >= 0.0 && w.is_finite(), format!("W99 = {w}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn mean_wait_below_p99_wait() {
+    forall(
+        "mean-below-p99",
+        100,
+        |rng| {
+            let c = rng.range(1, 50) as u64;
+            let mu = 1.0;
+            let rho = rng.uniform(0.5, 0.99);
+            let cs2 = rng.uniform(0.1, 4.0);
+            (c, mu, rho * c as f64 * mu, cs2)
+        },
+        |&(c, mu, lambda, cs2)| {
+            let mean = w_mean(c, mu, lambda, cs2);
+            let p99 = w99(c, mu, lambda, cs2);
+            if p99 == 0.0 {
+                // Many-server regime: <1% of arrivals wait at all, so the
+                // P99 is exactly 0 while the mean can be tiny-positive.
+                return ensure(mean < 0.5 / mu, format!("mean {mean} too big for W99=0"));
+            }
+            // ln(x/0.01) >= x on (0, 1], so the tail quantile dominates.
+            ensure(p99 >= mean * 0.99, format!("p99 {p99} < mean {mean}"))
+        },
+    );
+}
+
+#[test]
+fn sizing_monotone_in_lambda() {
+    let g = GpuProfile::a100_llama70b();
+    let dist = AnchoredCdf::new(vec![(64.0, 0.0), (2048.0, 0.8), (16384.0, 1.0)]);
+    let out = OutputModel {
+        frac: 0.15,
+        sigma: 0.3,
+        min_tokens: 16,
+        max_tokens: 2048,
+    };
+    let svc = calibrate(&dist, &out, &g, 16, 8_000, 1);
+    let mut last = 0u64;
+    for lambda in [10.0, 50.0, 100.0, 500.0, 1000.0] {
+        let n = min_gpus(lambda, &svc, 0.5, 0.85, false).unwrap();
+        assert!(n >= last, "n must not shrink as lambda grows");
+        last = n;
+    }
+}
+
+#[test]
+fn integer_sizing_close_to_continuous() {
+    let g = GpuProfile::a100_llama70b();
+    let dist = AnchoredCdf::new(vec![(64.0, 0.0), (4096.0, 1.0)]);
+    let out = OutputModel {
+        frac: 0.1,
+        sigma: 0.2,
+        min_tokens: 16,
+        max_tokens: 1024,
+    };
+    let svc = calibrate(&dist, &out, &g, 64, 8_000, 2);
+    forall(
+        "integer-vs-continuous-sizing",
+        30,
+        |rng| rng.uniform(50.0, 3_000.0),
+        |&lambda| {
+            let n = min_gpus(lambda, &svc, 0.5, 0.85, false).unwrap() as f64;
+            let c = continuous_gpus(lambda, &svc, 0.85);
+            ensure(
+                n >= c - 1e-9 && n <= c + 2.0,
+                format!("integer {n} vs continuous {c}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn slot_iterations_additive_and_monotone() {
+    forall(
+        "slot-iterations",
+        300,
+        |rng| {
+            (
+                rng.range(1, 100_000) as u32,
+                rng.range(1, 4_096) as u32,
+                *rng.choice(&[128u32, 256, 512, 1024]),
+            )
+        },
+        |&(l_in, l_out, chunk)| {
+            let it = slot_iterations(l_in, l_out, chunk);
+            let more_in = slot_iterations(l_in + chunk, l_out, chunk);
+            let more_out = slot_iterations(l_in, l_out + 1, chunk);
+            ensure(
+                more_in == it + 1 && more_out == it + 1 && it >= 2,
+                format!("iters {it} / {more_in} / {more_out}"),
+            )
+        },
+    );
+}
+
+#[test]
+fn des_littles_law_holds() {
+    // L = lambda * W: mean busy slots equals arrival rate times mean slot
+    // occupancy (measured through utilization * slots).
+    let g = GpuProfile::a100_llama70b();
+    let t_iter = g.t_iter_s(16);
+    let (l_in, l_out) = (1024u32, 148u32); // 150 iterations
+    let e_s = 150.0 * t_iter;
+    let lambda = 15.0;
+    let n_gpus = 8u64;
+    let mut rng = Rng::new(11);
+    let mut t = 0.0;
+    let reqs: Vec<SimRequest> = (0..40_000)
+        .map(|_| {
+            t += rng.exp(lambda);
+            SimRequest { arrival_s: t, l_in, l_out }
+        })
+        .collect();
+    let mut cfg = SimConfig::new(g, n_gpus, 16);
+    cfg.warmup_s = 3.0 * e_s;
+    let res = simulate_pool(&cfg, &reqs);
+    let mean_busy_slots = res.utilization * (n_gpus * 16) as f64;
+    let littles = lambda * e_s;
+    assert!(
+        (mean_busy_slots - littles).abs() / littles < 0.02,
+        "L = {mean_busy_slots} vs lambda*W = {littles}"
+    );
+}
+
+#[test]
+fn calibration_scv_reflects_dispersion() {
+    // A wider length distribution must produce a larger C_s^2.
+    let g = GpuProfile::a100_llama70b();
+    let out = OutputModel {
+        frac: 0.15,
+        sigma: 0.0,
+        min_tokens: 1,
+        max_tokens: 1 << 20,
+    };
+    let narrow = AnchoredCdf::new(vec![(1000.0, 0.0), (1100.0, 1.0)]);
+    let wide = AnchoredCdf::new(vec![(64.0, 0.0), (65536.0, 1.0)]);
+    let s_narrow = calibrate(&narrow, &out, &g, 16, 10_000, 3);
+    let s_wide = calibrate(&wide, &out, &g, 16, 10_000, 3);
+    assert!(s_wide.scv > s_narrow.scv * 5.0);
+}
+
+#[test]
+fn truncation_mean_bracketing() {
+    // E[X | a < X <= b] lies in (a, b]; used throughout the recalibration.
+    forall(
+        "truncated-mean-bracket",
+        50,
+        |rng| {
+            let lo = rng.uniform(100.0, 5_000.0);
+            let hi = lo * rng.uniform(1.5, 10.0);
+            (lo, hi)
+        },
+        |&(lo, hi)| {
+            let cdf = AnchoredCdf::new(vec![(16.0, 0.0), (2048.0, 0.7), (65536.0, 1.0)]);
+            if cdf.cdf(hi) - cdf.cdf(lo) < 1e-6 {
+                return Ok(());
+            }
+            let t = fleetopt::workload::cdf::TruncatedDist::new(cdf, lo, hi);
+            let m = t.mean();
+            ensure(m > lo && m <= hi, format!("mean {m} outside ({lo}, {hi}]"))
+        },
+    );
+}

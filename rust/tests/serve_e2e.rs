@@ -1,0 +1,142 @@
+//! End-to-end integration: the full three-layer stack — gateway routing
+//! with C&R, two-pool replicas, PJRT-executed prefill/decode — on a small
+//! live workload. Skips when artifacts are absent.
+
+use fleetopt::compress::corpus::{self, CorpusConfig};
+use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
+use fleetopt::router::GatewayConfig;
+use fleetopt::util::rng::Rng;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+/// Live-scale boundary: the short pool's window is 256 tokens; leave room
+/// for outputs.
+const B_SHORT: u32 = 224;
+
+fn workload(n: usize, seed: u64) -> Vec<ServeItem> {
+    let mut rng = Rng::new(seed);
+    let mut items = Vec::new();
+    let mut t = 0.0;
+    for i in 0..n {
+        t += rng.exp(40.0); // 40 req/s offered
+        // Mix: 70% short prose, 20% borderline (compressible), 10% long.
+        let target = match i % 10 {
+            0..=6 => rng.range(40, 150) as u32,
+            7 | 8 => rng.range(240, 320) as u32, // borderline band (gamma 1.5)
+            _ => rng.range(400, 700) as u32,
+        };
+        let text = corpus::generate_document(
+            &CorpusConfig {
+                target_tokens: target,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        items.push(ServeItem {
+            text,
+            max_output: 12,
+            arrival_offset_s: t,
+        });
+    }
+    items
+}
+
+#[test]
+fn two_pool_fleet_serves_mixed_workload() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServeConfig {
+        gateway: GatewayConfig {
+            b_short: B_SHORT,
+            gamma: 1.5,
+            enable_cr: true,
+        },
+        replicas_short: 1,
+        replicas_long: 1,
+    };
+    let items = workload(40, 1);
+    let n = items.len() as u64;
+    let mut report = serve(&dir, &cfg, items, 0.05).expect("serve");
+
+    // Everything completes, across both pools.
+    assert_eq!(report.short.completed + report.long.completed, n);
+    assert!(report.short.completed > 0, "short pool must see traffic");
+    assert!(report.long.completed > 0, "long pool must see traffic");
+    // C&R fired on borderline prose.
+    assert!(report.n_compressed > 0, "expected compressions");
+    // Every request produced tokens and a sane latency breakdown.
+    assert!(report.short.output_tokens > 0);
+    assert!(report.short.ttft.p50() > 0.0);
+    assert!(report.throughput_rps > 0.0);
+    println!(
+        "e2e: {} | {} | compressed={} gw={:.2}ms",
+        report.short.summary(),
+        report.long.summary(),
+        report.n_compressed,
+        report.mean_gateway_s * 1e3,
+    );
+}
+
+#[test]
+fn cr_keeps_borderline_out_of_long_pool() {
+    let Some(dir) = artifacts() else { return };
+    let items = workload(30, 2);
+    let n_long_without = {
+        let cfg = ServeConfig {
+            gateway: GatewayConfig {
+                b_short: B_SHORT,
+                gamma: 1.5,
+                enable_cr: false,
+            },
+            replicas_short: 1,
+            replicas_long: 1,
+        };
+        serve(&dir, &cfg, items.clone(), 0.02).unwrap().n_routed_long
+    };
+    let n_long_with = {
+        let cfg = ServeConfig {
+            gateway: GatewayConfig {
+                b_short: B_SHORT,
+                gamma: 1.5,
+                enable_cr: true,
+            },
+            replicas_short: 1,
+            replicas_long: 1,
+        };
+        serve(&dir, &cfg, items, 0.02).unwrap().n_routed_long
+    };
+    assert!(
+        n_long_with < n_long_without,
+        "C&R must shrink long-pool traffic: {n_long_with} vs {n_long_without}"
+    );
+}
+
+#[test]
+fn generation_is_deterministic_across_runs() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServeConfig {
+        gateway: GatewayConfig {
+            b_short: B_SHORT,
+            gamma: 1.5,
+            enable_cr: true,
+        },
+        replicas_short: 1,
+        replicas_long: 1,
+    };
+    // Single request: output tokens must be identical run-to-run (greedy
+    // decoding over a deterministic engine).
+    let item = workload(1, 3);
+    let r1 = serve(&dir, &cfg, item.clone(), 0.0).unwrap();
+    let r2 = serve(&dir, &cfg, item, 0.0).unwrap();
+    assert_eq!(
+        r1.short.output_tokens + r1.long.output_tokens,
+        r2.short.output_tokens + r2.long.output_tokens
+    );
+}
