@@ -1,0 +1,145 @@
+//! Bench — C&R gateway hot path (§Perf): single-thread compression
+//! throughput and latency at trace-realistic document sizes, old path vs
+//! new path, plus the isolated similarity-graph comparison (naive
+//! all-pairs vs inverted index). Emits `BENCH_gateway.json` at the repo
+//! root so the perf trajectory is tracked across PRs.
+//!
+//! Paths compared:
+//! * **naive**: fresh `Document::parse` + all-pairs TextRank per request —
+//!   the pre-§Perf behavior.
+//! * **fast**: the gateway's real path — one reused `CompressScratch`
+//!   (arena interner, postings-list TextRank, recycled buffers).
+//!
+//! Selection output is asserted byte-identical across paths before any
+//! timing is reported.
+
+use std::time::Instant;
+
+use fleetopt::compress::corpus;
+use fleetopt::compress::doc::Document;
+use fleetopt::compress::extractive::compress_doc_with_mode;
+use fleetopt::compress::scratch::CompressScratch;
+use fleetopt::compress::textrank::{
+    centrality_into, textrank_naive, SimilarityMode, TextrankScratch,
+};
+use fleetopt::compress::tokenizer::count_tokens;
+use fleetopt::util::json::{obj, Json};
+use fleetopt::util::rng::Rng;
+use fleetopt::util::stats::Samples;
+use fleetopt::workload::traces;
+
+fn main() {
+    let n_docs: usize = std::env::args()
+        .nth(1)
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(30);
+    let w = traces::agent_heavy();
+    let mut rng = Rng::new(0xBE7C);
+    let docs: Vec<String> = (0..n_docs)
+        .map(|_| corpus::generate_borderline_for(&w, &mut rng))
+        .collect();
+    let budget = w.b_short - 512;
+    let parsed: Vec<Document> = docs.iter().map(|d| Document::parse(d)).collect();
+    let avg_sentences =
+        parsed.iter().map(Document::n_sentences).sum::<usize>() as f64 / n_docs as f64;
+    let avg_tokens = docs.iter().map(|d| count_tokens(d) as u64).sum::<u64>() as f64
+        / n_docs as f64;
+    println!(
+        "gateway hot path — {n_docs} borderline docs (avg {avg_sentences:.0} sentences, \
+         {avg_tokens:.0} tokens), budget {budget}"
+    );
+
+    // --- correctness gate: byte-identical selection across paths ---------
+    let mut scratch = CompressScratch::new();
+    for (doc, text) in parsed.iter().zip(&docs) {
+        let naive = compress_doc_with_mode(doc, budget, SimilarityMode::AllPairs);
+        let fast = scratch.compress(text, budget);
+        assert_eq!(naive.text, fast.text, "selection must be byte-identical");
+        assert_eq!(naive.selected, fast.selected);
+    }
+    println!("selection output: byte-identical across paths ({n_docs}/{n_docs} docs)");
+
+    // --- isolated similarity-graph stage: all-pairs vs inverted index ----
+    let reps = 3usize;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for doc in &parsed {
+            std::hint::black_box(textrank_naive(doc));
+        }
+    }
+    let allpairs_ms = t0.elapsed().as_secs_f64() * 1e3 / (reps * n_docs) as f64;
+
+    let mut ts = TextrankScratch::default();
+    let mut out = Vec::new();
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        for doc in &parsed {
+            centrality_into(doc, SimilarityMode::InvertedIndex, &mut ts, &mut out);
+            std::hint::black_box(out.last().copied());
+        }
+    }
+    let indexed_ms = t0.elapsed().as_secs_f64() * 1e3 / (reps * n_docs) as f64;
+    let stage_speedup = allpairs_ms / indexed_ms.max(1e-9);
+    println!(
+        "textrank stage     : all-pairs {allpairs_ms:8.3} ms/doc | inverted {indexed_ms:8.3} \
+         ms/doc | speedup {stage_speedup:5.2}x"
+    );
+
+    // --- end-to-end request path: naive vs scratch -----------------------
+    let mut naive_lat = Samples::with_capacity(n_docs);
+    let t0 = Instant::now();
+    for text in &docs {
+        let t1 = Instant::now();
+        let doc = Document::parse(text);
+        std::hint::black_box(compress_doc_with_mode(&doc, budget, SimilarityMode::AllPairs).ok);
+        naive_lat.push(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    let naive_total_s = t0.elapsed().as_secs_f64();
+
+    let mut fast_lat = Samples::with_capacity(n_docs);
+    let t0 = Instant::now();
+    for text in &docs {
+        let t1 = Instant::now();
+        std::hint::black_box(scratch.compress(text, budget).ok);
+        fast_lat.push(t1.elapsed().as_secs_f64() * 1e3);
+    }
+    let fast_total_s = t0.elapsed().as_secs_f64();
+
+    let naive_rps = n_docs as f64 / naive_total_s;
+    let fast_rps = n_docs as f64 / fast_total_s;
+    let e2e_speedup = fast_rps / naive_rps.max(1e-9);
+    println!(
+        "end-to-end request : naive {naive_rps:7.1} req/s (p50 {:.2} p99 {:.2} ms)",
+        naive_lat.p50(),
+        naive_lat.p99()
+    );
+    println!(
+        "                     fast  {fast_rps:7.1} req/s (p50 {:.2} p99 {:.2} ms) | \
+         speedup {e2e_speedup:5.2}x",
+        fast_lat.p50(),
+        fast_lat.p99()
+    );
+    println!("acceptance: similarity-stage speedup >= 5x on >=100-sentence docs");
+
+    let report = obj(vec![
+        ("bench", Json::Str("gateway_throughput".into())),
+        ("docs", Json::Num(n_docs as f64)),
+        ("avg_sentences", Json::Num(avg_sentences)),
+        ("avg_tokens", Json::Num(avg_tokens)),
+        ("budget_tokens", Json::Num(budget as f64)),
+        ("selection_identical", Json::Bool(true)),
+        ("allpairs_stage_ms_per_doc", Json::Num(allpairs_ms)),
+        ("inverted_stage_ms_per_doc", Json::Num(indexed_ms)),
+        ("speedup_vs_allpairs", Json::Num(stage_speedup)),
+        ("naive_req_per_s", Json::Num(naive_rps)),
+        ("fast_req_per_s", Json::Num(fast_rps)),
+        ("e2e_speedup", Json::Num(e2e_speedup)),
+        ("naive_p50_ms", Json::Num(naive_lat.p50())),
+        ("naive_p99_ms", Json::Num(naive_lat.p99())),
+        ("fast_p50_ms", Json::Num(fast_lat.p50())),
+        ("fast_p99_ms", Json::Num(fast_lat.p99())),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gateway.json");
+    std::fs::write(path, report.to_string_pretty() + "\n").expect("writing BENCH_gateway.json");
+    println!("wrote {path}");
+}

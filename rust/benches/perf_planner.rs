@@ -1,11 +1,19 @@
 //! Bench E9 / §Perf — planner wall-clock. The paper claims the full
 //! Algorithm-1 sweep completes in under 1 ms; this bench times single
 //! cells, the fixed-B gamma sweep, and the full (B, gamma) sweep for each
-//! workload, and reports per-stage costs for the optimization log.
+//! workload (serial vs thread-scope-sharded), plus the Table-5 DES
+//! validation replications (sequential vs parallel). Emits
+//! `BENCH_planner.json` at the repo root so the perf trajectory is tracked
+//! across PRs.
 
 use std::time::Instant;
 
-use fleetopt::planner::{plan_fleet, sweep_full, sweep_gamma, PlanInput};
+use fleetopt::config::GpuProfile;
+use fleetopt::experiments::table5_validate_replicated;
+use fleetopt::fleetsim::sim::{simulate_pool, simulate_pool_replications, SimConfig, SimRequest};
+use fleetopt::planner::{plan_fleet, sweep_full, sweep_full_serial, sweep_gamma, PlanInput};
+use fleetopt::util::json::{obj, Json};
+use fleetopt::util::rng::Rng;
 use fleetopt::workload::traces;
 
 fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
@@ -17,6 +25,7 @@ fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
 }
 
 fn main() {
+    let mut sweep_rows = Vec::new();
     for w in traces::all() {
         let input = PlanInput::new(w.clone(), 1000.0);
         let cell = time_ms(10, || {
@@ -25,13 +34,100 @@ fn main() {
         let gsweep = time_ms(5, || {
             std::hint::black_box(sweep_gamma(&input, w.b_short).unwrap());
         });
-        let full = time_ms(3, || {
+        let full_serial = time_ms(3, || {
+            std::hint::black_box(sweep_full_serial(&input).unwrap());
+        });
+        let full_par = time_ms(3, || {
             std::hint::black_box(sweep_full(&input).unwrap());
         });
         println!(
-            "{:12} cell={cell:7.3} ms | gamma-sweep(11)={gsweep:8.3} ms | full-sweep={full:8.3} ms",
-            w.name
+            "{:12} cell={cell:7.3} ms | gamma-sweep(11)={gsweep:8.3} ms | \
+             full-sweep serial={full_serial:8.3} ms parallel={full_par:8.3} ms \
+             ({:.2}x)",
+            w.name,
+            full_serial / full_par.max(1e-9),
         );
+        sweep_rows.push(obj(vec![
+            ("workload", Json::Str(w.name.into())),
+            ("cell_ms", Json::Num(cell)),
+            ("gamma_sweep_ms", Json::Num(gsweep)),
+            ("full_sweep_serial_ms", Json::Num(full_serial)),
+            ("full_sweep_parallel_ms", Json::Num(full_par)),
+            (
+                "full_sweep_speedup",
+                Json::Num(full_serial / full_par.max(1e-9)),
+            ),
+        ]));
     }
     println!("paper §6: full sweep < 1 ms (target for the §Perf pass)");
+
+    // --- DES validation replications: sequential vs parallel -------------
+    let w = traces::azure();
+    let seeds: Vec<u64> = (0..4).map(|i| 0xDE5 + i).collect();
+    let n_per_pool = 3_000;
+    let t0 = Instant::now();
+    for &s in &seeds {
+        std::hint::black_box(table5_validate_replicated(&w, 1000.0, n_per_pool, &[s]).len());
+    }
+    let des_seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    std::hint::black_box(table5_validate_replicated(&w, 1000.0, n_per_pool, &seeds).len());
+    let des_par_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "DES validation x{}: sequential {des_seq_ms:8.1} ms | parallel {des_par_ms:8.1} ms \
+         ({:.2}x)",
+        seeds.len(),
+        des_seq_ms / des_par_ms.max(1e-9),
+    );
+
+    // --- raw pool-level DES replications (single pool, fixed shape) ------
+    let g = GpuProfile::a100_llama70b();
+    let cfg = SimConfig::new(g, 4, 16);
+    let pool_traces: Vec<Vec<SimRequest>> = (0..4u64)
+        .map(|k| {
+            let mut rng = Rng::new(0xB00 + k);
+            let mut t = 0.0;
+            (0..20_000)
+                .map(|_| {
+                    t += rng.exp(20.0);
+                    SimRequest { arrival_s: t, l_in: 1024, l_out: 98 }
+                })
+                .collect()
+        })
+        .collect();
+    let t0 = Instant::now();
+    for tr in &pool_traces {
+        std::hint::black_box(simulate_pool(&cfg, tr).completed);
+    }
+    let pool_seq_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    std::hint::black_box(simulate_pool_replications(&cfg, &pool_traces).len());
+    let pool_par_ms = t0.elapsed().as_secs_f64() * 1e3;
+    println!(
+        "pool DES x4       : sequential {pool_seq_ms:8.1} ms | parallel {pool_par_ms:8.1} ms \
+         ({:.2}x)",
+        pool_seq_ms / pool_par_ms.max(1e-9),
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("perf_planner".into())),
+        ("sweeps", Json::Arr(sweep_rows)),
+        ("des_replications", Json::Num(seeds.len() as f64)),
+        ("des_requests_per_pool", Json::Num(n_per_pool as f64)),
+        ("des_sequential_ms", Json::Num(des_seq_ms)),
+        ("des_parallel_ms", Json::Num(des_par_ms)),
+        (
+            "des_speedup",
+            Json::Num(des_seq_ms / des_par_ms.max(1e-9)),
+        ),
+        ("pool_des_sequential_ms", Json::Num(pool_seq_ms)),
+        ("pool_des_parallel_ms", Json::Num(pool_par_ms)),
+        (
+            "pool_des_speedup",
+            Json::Num(pool_seq_ms / pool_par_ms.max(1e-9)),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_planner.json");
+    std::fs::write(path, report.to_string_pretty() + "\n").expect("writing BENCH_planner.json");
+    println!("wrote {path}");
 }

@@ -2,14 +2,146 @@
 //! word ids, per-sentence sorted word sets, and token counts. Building this
 //! once keeps TextRank / TF-IDF / novelty passes allocation-light (the
 //! compressor's 2–7 ms latency target, Table 4).
+//!
+//! §Perf: [`Document::reparse`] rebuilds a document **in place** against a
+//! caller-owned [`ParseScratch`] (arena-backed [`Interner`], char/word
+//! scratch, recycled per-sentence buffers), so steady-state gateway calls
+//! parse documents without heap allocation. [`Document::parse`] is the
+//! one-shot convenience wrapper with identical output.
 
-use std::collections::HashMap;
+use crate::compress::sentence::split_sentences_reuse;
+use crate::compress::tokenizer::{count_tokens, for_each_word};
+use crate::util::hash::{fnv1a, mix64, process_seed};
 
-use crate::compress::sentence::split_sentences;
-use crate::compress::tokenizer::{count_tokens, words};
+/// Arena-backed string interner: word bytes live in one growing `String`,
+/// ids index a span table, and lookup goes through a fixed-seed
+/// open-addressed hash table. `clear()` retains every allocation, so a
+/// reused interner performs no heap allocation in steady state — unlike
+/// `HashMap<String, u32>`, which allocates one `String` per distinct word
+/// per document (the former top allocator of the parse stage).
+///
+/// Ids are assigned densely in first-appearance order, matching the
+/// behavior of the `HashMap` entry-insert it replaces. The probe index
+/// mixes a per-process random seed ([`process_seed`]) into the word hash:
+/// prompt text is attacker-controlled, and an unseeded fixed hash would
+/// let masked-bucket collisions be precomputed offline (hash-flood DoS,
+/// the property the replaced SipHash `HashMap` provided). Ids — and thus
+/// all downstream scores — do not depend on the seed.
+#[derive(Clone, Debug)]
+pub struct Interner {
+    arena: String,
+    /// Word id -> byte span in `arena`.
+    spans: Vec<(u32, u32)>,
+    /// Open-addressed table of word ids; `u32::MAX` = empty slot.
+    table: Vec<u32>,
+    seed: u64,
+}
+
+const EMPTY_SLOT: u32 = u32::MAX;
+
+impl Default for Interner {
+    fn default() -> Self {
+        Interner {
+            arena: String::new(),
+            spans: Vec::new(),
+            table: Vec::new(),
+            seed: process_seed(),
+        }
+    }
+}
+
+impl Interner {
+    pub fn len(&self) -> usize {
+        self.spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.spans.is_empty()
+    }
+
+    /// Reset for a new document, keeping all capacity.
+    pub fn clear(&mut self) {
+        self.arena.clear();
+        self.spans.clear();
+        self.table.fill(EMPTY_SLOT);
+    }
+
+    /// Id of `word`, interning it on first sight.
+    pub fn intern(&mut self, word: &str) -> u32 {
+        if self.table.is_empty() {
+            self.table.resize(64, EMPTY_SLOT);
+        }
+        let mask = self.table.len() - 1;
+        let mut i = mix64(fnv1a(word.as_bytes()), self.seed) as usize & mask;
+        loop {
+            let id = self.table[i];
+            if id == EMPTY_SLOT {
+                break;
+            }
+            let (s, e) = self.spans[id as usize];
+            if &self.arena[s as usize..e as usize] == word {
+                return id;
+            }
+            i = (i + 1) & mask;
+        }
+        let id = self.spans.len() as u32;
+        let s = self.arena.len() as u32;
+        self.arena.push_str(word);
+        self.spans.push((s, self.arena.len() as u32));
+        self.table[i] = id;
+        // Keep load factor under 3/4.
+        if (self.spans.len() + 1) * 4 >= self.table.len() * 3 {
+            self.grow();
+        }
+        id
+    }
+
+    fn grow(&mut self) {
+        let cap = (self.table.len() * 2).max(64);
+        self.table.clear();
+        self.table.resize(cap, EMPTY_SLOT);
+        let mask = cap - 1;
+        for (id, &(s, e)) in self.spans.iter().enumerate() {
+            let w = &self.arena[s as usize..e as usize];
+            let mut i = mix64(fnv1a(w.as_bytes()), self.seed) as usize & mask;
+            while self.table[i] != EMPTY_SLOT {
+                i = (i + 1) & mask;
+            }
+            self.table[i] = id as u32;
+        }
+    }
+}
+
+/// Reusable buffers for [`Document::reparse`]. One per gateway/worker;
+/// every field retains its capacity across documents.
+#[derive(Clone, Debug, Default)]
+pub struct ParseScratch {
+    pub(crate) interner: Interner,
+    chars: Vec<char>,
+    word_buf: String,
+    sent_spare: Vec<String>,
+    seq_spare: Vec<Vec<u32>>,
+    df: Vec<u32>,
+}
+
+/// Resize an outer per-sentence buffer table to `n` cleared inner buffers,
+/// recycling surplus inner allocations through `spare`.
+fn recycle_rows(rows: &mut Vec<Vec<u32>>, n: usize, spare: &mut Vec<Vec<u32>>) {
+    while rows.len() > n {
+        let mut row = rows.pop().expect("len > n > 0");
+        row.clear();
+        spare.push(row);
+    }
+    while rows.len() < n {
+        rows.push(spare.pop().unwrap_or_default());
+    }
+    for row in rows.iter_mut() {
+        row.clear();
+    }
+}
 
 /// A prompt split into sentences with interned word ids.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct Document {
     /// Original sentences, in order.
     pub sentences: Vec<String>,
@@ -34,59 +166,59 @@ pub struct Document {
 
 impl Document {
     pub fn parse(text: &str) -> Self {
-        let sentences = split_sentences(text);
-        let mut intern: HashMap<String, u32> = HashMap::new();
-        let mut word_seqs = Vec::with_capacity(sentences.len());
-        let mut word_sets = Vec::with_capacity(sentences.len());
-        let mut signatures = Vec::with_capacity(sentences.len());
-        let mut token_counts = Vec::with_capacity(sentences.len());
-        for s in &sentences {
-            let seq: Vec<u32> = words(s)
-                .into_iter()
-                .map(|w| {
-                    let next = intern.len() as u32;
-                    *intern.entry(w).or_insert(next)
-                })
-                .collect();
-            let mut set = seq.clone();
+        let mut doc = Document::default();
+        let mut scratch = ParseScratch::default();
+        doc.reparse(text, &mut scratch);
+        doc
+    }
+
+    /// Rebuild this document from `text` in place, reusing every buffer in
+    /// `self` and `scratch` (§Perf: the steady-state gateway path performs
+    /// no heap allocation here). Output is identical to [`Document::parse`].
+    pub fn reparse(&mut self, text: &str, scratch: &mut ParseScratch) {
+        split_sentences_reuse(
+            text,
+            &mut scratch.chars,
+            &mut self.sentences,
+            &mut scratch.sent_spare,
+        );
+        let n = self.sentences.len();
+        scratch.interner.clear();
+        recycle_rows(&mut self.word_seqs, n, &mut scratch.seq_spare);
+        recycle_rows(&mut self.word_sets, n, &mut scratch.seq_spare);
+        recycle_rows(&mut self.content_sets, n, &mut scratch.seq_spare);
+        self.signatures.clear();
+        self.token_counts.clear();
+        for (i, s) in self.sentences.iter().enumerate() {
+            let seq = &mut self.word_seqs[i];
+            let interner = &mut scratch.interner;
+            for_each_word(s, &mut scratch.word_buf, |w| seq.push(interner.intern(w)));
+            let set = &mut self.word_sets[i];
+            set.extend_from_slice(seq);
             set.sort_unstable();
             set.dedup();
             let mut sig = [0u64; 2];
-            for &w in &set {
+            for &w in set.iter() {
                 let h = (w as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15) >> 57; // 7 bits
                 sig[(h >> 6) as usize] |= 1u64 << (h & 63);
             }
-            word_seqs.push(seq);
-            word_sets.push(set);
-            signatures.push(sig);
-            token_counts.push(count_tokens(s));
+            self.signatures.push(sig);
+            self.token_counts.push(count_tokens(s));
         }
         // Second pass: document frequency -> content-word sets.
-        let vocab = intern.len();
-        let mut df = vec![0u32; vocab];
-        for set in &word_sets {
+        self.vocab = scratch.interner.len();
+        let df = &mut scratch.df;
+        df.clear();
+        df.resize(self.vocab, 0);
+        for set in &self.word_sets {
             for &w in set {
                 df[w as usize] += 1;
             }
         }
-        let df_cap = ((sentences.len() as f64 * 0.2).ceil() as u32).max(3);
-        let content_sets = word_sets
-            .iter()
-            .map(|set| {
-                set.iter()
-                    .copied()
-                    .filter(|&w| df[w as usize] <= df_cap)
-                    .collect()
-            })
-            .collect();
-        Document {
-            sentences,
-            word_seqs,
-            word_sets,
-            signatures,
-            content_sets,
-            token_counts,
-            vocab,
+        let df_cap = ((n as f64 * 0.2).ceil() as u32).max(3);
+        for (i, set) in self.word_sets.iter().enumerate() {
+            self.content_sets[i]
+                .extend(set.iter().copied().filter(|&w| df[w as usize] <= df_cap));
         }
     }
 

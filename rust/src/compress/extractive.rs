@@ -8,7 +8,11 @@
 //! "hard OOM guarantee" is by construction, and is property-tested.
 
 use crate::compress::doc::Document;
-use crate::compress::scoring::score;
+use crate::compress::scoring::{
+    minmax_normalize_inplace, position_scores_into, score_with_mode,
+};
+use crate::compress::scratch::CompressScratch;
+use crate::compress::textrank::{centrality_into, SimilarityMode};
 
 /// Number of leading sentences always retained.
 pub const KEEP_FIRST: usize = 3;
@@ -53,6 +57,103 @@ pub fn compress(text: &str, budget_tokens: u32) -> Compression {
 
 /// Compression over a pre-parsed document (lets callers reuse the parse).
 pub fn compress_doc(doc: &Document, budget_tokens: u32) -> Compression {
+    compress_doc_with_mode(doc, budget_tokens, SimilarityMode::default())
+}
+
+/// [`compress_doc`] with an explicit TextRank similarity backend — the
+/// §Perf equivalence flag (`AllPairs` reproduces the pre-inverted-index
+/// behavior; selection is byte-identical across modes, property-tested).
+pub fn compress_doc_with_mode(
+    doc: &Document,
+    budget_tokens: u32,
+    mode: SimilarityMode,
+) -> Compression {
+    run_selection(
+        doc,
+        budget_tokens,
+        &mut Vec::new(),
+        &mut Vec::new(),
+        &mut Vec::new(),
+        |doc, out| {
+            let scores = score_with_mode(doc, mode);
+            out.clear();
+            out.extend_from_slice(&scores.composite);
+        },
+        &mut Vec::new(),
+    )
+}
+
+/// Scratch-backed compression (§Perf): identical output to [`compress`],
+/// but every transient buffer — parse, interner, TextRank postings and
+/// adjacency, component scores, selection order — lives in the caller's
+/// [`CompressScratch`] and is reused across requests. The steady-state
+/// gateway path allocates only the returned `Compression` itself.
+pub fn compress_with(s: &mut CompressScratch, text: &str, budget_tokens: u32) -> Compression {
+    // Split the scratch into disjoint field borrows: the score closure
+    // owns the component buffers, `run_selection` owns the selection ones.
+    let CompressScratch {
+        parse,
+        doc,
+        textrank,
+        tr,
+        pos,
+        tfv,
+        nov,
+        composite,
+        df,
+        tf,
+        order,
+        selected,
+        mandatory,
+    } = s;
+    doc.reparse(text, parse);
+    run_selection(
+        doc,
+        budget_tokens,
+        selected,
+        order,
+        mandatory,
+        // Component scores into scratch buffers, min-max normalized in
+        // place — arithmetic identical to `scoring::score`.
+        |doc, out| {
+            centrality_into(doc, SimilarityMode::InvertedIndex, textrank, tr);
+            minmax_normalize_inplace(tr);
+            position_scores_into(doc.n_sentences(), pos);
+            minmax_normalize_inplace(pos);
+            crate::compress::tfidf::sentence_scores_into(doc, df, tf, tfv);
+            minmax_normalize_inplace(tfv);
+            crate::compress::scoring::novelty_scores_into(doc, nov);
+            minmax_normalize_inplace(nov);
+            out.clear();
+            out.extend(tr.iter().zip(&*pos).zip(&*tfv).zip(&*nov).map(
+                |(((tr, pos), tf), nov)| {
+                    crate::compress::scoring::W_TEXTRANK * tr
+                        + crate::compress::scoring::W_POSITION * pos
+                        + crate::compress::scoring::W_TFIDF * tf
+                        + crate::compress::scoring::W_NOVELTY * nov
+                },
+            ));
+        },
+        composite,
+    )
+}
+
+/// The single selection implementation both entry points funnel through
+/// (so the oracle path and the scratch path cannot drift apart): empty /
+/// identity / skeleton-overflow handling, then greedy fill in composite
+/// order. `compute_composite` is only invoked when selection is actually
+/// needed; `selected`/`order`/`mandatory`/`composite_buf` are caller-owned
+/// buffers (fresh Vecs for the one-shot path, scratch fields for the
+/// reusing path).
+fn run_selection(
+    doc: &Document,
+    budget_tokens: u32,
+    selected: &mut Vec<bool>,
+    order: &mut Vec<usize>,
+    mandatory: &mut Vec<usize>,
+    compute_composite: impl FnOnce(&Document, &mut Vec<f64>),
+    composite_buf: &mut Vec<f64>,
+) -> Compression {
     let n = doc.n_sentences();
     let original_tokens = doc.total_tokens();
     if n == 0 {
@@ -75,17 +176,19 @@ pub fn compress_doc(doc: &Document, budget_tokens: u32) -> Compression {
         };
     }
 
-    let mut selected = vec![false; n];
+    selected.clear();
+    selected.resize(n, false);
     let mut used: u32 = 0;
 
     // Step 3 invariant: always retain the first 3 and last 2 sentences.
-    let mut mandatory: Vec<usize> = (0..n.min(KEEP_FIRST)).collect();
+    mandatory.clear();
+    mandatory.extend(0..n.min(KEEP_FIRST));
     for i in n.saturating_sub(KEEP_LAST)..n {
         if !mandatory.contains(&i) {
             mandatory.push(i);
         }
     }
-    for &i in &mandatory {
+    for &i in mandatory.iter() {
         selected[i] = true;
         used += doc.token_counts[i];
     }
@@ -101,18 +204,25 @@ pub fn compress_doc(doc: &Document, budget_tokens: u32) -> Compression {
     }
 
     // Steps 2+3: greedy selection in composite-score order.
-    let scores = score(doc);
-    let mut order: Vec<usize> = (0..n).filter(|i| !selected[*i]).collect();
-    order.sort_by(|&a, &b| {
-        scores.composite[b]
-            .partial_cmp(&scores.composite[a])
+    compute_composite(doc, composite_buf);
+    order.clear();
+    for (i, &sel) in selected.iter().enumerate() {
+        if !sel {
+            order.push(i);
+        }
+    }
+    // The comparator is total (ties broken by position), so the unstable
+    // sort is deterministic and equal to the stable sort here.
+    order.sort_unstable_by(|&a, &b| {
+        composite_buf[b]
+            .partial_cmp(&composite_buf[a])
             .unwrap()
-            .then(a.cmp(&b)) // stable tie-break by position
+            .then(a.cmp(&b)) // tie-break by position
     });
 
     // Step 4: stop when the budget is reached (skip-and-continue lets short
     // high-value sentences fill remaining space).
-    for &i in &order {
+    for &i in order.iter() {
         let cost = doc.token_counts[i];
         if used + cost <= budget_tokens {
             selected[i] = true;
@@ -121,11 +231,13 @@ pub fn compress_doc(doc: &Document, budget_tokens: u32) -> Compression {
     }
 
     let idx: Vec<usize> = (0..n).filter(|&i| selected[i]).collect();
-    let text: String = idx
-        .iter()
-        .map(|&i| doc.sentences[i].as_str())
-        .collect::<Vec<_>>()
-        .join(" ");
+    let mut text = String::new();
+    for (k, &i) in idx.iter().enumerate() {
+        if k > 0 {
+            text.push(' ');
+        }
+        text.push_str(&doc.sentences[i]);
+    }
     Compression {
         compressed_tokens: used,
         original_tokens,

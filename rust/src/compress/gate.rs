@@ -19,14 +19,22 @@ pub enum GateDecision {
     RouteLong,
 }
 
+/// Upper edge of the borderline band, `floor(gamma * B)` — shared by the
+/// gate, the DES router, and the planner so band membership is decided
+/// identically at every layer.
+#[inline]
+pub fn band_hi(b_short: u32, gamma: f64) -> u32 {
+    (gamma * b_short as f64).floor() as u32
+}
+
 /// Apply the gate (Eq. 14's p_c is the realized fraction of
 /// `CompressAndRoute` among band members).
+#[inline]
 pub fn gate(l_total: u32, b_short: u32, gamma: f64, category: Category) -> GateDecision {
     if l_total <= b_short {
         return GateDecision::RouteShort;
     }
-    let band_hi = (gamma * b_short as f64).floor() as u32;
-    if l_total <= band_hi {
+    if l_total <= band_hi(b_short, gamma) {
         if category.compressible() {
             GateDecision::CompressAndRoute
         } else {
@@ -41,6 +49,7 @@ pub fn gate(l_total: u32, b_short: u32, gamma: f64, category: Category) -> GateD
 /// `T_c + L_out = B_short` and KV overflow is impossible by construction.
 /// Returns None when the output budget alone exceeds the boundary (such
 /// requests cannot be made short no matter the compression).
+#[inline]
 pub fn compression_budget(b_short: u32, l_out: u32) -> Option<u32> {
     if l_out >= b_short {
         None

@@ -15,10 +15,13 @@ pub mod extractive;
 pub mod fidelity;
 pub mod gate;
 pub mod scoring;
+pub mod scratch;
 pub mod sentence;
 pub mod textrank;
 pub mod tfidf;
 pub mod tokenizer;
 
-pub use extractive::{compress, Compression};
-pub use gate::{compression_budget, gate, GateDecision};
+pub use extractive::{compress, compress_with, Compression};
+pub use gate::{band_hi, compression_budget, gate, GateDecision};
+pub use scratch::CompressScratch;
+pub use textrank::SimilarityMode;

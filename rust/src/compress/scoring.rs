@@ -4,7 +4,7 @@
 //! published weights are meaningful across prompts.
 
 use crate::compress::doc::{jaccard, Document};
-use crate::compress::textrank::textrank;
+use crate::compress::textrank::{textrank_with_mode, SimilarityMode};
 use crate::compress::tfidf::sentence_scores;
 
 pub const W_TEXTRANK: f64 = 0.20;
@@ -26,22 +26,36 @@ pub struct SentenceScores {
 /// openings state the task, endings carry the actual question (the
 /// first-3/last-2 retention invariant is enforced separately at selection).
 pub fn position_scores(n: usize) -> Vec<f64> {
-    (0..n)
-        .map(|i| {
-            let primacy = (-(i as f64) / (n as f64 / 4.0).max(1.0)).exp();
-            let from_end = n - 1 - i;
-            let recency = if from_end < 2 { 0.6 - 0.1 * from_end as f64 } else { 0.0 };
-            primacy.max(recency)
-        })
-        .collect()
+    let mut out = Vec::new();
+    position_scores_into(n, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`position_scores`] (§Perf).
+pub fn position_scores_into(n: usize, out: &mut Vec<f64>) {
+    out.clear();
+    out.extend((0..n).map(|i| {
+        let primacy = (-(i as f64) / (n as f64 / 4.0).max(1.0)).exp();
+        let from_end = n - 1 - i;
+        let recency = if from_end < 2 { 0.6 - 0.1 * from_end as f64 } else { 0.0 };
+        primacy.max(recency)
+    }));
 }
 
 /// Novelty: 1 minus the max Jaccard similarity against any *earlier*
 /// sentence — a redundancy penalty for repeated content (RAG payloads
 /// routinely duplicate retrieved passages).
 pub fn novelty_scores(doc: &Document) -> Vec<f64> {
+    let mut out = Vec::new();
+    novelty_scores_into(doc, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`novelty_scores`] (§Perf).
+pub fn novelty_scores_into(doc: &Document, out: &mut Vec<f64>) {
     let n = doc.n_sentences();
-    let mut out = Vec::with_capacity(n);
+    out.clear();
+    out.reserve(n);
     for i in 0..n {
         let a = &doc.word_sets[i];
         let sig_a = doc.signatures[i];
@@ -76,24 +90,40 @@ pub fn novelty_scores(doc: &Document) -> Vec<f64> {
         }
         out.push(1.0 - max_sim);
     }
-    out
 }
 
 fn minmax_normalize(xs: &[f64]) -> Vec<f64> {
+    let mut out = xs.to_vec();
+    minmax_normalize_inplace(&mut out);
+    out
+}
+
+/// In-place min-max normalization (§Perf): same values as
+/// [`minmax_normalize`], no allocation.
+pub(crate) fn minmax_normalize_inplace(xs: &mut [f64]) {
     if xs.is_empty() {
-        return Vec::new();
+        return;
     }
     let lo = xs.iter().cloned().fold(f64::INFINITY, f64::min);
     let hi = xs.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
     if hi - lo < 1e-12 {
-        return vec![0.5; xs.len()];
+        xs.fill(0.5);
+        return;
     }
-    xs.iter().map(|x| (x - lo) / (hi - lo)).collect()
+    for x in xs.iter_mut() {
+        *x = (*x - lo) / (hi - lo);
+    }
 }
 
 /// Score all sentences of a document.
 pub fn score(doc: &Document) -> SentenceScores {
-    let tr = minmax_normalize(&textrank(doc));
+    score_with_mode(doc, SimilarityMode::default())
+}
+
+/// [`score`] with an explicit TextRank similarity backend (the §Perf
+/// equivalence flag: `AllPairs` is the pre-inverted-index oracle).
+pub fn score_with_mode(doc: &Document, mode: SimilarityMode) -> SentenceScores {
+    let tr = minmax_normalize(&textrank_with_mode(doc, mode));
     let pos = minmax_normalize(&position_scores(doc.n_sentences()));
     let tf = minmax_normalize(&sentence_scores(doc));
     let nov = minmax_normalize(&novelty_scores(doc));

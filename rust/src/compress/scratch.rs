@@ -1,0 +1,102 @@
+//! The per-worker compression arena (§Perf).
+//!
+//! A [`CompressScratch`] owns every transient buffer the C&R pipeline
+//! needs — the parse scratch (interner arena, char/word buffers, recycled
+//! sentence storage), the reusable [`Document`], the TextRank postings /
+//! adjacency buffers, and the scoring/selection vectors. All buffers keep
+//! their capacity across requests, so a steady-state gateway call
+//! allocates nothing on the heap beyond the returned compressed prompt
+//! itself. One scratch per gateway (or per worker thread); it is `Send`,
+//! not shared.
+//!
+//! The one-shot [`crate::compress::extractive::compress`] constructs a
+//! fresh scratch per call and produces byte-identical output
+//! (property-tested), so existing callers are unaffected.
+
+use crate::compress::doc::{Document, ParseScratch};
+use crate::compress::extractive::{compress_with, Compression};
+use crate::compress::textrank::TextrankScratch;
+
+/// Reusable buffers for the full compress pipeline. See module docs.
+#[derive(Clone, Debug, Default)]
+pub struct CompressScratch {
+    pub(crate) parse: ParseScratch,
+    pub(crate) doc: Document,
+    pub(crate) textrank: TextrankScratch,
+    /// Component scores (raw, then min-max normalized in place).
+    pub(crate) tr: Vec<f64>,
+    pub(crate) pos: Vec<f64>,
+    pub(crate) tfv: Vec<f64>,
+    pub(crate) nov: Vec<f64>,
+    pub(crate) composite: Vec<f64>,
+    /// TF-IDF counting scratch.
+    pub(crate) df: Vec<u32>,
+    pub(crate) tf: Vec<u32>,
+    /// Selection state.
+    pub(crate) order: Vec<usize>,
+    pub(crate) selected: Vec<bool>,
+    pub(crate) mandatory: Vec<usize>,
+}
+
+impl CompressScratch {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Compress `text` to at most `budget_tokens` tokens, reusing this
+    /// scratch's buffers. Byte-identical to
+    /// [`crate::compress::extractive::compress`].
+    pub fn compress(&mut self, text: &str, budget_tokens: u32) -> Compression {
+        compress_with(self, text, budget_tokens)
+    }
+
+    /// The most recently parsed document (valid after a `compress` call).
+    pub fn last_doc(&self) -> &Document {
+        &self.doc
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::corpus::{self, CorpusConfig};
+    use crate::compress::extractive::compress;
+    use crate::compress::tokenizer::count_tokens;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn scratch_reuse_matches_one_shot_compress() {
+        let mut scratch = CompressScratch::new();
+        let mut rng = Rng::new(42);
+        for k in 0..6 {
+            // Vary size up and down to exercise buffer shrink/grow reuse.
+            let target = [900u32, 300, 1500, 150, 1200, 600][k];
+            let doc = corpus::generate_document(
+                &CorpusConfig {
+                    target_tokens: target,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            let budget = count_tokens(&doc) * 2 / 3;
+            let fresh = compress(&doc, budget);
+            let reused = scratch.compress(&doc, budget);
+            assert_eq!(fresh.text, reused.text, "doc {k}");
+            assert_eq!(fresh.selected, reused.selected, "doc {k}");
+            assert_eq!(fresh.compressed_tokens, reused.compressed_tokens);
+            assert_eq!(fresh.original_tokens, reused.original_tokens);
+            assert_eq!(fresh.ok, reused.ok);
+        }
+    }
+
+    #[test]
+    fn scratch_handles_degenerate_inputs() {
+        let mut scratch = CompressScratch::new();
+        for text in ["", "word", "Two words. Here.", &"x ".repeat(5_000)] {
+            let a = scratch.compress(text, 50);
+            let b = compress(text, 50);
+            assert_eq!(a.text, b.text);
+            assert_eq!(a.ok, b.ok);
+        }
+    }
+}

@@ -15,21 +15,100 @@ const ABBREVIATIONS: [&str; 14] = [
     "approx",
 ];
 
-fn ends_with_abbreviation(text: &str) -> bool {
+/// Allocation-free comparison of a char-slice word against a lowercase
+/// abbreviation/word: lowercases `chars` on the fly (full case folding,
+/// matching `str::to_lowercase`).
+fn word_eq_lower(chars: &[char], target: &str) -> bool {
+    let mut it = target.chars();
+    for &c in chars {
+        for lc in c.to_lowercase() {
+            if it.next() != Some(lc) {
+                return false;
+            }
+        }
+    }
+    it.next().is_none()
+}
+
+/// The last whitespace-delimited word of `chars` (a trimmed-of-trailing-dot
+/// prefix), as a subslice. Empty slice when there is none.
+fn last_word(chars: &[char]) -> &[char] {
+    let mut end = chars.len();
+    while end > 0 && chars[end - 1].is_whitespace() {
+        end -= 1;
+    }
+    let mut start = end;
+    while start > 0 && !chars[start - 1].is_whitespace() {
+        start -= 1;
+    }
+    &chars[start..end]
+}
+
+fn ends_with_abbreviation(word: &[char]) -> bool {
     // The last whitespace-delimited word (sans trailing dots) must equal an
     // abbreviation exactly — suffix matching would eat words like
     // "mechanisms" (ends in "ms").
-    let Some(last) = text.split_whitespace().last() else {
+    let mut end = word.len();
+    while end > 0 && word[end - 1] == '.' {
+        end -= 1;
+    }
+    let word = &word[..end];
+    if word.is_empty() {
         return false;
-    };
-    let word = last.trim_end_matches('.').to_lowercase();
-    ABBREVIATIONS.iter().any(|a| word == *a)
+    }
+    ABBREVIATIONS.iter().any(|a| word_eq_lower(word, a))
+}
+
+/// Move a trimmed copy of `chars[start..end]` into `out`, recycling a
+/// `String` buffer from `spare` (§Perf: the split stage is allocation-free
+/// in steady state when the caller keeps `out`/`spare` across documents).
+fn push_sentence(
+    chars: &[char],
+    start: usize,
+    end: usize,
+    out: &mut Vec<String>,
+    spare: &mut Vec<String>,
+) {
+    let mut a = start;
+    let mut b = end;
+    while a < b && chars[a].is_whitespace() {
+        a += 1;
+    }
+    while b > a && chars[b - 1].is_whitespace() {
+        b -= 1;
+    }
+    if a == b {
+        return;
+    }
+    let mut s = spare.pop().unwrap_or_default();
+    s.clear();
+    s.extend(chars[a..b].iter());
+    out.push(s);
 }
 
 /// Split text into sentences (returned as owned trimmed strings, in order).
 pub fn split_sentences(text: &str) -> Vec<String> {
-    let chars: Vec<char> = text.chars().collect();
-    let mut sentences = Vec::new();
+    let mut out = Vec::new();
+    let mut chars = Vec::new();
+    let mut spare = Vec::new();
+    split_sentences_reuse(text, &mut chars, &mut out, &mut spare);
+    out
+}
+
+/// Buffer-reusing variant of [`split_sentences`]: `chars` is scratch, the
+/// previous contents of `out` are recycled through `spare` so steady-state
+/// calls perform no heap allocation. Output is identical to
+/// [`split_sentences`].
+pub fn split_sentences_reuse(
+    text: &str,
+    chars: &mut Vec<char>,
+    out: &mut Vec<String>,
+    spare: &mut Vec<String>,
+) {
+    spare.append(out);
+    chars.clear();
+    chars.extend(text.chars());
+    let chars = chars.as_slice();
     let mut start = 0usize;
 
     let mut i = 0usize;
@@ -40,7 +119,8 @@ pub fn split_sentences(text: &str) -> Vec<String> {
         if TERMINATORS.contains(&c) {
             // Consume a run of terminators/closing quotes.
             let mut j = i + 1;
-            while j < chars.len() && (TERMINATORS.contains(&chars[j]) || "\"')]”’".contains(chars[j]))
+            while j < chars.len()
+                && (TERMINATORS.contains(&chars[j]) || "\"')]”’".contains(chars[j]))
             {
                 j += 1;
             }
@@ -66,29 +146,26 @@ pub fn split_sentences(text: &str) -> Vec<String> {
                 }
             }
             if boundary && c == '.' {
-                let prefix: String = chars[start..=i.min(chars.len() - 1)].iter().collect();
-                let before_dot = prefix.trim_end_matches('.');
-                if ends_with_abbreviation(before_dot) {
+                // Trim the trailing dot run off the prefix, then inspect its
+                // last word (all on the char slice — no allocation).
+                let mut e = i + 1;
+                while e > start && chars[e - 1] == '.' {
+                    e -= 1;
+                }
+                let last = last_word(&chars[start..e]);
+                if ends_with_abbreviation(last) {
                     boundary = false;
                 }
                 // Also suppress splits after single initials ("J. Smith").
-                if let Some(last) = before_dot.split_whitespace().last() {
-                    // Single *alphabetic* char = an initial ("J. Smith");
-                    // single digits ("topic 4.") do end sentences.
-                    if last.chars().count() == 1
-                        && last.chars().next().unwrap().is_alphabetic()
-                    {
-                        boundary = false;
-                    }
+                // Single *alphabetic* char = an initial; single digits
+                // ("topic 4.") do end sentences.
+                if last.len() == 1 && last[0].is_alphabetic() {
+                    boundary = false;
                 }
             }
             if boundary {
                 i = j;
-                let s: String = chars[start..i].iter().collect();
-                let s = s.trim();
-                if !s.is_empty() {
-                    sentences.push(s.to_string());
-                }
+                push_sentence(chars, start, i, out, spare);
                 start = i;
                 continue;
             }
@@ -103,11 +180,7 @@ pub fn split_sentences(text: &str) -> Vec<String> {
                 j += 1;
             }
             if newlines >= 2 {
-                let s: String = chars[start..i].iter().collect();
-                let s = s.trim();
-                if !s.is_empty() {
-                    sentences.push(s.to_string());
-                }
+                push_sentence(chars, start, i, out, spare);
                 start = j;
                 i = j;
                 continue;
@@ -115,12 +188,7 @@ pub fn split_sentences(text: &str) -> Vec<String> {
         }
         i += 1;
     }
-    let tail: String = chars[start..].iter().collect();
-    let tail = tail.trim();
-    if !tail.is_empty() {
-        sentences.push(tail.to_string());
-    }
-    sentences
+    push_sentence(chars, start, chars.len(), out, spare);
 }
 
 #[cfg(test)]

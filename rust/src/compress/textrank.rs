@@ -4,6 +4,15 @@
 //! Graph nodes are sentences; edge weights are the classic normalized word
 //! overlap `|w_i ∩ w_j| / (ln|w_i| + ln|w_j|)`. Scores come from damped
 //! power iteration (d = 0.85) over the weighted graph.
+//!
+//! §Perf: graph construction is driven by an **inverted index** (per-word
+//! postings lists over the content-word sets) instead of all-pairs sorted
+//! set intersection: only sentence pairs that actually share a content
+//! word are ever touched, and the shared-word count *is* the overlap, so
+//! the O(S²) merge pass disappears. The previous all-pairs builder is kept
+//! behind [`SimilarityMode::AllPairs`] as the equivalence oracle — both
+//! paths emit edges in the identical (i, then ascending j) order with the
+//! identical arithmetic, so scores are bit-equal (property-tested).
 
 use crate::compress::doc::{overlap, Document};
 
@@ -14,21 +23,125 @@ const DAMPING: f64 = 0.85;
 const MAX_ITERS: usize = 20;
 const TOL: f64 = 1e-3;
 
+/// How the sentence-similarity graph is built.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SimilarityMode {
+    /// Postings-list (inverted index) construction — the fast default.
+    #[default]
+    InvertedIndex,
+    /// The naive all-pairs sorted-set intersection (equivalence oracle).
+    AllPairs,
+}
+
+/// Reusable buffers for [`centrality_into`]; every field keeps its
+/// capacity across documents (§Perf: zero steady-state allocation).
+#[derive(Clone, Debug, Default)]
+pub struct TextrankScratch {
+    /// Word id -> sentence ids containing it (ascending; len >= 2 only).
+    postings: Vec<Vec<u32>>,
+    /// Word ids whose postings list is non-empty (for O(used) clearing).
+    used_words: Vec<u32>,
+    /// Shared-word count per candidate sentence j.
+    counts: Vec<u32>,
+    /// Candidate j's touched for the current i.
+    touched: Vec<u32>,
+    /// Adjacency: edges[i] = (j, weight), later degree-normalized.
+    edges: Vec<Vec<(u32, f64)>>,
+    degree: Vec<f64>,
+    score: Vec<f64>,
+    next: Vec<f64>,
+}
+
 /// Sentence centrality scores, one per sentence (non-negative, sum ~ n).
 pub fn textrank(doc: &Document) -> Vec<f64> {
+    textrank_with_mode(doc, SimilarityMode::InvertedIndex)
+}
+
+/// The all-pairs reference path (kept for equivalence testing, §Perf).
+pub fn textrank_naive(doc: &Document) -> Vec<f64> {
+    textrank_with_mode(doc, SimilarityMode::AllPairs)
+}
+
+/// One-shot wrapper over [`centrality_into`] with a fresh scratch.
+pub fn textrank_with_mode(doc: &Document, mode: SimilarityMode) -> Vec<f64> {
+    let mut scratch = TextrankScratch::default();
+    let mut out = Vec::new();
+    centrality_into(doc, mode, &mut scratch, &mut out);
+    out
+}
+
+/// Compute centrality scores into `out` using caller-owned buffers.
+pub fn centrality_into(
+    doc: &Document,
+    mode: SimilarityMode,
+    ts: &mut TextrankScratch,
+    out: &mut Vec<f64>,
+) {
     let n = doc.n_sentences();
+    out.clear();
     if n == 0 {
-        return Vec::new();
+        return;
     }
     if n == 1 {
-        return vec![1.0];
+        out.push(1.0);
+        return;
     }
 
-    // Sparse CSR adjacency with outbound weights pre-normalized by degree:
-    // the power-iteration inner loop is then a single fused multiply-add
-    // per edge (§Perf: dense matvec was the compressor's top hotspot).
-    let mut edges: Vec<Vec<(u32, f64)>> = vec![Vec::new(); n];
-    let mut degree = vec![0.0f64; n];
+    // Sparse adjacency with outbound weights pre-normalized by degree: the
+    // power-iteration inner loop is then a single fused multiply-add per
+    // edge (§Perf: dense matvec was the compressor's top hotspot).
+    while ts.edges.len() < n {
+        ts.edges.push(Vec::new());
+    }
+    for es in ts.edges[..n].iter_mut() {
+        es.clear();
+    }
+    ts.degree.clear();
+    ts.degree.resize(n, 0.0);
+
+    match mode {
+        SimilarityMode::AllPairs => build_edges_all_pairs(doc, &mut ts.edges, &mut ts.degree),
+        SimilarityMode::InvertedIndex => build_edges_inverted(doc, ts),
+    }
+
+    // Normalize outbound weights once.
+    for (i, es) in ts.edges[..n].iter_mut().enumerate() {
+        if ts.degree[i] > 0.0 {
+            for e in es.iter_mut() {
+                e.1 /= ts.degree[i];
+            }
+        }
+    }
+
+    ts.score.clear();
+    ts.score.resize(n, 1.0);
+    ts.next.clear();
+    ts.next.resize(n, 0.0);
+    for _ in 0..MAX_ITERS {
+        ts.next.fill(1.0 - DAMPING);
+        for (j, es) in ts.edges[..n].iter().enumerate() {
+            let s = DAMPING * ts.score[j];
+            for &(i, w_norm) in es {
+                ts.next[i as usize] += w_norm * s;
+            }
+        }
+        let delta: f64 = ts
+            .score
+            .iter()
+            .zip(ts.next.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        std::mem::swap(&mut ts.score, &mut ts.next);
+        if delta < TOL * n as f64 {
+            break;
+        }
+    }
+    out.extend_from_slice(&ts.score[..n]);
+}
+
+/// The classic O(S²) builder: every pair of content-word sets is merged.
+fn build_edges_all_pairs(doc: &Document, edges: &mut [Vec<(u32, f64)>], degree: &mut [f64]) {
+    let n = doc.n_sentences();
     for i in 0..n {
         for j in (i + 1)..n {
             let (a, b) = (&doc.content_sets[i], &doc.content_sets[j]);
@@ -39,43 +152,84 @@ pub fn textrank(doc: &Document) -> Vec<f64> {
             if ov == 0 {
                 continue;
             }
-            let sim = ov as f64 / ((a.len() as f64).ln() + (b.len() as f64).ln());
-            edges[i].push((j as u32, sim));
-            edges[j].push((i as u32, sim));
-            degree[i] += sim;
-            degree[j] += sim;
+            push_edge(edges, degree, i, j, ov, a.len(), b.len());
         }
     }
-    // Normalize outbound weights once.
-    for (i, es) in edges.iter_mut().enumerate() {
-        if degree[i] > 0.0 {
-            for e in es.iter_mut() {
-                e.1 /= degree[i];
-            }
-        }
-    }
+}
 
-    let mut score = vec![1.0f64; n];
-    let mut next = vec![0.0f64; n];
-    for _ in 0..MAX_ITERS {
-        next.fill(1.0 - DAMPING);
-        for (j, es) in edges.iter().enumerate() {
-            let s = DAMPING * score[j];
-            for &(i, w_norm) in es {
-                next[i as usize] += w_norm * s;
-            }
+/// Postings-list builder: for each sentence i, walk the postings of its
+/// content words and count shared words per later sentence j — the count
+/// is exactly `|w_i ∩ w_j|` because content sets are deduplicated. Work is
+/// proportional to Σ_w df(w)² over content words (df-capped by
+/// construction) instead of S²·|set| merge steps.
+fn build_edges_inverted(doc: &Document, ts: &mut TextrankScratch) {
+    let n = doc.n_sentences();
+    for &w in &ts.used_words {
+        ts.postings[w as usize].clear();
+    }
+    ts.used_words.clear();
+    if ts.postings.len() < doc.vocab {
+        ts.postings.resize_with(doc.vocab, Vec::new);
+    }
+    for (i, set) in doc.content_sets.iter().enumerate() {
+        if set.len() < 2 {
+            continue; // ln(1) = 0 denominators — excluded from the graph
         }
-        let delta: f64 = score
-            .iter()
-            .zip(next.iter())
-            .map(|(a, b)| (a - b).abs())
-            .sum();
-        std::mem::swap(&mut score, &mut next);
-        if delta < TOL * n as f64 {
-            break;
+        for &w in set {
+            let p = &mut ts.postings[w as usize];
+            if p.is_empty() {
+                ts.used_words.push(w);
+            }
+            p.push(i as u32);
         }
     }
-    score
+    ts.counts.clear();
+    ts.counts.resize(n, 0);
+    for (i, a) in doc.content_sets.iter().enumerate() {
+        if a.len() < 2 {
+            continue;
+        }
+        ts.touched.clear();
+        for &w in a {
+            let p = &ts.postings[w as usize];
+            // Postings are ascending (built in sentence order): only the
+            // suffix strictly after i matters.
+            let start = p.partition_point(|&j| j as usize <= i);
+            for &j in &p[start..] {
+                if ts.counts[j as usize] == 0 {
+                    ts.touched.push(j);
+                }
+                ts.counts[j as usize] += 1;
+            }
+        }
+        // Ascending j reproduces the all-pairs emission order, so float
+        // accumulation into `degree` is bit-identical.
+        ts.touched.sort_unstable();
+        for &jt in &ts.touched {
+            let j = jt as usize;
+            let ov = ts.counts[j] as usize;
+            ts.counts[j] = 0;
+            let b_len = doc.content_sets[j].len();
+            push_edge(&mut ts.edges, &mut ts.degree, i, j, ov, a.len(), b_len);
+        }
+    }
+}
+
+#[inline]
+fn push_edge(
+    edges: &mut [Vec<(u32, f64)>],
+    degree: &mut [f64],
+    i: usize,
+    j: usize,
+    ov: usize,
+    a_len: usize,
+    b_len: usize,
+) {
+    let sim = ov as f64 / ((a_len as f64).ln() + (b_len as f64).ln());
+    edges[i].push((j as u32, sim));
+    edges[j].push((i as u32, sim));
+    degree[i] += sim;
+    degree[j] += sim;
 }
 
 #[cfg(test)]
@@ -135,5 +289,33 @@ mod tests {
         let text = "Pools split traffic. Traffic shapes pools. Compression shifts boundaries.";
         let d = Document::parse(text);
         assert_eq!(textrank(&d), textrank(&d));
+    }
+
+    #[test]
+    fn inverted_index_is_bit_identical_to_all_pairs() {
+        for text in [
+            "Pools split traffic. Traffic shapes pools. Compression shifts boundaries.",
+            "Alpha beta gamma delta. Epsilon zeta eta theta.",
+            "One. Two words here. A much longer sentence about pools and traffic \
+             and boundaries. Traffic and pools again. Boundaries of pools.",
+        ] {
+            let d = Document::parse(text);
+            assert_eq!(textrank(&d), textrank_naive(&d), "text={text:?}");
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let mut ts = TextrankScratch::default();
+        let mut out = Vec::new();
+        for k in 0..3 {
+            let text = (0..(20 + 10 * k))
+                .map(|i| format!("Sentence {i} covers topic {} deeply.", i % 4))
+                .collect::<Vec<_>>()
+                .join(" ");
+            let d = Document::parse(&text);
+            centrality_into(&d, SimilarityMode::InvertedIndex, &mut ts, &mut out);
+            assert_eq!(out, textrank_naive(&d), "doc {k}");
+        }
     }
 }

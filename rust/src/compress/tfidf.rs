@@ -11,19 +11,38 @@ use crate::compress::doc::Document;
 
 /// Per-sentence mean TF-IDF salience.
 pub fn sentence_scores(doc: &Document) -> Vec<f64> {
+    let mut df = Vec::new();
+    let mut tf = Vec::new();
+    let mut out = Vec::new();
+    sentence_scores_into(doc, &mut df, &mut tf, &mut out);
+    out
+}
+
+/// Buffer-reusing variant of [`sentence_scores`] (§Perf): `df`/`tf` are
+/// caller-owned counting scratch, results land in `out`. Output is
+/// identical to [`sentence_scores`].
+pub fn sentence_scores_into(
+    doc: &Document,
+    df: &mut Vec<u32>,
+    tf: &mut Vec<u32>,
+    out: &mut Vec<f64>,
+) {
+    out.clear();
     let n = doc.n_sentences();
     if n == 0 {
-        return Vec::new();
+        return;
     }
     // Document frequency per word id.
-    let mut df = vec![0u32; doc.vocab];
+    df.clear();
+    df.resize(doc.vocab, 0);
     for set in &doc.word_sets {
         for &w in set {
             df[w as usize] += 1;
         }
     }
     // Term frequency over the whole document.
-    let mut tf = vec![0u32; doc.vocab];
+    tf.clear();
+    tf.resize(doc.vocab, 0);
     let mut total_words = 0u64;
     for seq in &doc.word_seqs {
         for &w in seq {
@@ -33,22 +52,19 @@ pub fn sentence_scores(doc: &Document) -> Vec<f64> {
     }
     let idf = |w: u32| ((n as f64 + 1.0) / (df[w as usize] as f64 + 0.5)).ln();
 
-    doc.word_seqs
-        .iter()
-        .map(|seq| {
-            if seq.is_empty() {
-                return 0.0;
-            }
-            let sum: f64 = seq
-                .iter()
-                .map(|&w| {
-                    let tfw = tf[w as usize] as f64 / total_words.max(1) as f64;
-                    tfw * idf(w)
-                })
-                .sum();
-            sum / seq.len() as f64
-        })
-        .collect()
+    out.extend(doc.word_seqs.iter().map(|seq| {
+        if seq.is_empty() {
+            return 0.0;
+        }
+        let sum: f64 = seq
+            .iter()
+            .map(|&w| {
+                let tfw = tf[w as usize] as f64 / total_words.max(1) as f64;
+                tfw * idf(w)
+            })
+            .sum();
+        sum / seq.len() as f64
+    }));
 }
 
 /// Sparse TF-IDF vector for a full text against its own sentence-level IDF.

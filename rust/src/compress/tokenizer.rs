@@ -39,39 +39,51 @@ fn word_tokens(word: &str) -> u32 {
     tokens.max(1)
 }
 
-/// Lowercased alphanumeric words (the unit for TextRank / TF-IDF / ROUGE).
-pub fn words(text: &str) -> Vec<String> {
-    let mut out = Vec::new();
-    let mut cur = String::new();
+/// Visit each lowercased alphanumeric word of `text` without allocating a
+/// `String` per word: `buf` is a caller-owned scratch that is reused for
+/// every word (the gateway's `CompressScratch` threads one through the
+/// whole pipeline, §Perf). Word boundaries and lowercasing are identical
+/// to [`words`].
+pub fn for_each_word(text: &str, buf: &mut String, mut f: impl FnMut(&str)) {
+    buf.clear();
     for c in text.chars() {
         if c.is_alphanumeric() {
             for lc in c.to_lowercase() {
-                cur.push(lc);
+                buf.push(lc);
             }
-        } else if !cur.is_empty() {
-            out.push(std::mem::take(&mut cur));
+        } else if !buf.is_empty() {
+            f(buf.as_str());
+            buf.clear();
         }
     }
-    if !cur.is_empty() {
-        out.push(cur);
+    if !buf.is_empty() {
+        f(buf.as_str());
+        buf.clear();
     }
+}
+
+/// Lowercased alphanumeric words (the unit for TextRank / TF-IDF / ROUGE).
+pub fn words(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut buf = String::new();
+    for_each_word(text, &mut buf, |w| out.push(w.to_string()));
     out
 }
 
 /// Map text to live-path token ids (hash into the scaled-down model's
 /// vocabulary). Used by the embedding fidelity proxy and the e2e example.
 pub fn hash_tokens(text: &str, vocab: u32) -> Vec<i32> {
-    words(text)
-        .iter()
-        .map(|w| {
-            let mut h = 1469598103934665603u64; // FNV-1a
-            for b in w.as_bytes() {
-                h ^= *b as u64;
-                h = h.wrapping_mul(1099511628211);
-            }
-            (h % vocab as u64) as i32
-        })
-        .collect()
+    let mut out = Vec::new();
+    let mut buf = String::new();
+    for_each_word(text, &mut buf, |w| {
+        let mut h = 1469598103934665603u64; // FNV-1a
+        for b in w.as_bytes() {
+            h ^= *b as u64;
+            h = h.wrapping_mul(1099511628211);
+        }
+        out.push((h % vocab as u64) as i32);
+    });
+    out
 }
 
 /// Bytes-per-token of a text (the quantity the router's EMA tracks, §2.1).
@@ -124,6 +136,22 @@ mod tests {
     #[test]
     fn words_lowercase_alnum() {
         assert_eq!(words("The KV-cache, 320KB!"), vec!["the", "kv", "cache", "320kb"]);
+    }
+
+    #[test]
+    fn for_each_word_matches_words() {
+        for text in [
+            "",
+            "one",
+            "The KV-cache, 320KB!",
+            "Ünïcode Ärger; straße 12.5x",
+            "trailing word",
+        ] {
+            let mut seen = Vec::new();
+            let mut buf = String::new();
+            for_each_word(text, &mut buf, |w| seen.push(w.to_string()));
+            assert_eq!(seen, words(text), "text={text:?}");
+        }
     }
 
     #[test]

@@ -213,7 +213,12 @@ pub struct DesValidation {
 
 /// Run the Table-5 validation for one workload's PR (gamma = 1) fleet with
 /// ~`n_per_pool` DES requests per pool.
-pub fn table5_validate(w: &Workload, lambda: f64, n_per_pool: usize, seed: u64) -> (Vec<DesValidation>, FleetSimResult) {
+pub fn table5_validate(
+    w: &Workload,
+    lambda: f64,
+    n_per_pool: usize,
+    seed: u64,
+) -> (Vec<DesValidation>, FleetSimResult) {
     let input = PlanInput::new(w.clone(), lambda);
     let plan = plan_fleet(&input, w.b_short, 1.0).expect("PR plan");
     // Scale total samples so (a) the smaller pool still sees ~n_per_pool
@@ -261,6 +266,34 @@ pub fn table5_validate(w: &Workload, lambda: f64, n_per_pool: usize, seed: u64) 
         });
     }
     (out, sim)
+}
+
+/// Table-5 validation across independent DES replications (distinct
+/// seeds), one scoped worker per replication (§Perf: replication wall time
+/// is the per-seed maximum instead of the sum). Each entry is bit-identical
+/// to a sequential `table5_validate` call with the same seed.
+pub fn table5_validate_replicated(
+    w: &Workload,
+    lambda: f64,
+    n_per_pool: usize,
+    seeds: &[u64],
+) -> Vec<(Vec<DesValidation>, FleetSimResult)> {
+    if seeds.len() <= 1 {
+        return seeds
+            .iter()
+            .map(|&s| table5_validate(w, lambda, n_per_pool, s))
+            .collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = seeds
+            .iter()
+            .map(|&seed| scope.spawn(move || table5_validate(w, lambda, n_per_pool, seed)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("DES validation replication panicked"))
+            .collect()
+    })
 }
 
 /// Paper Table 5: analytical vs DES GPU utilization (PR fleet, gamma = 1).

@@ -45,7 +45,7 @@ pub fn route_trace(
     let mut n_compressed = 0u64;
     for (i, t) in arrivals.take(n).enumerate() {
         let r = w.sample_request(i as u64, t, &mut rng);
-        let band_hi = (gamma * b_short as f64).floor() as u32;
+        let band_hi = crate::compress::gate::band_hi(b_short, gamma);
         if r.l_total <= b_short {
             short.push(SimRequest {
                 arrival_s: t,
@@ -104,15 +104,29 @@ pub fn simulate_fleet(
     let warm = |svc: &Option<crate::queueing::service::ServiceStats>| {
         svc.as_ref().map(|s| 3.0 * s.e_s).unwrap_or(0.0)
     };
-    let short = (plan.short.n_gpus > 0 && !routed.short.is_empty()).then(|| {
-        let mut cfg = SimConfig::new(g.clone(), plan.short.n_gpus, g.n_max(plan.b_short));
-        cfg.warmup_s = warm(&plan.short.svc);
-        simulate_pool(&cfg, &routed.short)
-    });
-    let long = (plan.long.n_gpus > 0 && !routed.long.is_empty()).then(|| {
-        let mut cfg = SimConfig::new(g.clone(), plan.long.n_gpus, g.n_max_long());
-        cfg.warmup_s = warm(&plan.long.svc);
-        simulate_pool(&cfg, &routed.long)
+    // The two pools' traces are disjoint and their simulations independent,
+    // so they run on scoped threads (§Perf: halves Table-5 wall time);
+    // per-pool results are bit-identical to the sequential run.
+    let (short, long) = std::thread::scope(|scope| {
+        let hs = (plan.short.n_gpus > 0 && !routed.short.is_empty()).then(|| {
+            scope.spawn(|| {
+                let mut cfg =
+                    SimConfig::new(g.clone(), plan.short.n_gpus, g.n_max(plan.b_short));
+                cfg.warmup_s = warm(&plan.short.svc);
+                simulate_pool(&cfg, &routed.short)
+            })
+        });
+        let hl = (plan.long.n_gpus > 0 && !routed.long.is_empty()).then(|| {
+            scope.spawn(|| {
+                let mut cfg = SimConfig::new(g.clone(), plan.long.n_gpus, g.n_max_long());
+                cfg.warmup_s = warm(&plan.long.svc);
+                simulate_pool(&cfg, &routed.long)
+            })
+        });
+        (
+            hs.map(|h| h.join().expect("short-pool DES panicked")),
+            hl.map(|h| h.join().expect("long-pool DES panicked")),
+        )
     });
     FleetSimResult {
         short,

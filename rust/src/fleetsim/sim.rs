@@ -260,6 +260,30 @@ pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     }
 }
 
+/// Run independent replications of one pool configuration in parallel
+/// (§Perf): each trace is simulated on its own scoped thread. Results are
+/// returned in input order and each is bit-identical to a sequential
+/// `simulate_pool` call — the simulator is deterministic and shares no
+/// mutable state across replications.
+pub fn simulate_pool_replications(
+    cfg: &SimConfig,
+    traces: &[Vec<SimRequest>],
+) -> Vec<SimResult> {
+    if traces.len() <= 1 {
+        return traces.iter().map(|t| simulate_pool(cfg, t)).collect();
+    }
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = traces
+            .iter()
+            .map(|t| scope.spawn(move || simulate_pool(cfg, t)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("DES replication panicked"))
+            .collect()
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -369,6 +393,21 @@ mod tests {
         let mut f = full.ttft;
         let mut o = occ.ttft;
         assert!(o.p50() < f.p50());
+    }
+
+    #[test]
+    fn parallel_replications_match_sequential() {
+        let cfg = SimConfig::new(gpu(), 2, 16);
+        let traces: Vec<Vec<SimRequest>> = (0..4)
+            .map(|k| poisson_requests(8.0, 800, 900, 40, 100 + k))
+            .collect();
+        let par = simulate_pool_replications(&cfg, &traces);
+        assert_eq!(par.len(), 4);
+        for (p, t) in par.iter().zip(&traces) {
+            let seq = simulate_pool(&cfg, t);
+            assert_eq!(p.utilization, seq.utilization);
+            assert_eq!(p.completed, seq.completed);
+        }
     }
 
     #[test]

@@ -9,5 +9,6 @@ pub mod sweep;
 
 pub use sweep::{
     candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_homogeneous,
-    sweep_full, sweep_gamma, Plan, PlanInput, PoolPlan,
+    sweep_full, sweep_full_serial, sweep_gamma, sweep_gamma_serial, CalibCache, Plan,
+    PlanInput, PoolPlan,
 };

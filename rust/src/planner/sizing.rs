@@ -77,7 +77,7 @@ pub fn min_gpus(
     let hi = (10.0 * a.ceil()).max(lo as f64 + 1.0) as u64;
 
     let feasible = |n: u64| -> bool {
-        let p = PoolModel::new(lambda, n, svc.clone());
+        let p = PoolModel::new(lambda, n, *svc);
         p.utilization() <= rho_max && p.w99() <= budget
     };
 
@@ -130,7 +130,7 @@ mod tests {
     fn result_is_feasible_and_minimal() {
         let s = svc(16);
         let n = min_gpus(500.0, &s, 0.5, 0.85, false).unwrap();
-        let at = |k: u64| PoolModel::new(500.0, k, s.clone());
+        let at = |k: u64| PoolModel::new(500.0, k, s);
         assert!(at(n).utilization() <= 0.85);
         // Minimality: one fewer GPU must violate the cap or the wait budget.
         if n > 1 {
@@ -194,7 +194,7 @@ mod tests {
         let start = (lambda / s.mu_gpu()).ceil() as u64 + 1;
         let mut last = f64::INFINITY;
         for n in start..start + 40 {
-            let w = PoolModel::new(lambda, n, s.clone()).w99();
+            let w = PoolModel::new(lambda, n, s).w99();
             assert!(w <= last + 1e-12, "W99 must not increase with n");
             last = w;
         }

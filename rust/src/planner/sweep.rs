@@ -13,13 +13,14 @@
 //! gamma. `plan_fleet_no_recalibration` exists precisely to reproduce that
 //! error in the ablation bench.
 
-use std::collections::HashMap;
+use std::sync::Mutex;
 
 use crate::config::{GpuProfile, PlannerConfig, Slo};
 use crate::planner::cost::fleet_cost_yr;
 use crate::planner::sizing::{min_gpus, SizingError};
 use crate::queueing::mgc::PoolModel;
 use crate::queueing::service::{calibrate_quadrature, ServiceStats};
+use crate::util::hash::FxHashMap;
 use crate::workload::cdf::{LengthDist, TruncatedDist};
 use crate::workload::traces::Workload;
 
@@ -28,7 +29,39 @@ use crate::workload::traces::Workload;
 /// the long pool's only on gamma*B, so most (B, gamma) cells share
 /// calibrations (§Perf: this plus quadrature brings the full sweep from
 /// ~430 ms to low single-digit ms).
-type CalibCache = HashMap<(u64, u64, u32), ServiceStats>;
+///
+/// The map is FxHash-keyed (integer tuple keys don't need SipHash) and
+/// Mutex-wrapped so one merged cache is shared across the sweep's worker
+/// threads: calibration is deterministic, so whichever worker computes a
+/// cell first inserts the exact value every other worker would have —
+/// results are bit-identical to the serial sweep regardless of schedule.
+#[derive(Debug, Default)]
+pub struct CalibCache {
+    map: Mutex<FxHashMap<(u64, u64, u32), ServiceStats>>,
+}
+
+impl CalibCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    fn get(&self, key: &(u64, u64, u32)) -> Option<ServiceStats> {
+        self.map.lock().expect("calib cache poisoned").get(key).copied()
+    }
+
+    fn insert(&self, key: (u64, u64, u32), svc: ServiceStats) {
+        self.map.lock().expect("calib cache poisoned").insert(key, svc);
+    }
+
+    /// Number of distinct calibrations memoized (diagnostics).
+    pub fn len(&self) -> usize {
+        self.map.lock().expect("calib cache poisoned").len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
 
 /// Planner inputs: one workload at one arrival rate under one GPU profile.
 #[derive(Clone, Debug)]
@@ -74,10 +107,12 @@ impl PoolPlan {
     }
 
     pub fn model(&self) -> Option<PoolModel> {
+        // `ServiceStats` is Copy: no clone per call (rho_ana/ttft_p99 used
+        // to re-clone the stats on every diagnostic read).
         self.svc
             .as_ref()
             .filter(|_| self.n_gpus > 0)
-            .map(|s| PoolModel::new(self.lambda, self.n_gpus, s.clone()))
+            .map(|s| PoolModel::new(self.lambda, self.n_gpus, *s))
     }
 
     /// Analytical GPU utilization rho_ana (Table 5).
@@ -111,10 +146,13 @@ impl Plan {
 }
 
 /// Calibrate (with memoization) the service stats for `F` restricted to
-/// `[lo, hi]` at `n_slots` slots per GPU.
+/// `[lo, hi]` at `n_slots` slots per GPU. The computation happens outside
+/// the cache lock; a racing duplicate insert writes the identical value
+/// (calibration is deterministic), so sharing the cache across threads
+/// cannot change results.
 fn calibrated(
     input: &PlanInput,
-    cache: &mut Option<&mut CalibCache>,
+    cache: Option<&CalibCache>,
     lo: f64,
     hi: f64,
     n_slots: u32,
@@ -122,7 +160,7 @@ fn calibrated(
     let key = (lo.to_bits(), hi.to_bits(), n_slots);
     if let Some(c) = cache {
         if let Some(s) = c.get(&key) {
-            return s.clone();
+            return s;
         }
     }
     let w = &input.workload;
@@ -132,14 +170,14 @@ fn calibrated(
     let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
     let svc = calibrate_quadrature(&dist, &w.output, &input.gpu, n_slots, len_points, 8);
     if let Some(c) = cache {
-        c.insert(key, svc.clone());
+        c.insert(key, svc);
     }
     svc
 }
 
 /// Plan one (B, gamma) cell of Algorithm 1.
 pub fn plan_fleet(input: &PlanInput, b_short: u32, gamma: f64) -> Result<Plan, SizingError> {
-    plan_cell(input, b_short, gamma, true, &mut None)
+    plan_cell(input, b_short, gamma, true, None)
 }
 
 /// Ablation: skip the long-pool post-compression recalibration — the long
@@ -150,7 +188,7 @@ pub fn plan_fleet_no_recalibration(
     b_short: u32,
     gamma: f64,
 ) -> Result<Plan, SizingError> {
-    plan_cell(input, b_short, gamma, false, &mut None)
+    plan_cell(input, b_short, gamma, false, None)
 }
 
 fn plan_cell(
@@ -158,7 +196,7 @@ fn plan_cell(
     b_short: u32,
     gamma: f64,
     recalibrate_long: bool,
-    cache: &mut Option<&mut CalibCache>,
+    cache: Option<&CalibCache>,
 ) -> Result<Plan, SizingError> {
     assert!(gamma >= 1.0);
     let w = &input.workload;
@@ -265,14 +303,65 @@ pub fn plan_homogeneous(input: &PlanInput) -> Result<Plan, SizingError> {
     })
 }
 
-/// Sweep gamma at a fixed boundary (Table 3's FleetOpt rows: the workload's
-/// B_short with gamma* from the sweep). Ties break toward smaller gamma so
-/// "compress more" must strictly pay to be chosen.
-pub fn sweep_gamma(input: &PlanInput, b_short: u32) -> Result<Plan, SizingError> {
-    let mut cache = CalibCache::new();
+/// Number of worker threads for a sweep of `cells` cells. Capped so each
+/// worker amortizes its spawn cost over >= 4 cells — the full sweep is
+/// only milliseconds, so oversharding on many-core hosts would give the
+/// gain back to thread startup.
+fn sweep_workers(cells: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(cells.div_ceil(4))
+        .min(16)
+        .max(1)
+}
+
+/// Evaluate Algorithm-1 cells (recalibrating long pools), optionally
+/// sharded across `std::thread::scope` workers against one merged
+/// calibration cache (§Perf). Results are returned in input order and are
+/// bit-identical to the serial evaluation: each cell's plan is a
+/// deterministic function of `input` alone (the shared cache only memoizes
+/// values every worker would compute identically).
+fn plan_cells(
+    input: &PlanInput,
+    cache: &CalibCache,
+    cells: &[(u32, f64)],
+    parallel: bool,
+) -> Result<Vec<Plan>, SizingError> {
+    let workers = if parallel { sweep_workers(cells.len()) } else { 1 };
+    if workers <= 1 {
+        return cells
+            .iter()
+            .map(|&(b, gamma)| plan_cell(input, b, gamma, true, Some(cache)))
+            .collect();
+    }
+    let chunk_len = cells.len().div_ceil(workers);
+    let shards: Result<Vec<Vec<Plan>>, SizingError> = std::thread::scope(|scope| {
+        let handles: Vec<_> = cells
+            .chunks(chunk_len)
+            .map(|shard| {
+                scope.spawn(move || {
+                    shard
+                        .iter()
+                        .map(|&(b, gamma)| plan_cell(input, b, gamma, true, Some(cache)))
+                        .collect::<Result<Vec<Plan>, SizingError>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    Ok(shards?.into_iter().flatten().collect())
+}
+
+/// The serial best-plan selection rule: first strictly-better (by > 1e-9)
+/// cell in grid order wins, so ties break toward earlier cells — smaller B,
+/// then smaller gamma ("compress more" must strictly pay to be chosen).
+fn select_best(plans: Vec<Plan>) -> Option<Plan> {
     let mut best: Option<Plan> = None;
-    for &gamma in &input.cfg.gammas {
-        let plan = plan_cell(input, b_short, gamma, true, &mut Some(&mut cache))?;
+    for plan in plans {
         let better = match &best {
             None => true,
             Some(b) => plan.cost_yr < b.cost_yr - 1e-9,
@@ -281,7 +370,31 @@ pub fn sweep_gamma(input: &PlanInput, b_short: u32) -> Result<Plan, SizingError>
             best = Some(plan);
         }
     }
-    Ok(best.expect("gamma grid must be non-empty"))
+    best
+}
+
+/// Sweep gamma at a fixed boundary (Table 3's FleetOpt rows: the workload's
+/// B_short with gamma* from the sweep). Ties break toward smaller gamma so
+/// "compress more" must strictly pay to be chosen. Runs the gamma grid in
+/// parallel; results are bit-identical to [`sweep_gamma_serial`].
+pub fn sweep_gamma(input: &PlanInput, b_short: u32) -> Result<Plan, SizingError> {
+    sweep_gamma_with(input, b_short, true)
+}
+
+/// Single-threaded [`sweep_gamma`] (equivalence oracle / small hosts).
+pub fn sweep_gamma_serial(input: &PlanInput, b_short: u32) -> Result<Plan, SizingError> {
+    sweep_gamma_with(input, b_short, false)
+}
+
+fn sweep_gamma_with(
+    input: &PlanInput,
+    b_short: u32,
+    parallel: bool,
+) -> Result<Plan, SizingError> {
+    let cache = CalibCache::new();
+    let cells: Vec<(u32, f64)> = input.cfg.gammas.iter().map(|&g| (b_short, g)).collect();
+    let plans = plan_cells(input, &cache, &cells, parallel)?;
+    Ok(select_best(plans).expect("gamma grid must be non-empty"))
 }
 
 /// Hardware-feasible candidate boundaries (paper §6 "Candidate set B"):
@@ -307,27 +420,42 @@ pub fn candidate_boundaries(input: &PlanInput) -> Vec<u32> {
 
 /// Full Algorithm 1: outer sweep over candidate boundaries, inner over
 /// gamma. Returns the global optimum and the per-(B, gamma) cost grid for
-/// reporting.
+/// reporting. The (B, gamma) grid is sharded across scoped threads with a
+/// merged calibration cache (§Perf); grid order, cost values, and the
+/// selected optimum are bit-identical to [`sweep_full_serial`]
+/// (property-tested).
 pub fn sweep_full(input: &PlanInput) -> Result<(Plan, Vec<(u32, f64, f64)>), SizingError> {
+    sweep_full_with(input, true)
+}
+
+/// Single-threaded [`sweep_full`] (equivalence oracle / small hosts).
+pub fn sweep_full_serial(
+    input: &PlanInput,
+) -> Result<(Plan, Vec<(u32, f64, f64)>), SizingError> {
+    sweep_full_with(input, false)
+}
+
+fn sweep_full_with(
+    input: &PlanInput,
+    parallel: bool,
+) -> Result<(Plan, Vec<(u32, f64, f64)>), SizingError> {
     let candidates = candidate_boundaries(input);
     assert!(!candidates.is_empty(), "no feasible boundaries");
-    let mut cache = CalibCache::new();
-    let mut grid = Vec::with_capacity(candidates.len() * input.cfg.gammas.len());
-    let mut best: Option<Plan> = None;
+    let cache = CalibCache::new();
+    let mut cells = Vec::with_capacity(candidates.len() * input.cfg.gammas.len());
     for &b in &candidates {
         for &gamma in &input.cfg.gammas {
-            let plan = plan_cell(input, b, gamma, true, &mut Some(&mut cache))?;
-            grid.push((b, gamma, plan.cost_yr));
-            let better = match &best {
-                None => true,
-                Some(bb) => plan.cost_yr < bb.cost_yr - 1e-9,
-            };
-            if better {
-                best = Some(plan);
-            }
+            cells.push((b, gamma));
         }
     }
-    Ok((best.unwrap(), grid))
+    let plans = plan_cells(input, &cache, &cells, parallel)?;
+    let grid: Vec<(u32, f64, f64)> = cells
+        .iter()
+        .zip(&plans)
+        .map(|(&(b, gamma), plan)| (b, gamma, plan.cost_yr))
+        .collect();
+    let best = select_best(plans).expect("non-empty grid");
+    Ok((best, grid))
 }
 
 #[cfg(test)]
@@ -430,6 +558,23 @@ mod tests {
         let (best, grid) = sweep_full(&input).unwrap();
         assert!(best.cost_yr <= fixed.cost_yr + 1e-9);
         assert!(grid.len() >= 11);
+    }
+
+    #[test]
+    fn parallel_sweeps_bit_identical_to_serial() {
+        let input = azure_input();
+        let (bp, gp) = sweep_full(&input).unwrap();
+        let (bs, gs) = sweep_full_serial(&input).unwrap();
+        assert_eq!(gp, gs, "cost grids must match bit-for-bit");
+        assert_eq!(bp.cost_yr, bs.cost_yr);
+        assert_eq!((bp.b_short, bp.gamma), (bs.b_short, bs.gamma));
+        assert_eq!(bp.short.n_gpus, bs.short.n_gpus);
+        assert_eq!(bp.long.n_gpus, bs.long.n_gpus);
+
+        let fp = sweep_gamma(&input, 4096).unwrap();
+        let fs = sweep_gamma_serial(&input, 4096).unwrap();
+        assert_eq!(fp.cost_yr, fs.cost_yr);
+        assert_eq!(fp.gamma, fs.gamma);
     }
 
     #[test]

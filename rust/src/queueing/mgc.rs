@@ -140,7 +140,7 @@ mod tests {
     #[test]
     fn adding_gpus_never_hurts() {
         let base = pool(500.0, 3, 128);
-        let more = PoolModel::new(500.0, 6, base.svc.clone());
+        let more = PoolModel::new(500.0, 6, base.svc);
         assert!(more.w99() <= base.w99());
         assert!(more.utilization() < base.utilization());
     }

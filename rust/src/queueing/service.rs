@@ -28,8 +28,10 @@ pub fn prefill_time_s(l_in: u32, g: &GpuProfile, n_slots: u32) -> f64 {
     (l_in as u64).div_ceil(g.chunk as u64) as f64 * g.t_iter_s(n_slots)
 }
 
-/// Calibrated service statistics for one pool.
-#[derive(Clone, Debug)]
+/// Calibrated service statistics for one pool. Plain scalar data: `Copy`,
+/// so passing it around costs a register copy — no clones on the planner's
+/// per-cell hot path (§Perf).
+#[derive(Clone, Copy, Debug)]
 pub struct ServiceStats {
     /// Mean slot occupancy E[S], seconds.
     pub e_s: f64,

@@ -4,8 +4,9 @@
 //! requests are extractively compressed to `T_c = B_short − L_out` and
 //! re-routed short (the "virtual pool"); everything else goes long.
 
-use crate::compress::extractive::compress;
+use crate::compress::extractive::compress_with;
 use crate::compress::gate::{compression_budget, gate, GateDecision};
+use crate::compress::scratch::CompressScratch;
 use crate::compress::tokenizer::count_tokens;
 use crate::router::classify::classify;
 use crate::router::estimator::TokenEstimator;
@@ -41,10 +42,15 @@ pub struct RoutedRequest {
 
 /// The stateful gateway (one per deployment; EMA state is shared across
 /// requests exactly as in §2.1).
+///
+/// §Perf: the gateway owns a [`CompressScratch`] so every C&R compression
+/// reuses the same parse/score/select buffers — steady-state routing
+/// performs no heap allocation beyond the returned `RoutedRequest`.
 #[derive(Debug)]
 pub struct Gateway {
     pub cfg: GatewayConfig,
     pub estimator: TokenEstimator,
+    scratch: CompressScratch,
     pub n_routed_short: u64,
     pub n_routed_long: u64,
     pub n_compressed: u64,
@@ -56,6 +62,7 @@ impl Gateway {
         Gateway {
             cfg,
             estimator: TokenEstimator::default(),
+            scratch: CompressScratch::new(),
             n_routed_short: 0,
             n_routed_long: 0,
             n_compressed: 0,
@@ -94,7 +101,7 @@ impl Gateway {
             GateDecision::CompressAndRoute => {
                 match compression_budget(self.cfg.b_short, max_output_tokens) {
                     Some(budget) => {
-                        let c = compress(text, budget);
+                        let c = compress_with(&mut self.scratch, text, budget);
                         if c.ok {
                             self.n_compressed += 1;
                             RoutedRequest {
@@ -150,6 +157,30 @@ impl Gateway {
             compressed: false,
             gateway_s: 0.0,
         }
+    }
+
+    /// Route a batch of `(text, max_output_tokens)` requests, streaming
+    /// each result to `sink` **as soon as it is routed** — so a dispatcher
+    /// can enqueue request k while request k+1 is still being compressed
+    /// (no head-of-line blocking on the batch). Routing semantics are
+    /// identical to calling [`Gateway::route`] per item in order; the
+    /// batch form keeps one warm pass over the shared scratch per due
+    /// window (§Perf) and is what `coordinator::serve` uses.
+    pub fn route_batch_with(
+        &mut self,
+        batch: &[(&str, u32)],
+        mut sink: impl FnMut(usize, RoutedRequest),
+    ) {
+        for (k, &(text, max_output)) in batch.iter().enumerate() {
+            sink(k, self.route(text, max_output));
+        }
+    }
+
+    /// Collecting wrapper over [`Gateway::route_batch_with`].
+    pub fn route_batch(&mut self, batch: &[(&str, u32)]) -> Vec<RoutedRequest> {
+        let mut out = Vec::with_capacity(batch.len());
+        self.route_batch_with(batch, |_, routed| out.push(routed));
+        out
     }
 
     /// Realized alpha' (Eq. 14 diagnostics).
@@ -272,6 +303,27 @@ mod tests {
         assert_eq!(g.n_routed_short, 5);
         assert_eq!(g.n_routed_long, 1);
         assert!((g.alpha_prime() - 5.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn route_batch_matches_sequential_route() {
+        let mut rng = Rng::new(9);
+        let texts: Vec<String> = (0..6)
+            .map(|i| doc(if i % 2 == 0 { 400 } else { 2600 }, &mut rng))
+            .collect();
+        let batch: Vec<(&str, u32)> = texts.iter().map(|t| (t.as_str(), 64)).collect();
+        let mut g1 = gw(2048, true);
+        let routed = g1.route_batch(&batch);
+        let mut g2 = gw(2048, true);
+        for (item, r1) in batch.iter().zip(&routed) {
+            let r2 = g2.route(item.0, item.1);
+            assert_eq!(r1.pool, r2.pool);
+            assert_eq!(r1.text, r2.text);
+            assert_eq!(r1.compressed, r2.compressed);
+            assert_eq!(r1.prompt_tokens, r2.prompt_tokens);
+        }
+        assert_eq!(g1.n_compressed, g2.n_compressed);
+        assert_eq!(g1.n_routed_short, g2.n_routed_short);
     }
 
     #[test]

@@ -1,8 +1,18 @@
 //! Runtime: PJRT CPU client loading the AOT HLO-text artifacts (L2 model +
 //! L1 Pallas kernels) and executing prefill/decode/embed from the Rust hot
 //! path. Python never runs at request time.
+//!
+//! The real engine needs the `xla` crate and is gated behind the `pjrt`
+//! feature; default builds get an API-compatible stub whose `load` fails
+//! (offline images do not vendor the PJRT bindings — see `stub.rs`).
 
 pub mod artifacts;
+
+#[cfg(feature = "pjrt")]
+pub mod engine;
+
+#[cfg(not(feature = "pjrt"))]
+#[path = "stub.rs"]
 pub mod engine;
 
 pub use artifacts::{Manifest, PoolKind, PoolShape};

@@ -1,0 +1,116 @@
+//! Stub model runtime, compiled when the `pjrt` feature is off.
+//!
+//! The `xla` crate (PJRT bindings) is not vendored in offline build
+//! images, so the default build substitutes this module for
+//! `runtime::engine` with an identical API surface: `ModelRuntime::load`
+//! fails with a descriptive error, and every execution entry point is
+//! unreachable because no `ModelRuntime` value can ever be constructed.
+//! The analytical planner, DES, compressor, and gateway are unaffected —
+//! only the live prefill/decode/embed path needs the real runtime.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::artifacts::{Manifest, PoolKind};
+
+/// Output of one decode/prefill call (mirrors `engine::StepOutput`).
+pub struct StepOutput {
+    /// Row-major logits [n, vocab] (n = slots for decode, chunk for prefill).
+    pub logits: Vec<f32>,
+    /// Updated key cache (same layout as the input).
+    pub k_cache: Vec<f32>,
+    /// Updated value cache.
+    pub v_cache: Vec<f32>,
+}
+
+/// The process-wide model runtime (stub: cannot be constructed).
+pub struct ModelRuntime {
+    pub manifest: Manifest,
+    _unconstructible: (),
+}
+
+impl ModelRuntime {
+    /// Always fails: the PJRT runtime requires the `pjrt` feature.
+    pub fn load(_dir: impl AsRef<std::path::Path>) -> Result<ModelRuntime> {
+        bail!(
+            "fleetopt was built without the `pjrt` feature: the PJRT/XLA \
+             runtime is unavailable; rebuild with `--features pjrt` (and the \
+             `xla` dependency) to run the live serving path"
+        )
+    }
+
+    pub fn device_count(&self) -> usize {
+        0
+    }
+
+    /// Per-slot KV cache length in f32 scalars: L * C * H * D.
+    pub fn slot_cache_len(&self, kind: PoolKind) -> usize {
+        let m = &self.manifest.model;
+        let p = self.manifest.pool(kind);
+        m.n_layers * p.ctx * m.n_heads * m.head_dim
+    }
+
+    pub fn prefill(
+        &self,
+        _kind: PoolKind,
+        _k_cache: &[f32],
+        _v_cache: &[f32],
+        _tokens: &[i32],
+        _pos_base: i32,
+    ) -> Result<StepOutput> {
+        bail!("pjrt feature disabled")
+    }
+
+    pub fn decode(
+        &self,
+        _kind: PoolKind,
+        _k_cache: &[f32],
+        _v_cache: &[f32],
+        _tokens: &[i32],
+        _pos: &[i32],
+    ) -> Result<StepOutput> {
+        bail!("pjrt feature disabled")
+    }
+
+    pub fn embed_tokens(&self, _tokens: &[i32]) -> Result<Vec<f32>> {
+        bail!("pjrt feature disabled")
+    }
+
+    pub fn embed_text(&self, _text: &str) -> Result<Vec<f32>> {
+        bail!("pjrt feature disabled")
+    }
+}
+
+/// Cosine similarity between two embeddings (Table 7's semantic proxy).
+pub fn cosine(a: &[f32], b: &[f32]) -> f64 {
+    assert_eq!(a.len(), b.len());
+    let (mut dot, mut na, mut nb) = (0f64, 0f64, 0f64);
+    for (&x, &y) in a.iter().zip(b) {
+        dot += x as f64 * y as f64;
+        na += x as f64 * x as f64;
+        nb += y as f64 * y as f64;
+    }
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na.sqrt() * nb.sqrt())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn load_reports_missing_feature() {
+        let err = ModelRuntime::load("/nonexistent").unwrap_err();
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+
+    #[test]
+    fn cosine_basics() {
+        assert!((cosine(&[1.0, 0.0], &[1.0, 0.0]) - 1.0).abs() < 1e-12);
+        assert!(cosine(&[1.0, 0.0], &[0.0, 1.0]).abs() < 1e-12);
+        assert!((cosine(&[1.0, 1.0], &[-1.0, -1.0]) + 1.0).abs() < 1e-12);
+        assert_eq!(cosine(&[0.0, 0.0], &[1.0, 1.0]), 0.0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Cheap non-cryptographic hashing (§Perf).
+//!
+//! `std::collections::HashMap` defaults to SipHash-1-3, which is
+//! DoS-resistant but costs ~1–2 ns/byte with a per-map random seed. The
+//! planner's calibration memo and the compressor's interner hash only
+//! trusted, fixed-width keys ((f64 bits, f64 bits, u32) tuples and short
+//! lowercase words), so a multiply-rotate hash in the FxHash family is both
+//! sufficient and several times faster. Determinism is also load-bearing:
+//! a fixed-seed hasher keeps iteration-independent data structures
+//! reproducible run-to-run.
+
+use std::collections::HashMap;
+use std::hash::{BuildHasher, Hasher};
+
+/// Golden-ratio multiplier used by the Firefox/rustc "Fx" hash.
+const SEED: u64 = 0x51_7c_c1_b7_27_22_0a_95;
+
+/// Multiply-rotate hasher for short trusted keys (integers, small tuples).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxHasher {
+    hash: u64,
+}
+
+impl FxHasher {
+    #[inline]
+    fn add(&mut self, word: u64) {
+        self.hash = (self.hash.rotate_left(5) ^ word).wrapping_mul(SEED);
+    }
+}
+
+impl Hasher for FxHasher {
+    #[inline]
+    fn finish(&self) -> u64 {
+        self.hash
+    }
+
+    #[inline]
+    fn write(&mut self, bytes: &[u8]) {
+        for chunk in bytes.chunks(8) {
+            let mut buf = [0u8; 8];
+            buf[..chunk.len()].copy_from_slice(chunk);
+            self.add(u64::from_le_bytes(buf));
+        }
+    }
+
+    #[inline]
+    fn write_u8(&mut self, x: u8) {
+        self.add(x as u64);
+    }
+
+    #[inline]
+    fn write_u32(&mut self, x: u32) {
+        self.add(x as u64);
+    }
+
+    #[inline]
+    fn write_u64(&mut self, x: u64) {
+        self.add(x);
+    }
+
+    #[inline]
+    fn write_usize(&mut self, x: usize) {
+        self.add(x as u64);
+    }
+}
+
+/// Fixed-seed builder: no per-map randomness (deterministic, zero set-up).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FxBuildHasher;
+
+impl BuildHasher for FxBuildHasher {
+    type Hasher = FxHasher;
+
+    #[inline]
+    fn build_hasher(&self) -> FxHasher {
+        FxHasher::default()
+    }
+}
+
+/// A `HashMap` using [`FxHasher`] — drop-in for integer-keyed memo tables.
+pub type FxHashMap<K, V> = HashMap<K, V, FxBuildHasher>;
+
+/// FNV-1a over raw bytes — used by the interner's open-addressed table.
+#[inline]
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// A per-process random 64-bit seed (std `RandomState` entropy, computed
+/// once). Structures that hash **untrusted** input — the gateway interner
+/// hashes attacker-controlled prompt words — mix this in so masked-bucket
+/// collisions cannot be precomputed offline (hash-flood resistance).
+/// Within a process the seed is fixed, so runs stay deterministic; and the
+/// interner assigns word ids by first-appearance order, not by hash, so
+/// results are identical across processes regardless of the seed.
+pub fn process_seed() -> u64 {
+    use std::sync::OnceLock;
+    static PROCESS_SEED: OnceLock<u64> = OnceLock::new();
+    *PROCESS_SEED.get_or_init(|| {
+        let mut h = std::collections::hash_map::RandomState::new().build_hasher();
+        h.write_u64(0x5EED_0F_F1CE);
+        h.finish()
+    })
+}
+
+/// Seeded avalanche finalizer for mask-indexed tables: multiplies the
+/// seed-xored hash and folds the high bits down so every masked bit
+/// depends on the (secret) seed.
+#[inline]
+pub fn mix64(h: u64, seed: u64) -> u64 {
+    let x = (h ^ seed).wrapping_mul(SEED);
+    x ^ (x >> 32)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn map_works_with_tuple_keys() {
+        let mut m: FxHashMap<(u64, u64, u32), f64> = FxHashMap::default();
+        m.insert((1, 2, 3), 0.5);
+        m.insert((1.5f64.to_bits(), 2.5f64.to_bits(), 16), 1.5);
+        assert_eq!(m.get(&(1, 2, 3)), Some(&0.5));
+        assert_eq!(m.len(), 2);
+    }
+
+    #[test]
+    fn hasher_is_deterministic() {
+        let b = FxBuildHasher;
+        let mut h1 = b.build_hasher();
+        let mut h2 = b.build_hasher();
+        h1.write_u64(0xDEAD_BEEF);
+        h2.write_u64(0xDEAD_BEEF);
+        assert_eq!(h1.finish(), h2.finish());
+    }
+
+    #[test]
+    fn distinct_keys_hash_differently() {
+        let b = FxBuildHasher;
+        let mut seen = std::collections::HashSet::new();
+        for i in 0u64..1000 {
+            let mut h = b.build_hasher();
+            h.write_u64(i);
+            seen.insert(h.finish());
+        }
+        assert_eq!(seen.len(), 1000);
+    }
+
+    #[test]
+    fn fnv_distinguishes_words() {
+        assert_ne!(fnv1a(b"alpha"), fnv1a(b"beta"));
+        assert_ne!(fnv1a(b""), fnv1a(b"a"));
+        assert_eq!(fnv1a(b"pool"), fnv1a(b"pool"));
+    }
+
+    #[test]
+    fn process_seed_stable_within_process() {
+        assert_eq!(process_seed(), process_seed());
+    }
+
+    #[test]
+    fn mix64_depends_on_seed_and_input() {
+        assert_ne!(mix64(1, 2), mix64(1, 3));
+        assert_ne!(mix64(1, 2), mix64(2, 2));
+        assert_eq!(mix64(7, 9), mix64(7, 9));
+    }
+}

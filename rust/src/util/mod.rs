@@ -1,8 +1,9 @@
 //! Zero-dependency substrates shared across the stack (DESIGN.md §1):
-//! deterministic RNG, JSON, statistics, table rendering, and the
-//! property-testing mini-harness.
+//! deterministic RNG, JSON, statistics, table rendering, fast
+//! non-cryptographic hashing, and the property-testing mini-harness.
 
 pub mod check;
+pub mod hash;
 pub mod json;
 pub mod rng;
 pub mod stats;
