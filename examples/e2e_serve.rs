@@ -59,53 +59,30 @@ fn main() -> anyhow::Result<()> {
     let items = make_workload(n, 2.5, 7);
     println!("serving {n} requests through 3 fleet configurations...\n");
 
-    // 1. "Homogeneous": everything in the long pool (B = 0 boundary).
-    let homo = ServeConfig {
-        gateway: GatewayConfig {
-            b_short: 1, // nothing fits below one token: all traffic long
-            gamma: 1.0,
-            enable_cr: false,
-        },
-        replicas_short: 0,
-        replicas_long: 2,
-    };
+    // 1. "Homogeneous": everything in the long pool (B = 0 boundary;
+    //    nothing fits below one token, so all traffic routes long).
+    let homo = ServeConfig::two_tier(GatewayConfig::two_tier(1, 1.0, false), 0, 2);
     // 2. Pool routing: two pools, hard boundary, no compression.
-    let pr = ServeConfig {
-        gateway: GatewayConfig {
-            b_short: B_SHORT,
-            gamma: GAMMA,
-            enable_cr: false,
-        },
-        replicas_short: 1,
-        replicas_long: 1,
-    };
+    let pr = ServeConfig::two_tier(GatewayConfig::two_tier(B_SHORT, GAMMA, false), 1, 1);
     // 3. Pool routing + C&R: borderline prose compressed below B.
-    let cr = ServeConfig {
-        gateway: GatewayConfig {
-            b_short: B_SHORT,
-            gamma: GAMMA,
-            enable_cr: true,
-        },
-        replicas_short: 1,
-        replicas_long: 1,
-    };
+    let cr = ServeConfig::two_tier(GatewayConfig::two_tier(B_SHORT, GAMMA, true), 1, 1);
 
     for (name, cfg) in [("homogeneous", homo), ("pool-routing", pr), ("PR + C&R", cr)] {
         let mut report = serve(&dir, &cfg, items.clone(), 1.0)?;
-        println!("== {name} (short x{}, long x{}) ==", cfg.replicas_short, cfg.replicas_long);
-        println!("  {}", report.short.summary());
-        println!("  {}", report.long.summary());
+        println!("== {name} (replicas {:?}) ==", cfg.replicas);
+        for tier in &mut report.tiers {
+            println!("  {}", tier.summary());
+        }
         println!(
             "  routed short/long = {}/{} | compressed = {} | throughput = {:.1} req/s | gateway = {:.2} ms/req | wall = {:.1}s",
-            report.n_routed_short,
-            report.n_routed_long,
+            report.n_routed_short(),
+            report.n_routed_long(),
             report.n_compressed,
             report.throughput_rps,
             report.mean_gateway_s * 1e3,
             report.duration_s,
         );
-        let total = report.short.completed + report.long.completed;
-        assert_eq!(total as usize, n, "all requests must complete");
+        assert_eq!(report.completed() as usize, n, "all requests must complete");
         println!();
     }
     println!(

@@ -1,16 +1,20 @@
 //! Planner deep-dive: the full Algorithm-1 sweep, the marginal-cost (FOC)
-//! profile behind Proposition 1, and the mu_l-recalibration ablation the
-//! paper calls "critical" (§6).
+//! profile behind Proposition 1, the mu_l-recalibration ablation the
+//! paper calls "critical" (§6), the K-tier boundary sweeps behind Table 8,
+//! and a 3-tier fleet loaded from `examples/configs/three_tier.json`.
 //!
 //! ```bash
 //! cargo run --release --example planner_sweep
 //! ```
 
+use fleetopt::config::FleetSpec;
 use fleetopt::planner::marginal::foc_profile;
 use fleetopt::planner::{
-    candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, sweep_full, PlanInput,
+    candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_spec_sweep_gamma,
+    sweep_full, sweep_tiered, PlanInput,
 };
-use fleetopt::workload::traces;
+use fleetopt::util::json::Json;
+use fleetopt::workload::traces::{self, Workload};
 
 fn main() -> anyhow::Result<()> {
     for w in traces::all() {
@@ -58,6 +62,43 @@ fn main() -> anyhow::Result<()> {
             } else {
                 "n/a".into()
             }
+        );
+
+        // K-tier boundary sweeps (Table 8): does a third/fourth context
+        // tier pay beyond the paper's two pools?
+        for k in [3usize, 4] {
+            let t0 = std::time::Instant::now();
+            let (kbest, grid) = sweep_tiered(&input, k)?;
+            println!(
+                "K={k}: B*={:?} gpus={:?} -> ${:.0}K/yr ({} cells in {:.1} ms)",
+                kbest.boundaries(),
+                kbest.gpu_counts(),
+                kbest.cost_yr / 1e3,
+                grid.len(),
+                t0.elapsed().as_secs_f64() * 1e3,
+            );
+        }
+    }
+
+    // A 3-tier fleet + workload from a JSON config, end-to-end.
+    let config_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/configs/three_tier.json"
+    );
+    if std::path::Path::new(config_path).exists() {
+        println!("\n=== three_tier.json ===");
+        let w = Workload::from_config_file(config_path)?;
+        let text = std::fs::read_to_string(config_path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{config_path}: {e}"))?;
+        let input = PlanInput::new(w, 1000.0);
+        let spec = FleetSpec::from_json(j.expect("tiers"), &input.gpu)?;
+        let best = plan_spec_sweep_gamma(&input, &spec)?;
+        println!(
+            "fixed tiers {:?}: gammas={:?} gpus={:?} -> ${:.0}K/yr",
+            best.boundaries(),
+            best.gammas,
+            best.gpu_counts(),
+            best.cost_yr / 1e3,
         );
     }
     Ok(())

@@ -11,7 +11,9 @@ use std::time::Instant;
 use fleetopt::config::GpuProfile;
 use fleetopt::experiments::table5_validate_replicated;
 use fleetopt::fleetsim::sim::{simulate_pool, simulate_pool_replications, SimConfig, SimRequest};
-use fleetopt::planner::{plan_fleet, sweep_full, sweep_full_serial, sweep_gamma, PlanInput};
+use fleetopt::planner::{
+    plan_fleet, sweep_full, sweep_full_serial, sweep_gamma, sweep_tiered, PlanInput,
+};
 use fleetopt::util::json::{obj, Json};
 use fleetopt::util::rng::Rng;
 use fleetopt::workload::traces;
@@ -60,6 +62,27 @@ fn main() {
         ]));
     }
     println!("paper §6: full sweep < 1 ms (target for the §Perf pass)");
+
+    // --- K-tier boundary-combination sweeps (Table 8 substrate) ----------
+    let mut tier_rows = Vec::new();
+    for w in traces::all() {
+        let input = PlanInput::new(w.clone(), 1000.0);
+        let k3 = time_ms(3, || {
+            std::hint::black_box(sweep_tiered(&input, 3).unwrap());
+        });
+        let k4 = time_ms(1, || {
+            std::hint::black_box(sweep_tiered(&input, 4).unwrap());
+        });
+        println!(
+            "{:12} K=3 sweep={k3:8.1} ms | K=4 sweep={k4:8.1} ms (acceptance: K=3 < 100 ms)",
+            w.name
+        );
+        tier_rows.push(obj(vec![
+            ("workload", Json::Str(w.name.into())),
+            ("k3_sweep_ms", Json::Num(k3)),
+            ("k4_sweep_ms", Json::Num(k4)),
+        ]));
+    }
 
     // --- DES validation replications: sequential vs parallel -------------
     let w = traces::azure();
@@ -112,6 +135,7 @@ fn main() {
     let report = obj(vec![
         ("bench", Json::Str("perf_planner".into())),
         ("sweeps", Json::Arr(sweep_rows)),
+        ("tier_sweeps", Json::Arr(tier_rows)),
         ("des_replications", Json::Num(seeds.len() as f64)),
         ("des_requests_per_pool", Json::Num(n_per_pool as f64)),
         ("des_sequential_ms", Json::Num(des_seq_ms)),

@@ -27,6 +27,19 @@ pub fn band_hi(b_short: u32, gamma: f64) -> u32 {
     (gamma * b_short as f64).floor() as u32
 }
 
+/// Clamp a boundary's compression bandwidth so its band cannot cross the
+/// next boundary up (`None` for the last boundary: unclamped, the K = 2
+/// case verbatim). One shared definition keeps the planner
+/// (`planner::tiered`), the DES router (`fleetsim::route_trace_tiered`)
+/// and the live gateway deciding band membership identically.
+#[inline]
+pub fn clamp_gamma(boundary: u32, next_boundary: Option<u32>, gamma: f64) -> f64 {
+    match next_boundary {
+        Some(nb) => gamma.min(nb as f64 / boundary as f64),
+        None => gamma,
+    }
+}
+
 /// Apply the gate (Eq. 14's p_c is the realized fraction of
 /// `CompressAndRoute` among band members).
 #[inline]
@@ -107,6 +120,16 @@ mod tests {
     #[test]
     fn gamma_one_has_empty_band() {
         assert_eq!(gate(B + 1, B, 1.0, Category::Rag), GateDecision::RouteLong);
+    }
+
+    #[test]
+    fn clamp_gamma_stops_band_at_next_boundary() {
+        // 2.0 * 1024 would cross 1536: clamp to 1536/1024 = 1.5.
+        assert!((clamp_gamma(1024, Some(1536), 2.0) - 1.5).abs() < 1e-12);
+        // Band already inside the next boundary: unchanged.
+        assert_eq!(clamp_gamma(1024, Some(4096), 1.5), 1.5);
+        // Last boundary: unclamped (the K = 2 path, bit-for-bit).
+        assert_eq!(clamp_gamma(1024, None, 2.0).to_bits(), 2.0f64.to_bits());
     }
 
     #[test]

@@ -29,6 +29,139 @@ pub struct GpuProfile {
     pub cost_long_hr: f64,
 }
 
+/// One tier of a K-tier fleet: a context window, the KV-slot count that
+/// window yields on this hardware, and the tier's GPU price.
+///
+/// The paper's two-pool fleet is the K = 2 special case: tier 0 is the
+/// short pool (window `B_short`) and the last tier is the long pool
+/// (window `C_max^(l)`). Boundaries are implicit: tier `i < K-1` serves
+/// requests with `L_total <= c_max_i` that no lower tier claimed, and the
+/// last tier serves everything else.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierSpec {
+    /// Context window per slot, tokens. Doubles as the routing boundary
+    /// for every tier but the last.
+    pub c_max: u32,
+    /// Concurrent KV slots per GPU at this window (`GpuProfile::n_max`).
+    pub n_max: u32,
+    /// GPU cost for this tier, $/GPU-hr.
+    pub cost_hr: f64,
+}
+
+/// An ordered K-tier fleet specification (windows strictly ascending; the
+/// last tier is the full-context "long" tier). This is the shape every
+/// layer — planner, DES, gateway, live coordinator — is generalized over;
+/// `GpuProfile::fleet_spec(&[b_short])` reproduces the paper's two-pool
+/// stack exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct FleetSpec {
+    pub tiers: Vec<TierSpec>,
+}
+
+impl FleetSpec {
+    /// Number of tiers K.
+    pub fn k(&self) -> usize {
+        self.tiers.len()
+    }
+
+    /// The K-1 routing boundaries (every tier window except the last's).
+    pub fn boundaries(&self) -> Vec<u32> {
+        self.tiers[..self.tiers.len() - 1]
+            .iter()
+            .map(|t| t.c_max)
+            .collect()
+    }
+
+    /// Validate ordering and slot monotonicity. Windows must be strictly
+    /// ascending and every non-last tier must hold strictly more slots
+    /// than the last (otherwise the tier buys nothing — the cost cliff
+    /// that motivates routing would be absent).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.tiers.len() < 2 {
+            anyhow::bail!("a fleet needs at least 2 tiers, got {}", self.tiers.len());
+        }
+        let last = self.tiers[self.tiers.len() - 1];
+        for pair in self.tiers.windows(2) {
+            if pair[1].c_max <= pair[0].c_max {
+                anyhow::bail!(
+                    "tier windows must be strictly ascending: {} then {}",
+                    pair[0].c_max,
+                    pair[1].c_max
+                );
+            }
+        }
+        for t in &self.tiers {
+            if t.cost_hr <= 0.0 {
+                anyhow::bail!("tier at {} tokens has non-positive cost", t.c_max);
+            }
+        }
+        for t in &self.tiers[..self.tiers.len() - 1] {
+            if t.n_max <= last.n_max {
+                anyhow::bail!(
+                    "tier at {} tokens has {} slots/GPU, not above the long tier's {}",
+                    t.c_max,
+                    t.n_max,
+                    last.n_max
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from a JSON `tiers` value: either a plain array of windows
+    /// (`[4096, 16384, 65536]`, priced/slotted from `gpu`) or an array of
+    /// objects (`[{"c_max": 4096, "cost_hr": 1.8}, ...]`, missing keys
+    /// derived from `gpu`).
+    pub fn from_json(j: &Json, gpu: &GpuProfile) -> anyhow::Result<FleetSpec> {
+        let arr = j
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("`tiers` must be a JSON array"))?;
+        if arr.len() < 2 {
+            anyhow::bail!("`tiers` needs at least 2 entries");
+        }
+        // No silent `as u32` truncation: windows and slot counts must be
+        // positive whole numbers or the config is rejected with a clear
+        // message (a zero window would divide-by-zero inside `n_max`).
+        let whole = |v: f64, what: &str| -> anyhow::Result<u32> {
+            if !v.is_finite() || v < 1.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+                anyhow::bail!("{what} must be a positive whole number, got {v}");
+            }
+            Ok(v as u32)
+        };
+        let mut tiers = Vec::with_capacity(arr.len());
+        for (i, t) in arr.iter().enumerate() {
+            let last = i + 1 == arr.len();
+            let default_cost = if last { gpu.cost_long_hr } else { gpu.cost_short_hr };
+            let tier = if let Some(w) = t.as_f64() {
+                let c_max = whole(w, &format!("tier {i} window"))?;
+                TierSpec {
+                    c_max,
+                    n_max: gpu.n_max(c_max),
+                    cost_hr: default_cost,
+                }
+            } else {
+                let c_max = t
+                    .get("c_max")
+                    .and_then(Json::as_f64)
+                    .ok_or_else(|| anyhow::anyhow!("tier {i} missing `c_max`"))?;
+                let c_max = whole(c_max, &format!("tier {i} `c_max`"))?;
+                TierSpec {
+                    c_max,
+                    n_max: match t.get("n_max").and_then(Json::as_f64) {
+                        Some(n) => whole(n, &format!("tier {i} `n_max`"))?,
+                        None => gpu.n_max(c_max),
+                    },
+                    cost_hr: t.get("cost_hr").and_then(Json::as_f64).unwrap_or(default_cost),
+                }
+            };
+            tiers.push(tier);
+        }
+        let spec = FleetSpec { tiers };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
 impl GpuProfile {
     /// The paper's A100-80GB / Llama-3-70B calibration.
     pub fn a100_llama70b() -> Self {
@@ -55,6 +188,28 @@ impl GpuProfile {
     /// Slots per GPU in the long pool.
     pub fn n_max_long(&self) -> u32 {
         self.n_max(self.c_max_long)
+    }
+
+    /// Build a K-tier [`FleetSpec`] from K-1 ascending boundaries: one
+    /// tier per boundary (window = boundary, slots from the KV budget,
+    /// priced at `cost_short_hr`) plus the full-context long tier at
+    /// `cost_long_hr`. `fleet_spec(&[b_short])` is the paper's two-pool
+    /// fleet verbatim.
+    pub fn fleet_spec(&self, boundaries: &[u32]) -> FleetSpec {
+        let mut tiers: Vec<TierSpec> = boundaries
+            .iter()
+            .map(|&b| TierSpec {
+                c_max: b,
+                n_max: self.n_max(b),
+                cost_hr: self.cost_short_hr,
+            })
+            .collect();
+        tiers.push(TierSpec {
+            c_max: self.c_max_long,
+            n_max: self.n_max_long(),
+            cost_hr: self.cost_long_hr,
+        });
+        FleetSpec { tiers }
     }
 
     /// The cost-cliff ratio rho = n_max^(s) / n_max^(l) at a short-pool
@@ -187,5 +342,56 @@ mod tests {
         let g = GpuProfile::from_json(&j);
         assert_eq!(g.w_ms, 10.0);
         assert_eq!(g.chunk, 512);
+    }
+
+    #[test]
+    fn two_tier_spec_matches_paper_pools() {
+        let g = GpuProfile::a100_llama70b();
+        let spec = g.fleet_spec(&[4096]);
+        assert_eq!(spec.k(), 2);
+        assert_eq!(spec.boundaries(), vec![4096]);
+        assert_eq!(spec.tiers[0].n_max, 256);
+        assert_eq!(spec.tiers[1].c_max, 65_536);
+        assert_eq!(spec.tiers[1].n_max, 16);
+        assert_eq!(spec.tiers[0].cost_hr, g.cost_short_hr);
+        assert_eq!(spec.tiers[1].cost_hr, g.cost_long_hr);
+        spec.validate().unwrap();
+    }
+
+    #[test]
+    fn k_tier_spec_slots_descend() {
+        let g = GpuProfile::a100_llama70b();
+        let spec = g.fleet_spec(&[4096, 16_384]);
+        assert_eq!(spec.k(), 3);
+        assert_eq!(spec.tiers[1].n_max, 64);
+        spec.validate().unwrap();
+        // Windows must stay ascending.
+        let bad = g.fleet_spec(&[16_384, 4096]);
+        assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn fleet_spec_from_json_windows_and_objects() {
+        let g = GpuProfile::a100_llama70b();
+        let j = Json::parse("[4096, 16384, 65536]").unwrap();
+        let spec = FleetSpec::from_json(&j, &g).unwrap();
+        assert_eq!(spec.k(), 3);
+        assert_eq!(spec.tiers[0].n_max, 256);
+        let j = Json::parse(r#"[{"c_max": 4096, "cost_hr": 1.5}, {"c_max": 65536}]"#).unwrap();
+        let spec = FleetSpec::from_json(&j, &g).unwrap();
+        assert_eq!(spec.tiers[0].cost_hr, 1.5);
+        assert_eq!(spec.tiers[1].cost_hr, g.cost_long_hr);
+        assert!(FleetSpec::from_json(&Json::parse("[4096]").unwrap(), &g).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_from_json_rejects_bad_windows() {
+        let g = GpuProfile::a100_llama70b();
+        for bad in ["[0, 65536]", "[-4096, 65536]", "[4096.7, 65536]"] {
+            let j = Json::parse(bad).unwrap();
+            assert!(FleetSpec::from_json(&j, &g).is_err(), "{bad} must be rejected");
+        }
+        let j = Json::parse(r#"[{"c_max": 4096, "cost_hr": -1.0}, {"c_max": 65536}]"#).unwrap();
+        assert!(FleetSpec::from_json(&j, &g).is_err(), "negative cost must be rejected");
     }
 }

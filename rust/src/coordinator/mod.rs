@@ -1,6 +1,6 @@
 //! The live serving coordinator: engine replicas (KV-slot manager +
 //! continuous batcher + chunked-prefill/decode scheduler) and the threaded
-//! two-pool serving loop fed by the gateway.
+//! K-tier serving loop fed by the gateway (two-pool at K = 2).
 
 pub mod replica;
 pub mod serve;

@@ -1,31 +1,43 @@
-//! The serving loop: gateway → per-pool FCFS queues → replica threads.
+//! The serving loop: gateway → per-tier FCFS queues → replica threads.
 //!
 //! Threads + channels stand in for an async runtime (no tokio offline;
 //! DESIGN.md §1): each replica runs on its own thread, pulling from its
-//! pool's shared queue at iteration boundaries — the same admission
+//! tier's shared queue at iteration boundaries — the same admission
 //! discipline as the DES, so live TTFTs decompose exactly like Eq. 7.
+//! The fleet is K-tier (`GatewayConfig::n_tiers()` queues); the paper's
+//! two-pool deployment is the K = 2 case with one replica set per pool.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
 use crate::coordinator::replica::{FinishedRequest, LiveRequest, Replica};
 use crate::metrics::PoolMetrics;
 use crate::router::{Gateway, GatewayConfig};
 use crate::runtime::{ModelRuntime, PoolKind};
 
-/// Live fleet configuration.
+/// Live fleet configuration: one replica count per tier (length must be
+/// `gateway.n_tiers()`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     pub gateway: GatewayConfig,
-    pub replicas_short: usize,
-    pub replicas_long: usize,
+    pub replicas: Vec<usize>,
 }
 
-/// One pool's shared state.
+impl ServeConfig {
+    /// The paper's two-pool deployment shape.
+    pub fn two_tier(gateway: GatewayConfig, replicas_short: usize, replicas_long: usize) -> Self {
+        ServeConfig {
+            gateway,
+            replicas: vec![replicas_short, replicas_long],
+        }
+    }
+}
+
+/// One tier's shared state.
 struct PoolState {
     queue: Mutex<VecDeque<LiveRequest>>,
     wake: Condvar,
@@ -40,21 +52,35 @@ impl PoolState {
     }
 }
 
-/// Aggregated serving results.
+/// Aggregated serving results, one metrics block per tier.
 #[derive(Debug)]
 pub struct ServeReport {
-    pub short: PoolMetrics,
-    pub long: PoolMetrics,
+    /// Per-tier metrics (index 0 = densest tier, last = full-context).
+    pub tiers: Vec<PoolMetrics>,
     /// Wall-clock duration of the run, seconds.
     pub duration_s: f64,
     /// Requests completed per second over the run.
     pub throughput_rps: f64,
     /// Gateway counters.
     pub n_compressed: u64,
-    pub n_routed_short: u64,
-    pub n_routed_long: u64,
+    /// Requests routed to each tier.
+    pub n_routed: Vec<u64>,
     /// Mean gateway (routing + compression) overhead per request, seconds.
     pub mean_gateway_s: f64,
+}
+
+impl ServeReport {
+    pub fn n_routed_short(&self) -> u64 {
+        self.n_routed[0]
+    }
+
+    pub fn n_routed_long(&self) -> u64 {
+        *self.n_routed.last().expect("at least two tiers")
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.tiers.iter().map(|t| t.completed).sum()
+    }
 }
 
 /// A workload item for the live fleet: prompt text, output budget, and the
@@ -66,7 +92,28 @@ pub struct ServeItem {
     pub arrival_offset_s: f64,
 }
 
-/// Drive `items` through a live two-pool fleet. Arrivals are paced in real
+/// Metric label for tier `i` of `k`: the two-pool names are kept for the
+/// K = 2 deployment; larger fleets get positional names.
+fn tier_name(i: usize, k: usize) -> String {
+    if k == 2 {
+        (if i == 0 { "short" } else { "long" }).to_string()
+    } else {
+        format!("tier{i}")
+    }
+}
+
+/// Which AOT artifact pool a tier's replicas execute. The artifact set
+/// compiles two shapes (dense short / full-context long); every non-last
+/// tier uses the dense executable, the last tier the full-context one.
+fn tier_artifact(i: usize, k: usize) -> PoolKind {
+    if i + 1 == k {
+        PoolKind::Long
+    } else {
+        PoolKind::Short
+    }
+}
+
+/// Drive `items` through a live K-tier fleet. Arrivals are paced in real
 /// time by `time_scale` (0.1 = 10x faster than the offsets say); the
 /// gateway (classification + C&R compression) runs on the driver thread,
 /// exactly as a real deployment's ingress does.
@@ -80,25 +127,38 @@ pub fn serve(
     items: Vec<ServeItem>,
     time_scale: f64,
 ) -> Result<ServeReport> {
+    let k = cfg.gateway.n_tiers();
+    if cfg.replicas.len() != k {
+        bail!(
+            "replica counts ({}) must match tier count ({k})",
+            cfg.replicas.len()
+        );
+    }
     let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
-    let pools: [Arc<PoolState>; 2] = [Arc::new(PoolState::new()), Arc::new(PoolState::new())];
+    // Every tier boundary must fit inside the context window of the AOT
+    // artifact its replicas execute; an oversized prompt would otherwise
+    // overflow a replica's KV slot mid-serve.
+    for (i, tr) in cfg.gateway.tiers.iter().enumerate() {
+        let shape = manifest.pool(tier_artifact(i, k));
+        if tr.boundary as usize > shape.ctx {
+            bail!(
+                "tier {i} boundary {} exceeds its artifact context window {}",
+                tr.boundary,
+                shape.ctx
+            );
+        }
+    }
+    let pools: Vec<Arc<PoolState>> = (0..k).map(|_| Arc::new(PoolState::new())).collect();
     let done_feeding = Arc::new(AtomicBool::new(false));
     let in_flight = Arc::new(AtomicU64::new(0));
-    let results: Arc<Mutex<Vec<(PoolKind, FinishedRequest)>>> =
-        Arc::new(Mutex::new(Vec::new()));
+    let results: Arc<Mutex<Vec<(usize, FinishedRequest)>>> = Arc::new(Mutex::new(Vec::new()));
 
     let mut handles = Vec::new();
-    for (kind, count) in [
-        (PoolKind::Short, cfg.replicas_short),
-        (PoolKind::Long, cfg.replicas_long),
-    ] {
-        let pool_idx = match kind {
-            PoolKind::Short => 0,
-            PoolKind::Long => 1,
-        };
+    for (tier, &count) in cfg.replicas.iter().enumerate() {
+        let kind = tier_artifact(tier, k);
         for _ in 0..count {
             let dir = artifacts_dir.to_path_buf();
-            let pool = pools[pool_idx].clone();
+            let pool = pools[tier].clone();
             let done = done_feeding.clone();
             let in_flight = in_flight.clone();
             let results = results.clone();
@@ -128,7 +188,7 @@ pub fn serve(
                     }
                     for fin in replica.step()? {
                         in_flight.fetch_sub(1, Ordering::AcqRel);
-                        results.lock().unwrap().push((kind, fin));
+                        results.lock().unwrap().push((tier, fin));
                     }
                 }
             }));
@@ -162,29 +222,25 @@ pub fn serve(
             .iter()
             .map(|it| (it.text.as_str(), it.max_output))
             .collect();
-        // Streaming sink: each request is enqueued (and its pool woken)
+        // Streaming sink: each request is enqueued (and its tier woken)
         // the moment it is routed, while later batch members are still in
         // the gateway — no head-of-line blocking behind a slow
         // compression, and per-item arrival stamps keep the latency
         // metrics comparable to per-item routing.
-        gateway.route_batch_with(&batch, |k, routed| {
+        gateway.route_batch_with(&batch, |idx, routed| {
             gateway_total_s += routed.gateway_s;
             let req = LiveRequest {
-                id: (next + k) as u64,
+                id: (next + idx) as u64,
                 tokens: crate::compress::tokenizer::hash_tokens(&routed.text, vocab),
                 max_output: routed.max_output_tokens,
                 arrival: Instant::now(),
             };
-            let pool_idx = match routed.pool {
-                PoolKind::Short => 0,
-                PoolKind::Long => 1,
-            };
             in_flight.fetch_add(1, Ordering::AcqRel);
             {
-                let mut q = pools[pool_idx].queue.lock().unwrap();
+                let mut q = pools[routed.tier].queue.lock().unwrap();
                 q.push_back(req);
             }
-            pools[pool_idx].wake.notify_all();
+            pools[routed.tier].wake.notify_all();
         });
         next = end;
     }
@@ -197,25 +253,24 @@ pub fn serve(
     }
     let duration_s = start.elapsed().as_secs_f64();
 
-    let mut short = PoolMetrics::new("short");
-    let mut long = PoolMetrics::new("long");
+    let mut tiers: Vec<PoolMetrics> = (0..k).map(|i| PoolMetrics::new(tier_name(i, k))).collect();
     let all = Arc::try_unwrap(results).unwrap().into_inner().unwrap();
     let completed = all.len() as u64;
-    for (kind, fin) in all {
-        match kind {
-            PoolKind::Short => short.record(&fin),
-            PoolKind::Long => long.record(&fin),
-        }
+    for (tier, fin) in all {
+        tiers[tier].record(&fin);
     }
-    assert_eq!(in_flight.load(Ordering::Acquire), 0, "requests lost in flight");
+    let lost = in_flight.load(Ordering::Acquire);
+    if lost != 0 {
+        // A serving-path accounting failure must surface as an error the
+        // caller can handle, not a coordinator panic.
+        bail!("{lost} request(s) lost in flight ({completed} completed of {n_items})");
+    }
     Ok(ServeReport {
-        short,
-        long,
+        tiers,
         duration_s,
         throughput_rps: completed as f64 / duration_s.max(1e-9),
         n_compressed: gateway.n_compressed,
-        n_routed_short: gateway.n_routed_short,
-        n_routed_long: gateway.n_routed_long,
+        n_routed: gateway.n_routed.clone(),
         mean_gateway_s: gateway_total_s / n_items.max(1) as f64,
     })
 }

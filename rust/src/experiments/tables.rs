@@ -1,4 +1,6 @@
-//! Table generators for the paper's evaluation (§7, Tables 1–7).
+//! Table generators for the paper's evaluation (§7, Tables 1–7) plus the
+//! K-tier extension study (Table 8): homogeneous vs two-pool vs K = 3/4
+//! fleets on all three traces.
 
 use std::time::Instant;
 
@@ -11,7 +13,7 @@ use crate::fleetsim::fleet::FleetSimResult;
 use crate::fleetsim::sim::{simulate_pool, SimConfig};
 use crate::model::kv::cliff_row;
 use crate::planner::{
-    plan_fleet, plan_homogeneous, sweep_gamma, Plan, PlanInput,
+    plan_fleet, plan_homogeneous, sweep_gamma, sweep_tiered, Plan, PlanInput,
 };
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
@@ -441,6 +443,111 @@ pub fn table7(n: usize, artifacts_dir: Option<&std::path::Path>) -> Table {
 }
 
 // ---------------------------------------------------------------------------
+// Table 8: K-tier fleets
+// ---------------------------------------------------------------------------
+
+/// One Table-8 row: the cost-optimal K-tier fleet for a workload.
+pub struct Table8Row {
+    pub workload: &'static str,
+    /// Fleet size K (1 = homogeneous, 2 = the paper's two pools).
+    pub k: usize,
+    /// The K−1 optimal boundaries (empty for homogeneous).
+    pub boundaries: Vec<u32>,
+    /// The swept shared compression bandwidth gamma* (per-boundary values
+    /// may be clamped below it; this is the unclamped grid value).
+    pub gamma: f64,
+    /// GPUs per tier, in tier order.
+    pub gpus: Vec<u64>,
+    pub cost_yr: f64,
+    /// Wall time of the K-tier sweep, ms (0 for homogeneous).
+    pub sweep_ms: f64,
+}
+
+impl Table8Row {
+    pub fn total_gpus(&self) -> u64 {
+        self.gpus.iter().sum()
+    }
+}
+
+/// Compute the Table-8 rows for one workload: homogeneous, then the full
+/// boundary-combination sweep for each K in `2..=max_k`.
+pub fn table8_rows(w: &Workload, lambda: f64, max_k: usize) -> Vec<Table8Row> {
+    let input = PlanInput::new(w.clone(), lambda);
+    let homo = plan_homogeneous(&input).expect("homogeneous plan");
+    let mut rows = vec![Table8Row {
+        workload: w.name,
+        k: 1,
+        boundaries: Vec::new(),
+        gamma: 1.0,
+        gpus: vec![homo.long.n_gpus],
+        cost_yr: homo.cost_yr,
+        sweep_ms: 0.0,
+    }];
+    for k in 2..=max_k {
+        let t0 = Instant::now();
+        let (best, _) = sweep_tiered(&input, k).expect("K-tier sweep");
+        let sweep_ms = t0.elapsed().as_secs_f64() * 1e3;
+        rows.push(Table8Row {
+            workload: w.name,
+            k,
+            boundaries: best.boundaries(),
+            gamma: best.gammas.last().copied().unwrap_or(1.0),
+            gpus: best.gpu_counts(),
+            cost_yr: best.cost_yr,
+            sweep_ms,
+        });
+    }
+    rows
+}
+
+/// Table 8 — K-tier fleets: does a third (fourth) context tier pay beyond
+/// the paper's two pools? Reported per workload with the optimal
+/// boundaries, per-tier GPU counts, and savings vs the homogeneous fleet.
+pub fn table8(lambda: f64, max_k: usize) -> Table {
+    let mut t = Table::new(
+        &format!("Table 8 — K-tier fleets at lambda = {lambda} req/s (boundary-combination sweep)"),
+        &[
+            "Workload",
+            "K",
+            "Boundaries",
+            "gamma*",
+            "GPUs/tier",
+            "Total",
+            "Ann. cost (K$)",
+            "Savings",
+            "Sweep",
+        ],
+    );
+    for w in traces::all() {
+        let rows = table8_rows(&w, lambda, max_k);
+        let base = rows[0].cost_yr;
+        for r in rows {
+            let join = |v: Vec<String>| if v.is_empty() { "-".to_string() } else { v.join("+") };
+            t.row(&[
+                r.workload.to_string(),
+                r.k.to_string(),
+                join(r.boundaries.iter().map(|b| fmt_int(*b as f64)).collect()),
+                format!("{:.1}", r.gamma),
+                join(r.gpus.iter().map(|n| n.to_string()).collect()),
+                fmt_int(r.total_gpus() as f64),
+                fmt_int(r.cost_yr / 1000.0),
+                if r.k == 1 {
+                    "-".into()
+                } else {
+                    fmt_pct(1.0 - r.cost_yr / base)
+                },
+                if r.k == 1 {
+                    "-".into()
+                } else {
+                    format!("{:.1} ms", r.sweep_ms)
+                },
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
 // helpers used by benches
 // ---------------------------------------------------------------------------
 
@@ -499,6 +606,26 @@ mod tests {
         let m = table4_measure(&w, 5, 1);
         assert!(m.p50_ms > 0.0 && m.p99_ms < 5_000.0);
         assert!(m.overhead_ms < m.p99_ms);
+    }
+
+    #[test]
+    fn table8_k2_beats_homogeneous_and_renders() {
+        let w = traces::azure();
+        let rows = table8_rows(&w, 1000.0, 2);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].k, 1);
+        assert_eq!(rows[0].boundaries.len(), 0);
+        assert_eq!(rows[1].boundaries.len(), 1);
+        assert_eq!(rows[1].gpus.len(), 2);
+        assert!(
+            rows[1].cost_yr < rows[0].cost_yr,
+            "two-pool {} must beat homogeneous {}",
+            rows[1].cost_yr,
+            rows[0].cost_yr
+        );
+        let t = table8(1000.0, 2);
+        assert_eq!(t.n_rows(), 6);
+        assert!(t.render().contains("azure"));
     }
 
     #[test]

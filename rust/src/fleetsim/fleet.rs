@@ -1,9 +1,13 @@
-//! Fleet-level simulation: route a workload trace through the pool
-//! boundary (with optional C&R) and simulate both pools (Table 5).
+//! Fleet-level simulation: route a workload trace through the K−1 tier
+//! boundaries (with optional per-boundary C&R) and simulate every tier
+//! (Table 5 / Table 8). The paper's two-pool fleet is the K = 2 special
+//! case: [`route_trace`] and [`simulate_fleet`] are thin projections of
+//! the tiered path and reproduce the pre-refactor outputs bit-for-bit
+//! (`tests/tier_equivalence.rs`).
 
 use crate::config::GpuProfile;
 use crate::fleetsim::sim::{simulate_pool, SimConfig, SimRequest, SimResult};
-use crate::planner::Plan;
+use crate::planner::{Plan, TieredPlan};
 use crate::util::rng::Rng;
 use crate::workload::arrivals::PoissonArrivals;
 use crate::workload::traces::Workload;
@@ -17,7 +21,7 @@ pub enum Route {
     Long,
 }
 
-/// Routed per-pool traces plus bookkeeping.
+/// Routed per-pool traces plus bookkeeping (two-pool view).
 #[derive(Debug)]
 pub struct RoutedTrace {
     pub short: Vec<SimRequest>,
@@ -26,10 +30,90 @@ pub struct RoutedTrace {
     pub n_total: u64,
 }
 
-/// Sample `n` requests at rate `lambda` and route them at boundary
-/// `b_short` with compression bandwidth `gamma` and compressibility `p_c`
-/// (the DES-side mirror of Eq. 1-2). Compressed requests enter the short
-/// pool at exactly `L_in = B - L_out` (Eq. 15).
+/// Routed per-tier traces plus bookkeeping (K-tier view). `tiers[i]`
+/// holds the requests that landed in tier `i`, post-compression.
+#[derive(Debug)]
+pub struct TieredTrace {
+    pub tiers: Vec<Vec<SimRequest>>,
+    /// Compressions per boundary (requests squeezed down into tier `i`).
+    pub n_compressed_at: Vec<u64>,
+    pub n_total: u64,
+}
+
+impl TieredTrace {
+    pub fn n_compressed(&self) -> u64 {
+        self.n_compressed_at.iter().sum()
+    }
+}
+
+/// Sample `n` requests at rate `lambda` and route them across the tier
+/// `boundaries` with per-boundary compression bandwidths `gammas` (the
+/// DES-side mirror of Eq. 1-2, per boundary). The first tier whose
+/// boundary fits the request takes it; a compressible request inside a
+/// boundary's band `(B_i, gamma_i B_i]` is compressed down into tier `i`
+/// at exactly `L_in = B_i - L_out` (Eq. 15); everything else falls
+/// through to the last tier.
+pub fn route_trace_tiered(
+    w: &Workload,
+    lambda: f64,
+    n: usize,
+    boundaries: &[u32],
+    gammas: &[f64],
+    seed: u64,
+) -> TieredTrace {
+    assert!(!boundaries.is_empty(), "need at least one boundary");
+    assert_eq!(boundaries.len(), gammas.len());
+    let k = boundaries.len() + 1;
+    let mut rng = Rng::new(seed ^ 0xF1EE7);
+    let arrivals = PoissonArrivals::new(lambda, seed);
+    let mut tiers: Vec<Vec<SimRequest>> = (0..k).map(|_| Vec::new()).collect();
+    let mut n_compressed_at = vec![0u64; k - 1];
+    for (i, t) in arrivals.take(n).enumerate() {
+        let r = w.sample_request(i as u64, t, &mut rng);
+        let mut routed = false;
+        for (tier, (&b, &gamma)) in boundaries.iter().zip(gammas).enumerate() {
+            // Clamp the band at the next boundary up, exactly as the
+            // planner and gateway do (no-op for already-clamped plan
+            // gammas and for the last boundary — K = 2 is untouched).
+            let gamma =
+                crate::compress::gate::clamp_gamma(b, boundaries.get(tier + 1).copied(), gamma);
+            let band_hi = crate::compress::gate::band_hi(b, gamma);
+            if r.l_total <= b {
+                tiers[tier].push(SimRequest {
+                    arrival_s: t,
+                    l_in: r.l_in,
+                    l_out: r.l_out,
+                });
+                routed = true;
+                break;
+            } else if r.l_total <= band_hi && r.category.compressible() && r.l_out < b {
+                // C&R: compressed to the Eq. 15 budget of this boundary.
+                n_compressed_at[tier] += 1;
+                tiers[tier].push(SimRequest {
+                    arrival_s: t,
+                    l_in: b - r.l_out,
+                    l_out: r.l_out,
+                });
+                routed = true;
+                break;
+            }
+        }
+        if !routed {
+            tiers[k - 1].push(SimRequest {
+                arrival_s: t,
+                l_in: r.l_in,
+                l_out: r.l_out,
+            });
+        }
+    }
+    TieredTrace {
+        tiers,
+        n_compressed_at,
+        n_total: n as u64,
+    }
+}
+
+/// Two-pool [`route_trace_tiered`] (the paper's evaluation shape).
 pub fn route_trace(
     w: &Workload,
     lambda: f64,
@@ -38,48 +122,18 @@ pub fn route_trace(
     gamma: f64,
     seed: u64,
 ) -> RoutedTrace {
-    let mut rng = Rng::new(seed ^ 0xF1EE7);
-    let arrivals = PoissonArrivals::new(lambda, seed);
-    let mut short = Vec::new();
-    let mut long = Vec::new();
-    let mut n_compressed = 0u64;
-    for (i, t) in arrivals.take(n).enumerate() {
-        let r = w.sample_request(i as u64, t, &mut rng);
-        let band_hi = crate::compress::gate::band_hi(b_short, gamma);
-        if r.l_total <= b_short {
-            short.push(SimRequest {
-                arrival_s: t,
-                l_in: r.l_in,
-                l_out: r.l_out,
-            });
-        } else if r.l_total <= band_hi
-            && r.category.compressible()
-            && r.l_out < b_short
-        {
-            // C&R: compressed to the Eq. 15 budget.
-            n_compressed += 1;
-            short.push(SimRequest {
-                arrival_s: t,
-                l_in: b_short - r.l_out,
-                l_out: r.l_out,
-            });
-        } else {
-            long.push(SimRequest {
-                arrival_s: t,
-                l_in: r.l_in,
-                l_out: r.l_out,
-            });
-        }
-    }
+    let mut t = route_trace_tiered(w, lambda, n, &[b_short], &[gamma], seed);
+    let long = t.tiers.pop().expect("long tier");
+    let short = t.tiers.pop().expect("short tier");
     RoutedTrace {
         short,
         long,
-        n_compressed,
-        n_total: n as u64,
+        n_compressed: t.n_compressed_at[0],
+        n_total: t.n_total,
     }
 }
 
-/// Per-pool DES results for a provisioned fleet.
+/// Per-pool DES results for a provisioned two-pool fleet.
 #[derive(Debug)]
 pub struct FleetSimResult {
     pub short: Option<SimResult>,
@@ -87,8 +141,62 @@ pub struct FleetSimResult {
     pub routed: RoutedTrace,
 }
 
-/// Simulate a planned fleet against a freshly sampled trace of `n`
-/// requests (paper §7.4: 30,000 per pool).
+/// Per-tier DES results for a provisioned K-tier fleet.
+#[derive(Debug)]
+pub struct TieredSimResult {
+    pub tiers: Vec<Option<SimResult>>,
+    pub routed: TieredTrace,
+}
+
+/// One tier's DES shape: GPU count, slots per GPU, and the warm-up before
+/// the utilization window opens.
+struct TierSimCfg {
+    n_gpus: u64,
+    n_slots: u32,
+    warmup_s: f64,
+}
+
+/// Simulate every tier of a routed trace, one scoped thread per tier
+/// (§Perf): the tiers' traces are disjoint and their simulations
+/// independent, so per-tier results are bit-identical to a sequential
+/// run. Tiers with no GPUs or no traffic are skipped (`None`).
+fn simulate_tiers(
+    g: &GpuProfile,
+    cfgs: &[TierSimCfg],
+    traces: &[Vec<SimRequest>],
+) -> Vec<Option<SimResult>> {
+    assert_eq!(cfgs.len(), traces.len());
+    std::thread::scope(|scope| {
+        let handles: Vec<_> = cfgs
+            .iter()
+            .zip(traces)
+            .map(|(tc, trace)| {
+                (tc.n_gpus > 0 && !trace.is_empty()).then(|| {
+                    scope.spawn(move || {
+                        let mut cfg = SimConfig::new(g.clone(), tc.n_gpus, tc.n_slots);
+                        cfg.warmup_s = tc.warmup_s;
+                        simulate_pool(&cfg, trace)
+                    })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.map(|h| h.join().expect("tier DES panicked")))
+            .collect()
+    })
+}
+
+/// Warm-up before the utilization window opens: ~3 mean slot occupancies —
+/// an empty pool with E[S] in the tens of seconds needs that long to fill
+/// to steady state, and counting the fill-up biases rho-hat low.
+fn warmup_s(svc: &Option<crate::queueing::service::ServiceStats>) -> f64 {
+    svc.as_ref().map(|s| 3.0 * s.e_s).unwrap_or(0.0)
+}
+
+/// Simulate a planned two-pool fleet against a freshly sampled trace of
+/// `n` requests (paper §7.4: 30,000 per pool). The K = 2 projection of
+/// [`simulate_fleet_tiered`].
 pub fn simulate_fleet(
     w: &Workload,
     plan: &Plan,
@@ -97,40 +205,64 @@ pub fn simulate_fleet(
     n: usize,
     seed: u64,
 ) -> FleetSimResult {
-    let routed = route_trace(w, lambda, n, plan.b_short, plan.gamma, seed);
-    // Open the utilization window only after ~3 mean slot occupancies: an
-    // empty pool with E[S] in the tens of seconds needs that long to fill
-    // to steady state, and counting the fill-up biases rho-hat low.
-    let warm = |svc: &Option<crate::queueing::service::ServiceStats>| {
-        svc.as_ref().map(|s| 3.0 * s.e_s).unwrap_or(0.0)
-    };
-    // The two pools' traces are disjoint and their simulations independent,
-    // so they run on scoped threads (§Perf: halves Table-5 wall time);
-    // per-pool results are bit-identical to the sequential run.
-    let (short, long) = std::thread::scope(|scope| {
-        let hs = (plan.short.n_gpus > 0 && !routed.short.is_empty()).then(|| {
-            scope.spawn(|| {
-                let mut cfg =
-                    SimConfig::new(g.clone(), plan.short.n_gpus, g.n_max(plan.b_short));
-                cfg.warmup_s = warm(&plan.short.svc);
-                simulate_pool(&cfg, &routed.short)
-            })
-        });
-        let hl = (plan.long.n_gpus > 0 && !routed.long.is_empty()).then(|| {
-            scope.spawn(|| {
-                let mut cfg = SimConfig::new(g.clone(), plan.long.n_gpus, g.n_max_long());
-                cfg.warmup_s = warm(&plan.long.svc);
-                simulate_pool(&cfg, &routed.long)
-            })
-        });
-        (
-            hs.map(|h| h.join().expect("short-pool DES panicked")),
-            hl.map(|h| h.join().expect("long-pool DES panicked")),
-        )
-    });
+    let cfgs = [
+        TierSimCfg {
+            n_gpus: plan.short.n_gpus,
+            n_slots: g.n_max(plan.b_short),
+            warmup_s: warmup_s(&plan.short.svc),
+        },
+        TierSimCfg {
+            n_gpus: plan.long.n_gpus,
+            n_slots: g.n_max_long(),
+            warmup_s: warmup_s(&plan.long.svc),
+        },
+    ];
+    let mut routed = route_trace_tiered(w, lambda, n, &[plan.b_short], &[plan.gamma], seed);
+    let mut results = simulate_tiers(g, &cfgs, &routed.tiers);
+    let long = results.pop().expect("long result");
+    let short = results.pop().expect("short result");
+    let long_trace = routed.tiers.pop().expect("long trace");
+    let short_trace = routed.tiers.pop().expect("short trace");
     FleetSimResult {
         short,
         long,
+        routed: RoutedTrace {
+            short: short_trace,
+            long: long_trace,
+            n_compressed: routed.n_compressed_at[0],
+            n_total: routed.n_total,
+        },
+    }
+}
+
+/// Simulate a planned K-tier fleet against a freshly sampled trace of `n`
+/// requests: route across every boundary, then run one DES per tier on
+/// scoped threads. Slot counts come from the plan's [`FleetSpec`]
+/// (`crate::config::FleetSpec`); `g` supplies the iteration-latency model
+/// shared by every tier.
+pub fn simulate_fleet_tiered(
+    w: &Workload,
+    plan: &TieredPlan,
+    g: &GpuProfile,
+    lambda: f64,
+    n: usize,
+    seed: u64,
+) -> TieredSimResult {
+    let boundaries = plan.boundaries();
+    let routed = route_trace_tiered(w, lambda, n, &boundaries, &plan.gammas, seed);
+    let cfgs: Vec<TierSimCfg> = plan
+        .tiers
+        .iter()
+        .zip(&plan.spec.tiers)
+        .map(|(pool, tier)| TierSimCfg {
+            n_gpus: pool.n_gpus,
+            n_slots: tier.n_max,
+            warmup_s: warmup_s(&pool.svc),
+        })
+        .collect();
+    let results = simulate_tiers(g, &cfgs, &routed.tiers);
+    TieredSimResult {
+        tiers: results,
         routed,
     }
 }
@@ -185,5 +317,36 @@ mod tests {
         let w = traces::lmsys();
         let routed = route_trace(&w, 800.0, 10_000, 1536, 1.5, 5);
         assert_eq!(routed.short.len() + routed.long.len(), 10_000);
+    }
+
+    #[test]
+    fn three_tier_conservation_and_no_overflow() {
+        let w = traces::agent_heavy();
+        let boundaries = [4096u32, 16_384];
+        let t = route_trace_tiered(&w, 1000.0, 30_000, &boundaries, &[1.5, 1.5], 6);
+        assert_eq!(t.tiers.len(), 3);
+        let total: usize = t.tiers.iter().map(Vec::len).sum();
+        assert_eq!(total, 30_000);
+        // No request may exceed its tier's window (the KV-overflow
+        // guarantee, per tier).
+        for (tier, &b) in boundaries.iter().enumerate() {
+            for r in &t.tiers[tier] {
+                assert!(r.l_in + r.l_out <= b, "tier {tier} overflow: {r:?}");
+            }
+        }
+        // With two open bands, both boundaries see compressions on this
+        // fat-tailed trace.
+        assert!(t.n_compressed_at[0] > 0 && t.n_compressed_at[1] > 0);
+        assert_eq!(t.n_compressed(), t.n_compressed_at[0] + t.n_compressed_at[1]);
+    }
+
+    #[test]
+    fn tiered_k2_matches_route_trace() {
+        let w = traces::azure();
+        let two = route_trace(&w, 700.0, 15_000, 4096, 1.5, 9);
+        let tiered = route_trace_tiered(&w, 700.0, 15_000, &[4096], &[1.5], 9);
+        assert_eq!(two.short.len(), tiered.tiers[0].len());
+        assert_eq!(two.long.len(), tiered.tiers[1].len());
+        assert_eq!(two.n_compressed, tiered.n_compressed_at[0]);
     }
 }

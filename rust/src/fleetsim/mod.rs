@@ -6,5 +6,8 @@ pub mod events;
 pub mod fleet;
 pub mod sim;
 
-pub use fleet::{route_trace, simulate_fleet, FleetSimResult, RoutedTrace};
+pub use fleet::{
+    route_trace, route_trace_tiered, simulate_fleet, simulate_fleet_tiered, FleetSimResult,
+    RoutedTrace, TieredSimResult, TieredTrace,
+};
 pub use sim::{simulate_pool, SimConfig, SimRequest, SimResult};

@@ -1,14 +1,20 @@
 //! `fleetopt` — the FleetOpt launcher.
 //!
 //! Subcommands:
-//!   plan      — plan a fleet for one workload (Algorithm 1 at a fixed B)
+//!   plan      — plan a fleet for one workload (Algorithm 1 at a fixed B,
+//!               or K-tier at fixed `--tiers` windows)
 //!   sweep     — full Algorithm-1 sweep over candidate boundaries
-//!   tables    — regenerate the paper's evaluation tables (1–7)
-//!   simulate  — DES validation of the analytical model (Table 5)
+//!               (`--tiers K` or a window list sweeps K-tier fleets)
+//!   tables    — regenerate the paper's evaluation tables (1–8)
+//!   simulate  — DES validation of the analytical model (Table 5; K-tier
+//!               with `--tiers`)
 //!   compress  — compress a borderline sample and report fidelity
-//!   serve     — live two-pool serving demo on the AOT artifacts
+//!   serve     — live serving demo on the AOT artifacts (K-tier with
+//!               `--tiers`)
 //!
-//! Hand-rolled argument parsing (no clap offline; DESIGN.md §1).
+//! Hand-rolled argument parsing (no clap offline; DESIGN.md §1). Numeric
+//! flags are validated: counts must be positive integers, rates positive,
+//! and gamma inside the paper's [1.0, 2.0] grid.
 
 use std::collections::HashMap;
 
@@ -19,9 +25,10 @@ use fleetopt::compress::extractive::compress;
 use fleetopt::compress::fidelity;
 use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
 use fleetopt::experiments;
+use fleetopt::fleetsim::simulate_fleet_tiered;
 use fleetopt::planner::{
-    candidate_boundaries, plan_fleet, plan_homogeneous, sweep_full, sweep_gamma, Plan,
-    PlanInput,
+    candidate_boundaries, plan_fleet, plan_homogeneous, plan_spec_sweep_gamma, sweep_full,
+    sweep_gamma, sweep_tiered, Plan, PlanInput, TieredPlan,
 };
 use fleetopt::router::GatewayConfig;
 use fleetopt::util::rng::Rng;
@@ -33,12 +40,16 @@ fn usage() -> ! {
         "fleetopt — analytical fleet provisioning with Compress-and-Route
 
 USAGE:
-  fleetopt plan     --workload <azure|lmsys|agent> [--config F.json] [--lambda N] [--gamma G] [--b-short B]
-  fleetopt sweep    --workload <name> [--config F.json] [--lambda N]
-  fleetopt tables   [--only 1..7] [--fast]
-  fleetopt simulate --workload <name> [--lambda N] [--requests N]
+  fleetopt plan     --workload <azure|lmsys|agent> [--config F.json] [--lambda N] [--gamma G] [--b-short B] [--tiers W1,W2,..|K]
+  fleetopt sweep    --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
+  fleetopt tables   [--only 1..8] [--fast]
+  fleetopt simulate --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
   fleetopt compress [--tokens N] [--budget N] [--seed N]
-  fleetopt serve    [--requests N] [--rate R] [--no-cr] [--artifacts DIR]
+  fleetopt serve    [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
+
+  --tiers takes either K-1 boundaries plus the long window
+  (e.g. 4096,16384,65536) or a bare fleet size K (2..=6) to sweep
+  boundary combinations.
 "
     );
     std::process::exit(2);
@@ -73,6 +84,85 @@ fn flag_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<
     }
 }
 
+/// A strictly positive numeric flag (rates, lambdas).
+fn flag_pos_f64(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    let v = flag_f64(flags, key, default)?;
+    if !v.is_finite() || v <= 0.0 {
+        bail!("--{key} must be a positive number, got {v}");
+    }
+    Ok(v)
+}
+
+/// A strictly positive whole-number flag (request counts, boundaries) —
+/// no silent `as usize` truncation of fractional or negative input.
+fn flag_count(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u64> {
+    let v = flag_pos_f64(flags, key, default as f64)?;
+    if v.fract() != 0.0 {
+        bail!("--{key} must be a whole number, got {v}");
+    }
+    Ok(v as u64)
+}
+
+/// A positive whole-number flag that must fit token-count width (u32).
+fn flag_u32(flags: &HashMap<String, String>, key: &str, default: u32) -> Result<u32> {
+    let v = flag_count(flags, key, default as u64)?;
+    if v > u32::MAX as u64 {
+        bail!("--{key} must fit in 32 bits, got {v}");
+    }
+    Ok(v as u32)
+}
+
+/// A compression bandwidth flag, restricted to the paper's grid range.
+fn flag_gamma(flags: &HashMap<String, String>, key: &str, default: f64) -> Result<f64> {
+    let v = flag_f64(flags, key, default)?;
+    if !(1.0..=2.0).contains(&v) {
+        bail!("--{key} must be within [1.0, 2.0], got {v}");
+    }
+    Ok(v)
+}
+
+/// `--tiers` argument: explicit windows or a fleet size to sweep.
+enum TiersArg {
+    /// K-1 boundaries plus the long window, strictly ascending.
+    Windows(Vec<u32>),
+    /// Sweep boundary combinations for a K-tier fleet.
+    K(usize),
+}
+
+fn tiers_arg(flags: &HashMap<String, String>) -> Result<Option<TiersArg>> {
+    let Some(s) = flags.get("tiers") else {
+        return Ok(None);
+    };
+    if s.contains(',') {
+        let mut windows = Vec::new();
+        for part in s.split(',') {
+            let v: f64 = part
+                .trim()
+                .parse()
+                .with_context(|| format!("--tiers entry `{part}`"))?;
+            if !v.is_finite() || v < 1.0 || v.fract() != 0.0 || v > u32::MAX as f64 {
+                bail!("--tiers windows must be positive whole token counts, got `{part}`");
+            }
+            windows.push(v as u32);
+        }
+        if windows.len() < 2 {
+            bail!("--tiers needs at least 2 windows (K-1 boundaries + the long window)");
+        }
+        if !windows.windows(2).all(|p| p[1] > p[0]) {
+            bail!("--tiers windows must be strictly ascending, got {windows:?}");
+        }
+        Ok(Some(TiersArg::Windows(windows)))
+    } else {
+        let k: usize = s
+            .parse()
+            .with_context(|| format!("--tiers `{s}` (expected a window list or a fleet size)"))?;
+        if !(2..=6).contains(&k) {
+            bail!("--tiers fleet size must be in 2..=6, got {k}");
+        }
+        Ok(Some(TiersArg::K(k)))
+    }
+}
+
 fn workload_arg(flags: &HashMap<String, String>) -> Result<fleetopt::workload::traces::Workload> {
     if let Some(path) = flags.get("config") {
         return fleetopt::workload::traces::Workload::from_config_file(path);
@@ -100,18 +190,70 @@ fn print_plan(label: &str, p: &Plan, baseline: Option<f64>) {
     );
 }
 
+fn print_tiered(label: &str, p: &TieredPlan, baseline: Option<f64>) {
+    let savings = baseline
+        .map(|b| format!(" savings={:.1}%", (1.0 - p.cost_yr / b) * 100.0))
+        .unwrap_or_default();
+    let bounds: Vec<String> = p.boundaries().iter().map(|b| b.to_string()).collect();
+    let gammas: Vec<String> = p.gammas.iter().map(|g| format!("{g:.2}")).collect();
+    let gpus: Vec<String> = p.gpu_counts().iter().map(|n| n.to_string()).collect();
+    println!(
+        "{label:28} K={} B=[{}] gamma=[{}] gpus=[{}] total={:5} cost/yr=${}K{}",
+        p.k(),
+        bounds.join(","),
+        gammas.join(","),
+        gpus.join(","),
+        p.total_gpus(),
+        fmt_int(p.cost_yr / 1000.0),
+        savings,
+    );
+    for (i, (pool, tier)) in p.tiers.iter().zip(&p.spec.tiers).enumerate() {
+        println!(
+            "  tier {i}: window={:6} slots/gpu={:4} n={:5} lambda={:7.1} rho={:.3} ttft99={:.0}ms",
+            tier.c_max,
+            tier.n_max,
+            pool.n_gpus,
+            pool.lambda,
+            pool.rho_ana(),
+            pool.ttft_p99() * 1e3,
+        );
+    }
+}
+
+/// Plan a K-tier fleet at fixed windows (the `--tiers W1,..` form): the
+/// last window becomes the long-tier context, the rest the boundaries;
+/// the shared gamma grid is swept by `planner::plan_spec_sweep_gamma`.
+fn plan_fixed_windows(input: &PlanInput, windows: &[u32]) -> Result<TieredPlan> {
+    let k = windows.len();
+    let mut input = input.clone();
+    input.gpu.c_max_long = windows[k - 1];
+    let spec = input.gpu.fleet_spec(&windows[..k - 1]);
+    spec.validate()?;
+    Ok(plan_spec_sweep_gamma(&input, &spec)?)
+}
+
 fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
     let w = workload_arg(flags)?;
-    let lambda = flag_f64(flags, "lambda", 1000.0)?;
-    let b_short = flag_f64(flags, "b-short", w.b_short as f64)? as u32;
+    let lambda = flag_pos_f64(flags, "lambda", 1000.0)?;
     let input = PlanInput::new(w.clone(), lambda);
-
     let homo = plan_homogeneous(&input)?;
+
+    if let Some(tiers) = tiers_arg(flags)? {
+        print_plan("homogeneous", &homo, None);
+        let best = match tiers {
+            TiersArg::Windows(windows) => plan_fixed_windows(&input, &windows)?,
+            TiersArg::K(k) => sweep_tiered(&input, k)?.0,
+        };
+        print_tiered("fleetopt K-tier", &best, Some(homo.cost_yr));
+        return Ok(());
+    }
+
+    let b_short = flag_u32(flags, "b-short", w.b_short)?;
     print_plan("homogeneous", &homo, None);
     let pr = plan_fleet(&input, b_short, 1.0)?;
     print_plan("pool-routing", &pr, Some(homo.cost_yr));
-    if let Some(g) = flags.get("gamma") {
-        let gamma: f64 = g.parse()?;
+    if flags.contains_key("gamma") {
+        let gamma = flag_gamma(flags, "gamma", 1.5)?;
         let p = plan_fleet(&input, b_short, gamma)?;
         print_plan(&format!("pr+c&r (gamma={gamma})"), &p, Some(homo.cost_yr));
     }
@@ -129,8 +271,30 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
 
 fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
     let w = workload_arg(flags)?;
-    let lambda = flag_f64(flags, "lambda", 1000.0)?;
+    let lambda = flag_pos_f64(flags, "lambda", 1000.0)?;
     let input = PlanInput::new(w.clone(), lambda);
+
+    if let Some(tiers) = tiers_arg(flags)? {
+        let k = match &tiers {
+            TiersArg::Windows(ws) => ws.len(),
+            TiersArg::K(k) => *k,
+        };
+        let t0 = std::time::Instant::now();
+        let (best, grid) = sweep_tiered(&input, k)?;
+        let dt = t0.elapsed();
+        println!(
+            "swept {} K={k} cells in {:.1} ms",
+            grid.len(),
+            dt.as_secs_f64() * 1e3
+        );
+        print_tiered("optimum", &best, None);
+        if let TiersArg::Windows(windows) = tiers {
+            let fixed = plan_fixed_windows(&input, &windows)?;
+            print_tiered("fixed --tiers windows", &fixed, Some(best.cost_yr));
+        }
+        return Ok(());
+    }
+
     let cands = candidate_boundaries(&input);
     println!("candidate boundaries: {cands:?}");
     let t0 = std::time::Instant::now();
@@ -157,6 +321,11 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
 fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     let fast = flags.contains_key("fast");
     let only: Option<u32> = flags.get("only").map(|s| s.parse()).transpose()?;
+    if let Some(n) = only {
+        if !(1..=8).contains(&n) {
+            bail!("--only must name a table in 1..=8, got {n}");
+        }
+    }
     let want = |n: u32| only.is_none() || only == Some(n);
     let (docs, des_n, fid_n) = if fast { (10, 3_000, 30) } else { (60, 30_000, 300) };
 
@@ -181,13 +350,48 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     if want(7) {
         experiments::table7(fid_n, experiments::artifacts_dir().as_deref()).print();
     }
+    if want(8) {
+        experiments::table8(1000.0, if fast { 3 } else { 4 }).print();
+    }
     Ok(())
 }
 
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let w = workload_arg(flags)?;
-    let lambda = flag_f64(flags, "lambda", 1000.0)?;
-    let n = flag_f64(flags, "requests", 30_000.0)? as usize;
+    let lambda = flag_pos_f64(flags, "lambda", 1000.0)?;
+    let n = flag_count(flags, "requests", 30_000)? as usize;
+
+    if let Some(tiers) = tiers_arg(flags)? {
+        let input = PlanInput::new(w.clone(), lambda);
+        let plan = match tiers {
+            TiersArg::Windows(windows) => plan_fixed_windows(&input, &windows)?,
+            TiersArg::K(k) => sweep_tiered(&input, k)?.0,
+        };
+        print_tiered("K-tier plan", &plan, None);
+        let sim = simulate_fleet_tiered(&w, &plan, &input.gpu, lambda, n, 42);
+        for (i, (pool, res)) in plan.tiers.iter().zip(&sim.tiers).enumerate() {
+            match res {
+                Some(r) => {
+                    let mut ttft = r.ttft.clone();
+                    println!(
+                        "tier {i}: n={:5} rho_ana={:.3} rho_des={:.3} err={:+.1}% ttft99 des={:.0}ms",
+                        pool.n_gpus,
+                        pool.rho_ana(),
+                        r.utilization,
+                        (pool.rho_ana() - r.utilization) / r.utilization * 100.0,
+                        ttft.p99() * 1e3,
+                    );
+                }
+                None => println!("tier {i}: no traffic"),
+            }
+        }
+        println!(
+            "compressed at boundaries: {:?} of {} requests",
+            sim.routed.n_compressed_at, sim.routed.n_total
+        );
+        return Ok(());
+    }
+
     let (rows, _) = experiments::table5_validate(&w, lambda, n, 42);
     for r in rows {
         println!(
@@ -206,7 +410,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
 }
 
 fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
-    let tokens = flag_f64(flags, "tokens", 9000.0)? as u32;
+    let tokens = flag_u32(flags, "tokens", 9000)?;
     let seed = flag_f64(flags, "seed", 7.0)? as u64;
     let mut rng = Rng::new(seed);
     let doc = corpus::generate_document(
@@ -216,7 +420,7 @@ fn cmd_compress(flags: &HashMap<String, String>) -> Result<()> {
         },
         &mut rng,
     );
-    let budget = flag_f64(flags, "budget", tokens as f64 * 0.8)? as u32;
+    let budget = flag_u32(flags, "budget", (tokens as f64 * 0.8) as u32)?;
     let t0 = std::time::Instant::now();
     let c = compress(&doc, budget);
     let dt = t0.elapsed().as_secs_f64() * 1e3;
@@ -240,9 +444,22 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         .map(std::path::PathBuf::from)
         .or_else(experiments::artifacts_dir)
         .context("artifacts not found; run `make artifacts`")?;
-    let n = flag_f64(flags, "requests", 40.0)? as usize;
-    let rate = flag_f64(flags, "rate", 40.0)?;
+    let n = flag_count(flags, "requests", 40)? as usize;
+    let rate = flag_pos_f64(flags, "rate", 40.0)?;
     let enable_cr = !flags.contains_key("no-cr");
+
+    // Live-scale boundaries: the default mirrors the artifact set's dense
+    // 256-token short pool; `--tiers` accepts an explicit window list.
+    let gateway = match tiers_arg(flags)? {
+        None => GatewayConfig::two_tier(224, 1.5, enable_cr),
+        Some(TiersArg::Windows(windows)) => {
+            GatewayConfig::tiered(&windows[..windows.len() - 1], 1.5, enable_cr)
+        }
+        Some(TiersArg::K(_)) => {
+            bail!("serve --tiers needs explicit windows (e.g. 128,224,512)")
+        }
+    };
+    let k = gateway.n_tiers();
 
     let mut rng = Rng::new(11);
     let mut t = 0.0;
@@ -268,22 +485,17 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         })
         .collect();
     let cfg = ServeConfig {
-        gateway: GatewayConfig {
-            b_short: 224,
-            gamma: 1.5,
-            enable_cr,
-        },
-        replicas_short: 1,
-        replicas_long: 1,
+        gateway,
+        replicas: vec![1; k],
     };
     let mut report = serve(&dir, &cfg, items, 0.05)?;
-    println!("{}", report.short.summary());
-    println!("{}", report.long.summary());
+    for tier in &mut report.tiers {
+        println!("{}", tier.summary());
+    }
     println!(
-        "compressed={} short={} long={} throughput={:.1} req/s gateway={:.2} ms/req",
+        "compressed={} routed={:?} throughput={:.1} req/s gateway={:.2} ms/req",
         report.n_compressed,
-        report.n_routed_short,
-        report.n_routed_long,
+        report.n_routed,
         report.throughput_rps,
         report.mean_gateway_s * 1e3
     );

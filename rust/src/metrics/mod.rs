@@ -5,10 +5,10 @@
 use crate::coordinator::replica::FinishedRequest;
 use crate::util::stats::Samples;
 
-/// Latency/throughput metrics for one pool.
+/// Latency/throughput metrics for one pool (one fleet tier).
 #[derive(Debug)]
 pub struct PoolMetrics {
-    pub name: &'static str,
+    pub name: String,
     pub ttft: Samples,
     pub e2e: Samples,
     pub queue: Samples,
@@ -17,9 +17,9 @@ pub struct PoolMetrics {
 }
 
 impl PoolMetrics {
-    pub fn new(name: &'static str) -> Self {
+    pub fn new(name: impl Into<String>) -> Self {
         PoolMetrics {
-            name,
+            name: name.into(),
             ttft: Samples::new(),
             e2e: Samples::new(),
             queue: Samples::new(),

@@ -5,9 +5,21 @@ use crate::config::GpuProfile;
 /// Hours in the paper's annualization (Table 3: $/GPU-hr x 8,760 hr/yr).
 pub const HOURS_PER_YEAR: f64 = 8760.0;
 
+/// Annualized K-tier fleet cost `sum_i c_i n_i` (Eq. 9 generalized),
+/// dollars/yr. `counts` and `rates_hr` are per-tier, in tier order; the
+/// two-pool [`fleet_cost_yr`] is the K = 2 projection of this sum.
+pub fn fleet_cost_yr_tiered(counts: &[u64], rates_hr: &[f64]) -> f64 {
+    assert_eq!(counts.len(), rates_hr.len());
+    let mut acc = 0.0;
+    for (&n, &c) in counts.iter().zip(rates_hr) {
+        acc += n as f64 * c;
+    }
+    acc * HOURS_PER_YEAR
+}
+
 /// Annualized fleet cost C(n_s, n_l) = c_s n_s + c_l n_l (Eq. 9), dollars/yr.
 pub fn fleet_cost_yr(n_s: u64, n_l: u64, g: &GpuProfile) -> f64 {
-    (n_s as f64 * g.cost_short_hr + n_l as f64 * g.cost_long_hr) * HOURS_PER_YEAR
+    fleet_cost_yr_tiered(&[n_s, n_l], &[g.cost_short_hr, g.cost_long_hr])
 }
 
 /// Relative savings of `cost` versus `baseline` (Table 3's "Savings" column).
@@ -33,6 +45,16 @@ mod tests {
         assert!((savings(100.0, 60.0) - 0.4).abs() < 1e-12);
         assert!(savings(100.0, 100.0).abs() < 1e-12);
         assert!(savings(100.0, 120.0) < 0.0); // negative savings possible
+    }
+
+    #[test]
+    fn tiered_cost_reduces_to_two_pool() {
+        let g = GpuProfile::a100_llama70b();
+        let two = fleet_cost_yr(12, 7, &g);
+        let tiered = fleet_cost_yr_tiered(&[12, 7], &[g.cost_short_hr, g.cost_long_hr]);
+        assert_eq!(two.to_bits(), tiered.to_bits());
+        let three = fleet_cost_yr_tiered(&[10, 5, 2], &[1.0, 1.5, 2.21]);
+        assert!((three - (10.0 + 7.5 + 4.42) * HOURS_PER_YEAR).abs() < 1e-9);
     }
 
     #[test]

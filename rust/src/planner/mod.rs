@@ -1,14 +1,20 @@
 //! The FleetOpt offline planner (paper §4, §6): per-pool Erlang-C sizing,
 //! the Algorithm-1 (B, gamma) sweep with long-pool recalibration, the cost
-//! model, and the Prop.-1 marginal-cost analysis.
+//! model, the Prop.-1 marginal-cost analysis, and the K-tier
+//! generalization ([`tiered`]) of which the paper's two-pool planner is
+//! the K = 2 special case.
 
 pub mod cost;
 pub mod marginal;
 pub mod sizing;
 pub mod sweep;
+pub mod tiered;
 
 pub use sweep::{
     candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_homogeneous,
     sweep_full, sweep_full_serial, sweep_gamma, sweep_gamma_serial, CalibCache, Plan,
     PlanInput, PoolPlan,
+};
+pub use tiered::{
+    plan_spec_sweep_gamma, plan_tiers, sweep_tiered, sweep_tiered_serial, TierCell, TieredPlan,
 };

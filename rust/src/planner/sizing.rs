@@ -30,6 +30,9 @@ pub enum SizingError {
     InfeasibleSlo { budget_s: f64 },
     /// No fleet size within the search interval satisfied the constraint.
     SearchExhausted { hi: u64 },
+    /// The K-tier boundary sweep found no feasible cell (candidate grid
+    /// smaller than K−1, or every cell infeasible).
+    NoFeasibleTiering { k: usize },
 }
 
 impl std::fmt::Display for SizingError {
@@ -41,6 +44,9 @@ impl std::fmt::Display for SizingError {
             ),
             SizingError::SearchExhausted { hi } => {
                 write!(f, "no feasible GPU count found up to n = {hi}")
+            }
+            SizingError::NoFeasibleTiering { k } => {
+                write!(f, "no feasible K = {k} tiering over the candidate boundaries")
             }
         }
     }

@@ -98,7 +98,7 @@ pub struct PoolPlan {
 }
 
 impl PoolPlan {
-    fn empty() -> Self {
+    pub(crate) fn empty() -> Self {
         PoolPlan {
             n_gpus: 0,
             lambda: 0.0,
@@ -150,7 +150,7 @@ impl Plan {
 /// the cache lock; a racing duplicate insert writes the identical value
 /// (calibration is deterministic), so sharing the cache across threads
 /// cannot change results.
-fn calibrated(
+pub(crate) fn calibrated(
     input: &PlanInput,
     cache: Option<&CalibCache>,
     lo: f64,
@@ -191,6 +191,12 @@ pub fn plan_fleet_no_recalibration(
     plan_cell(input, b_short, gamma, false, None)
 }
 
+/// One Algorithm-1 cell, evaluated as the K = 2 special case of the
+/// generalized K-tier planner ([`crate::planner::tiered::plan_tiers`]) and
+/// projected back into the two-pool [`Plan`] shape. The tiered path
+/// performs bit-for-bit the same calibrations, shares, sizing calls and
+/// cost sum as the pre-refactor two-pool code (`tests/tier_equivalence.rs`
+/// holds the reference implementation as an oracle).
 fn plan_cell(
     input: &PlanInput,
     b_short: u32,
@@ -198,72 +204,10 @@ fn plan_cell(
     recalibrate_long: bool,
     cache: Option<&CalibCache>,
 ) -> Result<Plan, SizingError> {
-    assert!(gamma >= 1.0);
-    let w = &input.workload;
-    let g = &input.gpu;
-    let b = b_short as f64;
-    let alpha = w.cdf.cdf(b);
-    let beta = w.cdf.cdf(gamma * b) - alpha;
-    let p_c = if gamma > 1.0 { w.p_c } else { 0.0 };
-    let alpha_prime = alpha + beta * p_c;
-    let lambda_s = alpha_prime * input.lambda;
-    // Uncompressed borderline traffic (failed compressions, e.g. code) stays
-    // in the long pool along with everything above gamma*B.
-    let lambda_l = input.lambda - lambda_s;
-
-    let min_t = w.cdf.min_tokens();
-    let max_t = w.cdf.max_tokens();
-
-    // Short pool: Algorithm 1 line 5 — calibrate from F restricted to [1, B].
-    let short = if lambda_s > 0.0 && alpha > 0.0 {
-        let svc = calibrated(input, cache, min_t, b.min(max_t), g.n_max(b_short));
-        let n = min_gpus(
-            lambda_s,
-            &svc,
-            input.slo.p99_ttft_s,
-            input.cfg.rho_max,
-            input.strict_slo,
-        )?;
-        PoolPlan {
-            n_gpus: n,
-            lambda: lambda_s,
-            svc: Some(svc),
-        }
-    } else {
-        PoolPlan::empty()
-    };
-
-    // Long pool: line 6 — post-compression residual (gamma B, inf), unless
-    // the recalibration ablation is active (then (B, inf) as pre-compression).
-    let long_cut = if recalibrate_long { gamma * b } else { b };
-    let long = if lambda_l > input.lambda * 1e-9 && w.cdf.cdf(long_cut) < 1.0 - 1e-12 {
-        let svc = calibrated(input, cache, long_cut.max(min_t), max_t, g.n_max_long());
-        let n = min_gpus(
-            lambda_l,
-            &svc,
-            input.slo.p99_ttft_s,
-            input.cfg.rho_max,
-            input.strict_slo,
-        )?;
-        PoolPlan {
-            n_gpus: n,
-            lambda: lambda_l,
-            svc: Some(svc),
-        }
-    } else {
-        PoolPlan::empty()
-    };
-
-    Ok(Plan {
-        b_short,
-        gamma,
-        alpha,
-        beta,
-        alpha_prime,
-        cost_yr: fleet_cost_yr(short.n_gpus, long.n_gpus, g),
-        short,
-        long,
-    })
+    let spec = input.gpu.fleet_spec(&[b_short]);
+    let tiered =
+        crate::planner::tiered::plan_tiers(input, &spec, &[gamma], recalibrate_long, cache)?;
+    Ok(tiered.into_two_pool())
 }
 
 /// The homogeneous baseline (§7.1 baseline 1): a single pool sized for the
@@ -316,36 +260,29 @@ fn sweep_workers(cells: usize) -> usize {
         .max(1)
 }
 
-/// Evaluate Algorithm-1 cells (recalibrating long pools), optionally
-/// sharded across `std::thread::scope` workers against one merged
-/// calibration cache (§Perf). Results are returned in input order and are
-/// bit-identical to the serial evaluation: each cell's plan is a
-/// deterministic function of `input` alone (the shared cache only memoizes
-/// values every worker would compute identically).
-fn plan_cells(
-    input: &PlanInput,
-    cache: &CalibCache,
-    cells: &[(u32, f64)],
+/// Generic sharded map for sweep grids: evaluate `f` over `items`,
+/// optionally split across `std::thread::scope` workers (§Perf). Results
+/// are returned in input order and are bit-identical to the serial
+/// evaluation whenever `f` is deterministic — the planner's shared
+/// [`CalibCache`] only memoizes values every worker would compute
+/// identically. Shared by the (B, gamma) sweep and the K-tier boundary
+/// sweep (`planner::tiered`).
+pub(crate) fn par_map<T: Sync, R: Send>(
+    items: &[T],
     parallel: bool,
-) -> Result<Vec<Plan>, SizingError> {
-    let workers = if parallel { sweep_workers(cells.len()) } else { 1 };
+    f: impl Fn(&T) -> Result<R, SizingError> + Sync,
+) -> Result<Vec<R>, SizingError> {
+    let workers = if parallel { sweep_workers(items.len()) } else { 1 };
     if workers <= 1 {
-        return cells
-            .iter()
-            .map(|&(b, gamma)| plan_cell(input, b, gamma, true, Some(cache)))
-            .collect();
+        return items.iter().map(&f).collect();
     }
-    let chunk_len = cells.len().div_ceil(workers);
-    let shards: Result<Vec<Vec<Plan>>, SizingError> = std::thread::scope(|scope| {
-        let handles: Vec<_> = cells
+    let chunk_len = items.len().div_ceil(workers);
+    let fref = &f;
+    let shards: Result<Vec<Vec<R>>, SizingError> = std::thread::scope(|scope| {
+        let handles: Vec<_> = items
             .chunks(chunk_len)
             .map(|shard| {
-                scope.spawn(move || {
-                    shard
-                        .iter()
-                        .map(|&(b, gamma)| plan_cell(input, b, gamma, true, Some(cache)))
-                        .collect::<Result<Vec<Plan>, SizingError>>()
-                })
+                scope.spawn(move || shard.iter().map(fref).collect::<Result<Vec<R>, SizingError>>())
             })
             .collect();
         handles
@@ -354,6 +291,19 @@ fn plan_cells(
             .collect()
     });
     Ok(shards?.into_iter().flatten().collect())
+}
+
+/// Evaluate Algorithm-1 cells (recalibrating long pools) against one
+/// merged calibration cache.
+fn plan_cells(
+    input: &PlanInput,
+    cache: &CalibCache,
+    cells: &[(u32, f64)],
+    parallel: bool,
+) -> Result<Vec<Plan>, SizingError> {
+    par_map(cells, parallel, |&(b, gamma)| {
+        plan_cell(input, b, gamma, true, Some(cache))
+    })
 }
 
 /// The serial best-plan selection rule: first strictly-better (by > 1e-9)

@@ -1,0 +1,470 @@
+//! K-tier generalization of Algorithm 1: the equal-marginal-cost condition
+//! the paper derives for a single boundary extends naturally to K − 1
+//! boundaries, each with its own Compress-and-Route band.
+//!
+//! A [`FleetSpec`] orders K tiers by context window; tier `i < K-1` serves
+//! `L_total <= B_i` (window = boundary), each boundary `B_i` carries a
+//! compression bandwidth `gamma_i` whose band `(B_i, gamma_i B_i]`
+//! compresses *down into tier i*, and the last tier takes the residual.
+//! Every tier is sized by the same restricted-distribution Erlang-C
+//! inversion as the paper's two pools, with the same post-compression
+//! recalibration (§6 "Critical") applied per boundary: tier `i`'s service
+//! distribution is `F` restricted to `(gamma_{i-1} B_{i-1}, B_i]`.
+//!
+//! **Invariant:** with K = 2 this module *is* the two-pool planner —
+//! [`plan_tiers`] performs bit-for-bit the computation of the pre-refactor
+//! `plan_cell`, and `planner::sweep` routes `plan_fleet`/`sweep_full`
+//! through it (property-tested in `tests/tier_equivalence.rs`).
+
+use crate::config::FleetSpec;
+use crate::planner::cost::fleet_cost_yr_tiered;
+use crate::planner::sizing::{min_gpus, SizingError};
+use crate::planner::sweep::{
+    calibrated, candidate_boundaries, par_map, CalibCache, Plan, PlanInput, PoolPlan,
+};
+use crate::queueing::service::ServiceStats;
+use crate::workload::cdf::LengthDist;
+
+/// A provisioned K-tier fleet: the generalized planner's output tuple.
+#[derive(Clone, Debug)]
+pub struct TieredPlan {
+    /// The fleet shape this plan provisions (windows, slots, $/hr).
+    pub spec: FleetSpec,
+    /// Effective per-boundary compression bandwidths (clamped so no band
+    /// crosses the next boundary up).
+    pub gammas: Vec<f64>,
+    /// `F(B_i)` at each boundary (cumulative natural share below it).
+    pub nat_below: Vec<f64>,
+    /// Borderline band fraction `F(gamma_i B_i) − F(B_i)` per boundary.
+    pub betas: Vec<f64>,
+    /// Compressed share moved down across each boundary: `beta_i * p_c`.
+    pub gains: Vec<f64>,
+    /// One sized pool per tier, in tier order.
+    pub tiers: Vec<PoolPlan>,
+    pub cost_yr: f64,
+}
+
+impl TieredPlan {
+    pub fn k(&self) -> usize {
+        self.tiers.len()
+    }
+
+    pub fn total_gpus(&self) -> u64 {
+        self.tiers.iter().map(|t| t.n_gpus).sum()
+    }
+
+    pub fn boundaries(&self) -> Vec<u32> {
+        self.spec.boundaries()
+    }
+
+    pub fn gpu_counts(&self) -> Vec<u64> {
+        self.tiers.iter().map(|t| t.n_gpus).collect()
+    }
+
+    /// Project a K = 2 plan into the paper's two-pool [`Plan`] shape
+    /// (consumes the tier vector; all scalar fields are the exact values
+    /// the pre-refactor planner produced).
+    pub fn into_two_pool(mut self) -> Plan {
+        assert_eq!(self.tiers.len(), 2, "into_two_pool needs K = 2");
+        let long = self.tiers.pop().expect("long tier");
+        let short = self.tiers.pop().expect("short tier");
+        let alpha = self.nat_below[0];
+        Plan {
+            b_short: self.spec.tiers[0].c_max,
+            gamma: self.gammas[0],
+            alpha,
+            beta: self.betas[0],
+            alpha_prime: alpha + self.gains[0],
+            short,
+            long,
+            cost_yr: self.cost_yr,
+        }
+    }
+}
+
+/// Size a K-tier fleet at fixed boundaries and per-boundary gammas
+/// (Algorithm 1 generalized; one cell of [`sweep_tiered`]).
+///
+/// Traffic shares: tier `i` receives its natural range `(B_{i-1}, B_i]`
+/// plus the compressed fraction of its own band `(B_i, gamma_i B_i] * p_c`
+/// minus the fraction compressed down across `B_{i-1}`; the last tier's
+/// rate is the exact residual `lambda − sum(lower tiers)`, matching the
+/// two-pool `lambda_l = lambda − lambda_s` bit-for-bit at K = 2.
+///
+/// Approximation note (K >= 3): the workload's `p_c` is calibrated at its
+/// own evaluation band; this planner applies it at *every* boundary, while
+/// the DES/gateway realize per-band compressibility from category
+/// sampling. At K = 2 the two coincide exactly (same band); at K >= 3 the
+/// planner's mid-tier loads are a `p_c`-uniform approximation of the
+/// routed traffic.
+pub fn plan_tiers(
+    input: &PlanInput,
+    spec: &FleetSpec,
+    gammas: &[f64],
+    recalibrate: bool,
+    cache: Option<&CalibCache>,
+) -> Result<TieredPlan, SizingError> {
+    let k = spec.k();
+    assert!(k >= 2, "plan_tiers needs at least 2 tiers");
+    assert_eq!(gammas.len(), k - 1, "one gamma per boundary");
+    let w = &input.workload;
+    let min_t = w.cdf.min_tokens();
+    let max_t = w.cdf.max_tokens();
+    let boundaries = spec.boundaries();
+
+    // Effective gammas: a boundary's band may not cross the next boundary
+    // up — traffic in `(B_{i+1}, gamma_i B_i]` would otherwise skip a tier
+    // and the share accounting below (adjacent-tier transfers only) would
+    // not match the router. The last boundary is unclamped, so K = 2 is
+    // Algorithm 1 verbatim.
+    let mut eff = Vec::with_capacity(k - 1);
+    for (i, &g_i) in gammas.iter().enumerate() {
+        assert!(g_i >= 1.0);
+        eff.push(crate::compress::gate::clamp_gamma(
+            boundaries[i],
+            boundaries.get(i + 1).copied(),
+            g_i,
+        ));
+    }
+
+    let mut nat_below = Vec::with_capacity(k - 1);
+    let mut betas = Vec::with_capacity(k - 1);
+    let mut gains = Vec::with_capacity(k - 1);
+    for i in 0..k - 1 {
+        let b = boundaries[i] as f64;
+        let alpha_i = w.cdf.cdf(b);
+        let beta_i = w.cdf.cdf(eff[i] * b) - alpha_i;
+        // Eq. 1: only an open band (gamma > 1) compresses.
+        let p_c = if eff[i] > 1.0 { w.p_c } else { 0.0 };
+        nat_below.push(alpha_i);
+        betas.push(beta_i);
+        gains.push(beta_i * p_c);
+    }
+
+    // Erlang-C inversion for one sized tier (shared by every branch so the
+    // K = 2 path stays call-for-call identical to the pre-refactor code).
+    let size = |lambda_i: f64, svc: ServiceStats| -> Result<PoolPlan, SizingError> {
+        Ok(PoolPlan {
+            n_gpus: min_gpus(
+                lambda_i,
+                &svc,
+                input.slo.p99_ttft_s,
+                input.cfg.rho_max,
+                input.strict_slo,
+            )?,
+            lambda: lambda_i,
+            svc: Some(svc),
+        })
+    };
+
+    let mut tiers = Vec::with_capacity(k);
+    let mut counts = Vec::with_capacity(k);
+    let mut lambda_used = 0.0;
+    for i in 0..k {
+        let t = &spec.tiers[i];
+        let last = i + 1 == k;
+        // Lower calibration cut: the post-compression residual above the
+        // boundary below (§6 recalibration), or the raw boundary in the
+        // no-recalibration ablation.
+        let cut_prev = if i == 0 {
+            min_t
+        } else {
+            let bp = boundaries[i - 1] as f64;
+            if recalibrate {
+                eff[i - 1] * bp
+            } else {
+                bp
+            }
+        };
+        let lo_f = if i == 0 { 0.0 } else { nat_below[i - 1] };
+        let loss = if i == 0 { 0.0 } else { gains[i - 1] };
+
+        let pool = if last {
+            let lambda_i = input.lambda - lambda_used;
+            if lambda_i > input.lambda * 1e-9 && w.cdf.cdf(cut_prev) < 1.0 - 1e-12 {
+                let svc = calibrated(input, cache, cut_prev.max(min_t), max_t, t.n_max);
+                size(lambda_i, svc)?
+            } else {
+                PoolPlan::empty()
+            }
+        } else {
+            let nat = nat_below[i] - lo_f;
+            let share = ((nat_below[i] - lo_f) + gains[i]) - loss;
+            let lambda_i = share * input.lambda;
+            lambda_used += lambda_i;
+            let b = boundaries[i] as f64;
+            let hi = b.min(max_t);
+            if i == 0 {
+                // Bit-for-bit the pre-refactor short pool: calibrate from
+                // F restricted to [min, B] whenever it has natural mass.
+                if lambda_i > 0.0 && nat > 0.0 {
+                    let svc = calibrated(input, cache, min_t, hi, t.n_max);
+                    size(lambda_i, svc)?
+                } else {
+                    PoolPlan::empty()
+                }
+            } else if lambda_i > 0.0 {
+                // Middle tier: the widest-information calibration range
+                // that still has mass. A fully-clamped band can compress
+                // the entire post-compression residual away, and a flat
+                // CDF segment can empty the natural range too; a tier
+                // that still receives traffic must be provisioned, so
+                // fall back — last to the boundary's own band, where its
+                // compressed arrivals originate (pre-compression lengths:
+                // a conservative stand-in for the post-compression mix).
+                let has_mass = |lo: f64| lo < hi && w.cdf.cdf(lo) < w.cdf.cdf(hi) - 1e-12;
+                let lo_recal = cut_prev.max(min_t);
+                let lo_nat = (boundaries[i - 1] as f64).max(min_t);
+                let svc = if has_mass(lo_recal) {
+                    calibrated(input, cache, lo_recal, hi, t.n_max)
+                } else if has_mass(lo_nat) {
+                    calibrated(input, cache, lo_nat, hi, t.n_max)
+                } else if has_mass(min_t) {
+                    calibrated(input, cache, min_t, hi, t.n_max)
+                } else {
+                    // lambda_i > 0 with no mass below B_i forces
+                    // gains[i] > 0, so the band (B_i, gamma_i B_i] has
+                    // mass by construction.
+                    calibrated(input, cache, b.max(min_t), (eff[i] * b).min(max_t), t.n_max)
+                };
+                size(lambda_i, svc)?
+            } else {
+                PoolPlan::empty()
+            }
+        };
+        counts.push(pool.n_gpus);
+        tiers.push(pool);
+    }
+
+    let rates: Vec<f64> = spec.tiers.iter().map(|t| t.cost_hr).collect();
+    Ok(TieredPlan {
+        spec: spec.clone(),
+        gammas: eff,
+        nat_below,
+        betas,
+        gains,
+        cost_yr: fleet_cost_yr_tiered(&counts, &rates),
+        tiers,
+    })
+}
+
+/// One evaluated cell of the K-tier sweep grid.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TierCell {
+    pub boundaries: Vec<u32>,
+    pub gamma: f64,
+    pub cost_yr: f64,
+}
+
+/// Ascending `choose`-combinations of the candidate boundary grid.
+fn boundary_combos(cands: &[u32], choose: usize) -> Vec<Vec<u32>> {
+    fn rec(cands: &[u32], need: usize, start: usize, cur: &mut Vec<u32>, out: &mut Vec<Vec<u32>>) {
+        if need == 0 {
+            out.push(cur.clone());
+            return;
+        }
+        if start + need > cands.len() {
+            return;
+        }
+        for i in start..=cands.len() - need {
+            cur.push(cands[i]);
+            rec(cands, need - 1, i + 1, cur, out);
+            cur.pop();
+        }
+    }
+    let mut out = Vec::new();
+    rec(cands, choose, 0, &mut Vec::with_capacity(choose), &mut out);
+    out
+}
+
+/// Full K-tier Algorithm-1 sweep: every ascending (K−1)-subset of the
+/// candidate boundary grid crossed with the shared gamma grid (one gamma
+/// applied at every boundary, clamped per boundary by [`plan_tiers`]).
+/// Cells are sharded over scoped threads against one merged
+/// [`CalibCache`]; infeasible cells are skipped. Ties break toward earlier
+/// grid cells exactly as in `sweep_full`, and for K = 2 the selected
+/// optimum is bit-identical to `sweep_full`'s (tested).
+pub fn sweep_tiered(
+    input: &PlanInput,
+    k: usize,
+) -> Result<(TieredPlan, Vec<TierCell>), SizingError> {
+    sweep_tiered_with(input, k, true)
+}
+
+/// Single-threaded [`sweep_tiered`] (equivalence oracle / small hosts).
+pub fn sweep_tiered_serial(
+    input: &PlanInput,
+    k: usize,
+) -> Result<(TieredPlan, Vec<TierCell>), SizingError> {
+    sweep_tiered_with(input, k, false)
+}
+
+fn sweep_tiered_with(
+    input: &PlanInput,
+    k: usize,
+    parallel: bool,
+) -> Result<(TieredPlan, Vec<TierCell>), SizingError> {
+    assert!(k >= 2, "sweep_tiered needs at least 2 tiers");
+    let cands = candidate_boundaries(input);
+    let combos = boundary_combos(&cands, k - 1);
+    if combos.is_empty() {
+        return Err(SizingError::NoFeasibleTiering { k });
+    }
+    let cache = CalibCache::new();
+    let mut cells: Vec<(&[u32], f64)> = Vec::with_capacity(combos.len() * input.cfg.gammas.len());
+    for combo in &combos {
+        for &gamma in &input.cfg.gammas {
+            cells.push((combo.as_slice(), gamma));
+        }
+    }
+    let plans = par_map(&cells, parallel, |&(combo, gamma)| {
+        let spec = input.gpu.fleet_spec(combo);
+        Ok(plan_tiers(input, &spec, &vec![gamma; k - 1], true, Some(&cache)).ok())
+    })?;
+
+    let mut grid = Vec::with_capacity(cells.len());
+    let mut best: Option<TieredPlan> = None;
+    for (&(combo, gamma), plan) in cells.iter().zip(plans) {
+        let Some(plan) = plan else { continue };
+        grid.push(TierCell {
+            boundaries: combo.to_vec(),
+            gamma,
+            cost_yr: plan.cost_yr,
+        });
+        let better = match &best {
+            None => true,
+            Some(b) => plan.cost_yr < b.cost_yr - 1e-9,
+        };
+        if better {
+            best = Some(plan);
+        }
+    }
+    let best = best.ok_or(SizingError::NoFeasibleTiering { k })?;
+    Ok((best, grid))
+}
+
+/// Plan a fleet at a fixed [`FleetSpec`], sweeping the shared gamma grid
+/// and keeping the cheapest plan (ties break toward smaller gamma, as in
+/// Algorithm 1). Used by the `--tiers W1,W2,..` CLI path and the
+/// config-file examples.
+pub fn plan_spec_sweep_gamma(
+    input: &PlanInput,
+    spec: &FleetSpec,
+) -> Result<TieredPlan, SizingError> {
+    let k = spec.k();
+    let cache = CalibCache::new();
+    let mut best: Option<TieredPlan> = None;
+    for &gamma in &input.cfg.gammas {
+        // Infeasible grid cells are skipped, exactly as in sweep_tiered:
+        // one gamma blowing the SLO must not abort the whole sweep.
+        let Ok(plan) = plan_tiers(input, spec, &vec![gamma; k - 1], true, Some(&cache)) else {
+            continue;
+        };
+        let better = match &best {
+            None => true,
+            Some(b) => plan.cost_yr < b.cost_yr - 1e-9,
+        };
+        if better {
+            best = Some(plan);
+        }
+    }
+    best.ok_or(SizingError::NoFeasibleTiering { k })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::sweep::{plan_fleet, sweep_full};
+    use crate::workload::traces;
+
+    fn azure_input() -> PlanInput {
+        let mut i = PlanInput::new(traces::azure(), 1000.0);
+        i.cfg.mc_samples = 8_000;
+        i
+    }
+
+    #[test]
+    fn k2_projection_is_bit_identical_to_plan_fleet() {
+        let input = azure_input();
+        for gamma in [1.0, 1.5, 2.0] {
+            let spec = input.gpu.fleet_spec(&[4096]);
+            let tp = plan_tiers(&input, &spec, &[gamma], true, None).unwrap();
+            assert_eq!(tp.k(), 2);
+            let p2 = tp.into_two_pool();
+            let p = plan_fleet(&input, 4096, gamma).unwrap();
+            assert_eq!(p2.short.n_gpus, p.short.n_gpus);
+            assert_eq!(p2.long.n_gpus, p.long.n_gpus);
+            assert_eq!(p2.short.lambda.to_bits(), p.short.lambda.to_bits());
+            assert_eq!(p2.long.lambda.to_bits(), p.long.lambda.to_bits());
+            assert_eq!(p2.cost_yr.to_bits(), p.cost_yr.to_bits());
+            assert_eq!(p2.alpha_prime.to_bits(), p.alpha_prime.to_bits());
+        }
+    }
+
+    #[test]
+    fn k3_traffic_is_conserved() {
+        let input = azure_input();
+        let spec = input.gpu.fleet_spec(&[2048, 8192]);
+        let tp = plan_tiers(&input, &spec, &[1.5, 1.5], true, None).unwrap();
+        assert_eq!(tp.k(), 3);
+        let total: f64 = tp.tiers.iter().map(|t| t.lambda).sum();
+        assert!((total - 1000.0).abs() < 1e-9, "total lambda {total}");
+        for t in &tp.tiers {
+            assert!(t.lambda >= 0.0);
+        }
+    }
+
+    #[test]
+    fn band_is_clamped_at_next_boundary() {
+        let input = azure_input();
+        let spec = input.gpu.fleet_spec(&[1024, 1536]);
+        let tp = plan_tiers(&input, &spec, &[2.0, 2.0], true, None).unwrap();
+        assert!((tp.gammas[0] - 1.5).abs() < 1e-12, "gamma0 {}", tp.gammas[0]);
+        assert!((tp.gammas[1] - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn k3_never_loses_to_k2_on_azure_sweep() {
+        let input = azure_input();
+        let (best2, _) = sweep_full(&input).unwrap();
+        let (best3, grid3) = sweep_tiered(&input, 3).unwrap();
+        assert!(!grid3.is_empty());
+        // Integer sizing can cost a GPU or two at the margin, but a third
+        // tier must never be materially worse than the two-pool optimum.
+        assert!(
+            best3.cost_yr <= best2.cost_yr * 1.05,
+            "K=3 {} vs K=2 {}",
+            best3.cost_yr,
+            best2.cost_yr
+        );
+    }
+
+    #[test]
+    fn tiered_sweep_parallel_matches_serial() {
+        let input = azure_input();
+        let (bp, gp) = sweep_tiered(&input, 3).unwrap();
+        let (bs, gs) = sweep_tiered_serial(&input, 3).unwrap();
+        assert_eq!(gp, gs);
+        assert_eq!(bp.cost_yr.to_bits(), bs.cost_yr.to_bits());
+        assert_eq!(bp.boundaries(), bs.boundaries());
+        assert_eq!(bp.gpu_counts(), bs.gpu_counts());
+    }
+
+    #[test]
+    fn combos_enumerate_in_lexicographic_order() {
+        let c = boundary_combos(&[1, 2, 3, 4], 2);
+        assert_eq!(
+            c,
+            vec![
+                vec![1, 2],
+                vec![1, 3],
+                vec![1, 4],
+                vec![2, 3],
+                vec![2, 4],
+                vec![3, 4]
+            ]
+        );
+        assert_eq!(boundary_combos(&[1, 2], 3), Vec::<Vec<u32>>::new());
+        assert_eq!(boundary_combos(&[1, 2], 1), vec![vec![1], vec![2]]);
+    }
+}

@@ -1,32 +1,86 @@
 //! The gateway: classify → estimate → route, with C&R inline (paper §2.1,
-//! §5.1). This is the request-path embodiment of the planner's boundary:
-//! requests at or below `B_short` go short; borderline compressible
-//! requests are extractively compressed to `T_c = B_short − L_out` and
-//! re-routed short (the "virtual pool"); everything else goes long.
+//! §5.1), generalized to K-tier fleets. This is the request-path
+//! embodiment of the planner's boundaries: a request takes the first tier
+//! whose boundary fits it; a borderline compressible request just above
+//! tier i's boundary is extractively compressed to `T_c = B_i − L_out`
+//! and routed *into tier i* (the "virtual pool", per boundary); everything
+//! else falls through to the last (full-context) tier. With a single
+//! boundary this is the paper's two-pool gateway, decision for decision.
 
 use crate::compress::extractive::compress_with;
-use crate::compress::gate::{compression_budget, gate, GateDecision};
+use crate::compress::gate::{clamp_gamma, compression_budget, gate, GateDecision};
 use crate::compress::scratch::CompressScratch;
 use crate::compress::tokenizer::count_tokens;
 use crate::router::classify::classify;
 use crate::router::estimator::TokenEstimator;
-use crate::runtime::PoolKind;
 use crate::workload::request::Category;
 
-/// Gateway configuration: the planner's output (B_short, gamma) applied at
-/// the request path.
+/// One routing boundary: requests at or below `boundary` fit this tier;
+/// the C&R band reaches up to `gamma * boundary`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierRoute {
+    pub boundary: u32,
+    pub gamma: f64,
+}
+
+/// Gateway configuration: the planner's output boundaries applied at the
+/// request path. `tiers` holds the K−1 boundaries in ascending order; the
+/// implicit last tier takes everything above them.
 #[derive(Clone, Debug)]
 pub struct GatewayConfig {
-    pub b_short: u32,
-    pub gamma: f64,
+    pub tiers: Vec<TierRoute>,
     /// Compression enabled (false = plain pool routing baseline).
     pub enable_cr: bool,
+}
+
+impl GatewayConfig {
+    /// The paper's two-pool configuration: one boundary, one band.
+    pub fn two_tier(b_short: u32, gamma: f64, enable_cr: bool) -> Self {
+        GatewayConfig {
+            tiers: vec![TierRoute {
+                boundary: b_short,
+                gamma,
+            }],
+            enable_cr,
+        }
+    }
+
+    /// K-tier configuration with one shared gamma at every boundary. Each
+    /// boundary's band is clamped at the next boundary up
+    /// ([`clamp_gamma`]): traffic in `(B_{i+1}, gamma B_i]` belongs to a
+    /// tier the planner's adjacent-transfer accounting never moves, so
+    /// the router must not claim it either.
+    pub fn tiered(boundaries: &[u32], gamma: f64, enable_cr: bool) -> Self {
+        assert!(!boundaries.is_empty());
+        GatewayConfig {
+            tiers: boundaries
+                .iter()
+                .enumerate()
+                .map(|(i, &boundary)| TierRoute {
+                    boundary,
+                    gamma: clamp_gamma(boundary, boundaries.get(i + 1).copied(), gamma),
+                })
+                .collect(),
+            enable_cr,
+        }
+    }
+
+    /// Number of tiers K (boundaries + the implicit last tier).
+    pub fn n_tiers(&self) -> usize {
+        self.tiers.len() + 1
+    }
+
+    /// The first boundary (the paper's `B_short` at K = 2).
+    pub fn b_short(&self) -> u32 {
+        self.tiers[0].boundary
+    }
 }
 
 /// A routed request, ready for an engine pool.
 #[derive(Clone, Debug)]
 pub struct RoutedRequest {
-    pub pool: PoolKind,
+    /// Destination tier index (0 = densest pool, K−1 = full-context pool).
+    pub tier: usize,
     /// Final prompt text (compressed when C&R fired).
     pub text: String,
     /// Actual prompt tokens of `text` (shared tokenizer).
@@ -51,23 +105,33 @@ pub struct Gateway {
     pub cfg: GatewayConfig,
     pub estimator: TokenEstimator,
     scratch: CompressScratch,
-    pub n_routed_short: u64,
-    pub n_routed_long: u64,
+    /// Requests routed to each tier (len K).
+    pub n_routed: Vec<u64>,
     pub n_compressed: u64,
     pub n_compress_failed: u64,
 }
 
 impl Gateway {
     pub fn new(cfg: GatewayConfig) -> Self {
+        let k = cfg.n_tiers();
         Gateway {
             cfg,
             estimator: TokenEstimator::default(),
             scratch: CompressScratch::new(),
-            n_routed_short: 0,
-            n_routed_long: 0,
+            n_routed: vec![0; k],
             n_compressed: 0,
             n_compress_failed: 0,
         }
+    }
+
+    /// Requests routed to the densest tier.
+    pub fn n_routed_short(&self) -> u64 {
+        self.n_routed[0]
+    }
+
+    /// Requests routed to the full-context (last) tier.
+    pub fn n_routed_long(&self) -> u64 {
+        *self.n_routed.last().expect("at least two tiers")
     }
 
     /// Route one request. The returned `text` is what the engine prefills.
@@ -84,78 +148,77 @@ impl Gateway {
         let actual_prompt = count_tokens(text);
         self.estimator.update(text.len(), actual_prompt, category);
 
-        let gamma = if self.cfg.enable_cr { self.cfg.gamma } else { 1.0 };
-        let decision = gate(est_total, self.cfg.b_short, gamma, category);
-
-        let routed = match decision {
-            GateDecision::RouteShort => RoutedRequest {
-                pool: PoolKind::Short,
-                text: text.to_string(),
-                prompt_tokens: actual_prompt,
-                max_output_tokens,
-                category,
-                estimated_l_total: est_total,
-                compressed: false,
-                gateway_s: 0.0,
-            },
-            GateDecision::CompressAndRoute => {
-                match compression_budget(self.cfg.b_short, max_output_tokens) {
-                    Some(budget) => {
-                        let c = compress_with(&mut self.scratch, text, budget);
-                        if c.ok {
-                            self.n_compressed += 1;
-                            RoutedRequest {
-                                pool: PoolKind::Short,
-                                prompt_tokens: count_tokens(&c.text),
-                                text: c.text,
-                                max_output_tokens,
-                                category,
-                                estimated_l_total: est_total,
-                                compressed: true,
-                                gateway_s: 0.0,
+        let last_tier = self.cfg.tiers.len();
+        let mut routed = None;
+        for tier in 0..last_tier {
+            let tr = self.cfg.tiers[tier]; // Copy: no borrow held across the mutating compress call
+            let gamma = if self.cfg.enable_cr { tr.gamma } else { 1.0 };
+            // Re-clamp at use: `cfg.tiers` is public, so a hand-built
+            // config may carry unclamped gammas (no-op otherwise, and
+            // identical to the pre-refactor path at K = 2).
+            let gamma = clamp_gamma(
+                tr.boundary,
+                self.cfg.tiers.get(tier + 1).map(|t| t.boundary),
+                gamma,
+            );
+            match gate(est_total, tr.boundary, gamma, category) {
+                GateDecision::RouteShort => {
+                    routed = Some(RoutedRequest {
+                        tier,
+                        text: text.to_string(),
+                        prompt_tokens: actual_prompt,
+                        max_output_tokens,
+                        category,
+                        estimated_l_total: est_total,
+                        compressed: false,
+                        gateway_s: 0.0,
+                    });
+                    break;
+                }
+                GateDecision::CompressAndRoute => {
+                    match compression_budget(tr.boundary, max_output_tokens) {
+                        Some(budget) => {
+                            let c = compress_with(&mut self.scratch, text, budget);
+                            if c.ok {
+                                self.n_compressed += 1;
+                                routed = Some(RoutedRequest {
+                                    tier,
+                                    prompt_tokens: count_tokens(&c.text),
+                                    text: c.text,
+                                    max_output_tokens,
+                                    category,
+                                    estimated_l_total: est_total,
+                                    compressed: true,
+                                    gateway_s: 0.0,
+                                });
+                                break;
                             }
-                        } else {
+                            // Compression failed: fall through to the next
+                            // tier up (at K = 2, the long pool).
                             self.n_compress_failed += 1;
-                            self.long(text, actual_prompt, max_output_tokens, category, est_total)
+                        }
+                        None => {
+                            self.n_compress_failed += 1;
                         }
                     }
-                    None => {
-                        self.n_compress_failed += 1;
-                        self.long(text, actual_prompt, max_output_tokens, category, est_total)
-                    }
                 }
+                GateDecision::BandButUnsafe | GateDecision::RouteLong => {}
             }
-            GateDecision::BandButUnsafe | GateDecision::RouteLong => {
-                self.long(text, actual_prompt, max_output_tokens, category, est_total)
-            }
-        };
-        match routed.pool {
-            PoolKind::Short => self.n_routed_short += 1,
-            PoolKind::Long => self.n_routed_long += 1,
         }
+        let routed = routed.unwrap_or_else(|| RoutedRequest {
+            tier: last_tier,
+            text: text.to_string(),
+            prompt_tokens: actual_prompt,
+            max_output_tokens,
+            category,
+            estimated_l_total: est_total,
+            compressed: false,
+            gateway_s: 0.0,
+        });
+        self.n_routed[routed.tier] += 1;
         RoutedRequest {
             gateway_s: t0.elapsed().as_secs_f64(),
             ..routed
-        }
-    }
-
-    fn long(
-        &self,
-        text: &str,
-        prompt_tokens: u32,
-        max_output_tokens: u32,
-        category: Category,
-        est: u32,
-    ) -> RoutedRequest {
-        RoutedRequest {
-            pool: PoolKind::Long,
-            text: text.to_string(),
-            prompt_tokens,
-            max_output_tokens,
-            category,
-            estimated_l_total: est,
-            compressed: false,
-            gateway_s: 0.0,
         }
     }
 
@@ -183,13 +246,14 @@ impl Gateway {
         out
     }
 
-    /// Realized alpha' (Eq. 14 diagnostics).
+    /// Realized alpha' (Eq. 14 diagnostics): the fraction of traffic kept
+    /// out of the full-context tier.
     pub fn alpha_prime(&self) -> f64 {
-        let total = self.n_routed_short + self.n_routed_long;
+        let total: u64 = self.n_routed.iter().sum();
         if total == 0 {
             0.0
         } else {
-            self.n_routed_short as f64 / total as f64
+            (total - self.n_routed_long()) as f64 / total as f64
         }
     }
 }
@@ -201,11 +265,7 @@ mod tests {
     use crate::util::rng::Rng;
 
     fn gw(b_short: u32, enable_cr: bool) -> Gateway {
-        Gateway::new(GatewayConfig {
-            b_short,
-            gamma: 1.5,
-            enable_cr,
-        })
+        Gateway::new(GatewayConfig::two_tier(b_short, 1.5, enable_cr))
     }
 
     fn doc(tokens: u32, rng: &mut Rng) -> String {
@@ -224,7 +284,7 @@ mod tests {
         let mut rng = Rng::new(1);
         let text = doc(500, &mut rng);
         let r = g.route(&text, 64);
-        assert_eq!(r.pool, PoolKind::Short);
+        assert_eq!(r.tier, 0);
         assert!(!r.compressed);
         assert_eq!(r.text, text);
     }
@@ -236,7 +296,7 @@ mod tests {
         // ~2600 tokens: inside (2048, 3072].
         let text = doc(2600, &mut rng);
         let r = g.route(&text, 128);
-        assert_eq!(r.pool, PoolKind::Short, "decision for {} est tokens", r.estimated_l_total);
+        assert_eq!(r.tier, 0, "decision for {} est tokens", r.estimated_l_total);
         assert!(r.compressed);
         // Hard OOM guarantee at the gateway: prompt + output <= B.
         assert!(
@@ -254,7 +314,7 @@ mod tests {
         let mut rng = Rng::new(3);
         let code = corpus::generate_code(2600, &mut rng);
         let r = g.route(&code, 128);
-        assert_eq!(r.pool, PoolKind::Long);
+        assert_eq!(r.tier, 1);
         assert!(!r.compressed);
         assert_eq!(g.n_compressed, 0);
     }
@@ -265,7 +325,7 @@ mod tests {
         let mut rng = Rng::new(4);
         let text = doc(2600, &mut rng);
         let r = g.route(&text, 128);
-        assert_eq!(r.pool, PoolKind::Long);
+        assert_eq!(r.tier, 1);
     }
 
     #[test]
@@ -274,7 +334,7 @@ mod tests {
         let mut rng = Rng::new(5);
         let text = doc(4000, &mut rng); // far above gamma * B
         let r = g.route(&text, 128);
-        assert_eq!(r.pool, PoolKind::Long);
+        assert_eq!(r.tier, 1);
     }
 
     #[test]
@@ -286,7 +346,7 @@ mod tests {
         let text = doc(300, &mut rng);
         let r = g.route(&text, 1100);
         assert!(r.estimated_l_total > 1024 && r.estimated_l_total <= 1536);
-        assert_eq!(r.pool, PoolKind::Long);
+        assert_eq!(r.tier, 1);
         assert_eq!(g.n_compress_failed, 1);
     }
 
@@ -300,8 +360,8 @@ mod tests {
         }
         let long_text = doc(8000, &mut rng);
         g.route(&long_text, 32);
-        assert_eq!(g.n_routed_short, 5);
-        assert_eq!(g.n_routed_long, 1);
+        assert_eq!(g.n_routed_short(), 5);
+        assert_eq!(g.n_routed_long(), 1);
         assert!((g.alpha_prime() - 5.0 / 6.0).abs() < 1e-12);
     }
 
@@ -317,13 +377,13 @@ mod tests {
         let mut g2 = gw(2048, true);
         for (item, r1) in batch.iter().zip(&routed) {
             let r2 = g2.route(item.0, item.1);
-            assert_eq!(r1.pool, r2.pool);
+            assert_eq!(r1.tier, r2.tier);
             assert_eq!(r1.text, r2.text);
             assert_eq!(r1.compressed, r2.compressed);
             assert_eq!(r1.prompt_tokens, r2.prompt_tokens);
         }
         assert_eq!(g1.n_compressed, g2.n_compressed);
-        assert_eq!(g1.n_routed_short, g2.n_routed_short);
+        assert_eq!(g1.n_routed, g2.n_routed);
     }
 
     #[test]
@@ -333,5 +393,28 @@ mod tests {
         let text = doc(2600, &mut rng);
         let r = g.route(&text, 64);
         assert!(r.gateway_s > 0.0 && r.gateway_s < 1.0);
+    }
+
+    #[test]
+    fn three_tier_routing_lands_in_middle_tier() {
+        // Boundaries at 512 and 2048: a ~1000-token doc skips tier 0 and
+        // lands naturally in tier 1; a ~2600-token prose doc compresses
+        // down into tier 1 (band of the 2048 boundary).
+        let mut g = Gateway::new(GatewayConfig::tiered(&[512, 2048], 1.5, true));
+        assert_eq!(g.cfg.n_tiers(), 3);
+        let mut rng = Rng::new(10);
+        let mid = doc(1000, &mut rng);
+        let r = g.route(&mid, 64);
+        assert_eq!(r.tier, 1);
+        assert!(!r.compressed);
+        let borderline = doc(2600, &mut rng);
+        let r = g.route(&borderline, 64);
+        assert_eq!(r.tier, 1, "est {}", r.estimated_l_total);
+        assert!(r.compressed);
+        assert!(r.prompt_tokens + r.max_output_tokens <= 2048);
+        let huge = doc(6000, &mut rng);
+        let r = g.route(&huge, 64);
+        assert_eq!(r.tier, 2);
+        assert_eq!(g.n_routed, vec![0, 2, 1]);
     }
 }

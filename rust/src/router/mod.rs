@@ -8,4 +8,4 @@ pub mod gateway;
 
 pub use classify::classify;
 pub use estimator::TokenEstimator;
-pub use gateway::{Gateway, GatewayConfig, RoutedRequest};
+pub use gateway::{Gateway, GatewayConfig, RoutedRequest, TierRoute};

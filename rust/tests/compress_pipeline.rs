@@ -103,11 +103,7 @@ fn fidelity_bounds_hold_on_borderline_band() {
 fn gate_code_never_compressed_end_to_end() {
     // Generated code documents at borderline lengths must flow through the
     // gateway uncompressed regardless of budget pressure.
-    let mut g = Gateway::new(GatewayConfig {
-        b_short: 2048,
-        gamma: 1.5,
-        enable_cr: true,
-    });
+    let mut g = Gateway::new(GatewayConfig::two_tier(2048, 1.5, true));
     let mut rng = Rng::new(5);
     for _ in 0..5 {
         let code = corpus::generate_code(2_600, &mut rng);
@@ -176,11 +172,7 @@ fn realized_alpha_prime_matches_eq14() {
     // Drive the gateway with a synthetic banded mix and check the realized
     // short fraction equals alpha + beta * p_c within sampling noise.
     let b_short = 1024u32;
-    let mut g = Gateway::new(GatewayConfig {
-        b_short,
-        gamma: 1.5,
-        enable_cr: true,
-    });
+    let mut g = Gateway::new(GatewayConfig::two_tier(b_short, 1.5, true));
     let mut rng = Rng::new(6);
     let n = 150usize;
     let (mut alpha_n, mut beta_n) = (0usize, 0usize);

@@ -52,33 +52,30 @@ fn workload(n: usize, seed: u64) -> Vec<ServeItem> {
 #[test]
 fn two_pool_fleet_serves_mixed_workload() {
     let Some(dir) = artifacts() else { return };
-    let cfg = ServeConfig {
-        gateway: GatewayConfig {
-            b_short: B_SHORT,
-            gamma: 1.5,
-            enable_cr: true,
-        },
-        replicas_short: 1,
-        replicas_long: 1,
-    };
+    let cfg = ServeConfig::two_tier(GatewayConfig::two_tier(B_SHORT, 1.5, true), 1, 1);
     let items = workload(40, 1);
     let n = items.len() as u64;
     let mut report = serve(&dir, &cfg, items, 0.05).expect("serve");
 
     // Everything completes, across both pools.
-    assert_eq!(report.short.completed + report.long.completed, n);
-    assert!(report.short.completed > 0, "short pool must see traffic");
-    assert!(report.long.completed > 0, "long pool must see traffic");
+    assert_eq!(report.tiers.len(), 2);
+    assert_eq!(report.completed(), n);
+    assert!(report.tiers[0].completed > 0, "short pool must see traffic");
+    assert!(report.tiers[1].completed > 0, "long pool must see traffic");
     // C&R fired on borderline prose.
     assert!(report.n_compressed > 0, "expected compressions");
     // Every request produced tokens and a sane latency breakdown.
-    assert!(report.short.output_tokens > 0);
-    assert!(report.short.ttft.p50() > 0.0);
+    assert!(report.tiers[0].output_tokens > 0);
+    assert!(report.tiers[0].ttft.p50() > 0.0);
     assert!(report.throughput_rps > 0.0);
+    let (short_summary, long_summary) = {
+        let [s, l] = &mut report.tiers[..] else { unreachable!() };
+        (s.summary(), l.summary())
+    };
     println!(
         "e2e: {} | {} | compressed={} gw={:.2}ms",
-        report.short.summary(),
-        report.long.summary(),
+        short_summary,
+        long_summary,
         report.n_compressed,
         report.mean_gateway_s * 1e3,
     );
@@ -89,28 +86,12 @@ fn cr_keeps_borderline_out_of_long_pool() {
     let Some(dir) = artifacts() else { return };
     let items = workload(30, 2);
     let n_long_without = {
-        let cfg = ServeConfig {
-            gateway: GatewayConfig {
-                b_short: B_SHORT,
-                gamma: 1.5,
-                enable_cr: false,
-            },
-            replicas_short: 1,
-            replicas_long: 1,
-        };
-        serve(&dir, &cfg, items.clone(), 0.02).unwrap().n_routed_long
+        let cfg = ServeConfig::two_tier(GatewayConfig::two_tier(B_SHORT, 1.5, false), 1, 1);
+        serve(&dir, &cfg, items.clone(), 0.02).unwrap().n_routed_long()
     };
     let n_long_with = {
-        let cfg = ServeConfig {
-            gateway: GatewayConfig {
-                b_short: B_SHORT,
-                gamma: 1.5,
-                enable_cr: true,
-            },
-            replicas_short: 1,
-            replicas_long: 1,
-        };
-        serve(&dir, &cfg, items, 0.02).unwrap().n_routed_long
+        let cfg = ServeConfig::two_tier(GatewayConfig::two_tier(B_SHORT, 1.5, true), 1, 1);
+        serve(&dir, &cfg, items, 0.02).unwrap().n_routed_long()
     };
     assert!(
         n_long_with < n_long_without,
@@ -119,24 +100,44 @@ fn cr_keeps_borderline_out_of_long_pool() {
 }
 
 #[test]
-fn generation_is_deterministic_across_runs() {
+fn three_tier_fleet_serves_and_conserves() {
+    let Some(dir) = artifacts() else { return };
+    // A dense 128-token tier below the usual short pool: short prose lands
+    // in tier 0, mid-size in tier 1, the tail in tier 2.
+    let cfg = ServeConfig {
+        gateway: GatewayConfig::tiered(&[128, B_SHORT], 1.5, true),
+        replicas: vec![1, 1, 1],
+    };
+    let items = workload(30, 4);
+    let n = items.len() as u64;
+    let report = serve(&dir, &cfg, items, 0.02).expect("serve");
+    assert_eq!(report.tiers.len(), 3);
+    assert_eq!(report.completed(), n);
+    assert_eq!(report.n_routed.iter().sum::<u64>(), n);
+    assert!(report.n_routed_short() > 0, "dense tier must see traffic");
+}
+
+#[test]
+fn replica_count_mismatch_is_an_error() {
     let Some(dir) = artifacts() else { return };
     let cfg = ServeConfig {
-        gateway: GatewayConfig {
-            b_short: B_SHORT,
-            gamma: 1.5,
-            enable_cr: true,
-        },
-        replicas_short: 1,
-        replicas_long: 1,
+        gateway: GatewayConfig::two_tier(B_SHORT, 1.5, true),
+        replicas: vec![1, 1, 1], // three replica sets for two tiers
     };
+    assert!(serve(&dir, &cfg, workload(2, 5), 0.0).is_err());
+}
+
+#[test]
+fn generation_is_deterministic_across_runs() {
+    let Some(dir) = artifacts() else { return };
+    let cfg = ServeConfig::two_tier(GatewayConfig::two_tier(B_SHORT, 1.5, true), 1, 1);
     // Single request: output tokens must be identical run-to-run (greedy
     // decoding over a deterministic engine).
     let item = workload(1, 3);
     let r1 = serve(&dir, &cfg, item.clone(), 0.0).unwrap();
     let r2 = serve(&dir, &cfg, item, 0.0).unwrap();
-    assert_eq!(
-        r1.short.output_tokens + r1.long.output_tokens,
-        r2.short.output_tokens + r2.long.output_tokens
-    );
+    let out = |r: &fleetopt::coordinator::ServeReport| -> u64 {
+        r.tiers.iter().map(|t| t.output_tokens).sum()
+    };
+    assert_eq!(out(&r1), out(&r2));
 }

@@ -1,0 +1,430 @@
+//! The K-tier refactor's regression gate: the generalized planner, DES
+//! router, and fleet simulator must reproduce the pre-refactor two-pool
+//! outputs **bit-identically** at K = 2 on all three evaluation workloads.
+//!
+//! The reference implementations below are verbatim transcriptions of the
+//! pre-refactor `plan_cell` / `route_trace` / `simulate_fleet` logic,
+//! written against public APIs only — the same role `SimilarityMode::
+//! AllPairs` plays for the compressor (§Perf equivalence oracle). If a
+//! future change to the tiered path alters any K = 2 result by even one
+//! ULP, these tests fail.
+//!
+//! Also here: K = 3 structural properties (traffic conservation, no tier
+//! overflow), the sweep_tiered(K=2) == sweep_full identity, the Table-8
+//! acceptance check (K=3 <= K=2 on at least one trace), and the release-
+//! mode K=3 sweep wall-clock bound.
+
+use fleetopt::config::PlannerConfig;
+use fleetopt::fleetsim::sim::{simulate_pool, SimConfig, SimRequest};
+use fleetopt::fleetsim::{route_trace, simulate_fleet};
+use fleetopt::planner::cost::fleet_cost_yr;
+use fleetopt::planner::sizing::min_gpus;
+use fleetopt::planner::{
+    plan_fleet, plan_tiers, sweep_full, sweep_tiered, Plan, PlanInput, PoolPlan,
+};
+use fleetopt::queueing::service::calibrate_quadrature;
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::arrivals::PoissonArrivals;
+use fleetopt::workload::cdf::{LengthDist, TruncatedDist};
+use fleetopt::workload::traces::{self, Workload};
+
+fn fast_input(w: Workload, lambda: f64) -> PlanInput {
+    let mut i = PlanInput::new(w, lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: 8_000,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+/// Verbatim pre-refactor two-pool planner cell (Algorithm 1, one (B,
+/// gamma) point with long-pool recalibration), public API only.
+fn reference_two_pool(input: &PlanInput, b_short: u32, gamma: f64) -> Plan {
+    assert!(gamma >= 1.0);
+    let w = &input.workload;
+    let g = &input.gpu;
+    let b = b_short as f64;
+    let alpha = w.cdf.cdf(b);
+    let beta = w.cdf.cdf(gamma * b) - alpha;
+    let p_c = if gamma > 1.0 { w.p_c } else { 0.0 };
+    let alpha_prime = alpha + beta * p_c;
+    let lambda_s = alpha_prime * input.lambda;
+    let lambda_l = input.lambda - lambda_s;
+
+    let min_t = w.cdf.min_tokens();
+    let max_t = w.cdf.max_tokens();
+    let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
+    let calib = |lo: f64, hi: f64, n_slots: u32| {
+        let dist = TruncatedDist::new(w.cdf.clone(), lo, hi);
+        calibrate_quadrature(&dist, &w.output, g, n_slots, len_points, 8)
+    };
+
+    let short = if lambda_s > 0.0 && alpha > 0.0 {
+        let svc = calib(min_t, b.min(max_t), g.n_max(b_short));
+        let n = min_gpus(
+            lambda_s,
+            &svc,
+            input.slo.p99_ttft_s,
+            input.cfg.rho_max,
+            input.strict_slo,
+        )
+        .unwrap();
+        (n, lambda_s, Some(svc))
+    } else {
+        (0, 0.0, None)
+    };
+    let long_cut = gamma * b;
+    let long = if lambda_l > input.lambda * 1e-9 && w.cdf.cdf(long_cut) < 1.0 - 1e-12 {
+        let svc = calib(long_cut.max(min_t), max_t, g.n_max_long());
+        let n = min_gpus(
+            lambda_l,
+            &svc,
+            input.slo.p99_ttft_s,
+            input.cfg.rho_max,
+            input.strict_slo,
+        )
+        .unwrap();
+        (n, lambda_l, Some(svc))
+    } else {
+        (0, 0.0, None)
+    };
+
+    Plan {
+        b_short,
+        gamma,
+        alpha,
+        beta,
+        alpha_prime,
+        cost_yr: fleet_cost_yr(short.0, long.0, g),
+        short: PoolPlan {
+            n_gpus: short.0,
+            lambda: short.1,
+            svc: short.2,
+        },
+        long: PoolPlan {
+            n_gpus: long.0,
+            lambda: long.1,
+            svc: long.2,
+        },
+    }
+}
+
+#[test]
+fn k2_planner_bit_identical_to_reference_on_all_workloads() {
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        for (b, gamma) in [(w.b_short, 1.0), (w.b_short, 1.5), (w.b_short, 2.0), (2048, 1.3)] {
+            let generalized = plan_fleet(&input, b, gamma).unwrap();
+            let reference = reference_two_pool(&input, b, gamma);
+            assert_eq!(generalized.short.n_gpus, reference.short.n_gpus, "{} B={b}", w.name);
+            assert_eq!(generalized.long.n_gpus, reference.long.n_gpus, "{} B={b}", w.name);
+            assert_eq!(
+                generalized.short.lambda.to_bits(),
+                reference.short.lambda.to_bits(),
+                "{} B={b} gamma={gamma}: lambda_s",
+                w.name
+            );
+            assert_eq!(
+                generalized.long.lambda.to_bits(),
+                reference.long.lambda.to_bits(),
+                "{} B={b} gamma={gamma}: lambda_l",
+                w.name
+            );
+            assert_eq!(
+                generalized.cost_yr.to_bits(),
+                reference.cost_yr.to_bits(),
+                "{} B={b} gamma={gamma}: cost",
+                w.name
+            );
+            assert_eq!(generalized.alpha.to_bits(), reference.alpha.to_bits());
+            assert_eq!(generalized.beta.to_bits(), reference.beta.to_bits());
+            assert_eq!(
+                generalized.alpha_prime.to_bits(),
+                reference.alpha_prime.to_bits()
+            );
+            // Calibrated service stats must match to the bit as well.
+            for (got, want) in [
+                (&generalized.short.svc, &reference.short.svc),
+                (&generalized.long.svc, &reference.long.svc),
+            ] {
+                match (got, want) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.e_s.to_bits(), y.e_s.to_bits());
+                        assert_eq!(x.scv.to_bits(), y.scv.to_bits());
+                        assert_eq!(x.p99_prefill_s.to_bits(), y.p99_prefill_s.to_bits());
+                        assert_eq!(x.t_iter_s.to_bits(), y.t_iter_s.to_bits());
+                        assert_eq!(x.n_slots, y.n_slots);
+                    }
+                    (None, None) => {}
+                    _ => panic!("svc presence mismatch"),
+                }
+            }
+        }
+    }
+}
+
+/// Verbatim pre-refactor DES router.
+fn reference_route(
+    w: &Workload,
+    lambda: f64,
+    n: usize,
+    b_short: u32,
+    gamma: f64,
+    seed: u64,
+) -> (Vec<SimRequest>, Vec<SimRequest>, u64) {
+    let mut rng = Rng::new(seed ^ 0xF1EE7);
+    let arrivals = PoissonArrivals::new(lambda, seed);
+    let mut short = Vec::new();
+    let mut long = Vec::new();
+    let mut n_compressed = 0u64;
+    for (i, t) in arrivals.take(n).enumerate() {
+        let r = w.sample_request(i as u64, t, &mut rng);
+        let band_hi = fleetopt::compress::gate::band_hi(b_short, gamma);
+        if r.l_total <= b_short {
+            short.push(SimRequest {
+                arrival_s: t,
+                l_in: r.l_in,
+                l_out: r.l_out,
+            });
+        } else if r.l_total <= band_hi && r.category.compressible() && r.l_out < b_short {
+            n_compressed += 1;
+            short.push(SimRequest {
+                arrival_s: t,
+                l_in: b_short - r.l_out,
+                l_out: r.l_out,
+            });
+        } else {
+            long.push(SimRequest {
+                arrival_s: t,
+                l_in: r.l_in,
+                l_out: r.l_out,
+            });
+        }
+    }
+    (short, long, n_compressed)
+}
+
+fn assert_trace_eq(a: &[SimRequest], b: &[SimRequest], label: &str) {
+    assert_eq!(a.len(), b.len(), "{label}: length");
+    for (i, (x, y)) in a.iter().zip(b).enumerate() {
+        assert_eq!(x.arrival_s.to_bits(), y.arrival_s.to_bits(), "{label}[{i}]");
+        assert_eq!(x.l_in, y.l_in, "{label}[{i}]");
+        assert_eq!(x.l_out, y.l_out, "{label}[{i}]");
+    }
+}
+
+#[test]
+fn k2_route_trace_bit_identical_to_reference_on_all_workloads() {
+    for (i, w) in traces::all().iter().enumerate() {
+        for gamma in [1.0, 1.5] {
+            let seed = 100 + i as u64;
+            let (ref_short, ref_long, ref_comp) =
+                reference_route(w, 1000.0, 20_000, w.b_short, gamma, seed);
+            let routed = route_trace(w, 1000.0, 20_000, w.b_short, gamma, seed);
+            assert_trace_eq(&routed.short, &ref_short, &format!("{} short", w.name));
+            assert_trace_eq(&routed.long, &ref_long, &format!("{} long", w.name));
+            assert_eq!(routed.n_compressed, ref_comp, "{}", w.name);
+            assert_eq!(routed.n_total, 20_000);
+        }
+    }
+}
+
+#[test]
+fn k2_fleet_des_bit_identical_to_reference() {
+    // Pre-refactor simulate_fleet: route, then per-pool DES with 3x-E[S]
+    // warm-up. The tiered path must reproduce utilization and completion
+    // counts exactly (per-pool DES is deterministic given its trace).
+    for (i, w) in traces::all().iter().enumerate() {
+        let input = fast_input(w.clone(), 800.0);
+        let plan = plan_fleet(&input, w.b_short, 1.0).unwrap();
+        let g = input.gpu.clone();
+        let seed = 200 + i as u64;
+        let sim = simulate_fleet(w, &plan, &g, 800.0, 12_000, seed);
+
+        let (ref_short, ref_long, _) = reference_route(w, 800.0, 12_000, w.b_short, 1.0, seed);
+        let warm = |svc: &Option<fleetopt::queueing::service::ServiceStats>| {
+            svc.as_ref().map(|s| 3.0 * s.e_s).unwrap_or(0.0)
+        };
+        let ref_s = (plan.short.n_gpus > 0 && !ref_short.is_empty()).then(|| {
+            let mut cfg = SimConfig::new(g.clone(), plan.short.n_gpus, g.n_max(plan.b_short));
+            cfg.warmup_s = warm(&plan.short.svc);
+            simulate_pool(&cfg, &ref_short)
+        });
+        let ref_l = (plan.long.n_gpus > 0 && !ref_long.is_empty()).then(|| {
+            let mut cfg = SimConfig::new(g.clone(), plan.long.n_gpus, g.n_max_long());
+            cfg.warmup_s = warm(&plan.long.svc);
+            simulate_pool(&cfg, &ref_long)
+        });
+
+        for (got, want, label) in [(&sim.short, &ref_s, "short"), (&sim.long, &ref_l, "long")] {
+            match (got, want) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(
+                        a.utilization.to_bits(),
+                        b.utilization.to_bits(),
+                        "{} {label} rho",
+                        w.name
+                    );
+                    assert_eq!(a.completed, b.completed, "{} {label}", w.name);
+                    assert_eq!(a.window.0.to_bits(), b.window.0.to_bits());
+                    assert_eq!(a.window.1.to_bits(), b.window.1.to_bits());
+                }
+                (None, None) => {}
+                _ => panic!("{} {label}: presence mismatch", w.name),
+            }
+        }
+    }
+}
+
+#[test]
+fn k2_gateway_bit_identical_to_reference() {
+    // Verbatim pre-refactor gateway route(): classify -> estimate -> EMA
+    // update -> single-boundary gate -> compress-or-long. The K-tier
+    // gateway with one boundary must reproduce every decision, every
+    // compressed byte, and the shared estimator state.
+    use fleetopt::compress::corpus::{self, CorpusConfig};
+    use fleetopt::compress::extractive::compress_with;
+    use fleetopt::compress::gate::{compression_budget, gate, GateDecision};
+    use fleetopt::compress::scratch::CompressScratch;
+    use fleetopt::compress::tokenizer::count_tokens;
+    use fleetopt::router::{classify, Gateway, GatewayConfig, TokenEstimator};
+
+    let b_short = 2048u32;
+    let gamma = 1.5;
+    let mut gw = Gateway::new(GatewayConfig::two_tier(b_short, gamma, true));
+    let mut est = TokenEstimator::default();
+    let mut scratch = CompressScratch::new();
+    let mut rng = Rng::new(0x6A7E);
+    for i in 0..40u32 {
+        let target = match i % 4 {
+            0 => 300,
+            1 => 2600, // borderline band (compress path)
+            2 => 700,
+            _ => 4000, // above the band
+        };
+        let text = corpus::generate_document(
+            &CorpusConfig {
+                target_tokens: target,
+                ..Default::default()
+            },
+            &mut rng,
+        );
+        let max_output = 64u32;
+
+        let category = classify(&text);
+        let est_total = est.estimate_prompt_tokens(text.len(), category) + max_output;
+        let actual_prompt = count_tokens(&text);
+        est.update(text.len(), actual_prompt, category);
+        let (ref_tier, ref_text, ref_tokens, ref_compressed) =
+            match gate(est_total, b_short, gamma, category) {
+                GateDecision::RouteShort => (0usize, text.clone(), actual_prompt, false),
+                GateDecision::CompressAndRoute => match compression_budget(b_short, max_output) {
+                    Some(budget) => {
+                        let c = compress_with(&mut scratch, &text, budget);
+                        if c.ok {
+                            let tokens = count_tokens(&c.text);
+                            (0, c.text, tokens, true)
+                        } else {
+                            (1, text.clone(), actual_prompt, false)
+                        }
+                    }
+                    None => (1, text.clone(), actual_prompt, false),
+                },
+                GateDecision::BandButUnsafe | GateDecision::RouteLong => {
+                    (1, text.clone(), actual_prompt, false)
+                }
+            };
+
+        let r = gw.route(&text, max_output);
+        assert_eq!(r.tier, ref_tier, "doc {i}");
+        assert_eq!(r.estimated_l_total, est_total, "doc {i}");
+        assert_eq!(r.text, ref_text, "doc {i}");
+        assert_eq!(r.prompt_tokens, ref_tokens, "doc {i}");
+        assert_eq!(r.compressed, ref_compressed, "doc {i}");
+    }
+    assert!(gw.n_compressed > 0, "compress path must be exercised");
+    assert!(gw.n_routed_long() > 0, "long path must be exercised");
+}
+
+#[test]
+fn sweep_tiered_k2_selects_the_sweep_full_optimum() {
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let (best2, grid2) = sweep_full(&input).unwrap();
+        let (tiered, gridt) = sweep_tiered(&input, 2).unwrap();
+        assert_eq!(gridt.len(), grid2.len(), "{}", w.name);
+        assert_eq!(tiered.cost_yr.to_bits(), best2.cost_yr.to_bits(), "{}", w.name);
+        assert_eq!(tiered.boundaries(), vec![best2.b_short], "{}", w.name);
+        assert_eq!(tiered.gammas[0].to_bits(), best2.gamma.to_bits(), "{}", w.name);
+        assert_eq!(
+            tiered.gpu_counts(),
+            vec![best2.short.n_gpus, best2.long.n_gpus],
+            "{}",
+            w.name
+        );
+        // Grid costs agree cell-by-cell.
+        for (a, b) in gridt.iter().zip(&grid2) {
+            assert_eq!(a.boundaries, vec![b.0]);
+            assert_eq!(a.gamma.to_bits(), b.1.to_bits());
+            assert_eq!(a.cost_yr.to_bits(), b.2.to_bits());
+        }
+    }
+}
+
+#[test]
+fn k3_plan_conserves_traffic_and_orders_tiers() {
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let cands = fleetopt::planner::candidate_boundaries(&input);
+        assert!(cands.len() >= 2, "{}", w.name);
+        let spec = input.gpu.fleet_spec(&[cands[0], cands[cands.len() - 1]]);
+        let tp = plan_tiers(&input, &spec, &[1.5, 1.5], true, None).unwrap();
+        let total: f64 = tp.tiers.iter().map(|t| t.lambda).sum();
+        assert!((total - 1000.0).abs() < 1e-9, "{}: sum lambda {total}", w.name);
+        // Slot counts strictly decrease tier over tier at these windows.
+        for pair in tp.spec.tiers.windows(2) {
+            assert!(pair[0].n_max > pair[1].n_max);
+        }
+        // Every tier with traffic got capacity.
+        for (i, t) in tp.tiers.iter().enumerate() {
+            if t.lambda > 1.0 {
+                assert!(t.n_gpus > 0, "{} tier {i} has traffic but no GPUs", w.name);
+            }
+        }
+    }
+}
+
+#[test]
+fn table8_acceptance_k3_at_most_k2_on_some_trace() {
+    // Acceptance: a third tier pays (cost <=) on at least one evaluation
+    // trace — the cost-cliff argument applied recursively.
+    let mut wins = Vec::new();
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let (best2, _) = sweep_full(&input).unwrap();
+        let (best3, _) = sweep_tiered(&input, 3).unwrap();
+        if best3.cost_yr <= best2.cost_yr {
+            wins.push((w.name, best2.cost_yr, best3.cost_yr));
+        }
+    }
+    assert!(!wins.is_empty(), "K=3 never beat K=2 on any trace");
+}
+
+#[test]
+fn k3_sweep_meets_release_wall_clock_bound() {
+    // Acceptance: the full K=3 boundary-combination sweep finishes inside
+    // 100 ms in release mode (debug builds run it for coverage only).
+    let input = PlanInput::new(traces::azure(), 1000.0);
+    let t0 = std::time::Instant::now();
+    let (best, grid) = sweep_tiered(&input, 3).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(best.total_gpus() > 0);
+    assert!(!grid.is_empty());
+    if !cfg!(debug_assertions) {
+        assert!(
+            elapsed.as_secs_f64() < 0.1,
+            "K=3 sweep took {:.1} ms (>100 ms release bound)",
+            elapsed.as_secs_f64() * 1e3
+        );
+    }
+}
