@@ -46,6 +46,17 @@ pub struct TierSpec {
     pub n_max: u32,
     /// GPU cost for this tier, $/GPU-hr.
     pub cost_hr: f64,
+    /// Per-tier P99 TTFT SLO override, seconds. `None` inherits the
+    /// fleet-level [`Slo`] — exactly the pre-refactor global-SLO
+    /// behaviour, so configs without per-tier targets plan identically.
+    pub p99_ttft_s: Option<f64>,
+}
+
+impl TierSpec {
+    /// This tier's effective P99 TTFT target given the fleet default.
+    pub fn slo_or(&self, fleet_default_s: f64) -> f64 {
+        self.p99_ttft_s.unwrap_or(fleet_default_s)
+    }
 }
 
 /// An ordered K-tier fleet specification (windows strictly ascending; the
@@ -94,6 +105,14 @@ impl FleetSpec {
             if t.cost_hr <= 0.0 {
                 anyhow::bail!("tier at {} tokens has non-positive cost", t.c_max);
             }
+            if let Some(s) = t.p99_ttft_s {
+                if !s.is_finite() || s <= 0.0 {
+                    anyhow::bail!(
+                        "tier at {} tokens has non-positive P99 TTFT SLO {s}",
+                        t.c_max
+                    );
+                }
+            }
         }
         for t in &self.tiers[..self.tiers.len() - 1] {
             if t.n_max <= last.n_max {
@@ -138,6 +157,7 @@ impl FleetSpec {
                     c_max,
                     n_max: gpu.n_max(c_max),
                     cost_hr: default_cost,
+                    p99_ttft_s: None,
                 }
             } else {
                 let c_max = t
@@ -152,6 +172,7 @@ impl FleetSpec {
                         None => gpu.n_max(c_max),
                     },
                     cost_hr: t.get("cost_hr").and_then(Json::as_f64).unwrap_or(default_cost),
+                    p99_ttft_s: t.get("p99_ttft_s").and_then(Json::as_f64),
                 }
             };
             tiers.push(tier);
@@ -202,12 +223,14 @@ impl GpuProfile {
                 c_max: b,
                 n_max: self.n_max(b),
                 cost_hr: self.cost_short_hr,
+                p99_ttft_s: None,
             })
             .collect();
         tiers.push(TierSpec {
             c_max: self.c_max_long,
             n_max: self.n_max_long(),
             cost_hr: self.cost_long_hr,
+            p99_ttft_s: None,
         });
         FleetSpec { tiers }
     }
@@ -382,6 +405,29 @@ mod tests {
         assert_eq!(spec.tiers[0].cost_hr, 1.5);
         assert_eq!(spec.tiers[1].cost_hr, g.cost_long_hr);
         assert!(FleetSpec::from_json(&Json::parse("[4096]").unwrap(), &g).is_err());
+    }
+
+    #[test]
+    fn fleet_spec_per_tier_slo_parses_and_defaults() {
+        let g = GpuProfile::a100_llama70b();
+        let j = Json::parse(
+            r#"[{"c_max": 4096, "p99_ttft_s": 0.2}, {"c_max": 65536}]"#,
+        )
+        .unwrap();
+        let spec = FleetSpec::from_json(&j, &g).unwrap();
+        assert_eq!(spec.tiers[0].p99_ttft_s, Some(0.2));
+        assert_eq!(spec.tiers[1].p99_ttft_s, None);
+        assert_eq!(spec.tiers[0].slo_or(0.5), 0.2);
+        assert_eq!(spec.tiers[1].slo_or(0.5), 0.5);
+        // Plain window arrays inherit the fleet default everywhere.
+        let spec = g.fleet_spec(&[4096]);
+        assert!(spec.tiers.iter().all(|t| t.p99_ttft_s.is_none()));
+        // Non-positive per-tier SLOs are rejected.
+        let j = Json::parse(
+            r#"[{"c_max": 4096, "p99_ttft_s": -0.1}, {"c_max": 65536}]"#,
+        )
+        .unwrap();
+        assert!(FleetSpec::from_json(&j, &g).is_err());
     }
 
     #[test]

@@ -1,0 +1,132 @@
+//! The live autoscaling controller: configuration and replica-set sizing
+//! for [`crate::coordinator::serve::serve_autoscaled`].
+//!
+//! The live loop mirrors the DES controller
+//! ([`crate::fleetsim::autoscale`]): the gateway driver feeds a sliding
+//! [`OnlineEstimator`](crate::workload::online::OnlineEstimator) as it
+//! routes, and a controller thread wakes every epoch, re-estimates the
+//! window CDF and rate, runs the hysteretic
+//! [`Replanner`](crate::planner::replan::Replanner), and resizes the
+//! per-tier replica sets: scale-up spawns fresh replica threads (each
+//! paying its real ModelRuntime cold-start — the live analogue of the
+//! DES's provisioning delay), scale-down lets the highest-indexed
+//! replicas finish their in-flight requests and exit (connection
+//! draining; the shared tier queue keeps undispatched work).
+
+use crate::planner::replan::ReplanConfig;
+use crate::planner::{PlanInput, TieredPlan};
+
+/// Configuration for the live autoscaling controller.
+#[derive(Clone, Debug)]
+pub struct ControllerConfig {
+    /// Controller period, in workload (arrival-offset) seconds — scaled
+    /// by the serve loop's `time_scale` exactly like arrivals are.
+    pub epoch_s: f64,
+    /// Sliding estimation window, workload seconds.
+    pub window_s: f64,
+    /// Hysteresis knobs for the incremental planner.
+    pub replan: ReplanConfig,
+    /// Planner template (SLO, GPU profile, grid). The workload inside is
+    /// only a category/output template; the CDF is re-estimated live.
+    pub input: PlanInput,
+    /// The plan the fleet booted with (seeds the replanner).
+    pub initial: TieredPlan,
+    /// Scale factor from planner GPU counts to live replicas (a live demo
+    /// replica stands in for many planned GPUs).
+    pub gpus_per_replica: f64,
+    /// Hard ceiling on replicas per tier (live hosts are finite).
+    pub max_replicas: usize,
+    /// Multiplier on the peak-window rate estimate before planning — the
+    /// same knob as `AutoscaleConfig::target_headroom` in the DES, so the
+    /// live loop provisions with the identical upswing slack the
+    /// simulator's acceptance numbers were produced with.
+    pub target_headroom: f64,
+}
+
+impl ControllerConfig {
+    /// A controller whose replica scale maps the initial plan onto the
+    /// given starting replica counts: `gpus_per_replica` is chosen so the
+    /// initial plan's *largest* tier maps to its configured replica count.
+    pub fn scaled_to(
+        input: PlanInput,
+        initial: TieredPlan,
+        replicas: &[usize],
+        epoch_s: f64,
+        max_replicas: usize,
+    ) -> Self {
+        assert_eq!(initial.k(), replicas.len());
+        let mut scale = 1.0f64;
+        for (pool, &r) in initial.tiers.iter().zip(replicas) {
+            if pool.n_gpus > 0 && r > 0 {
+                scale = scale.max(pool.n_gpus as f64 / r as f64);
+            }
+        }
+        ControllerConfig {
+            epoch_s,
+            window_s: epoch_s * 2.0,
+            replan: ReplanConfig::default(),
+            input,
+            initial,
+            gpus_per_replica: scale,
+            max_replicas,
+            target_headroom: 1.10,
+        }
+    }
+}
+
+/// One live controller epoch (diagnostics; the live analogue of
+/// [`crate::metrics::EpochMetrics`], without DES-grade integrals).
+#[derive(Clone, Debug)]
+pub struct LiveEpoch {
+    /// Workload-time of the decision, seconds.
+    pub t_s: f64,
+    pub lambda_est: f64,
+    /// Replica targets per tier after this epoch's replan.
+    pub targets: Vec<usize>,
+    pub switched_layout: bool,
+}
+
+/// Map planner GPU counts onto live replica targets. Every tier keeps at
+/// least one replica (a zero-replica tier would strand queued requests),
+/// and no tier exceeds `max_replicas`.
+pub fn replica_targets(counts: &[u64], gpus_per_replica: f64, max_replicas: usize) -> Vec<usize> {
+    assert!(gpus_per_replica > 0.0);
+    assert!(max_replicas >= 1);
+    counts
+        .iter()
+        .map(|&n| {
+            let r = (n as f64 / gpus_per_replica).round() as usize;
+            r.clamp(1, max_replicas)
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::plan_spec_sweep_gamma;
+    use crate::workload::traces;
+
+    #[test]
+    fn replica_targets_clamp_and_round() {
+        assert_eq!(replica_targets(&[20, 5, 0], 10.0, 4), vec![2, 1, 1]);
+        assert_eq!(replica_targets(&[100, 1], 10.0, 4), vec![4, 1]);
+        assert_eq!(replica_targets(&[14, 16], 10.0, 4), vec![1, 2]);
+    }
+
+    #[test]
+    fn scaled_to_maps_initial_plan_onto_start_replicas() {
+        let mut input = PlanInput::new(traces::azure(), 1000.0);
+        input.cfg.mc_samples = 8_000;
+        let spec = input.gpu.fleet_spec(&[4096]);
+        let plan = plan_spec_sweep_gamma(&input, &spec).unwrap();
+        let counts = plan.gpu_counts();
+        let ctl = ControllerConfig::scaled_to(input, plan, &[2, 1], 5.0, 8);
+        let targets = replica_targets(&counts, ctl.gpus_per_replica, ctl.max_replicas);
+        // The initial plan must map back to at most the starting shape
+        // (the largest tier anchors the scale; smaller tiers round down
+        // to >= 1).
+        assert!(targets.iter().all(|&t| (1..=8).contains(&t)));
+        assert!(targets[0] <= 2 && targets[1] <= 1);
+    }
+}

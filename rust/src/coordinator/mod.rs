@@ -1,9 +1,14 @@
 //! The live serving coordinator: engine replicas (KV-slot manager +
-//! continuous batcher + chunked-prefill/decode scheduler) and the threaded
-//! K-tier serving loop fed by the gateway (two-pool at K = 2).
+//! continuous batcher + chunked-prefill/decode scheduler), the threaded
+//! K-tier serving loop fed by the gateway (two-pool at K = 2), and the
+//! periodic autoscaling controller that resizes replica sets live.
 
+pub mod controller;
 pub mod replica;
 pub mod serve;
 
+pub use controller::{replica_targets, ControllerConfig, LiveEpoch};
 pub use replica::{FinishedRequest, LiveRequest, Replica};
-pub use serve::{serve, ServeConfig, ServeItem, ServeReport};
+pub use serve::{
+    serve, serve_autoscaled, AutoscaledServeReport, ServeConfig, ServeItem, ServeReport,
+};

@@ -8,16 +8,18 @@
 //! two-pool deployment is the K = 2 case with one replica set per pool.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Result};
 
+use crate::coordinator::controller::{replica_targets, ControllerConfig, LiveEpoch};
 use crate::coordinator::replica::{FinishedRequest, LiveRequest, Replica};
 use crate::metrics::PoolMetrics;
 use crate::router::{Gateway, GatewayConfig};
 use crate::runtime::{ModelRuntime, PoolKind};
+use crate::workload::online::OnlineEstimator;
 
 /// Live fleet configuration: one replica count per tier (length must be
 /// `gateway.n_tiers()`).
@@ -113,6 +115,28 @@ fn tier_artifact(i: usize, k: usize) -> PoolKind {
     }
 }
 
+/// Every tier boundary must fit inside the context window of the AOT
+/// artifact its replicas execute; an oversized prompt would otherwise
+/// overflow a replica's KV slot mid-serve. Shared by [`serve`] and
+/// [`serve_autoscaled`].
+fn check_boundaries_fit(
+    gateway: &GatewayConfig,
+    manifest: &crate::runtime::Manifest,
+    k: usize,
+) -> Result<()> {
+    for (i, tr) in gateway.tiers.iter().enumerate() {
+        let shape = manifest.pool(tier_artifact(i, k));
+        if tr.boundary as usize > shape.ctx {
+            bail!(
+                "tier {i} boundary {} exceeds its artifact context window {}",
+                tr.boundary,
+                shape.ctx
+            );
+        }
+    }
+    Ok(())
+}
+
 /// Drive `items` through a live K-tier fleet. Arrivals are paced in real
 /// time by `time_scale` (0.1 = 10x faster than the offsets say); the
 /// gateway (classification + C&R compression) runs on the driver thread,
@@ -135,19 +159,7 @@ pub fn serve(
         );
     }
     let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
-    // Every tier boundary must fit inside the context window of the AOT
-    // artifact its replicas execute; an oversized prompt would otherwise
-    // overflow a replica's KV slot mid-serve.
-    for (i, tr) in cfg.gateway.tiers.iter().enumerate() {
-        let shape = manifest.pool(tier_artifact(i, k));
-        if tr.boundary as usize > shape.ctx {
-            bail!(
-                "tier {i} boundary {} exceeds its artifact context window {}",
-                tr.boundary,
-                shape.ctx
-            );
-        }
-    }
+    check_boundaries_fit(&cfg.gateway, &manifest, k)?;
     let pools: Vec<Arc<PoolState>> = (0..k).map(|_| Arc::new(PoolState::new())).collect();
     let done_feeding = Arc::new(AtomicBool::new(false));
     let in_flight = Arc::new(AtomicU64::new(0));
@@ -272,5 +284,318 @@ pub fn serve(
         n_compressed: gateway.n_compressed,
         n_routed: gateway.n_routed.clone(),
         mean_gateway_s: gateway_total_s / n_items.max(1) as f64,
+    })
+}
+
+/// [`serve`] with the autoscaling controller in the loop.
+#[derive(Debug)]
+pub struct AutoscaledServeReport {
+    pub report: ServeReport,
+    /// One entry per controller epoch that made a decision.
+    pub epochs: Vec<LiveEpoch>,
+}
+
+/// Everything a replica thread needs; bundled so live scale-up can spawn
+/// replicas from the controller thread with one clone.
+struct ReplicaCtx {
+    dir: std::path::PathBuf,
+    pools: Vec<Arc<PoolState>>,
+    done_feeding: Arc<AtomicBool>,
+    in_flight: Arc<AtomicU64>,
+    results: Arc<Mutex<Vec<(usize, FinishedRequest)>>>,
+    /// Per-tier replica targets; a replica whose index is at or above its
+    /// tier's target drains (finishes in-flight work, admits nothing new)
+    /// and then *parks* as a warm standby — it must not exit, or a later
+    /// scale-up back past its index could never be satisfied. Parked
+    /// replicas exit with everyone else once feeding is done and the
+    /// queue is empty.
+    targets: Arc<Vec<AtomicUsize>>,
+}
+
+fn spawn_replica(
+    ctx: &Arc<ReplicaCtx>,
+    tier: usize,
+    index: usize,
+    kind: PoolKind,
+) -> std::thread::JoinHandle<Result<()>> {
+    let ctx = ctx.clone();
+    std::thread::spawn(move || -> Result<()> {
+        let rt = Arc::new(ModelRuntime::load(&ctx.dir)?);
+        let mut replica = Replica::new(rt, kind);
+        let pool = &ctx.pools[tier];
+        loop {
+            let active = index < ctx.targets[tier].load(Ordering::Acquire);
+            {
+                let mut q = pool.queue.lock().unwrap();
+                if active {
+                    // Admit as many queued requests as there are free slots.
+                    while replica.n_free() > 0 {
+                        let Some(req) = q.pop_front() else { break };
+                        assert!(replica.admit(req));
+                    }
+                }
+                if !replica.has_work() {
+                    if ctx.done_feeding.load(Ordering::Acquire) && q.is_empty() {
+                        return Ok(());
+                    }
+                    // Idle — or drained (inactive): park on the condvar.
+                    // A re-raised target wakes this replica right back up
+                    // (the controller notifies after every retarget).
+                    let (guard, _) = pool
+                        .wake
+                        .wait_timeout(q, std::time::Duration::from_millis(20))
+                        .unwrap();
+                    drop(guard);
+                    continue;
+                }
+            }
+            for fin in replica.step()? {
+                ctx.in_flight.fetch_sub(1, Ordering::AcqRel);
+                ctx.results.lock().unwrap().push((tier, fin));
+            }
+        }
+    })
+}
+
+/// Drive `items` through a live K-tier fleet with a periodic autoscaling
+/// controller: the driver feeds a sliding-window estimator as it routes;
+/// every `ctl.epoch_s` (workload time) the controller re-estimates the
+/// CDF and rate, replans with hysteresis, and resizes the per-tier
+/// replica sets — scale-up spawns replica threads (real runtime
+/// cold-start), scale-down drains the highest-indexed replicas. With the
+/// controller quiescent (targets never change) the serving behaviour is
+/// the plain [`serve`] loop.
+pub fn serve_autoscaled(
+    artifacts_dir: &std::path::Path,
+    cfg: &ServeConfig,
+    ctl: &ControllerConfig,
+    items: Vec<ServeItem>,
+    time_scale: f64,
+) -> Result<AutoscaledServeReport> {
+    let k = cfg.gateway.n_tiers();
+    if cfg.replicas.len() != k {
+        bail!(
+            "replica counts ({}) must match tier count ({k})",
+            cfg.replicas.len()
+        );
+    }
+    if ctl.initial.k() != k {
+        bail!("controller plan has {} tiers, fleet has {k}", ctl.initial.k());
+    }
+    if cfg.replicas.iter().any(|&r| r == 0) {
+        bail!("every tier needs at least one starting replica");
+    }
+    let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
+    check_boundaries_fit(&cfg.gateway, &manifest, k)?;
+
+    let ctx = Arc::new(ReplicaCtx {
+        dir: artifacts_dir.to_path_buf(),
+        pools: (0..k).map(|_| Arc::new(PoolState::new())).collect(),
+        done_feeding: Arc::new(AtomicBool::new(false)),
+        in_flight: Arc::new(AtomicU64::new(0)),
+        results: Arc::new(Mutex::new(Vec::new())),
+        targets: Arc::new(
+            cfg.replicas
+                .iter()
+                .map(|&r| AtomicUsize::new(r))
+                .collect(),
+        ),
+    });
+    let handles: Arc<Mutex<Vec<std::thread::JoinHandle<Result<()>>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    let spawned: Vec<usize> = cfg.replicas.clone();
+    for (tier, &count) in cfg.replicas.iter().enumerate() {
+        let kind = tier_artifact(tier, k);
+        for index in 0..count {
+            let h = spawn_replica(&ctx, tier, index, kind);
+            handles.lock().unwrap().push(h);
+        }
+    }
+
+    // Controller thread: estimator snapshot -> replan -> retarget.
+    let estimator = Arc::new(Mutex::new(OnlineEstimator::new(ctl.window_s)));
+    let epochs: Arc<Mutex<Vec<LiveEpoch>>> = Arc::new(Mutex::new(Vec::new()));
+    let stop = Arc::new(AtomicBool::new(false));
+    let start = Instant::now();
+    let controller = {
+        let ctx = ctx.clone();
+        let estimator = estimator.clone();
+        let epochs = epochs.clone();
+        let stop = stop.clone();
+        let handles = handles.clone();
+        let ctl = ctl.clone();
+        let mut spawned_ctl = spawned.clone();
+        let epoch_wall = ctl.epoch_s * time_scale;
+        std::thread::spawn(move || {
+            let mut replanner =
+                crate::planner::Replanner::new(ctl.replan.clone(), ctl.initial.clone());
+            let mut next_wall = epoch_wall;
+            loop {
+                // Sleep in short slices so shutdown is prompt.
+                while start.elapsed().as_secs_f64() < next_wall {
+                    if stop.load(Ordering::Acquire) {
+                        return;
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(10));
+                }
+                next_wall += epoch_wall;
+                if stop.load(Ordering::Acquire) {
+                    return;
+                }
+                let now_items = start.elapsed().as_secs_f64() / time_scale.max(1e-12);
+                // Plan against the peak-window estimate plus headroom,
+                // exactly like the DES controller (`fleetsim::autoscale`):
+                // the mean estimate lags upswings by ~window/2.
+                let (lam, snap) = {
+                    let e = estimator.lock().unwrap();
+                    (
+                        e.peak_rate(now_items, 4) * ctl.target_headroom,
+                        e.snapshot(&ctl.input.workload),
+                    )
+                };
+                if lam <= 0.0 {
+                    continue;
+                }
+                let mut pi = ctl.input.clone();
+                pi.lambda = lam;
+                if let Some(sw) = snap {
+                    pi.workload = sw;
+                }
+                let Ok(out) = replanner.replan(&pi) else { continue };
+                let targets = replica_targets(
+                    &out.plan.gpu_counts(),
+                    ctl.gpus_per_replica,
+                    ctl.max_replicas,
+                );
+                for (tier, &target) in targets.iter().enumerate() {
+                    ctx.targets[tier].store(target, Ordering::Release);
+                    while spawned_ctl[tier] < target {
+                        let kind = tier_artifact(tier, ctx.targets.len());
+                        let h = spawn_replica(&ctx, tier, spawned_ctl[tier], kind);
+                        handles.lock().unwrap().push(h);
+                        spawned_ctl[tier] += 1;
+                    }
+                    ctx.pools[tier].wake.notify_all();
+                }
+                epochs.lock().unwrap().push(LiveEpoch {
+                    t_s: now_items,
+                    lambda_est: lam,
+                    targets,
+                    switched_layout: out.switched_layout,
+                });
+            }
+        })
+    };
+
+    // Driver: identical batch-routing ingress to `serve`, plus estimator
+    // feeding (the controller's eyes).
+    let mut gateway = Gateway::new(cfg.gateway.clone());
+    let vocab = manifest.model.vocab as u32;
+    let mut gateway_total_s = 0.0;
+    let n_items = items.len() as u64;
+    let mut next = 0usize;
+    while next < items.len() {
+        let target = items[next].arrival_offset_s * time_scale;
+        let elapsed = start.elapsed().as_secs_f64();
+        if target > elapsed {
+            std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
+        }
+        let now = start.elapsed().as_secs_f64();
+        let mut end = next + 1;
+        while end < items.len() && items[end].arrival_offset_s * time_scale <= now {
+            end += 1;
+        }
+        let batch: Vec<(&str, u32)> = items[next..end]
+            .iter()
+            .map(|it| (it.text.as_str(), it.max_output))
+            .collect();
+        let offsets: Vec<f64> = items[next..end].iter().map(|it| it.arrival_offset_s).collect();
+        gateway.route_batch_with(&batch, |idx, routed| {
+            gateway_total_s += routed.gateway_s;
+            // Observe the *pre-compression* length estimate: the planner
+            // applies its own band-compression accounting, so feeding it
+            // post-compression lengths would double-count C&R.
+            estimator
+                .lock()
+                .unwrap()
+                .observe(offsets[idx], routed.estimated_l_total);
+            let req = LiveRequest {
+                id: (next + idx) as u64,
+                tokens: crate::compress::tokenizer::hash_tokens(&routed.text, vocab),
+                max_output: routed.max_output_tokens,
+                arrival: Instant::now(),
+            };
+            ctx.in_flight.fetch_add(1, Ordering::AcqRel);
+            {
+                let mut q = ctx.pools[routed.tier].queue.lock().unwrap();
+                q.push_back(req);
+            }
+            ctx.pools[routed.tier].wake.notify_all();
+        });
+        next = end;
+    }
+    ctx.done_feeding.store(true, Ordering::Release);
+    for p in ctx.pools.iter() {
+        p.wake.notify_all();
+    }
+    // Join replicas (new ones may appear while we join — drain the list).
+    // Errors are collected, not propagated mid-join: the controller
+    // thread must be stopped before this function returns.
+    let mut first_err: Option<anyhow::Error> = None;
+    loop {
+        let batch: Vec<_> = {
+            let mut h = handles.lock().unwrap();
+            h.drain(..).collect()
+        };
+        if batch.is_empty() {
+            break;
+        }
+        for h in batch {
+            if let Err(e) = h.join().expect("replica thread panicked") {
+                first_err.get_or_insert(e);
+            }
+        }
+    }
+    stop.store(true, Ordering::Release);
+    controller.join().expect("controller thread panicked");
+    let duration_s = start.elapsed().as_secs_f64();
+
+    // Replicas the controller may have spawned after the last join sweep:
+    // one final drain.
+    let leftovers: Vec<_> = {
+        let mut h = handles.lock().unwrap();
+        h.drain(..).collect()
+    };
+    for h in leftovers {
+        if let Err(e) = h.join().expect("replica thread panicked") {
+            first_err.get_or_insert(e);
+        }
+    }
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+
+    let mut tiers: Vec<PoolMetrics> =
+        (0..k).map(|i| PoolMetrics::new(tier_name(i, k))).collect();
+    let all: Vec<(usize, FinishedRequest)> =
+        std::mem::take(&mut *ctx.results.lock().unwrap());
+    let completed = all.len() as u64;
+    for (tier, fin) in all {
+        tiers[tier].record(&fin);
+    }
+    let lost = ctx.in_flight.load(Ordering::Acquire);
+    if lost != 0 {
+        bail!("{lost} request(s) lost in flight ({completed} completed of {n_items})");
+    }
+    Ok(AutoscaledServeReport {
+        report: ServeReport {
+            tiers,
+            duration_s,
+            throughput_rps: completed as f64 / duration_s.max(1e-9),
+            n_compressed: gateway.n_compressed,
+            n_routed: gateway.n_routed.clone(),
+            mean_gateway_s: gateway_total_s / n_items.max(1) as f64,
+        },
+        epochs: std::mem::take(&mut *epochs.lock().unwrap()),
     })
 }

@@ -1,0 +1,819 @@
+//! Autoscaling fleet DES: the discrete-event half of the online control
+//! loop. Where [`crate::fleetsim::fleet::simulate_fleet_tiered`] replays a
+//! *fixed* plan against a stationary trace, this simulator drives a K-tier
+//! fleet through a **nonstationary** arrival process with a periodic
+//! controller in the loop:
+//!
+//! * every `epoch_s` the controller reads the sliding-window estimator
+//!   (rate + empirical CDF), calls the hysteretic
+//!   [`Replanner`](crate::planner::replan::Replanner), and rescales;
+//! * scale-**up** materializes after a provisioning (cold-start) delay;
+//! * scale-**down** drains: a victim GPU stops admitting, finishes its
+//!   in-flight requests, then leaves the fleet — no request is ever
+//!   dropped or duplicated (property-tested in
+//!   `tests/autoscale_control.rs`);
+//! * per-epoch utilization / P99 TTFT / GPU-hour series come out as
+//!   [`EpochMetrics`] — the evidence Table 9 and the CI smoke run consume.
+//!
+//! The per-GPU service model is exactly the lockstep-iteration model of
+//! [`crate::fleetsim::sim`] (Eq. 3–4, chunked prefill, first token after
+//! prefill + one decode step); routing across boundaries is decision-for-
+//! decision the same as `route_trace_tiered`, re-evaluated per arrival so
+//! a layout switch (a *software* re-tiering — the paper's central claim)
+//! takes effect immediately while hardware changes wait out the
+//! provisioning delay.
+
+use std::collections::VecDeque;
+
+use crate::fleetsim::events::EventQueue;
+use crate::metrics::{EpochMetrics, EpochTierMetrics};
+use crate::planner::replan::{ReplanConfig, Replanner};
+use crate::planner::{PlanInput, TieredPlan};
+use crate::util::rng::Rng;
+use crate::util::stats::Samples;
+use crate::workload::arrivals::{ArrivalProcess, NonstationaryArrivals, RateModel};
+use crate::workload::online::OnlineEstimator;
+use crate::workload::request::Request;
+use crate::workload::traces::Workload;
+
+/// Control-loop configuration for [`simulate_autoscale`].
+#[derive(Clone, Debug)]
+pub struct AutoscaleConfig {
+    /// Controller period, seconds.
+    pub epoch_s: f64,
+    /// Sliding estimation window, seconds (typically 2x the epoch).
+    pub window_s: f64,
+    /// Cold-start delay before a scaled-up GPU serves traffic, seconds.
+    pub provision_delay_s: f64,
+    /// Floor per tier (>= 1: a tier must keep one GPU so queued traffic
+    /// can always eventually drain).
+    pub min_gpus_per_tier: u64,
+    /// Hysteresis knobs for the incremental planner.
+    pub replan: ReplanConfig,
+    /// Multiplier on the estimated rate before planning (> 1 buys slack
+    /// against estimator lag plus the provisioning delay on upswings —
+    /// during the cold-start window demand keeps growing past whatever
+    /// was just provisioned).
+    pub target_headroom: f64,
+    /// `false` freezes the initial plan (the static baselines of Table 9
+    /// run through the identical simulator, controller off).
+    pub replanning: bool,
+}
+
+impl Default for AutoscaleConfig {
+    fn default() -> Self {
+        AutoscaleConfig {
+            epoch_s: 30.0,
+            window_s: 60.0,
+            provision_delay_s: 10.0,
+            min_gpus_per_tier: 1,
+            replan: ReplanConfig::default(),
+            target_headroom: 1.10,
+            replanning: true,
+        }
+    }
+}
+
+/// Whole-run results of an autoscaled simulation.
+#[derive(Debug)]
+pub struct AutoscaleReport {
+    pub epochs: Vec<EpochMetrics>,
+    pub n_total: u64,
+    pub completed: u64,
+    /// Requests never completed (0 unless the run was cut short — the
+    /// conservation property the drain logic is tested against).
+    pub censored: u64,
+    /// Requests compressed down across a boundary (C&R).
+    pub n_compressed: u64,
+    /// Provisioned GPU-time over the run, hours.
+    pub gpu_hours: f64,
+    /// GPU-time priced at the per-tier rates, dollars.
+    pub cost: f64,
+    /// Time of the last completion, seconds.
+    pub horizon_s: f64,
+    /// Fraction of epochs in which every tier met its queue-wait SLO
+    /// budget (see [`crate::metrics::EpochTierMetrics::wait_p99_s`]).
+    pub slo_ok_frac: f64,
+    pub layout_switches: u64,
+    /// GPUs alive per tier at the end of the run.
+    pub final_gpus: Vec<u64>,
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Active {
+    req: usize,
+    prefill_left: u32,
+    iters_left: u32,
+    first_token_done: bool,
+}
+
+struct AGpu {
+    slots: Vec<Option<Active>>,
+    n_busy: u32,
+    iterating: bool,
+    draining: bool,
+    alive: bool,
+    t_iter: f64,
+}
+
+impl AGpu {
+    fn new(n_slots: u32, t_iter: f64) -> Self {
+        AGpu {
+            slots: vec![None; n_slots as usize],
+            n_busy: 0,
+            iterating: false,
+            draining: false,
+            alive: true,
+            t_iter,
+        }
+    }
+
+    fn free_slots(&self) -> u32 {
+        self.slots.len() as u32 - self.n_busy
+    }
+}
+
+struct Tier {
+    queue: VecDeque<usize>,
+    gpus: Vec<AGpu>,
+    /// Provisioned (alive) GPUs, including draining ones — they still run.
+    n_alive: u64,
+    /// Sum of slots across alive GPUs.
+    prov_slots: u64,
+    /// Busy slots across alive GPUs.
+    busy_slots: u64,
+    /// Scale-ups scheduled but not yet materialized (gross).
+    pending: u64,
+    /// Of `pending`, how many to discard on arrival (scale-down overtook
+    /// an in-flight scale-up; provisioning events cannot be recalled).
+    cancel: u64,
+    /// Controller target after the latest replan.
+    target: u64,
+    /// Slot count / price / SLO for *newly provisioned* GPUs (changes on
+    /// a layout switch).
+    n_slots_cfg: u32,
+    cost_hr: f64,
+    slo_s: f64,
+    /// Queue-wait budget the epoch SLO check compares against — derived
+    /// from the current plan's calibrated service stats exactly as
+    /// `planner::sizing::min_gpus` derives its feasibility budget (Eq. 8,
+    /// falling back to the pure-wait SLO when prefill alone exceeds it).
+    wait_budget_s: f64,
+    // Piecewise-constant integrals, epoch-local and whole-run.
+    last_t: f64,
+    busy_acc: f64,
+    prov_acc: f64,
+    gpu_acc: f64,
+    gpu_total: f64,
+    // Epoch-local counters.
+    ttft_epoch: Samples,
+    wait_epoch: Samples,
+    completed_epoch: u64,
+    arrivals_epoch: u64,
+    // Whole-run counters.
+    completed_total: u64,
+    arrivals_total: u64,
+}
+
+impl Tier {
+    fn new(
+        n0: u64,
+        n_slots: u32,
+        t_iter: f64,
+        cost_hr: f64,
+        slo_s: f64,
+        wait_budget_s: f64,
+    ) -> Self {
+        Tier {
+            queue: VecDeque::new(),
+            gpus: (0..n0).map(|_| AGpu::new(n_slots, t_iter)).collect(),
+            n_alive: n0,
+            prov_slots: n0 * n_slots as u64,
+            busy_slots: 0,
+            pending: 0,
+            cancel: 0,
+            target: n0,
+            n_slots_cfg: n_slots,
+            cost_hr,
+            slo_s,
+            wait_budget_s,
+            last_t: 0.0,
+            busy_acc: 0.0,
+            prov_acc: 0.0,
+            gpu_acc: 0.0,
+            gpu_total: 0.0,
+            ttft_epoch: Samples::new(),
+            wait_epoch: Samples::new(),
+            completed_epoch: 0,
+            arrivals_epoch: 0,
+            completed_total: 0,
+            arrivals_total: 0,
+        }
+    }
+
+    /// Advance the piecewise-constant integrals to `t`. Must run before
+    /// any capacity/occupancy change at `t`.
+    fn integrate(&mut self, t: f64) {
+        if t <= self.last_t {
+            return;
+        }
+        let dt = t - self.last_t;
+        self.busy_acc += self.busy_slots as f64 * dt;
+        self.prov_acc += self.prov_slots as f64 * dt;
+        self.gpu_acc += self.n_alive as f64 * dt;
+        self.gpu_total += self.n_alive as f64 * dt;
+        self.last_t = t;
+    }
+
+    /// Alive GPUs that are accepting work (not draining).
+    fn n_active(&self) -> u64 {
+        self.gpus
+            .iter()
+            .filter(|g| g.alive && !g.draining)
+            .count() as u64
+    }
+
+    /// The idle-most admitting GPU, if any (the arrival wake target).
+    fn wake_candidate(&self) -> Option<usize> {
+        let mut best: Option<(usize, u32)> = None;
+        for (i, g) in self.gpus.iter().enumerate() {
+            if g.alive && !g.draining && !g.iterating {
+                let f = g.free_slots();
+                let better = match best {
+                    None => true,
+                    Some((_, bf)) => f > bf,
+                };
+                if better {
+                    best = Some((i, f));
+                }
+            }
+        }
+        best.map(|(i, _)| i)
+    }
+
+    /// Admit queued requests onto GPU `gi` while it has free slots,
+    /// recording each admission's queue wait.
+    fn admit_into(
+        &mut self,
+        gi: usize,
+        t: f64,
+        arrival_of: &[f64],
+        l_in_routed: &[u32],
+        l_out_of: &[u32],
+        chunk: u32,
+    ) {
+        loop {
+            {
+                let g = &self.gpus[gi];
+                if !g.alive || g.draining || g.free_slots() == 0 {
+                    return;
+                }
+            }
+            let Some(req) = self.queue.pop_front() else {
+                return;
+            };
+            self.wait_epoch.push(t - arrival_of[req]);
+            let g = &mut self.gpus[gi];
+            let prefill = (l_in_routed[req] as u64).div_ceil(chunk as u64) as u32;
+            let slot = g.slots.iter().position(Option::is_none).expect("free slot");
+            g.slots[slot] = Some(Active {
+                req,
+                prefill_left: prefill,
+                iters_left: prefill + l_out_of[req],
+                first_token_done: false,
+            });
+            g.n_busy += 1;
+            self.busy_slots += 1;
+        }
+    }
+
+    /// Remove an empty GPU from the fleet (drain completed, or an idle
+    /// scale-down victim).
+    fn retire(&mut self, gi: usize) {
+        let g = &mut self.gpus[gi];
+        debug_assert!(g.alive && g.n_busy == 0, "retiring a busy/dead GPU");
+        g.alive = false;
+        g.draining = false;
+        self.n_alive -= 1;
+        self.prov_slots -= g.slots.len() as u64;
+    }
+
+    /// Scale down by `count` GPUs: idle victims retire immediately, busy
+    /// ones drain (stop admitting, finish in-flight, then retire).
+    fn drain(&mut self, count: u64) {
+        let mut left = count;
+        let idle: Vec<usize> = (0..self.gpus.len())
+            .filter(|&i| {
+                let g = &self.gpus[i];
+                g.alive && !g.draining && g.n_busy == 0
+            })
+            .collect();
+        for gi in idle {
+            if left == 0 {
+                return;
+            }
+            self.retire(gi);
+            left -= 1;
+        }
+        if left > 0 {
+            let mut busy: Vec<usize> = (0..self.gpus.len())
+                .filter(|&i| {
+                    let g = &self.gpus[i];
+                    g.alive && !g.draining
+                })
+                .collect();
+            busy.sort_by_key(|&i| self.gpus[i].n_busy);
+            for gi in busy {
+                if left == 0 {
+                    return;
+                }
+                self.gpus[gi].draining = true;
+                left -= 1;
+            }
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+enum Ev {
+    Arrival(usize),
+    /// (tier, gpu index)
+    Iteration(usize, usize),
+    /// (tier, GPU count) — scale-up materializing after the delay.
+    Provision(usize, u64),
+    Epoch,
+}
+
+/// The queue-wait budget a tier's SLO check compares against — the exact
+/// Eq. 8 budget `T_slo - T_prefill^(99) - t_iter` when non-negative, else
+/// the pure-wait fallback (`planner::sizing`'s paper-consistency note:
+/// prefill alone can exceed the SLO at dense slot counts, and sizing is
+/// then rho_max-dominated with a wait-only SLO).
+fn wait_budget_s(slo_s: f64, svc: &Option<crate::queueing::service::ServiceStats>) -> f64 {
+    match svc {
+        Some(s) => {
+            let b = slo_s - s.p99_prefill_s - s.t_iter_s;
+            if b >= 0.0 {
+                b
+            } else {
+                slo_s
+            }
+        }
+        None => slo_s,
+    }
+}
+
+fn maybe_schedule_iteration(
+    tiers: &mut [Tier],
+    events: &mut EventQueue<Ev>,
+    t: f64,
+    ti: usize,
+    gi: usize,
+) {
+    let (alive, busy, iterating, t_iter) = {
+        let g = &tiers[ti].gpus[gi];
+        (g.alive, g.n_busy, g.iterating, g.t_iter)
+    };
+    if alive && busy > 0 && !iterating {
+        tiers[ti].gpus[gi].iterating = true;
+        events.schedule(t + t_iter, Ev::Iteration(ti, gi));
+    }
+}
+
+/// Rescale the fleet to a freshly adopted plan. Routing flips to the new
+/// boundaries/gammas immediately — that part is software (the paper's
+/// claim). Hardware follows: a tier whose slot shape changed is replaced
+/// rolling-style (cancel incoming capacity, drain every live GPU,
+/// provision the new counts after the cold-start delay); a tier whose
+/// window is unchanged — including every pure-gamma switch — just
+/// resizes. Requests already queued under the old layout are not
+/// re-routed; they finish on draining capacity or the incoming fleet.
+#[allow(clippy::too_many_arguments)]
+fn apply_scaling(
+    tiers: &mut [Tier],
+    events: &mut EventQueue<Ev>,
+    t: f64,
+    cfg: &AutoscaleConfig,
+    plan: &TieredPlan,
+    switched: bool,
+    boundaries: &mut Vec<u32>,
+    gammas: &mut Vec<f64>,
+    slo_default_s: f64,
+) {
+    if switched {
+        *boundaries = plan.boundaries();
+        *gammas = plan.gammas.clone();
+    }
+    for (ti, tier) in tiers.iter_mut().enumerate() {
+        let spec_t = &plan.spec.tiers[ti];
+        let target = plan.tiers[ti].n_gpus.max(cfg.min_gpus_per_tier);
+        tier.target = target;
+        if switched {
+            tier.slo_s = spec_t.slo_or(slo_default_s);
+            tier.cost_hr = spec_t.cost_hr;
+        }
+        // Re-derive the epoch SLO's wait budget from this replan's
+        // calibration (the residual distribution shifts with gamma).
+        tier.wait_budget_s = wait_budget_s(tier.slo_s, &plan.tiers[ti].svc);
+        // A switch that leaves this tier's slot shape intact (a pure
+        // gamma/routing change — software) is just a resize; only a
+        // changed window forces the hardware replacement below.
+        let hw_changed = switched && spec_t.n_max != tier.n_slots_cfg;
+        if hw_changed {
+            tier.cancel = tier.pending;
+            let live: Vec<usize> = (0..tier.gpus.len())
+                .filter(|&i| {
+                    let g = &tier.gpus[i];
+                    g.alive && !g.draining
+                })
+                .collect();
+            for gi in live {
+                if tier.gpus[gi].n_busy == 0 {
+                    tier.retire(gi);
+                } else {
+                    tier.gpus[gi].draining = true;
+                }
+            }
+            tier.n_slots_cfg = spec_t.n_max;
+            tier.pending += target;
+            events.schedule(t + cfg.provision_delay_s, Ev::Provision(ti, target));
+        } else {
+            let avail = tier.n_active() + (tier.pending - tier.cancel);
+            match target.cmp(&avail) {
+                std::cmp::Ordering::Greater => {
+                    let add = target - avail;
+                    tier.pending += add;
+                    events.schedule(t + cfg.provision_delay_s, Ev::Provision(ti, add));
+                }
+                std::cmp::Ordering::Less => {
+                    let mut excess = avail - target;
+                    let cancel_add = excess.min(tier.pending - tier.cancel);
+                    tier.cancel += cancel_add;
+                    excess -= cancel_add;
+                    if excess > 0 {
+                        tier.drain(excess);
+                    }
+                }
+                std::cmp::Ordering::Equal => {}
+            }
+        }
+    }
+}
+
+/// Close the current epoch: snapshot per-tier metrics, reset the
+/// epoch-local accumulators. `tiers` must already be integrated to `t`.
+fn record_epoch(
+    tiers: &mut [Tier],
+    epoch: usize,
+    t_start: f64,
+    t: f64,
+    lambda_est: f64,
+    switched: bool,
+) -> EpochMetrics {
+    let dur = (t - t_start).max(1e-12);
+    let arrivals: u64 = tiers.iter().map(|x| x.arrivals_epoch).sum();
+    let mut slo_ok = true;
+    let mut rows = Vec::with_capacity(tiers.len());
+    let mut gpu_hours = 0.0;
+    let mut cost = 0.0;
+    for tier in tiers.iter_mut() {
+        let util = if tier.prov_acc > 0.0 {
+            tier.busy_acc / tier.prov_acc
+        } else {
+            0.0
+        };
+        let p99 = if tier.ttft_epoch.is_empty() {
+            0.0
+        } else {
+            tier.ttft_epoch.p99()
+        };
+        let wait_p99 = if tier.wait_epoch.is_empty() {
+            0.0
+        } else {
+            tier.wait_epoch.p99()
+        };
+        // The sizing-consistent SLO check: P99 queue wait against the
+        // Eq. 8 budget (see `wait_budget_s`); raw TTFT includes physical
+        // prefill, which at dense slot counts exceeds the SLO by itself.
+        if !tier.wait_epoch.is_empty() && wait_p99 > tier.wait_budget_s {
+            slo_ok = false;
+        }
+        gpu_hours += tier.gpu_acc / 3600.0;
+        cost += tier.gpu_acc / 3600.0 * tier.cost_hr;
+        rows.push(EpochTierMetrics {
+            n_gpus: tier.n_alive,
+            target_gpus: tier.target,
+            utilization: util,
+            ttft_p99_s: p99,
+            wait_p99_s: wait_p99,
+            completed: tier.completed_epoch,
+            arrivals: tier.arrivals_epoch,
+            in_flight: tier.arrivals_total - tier.completed_total,
+        });
+        tier.busy_acc = 0.0;
+        tier.prov_acc = 0.0;
+        tier.gpu_acc = 0.0;
+        tier.ttft_epoch = Samples::new();
+        tier.wait_epoch = Samples::new();
+        tier.completed_epoch = 0;
+        tier.arrivals_epoch = 0;
+    }
+    EpochMetrics {
+        epoch,
+        t_start_s: t_start,
+        t_end_s: t,
+        lambda_est,
+        lambda_realized: arrivals as f64 / dur,
+        gpu_hours,
+        cost,
+        slo_ok,
+        switched_layout: switched,
+        tiers: rows,
+    }
+}
+
+/// Simulate `n` requests from a nonstationary arrival `model` through an
+/// autoscaled K-tier fleet seeded with `initial`. `input` supplies the
+/// planner template (SLO, GPU profile, planner grid) the controller
+/// re-plans with; its workload is only a template — each epoch the CDF is
+/// re-estimated from the sliding window.
+///
+/// With a [`RateModel::Constant`] and the same seed, the generated request
+/// stream and the per-tier routing are bit-identical to
+/// `route_trace_tiered(w, lambda, n, ..)` (tested).
+pub fn simulate_autoscale(
+    w: &Workload,
+    model: RateModel,
+    n: usize,
+    input: &PlanInput,
+    initial: TieredPlan,
+    cfg: &AutoscaleConfig,
+    seed: u64,
+) -> AutoscaleReport {
+    assert!(n > 0, "need at least one request");
+    assert!(cfg.epoch_s > 0.0 && cfg.window_s > 0.0);
+    assert!(cfg.provision_delay_s >= 0.0);
+    assert!(
+        cfg.min_gpus_per_tier >= 1,
+        "a zero-GPU tier floor can starve queued traffic"
+    );
+    let k = initial.k();
+    assert!(k >= 2);
+
+    // Trace: seeded exactly like `route_trace_tiered` so the stationary
+    // projection routes bit-identically.
+    let mut arr = NonstationaryArrivals::new(model, seed);
+    let mut rng = Rng::new(seed ^ 0xF1EE7);
+    let requests: Vec<Request> = (0..n)
+        .map(|i| {
+            let t = arr.next_arrival();
+            w.sample_request(i as u64, t, &mut rng)
+        })
+        .collect();
+    let l_out_of: Vec<u32> = requests.iter().map(|r| r.l_out).collect();
+    let arrival_of: Vec<f64> = requests.iter().map(|r| r.arrival_s).collect();
+    let mut l_in_routed: Vec<u32> = vec![0; n];
+
+    let gpu_prof = input.gpu.clone();
+    let chunk = gpu_prof.chunk;
+    let mut boundaries = initial.boundaries();
+    let mut gammas = initial.gammas.clone();
+    let mut tiers: Vec<Tier> = initial
+        .tiers
+        .iter()
+        .zip(&initial.spec.tiers)
+        .map(|(pool, ts)| {
+            let n0 = pool.n_gpus.max(cfg.min_gpus_per_tier);
+            let slo = ts.slo_or(input.slo.p99_ttft_s);
+            Tier::new(
+                n0,
+                ts.n_max,
+                gpu_prof.t_iter_s(ts.n_max),
+                ts.cost_hr,
+                slo,
+                wait_budget_s(slo, &pool.svc),
+            )
+        })
+        .collect();
+
+    let mut events: EventQueue<Ev> = EventQueue::new();
+    for (i, r) in requests.iter().enumerate() {
+        events.schedule(r.arrival_s, Ev::Arrival(i));
+    }
+    events.schedule(cfg.epoch_s, Ev::Epoch);
+
+    let mut estimator = OnlineEstimator::new(cfg.window_s);
+    let mut replanner = Replanner::new(cfg.replan.clone(), initial);
+    let mut done = vec![false; n];
+    let mut completed_total = 0u64;
+    let mut n_compressed = 0u64;
+    let mut layout_switches = 0u64;
+    let mut epochs: Vec<EpochMetrics> = Vec::new();
+    let mut epoch_start = 0.0;
+    let mut epoch_idx = 0usize;
+    let mut t_last = 0.0;
+
+    while let Some((t, ev)) = events.pop() {
+        if completed_total == n as u64 {
+            // All work done: trailing controller/provision events are
+            // inert (capacity added after the horizon would cost money
+            // for no traffic — and would skew the GPU-hour integrals).
+            match ev {
+                Ev::Epoch | Ev::Provision(..) => continue,
+                _ => {}
+            }
+        }
+        t_last = t;
+        match ev {
+            Ev::Arrival(i) => {
+                estimator.observe(t, requests[i].l_total);
+                let r = &requests[i];
+                let (ti, l_in, comp) = crate::fleetsim::fleet::route_request(
+                    r.l_total,
+                    r.l_in,
+                    r.l_out,
+                    r.category.compressible(),
+                    &boundaries,
+                    &gammas,
+                );
+                l_in_routed[i] = l_in;
+                if comp {
+                    n_compressed += 1;
+                }
+                let wake = {
+                    let tier = &mut tiers[ti];
+                    tier.integrate(t);
+                    tier.arrivals_epoch += 1;
+                    tier.arrivals_total += 1;
+                    tier.queue.push_back(i);
+                    tier.wake_candidate()
+                };
+                if let Some(gi) = wake {
+                    tiers[ti].admit_into(gi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
+                    maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
+                }
+            }
+            Ev::Iteration(ti, gi) => {
+                let tier = &mut tiers[ti];
+                tier.integrate(t);
+                let gpu = &mut tier.gpus[gi];
+                gpu.iterating = false;
+                // Advance every busy slot by one lockstep iteration
+                // (exactly `fleetsim::sim`'s model).
+                for slot in gpu.slots.iter_mut() {
+                    if let Some(a) = slot {
+                        a.iters_left -= 1;
+                        if a.prefill_left > 0 {
+                            a.prefill_left -= 1;
+                        } else if !a.first_token_done {
+                            a.first_token_done = true;
+                            tier.ttft_epoch.push(t - requests[a.req].arrival_s);
+                        }
+                        if a.iters_left == 0 {
+                            if !a.first_token_done {
+                                // Degenerate L_out: first token == last.
+                                tier.ttft_epoch.push(t - requests[a.req].arrival_s);
+                            }
+                            assert!(!done[a.req], "request {} completed twice", a.req);
+                            done[a.req] = true;
+                            completed_total += 1;
+                            tier.completed_epoch += 1;
+                            tier.completed_total += 1;
+                            *slot = None;
+                            gpu.n_busy -= 1;
+                            tier.busy_slots -= 1;
+                        }
+                    }
+                }
+                let (draining, busy) = {
+                    let g = &tiers[ti].gpus[gi];
+                    (g.draining, g.n_busy)
+                };
+                if draining {
+                    if busy == 0 {
+                        tiers[ti].retire(gi);
+                    }
+                } else {
+                    tiers[ti].admit_into(gi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
+                }
+                maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
+            }
+            Ev::Provision(ti, count) => {
+                let added = {
+                    let tier = &mut tiers[ti];
+                    tier.integrate(t);
+                    let cancelled = tier.cancel.min(count);
+                    tier.cancel -= cancelled;
+                    tier.pending -= count;
+                    let real = count - cancelled;
+                    for _ in 0..real {
+                        let t_iter = gpu_prof.t_iter_s(tier.n_slots_cfg);
+                        tier.gpus.push(AGpu::new(tier.n_slots_cfg, t_iter));
+                        tier.n_alive += 1;
+                        tier.prov_slots += tier.n_slots_cfg as u64;
+                    }
+                    real as usize
+                };
+                let len = tiers[ti].gpus.len();
+                for gi in len - added..len {
+                    tiers[ti].admit_into(gi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
+                    maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
+                }
+            }
+            Ev::Epoch => {
+                for tier in tiers.iter_mut() {
+                    tier.integrate(t);
+                }
+                let lambda_est = estimator.rate(t);
+                // Plan against the peak-tracking estimate (lag ~W/8 vs
+                // ~W/2 for the mean) scaled by the headroom knob: on an
+                // upswing, demand keeps growing for provision_delay_s
+                // after the decision.
+                let lambda_plan = estimator.peak_rate(t, 4) * cfg.target_headroom;
+                let mut switched = false;
+                if cfg.replanning && lambda_plan > 0.0 {
+                    let mut pi = input.clone();
+                    pi.lambda = lambda_plan;
+                    if let Some(snap) = estimator.snapshot(w) {
+                        pi.workload = snap;
+                    }
+                    if let Ok(out) = replanner.replan(&pi) {
+                        switched = out.switched_layout;
+                        if switched {
+                            layout_switches += 1;
+                        }
+                        apply_scaling(
+                            &mut tiers,
+                            &mut events,
+                            t,
+                            cfg,
+                            &out.plan,
+                            switched,
+                            &mut boundaries,
+                            &mut gammas,
+                            input.slo.p99_ttft_s,
+                        );
+                    }
+                }
+                epochs.push(record_epoch(
+                    &mut tiers,
+                    epoch_idx,
+                    epoch_start,
+                    t,
+                    lambda_est,
+                    switched,
+                ));
+                epoch_idx += 1;
+                epoch_start = t;
+                if completed_total < n as u64 {
+                    events.schedule(t + cfg.epoch_s, Ev::Epoch);
+                }
+            }
+        }
+    }
+
+    // Trailing partial epoch (completions after the last Epoch event).
+    for tier in tiers.iter_mut() {
+        tier.integrate(t_last);
+    }
+    let has_tail = t_last > epoch_start + 1e-12
+        || tiers
+            .iter()
+            .any(|x| x.arrivals_epoch > 0 || x.completed_epoch > 0);
+    if has_tail {
+        let lambda_est = estimator.rate(t_last);
+        epochs.push(record_epoch(
+            &mut tiers,
+            epoch_idx,
+            epoch_start,
+            t_last,
+            lambda_est,
+            false,
+        ));
+    }
+
+    // Totals from the epoch records: they partition the run exactly, and
+    // each epoch was billed at the tier prices in force *during* it (a
+    // layout switch can change a tier's $/hr mid-run).
+    let gpu_hours: f64 = epochs.iter().map(|e| e.gpu_hours).sum();
+    let cost: f64 = epochs.iter().map(|e| e.cost).sum();
+    debug_assert!(
+        (gpu_hours - tiers.iter().map(|x| x.gpu_total).sum::<f64>() / 3600.0).abs()
+            < 1e-6 * gpu_hours.max(1.0),
+        "epoch partition lost GPU-time"
+    );
+    let slo_ok = epochs.iter().filter(|e| e.slo_ok).count();
+    AutoscaleReport {
+        n_total: n as u64,
+        completed: completed_total,
+        censored: n as u64 - completed_total,
+        n_compressed,
+        gpu_hours,
+        cost,
+        horizon_s: t_last,
+        slo_ok_frac: slo_ok as f64 / epochs.len().max(1) as f64,
+        layout_switches,
+        final_gpus: tiers.iter().map(|x| x.n_alive).collect(),
+        epochs,
+    }
+}

@@ -70,47 +70,63 @@ pub fn route_trace_tiered(
     let mut n_compressed_at = vec![0u64; k - 1];
     for (i, t) in arrivals.take(n).enumerate() {
         let r = w.sample_request(i as u64, t, &mut rng);
-        let mut routed = false;
-        for (tier, (&b, &gamma)) in boundaries.iter().zip(gammas).enumerate() {
-            // Clamp the band at the next boundary up, exactly as the
-            // planner and gateway do (no-op for already-clamped plan
-            // gammas and for the last boundary — K = 2 is untouched).
-            let gamma =
-                crate::compress::gate::clamp_gamma(b, boundaries.get(tier + 1).copied(), gamma);
-            let band_hi = crate::compress::gate::band_hi(b, gamma);
-            if r.l_total <= b {
-                tiers[tier].push(SimRequest {
-                    arrival_s: t,
-                    l_in: r.l_in,
-                    l_out: r.l_out,
-                });
-                routed = true;
-                break;
-            } else if r.l_total <= band_hi && r.category.compressible() && r.l_out < b {
-                // C&R: compressed to the Eq. 15 budget of this boundary.
-                n_compressed_at[tier] += 1;
-                tiers[tier].push(SimRequest {
-                    arrival_s: t,
-                    l_in: b - r.l_out,
-                    l_out: r.l_out,
-                });
-                routed = true;
-                break;
-            }
+        let (tier, l_in, compressed) = route_request(
+            r.l_total,
+            r.l_in,
+            r.l_out,
+            r.category.compressible(),
+            boundaries,
+            gammas,
+        );
+        if compressed {
+            n_compressed_at[tier] += 1;
         }
-        if !routed {
-            tiers[k - 1].push(SimRequest {
-                arrival_s: t,
-                l_in: r.l_in,
-                l_out: r.l_out,
-            });
-        }
+        tiers[tier].push(SimRequest {
+            arrival_s: t,
+            l_in,
+            l_out: r.l_out,
+        });
     }
     TieredTrace {
         tiers,
         n_compressed_at,
         n_total: n as u64,
     }
+}
+
+/// The per-request tier decision shared by [`route_trace_tiered`] and the
+/// autoscaling DES (`fleetsim::autoscale`): first tier whose boundary fits
+/// takes the request; a compressible request inside a boundary's clamped
+/// band `(B_i, gamma_i B_i]` with `L_out < B_i` compresses down into tier
+/// `i` at the Eq. 15 budget `L_in = B_i - L_out`; everything else falls
+/// through to the last tier. One definition keeps the DES router and the
+/// control loop deciding identically (the gateway mirrors the same ladder
+/// over estimated lengths). Returns `(tier, post-compression L_in,
+/// compressed?)`.
+pub fn route_request(
+    l_total: u32,
+    l_in: u32,
+    l_out: u32,
+    compressible: bool,
+    boundaries: &[u32],
+    gammas: &[f64],
+) -> (usize, u32, bool) {
+    for (tier, (&b, &gamma)) in boundaries.iter().zip(gammas).enumerate() {
+        // Clamp the band at the next boundary up, exactly as the planner
+        // and gateway do (no-op for already-clamped plan gammas and for
+        // the last boundary — K = 2 is untouched).
+        let gamma =
+            crate::compress::gate::clamp_gamma(b, boundaries.get(tier + 1).copied(), gamma);
+        let band_hi = crate::compress::gate::band_hi(b, gamma);
+        if l_total <= b {
+            return (tier, l_in, false);
+        }
+        if l_total <= band_hi && compressible && l_out < b {
+            // C&R: compressed to the Eq. 15 budget of this boundary.
+            return (tier, b - l_out, true);
+        }
+    }
+    (boundaries.len(), l_in, false)
 }
 
 /// Two-pool [`route_trace_tiered`] (the paper's evaluation shape).
@@ -145,7 +161,19 @@ pub struct FleetSimResult {
 #[derive(Debug)]
 pub struct TieredSimResult {
     pub tiers: Vec<Option<SimResult>>,
+    /// Requests per tier that were routed but never simulated to
+    /// completion: a tier with traffic but zero provisioned GPUs is
+    /// skipped (`tiers[i] = None`), and a horizon-truncated pool reports
+    /// its own in-flight remainder. Previously these vanished from the
+    /// percentile population silently.
+    pub censored: Vec<u64>,
     pub routed: TieredTrace,
+}
+
+impl TieredSimResult {
+    pub fn censored_total(&self) -> u64 {
+        self.censored.iter().sum()
+    }
 }
 
 /// One tier's DES shape: GPU count, slots per GPU, and the warm-up before
@@ -261,8 +289,19 @@ pub fn simulate_fleet_tiered(
         })
         .collect();
     let results = simulate_tiers(g, &cfgs, &routed.tiers);
+    let censored: Vec<u64> = results
+        .iter()
+        .zip(&routed.tiers)
+        .map(|(res, trace)| match res {
+            Some(r) => r.censored,
+            // Routed traffic on an unprovisioned tier is censored in
+            // full, not silently dropped.
+            None => trace.len() as u64,
+        })
+        .collect();
     TieredSimResult {
         tiers: results,
+        censored,
         routed,
     }
 }

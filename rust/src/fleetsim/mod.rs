@@ -1,13 +1,17 @@
 //! `inference-fleet-sim` (paper §7.4): a deterministic discrete-event
 //! simulator for heterogeneous multi-pool LLM fleets, used to validate the
-//! analytical model's utilization predictions within 3%.
+//! analytical model's utilization predictions within 3% — plus the
+//! autoscaling variant ([`autoscale`]) that drives a K-tier fleet through
+//! nonstationary arrivals with a replanning controller in the loop.
 
+pub mod autoscale;
 pub mod events;
 pub mod fleet;
 pub mod sim;
 
+pub use autoscale::{simulate_autoscale, AutoscaleConfig, AutoscaleReport};
 pub use fleet::{
-    route_trace, route_trace_tiered, simulate_fleet, simulate_fleet_tiered, FleetSimResult,
-    RoutedTrace, TieredSimResult, TieredTrace,
+    route_request, route_trace, route_trace_tiered, simulate_fleet, simulate_fleet_tiered,
+    FleetSimResult, RoutedTrace, TieredSimResult, TieredTrace,
 };
 pub use sim::{simulate_pool, SimConfig, SimRequest, SimResult};

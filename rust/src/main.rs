@@ -25,7 +25,8 @@ use fleetopt::compress::extractive::compress;
 use fleetopt::compress::fidelity;
 use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
 use fleetopt::experiments;
-use fleetopt::fleetsim::simulate_fleet_tiered;
+use fleetopt::fleetsim::{simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig};
+use fleetopt::metrics::EpochMetrics;
 use fleetopt::planner::{
     candidate_boundaries, plan_fleet, plan_homogeneous, plan_spec_sweep_gamma, sweep_full,
     sweep_gamma, sweep_tiered, Plan, PlanInput, TieredPlan,
@@ -33,6 +34,7 @@ use fleetopt::planner::{
 use fleetopt::router::GatewayConfig;
 use fleetopt::util::rng::Rng;
 use fleetopt::util::table::fmt_int;
+use fleetopt::workload::arrivals::parse_arrival_spec;
 use fleetopt::workload::traces;
 
 fn usage() -> ! {
@@ -40,12 +42,16 @@ fn usage() -> ! {
         "fleetopt — analytical fleet provisioning with Compress-and-Route
 
 USAGE:
-  fleetopt plan     --workload <azure|lmsys|agent> [--config F.json] [--lambda N] [--gamma G] [--b-short B] [--tiers W1,W2,..|K]
-  fleetopt sweep    --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
-  fleetopt tables   [--only 1..8] [--fast]
-  fleetopt simulate --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
-  fleetopt compress [--tokens N] [--budget N] [--seed N]
-  fleetopt serve    [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
+  fleetopt plan      --workload <azure|lmsys|agent> [--config F.json] [--lambda N] [--gamma G] [--b-short B] [--tiers W1,W2,..|K]
+  fleetopt sweep     --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
+  fleetopt tables    [--only 1..9] [--fast]
+  fleetopt simulate  --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
+  fleetopt autoscale --workload <name> [--config F.json] [--lambda N] [--requests N]
+                     [--arrivals poisson|diurnal:amp=A,period=P|burst:high=H,low=L|schedule:F.json]
+                     [--epoch S] [--window S] [--provision S] [--no-replan]
+                     [--tiers W1,W2,..] [--out metrics.json] [--max-violation-frac F]
+  fleetopt compress  [--tokens N] [--budget N] [--seed N]
+  fleetopt serve     [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
 
   --tiers takes either K-1 boundaries plus the long window
   (e.g. 4096,16384,65536) or a bare fleet size K (2..=6) to sweep
@@ -322,12 +328,13 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     let fast = flags.contains_key("fast");
     let only: Option<u32> = flags.get("only").map(|s| s.parse()).transpose()?;
     if let Some(n) = only {
-        if !(1..=8).contains(&n) {
-            bail!("--only must name a table in 1..=8, got {n}");
+        if !(1..=9).contains(&n) {
+            bail!("--only must name a table in 1..=9, got {n}");
         }
     }
     let want = |n: u32| only.is_none() || only == Some(n);
-    let (docs, des_n, fid_n) = if fast { (10, 3_000, 30) } else { (60, 30_000, 300) };
+    let (docs, des_n, fid_n, auto_n) =
+        if fast { (10, 3_000, 30, 8_000) } else { (60, 30_000, 300, 40_000) };
 
     if want(1) {
         experiments::table1().print();
@@ -352,6 +359,96 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     }
     if want(8) {
         experiments::table8(1000.0, if fast { 3 } else { 4 }).print();
+    }
+    if want(9) {
+        experiments::table9(auto_n).print();
+    }
+    Ok(())
+}
+
+fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
+    let w = workload_arg(flags)?;
+    let base = flag_pos_f64(flags, "lambda", 400.0)?;
+    let n = flag_count(flags, "requests", 40_000)? as usize;
+    let spec_str = flags
+        .get("arrivals")
+        .map(String::as_str)
+        .unwrap_or("diurnal:amp=0.6,period=120");
+    let model = parse_arrival_spec(spec_str, base)?;
+
+    let input0 = PlanInput::new(w.clone(), model.rate_hint());
+    let fleet_spec = match tiers_arg(flags)? {
+        None => input0.gpu.fleet_spec(&[w.b_short]),
+        Some(TiersArg::Windows(windows)) => {
+            let mut gpu = input0.gpu.clone();
+            gpu.c_max_long = windows[windows.len() - 1];
+            gpu.fleet_spec(&windows[..windows.len() - 1])
+        }
+        Some(TiersArg::K(_)) => {
+            bail!("autoscale --tiers needs explicit windows (e.g. 4096,65536)")
+        }
+    };
+    fleet_spec.validate()?;
+    let mut input0 = input0;
+    input0.gpu.c_max_long = fleet_spec.tiers[fleet_spec.k() - 1].c_max;
+
+    let epoch_s = flag_pos_f64(flags, "epoch", 10.0)?;
+    let cfg = AutoscaleConfig {
+        epoch_s,
+        window_s: flag_pos_f64(flags, "window", epoch_s * 2.0)?,
+        provision_delay_s: flag_f64(flags, "provision", epoch_s * 0.5)?,
+        replanning: !flags.contains_key("no-replan"),
+        ..AutoscaleConfig::default()
+    };
+    if cfg.provision_delay_s < 0.0 {
+        bail!("--provision must be non-negative");
+    }
+
+    let initial = plan_spec_sweep_gamma(&input0, &fleet_spec)?;
+    println!(
+        "initial plan (lambda0 = {:.1} req/s): gpus = {:?}, arrivals = {spec_str}",
+        input0.lambda,
+        initial.gpu_counts()
+    );
+    let report = simulate_autoscale(&w, model, n, &input0, initial, &cfg, 42);
+
+    for e in &report.epochs {
+        println!("{}", e.summary_line());
+    }
+    let violated = 1.0 - report.slo_ok_frac;
+    println!(
+        "totals: {} of {} completed ({} censored), {} compressed, {:.2} GPU-hours, \
+         ${:.2}, slo-ok {:.0}% of {} epochs, {} layout switch(es), final gpus {:?}",
+        report.completed,
+        report.n_total,
+        report.censored,
+        report.n_compressed,
+        report.gpu_hours,
+        report.cost,
+        report.slo_ok_frac * 100.0,
+        report.epochs.len(),
+        report.layout_switches,
+        report.final_gpus,
+    );
+
+    if let Some(path) = flags.get("out") {
+        std::fs::write(path, EpochMetrics::series_to_json(&report.epochs))
+            .with_context(|| format!("writing {path}"))?;
+        println!("wrote per-epoch metrics to {path}");
+    }
+    if report.censored != 0 {
+        bail!("{} request(s) never completed", report.censored);
+    }
+    let budget = flag_f64(flags, "max-violation-frac", 1.0)?;
+    if !(0.0..=1.0).contains(&budget) {
+        bail!("--max-violation-frac must be in [0, 1], got {budget}");
+    }
+    if violated > budget + 1e-12 {
+        bail!(
+            "SLO violated in {:.0}% of epochs (budget {:.0}%)",
+            violated * 100.0,
+            budget * 100.0
+        );
     }
     Ok(())
 }
@@ -513,6 +610,7 @@ fn main() -> Result<()> {
         "sweep" => cmd_sweep(&flags),
         "tables" => cmd_tables(&flags),
         "simulate" => cmd_simulate(&flags),
+        "autoscale" => cmd_autoscale(&flags),
         "compress" => cmd_compress(&flags),
         "serve" => cmd_serve(&flags),
         "help" | "--help" | "-h" => usage(),

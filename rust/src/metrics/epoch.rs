@@ -1,0 +1,219 @@
+//! Per-epoch control-loop metrics: what the autoscaler DES and the live
+//! controller record every controller period, and what the CI smoke run
+//! uploads as a JSON artifact.
+
+/// One tier's measurements inside one controller epoch.
+#[derive(Clone, Debug)]
+pub struct EpochTierMetrics {
+    /// GPUs (or replicas, on the live path) provisioned at epoch end —
+    /// includes draining capacity, which still costs money.
+    pub n_gpus: u64,
+    /// Controller target after this epoch's replan (takes effect next
+    /// epoch; scale-ups arrive after the provisioning delay).
+    pub target_gpus: u64,
+    /// Busy-slot-time over provisioned slot-time within the epoch.
+    pub utilization: f64,
+    /// P99 TTFT over requests whose first token landed in this epoch
+    /// (0.0 when none did). Includes physical prefill time.
+    pub ttft_p99_s: f64,
+    /// P99 queue wait over requests admitted in this epoch (0.0 when
+    /// none). This is the quantity the SLO check uses — sizing budgets
+    /// queue wait, not prefill (see `planner::sizing`'s module note).
+    pub wait_p99_s: f64,
+    pub completed: u64,
+    pub arrivals: u64,
+    /// Requests admitted or queued on this tier, still unfinished at
+    /// epoch end (in-flight carry-over, not lost).
+    pub in_flight: u64,
+}
+
+/// One controller epoch of an autoscaled run.
+#[derive(Clone, Debug)]
+pub struct EpochMetrics {
+    pub epoch: usize,
+    pub t_start_s: f64,
+    pub t_end_s: f64,
+    /// Sliding-window rate estimate at the epoch boundary, req/s.
+    pub lambda_est: f64,
+    /// Realized arrivals in the epoch divided by its duration, req/s.
+    pub lambda_realized: f64,
+    /// Provisioned GPU-time integrated over the epoch, hours.
+    pub gpu_hours: f64,
+    /// Epoch cost at the per-tier $/GPU-hr rates, dollars.
+    pub cost: f64,
+    /// Every tier with admissions met its queue-wait SLO budget this
+    /// epoch (the sizing-consistent check; see [`EpochTierMetrics::wait_p99_s`]).
+    pub slo_ok: bool,
+    /// The replan at this epoch's boundary switched the tier layout.
+    pub switched_layout: bool,
+    pub tiers: Vec<EpochTierMetrics>,
+}
+
+fn num(x: f64) -> String {
+    // JSON has no NaN/inf; clamp pathological values to 0 (they only
+    // arise from zero-duration or zero-capacity denominators).
+    if x.is_finite() {
+        format!("{x:.6}")
+    } else {
+        "0.0".to_string()
+    }
+}
+
+impl EpochMetrics {
+    /// Total GPUs provisioned at epoch end, across tiers.
+    pub fn total_gpus(&self) -> u64 {
+        self.tiers.iter().map(|t| t.n_gpus).sum()
+    }
+
+    /// Serialize one epoch as a JSON object.
+    pub fn to_json(&self) -> String {
+        let tiers: Vec<String> = self
+            .tiers
+            .iter()
+            .map(|t| {
+                format!(
+                    concat!(
+                        "{{\"n_gpus\":{},\"target_gpus\":{},\"utilization\":{},",
+                        "\"ttft_p99_s\":{},\"wait_p99_s\":{},\"completed\":{},",
+                        "\"arrivals\":{},\"in_flight\":{}}}"
+                    ),
+                    t.n_gpus,
+                    t.target_gpus,
+                    num(t.utilization),
+                    num(t.ttft_p99_s),
+                    num(t.wait_p99_s),
+                    t.completed,
+                    t.arrivals,
+                    t.in_flight,
+                )
+            })
+            .collect();
+        format!(
+            concat!(
+                "{{\"epoch\":{},\"t_start_s\":{},\"t_end_s\":{},\"lambda_est\":{},",
+                "\"lambda_realized\":{},\"gpu_hours\":{},\"cost\":{},\"slo_ok\":{},",
+                "\"switched_layout\":{},\"tiers\":[{}]}}"
+            ),
+            self.epoch,
+            num(self.t_start_s),
+            num(self.t_end_s),
+            num(self.lambda_est),
+            num(self.lambda_realized),
+            num(self.gpu_hours),
+            num(self.cost),
+            self.slo_ok,
+            self.switched_layout,
+            tiers.join(","),
+        )
+    }
+
+    /// Serialize a whole run as a JSON array (the CI artifact format).
+    pub fn series_to_json(epochs: &[EpochMetrics]) -> String {
+        let rows: Vec<String> = epochs.iter().map(|e| e.to_json()).collect();
+        format!("[{}]", rows.join(","))
+    }
+
+    /// One human-readable summary line per epoch (CLI output).
+    pub fn summary_line(&self) -> String {
+        let gpus: Vec<String> = self.tiers.iter().map(|t| t.n_gpus.to_string()).collect();
+        let utils: Vec<String> = self
+            .tiers
+            .iter()
+            .map(|t| format!("{:.2}", t.utilization))
+            .collect();
+        let p99s: Vec<String> = self
+            .tiers
+            .iter()
+            .map(|t| format!("{:.0}", t.ttft_p99_s * 1e3))
+            .collect();
+        format!(
+            "epoch {:3} [{:7.1}s..{:7.1}s] lam est={:7.1} real={:7.1} gpus=[{}] util=[{}] ttft99ms=[{}] {}{}",
+            self.epoch,
+            self.t_start_s,
+            self.t_end_s,
+            self.lambda_est,
+            self.lambda_realized,
+            gpus.join(","),
+            utils.join(","),
+            p99s.join(","),
+            if self.slo_ok { "slo-ok" } else { "SLO-VIOLATED" },
+            if self.switched_layout { " switched" } else { "" },
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    fn sample() -> EpochMetrics {
+        EpochMetrics {
+            epoch: 3,
+            t_start_s: 30.0,
+            t_end_s: 40.0,
+            lambda_est: 412.5,
+            lambda_realized: 398.0,
+            gpu_hours: 0.15,
+            cost: 0.33,
+            slo_ok: true,
+            switched_layout: false,
+            tiers: vec![
+                EpochTierMetrics {
+                    n_gpus: 12,
+                    target_gpus: 11,
+                    utilization: 0.81,
+                    ttft_p99_s: 0.31,
+                    wait_p99_s: 0.02,
+                    completed: 3800,
+                    arrivals: 3900,
+                    in_flight: 40,
+                },
+                EpochTierMetrics {
+                    n_gpus: 3,
+                    target_gpus: 3,
+                    utilization: 0.76,
+                    ttft_p99_s: 0.42,
+                    wait_p99_s: 0.05,
+                    completed: 150,
+                    arrivals: 160,
+                    in_flight: 10,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn json_round_trips_through_the_parser() {
+        let e = sample();
+        let j = Json::parse(&e.to_json()).expect("valid JSON");
+        assert_eq!(j.get("epoch").and_then(Json::as_f64), Some(3.0));
+        assert_eq!(j.get("slo_ok").and_then(Json::as_bool), Some(true));
+        let tiers = j.get("tiers").and_then(Json::as_arr).unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].get("n_gpus").and_then(Json::as_f64), Some(12.0));
+
+        let series = EpochMetrics::series_to_json(&[e.clone(), e]);
+        let arr = Json::parse(&series).expect("valid series JSON");
+        assert_eq!(arr.as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn non_finite_values_serialize_as_zero() {
+        let mut e = sample();
+        e.tiers[0].utilization = f64::NAN;
+        e.lambda_est = f64::INFINITY;
+        assert!(Json::parse(&e.to_json()).is_ok());
+    }
+
+    #[test]
+    fn summary_line_flags_violations() {
+        let mut e = sample();
+        assert!(e.summary_line().contains("slo-ok"));
+        e.slo_ok = false;
+        e.switched_layout = true;
+        let s = e.summary_line();
+        assert!(s.contains("SLO-VIOLATED") && s.contains("switched"));
+        assert_eq!(e.total_gpus(), 15);
+    }
+}

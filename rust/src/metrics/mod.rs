@@ -1,6 +1,10 @@
 //! Serving metrics: per-pool latency recorders (TTFT, e2e, queue wait) and
 //! completion counters — the quantities the paper's SLO (Eq. 7–8) is
-//! stated over.
+//! stated over — plus the per-epoch control-loop records ([`epoch`]).
+
+pub mod epoch;
+
+pub use epoch::{EpochMetrics, EpochTierMetrics};
 
 use crate::coordinator::replica::FinishedRequest;
 use crate::util::stats::Samples;

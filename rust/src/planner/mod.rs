@@ -1,20 +1,24 @@
 //! The FleetOpt offline planner (paper §4, §6): per-pool Erlang-C sizing,
 //! the Algorithm-1 (B, gamma) sweep with long-pool recalibration, the cost
-//! model, the Prop.-1 marginal-cost analysis, and the K-tier
-//! generalization ([`tiered`]) of which the paper's two-pool planner is
-//! the K = 2 special case.
+//! model, the Prop.-1 marginal-cost analysis, the K-tier generalization
+//! ([`tiered`]) of which the paper's two-pool planner is the K = 2 special
+//! case, and the online incremental replanner with hysteresis ([`replan`])
+//! that turns the one-shot plan into a control loop.
 
 pub mod cost;
 pub mod marginal;
+pub mod replan;
 pub mod sizing;
 pub mod sweep;
 pub mod tiered;
 
+pub use replan::{ReplanConfig, ReplanOutcome, Replanner};
 pub use sweep::{
     candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_homogeneous,
     sweep_full, sweep_full_serial, sweep_gamma, sweep_gamma_serial, CalibCache, Plan,
     PlanInput, PoolPlan,
 };
 pub use tiered::{
-    plan_spec_sweep_gamma, plan_tiers, sweep_tiered, sweep_tiered_serial, TierCell, TieredPlan,
+    plan_spec_sweep_gamma, plan_spec_sweep_gamma_cached, plan_tiers, sweep_tiered,
+    sweep_tiered_cached, sweep_tiered_serial, TierCell, TieredPlan,
 };

@@ -1,0 +1,291 @@
+//! Online re-planning with hysteresis: the planner half of the
+//! autoscaling control loop.
+//!
+//! Each epoch the controller re-estimates the window CDF and arrival rate
+//! and calls [`Replanner::replan`]. The replanner evaluates two options
+//! against the drifted input through one long-lived [`CalibCache`] (warm
+//! start — calibrations survive across epochs):
+//!
+//! 1. **hold** — keep the current tier layout (boundaries + gammas) and
+//!    only re-run the Erlang-C inversion, i.e. resize the replica sets;
+//! 2. **candidate** — re-sweep the gamma grid at the current spec (and,
+//!    with [`ReplanConfig::sweep_boundaries`], the full boundary grid).
+//!
+//! Hysteresis has two knobs. A *switching cost*: the candidate layout is
+//! adopted only when it beats the hold plan by more than
+//! `switch_threshold` (relative) — re-tiering a live fleet drains and
+//! re-provisions capacity, so a marginal win must not thrash the layout
+//! every epoch. A *scale-down dead-band*: within an unchanged layout, a
+//! tier sheds GPUs only when the target drops below
+//! `current * (1 - scale_down_deadband)`; scale-**up** is always immediate
+//! (capacity shortfalls burn SLO, surpluses only burn dollars).
+
+use crate::planner::cost::fleet_cost_yr_tiered;
+use crate::planner::sizing::SizingError;
+use crate::planner::sweep::{CalibCache, PlanInput};
+use crate::planner::tiered::{
+    plan_spec_sweep_gamma_cached, plan_tiers, sweep_tiered_cached, TieredPlan,
+};
+use crate::workload::traces::Workload;
+
+/// FNV-1a over the workload features calibration depends on (CDF anchors
+/// and the output model). [`CalibCache`] keys memoized [`ServiceStats`]
+/// (crate::queueing::service::ServiceStats) by truncation cuts only, so a
+/// cache may only be reused while the underlying distribution is
+/// unchanged — a drifted empirical snapshot must invalidate it.
+fn workload_fingerprint(w: &Workload) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    let mut mix = |b: u64| {
+        h ^= b;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    };
+    for &(x, f) in w.cdf.anchors() {
+        mix(x.to_bits());
+        mix(f.to_bits());
+    }
+    mix(w.output.frac.to_bits());
+    mix(w.output.sigma.to_bits());
+    mix(w.output.min_tokens as u64);
+    mix(w.output.max_tokens as u64);
+    h
+}
+
+/// Hysteresis configuration for online re-planning.
+#[derive(Clone, Debug)]
+pub struct ReplanConfig {
+    /// Relative cost improvement a structurally different plan must
+    /// deliver before the layout switches (0.05 = 5%).
+    pub switch_threshold: f64,
+    /// Scale-down dead-band: hold a tier's GPU count unless the target is
+    /// below `current * (1 - scale_down_deadband)`.
+    pub scale_down_deadband: f64,
+    /// Also sweep the full boundary grid each epoch (more optimal, more
+    /// expensive, and layout switches re-provision the whole fleet).
+    pub sweep_boundaries: bool,
+}
+
+impl Default for ReplanConfig {
+    fn default() -> Self {
+        ReplanConfig {
+            switch_threshold: 0.05,
+            scale_down_deadband: 0.10,
+            sweep_boundaries: false,
+        }
+    }
+}
+
+/// One epoch's re-planning decision.
+#[derive(Clone, Debug)]
+pub struct ReplanOutcome {
+    /// The adopted plan (GPU counts are post-dead-band).
+    pub plan: TieredPlan,
+    /// The tier layout (boundaries or gammas) changed.
+    pub switched_layout: bool,
+    /// Cheapest candidate cost this epoch (pre-hysteresis), $/yr.
+    pub candidate_cost_yr: f64,
+    /// Cost of resizing in place at the old layout, $/yr.
+    pub held_cost_yr: f64,
+}
+
+/// Stateful incremental planner: owns the current plan and the shared
+/// calibration cache that warm-starts every epoch's sweep.
+pub struct Replanner {
+    pub cfg: ReplanConfig,
+    cache: CalibCache,
+    /// Fingerprint of the workload the cache's calibrations belong to
+    /// (`0` = empty cache). A changed CDF snapshot resets the cache:
+    /// warm-starting across epochs is only sound while the distribution
+    /// is unchanged, because [`CalibCache`] keys by truncation cuts only.
+    cache_fp: u64,
+    current: TieredPlan,
+}
+
+impl Replanner {
+    /// Seed with the fleet's initially provisioned plan.
+    pub fn new(cfg: ReplanConfig, initial: TieredPlan) -> Self {
+        Replanner {
+            cfg,
+            cache: CalibCache::new(),
+            cache_fp: 0,
+            current: initial,
+        }
+    }
+
+    /// The plan the fleet is currently provisioned to.
+    pub fn current(&self) -> &TieredPlan {
+        &self.current
+    }
+
+    /// The shared warm-start cache (diagnostics).
+    pub fn cache(&self) -> &CalibCache {
+        &self.cache
+    }
+
+    /// Re-plan against a drifted input (new rate and/or CDF snapshot).
+    /// `input.lambda` must be positive; the input's workload is typically
+    /// an [`crate::workload::online::OnlineEstimator`] snapshot.
+    pub fn replan(&mut self, input: &PlanInput) -> Result<ReplanOutcome, SizingError> {
+        let fp = workload_fingerprint(&input.workload);
+        if fp != self.cache_fp {
+            self.cache = CalibCache::new();
+            self.cache_fp = fp;
+        }
+        let cur = self.current.clone();
+        let k = cur.k();
+
+        // Option 1: resize in place at the current layout.
+        let hold = plan_tiers(input, &cur.spec, &cur.gammas, true, Some(&self.cache));
+
+        // Option 2: cheapest candidate layout under the drifted input.
+        let mut candidate = plan_spec_sweep_gamma_cached(input, &cur.spec, &self.cache);
+        if self.cfg.sweep_boundaries {
+            if let Ok((swept, _)) = sweep_tiered_cached(input, k, &self.cache) {
+                let better = match &candidate {
+                    Ok(c) => swept.cost_yr < c.cost_yr - 1e-9,
+                    Err(_) => true,
+                };
+                if better {
+                    candidate = Ok(swept);
+                }
+            }
+        }
+
+        let (mut adopted, switched, cand_cost, held_cost) = match (hold, candidate) {
+            (Ok(h), Ok(c)) => {
+                let structurally_different =
+                    c.boundaries() != cur.boundaries() || c.gammas != cur.gammas;
+                let cand_cost = c.cost_yr;
+                let held_cost = h.cost_yr;
+                if structurally_different
+                    && c.cost_yr < h.cost_yr * (1.0 - self.cfg.switch_threshold)
+                {
+                    (c, true, cand_cost, held_cost)
+                } else {
+                    (h, false, cand_cost, held_cost)
+                }
+            }
+            // The old layout became infeasible under the new input: a
+            // forced switch, no hysteresis.
+            (Err(_), Ok(c)) => {
+                let cost = c.cost_yr;
+                (c, true, cost, f64::INFINITY)
+            }
+            (Ok(h), Err(_)) => {
+                let cost = h.cost_yr;
+                (h, false, f64::INFINITY, cost)
+            }
+            (Err(e), Err(_)) => return Err(e),
+        };
+
+        // Scale-down dead-band, only meaningful when the layout is stable
+        // (a switched layout re-provisions from the plan's own counts).
+        if !switched && adopted.k() == cur.k() {
+            let mut held_any = false;
+            for (pool, cur_pool) in adopted.tiers.iter_mut().zip(&cur.tiers) {
+                let target = pool.n_gpus;
+                let have = cur_pool.n_gpus;
+                if target < have
+                    && (target as f64) >= have as f64 * (1.0 - self.cfg.scale_down_deadband)
+                {
+                    pool.n_gpus = have;
+                    held_any = true;
+                }
+            }
+            if held_any {
+                let counts: Vec<u64> = adopted.tiers.iter().map(|t| t.n_gpus).collect();
+                let rates: Vec<f64> =
+                    adopted.spec.tiers.iter().map(|t| t.cost_hr).collect();
+                adopted.cost_yr = fleet_cost_yr_tiered(&counts, &rates);
+            }
+        }
+
+        self.current = adopted.clone();
+        Ok(ReplanOutcome {
+            plan: adopted,
+            switched_layout: switched,
+            candidate_cost_yr: cand_cost,
+            held_cost_yr: held_cost,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::planner::tiered::plan_spec_sweep_gamma;
+    use crate::workload::traces;
+
+    fn input(lambda: f64) -> PlanInput {
+        let mut i = PlanInput::new(traces::azure(), lambda);
+        i.cfg.mc_samples = 8_000;
+        i
+    }
+
+    fn seeded(lambda: f64, cfg: ReplanConfig) -> Replanner {
+        let inp = input(lambda);
+        let spec = inp.gpu.fleet_spec(&[4096]);
+        let init = plan_spec_sweep_gamma(&inp, &spec).unwrap();
+        Replanner::new(cfg, init)
+    }
+
+    #[test]
+    fn small_rate_dip_is_held_by_deadband() {
+        let mut rp = seeded(1000.0, ReplanConfig::default());
+        let before = rp.current().gpu_counts();
+        // 4% fewer arrivals: targets shrink by < the 10% dead-band.
+        let out = rp.replan(&input(960.0)).unwrap();
+        assert!(!out.switched_layout);
+        assert_eq!(out.plan.gpu_counts(), before, "dead-band must hold");
+    }
+
+    #[test]
+    fn large_rate_drop_scales_down() {
+        let mut rp = seeded(1000.0, ReplanConfig::default());
+        let before = rp.current().total_gpus();
+        let out = rp.replan(&input(400.0)).unwrap();
+        assert!(out.plan.total_gpus() < before);
+    }
+
+    #[test]
+    fn rate_spike_scales_up_immediately() {
+        let mut rp = seeded(1000.0, ReplanConfig::default());
+        let before = rp.current().total_gpus();
+        let out = rp.replan(&input(1500.0)).unwrap();
+        assert!(out.plan.total_gpus() > before);
+    }
+
+    #[test]
+    fn infinite_switch_threshold_never_switches_layout() {
+        let mut rp = seeded(1000.0, ReplanConfig {
+            switch_threshold: 1.0,
+            sweep_boundaries: true,
+            ..ReplanConfig::default()
+        });
+        let bounds = rp.current().boundaries();
+        for lam in [300.0, 1200.0, 700.0] {
+            let out = rp.replan(&input(lam)).unwrap();
+            assert!(!out.switched_layout);
+            assert_eq!(out.plan.boundaries(), bounds);
+        }
+    }
+
+    #[test]
+    fn candidate_never_costs_more_than_hold_at_k2() {
+        // At K = 2 no gamma clamping applies, so the gamma-grid candidate
+        // dominates the fixed-gamma hold plan.
+        let mut rp = seeded(1000.0, ReplanConfig::default());
+        let out = rp.replan(&input(650.0)).unwrap();
+        assert!(out.candidate_cost_yr <= out.held_cost_yr + 1e-6);
+    }
+
+    #[test]
+    fn warm_cache_grows_across_epochs() {
+        let mut rp = seeded(1000.0, ReplanConfig::default());
+        rp.replan(&input(900.0)).unwrap();
+        let after_one = rp.cache().len();
+        assert!(after_one > 0);
+        rp.replan(&input(900.0)).unwrap();
+        // Same input again: every calibration is already memoized.
+        assert_eq!(rp.cache().len(), after_one);
+    }
+}

@@ -143,12 +143,15 @@ pub fn plan_tiers(
 
     // Erlang-C inversion for one sized tier (shared by every branch so the
     // K = 2 path stays call-for-call identical to the pre-refactor code).
-    let size = |lambda_i: f64, svc: ServiceStats| -> Result<PoolPlan, SizingError> {
+    // Each tier sizes against its own P99 TTFT target when the spec sets
+    // one; the `None` default inherits the fleet SLO, making global-SLO
+    // configs bit-identical to the pre-refactor planner.
+    let size = |lambda_i: f64, svc: ServiceStats, slo_s: f64| -> Result<PoolPlan, SizingError> {
         Ok(PoolPlan {
             n_gpus: min_gpus(
                 lambda_i,
                 &svc,
-                input.slo.p99_ttft_s,
+                slo_s,
                 input.cfg.rho_max,
                 input.strict_slo,
             )?,
@@ -162,6 +165,7 @@ pub fn plan_tiers(
     let mut lambda_used = 0.0;
     for i in 0..k {
         let t = &spec.tiers[i];
+        let tier_slo = t.slo_or(input.slo.p99_ttft_s);
         let last = i + 1 == k;
         // Lower calibration cut: the post-compression residual above the
         // boundary below (§6 recalibration), or the raw boundary in the
@@ -183,7 +187,7 @@ pub fn plan_tiers(
             let lambda_i = input.lambda - lambda_used;
             if lambda_i > input.lambda * 1e-9 && w.cdf.cdf(cut_prev) < 1.0 - 1e-12 {
                 let svc = calibrated(input, cache, cut_prev.max(min_t), max_t, t.n_max);
-                size(lambda_i, svc)?
+                size(lambda_i, svc, tier_slo)?
             } else {
                 PoolPlan::empty()
             }
@@ -199,7 +203,7 @@ pub fn plan_tiers(
                 // F restricted to [min, B] whenever it has natural mass.
                 if lambda_i > 0.0 && nat > 0.0 {
                     let svc = calibrated(input, cache, min_t, hi, t.n_max);
-                    size(lambda_i, svc)?
+                    size(lambda_i, svc, tier_slo)?
                 } else {
                     PoolPlan::empty()
                 }
@@ -227,7 +231,7 @@ pub fn plan_tiers(
                     // mass by construction.
                     calibrated(input, cache, b.max(min_t), (eff[i] * b).min(max_t), t.n_max)
                 };
-                size(lambda_i, svc)?
+                size(lambda_i, svc, tier_slo)?
             } else {
                 PoolPlan::empty()
             }
@@ -299,10 +303,32 @@ pub fn sweep_tiered_serial(
     sweep_tiered_with(input, k, false)
 }
 
+/// [`sweep_tiered`] warm-started from a caller-owned [`CalibCache`] — the
+/// online replanner's path: calibrations survive across epochs, so a
+/// re-sweep under a drifted rate (same CDF snapshot) touches only the
+/// cells whose truncation cuts actually changed. Results are bit-identical
+/// to [`sweep_tiered`] (the cache only memoizes deterministic values).
+pub fn sweep_tiered_cached(
+    input: &PlanInput,
+    k: usize,
+    cache: &CalibCache,
+) -> Result<(TieredPlan, Vec<TierCell>), SizingError> {
+    sweep_tiered_impl(input, k, true, cache)
+}
+
 fn sweep_tiered_with(
     input: &PlanInput,
     k: usize,
     parallel: bool,
+) -> Result<(TieredPlan, Vec<TierCell>), SizingError> {
+    sweep_tiered_impl(input, k, parallel, &CalibCache::new())
+}
+
+fn sweep_tiered_impl(
+    input: &PlanInput,
+    k: usize,
+    parallel: bool,
+    cache: &CalibCache,
 ) -> Result<(TieredPlan, Vec<TierCell>), SizingError> {
     assert!(k >= 2, "sweep_tiered needs at least 2 tiers");
     let cands = candidate_boundaries(input);
@@ -310,7 +336,6 @@ fn sweep_tiered_with(
     if combos.is_empty() {
         return Err(SizingError::NoFeasibleTiering { k });
     }
-    let cache = CalibCache::new();
     let mut cells: Vec<(&[u32], f64)> = Vec::with_capacity(combos.len() * input.cfg.gammas.len());
     for combo in &combos {
         for &gamma in &input.cfg.gammas {
@@ -319,7 +344,7 @@ fn sweep_tiered_with(
     }
     let plans = par_map(&cells, parallel, |&(combo, gamma)| {
         let spec = input.gpu.fleet_spec(combo);
-        Ok(plan_tiers(input, &spec, &vec![gamma; k - 1], true, Some(&cache)).ok())
+        Ok(plan_tiers(input, &spec, &vec![gamma; k - 1], true, Some(cache)).ok())
     })?;
 
     let mut grid = Vec::with_capacity(cells.len());
@@ -351,13 +376,22 @@ pub fn plan_spec_sweep_gamma(
     input: &PlanInput,
     spec: &FleetSpec,
 ) -> Result<TieredPlan, SizingError> {
+    plan_spec_sweep_gamma_cached(input, spec, &CalibCache::new())
+}
+
+/// [`plan_spec_sweep_gamma`] against a caller-owned calibration cache (the
+/// replanner's per-epoch gamma re-sweep; bit-identical results).
+pub fn plan_spec_sweep_gamma_cached(
+    input: &PlanInput,
+    spec: &FleetSpec,
+    cache: &CalibCache,
+) -> Result<TieredPlan, SizingError> {
     let k = spec.k();
-    let cache = CalibCache::new();
     let mut best: Option<TieredPlan> = None;
     for &gamma in &input.cfg.gammas {
         // Infeasible grid cells are skipped, exactly as in sweep_tiered:
         // one gamma blowing the SLO must not abort the whole sweep.
-        let Ok(plan) = plan_tiers(input, spec, &vec![gamma; k - 1], true, Some(&cache)) else {
+        let Ok(plan) = plan_tiers(input, spec, &vec![gamma; k - 1], true, Some(cache)) else {
             continue;
         };
         let better = match &best {
@@ -448,6 +482,53 @@ mod tests {
         assert_eq!(bp.cost_yr.to_bits(), bs.cost_yr.to_bits());
         assert_eq!(bp.boundaries(), bs.boundaries());
         assert_eq!(bp.gpu_counts(), bs.gpu_counts());
+    }
+
+    #[test]
+    fn per_tier_slo_equal_to_global_is_bit_identical() {
+        // Spelling the fleet default out per tier must not change a single
+        // bit of the plan (the satellite acceptance gate for per-tier SLOs).
+        let input = azure_input();
+        let spec = input.gpu.fleet_spec(&[2048, 8192]);
+        let base = plan_tiers(&input, &spec, &[1.5, 1.5], true, None).unwrap();
+        let mut explicit = spec.clone();
+        for t in &mut explicit.tiers {
+            t.p99_ttft_s = Some(input.slo.p99_ttft_s);
+        }
+        let same = plan_tiers(&input, &explicit, &[1.5, 1.5], true, None).unwrap();
+        assert_eq!(base.gpu_counts(), same.gpu_counts());
+        assert_eq!(base.cost_yr.to_bits(), same.cost_yr.to_bits());
+        for (a, b) in base.tiers.iter().zip(&same.tiers) {
+            assert_eq!(a.lambda.to_bits(), b.lambda.to_bits());
+        }
+    }
+
+    #[test]
+    fn tighter_tier_slo_needs_no_fewer_gpus() {
+        let input = azure_input();
+        let spec = input.gpu.fleet_spec(&[4096]);
+        let base = plan_tiers(&input, &spec, &[1.5], true, None).unwrap();
+        let mut tight = spec.clone();
+        tight.tiers[1].p99_ttft_s = Some(0.05); // 10x tighter than 0.5 s
+        let plan = plan_tiers(&input, &tight, &[1.5], true, None).unwrap();
+        assert!(plan.tiers[1].n_gpus >= base.tiers[1].n_gpus);
+        // The untouched tier keeps its sizing bit-for-bit.
+        assert_eq!(plan.tiers[0].n_gpus, base.tiers[0].n_gpus);
+    }
+
+    #[test]
+    fn cached_sweeps_match_fresh_sweeps() {
+        let input = azure_input();
+        let cache = CalibCache::new();
+        let (a, ga) = sweep_tiered(&input, 3).unwrap();
+        let (b, gb) = sweep_tiered_cached(&input, 3, &cache).unwrap();
+        assert_eq!(ga, gb);
+        assert_eq!(a.cost_yr.to_bits(), b.cost_yr.to_bits());
+        assert!(!cache.is_empty(), "warm-start cache must be populated");
+        // Re-running against the warm cache is still bit-identical.
+        let (c, gc) = sweep_tiered_cached(&input, 3, &cache).unwrap();
+        assert_eq!(ga, gc);
+        assert_eq!(a.gpu_counts(), c.gpu_counts());
     }
 
     #[test]

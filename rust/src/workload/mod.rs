@@ -1,8 +1,10 @@
 //! Workload characterization: prompt-length CDFs, the three evaluation
-//! traces, Poisson arrivals, and CDF archetypes (paper §2, §7.1).
+//! traces, stationary and nonstationary arrival processes, sliding-window
+//! online estimation, and CDF archetypes (paper §2, §7.1).
 
 pub mod archetype;
 pub mod arrivals;
 pub mod cdf;
+pub mod online;
 pub mod request;
 pub mod traces;

@@ -1,0 +1,297 @@
+//! Sliding-window online workload estimation: the control loop's eyes.
+//!
+//! The planner consumes a prompt-length CDF and an arrival rate; under a
+//! nonstationary workload neither is known a priori. [`OnlineEstimator`]
+//! keeps the last `window_s` seconds of `(arrival, L_total)` observations
+//! and re-derives both on demand: the rate from the window count, the CDF
+//! as an [`AnchoredCdf`] through empirical quantile anchors — the same
+//! piecewise log-linear type the offline traces use, so one planner serves
+//! both the offline tables and the live controller.
+
+use std::collections::VecDeque;
+
+use crate::workload::cdf::AnchoredCdf;
+use crate::workload::traces::Workload;
+
+/// Quantile levels the empirical CDF is anchored at (interior points; the
+/// support endpoints are added explicitly).
+const ANCHOR_QS: [f64; 13] = [
+    0.05, 0.10, 0.20, 0.30, 0.40, 0.50, 0.60, 0.70, 0.80, 0.90, 0.95, 0.98, 0.99,
+];
+
+/// Sliding-window estimator of the arrival rate and prompt-length CDF.
+/// Observations must be fed in non-decreasing arrival order (they come
+/// straight off the arrival stream).
+#[derive(Clone, Debug)]
+pub struct OnlineEstimator {
+    window_s: f64,
+    /// (arrival_s, l_total) pairs inside the window, oldest first.
+    buf: VecDeque<(f64, f64)>,
+    n_seen: u64,
+}
+
+impl OnlineEstimator {
+    pub fn new(window_s: f64) -> Self {
+        assert!(window_s > 0.0, "window must be positive");
+        OnlineEstimator {
+            window_s,
+            buf: VecDeque::new(),
+            n_seen: 0,
+        }
+    }
+
+    pub fn window_s(&self) -> f64 {
+        self.window_s
+    }
+
+    /// Observations currently inside the window.
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    /// Total observations ever fed (diagnostics).
+    pub fn n_seen(&self) -> u64 {
+        self.n_seen
+    }
+
+    /// Record one arrival; evicts everything older than the window.
+    pub fn observe(&mut self, arrival_s: f64, l_total: u32) {
+        self.buf.push_back((arrival_s, l_total as f64));
+        self.n_seen += 1;
+        self.evict(arrival_s);
+    }
+
+    fn evict(&mut self, now: f64) {
+        let cutoff = now - self.window_s;
+        while let Some(&(t, _)) = self.buf.front() {
+            if t < cutoff {
+                self.buf.pop_front();
+            } else {
+                break;
+            }
+        }
+    }
+
+    /// Windowed arrival-rate estimate at time `now`, req/s. Early in a run
+    /// (before one full window has elapsed) the denominator is the elapsed
+    /// time, so the estimate is unbiased from the first observation.
+    /// Robust to a stale buffer (eviction happens on `observe`, but `rate`
+    /// only counts observations inside `[now - window, now]`).
+    pub fn rate(&self, now: f64) -> f64 {
+        let span = self.window_s.min(now);
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let cutoff = now - self.window_s;
+        let count = self
+            .buf
+            .iter()
+            .rev()
+            .take_while(|&&(t, _)| t >= cutoff)
+            .count();
+        count as f64 / span
+    }
+
+    /// Peak-tracking rate estimate: the window is split into `parts`
+    /// equal sub-intervals and the busiest one's rate is returned. Under
+    /// a ramp the mean-window estimate lags by ~window/2; the peak
+    /// estimate lags by ~window/(2*parts) and also captures bursts — the
+    /// controller provisions against this so upswings don't burn SLO.
+    /// Falls back to [`Self::rate`] semantics when the window is young.
+    pub fn peak_rate(&self, now: f64, parts: usize) -> f64 {
+        assert!(parts >= 1);
+        let span = self.window_s.min(now);
+        if span <= 0.0 {
+            return 0.0;
+        }
+        let sub = span / parts as f64;
+        let cutoff = now - span;
+        let mut counts = vec![0u64; parts];
+        for &(t, _) in self.buf.iter().rev() {
+            if t < cutoff {
+                break;
+            }
+            let idx = (((t - cutoff) / sub) as usize).min(parts - 1);
+            counts[idx] += 1;
+        }
+        counts
+            .iter()
+            .map(|&c| c as f64 / sub)
+            .fold(0.0, f64::max)
+    }
+
+    /// Empirical prompt-length CDF over the window, anchored at the
+    /// [`ANCHOR_QS`] quantiles. `None` with fewer than 8 observations —
+    /// too little signal to re-plan from.
+    pub fn empirical_cdf(&self) -> Option<AnchoredCdf> {
+        if self.buf.len() < 8 {
+            return None;
+        }
+        let mut xs: Vec<f64> = self.buf.iter().map(|&(_, l)| l).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let hi = xs[n - 1];
+        // Support lower edge strictly below the smallest sample (AnchoredCdf
+        // requires F(first anchor) = 0 and x > 0; L_total >= 2 always).
+        let lo = (xs[0] - 1.0).max(1.0);
+        if hi <= lo {
+            return None;
+        }
+        let mut anchors: Vec<(f64, f64)> = vec![(lo, 0.0)];
+        for &q in &ANCHOR_QS {
+            let idx = ((q * (n - 1) as f64).round() as usize).min(n - 1);
+            let x = xs[idx];
+            let last = *anchors.last().expect("non-empty");
+            if x <= last.0 || x >= hi {
+                continue;
+            }
+            // Exact empirical mass at x, so anchors are self-consistent
+            // even when quantile ranks collide on duplicate lengths.
+            let f = xs.partition_point(|&v| v <= x) as f64 / n as f64;
+            if f <= last.1 || f >= 1.0 {
+                continue;
+            }
+            anchors.push((x, f));
+        }
+        anchors.push((hi, 1.0));
+        Some(AnchoredCdf::new(anchors))
+    }
+
+    /// A re-plannable [`Workload`]: the template's categories, output
+    /// model and compressibility with the window's empirical CDF swapped
+    /// in. `None` when the window is too thin (see [`Self::empirical_cdf`]).
+    pub fn snapshot(&self, template: &Workload) -> Option<Workload> {
+        let cdf = self.empirical_cdf()?;
+        let mut w = template.clone();
+        w.cdf = cdf;
+        Some(w)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::workload::cdf::LengthDist;
+    use crate::workload::traces;
+
+    #[test]
+    fn rate_tracks_window_count() {
+        let mut e = OnlineEstimator::new(10.0);
+        // 100 arrivals over 10 s => 10 req/s.
+        for i in 0..100 {
+            e.observe(i as f64 * 0.1, 500);
+        }
+        let r = e.rate(9.9);
+        assert!((r - 10.1).abs() < 0.5, "rate {r}");
+        assert_eq!(e.n_seen(), 100);
+    }
+
+    #[test]
+    fn peak_rate_tracks_the_busy_subwindow() {
+        let mut e = OnlineEstimator::new(8.0);
+        // 4 s at 10 req/s then 4 s at 40 req/s.
+        let mut t = 0.0;
+        while t < 4.0 {
+            e.observe(t, 100);
+            t += 0.1;
+        }
+        while t < 8.0 {
+            e.observe(t, 100);
+            t += 0.025;
+        }
+        let mean = e.rate(8.0);
+        let peak = e.peak_rate(8.0, 4);
+        assert!((mean - 25.0).abs() < 3.0, "mean {mean}");
+        assert!((peak - 40.0).abs() < 6.0, "peak {peak}");
+        assert!(peak > mean);
+        // A constant stream: peak ~= mean (no phantom headroom).
+        let mut c = OnlineEstimator::new(8.0);
+        let mut t = 0.0;
+        while t < 8.0 {
+            c.observe(t, 100);
+            t += 0.05;
+        }
+        let (m, p) = (c.rate(8.0), c.peak_rate(8.0, 4));
+        assert!((p - m).abs() / m < 0.1, "mean {m} vs peak {p}");
+    }
+
+    #[test]
+    fn rate_ignores_stale_buffer_tail() {
+        // Without new observations the estimate must decay, not freeze.
+        let mut e = OnlineEstimator::new(5.0);
+        for i in 0..50 {
+            e.observe(i as f64 * 0.1, 100); // 10 req/s until t = 5
+        }
+        assert!(e.rate(5.0) > 8.0);
+        assert_eq!(e.rate(20.0), 0.0, "stale observations must not count");
+    }
+
+    #[test]
+    fn eviction_keeps_only_window() {
+        let mut e = OnlineEstimator::new(5.0);
+        for i in 0..100 {
+            e.observe(i as f64, 100);
+        }
+        // At t = 99, the window [94, 99] holds 6 observations.
+        assert!(e.len() <= 6, "len {}", e.len());
+    }
+
+    #[test]
+    fn empirical_cdf_recovers_quantiles() {
+        let w = traces::azure();
+        let mut rng = Rng::new(5);
+        let mut e = OnlineEstimator::new(1e9);
+        for i in 0..50_000u32 {
+            let l = w.cdf.sample(&mut rng).round().max(2.0) as u32;
+            e.observe(i as f64 * 1e-3, l);
+        }
+        let cdf = e.empirical_cdf().expect("enough samples");
+        for q in [0.25, 0.5, 0.75, 0.9] {
+            let est = cdf.quantile(q);
+            let truth = w.cdf.quantile(q);
+            assert!(
+                (est - truth).abs() / truth < 0.15,
+                "q={q}: est {est} vs true {truth}"
+            );
+        }
+    }
+
+    #[test]
+    fn snapshot_swaps_cdf_and_keeps_template() {
+        let w = traces::agent_heavy();
+        let mut e = OnlineEstimator::new(1e9);
+        for i in 0..1000u32 {
+            e.observe(i as f64, 100 + (i % 900));
+        }
+        let snap = e.snapshot(&w).expect("snapshot");
+        assert_eq!(snap.p_c, w.p_c);
+        assert_eq!(snap.category_mix, w.category_mix);
+        assert!(snap.cdf.max_tokens() <= 1000.0);
+    }
+
+    #[test]
+    fn thin_window_yields_no_cdf() {
+        let mut e = OnlineEstimator::new(10.0);
+        for i in 0..5u32 {
+            e.observe(i as f64, 100);
+        }
+        assert!(e.empirical_cdf().is_none());
+        assert!(e.snapshot(&traces::azure()).is_none());
+    }
+
+    #[test]
+    fn degenerate_equal_lengths_still_build_a_cdf() {
+        let mut e = OnlineEstimator::new(10.0);
+        for i in 0..50u32 {
+            e.observe(i as f64 * 0.01, 512);
+        }
+        let cdf = e.empirical_cdf().expect("two-anchor cdf");
+        assert_eq!(cdf.cdf(512.0), 1.0);
+        assert_eq!(cdf.cdf(300.0), 0.0);
+    }
+}

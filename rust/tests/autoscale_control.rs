@@ -1,0 +1,348 @@
+//! The online control loop's regression gate.
+//!
+//! * **Stationary projection is exact**: every nonstationary arrival
+//!   process with a constant rate function reproduces the stationary
+//!   Poisson stream bit-for-bit (same RNG consumption, same arithmetic),
+//!   trace generation included; and the autoscale DES with a constant
+//!   rate routes each request to the same tier as `route_trace_tiered`.
+//! * **Conservation**: autoscale-down draining never loses or duplicates
+//!   a request — every generated request completes exactly once.
+//! * **Hysteresis**: the dead-band holds small dips, scale-up is
+//!   immediate, the switching cost pins the layout.
+//! * **Censoring**: truncated or unprovisioned simulations account for
+//!   every request instead of silently dropping it from the percentiles.
+
+use fleetopt::config::PlannerConfig;
+use fleetopt::fleetsim::{
+    route_trace_tiered, simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig,
+};
+use fleetopt::planner::{plan_spec_sweep_gamma, plan_tiers, PlanInput, ReplanConfig};
+use fleetopt::workload::arrivals::{
+    generate_trace, generate_trace_arrivals, ArrivalProcess, NonstationaryArrivals,
+    PoissonArrivals, RateModel,
+};
+use fleetopt::workload::online::OnlineEstimator;
+use fleetopt::workload::traces;
+
+fn fast_input(lambda: f64) -> PlanInput {
+    let mut i = PlanInput::new(traces::azure(), lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: 8_000,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+/// Every constant-rate instance of every nonstationary process family.
+fn constant_models(lambda: f64) -> Vec<(&'static str, RateModel)> {
+    vec![
+        ("constant", RateModel::Constant(lambda)),
+        ("schedule", RateModel::Schedule(vec![(0.0, lambda)])),
+        (
+            "diurnal-amp0",
+            RateModel::Diurnal {
+                base: lambda,
+                amp: 0.0,
+                period_s: 600.0,
+                phase: 0.0,
+            },
+        ),
+        (
+            "mmpp-equal",
+            RateModel::Mmpp {
+                rates: [lambda, lambda],
+                mean_sojourn_s: [5.0, 5.0],
+            },
+        ),
+    ]
+}
+
+#[test]
+fn constant_rate_processes_are_bitwise_poisson() {
+    let lambda = 250.0;
+    for seed in [1u64, 42, 0xF1EE7] {
+        let reference: Vec<u64> = PoissonArrivals::new(lambda, seed)
+            .take(20_000)
+            .map(f64::to_bits)
+            .collect();
+        for (name, model) in constant_models(lambda) {
+            let mut p = NonstationaryArrivals::new(model, seed);
+            for (i, &want) in reference.iter().enumerate() {
+                let got = p.next_arrival().to_bits();
+                assert_eq!(got, want, "{name} seed {seed} diverges at arrival {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn constant_rate_trace_generation_is_bitwise_identical() {
+    let w = traces::agent_heavy();
+    let reference = generate_trace(&w, 120.0, 5_000, 9);
+    for (name, model) in constant_models(120.0) {
+        let mut p = NonstationaryArrivals::new(model, 9);
+        let trace = generate_trace_arrivals(&w, &mut p, 5_000, 9);
+        for (a, b) in reference.iter().zip(&trace) {
+            assert_eq!(a.l_total, b.l_total, "{name}: lengths diverge");
+            assert_eq!(
+                a.arrival_s.to_bits(),
+                b.arrival_s.to_bits(),
+                "{name}: arrivals diverge"
+            );
+            assert_eq!(a.category, b.category, "{name}: categories diverge");
+            assert_eq!(a.l_out, b.l_out, "{name}: outputs diverge");
+        }
+    }
+}
+
+#[test]
+fn autoscale_routes_bitwise_like_route_trace_tiered_when_static() {
+    // Constant rate, controller off: the autoscale DES must route every
+    // request to the same tier as the offline router (same seeds, same
+    // boundaries/gammas) — per-tier arrival totals match exactly.
+    let lambda = 300.0;
+    let n = 8_000;
+    let seed = 11;
+    let input = fast_input(lambda);
+    let spec = input.gpu.fleet_spec(&[4096]);
+    let plan = plan_spec_sweep_gamma(&input, &spec).unwrap();
+    let boundaries = plan.boundaries();
+    let gammas = plan.gammas.clone();
+
+    let cfg = AutoscaleConfig {
+        replanning: false,
+        ..AutoscaleConfig::default()
+    };
+    let rep = simulate_autoscale(
+        &input.workload,
+        RateModel::Constant(lambda),
+        n,
+        &input,
+        plan,
+        &cfg,
+        seed,
+    );
+    let routed = route_trace_tiered(&input.workload, lambda, n, &boundaries, &gammas, seed);
+
+    let per_tier: Vec<u64> = (0..routed.tiers.len())
+        .map(|ti| {
+            rep.epochs
+                .iter()
+                .map(|e| e.tiers[ti].arrivals)
+                .sum::<u64>()
+        })
+        .collect();
+    let expect: Vec<u64> = routed.tiers.iter().map(|t| t.len() as u64).collect();
+    assert_eq!(per_tier, expect, "per-tier routing diverged");
+    assert_eq!(rep.n_compressed, routed.n_compressed());
+    assert_eq!(rep.completed, n as u64);
+}
+
+#[test]
+fn autoscale_drain_conserves_every_request() {
+    // A hard step down (400 -> 120 req/s) forces a deep scale-down with
+    // draining; every request must complete exactly once (the simulator
+    // asserts against duplicates internally).
+    let input = fast_input(400.0);
+    let spec = input.gpu.fleet_spec(&[4096]);
+    let plan = plan_spec_sweep_gamma(&input, &spec).unwrap();
+    let model = RateModel::Schedule(vec![(0.0, 400.0), (25.0, 120.0)]);
+    let cfg = AutoscaleConfig {
+        epoch_s: 8.0,
+        window_s: 16.0,
+        provision_delay_s: 4.0,
+        ..AutoscaleConfig::default()
+    };
+    let n = 15_000;
+    let rep = simulate_autoscale(&input.workload, model, n, &input, plan.clone(), &cfg, 3);
+    assert_eq!(rep.completed, n as u64, "lost requests");
+    assert_eq!(rep.censored, 0);
+    assert!(rep.epochs.len() >= 4, "expected several epochs");
+    // The controller actually scaled down after the step.
+    let first = rep.epochs.first().unwrap().total_gpus();
+    let last = rep.epochs.last().unwrap().total_gpus();
+    assert!(
+        last < first,
+        "no scale-down: first epoch {first} GPUs, last {last}"
+    );
+    // Conservation also holds per tier: arrivals == completions overall.
+    for ti in 0..plan.k() {
+        let arr: u64 = rep.epochs.iter().map(|e| e.tiers[ti].arrivals).sum();
+        let done: u64 = rep.epochs.iter().map(|e| e.tiers[ti].completed).sum();
+        assert_eq!(arr, done, "tier {ti} unbalanced");
+    }
+}
+
+#[test]
+fn autoscale_beats_static_peak_on_a_step_down() {
+    // Static provisioning for the peak pays for the trough; the control
+    // loop must realize a strictly smaller bill on a declining schedule.
+    let input_peak = fast_input(400.0);
+    let spec = input_peak.gpu.fleet_spec(&[4096]);
+    let static_plan = plan_spec_sweep_gamma(&input_peak, &spec).unwrap();
+    let model = RateModel::Schedule(vec![(0.0, 400.0), (20.0, 100.0)]);
+    let n = 12_000;
+    let cfg_auto = AutoscaleConfig {
+        epoch_s: 6.0,
+        window_s: 12.0,
+        provision_delay_s: 3.0,
+        ..AutoscaleConfig::default()
+    };
+    let mut cfg_static = cfg_auto.clone();
+    cfg_static.replanning = false;
+
+    let rep_static = simulate_autoscale(
+        &input_peak.workload,
+        model.clone(),
+        n,
+        &input_peak,
+        static_plan.clone(),
+        &cfg_static,
+        5,
+    );
+    let rep_auto = simulate_autoscale(
+        &input_peak.workload,
+        model,
+        n,
+        &input_peak,
+        static_plan,
+        &cfg_auto,
+        5,
+    );
+    assert_eq!(rep_auto.completed, n as u64);
+    assert!(
+        rep_auto.cost < rep_static.cost,
+        "autoscale ${:.2} must beat static-peak ${:.2}",
+        rep_auto.cost,
+        rep_static.cost
+    );
+}
+
+#[test]
+fn online_estimator_feeds_a_plannable_snapshot() {
+    let w = traces::azure();
+    let mut est = OnlineEstimator::new(30.0);
+    let mut arr = NonstationaryArrivals::new(RateModel::Constant(200.0), 21);
+    let trace = generate_trace_arrivals(&w, &mut arr, 6_000, 21);
+    let mut now = 0.0;
+    for r in &trace {
+        est.observe(r.arrival_s, r.l_total);
+        now = r.arrival_s;
+    }
+    let rate = est.rate(now);
+    assert!((rate - 200.0).abs() / 200.0 < 0.15, "rate estimate {rate}");
+    // The snapshot must plan end-to-end through the real planner.
+    let snap = est.snapshot(&w).expect("snapshot");
+    let mut input = PlanInput::new(snap, rate);
+    input.cfg.mc_samples = 8_000;
+    let spec = input.gpu.fleet_spec(&[4096]);
+    let plan = plan_spec_sweep_gamma(&input, &spec).expect("snapshot must be plannable");
+    assert!(plan.total_gpus() > 0);
+}
+
+#[test]
+fn replan_hysteresis_composes_with_per_tier_slo() {
+    // A per-tier SLO set to the fleet default must leave the whole replan
+    // trajectory identical (spelled-out defaults change nothing).
+    let input = fast_input(800.0);
+    let spec = input.gpu.fleet_spec(&[4096]);
+    let mut explicit = spec.clone();
+    for t in &mut explicit.tiers {
+        t.p99_ttft_s = Some(input.slo.p99_ttft_s);
+    }
+    let a = plan_tiers(&input, &spec, &[1.5], true, None).unwrap();
+    let b = plan_tiers(&input, &explicit, &[1.5], true, None).unwrap();
+    assert_eq!(a.gpu_counts(), b.gpu_counts());
+    assert_eq!(a.cost_yr.to_bits(), b.cost_yr.to_bits());
+
+    // The b-side replanner carries the explicit-SLO spec in its current
+    // plan; re-planning at the same inputs must track the default-spec
+    // trajectory exactly.
+    let mut rp_a = fleetopt::planner::Replanner::new(ReplanConfig::default(), a);
+    let mut rp_b = fleetopt::planner::Replanner::new(ReplanConfig::default(), b);
+    for lam in [600.0, 900.0, 1100.0] {
+        let oa = rp_a.replan(&fast_input(lam)).unwrap();
+        let ob = rp_b.replan(&fast_input(lam)).unwrap();
+        assert_eq!(oa.plan.gpu_counts(), ob.plan.gpu_counts(), "lam {lam}");
+        assert_eq!(oa.switched_layout, ob.switched_layout);
+    }
+}
+
+#[test]
+fn tiered_sim_censors_unprovisioned_tiers_instead_of_dropping() {
+    // A fully drained tiered simulation censors nothing...
+    let input = fast_input(300.0);
+    let spec = input.gpu.fleet_spec(&[4096]);
+    let plan = plan_spec_sweep_gamma(&input, &spec).unwrap();
+    let sim = simulate_fleet_tiered(&input.workload, &plan, &input.gpu, 300.0, 4_000, 13);
+    assert_eq!(sim.censored, vec![0, 0]);
+    assert_eq!(sim.censored_total(), 0);
+    // ...and a zero-GPU tier with routed traffic is censored in full, not
+    // silently dropped from the percentile population.
+    let mut starved = plan.clone();
+    starved.tiers[1].n_gpus = 0;
+    let sim = simulate_fleet_tiered(&input.workload, &starved, &input.gpu, 300.0, 4_000, 13);
+    assert!(sim.tiers[1].is_none());
+    assert!(sim.censored[1] > 0);
+    assert_eq!(sim.censored[1], sim.routed.tiers[1].len() as u64);
+    let total: u64 = sim
+        .tiers
+        .iter()
+        .flatten()
+        .map(|r| r.completed)
+        .sum::<u64>()
+        + sim.censored_total();
+    assert_eq!(total, 4_000);
+}
+
+#[test]
+fn diurnal_autoscale_tracks_load_with_bounded_slo_misses() {
+    // The smoke-level acceptance: on a diurnal trace the control loop
+    // keeps completing everything, spends less than the static peak
+    // fleet, and its per-epoch GPU counts actually move with the wave.
+    let base = 300.0;
+    let model = RateModel::Diurnal {
+        base,
+        amp: 0.6,
+        period_s: 40.0,
+        phase: 0.0,
+    };
+    let input_peak = fast_input(model.peak_rate());
+    let spec = input_peak.gpu.fleet_spec(&[4096]);
+    let static_plan = plan_spec_sweep_gamma(&input_peak, &spec).unwrap();
+    let input0 = fast_input(model.rate_hint());
+    let init = plan_spec_sweep_gamma(&input0, &spec).unwrap();
+    let n = 24_000; // ~80 s at the mean rate: two full periods
+    let cfg = AutoscaleConfig {
+        epoch_s: 5.0,
+        window_s: 10.0,
+        provision_delay_s: 2.5,
+        ..AutoscaleConfig::default()
+    };
+    let rep = simulate_autoscale(&input0.workload, model.clone(), n, &input0, init, &cfg, 17);
+    assert_eq!(rep.completed, n as u64);
+    assert!(rep.epochs.len() >= 10);
+    // GPU counts must vary with the wave (not a frozen fleet).
+    let counts: Vec<u64> = rep.epochs.iter().map(|e| e.total_gpus()).collect();
+    let lo = counts.iter().min().unwrap();
+    let hi = counts.iter().max().unwrap();
+    assert!(hi > lo, "autoscaler never moved: {counts:?}");
+    // And the realized bill undercuts always-on peak provisioning.
+    let mut cfg_static = cfg;
+    cfg_static.replanning = false;
+    let rep_static = simulate_autoscale(
+        &input_peak.workload,
+        model,
+        n,
+        &input_peak,
+        static_plan,
+        &cfg_static,
+        17,
+    );
+    assert!(
+        rep.cost < rep_static.cost * 1.02,
+        "autoscale ${:.2} vs static-peak ${:.2}",
+        rep.cost,
+        rep_static.cost
+    );
+}
