@@ -1,0 +1,152 @@
+//! Bench §Perf — DES engine throughput (the "DES performance" ROADMAP
+//! section's evidence). Two CI-gated measurements, written to
+//! `BENCH_des.json` at the repo root:
+//!
+//! 1. **Azure event-loop throughput**: the azure trace through a
+//!    homogeneous long-context pool (16 slots/GPU — the queue-op-dominated
+//!    shape), simulated twice with identical inputs: once on the
+//!    `BinaryHeap` oracle scheduler, once on the calendar queue. Results
+//!    are asserted bit-identical before timing counts; the CI floor is a
+//!    >= 3x wall-clock speedup (`speedup_vs_heap`). The heap column *is*
+//!    the faithful pre-overhaul "before": it runs the exact pre-PR
+//!    scheduling algorithm inside the same loop.
+//! 2. **Stress archetype**: the default 5M-request / 512-GPU / K=4
+//!    diurnal scenario (`fleetopt simulate --stress`); CI gates
+//!    `stress.wall_s < 30` in release.
+
+use std::time::Instant;
+
+use fleetopt::config::GpuProfile;
+use fleetopt::fleetsim::{
+    mean_occupancy_s, run_stress, simulate_pool_with, QueueImpl, SimConfig, SimRequest,
+    SimResult, SimScratch, StressConfig,
+};
+use fleetopt::util::json::{obj, Json};
+use fleetopt::workload::arrivals::generate_trace;
+use fleetopt::workload::traces;
+
+/// The azure homogeneous-pool trace: `n` requests at `lambda` req/s with
+/// lengths drawn from the azure workload (no routing/compression — the
+/// homogeneous baseline shape of Table 3), via the shared trace generator.
+fn azure_trace(lambda: f64, n: usize, seed: u64) -> Vec<SimRequest> {
+    generate_trace(&traces::azure(), lambda, n, seed)
+        .iter()
+        .map(|r| SimRequest {
+            arrival_s: r.arrival_s,
+            l_in: r.l_in,
+            l_out: r.l_out,
+        })
+        .collect()
+}
+
+fn main() {
+    // --- azure event-loop throughput: calendar vs the heap oracle -------
+    let g = GpuProfile::a100_llama70b();
+    let n_slots = g.n_max_long(); // 16 slots/GPU: queue-op-dominated
+    let lambda = 2_000.0;
+    let n = 1_500_000;
+    let reqs = azure_trace(lambda, n, 0xDE5BE);
+    // Size the pool for rho ~0.8 from the trace's own mean occupancy.
+    let occ = mean_occupancy_s(&reqs, &g, n_slots);
+    let n_gpus = (lambda * occ / (n_slots as f64 * 0.8)).ceil() as u64;
+    println!(
+        "azure event-loop: {n} requests, {n_gpus} GPUs x {n_slots} slots, \
+         E[occupancy] {occ:.1} s"
+    );
+
+    let run = |which: QueueImpl| -> (SimResult, f64) {
+        let mut cfg = SimConfig::new(g.clone(), n_gpus, n_slots);
+        cfg.queue_impl = which;
+        let mut scratch = SimScratch::new();
+        let t0 = Instant::now();
+        let res = simulate_pool_with(&cfg, &reqs, &mut scratch);
+        (res, t0.elapsed().as_secs_f64() * 1e3)
+    };
+    // Untimed warm-up of both backends on a prefix so the first timed run
+    // doesn't pay process-cold page-fault/allocator costs (the heap would
+    // otherwise run first and cold, biasing the CI-gated ratio).
+    for which in [QueueImpl::BinaryHeap, QueueImpl::Calendar] {
+        let mut cfg = SimConfig::new(g.clone(), n_gpus, n_slots);
+        cfg.queue_impl = which;
+        std::hint::black_box(simulate_pool_with(
+            &cfg,
+            &reqs[..reqs.len().min(150_000)],
+            &mut SimScratch::new(),
+        ));
+    }
+    let (res_heap, heap_ms) = run(QueueImpl::BinaryHeap);
+    let (res_cal, cal_ms) = run(QueueImpl::Calendar);
+    let identical = res_heap.utilization.to_bits() == res_cal.utilization.to_bits()
+        && res_heap.completed == res_cal.completed
+        && res_heap.events == res_cal.events;
+    let (mut th, mut tc) = (res_heap.ttft, res_cal.ttft);
+    let (mut wh, mut wc) = (res_heap.wait, res_cal.wait);
+    let identical = identical
+        && th.p99().to_bits() == tc.p99().to_bits()
+        && wh.p99().to_bits() == wc.p99().to_bits();
+    assert!(identical, "calendar queue diverged from the heap oracle");
+    let speedup = heap_ms / cal_ms.max(1e-9);
+    let events_per_s = res_cal.events as f64 / (cal_ms / 1e3).max(1e-9);
+    println!(
+        "  heap {heap_ms:8.1} ms | calendar {cal_ms:8.1} ms ({speedup:.2}x, \
+         {:.2} M events/s, {} events, identical)",
+        events_per_s / 1e6,
+        res_cal.events,
+    );
+
+    // --- stress archetype: 5M requests, 512 GPUs, K=4, diurnal ----------
+    let scfg = StressConfig::default();
+    let rep = run_stress(&scfg);
+    assert_eq!(rep.completed, rep.n_requests, "stress run lost requests");
+    assert_eq!(rep.censored, 0);
+    println!(
+        "stress: {} requests, {} GPUs (per tier {:?}), {} events in {:.2} s \
+         (gen {:.2} s + sim {:.2} s) = {:.2} M events/s",
+        rep.n_requests,
+        scfg.n_gpus_total,
+        rep.gpus,
+        rep.events,
+        rep.wall_s,
+        rep.gen_s,
+        rep.sim_s,
+        rep.events_per_s() / 1e6,
+    );
+
+    let report = obj(vec![
+        ("bench", Json::Str("des_throughput".into())),
+        (
+            "azure",
+            obj(vec![
+                ("n_requests", Json::Num(n as f64)),
+                ("n_gpus", Json::Num(n_gpus as f64)),
+                ("n_slots", Json::Num(n_slots as f64)),
+                ("events", Json::Num(res_cal.events as f64)),
+                ("heap_ms", Json::Num(heap_ms)),
+                ("calendar_ms", Json::Num(cal_ms)),
+                ("speedup_vs_heap", Json::Num(speedup)),
+                ("events_per_s_calendar", Json::Num(events_per_s)),
+                ("identical", Json::Bool(identical)),
+            ]),
+        ),
+        (
+            "stress",
+            obj(vec![
+                ("n_requests", Json::Num(rep.n_requests as f64)),
+                ("gpus_total", Json::Num(scfg.n_gpus_total as f64)),
+                ("k", Json::Num(scfg.windows.len() as f64)),
+                ("wall_s", Json::Num(rep.wall_s)),
+                ("gen_s", Json::Num(rep.gen_s)),
+                ("sim_s", Json::Num(rep.sim_s)),
+                ("events", Json::Num(rep.events as f64)),
+                ("events_per_s", Json::Num(rep.events_per_s())),
+                ("completed", Json::Num(rep.completed as f64)),
+                ("censored", Json::Num(rep.censored as f64)),
+                ("lambda_base", Json::Num(rep.lambda_base)),
+                ("horizon_s", Json::Num(rep.horizon_s)),
+            ]),
+        ),
+    ]);
+    let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_des.json");
+    std::fs::write(path, report.to_string_pretty() + "\n").expect("writing BENCH_des.json");
+    println!("wrote {path}");
+}

@@ -9,7 +9,7 @@ use crate::compress::corpus;
 use crate::compress::extractive::compress;
 use crate::compress::fidelity;
 use crate::compress::tokenizer::count_tokens;
-use crate::config::GpuProfile;
+use crate::config::{FleetSpec, GpuProfile};
 use crate::fleetsim::autoscale::{simulate_autoscale, AutoscaleConfig, AutoscaleReport};
 use crate::fleetsim::fleet::FleetSimResult;
 use crate::fleetsim::sim::{simulate_pool, SimConfig};
@@ -623,71 +623,119 @@ fn table9_row(
 /// the realized rate — GPU-hours integrated analytically), and (3) the
 /// online autoscaler (cold-started at the t = 0 rate). All three run on
 /// the same request stream per variant (same seed).
+///
+/// §Perf: the (variant x policy) grid shards over `std::thread::scope`
+/// like the planner sweeps — each arrival variant runs on its own worker,
+/// and within a variant the static-peak and autoscale simulations (which
+/// share nothing but the seed) run concurrently; the oracle follows the
+/// autoscaler because it bills over its epoch grid. Every simulation is
+/// deterministic per seed, so the rows are bit-identical to a serial run
+/// and come out in the fixed (variant, method) order.
 pub fn table9_rows(w: &Workload, n: usize, seed: u64) -> Vec<Table9Row> {
-    let mut rows = Vec::new();
     let spec = GpuProfile::a100_llama70b().fleet_spec(&[w.b_short]);
-    let mk_input = |lam: f64| {
-        let mut i = PlanInput::new(w.clone(), lam);
-        i.cfg.mc_samples = 8_000;
-        i
-    };
     // Horizon-proportional controller cadence: ~25 control actions per
     // run keep the tracking lag (~2.5 epochs with the peak estimator)
     // small against the one-cycle wave, so the headroom knob covers the
     // upswing shortfall.
     let horizon_est = n as f64 / 400.0;
     let epoch_s = (horizon_est / 25.0).max(1.0);
-    for (variant, model) in table9_scenarios(horizon_est) {
-        let cfg = AutoscaleConfig {
-            epoch_s,
-            window_s: epoch_s * 2.0,
-            provision_delay_s: epoch_s * 0.5,
-            ..AutoscaleConfig::default()
-        };
+    let scenarios = table9_scenarios(horizon_est);
+    let per_variant: Vec<Vec<Table9Row>> = std::thread::scope(|scope| {
+        let spec_ref = &spec;
+        let handles: Vec<_> = scenarios
+            .into_iter()
+            .map(|(variant, model)| {
+                scope.spawn(move || {
+                    table9_variant(w, n, seed, epoch_s, variant, model, spec_ref)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("Table 9 variant worker panicked"))
+            .collect()
+    });
+    per_variant.into_iter().flatten().collect()
+}
 
+/// One arrival variant's three Table-9 rows (static-peak, oracle,
+/// autoscale) — see [`table9_rows`] for the sharding contract.
+fn table9_variant(
+    w: &Workload,
+    n: usize,
+    seed: u64,
+    epoch_s: f64,
+    variant: &'static str,
+    model: RateModel,
+    spec: &FleetSpec,
+) -> Vec<Table9Row> {
+    let mk_input = |lam: f64| {
+        let mut i = PlanInput::new(w.clone(), lam);
+        i.cfg.mc_samples = 8_000;
+        i
+    };
+    let cfg = AutoscaleConfig {
+        epoch_s,
+        window_s: epoch_s * 2.0,
+        provision_delay_s: epoch_s * 0.5,
+        ..AutoscaleConfig::default()
+    };
+
+    let (rep_static, rep_auto) = std::thread::scope(|scope| {
         // (1) static worst-case: provision the peak once, never touch it.
-        let input_peak = mk_input(model.peak_rate());
-        let static_plan = plan_spec_sweep_gamma(&input_peak, &spec).expect("static plan");
-        let mut cfg_static = cfg.clone();
-        cfg_static.replanning = false;
-        let rep_static =
-            simulate_autoscale(w, model.clone(), n, &input_peak, static_plan, &cfg_static, seed);
-        rows.push(table9_row(w, variant, "static-peak", &rep_static));
-
+        let h_static = scope.spawn(|| {
+            let input_peak = mk_input(model.peak_rate());
+            let static_plan = plan_spec_sweep_gamma(&input_peak, spec).expect("static plan");
+            let mut cfg_static = cfg.clone();
+            cfg_static.replanning = false;
+            simulate_autoscale(
+                w,
+                model.clone(),
+                n,
+                &input_peak,
+                static_plan,
+                &cfg_static,
+                seed,
+            )
+        });
         // (3) online autoscaler, cold-started at the t = 0 rate.
         let input0 = mk_input(model.rate_hint());
-        let init = plan_spec_sweep_gamma(&input0, &spec).expect("initial plan");
-        let rep_auto = simulate_autoscale(w, model.clone(), n, &input0, init, &cfg, seed);
+        let init = plan_spec_sweep_gamma(&input0, spec).expect("initial plan");
+        let auto = simulate_autoscale(w, model.clone(), n, &input0, init, &cfg, seed);
+        (h_static.join().expect("static sim panicked"), auto)
+    });
 
-        // (2) per-epoch oracle over the autoscaler's own epoch grid: the
-        // hindsight-optimal plan at each epoch's realized rate, billed
-        // analytically for the epoch duration. This is an *optimistic
-        // lower bound*: it bills nothing for zero-arrival (drain) epochs
-        // and pays no provisioning delay, switching cost, or floors.
-        let cache = CalibCache::new();
-        let mut gpu_hours = 0.0;
-        let mut cost = 0.0;
-        let mut epochs = 0usize;
-        for e in &rep_auto.epochs {
-            if e.lambda_realized <= 0.0 {
-                continue;
-            }
-            let pi = mk_input(e.lambda_realized);
-            let Ok(p) = plan_spec_sweep_gamma_cached(&pi, &spec, &cache) else {
-                continue;
-            };
-            let dur_h = (e.t_end_s - e.t_start_s) / 3600.0;
-            gpu_hours += p.total_gpus() as f64 * dur_h;
-            cost += p
-                .tiers
-                .iter()
-                .zip(&p.spec.tiers)
-                .map(|(pool, ts)| pool.n_gpus as f64 * ts.cost_hr)
-                .sum::<f64>()
-                * dur_h;
-            epochs += 1;
+    // (2) per-epoch oracle over the autoscaler's own epoch grid: the
+    // hindsight-optimal plan at each epoch's realized rate, billed
+    // analytically for the epoch duration. This is an *optimistic
+    // lower bound*: it bills nothing for zero-arrival (drain) epochs
+    // and pays no provisioning delay, switching cost, or floors.
+    let cache = CalibCache::new();
+    let mut gpu_hours = 0.0;
+    let mut cost = 0.0;
+    let mut epochs = 0usize;
+    for e in &rep_auto.epochs {
+        if e.lambda_realized <= 0.0 {
+            continue;
         }
-        rows.push(Table9Row {
+        let pi = mk_input(e.lambda_realized);
+        let Ok(p) = plan_spec_sweep_gamma_cached(&pi, spec, &cache) else {
+            continue;
+        };
+        let dur_h = (e.t_end_s - e.t_start_s) / 3600.0;
+        gpu_hours += p.total_gpus() as f64 * dur_h;
+        cost += p
+            .tiers
+            .iter()
+            .zip(&p.spec.tiers)
+            .map(|(pool, ts)| pool.n_gpus as f64 * ts.cost_hr)
+            .sum::<f64>()
+            * dur_h;
+        epochs += 1;
+    }
+    vec![
+        table9_row(w, variant, "static-peak", &rep_static),
+        Table9Row {
             workload: w.name,
             variant,
             method: "oracle",
@@ -695,16 +743,19 @@ pub fn table9_rows(w: &Workload, n: usize, seed: u64) -> Vec<Table9Row> {
             cost,
             slo_ok_frac: 1.0,
             epochs,
-        });
-        rows.push(table9_row(w, variant, "autoscale", &rep_auto));
-    }
-    rows
+        },
+        table9_row(w, variant, "autoscale", &rep_auto),
+    ]
 }
 
 /// Table 9 — does the online control loop track the per-epoch oracle?
 /// Acceptance (ROADMAP "Online control loop"): autoscale GPU-hours within
 /// 10% of the oracle on the diurnal traces while meeting the SLO in
 /// >= 95% of epochs, and beating static-peak cost on >= 2 traces.
+///
+/// §Perf: the three traces shard over scoped workers (each already
+/// sharding its variants — see [`table9_rows`]); rows keep the serial
+/// trace order and are bit-identical per seed.
 pub fn table9(n: usize) -> Table {
     let mut t = Table::new(
         &format!(
@@ -720,8 +771,20 @@ pub fn table9(n: usize) -> Table {
             "Epochs",
         ],
     );
-    for (i, w) in traces::all().iter().enumerate() {
-        for r in table9_rows(w, n, 0x7AB9 + i as u64) {
+    let ws = traces::all();
+    let per_trace: Vec<Vec<Table9Row>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = ws
+            .iter()
+            .enumerate()
+            .map(|(i, w)| scope.spawn(move || table9_rows(w, n, 0x7AB9 + i as u64)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("Table 9 trace worker panicked"))
+            .collect()
+    });
+    for rows in per_trace {
+        for r in rows {
             t.row(&[
                 r.workload.to_string(),
                 r.variant.to_string(),

@@ -22,15 +22,24 @@
 //! a layout switch (a *software* re-tiering — the paper's central claim)
 //! takes effect immediately while hardware changes wait out the
 //! provisioning delay.
+//!
+//! §Perf (DES engine overhaul): busy slots live in dense per-GPU slabs,
+//! arrivals wake GPUs through a per-tier [`IdleSet`] bitset instead of an
+//! O(n_gpus) scan, per-epoch P99s stream through P² digests
+//! ([`EpochDigest`] — exact up to a 2048-sample head, P² beyond; bounded
+//! memory, reset without allocation; error bounds tested in
+//! `tests/des_engine.rs`), and controller events scheduled into
+//! the past are surfaced in [`AutoscaleReport::time_travel_events`]
+//! instead of a release-stripped `debug_assert` silently rewinding time.
 
 use std::collections::VecDeque;
 
 use crate::fleetsim::events::EventQueue;
-use crate::metrics::{EpochMetrics, EpochTierMetrics};
+use crate::fleetsim::idle::IdleSet;
+use crate::metrics::{EpochDigest, EpochMetrics, EpochTierMetrics};
 use crate::planner::replan::{ReplanConfig, Replanner};
 use crate::planner::{PlanInput, TieredPlan};
 use crate::util::rng::Rng;
-use crate::util::stats::Samples;
 use crate::workload::arrivals::{ArrivalProcess, NonstationaryArrivals, RateModel};
 use crate::workload::online::OnlineEstimator;
 use crate::workload::request::Request;
@@ -97,6 +106,10 @@ pub struct AutoscaleReport {
     pub layout_switches: u64,
     /// GPUs alive per tier at the end of the run.
     pub final_gpus: Vec<u64>,
+    /// Events that arrived at the scheduler with a timestamp in the past
+    /// and were clamped to the current time (and logged) — 0 in a healthy
+    /// run. Previously a `debug_assert` compiled out of release builds.
+    pub time_travel_events: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -108,8 +121,9 @@ struct Active {
 }
 
 struct AGpu {
-    slots: Vec<Option<Active>>,
-    n_busy: u32,
+    /// Busy slots, densely packed (slot identity is immaterial).
+    active: Vec<Active>,
+    n_slots: u32,
     iterating: bool,
     draining: bool,
     alive: bool,
@@ -119,8 +133,8 @@ struct AGpu {
 impl AGpu {
     fn new(n_slots: u32, t_iter: f64) -> Self {
         AGpu {
-            slots: vec![None; n_slots as usize],
-            n_busy: 0,
+            active: Vec::with_capacity(n_slots as usize),
+            n_slots,
             iterating: false,
             draining: false,
             alive: true,
@@ -128,14 +142,22 @@ impl AGpu {
         }
     }
 
+    fn n_busy(&self) -> u32 {
+        self.active.len() as u32
+    }
+
     fn free_slots(&self) -> u32 {
-        self.slots.len() as u32 - self.n_busy
+        self.n_slots - self.n_busy()
     }
 }
 
 struct Tier {
     queue: VecDeque<usize>,
     gpus: Vec<AGpu>,
+    /// Admitting candidates (alive, not draining, not iterating — which
+    /// by the loop invariant means idle; see `fleetsim::idle`). Kept in
+    /// sync via [`Tier::sync_idle`] after every per-GPU state change.
+    idle: IdleSet,
     /// Provisioned (alive) GPUs, including draining ones — they still run.
     n_alive: u64,
     /// Sum of slots across alive GPUs.
@@ -165,9 +187,9 @@ struct Tier {
     prov_acc: f64,
     gpu_acc: f64,
     gpu_total: f64,
-    // Epoch-local counters.
-    ttft_epoch: Samples,
-    wait_epoch: Samples,
+    // Epoch-local counters (streaming digests — reset, never reallocated).
+    ttft_epoch: EpochDigest,
+    wait_epoch: EpochDigest,
     completed_epoch: u64,
     arrivals_epoch: u64,
     // Whole-run counters.
@@ -184,9 +206,15 @@ impl Tier {
         slo_s: f64,
         wait_budget_s: f64,
     ) -> Self {
+        let mut idle = IdleSet::new();
+        idle.reset(n0 as usize);
+        for gi in 0..n0 as usize {
+            idle.insert(gi);
+        }
         Tier {
             queue: VecDeque::new(),
             gpus: (0..n0).map(|_| AGpu::new(n_slots, t_iter)).collect(),
+            idle,
             n_alive: n0,
             prov_slots: n0 * n_slots as u64,
             busy_slots: 0,
@@ -202,8 +230,8 @@ impl Tier {
             prov_acc: 0.0,
             gpu_acc: 0.0,
             gpu_total: 0.0,
-            ttft_epoch: Samples::new(),
-            wait_epoch: Samples::new(),
+            ttft_epoch: EpochDigest::new(),
+            wait_epoch: EpochDigest::new(),
             completed_epoch: 0,
             arrivals_epoch: 0,
             completed_total: 0,
@@ -233,22 +261,27 @@ impl Tier {
             .count() as u64
     }
 
-    /// The idle-most admitting GPU, if any (the arrival wake target).
+    /// Re-derive GPU `gi`'s membership in the idle (admitting) set —
+    /// idempotent, called after any state change touching the GPU.
+    fn sync_idle(&mut self, gi: usize) {
+        let g = &self.gpus[gi];
+        self.idle.set(gi, g.alive && !g.draining && !g.iterating);
+    }
+
+    /// The idle-most admitting GPU, if any (the arrival wake target). All
+    /// candidates tie at `n_slots` free slots — a non-iterating GPU is
+    /// empty (loop invariant) — so the original strict-`>` scan's "first
+    /// maximum" is exactly the lowest idle index.
     fn wake_candidate(&self) -> Option<usize> {
-        let mut best: Option<(usize, u32)> = None;
-        for (i, g) in self.gpus.iter().enumerate() {
-            if g.alive && !g.draining && !g.iterating {
-                let f = g.free_slots();
-                let better = match best {
-                    None => true,
-                    Some((_, bf)) => f > bf,
-                };
-                if better {
-                    best = Some((i, f));
-                }
-            }
+        let gi = self.idle.min();
+        if let Some(gi) = gi {
+            let g = &self.gpus[gi];
+            debug_assert!(
+                g.alive && !g.draining && !g.iterating && g.active.is_empty(),
+                "idle-set invariant violated for GPU {gi}"
+            );
         }
-        best.map(|(i, _)| i)
+        gi
     }
 
     /// Admit queued requests onto GPU `gi` while it has free slots,
@@ -275,14 +308,12 @@ impl Tier {
             self.wait_epoch.push(t - arrival_of[req]);
             let g = &mut self.gpus[gi];
             let prefill = (l_in_routed[req] as u64).div_ceil(chunk as u64) as u32;
-            let slot = g.slots.iter().position(Option::is_none).expect("free slot");
-            g.slots[slot] = Some(Active {
+            g.active.push(Active {
                 req,
                 prefill_left: prefill,
                 iters_left: prefill + l_out_of[req],
                 first_token_done: false,
             });
-            g.n_busy += 1;
             self.busy_slots += 1;
         }
     }
@@ -291,24 +322,25 @@ impl Tier {
     /// scale-down victim).
     fn retire(&mut self, gi: usize) {
         let g = &mut self.gpus[gi];
-        debug_assert!(g.alive && g.n_busy == 0, "retiring a busy/dead GPU");
+        debug_assert!(g.alive && g.n_busy() == 0, "retiring a busy/dead GPU");
         g.alive = false;
         g.draining = false;
         self.n_alive -= 1;
-        self.prov_slots -= g.slots.len() as u64;
+        self.prov_slots -= g.n_slots as u64;
+        self.sync_idle(gi);
     }
 
     /// Scale down by `count` GPUs: idle victims retire immediately, busy
     /// ones drain (stop admitting, finish in-flight, then retire).
     fn drain(&mut self, count: u64) {
         let mut left = count;
-        let idle: Vec<usize> = (0..self.gpus.len())
+        let idle_victims: Vec<usize> = (0..self.gpus.len())
             .filter(|&i| {
                 let g = &self.gpus[i];
-                g.alive && !g.draining && g.n_busy == 0
+                g.alive && !g.draining && g.n_busy() == 0
             })
             .collect();
-        for gi in idle {
+        for gi in idle_victims {
             if left == 0 {
                 return;
             }
@@ -322,12 +354,13 @@ impl Tier {
                     g.alive && !g.draining
                 })
                 .collect();
-            busy.sort_by_key(|&i| self.gpus[i].n_busy);
+            busy.sort_by_key(|&i| self.gpus[i].n_busy());
             for gi in busy {
                 if left == 0 {
                     return;
                 }
                 self.gpus[gi].draining = true;
+                self.sync_idle(gi);
                 left -= 1;
             }
         }
@@ -363,6 +396,16 @@ fn wait_budget_s(slo_s: f64, svc: &Option<crate::queueing::service::ServiceStats
     }
 }
 
+/// Schedule a controller event through the checked path: an event aimed
+/// at the past is re-scheduled at the current time and counted — the
+/// real error path replacing the release-stripped `debug_assert`.
+fn schedule_logged(events: &mut EventQueue<Ev>, time: f64, ev: Ev, time_travel: &mut u64) {
+    if let Err(e) = events.schedule_checked(time, ev) {
+        *time_travel += 1;
+        events.schedule(e.now, ev);
+    }
+}
+
 fn maybe_schedule_iteration(
     tiers: &mut [Tier],
     events: &mut EventQueue<Ev>,
@@ -372,12 +415,13 @@ fn maybe_schedule_iteration(
 ) {
     let (alive, busy, iterating, t_iter) = {
         let g = &tiers[ti].gpus[gi];
-        (g.alive, g.n_busy, g.iterating, g.t_iter)
+        (g.alive, g.n_busy(), g.iterating, g.t_iter)
     };
     if alive && busy > 0 && !iterating {
         tiers[ti].gpus[gi].iterating = true;
         events.schedule(t + t_iter, Ev::Iteration(ti, gi));
     }
+    tiers[ti].sync_idle(gi);
 }
 
 /// Rescale the fleet to a freshly adopted plan. Routing flips to the new
@@ -399,6 +443,7 @@ fn apply_scaling(
     boundaries: &mut Vec<u32>,
     gammas: &mut Vec<f64>,
     slo_default_s: f64,
+    time_travel: &mut u64,
 ) {
     if switched {
         *boundaries = plan.boundaries();
@@ -428,22 +473,33 @@ fn apply_scaling(
                 })
                 .collect();
             for gi in live {
-                if tier.gpus[gi].n_busy == 0 {
+                if tier.gpus[gi].n_busy() == 0 {
                     tier.retire(gi);
                 } else {
                     tier.gpus[gi].draining = true;
+                    tier.sync_idle(gi);
                 }
             }
             tier.n_slots_cfg = spec_t.n_max;
             tier.pending += target;
-            events.schedule(t + cfg.provision_delay_s, Ev::Provision(ti, target));
+            schedule_logged(
+                events,
+                t + cfg.provision_delay_s,
+                Ev::Provision(ti, target),
+                time_travel,
+            );
         } else {
             let avail = tier.n_active() + (tier.pending - tier.cancel);
             match target.cmp(&avail) {
                 std::cmp::Ordering::Greater => {
                     let add = target - avail;
                     tier.pending += add;
-                    events.schedule(t + cfg.provision_delay_s, Ev::Provision(ti, add));
+                    schedule_logged(
+                        events,
+                        t + cfg.provision_delay_s,
+                        Ev::Provision(ti, add),
+                        time_travel,
+                    );
                 }
                 std::cmp::Ordering::Less => {
                     let mut excess = avail - target;
@@ -482,16 +538,9 @@ fn record_epoch(
         } else {
             0.0
         };
-        let p99 = if tier.ttft_epoch.is_empty() {
-            0.0
-        } else {
-            tier.ttft_epoch.p99()
-        };
-        let wait_p99 = if tier.wait_epoch.is_empty() {
-            0.0
-        } else {
-            tier.wait_epoch.p99()
-        };
+        // Streaming P² P99s (0.0 when the epoch saw no samples).
+        let p99 = tier.ttft_epoch.p99();
+        let wait_p99 = tier.wait_epoch.p99();
         // The sizing-consistent SLO check: P99 queue wait against the
         // Eq. 8 budget (see `wait_budget_s`); raw TTFT includes physical
         // prefill, which at dense slot counts exceeds the SLO by itself.
@@ -513,8 +562,8 @@ fn record_epoch(
         tier.busy_acc = 0.0;
         tier.prov_acc = 0.0;
         tier.gpu_acc = 0.0;
-        tier.ttft_epoch = Samples::new();
-        tier.wait_epoch = Samples::new();
+        tier.ttft_epoch.reset();
+        tier.wait_epoch.reset();
         tier.completed_epoch = 0;
         tier.arrivals_epoch = 0;
     }
@@ -597,10 +646,11 @@ pub fn simulate_autoscale(
         .collect();
 
     let mut events: EventQueue<Ev> = EventQueue::new();
+    let mut time_travel = 0u64;
     for (i, r) in requests.iter().enumerate() {
         events.schedule(r.arrival_s, Ev::Arrival(i));
     }
-    events.schedule(cfg.epoch_s, Ev::Epoch);
+    schedule_logged(&mut events, cfg.epoch_s, Ev::Epoch, &mut time_travel);
 
     let mut estimator = OnlineEstimator::new(cfg.window_s);
     let mut replanner = Replanner::new(cfg.replan.clone(), initial);
@@ -659,35 +709,38 @@ pub fn simulate_autoscale(
                 let gpu = &mut tier.gpus[gi];
                 gpu.iterating = false;
                 // Advance every busy slot by one lockstep iteration
-                // (exactly `fleetsim::sim`'s model).
-                for slot in gpu.slots.iter_mut() {
-                    if let Some(a) = slot {
-                        a.iters_left -= 1;
-                        if a.prefill_left > 0 {
-                            a.prefill_left -= 1;
-                        } else if !a.first_token_done {
-                            a.first_token_done = true;
-                            tier.ttft_epoch.push(t - requests[a.req].arrival_s);
+                // (exactly `fleetsim::sim`'s model; dense slab, swap-
+                // remove on completion — slot order is immaterial).
+                let mut s = 0;
+                while s < gpu.active.len() {
+                    let a = &mut gpu.active[s];
+                    a.iters_left -= 1;
+                    if a.prefill_left > 0 {
+                        a.prefill_left -= 1;
+                    } else if !a.first_token_done {
+                        a.first_token_done = true;
+                        tier.ttft_epoch.push(t - requests[a.req].arrival_s);
+                    }
+                    if a.iters_left == 0 {
+                        let req = a.req;
+                        if !a.first_token_done {
+                            // Degenerate L_out: first token == last.
+                            tier.ttft_epoch.push(t - requests[req].arrival_s);
                         }
-                        if a.iters_left == 0 {
-                            if !a.first_token_done {
-                                // Degenerate L_out: first token == last.
-                                tier.ttft_epoch.push(t - requests[a.req].arrival_s);
-                            }
-                            assert!(!done[a.req], "request {} completed twice", a.req);
-                            done[a.req] = true;
-                            completed_total += 1;
-                            tier.completed_epoch += 1;
-                            tier.completed_total += 1;
-                            *slot = None;
-                            gpu.n_busy -= 1;
-                            tier.busy_slots -= 1;
-                        }
+                        assert!(!done[req], "request {req} completed twice");
+                        done[req] = true;
+                        gpu.active.swap_remove(s);
+                        completed_total += 1;
+                        tier.completed_epoch += 1;
+                        tier.completed_total += 1;
+                        tier.busy_slots -= 1;
+                    } else {
+                        s += 1;
                     }
                 }
                 let (draining, busy) = {
                     let g = &tiers[ti].gpus[gi];
-                    (g.draining, g.n_busy)
+                    (g.draining, g.n_busy())
                 };
                 if draining {
                     if busy == 0 {
@@ -752,6 +805,7 @@ pub fn simulate_autoscale(
                             &mut boundaries,
                             &mut gammas,
                             input.slo.p99_ttft_s,
+                            &mut time_travel,
                         );
                     }
                 }
@@ -766,7 +820,7 @@ pub fn simulate_autoscale(
                 epoch_idx += 1;
                 epoch_start = t;
                 if completed_total < n as u64 {
-                    events.schedule(t + cfg.epoch_s, Ev::Epoch);
+                    schedule_logged(&mut events, t + cfg.epoch_s, Ev::Epoch, &mut time_travel);
                 }
             }
         }
@@ -803,6 +857,13 @@ pub fn simulate_autoscale(
         "epoch partition lost GPU-time"
     );
     let slo_ok = epochs.iter().filter(|e| e.slo_ok).count();
+    let time_travel_events = time_travel + events.clamped();
+    if time_travel_events > 0 {
+        eprintln!(
+            "warning: autoscale DES clamped {time_travel_events} event(s) scheduled into \
+             the past to the current simulation time"
+        );
+    }
     AutoscaleReport {
         n_total: n as u64,
         completed: completed_total,
@@ -815,5 +876,6 @@ pub fn simulate_autoscale(
         layout_switches,
         final_gpus: tiers.iter().map(|x| x.n_alive).collect(),
         epochs,
+        time_travel_events,
     }
 }

@@ -1,8 +1,28 @@
-//! Deterministic discrete-event queue for the fleet simulator.
+//! Deterministic discrete-event queues for the fleet simulator.
 //!
-//! A binary heap keyed on (time, sequence): the sequence number breaks
-//! time ties in insertion order, so runs are bit-reproducible under a
-//! fixed seed — the property the Table-5 validation leans on.
+//! Two interchangeable schedulers behind one [`EventQueue`] API, both
+//! popping in exact `(time, seq)` order — the sequence number breaks time
+//! ties in insertion order, so runs are bit-reproducible under a fixed
+//! seed (the property the Table-5 validation leans on):
+//!
+//! * [`QueueImpl::Calendar`] (default) — a Brown-style calendar queue:
+//!   events hash into time-width buckets on a ring, pops scan only the
+//!   current bucket's due events. Push and pop are O(1) amortized and
+//!   touch one or two cache lines, where a binary heap over millions of
+//!   pre-scheduled arrivals pays O(log n) sift steps of random access per
+//!   operation. Bucket storage is recycled — the queue allocates nothing
+//!   in steady state.
+//! * [`QueueImpl::BinaryHeap`] — the original heap, kept verbatim as the
+//!   **equivalence oracle**: `tests/des_engine.rs` property-tests that the
+//!   two backends produce byte-identical pop sequences under random
+//!   schedules (including exact time ties), the same way
+//!   `SimilarityMode::AllPairs` anchors the compressor's inverted index.
+//!
+//! Scheduling into the past is a real error path, not a debug-only
+//! assert: [`EventQueue::schedule`] clamps the event to `now` and counts
+//! it (see [`EventQueue::clamped`]), and [`EventQueue::schedule_checked`]
+//! refuses outright — a past event would silently rewind simulation time
+//! on the heap and could be mis-filed by the calendar's year windows.
 
 use std::cmp::Ordering;
 use std::collections::BinaryHeap;
@@ -37,12 +57,226 @@ impl<E> PartialOrd for Scheduled<E> {
     }
 }
 
-/// Min-time event queue.
+/// Which scheduler backs an [`EventQueue`].
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum QueueImpl {
+    /// Calendar queue: O(1) amortized push/pop (the default).
+    #[default]
+    Calendar,
+    /// The original binary heap — the equivalence oracle.
+    BinaryHeap,
+}
+
+/// Attempted to schedule an event before the current simulation time.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PastScheduleError {
+    /// The rejected timestamp.
+    pub time: f64,
+    /// Simulation time when the schedule was attempted.
+    pub now: f64,
+}
+
+impl std::fmt::Display for PastScheduleError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "scheduling into the past: {} < {}", self.time, self.now)
+    }
+}
+
+impl std::error::Error for PastScheduleError {}
+
+/// Calendar-queue bucket count bounds. The bucket ring doubles while the
+/// queue grows past two events per bucket and halves as it drains, so pop
+/// scans stay O(events / buckets) = O(1) amortized; the cap bounds the
+/// ring's memory at ~2 MB of `Vec` headers even for multi-million-event
+/// preloads (a few events per bucket is still a one-cache-line scan).
+const MIN_BUCKETS: usize = 1 << 6;
+const MAX_BUCKETS: usize = 1 << 17;
+
+/// Brown's calendar queue specialized to the DES: unsorted buckets over a
+/// ring of fixed-width windows, min-scanned per pop.
+///
+/// **Exactness does not depend on the width tuning — only speed does.**
+/// One quotient function `q(t) = (t * inv_width) as u64` drives bucket
+/// assignment, the cursor, and the due filter; it is monotone in `t`
+/// (multiplication by a positive constant, then a floor), so events in a
+/// later window are never earlier in time, equal times always share a
+/// window (hence a bucket — tie order reduces to the in-bucket seq scan),
+/// and the scan's first hit is the global minimum. Two invariants keep
+/// that sound: events are never admitted before `now` (the `EventQueue`
+/// clamps), and the cursor never anchors past `now`'s window (resizes
+/// anchor at `now` itself) — so no event can hide in a window behind the
+/// cursor. A full fruitless ring round (sparse queue) falls back to a
+/// direct global-minimum search and re-anchors.
+#[derive(Debug)]
+struct Calendar<E> {
+    buckets: Vec<Vec<Scheduled<E>>>,
+    /// `buckets.len() - 1`; the length is a power of two.
+    mask: usize,
+    /// Bucket time width, seconds (and its reciprocal, the quotient
+    /// multiplier — all window math goes through `inv_width`).
+    width: f64,
+    inv_width: f64,
+    /// Absolute window index the next pop scan starts at; the ring bucket
+    /// is `abs_win & mask`.
+    abs_win: u64,
+    len: usize,
+}
+
+impl<E> Calendar<E> {
+    fn new() -> Self {
+        Calendar {
+            buckets: (0..MIN_BUCKETS).map(|_| Vec::new()).collect(),
+            mask: MIN_BUCKETS - 1,
+            width: 1.0,
+            inv_width: 1.0,
+            abs_win: 0,
+            len: 0,
+        }
+    }
+
+    /// Absolute window index of `time` (saturating f64 cast; the width
+    /// floor at resize keeps quotients far below u64::MAX).
+    fn quotient(&self, time: f64) -> u64 {
+        (time * self.inv_width) as u64
+    }
+
+    fn push(&mut self, time: f64, seq: u64, payload: E, now: f64) {
+        if self.len > 2 * self.buckets.len() && self.buckets.len() < MAX_BUCKETS {
+            self.resize(self.buckets.len() * 2, now);
+        }
+        let b = (self.quotient(time) & self.mask as u64) as usize;
+        self.buckets[b].push(Scheduled { time, seq, payload });
+        self.len += 1;
+    }
+
+    /// Point the scan cursor at the window containing `time`.
+    fn anchor(&mut self, time: f64) {
+        self.abs_win = self.quotient(time);
+    }
+
+    /// Rebuild with `n_new` buckets and a freshly estimated width, then
+    /// re-anchor at `now` — anchoring late could hide a subsequent insert
+    /// (which is only bounded below by `now`) behind the cursor.
+    fn resize(&mut self, n_new: usize, now: f64) {
+        let mut all: Vec<Scheduled<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        let mut t_min = f64::INFINITY;
+        let mut t_max = f64::NEG_INFINITY;
+        for s in &all {
+            t_min = t_min.min(s.time);
+            t_max = t_max.max(s.time);
+        }
+        let span = t_max - t_min;
+        let mut width = if all.len() >= 2 && span > 0.0 && span.is_finite() {
+            span / all.len() as f64
+        } else {
+            self.width
+        };
+        // Floor the width so quotients can never overflow u64 (and never
+        // hit subnormals): at least time_scale * 1e-12.
+        let floor = t_max.abs().max(now.abs()).max(1.0) * 1e-12;
+        if !width.is_finite() || width < floor {
+            width = floor;
+        }
+        self.buckets = (0..n_new).map(|_| Vec::new()).collect();
+        self.mask = n_new - 1;
+        self.width = width;
+        self.inv_width = 1.0 / width;
+        for s in all {
+            let b = (self.quotient(s.time) & self.mask as u64) as usize;
+            self.buckets[b].push(s);
+        }
+        self.anchor(now.max(0.0));
+    }
+
+    fn pop(&mut self, now: f64) -> Option<Scheduled<E>> {
+        if self.len == 0 {
+            return None;
+        }
+        if self.len * 4 < self.buckets.len() && self.buckets.len() > MIN_BUCKETS {
+            // Shrink to the final size in one rebuild (a drained or
+            // re-used queue would otherwise pay a halving chain of
+            // full redistributions, one per pop).
+            let mut target = self.buckets.len();
+            while self.len * 4 < target && target > MIN_BUCKETS {
+                target /= 2;
+            }
+            self.resize(target, now);
+        }
+        // Scan the ring one window at a time: the first bucket holding an
+        // event of its current window holds the global minimum (windows
+        // before the cursor are provably empty; quotients are monotone).
+        let n = self.buckets.len();
+        for _ in 0..n {
+            let cur = (self.abs_win & self.mask as u64) as usize;
+            let bucket = &mut self.buckets[cur];
+            let mut best: Option<usize> = None;
+            for (i, s) in bucket.iter().enumerate() {
+                if (s.time * self.inv_width) as u64 == self.abs_win {
+                    let better = match best {
+                        None => true,
+                        Some(j) => {
+                            let b = &bucket[j];
+                            s.time < b.time || (s.time == b.time && s.seq < b.seq)
+                        }
+                    };
+                    if better {
+                        best = Some(i);
+                    }
+                }
+            }
+            if let Some(i) = best {
+                self.len -= 1;
+                return Some(bucket.swap_remove(i));
+            }
+            self.abs_win += 1;
+        }
+        // A full round found nothing: the queue is sparse relative to its
+        // span. Direct search for the global min, then re-anchor there.
+        let mut at: Option<(usize, usize)> = None;
+        let mut bt = f64::INFINITY;
+        let mut bs = u64::MAX;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, s) in bucket.iter().enumerate() {
+                if s.time < bt || (s.time == bt && s.seq < bs) {
+                    bt = s.time;
+                    bs = s.seq;
+                    at = Some((b, i));
+                }
+            }
+        }
+        let (b, i) = at.expect("len > 0 but no event found");
+        self.len -= 1;
+        let s = self.buckets[b].swap_remove(i);
+        self.anchor(s.time);
+        Some(s)
+    }
+
+    /// Drop all events, keeping the ring and its bucket capacity.
+    fn clear(&mut self) {
+        for b in &mut self.buckets {
+            b.clear();
+        }
+        self.len = 0;
+        self.anchor(0.0);
+    }
+}
+
+#[derive(Debug)]
+enum Backend<E> {
+    Calendar(Calendar<E>),
+    Heap(BinaryHeap<Scheduled<E>>),
+}
+
+/// Min-time event queue (see module docs for the two backends).
 #[derive(Debug)]
 pub struct EventQueue<E> {
-    heap: BinaryHeap<Scheduled<E>>,
+    backend: Backend<E>,
     seq: u64,
     now: f64,
+    clamped: u64,
 }
 
 impl<E> Default for EventQueue<E> {
@@ -52,11 +286,31 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// A calendar-queue-backed event queue (the fast default).
     pub fn new() -> Self {
+        Self::with_impl(QueueImpl::Calendar)
+    }
+
+    /// Choose the scheduler backend explicitly (the binary heap is the
+    /// equivalence oracle for tests and benches).
+    pub fn with_impl(which: QueueImpl) -> Self {
+        let backend = match which {
+            QueueImpl::Calendar => Backend::Calendar(Calendar::new()),
+            QueueImpl::BinaryHeap => Backend::Heap(BinaryHeap::new()),
+        };
         EventQueue {
-            heap: BinaryHeap::new(),
+            backend,
             seq: 0,
             now: 0.0,
+            clamped: 0,
+        }
+    }
+
+    /// Which backend this queue runs on.
+    pub fn queue_impl(&self) -> QueueImpl {
+        match self.backend {
+            Backend::Calendar(_) => QueueImpl::Calendar,
+            Backend::Heap(_) => QueueImpl::BinaryHeap,
         }
     }
 
@@ -66,34 +320,90 @@ impl<E> EventQueue<E> {
     }
 
     pub fn is_empty(&self) -> bool {
-        self.heap.is_empty()
+        self.len() == 0
     }
 
     pub fn len(&self) -> usize {
-        self.heap.len()
+        match &self.backend {
+            Backend::Calendar(c) => c.len,
+            Backend::Heap(h) => h.len(),
+        }
     }
 
-    /// Schedule `payload` at absolute time `time` (must not be in the past).
+    /// Events that arrived with a timestamp in the past and were clamped
+    /// to `now` by [`EventQueue::schedule`]. Always 0 in a healthy
+    /// simulation; the autoscale DES surfaces this in its report.
+    pub fn clamped(&self) -> u64 {
+        self.clamped
+    }
+
+    fn push(&mut self, time: f64, payload: E) {
+        let seq = self.seq;
+        self.seq += 1;
+        let now = self.now;
+        match &mut self.backend {
+            Backend::Calendar(c) => c.push(time, seq, payload, now),
+            Backend::Heap(h) => h.push(Scheduled { time, seq, payload }),
+        }
+    }
+
+    /// Schedule `payload` at absolute time `time`. A past (or NaN) time is
+    /// clamped to `now` and counted in [`EventQueue::clamped`] — time
+    /// travel would rewind the clock on the heap backend and corrupt the
+    /// calendar's window accounting, so it is never admitted.
     pub fn schedule(&mut self, time: f64, payload: E) {
         debug_assert!(
             time >= self.now,
             "scheduling into the past: {time} < {}",
             self.now
         );
-        self.heap.push(Scheduled {
-            time,
-            seq: self.seq,
-            payload,
-        });
-        self.seq += 1;
+        let t = if time >= self.now {
+            time
+        } else {
+            self.clamped += 1;
+            self.now
+        };
+        self.push(t, payload);
+    }
+
+    /// Schedule `payload` at `time`, refusing (payload dropped, nothing
+    /// enqueued) if `time` is in the past. Callers that must not lose the
+    /// event handle the error explicitly — e.g. re-schedule at
+    /// [`EventQueue::now`] and log.
+    pub fn schedule_checked(&mut self, time: f64, payload: E) -> Result<(), PastScheduleError> {
+        if time < self.now || time.is_nan() {
+            return Err(PastScheduleError {
+                time,
+                now: self.now,
+            });
+        }
+        self.push(time, payload);
+        Ok(())
     }
 
     /// Pop the earliest event, advancing `now`.
     pub fn pop(&mut self) -> Option<(f64, E)> {
-        self.heap.pop().map(|s| {
+        let now = self.now;
+        let s = match &mut self.backend {
+            Backend::Calendar(c) => c.pop(now),
+            Backend::Heap(h) => h.pop(),
+        };
+        s.map(|s| {
             self.now = s.time;
             (s.time, s.payload)
         })
+    }
+
+    /// Reset to the pristine state (now = 0, seq = 0, no events), keeping
+    /// allocated bucket capacity — the scratch-reuse hook (§Perf).
+    pub fn reset(&mut self) {
+        match &mut self.backend {
+            Backend::Calendar(c) => c.clear(),
+            Backend::Heap(h) => h.clear(),
+        }
+        self.seq = 0;
+        self.now = 0.0;
+        self.clamped = 0;
     }
 }
 
@@ -101,57 +411,155 @@ impl<E> EventQueue<E> {
 mod tests {
     use super::*;
 
+    fn both() -> [EventQueue<&'static str>; 2] {
+        [
+            EventQueue::with_impl(QueueImpl::Calendar),
+            EventQueue::with_impl(QueueImpl::BinaryHeap),
+        ]
+    }
+
     #[test]
     fn pops_in_time_order() {
-        let mut q = EventQueue::new();
-        q.schedule(3.0, "c");
-        q.schedule(1.0, "a");
-        q.schedule(2.0, "b");
-        assert_eq!(q.pop().unwrap(), (1.0, "a"));
-        assert_eq!(q.pop().unwrap(), (2.0, "b"));
-        assert_eq!(q.pop().unwrap(), (3.0, "c"));
-        assert!(q.pop().is_none());
+        for mut q in both() {
+            q.schedule(3.0, "c");
+            q.schedule(1.0, "a");
+            q.schedule(2.0, "b");
+            assert_eq!(q.pop().unwrap(), (1.0, "a"));
+            assert_eq!(q.pop().unwrap(), (2.0, "b"));
+            assert_eq!(q.pop().unwrap(), (3.0, "c"));
+            assert!(q.pop().is_none());
+        }
     }
 
     #[test]
     fn ties_break_by_insertion_order() {
-        let mut q = EventQueue::new();
-        q.schedule(1.0, 1);
-        q.schedule(1.0, 2);
-        q.schedule(1.0, 3);
-        assert_eq!(q.pop().unwrap().1, 1);
-        assert_eq!(q.pop().unwrap().1, 2);
-        assert_eq!(q.pop().unwrap().1, 3);
+        for which in [QueueImpl::Calendar, QueueImpl::BinaryHeap] {
+            let mut q = EventQueue::with_impl(which);
+            q.schedule(1.0, 1);
+            q.schedule(1.0, 2);
+            q.schedule(1.0, 3);
+            assert_eq!(q.pop().unwrap().1, 1);
+            assert_eq!(q.pop().unwrap().1, 2);
+            assert_eq!(q.pop().unwrap().1, 3);
+        }
     }
 
     #[test]
     fn now_tracks_popped_time() {
-        let mut q = EventQueue::new();
-        assert_eq!(q.now(), 0.0);
-        q.schedule(5.5, ());
-        q.pop();
-        assert_eq!(q.now(), 5.5);
+        for which in [QueueImpl::Calendar, QueueImpl::BinaryHeap] {
+            let mut q = EventQueue::with_impl(which);
+            assert_eq!(q.now(), 0.0);
+            q.schedule(5.5, ());
+            q.pop();
+            assert_eq!(q.now(), 5.5);
+        }
     }
 
     #[test]
     fn interleaved_schedule_pop() {
-        let mut q = EventQueue::new();
-        q.schedule(1.0, "first");
-        let (t, _) = q.pop().unwrap();
-        q.schedule(t + 0.5, "second");
-        q.schedule(t + 0.25, "before-second");
-        assert_eq!(q.pop().unwrap().1, "before-second");
-        assert_eq!(q.pop().unwrap().1, "second");
+        for mut q in both() {
+            q.schedule(1.0, "first");
+            let (t, _) = q.pop().unwrap();
+            q.schedule(t + 0.5, "second");
+            q.schedule(t + 0.25, "before-second");
+            assert_eq!(q.pop().unwrap().1, "before-second");
+            assert_eq!(q.pop().unwrap().1, "second");
+        }
     }
 
     #[test]
     fn len_and_empty() {
-        let mut q = EventQueue::new();
-        assert!(q.is_empty());
-        q.schedule(1.0, ());
-        q.schedule(2.0, ());
-        assert_eq!(q.len(), 2);
+        for which in [QueueImpl::Calendar, QueueImpl::BinaryHeap] {
+            let mut q = EventQueue::with_impl(which);
+            assert!(q.is_empty());
+            q.schedule(1.0, ());
+            q.schedule(2.0, ());
+            assert_eq!(q.len(), 2);
+            q.pop();
+            assert_eq!(q.len(), 1);
+        }
+    }
+
+    #[test]
+    fn grows_and_shrinks_through_bulk_load() {
+        // Push far past the growth threshold, then drain fully: order must
+        // hold through every resize.
+        let mut q: EventQueue<usize> = EventQueue::new();
+        let n = 10_000;
+        for i in 0..n {
+            // A deterministic scatter of times with many exact ties.
+            let t = ((i * 7919) % 1000) as f64 * 0.125;
+            q.schedule(t, i);
+        }
+        let mut last = (f64::NEG_INFINITY, 0usize);
+        let mut popped = 0;
+        while let Some((t, i)) = q.pop() {
+            assert!(t >= last.0, "time went backwards: {t} after {}", last.0);
+            popped += 1;
+            last = (t, i);
+        }
+        assert_eq!(popped, n);
+    }
+
+    #[test]
+    fn sparse_far_future_events_found_by_direct_search() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        // Dense cluster to set a narrow width...
+        for i in 0..200 {
+            q.schedule(i as f64 * 1e-3, i);
+        }
+        // ...then one event years past the ring's span.
+        q.schedule(1.0e6, 999);
+        for _ in 0..200 {
+            assert_ne!(q.pop().unwrap().1, 999);
+        }
+        assert_eq!(q.pop().unwrap(), (1.0e6, 999));
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    #[cfg_attr(debug_assertions, should_panic(expected = "scheduling into the past"))]
+    fn past_schedule_clamps_and_counts_in_release() {
+        let mut q: EventQueue<&str> = EventQueue::new();
+        q.schedule(10.0, "a");
         q.pop();
-        assert_eq!(q.len(), 1);
+        // Debug builds keep the loud assert; release clamps and counts.
+        q.schedule(3.0, "late");
+        assert_eq!(q.clamped(), 1);
+        let (t, p) = q.pop().unwrap();
+        assert_eq!((t, p), (10.0, "late"));
+        assert_eq!(q.now(), 10.0, "clock must never rewind");
+    }
+
+    #[test]
+    fn schedule_checked_rejects_past_times() {
+        let mut q: EventQueue<u8> = EventQueue::new();
+        q.schedule(5.0, 1);
+        q.pop();
+        let err = q.schedule_checked(4.0, 2).unwrap_err();
+        assert_eq!(err.time, 4.0);
+        assert_eq!(err.now, 5.0);
+        assert!(q.is_empty(), "rejected event must not be enqueued");
+        assert!(q.schedule_checked(5.0, 3).is_ok());
+        assert_eq!(q.pop().unwrap(), (5.0, 3));
+        assert_eq!(q.clamped(), 0, "checked rejections are not clamps");
+        let nan = q.schedule_checked(f64::NAN, 4);
+        assert!(nan.is_err(), "NaN times are refused");
+    }
+
+    #[test]
+    fn reset_reuses_capacity_and_restarts_seq() {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        for i in 0..500 {
+            q.schedule(i as f64, i);
+        }
+        while q.pop().is_some() {}
+        q.reset();
+        assert_eq!(q.now(), 0.0);
+        // Tie order restarts from seq 0 exactly like a fresh queue.
+        q.schedule(1.0, 10);
+        q.schedule(1.0, 20);
+        assert_eq!(q.pop().unwrap().1, 10);
+        assert_eq!(q.pop().unwrap().1, 20);
     }
 }

@@ -9,7 +9,9 @@ use crate::config::GpuProfile;
 use crate::fleetsim::sim::{simulate_pool, SimConfig, SimRequest, SimResult};
 use crate::planner::{Plan, TieredPlan};
 use crate::util::rng::Rng;
-use crate::workload::arrivals::PoissonArrivals;
+use crate::workload::arrivals::{
+    ArrivalProcess, NonstationaryArrivals, PoissonArrivals, RateModel,
+};
 use crate::workload::traces::Workload;
 
 /// Where a simulated request ended up.
@@ -61,14 +63,46 @@ pub fn route_trace_tiered(
     gammas: &[f64],
     seed: u64,
 ) -> TieredTrace {
+    let mut arrivals = PoissonArrivals::new(lambda, seed);
+    route_trace_stream(w, &mut arrivals, n, boundaries, gammas, seed)
+}
+
+/// [`route_trace_tiered`] over an arbitrary (possibly nonstationary)
+/// arrival model — the stress archetype's and Table 9's trace source. The
+/// request-body RNG is seeded exactly as the stationary router seeds it,
+/// so a constant-rate model reproduces `route_trace_tiered` bit-for-bit
+/// (constant-rate `NonstationaryArrivals` are bitwise Poisson — tested in
+/// `tests/autoscale_control.rs`).
+pub fn route_trace_tiered_model(
+    w: &Workload,
+    model: &RateModel,
+    n: usize,
+    boundaries: &[u32],
+    gammas: &[f64],
+    seed: u64,
+) -> TieredTrace {
+    let mut arrivals = NonstationaryArrivals::new(model.clone(), seed);
+    route_trace_stream(w, &mut arrivals, n, boundaries, gammas, seed)
+}
+
+/// The shared routing core: draw `n` requests off `arrivals` and ladder
+/// each across the tier boundaries (per-boundary C&R, Eq. 15).
+fn route_trace_stream(
+    w: &Workload,
+    arrivals: &mut dyn ArrivalProcess,
+    n: usize,
+    boundaries: &[u32],
+    gammas: &[f64],
+    seed: u64,
+) -> TieredTrace {
     assert!(!boundaries.is_empty(), "need at least one boundary");
     assert_eq!(boundaries.len(), gammas.len());
     let k = boundaries.len() + 1;
     let mut rng = Rng::new(seed ^ 0xF1EE7);
-    let arrivals = PoissonArrivals::new(lambda, seed);
     let mut tiers: Vec<Vec<SimRequest>> = (0..k).map(|_| Vec::new()).collect();
     let mut n_compressed_at = vec![0u64; k - 1];
-    for (i, t) in arrivals.take(n).enumerate() {
+    for i in 0..n {
+        let t = arrivals.next_arrival();
         let r = w.sample_request(i as u64, t, &mut rng);
         let (tier, l_in, compressed) = route_request(
             r.l_total,
@@ -377,6 +411,27 @@ mod tests {
         // fat-tailed trace.
         assert!(t.n_compressed_at[0] > 0 && t.n_compressed_at[1] > 0);
         assert_eq!(t.n_compressed(), t.n_compressed_at[0] + t.n_compressed_at[1]);
+    }
+
+    #[test]
+    fn model_router_constant_rate_is_bitwise_stationary() {
+        // The stress/nonstationary routing front-end must reproduce the
+        // stationary router exactly for a constant-rate model.
+        let w = traces::azure();
+        let boundaries = [4096u32];
+        let gammas = [1.5];
+        let a = route_trace_tiered(&w, 750.0, 12_000, &boundaries, &gammas, 31);
+        let model = crate::workload::arrivals::RateModel::Constant(750.0);
+        let b = route_trace_tiered_model(&w, &model, 12_000, &boundaries, &gammas, 31);
+        assert_eq!(a.n_compressed_at, b.n_compressed_at);
+        for (ta, tb) in a.tiers.iter().zip(&b.tiers) {
+            assert_eq!(ta.len(), tb.len());
+            for (ra, rb) in ta.iter().zip(tb) {
+                assert_eq!(ra.arrival_s.to_bits(), rb.arrival_s.to_bits());
+                assert_eq!(ra.l_in, rb.l_in);
+                assert_eq!(ra.l_out, rb.l_out);
+            }
+        }
     }
 
     #[test]

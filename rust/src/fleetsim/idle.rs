@@ -1,0 +1,159 @@
+//! Intrusive idle-GPU tracking (§Perf).
+//!
+//! Both DES event loops wake a GPU on every arrival. The original code
+//! scanned every GPU (`filter(!iterating).max_by_key(free_slots)`) — an
+//! O(n_gpus) walk per arrival, which at 512 GPUs and millions of requests
+//! dominates the event loop. But the scan's answer is fully determined by
+//! a loop invariant: *a GPU is not iterating if and only if it holds zero
+//! busy slots* (an iteration is scheduled whenever work is admitted, and
+//! only an empty completion clears the flag). Every wake candidate
+//! therefore ties at `free_slots == n_slots`, so the `max_by_key` scan
+//! reduces to "pick the extreme-index idle GPU" — `max_by_key` keeps the
+//! last maximum (highest index, `fleetsim::sim`), the autoscale DES's
+//! manual strict-`>` loop keeps the first (lowest index). [`IdleSet`]
+//! maintains that set as a bitset: O(1) insert/remove, O(n/64) min/max,
+//! and idempotent updates so callers can re-sync membership after any
+//! state change without tracking transitions. The DES equivalence tests
+//! (`tests/des_engine.rs`) pin the replacement to the scan's output.
+
+/// A set of GPU indices backed by a bitset.
+#[derive(Clone, Debug, Default)]
+pub struct IdleSet {
+    words: Vec<u64>,
+}
+
+impl IdleSet {
+    pub fn new() -> Self {
+        IdleSet { words: Vec::new() }
+    }
+
+    /// Clear and resize for `n` indices, all initially absent.
+    pub fn reset(&mut self, n: usize) {
+        self.words.clear();
+        self.words.resize(n.div_ceil(64), 0);
+    }
+
+    /// Grow capacity to hold index `n - 1` (existing members kept).
+    pub fn grow(&mut self, n: usize) {
+        let need = n.div_ceil(64);
+        if need > self.words.len() {
+            self.words.resize(need, 0);
+        }
+    }
+
+    pub fn insert(&mut self, i: usize) {
+        self.grow(i + 1);
+        self.words[i >> 6] |= 1u64 << (i & 63);
+    }
+
+    pub fn remove(&mut self, i: usize) {
+        if i >> 6 < self.words.len() {
+            self.words[i >> 6] &= !(1u64 << (i & 63));
+        }
+    }
+
+    pub fn contains(&self, i: usize) -> bool {
+        i >> 6 < self.words.len() && self.words[i >> 6] & (1u64 << (i & 63)) != 0
+    }
+
+    /// Set membership of `i` in one idempotent call.
+    pub fn set(&mut self, i: usize, member: bool) {
+        if member {
+            self.insert(i);
+        } else {
+            self.remove(i);
+        }
+    }
+
+    /// Largest member, if any.
+    pub fn max(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate().rev() {
+            if w != 0 {
+                return Some((wi << 6) + 63 - w.leading_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    /// Smallest member, if any.
+    pub fn min(&self) -> Option<usize> {
+        for (wi, &w) in self.words.iter().enumerate() {
+            if w != 0 {
+                return Some((wi << 6) + w.trailing_zeros() as usize);
+            }
+        }
+        None
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.words.iter().all(|&w| w == 0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn insert_remove_min_max() {
+        let mut s = IdleSet::new();
+        s.reset(200);
+        assert!(s.is_empty());
+        assert_eq!(s.max(), None);
+        assert_eq!(s.min(), None);
+        s.insert(3);
+        s.insert(130);
+        s.insert(64);
+        assert_eq!(s.min(), Some(3));
+        assert_eq!(s.max(), Some(130));
+        assert!(s.contains(64));
+        s.remove(130);
+        assert_eq!(s.max(), Some(64));
+        s.remove(3);
+        s.remove(64);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn set_is_idempotent() {
+        let mut s = IdleSet::new();
+        s.reset(10);
+        s.set(5, true);
+        s.set(5, true);
+        assert_eq!(s.min(), Some(5));
+        s.set(5, false);
+        s.set(5, false);
+        assert!(s.is_empty());
+    }
+
+    #[test]
+    fn grows_on_demand() {
+        let mut s = IdleSet::new();
+        s.reset(2);
+        s.insert(1000);
+        assert_eq!(s.max(), Some(1000));
+        s.remove(5000); // out of range: no-op, no panic
+        assert_eq!(s.max(), Some(1000));
+        assert!(!s.contains(5000));
+    }
+
+    #[test]
+    fn matches_a_reference_scan() {
+        // Pseudo-random insert/remove stream vs a Vec<bool> reference.
+        let mut s = IdleSet::new();
+        s.reset(150);
+        let mut reference = vec![false; 150];
+        let mut x = 0x9E3779B97F4A7C15u64;
+        for _ in 0..10_000 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            let i = (x >> 33) as usize % 150;
+            let member = x & 1 == 0;
+            s.set(i, member);
+            reference[i] = member;
+            let want_max = reference.iter().rposition(|&b| b);
+            let want_min = reference.iter().position(|&b| b);
+            assert_eq!(s.max(), want_max);
+            assert_eq!(s.min(), want_min);
+        }
+    }
+}

@@ -2,16 +2,22 @@
 //! simulator for heterogeneous multi-pool LLM fleets, used to validate the
 //! analytical model's utilization predictions within 3% — plus the
 //! autoscaling variant ([`autoscale`]) that drives a K-tier fleet through
-//! nonstationary arrivals with a replanning controller in the loop.
+//! nonstationary arrivals with a replanning controller in the loop, and
+//! the million-scale [`stress`] archetype the overhauled engine (calendar
+//! queue, allocation-free loop — see [`events`], [`idle`]) is gated on.
 
 pub mod autoscale;
 pub mod events;
 pub mod fleet;
+pub mod idle;
 pub mod sim;
+pub mod stress;
 
 pub use autoscale::{simulate_autoscale, AutoscaleConfig, AutoscaleReport};
+pub use events::{EventQueue, PastScheduleError, QueueImpl};
 pub use fleet::{
-    route_request, route_trace, route_trace_tiered, simulate_fleet, simulate_fleet_tiered,
-    FleetSimResult, RoutedTrace, TieredSimResult, TieredTrace,
+    route_request, route_trace, route_trace_tiered, route_trace_tiered_model, simulate_fleet,
+    simulate_fleet_tiered, FleetSimResult, RoutedTrace, TieredSimResult, TieredTrace,
 };
-pub use sim::{simulate_pool, SimConfig, SimRequest, SimResult};
+pub use sim::{simulate_pool, simulate_pool_with, SimConfig, SimRequest, SimResult, SimScratch};
+pub use stress::{mean_occupancy_s, run_stress, StressConfig, StressReport};

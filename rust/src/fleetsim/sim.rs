@@ -10,9 +10,23 @@
 //! busy-slot-time over provisioned slot-time inside a measurement window
 //! that excludes warm-up and drain — the quantity Table 5 compares against
 //! the analytical rho.
+//!
+//! §Perf (DES engine overhaul): the event loop is allocation-free in
+//! steady state — busy slots live in a dense per-GPU slab (`Vec<Active>`
+//! with swap-remove; slots are symmetric, so only the multiset of active
+//! requests is observable), idle GPUs are tracked in an intrusive bitset
+//! ([`IdleSet`]) instead of a per-arrival scan, and all per-run state
+//! (event-queue buckets, FCFS queue, GPU slabs) can be recycled across
+//! runs through [`SimScratch`]. The scheduler defaults to the calendar
+//! queue with the binary heap retained as the equivalence oracle
+//! ([`QueueImpl`]); results are bit-identical either way, property-tested
+//! against the verbatim pre-overhaul simulator in `tests/des_engine.rs`.
+
+use std::collections::VecDeque;
 
 use crate::config::GpuProfile;
-use crate::fleetsim::events::EventQueue;
+use crate::fleetsim::events::{EventQueue, QueueImpl};
+use crate::fleetsim::idle::IdleSet;
 use crate::util::stats::Samples;
 
 /// One simulated request (already routed to this pool; lengths are
@@ -49,6 +63,10 @@ pub struct SimConfig {
     /// flight or queued are reported in [`SimResult::censored`] instead of
     /// silently vanishing from the latency percentiles.
     pub horizon_s: Option<f64>,
+    /// Event-scheduler backend: the calendar queue by default; the binary
+    /// heap is the bit-identical oracle (tests, the `des_throughput`
+    /// bench's before/after comparison).
+    pub queue_impl: QueueImpl,
 }
 
 impl SimConfig {
@@ -61,6 +79,7 @@ impl SimConfig {
             warmup_frac: 0.1,
             warmup_s: 0.0,
             horizon_s: None,
+            queue_impl: QueueImpl::Calendar,
         }
     }
 }
@@ -84,6 +103,9 @@ pub struct SimResult {
     pub censored: u64,
     /// Measurement window (s).
     pub window: (f64, f64),
+    /// Discrete events processed (arrivals + GPU iterations) — the
+    /// numerator of the `des_throughput` bench's events/s metric.
+    pub events: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -98,9 +120,12 @@ struct Active {
 }
 
 struct Gpu {
-    slots: Vec<Option<Active>>,
-    n_busy: u32,
-    /// An iteration-completion event is in flight.
+    /// Busy slots, densely packed (slot identity is immaterial — only the
+    /// multiset of in-flight requests is observable).
+    active: Vec<Active>,
+    n_slots: u32,
+    /// An iteration-completion event is in flight. Loop invariant:
+    /// `!iterating` implies `active.is_empty()` (see `fleetsim::idle`).
     iterating: bool,
     /// Integral of busy slots over time, clipped to the window.
     busy_integral: f64,
@@ -110,25 +135,39 @@ struct Gpu {
 impl Gpu {
     fn new(n_slots: u32) -> Self {
         Gpu {
-            slots: vec![None; n_slots as usize],
-            n_busy: 0,
+            active: Vec::with_capacity(n_slots as usize),
+            n_slots,
             iterating: false,
             busy_integral: 0.0,
             last_change: 0.0,
         }
     }
 
+    /// Re-initialize for a new run, keeping the slab's capacity.
+    fn reset(&mut self, n_slots: u32) {
+        self.active.clear();
+        self.active.reserve(n_slots as usize);
+        self.n_slots = n_slots;
+        self.iterating = false;
+        self.busy_integral = 0.0;
+        self.last_change = 0.0;
+    }
+
+    fn n_busy(&self) -> u32 {
+        self.active.len() as u32
+    }
+
     fn accumulate(&mut self, t: f64, window: (f64, f64)) {
         let lo = self.last_change.max(window.0);
         let hi = t.min(window.1);
         if hi > lo {
-            self.busy_integral += self.n_busy as f64 * (hi - lo);
+            self.busy_integral += self.n_busy() as f64 * (hi - lo);
         }
         self.last_change = t;
     }
 
     fn free_slots(&self) -> u32 {
-        self.slots.len() as u32 - self.n_busy
+        self.n_slots - self.n_busy()
     }
 }
 
@@ -138,8 +177,63 @@ enum Ev {
     Iteration(usize), // gpu index
 }
 
+/// Recyclable per-run state for [`simulate_pool_with`] (§Perf): event
+/// queue buckets, the FCFS queue, GPU slot slabs, and the idle bitset are
+/// all reused across runs, so repeated simulations (replications, sweeps,
+/// benches) allocate nothing in steady state.
+#[derive(Default)]
+pub struct SimScratch {
+    gpus: Vec<Gpu>,
+    queue: VecDeque<usize>,
+    events: Option<EventQueue<Ev>>,
+    idle: IdleSet,
+}
+
+impl SimScratch {
+    pub fn new() -> Self {
+        SimScratch::default()
+    }
+}
+
+/// FCFS admission: fill `g`'s free slots from the shared queue, recording
+/// each admission's queue wait (measured requests only).
+fn admit(
+    g: &mut Gpu,
+    queue: &mut VecDeque<usize>,
+    t: f64,
+    wait: &mut Samples,
+    requests: &[SimRequest],
+    warm: usize,
+    chunk: u32,
+) {
+    while g.free_slots() > 0 {
+        let Some(req) = queue.pop_front() else { break };
+        let r = &requests[req];
+        let prefill = (r.l_in as u64).div_ceil(chunk as u64) as u32;
+        g.active.push(Active {
+            req,
+            prefill_left: prefill,
+            iters_left: prefill + r.l_out,
+            first_token_done: false,
+        });
+        if req >= warm {
+            wait.push(t - r.arrival_s);
+        }
+    }
+}
+
 /// Simulate one pool over a request list (must be arrival-sorted).
 pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
+    simulate_pool_with(cfg, requests, &mut SimScratch::new())
+}
+
+/// [`simulate_pool`] with caller-owned scratch — bit-identical results,
+/// allocation-free across calls once the scratch is warm.
+pub fn simulate_pool_with(
+    cfg: &SimConfig,
+    requests: &[SimRequest],
+    scratch: &mut SimScratch,
+) -> SimResult {
     assert!(cfg.n_gpus > 0 && cfg.n_slots > 0);
     assert!(
         requests.windows(2).all(|w| w[0].arrival_s <= w[1].arrival_s),
@@ -160,9 +254,33 @@ pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     let chunk = cfg.gpu.chunk;
     let t_iter_full = cfg.gpu.t_iter_s(cfg.n_slots);
 
-    let mut gpus: Vec<Gpu> = (0..cfg.n_gpus).map(|_| Gpu::new(cfg.n_slots)).collect();
-    let mut queue: std::collections::VecDeque<usize> = Default::default();
-    let mut events: EventQueue<Ev> = EventQueue::new();
+    // Recycle the scratch: GPU slabs, FCFS queue, idle bitset, events.
+    let n_gpus = cfg.n_gpus as usize;
+    for g in scratch.gpus.iter_mut().take(n_gpus) {
+        g.reset(cfg.n_slots);
+    }
+    while scratch.gpus.len() < n_gpus {
+        scratch.gpus.push(Gpu::new(cfg.n_slots));
+    }
+    scratch.gpus.truncate(n_gpus);
+    scratch.queue.clear();
+    scratch.idle.reset(n_gpus);
+    let reuse = matches!(&scratch.events, Some(q) if q.queue_impl() == cfg.queue_impl);
+    if reuse {
+        scratch.events.as_mut().expect("checked").reset();
+    } else {
+        scratch.events = Some(EventQueue::with_impl(cfg.queue_impl));
+    }
+    let SimScratch {
+        gpus,
+        queue,
+        events,
+        idle,
+    } = scratch;
+    let events = events.as_mut().expect("just set");
+    for gi in 0..n_gpus {
+        idle.insert(gi);
+    }
     for (i, r) in requests.iter().enumerate() {
         events.schedule(r.arrival_s, Ev::Arrival(i));
     }
@@ -170,30 +288,7 @@ pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
     let mut ttft = Samples::with_capacity(n_req);
     let mut wait = Samples::with_capacity(n_req);
     let mut completed = 0u64;
-
-    let admit = |g: &mut Gpu,
-                 queue: &mut std::collections::VecDeque<usize>,
-                 t: f64,
-                 wait: &mut Samples,
-                 requests: &[SimRequest],
-                 warm: usize| {
-        while g.free_slots() > 0 {
-            let Some(req) = queue.pop_front() else { break };
-            let r = &requests[req];
-            let prefill = (r.l_in as u64).div_ceil(chunk as u64) as u32;
-            let slot = g.slots.iter().position(Option::is_none).unwrap();
-            g.slots[slot] = Some(Active {
-                req,
-                prefill_left: prefill,
-                iters_left: prefill + r.l_out,
-                first_token_done: false,
-            });
-            g.n_busy += 1;
-            if req >= warm {
-                wait.push(t - r.arrival_s);
-            }
-        }
-    };
+    let mut n_events = 0u64;
 
     while let Some((t, ev)) = events.pop() {
         if let Some(h) = cfg.horizon_s {
@@ -201,24 +296,27 @@ pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
                 break;
             }
         }
+        n_events += 1;
         match ev {
             Ev::Arrival(i) => {
                 queue.push_back(i);
-                // Wake an idle GPU (most free slots first for JSQ flavor).
-                if let Some(gi) = (0..gpus.len())
-                    .filter(|&gi| !gpus[gi].iterating)
-                    .max_by_key(|&gi| gpus[gi].free_slots())
-                {
+                // Wake an idle GPU. All idle GPUs tie at `n_slots` free
+                // slots (a non-iterating GPU is empty — loop invariant),
+                // so the original `max_by_key(free_slots)` scan reduces
+                // to the highest idle index (last maximum wins).
+                if let Some(gi) = idle.max() {
                     let g = &mut gpus[gi];
+                    debug_assert!(!g.iterating && g.active.is_empty());
                     g.accumulate(t, window);
-                    admit(g, &mut queue, t, &mut wait, requests, warm);
-                    if g.n_busy > 0 {
+                    admit(g, queue, t, &mut wait, requests, warm, chunk);
+                    if g.n_busy() > 0 {
                         let dt = if cfg.lockstep_full {
                             t_iter_full
                         } else {
-                            cfg.gpu.t_iter_s(g.n_busy)
+                            cfg.gpu.t_iter_s(g.n_busy())
                         };
                         g.iterating = true;
+                        idle.remove(gi);
                         events.schedule(t + dt, Ev::Iteration(gi));
                     }
                 }
@@ -227,39 +325,43 @@ pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
                 let g = &mut gpus[gi];
                 g.accumulate(t, window);
                 g.iterating = false;
-                // Advance every busy slot by one iteration.
-                for slot in g.slots.iter_mut() {
-                    if let Some(a) = slot {
-                        a.iters_left -= 1;
-                        if a.prefill_left > 0 {
-                            a.prefill_left -= 1;
-                        } else if !a.first_token_done {
-                            // This iteration produced the first token.
-                            a.first_token_done = true;
-                            if a.req >= warm {
-                                ttft.push(t - requests[a.req].arrival_s);
-                            }
-                        }
-                        if a.iters_left == 0 {
-                            if !a.first_token_done && a.req >= warm {
-                                // Degenerate L_out: first token == last.
-                                ttft.push(t - requests[a.req].arrival_s);
-                            }
-                            *slot = None;
-                            g.n_busy -= 1;
-                            completed += 1;
+                // Advance every busy slot by one iteration (swap-remove on
+                // completion: the slab stays dense, order is immaterial).
+                let mut s = 0;
+                while s < g.active.len() {
+                    let a = &mut g.active[s];
+                    a.iters_left -= 1;
+                    if a.prefill_left > 0 {
+                        a.prefill_left -= 1;
+                    } else if !a.first_token_done {
+                        // This iteration produced the first token.
+                        a.first_token_done = true;
+                        if a.req >= warm {
+                            ttft.push(t - requests[a.req].arrival_s);
                         }
                     }
+                    if a.iters_left == 0 {
+                        if !a.first_token_done && a.req >= warm {
+                            // Degenerate L_out: first token == last.
+                            ttft.push(t - requests[a.req].arrival_s);
+                        }
+                        g.active.swap_remove(s);
+                        completed += 1;
+                    } else {
+                        s += 1;
+                    }
                 }
-                admit(g, &mut queue, t, &mut wait, requests, warm);
-                if g.n_busy > 0 {
+                admit(g, queue, t, &mut wait, requests, warm, chunk);
+                if g.n_busy() > 0 {
                     let dt = if cfg.lockstep_full {
                         t_iter_full
                     } else {
-                        cfg.gpu.t_iter_s(g.n_busy)
+                        cfg.gpu.t_iter_s(g.n_busy())
                     };
                     g.iterating = true;
                     events.schedule(t + dt, Ev::Iteration(gi));
+                } else {
+                    idle.insert(gi);
                 }
             }
         }
@@ -275,6 +377,7 @@ pub fn simulate_pool(cfg: &SimConfig, requests: &[SimRequest]) -> SimResult {
         completed,
         censored: n_req as u64 - completed,
         window,
+        events: n_events,
     }
 }
 
@@ -288,7 +391,11 @@ pub fn simulate_pool_replications(
     traces: &[Vec<SimRequest>],
 ) -> Vec<SimResult> {
     if traces.len() <= 1 {
-        return traces.iter().map(|t| simulate_pool(cfg, t)).collect();
+        let mut scratch = SimScratch::new();
+        return traces
+            .iter()
+            .map(|t| simulate_pool_with(cfg, t, &mut scratch))
+            .collect();
     }
     std::thread::scope(|scope| {
         let handles: Vec<_> = traces
@@ -339,6 +446,7 @@ mod tests {
         let res = simulate_pool(&cfg, &reqs);
         assert_eq!(res.completed, 500);
         assert_eq!(res.censored, 0);
+        assert!(res.events >= 500, "every arrival is an event");
     }
 
     #[test]
@@ -370,6 +478,40 @@ mod tests {
         let b = simulate_pool(&cfg, &reqs);
         assert_eq!(a.utilization, b.utilization);
         assert_eq!(a.completed, b.completed);
+        assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn heap_oracle_is_bit_identical() {
+        // The calendar queue vs the BinaryHeap oracle, end to end.
+        let mut cfg = SimConfig::new(gpu(), 3, 16);
+        let reqs = poisson_requests(12.0, 2_000, 1200, 60, 21);
+        let cal = simulate_pool(&cfg, &reqs);
+        cfg.queue_impl = QueueImpl::BinaryHeap;
+        let heap = simulate_pool(&cfg, &reqs);
+        assert_eq!(cal.utilization.to_bits(), heap.utilization.to_bits());
+        assert_eq!(cal.completed, heap.completed);
+        assert_eq!(cal.events, heap.events);
+        let (mut a, mut b) = (cal.ttft, heap.ttft);
+        assert_eq!(a.p99().to_bits(), b.p99().to_bits());
+    }
+
+    #[test]
+    fn scratch_reuse_is_bit_identical() {
+        let mut scratch = SimScratch::new();
+        let cfg_a = SimConfig::new(gpu(), 2, 16);
+        let cfg_b = SimConfig::new(gpu(), 5, 32);
+        let ra = poisson_requests(8.0, 900, 700, 50, 5);
+        let rb = poisson_requests(20.0, 1_200, 1500, 80, 6);
+        // Interleave shapes so the scratch is re-shaped between runs.
+        let a1 = simulate_pool_with(&cfg_a, &ra, &mut scratch);
+        let b1 = simulate_pool_with(&cfg_b, &rb, &mut scratch);
+        let a2 = simulate_pool_with(&cfg_a, &ra, &mut scratch);
+        let fresh = simulate_pool(&cfg_b, &rb);
+        assert_eq!(a1.utilization.to_bits(), a2.utilization.to_bits());
+        assert_eq!(a1.completed, a2.completed);
+        assert_eq!(b1.utilization.to_bits(), fresh.utilization.to_bits());
+        assert_eq!(b1.completed, fresh.completed);
     }
 
     #[test]

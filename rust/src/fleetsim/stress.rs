@@ -1,0 +1,315 @@
+//! The million-scale DES stress archetype (ROADMAP "DES performance"):
+//! a synthetic multi-million-request, multi-hundred-GPU, K-tier diurnal
+//! scenario that must complete in **seconds** — the scale the calendar
+//! queue, dense slot slabs, and idle bitsets were built for. The default
+//! shape is 5M requests through a 512-GPU K = 4 fleet under a diurnal
+//! wave; CI runs it in release through `cargo bench --bench
+//! des_throughput` and gates the wall clock (< 30 s), and `fleetopt
+//! simulate --stress` runs it from the CLI.
+//!
+//! Sizing is self-calibrating and deterministic: a small constant-rate
+//! pilot trace measures each tier's traffic share and mean slot
+//! occupancy, GPUs are split so tiers load evenly, and the base rate is
+//! chosen so the diurnal *peak* keeps every tier at `target_rho` — the
+//! run saturates the event loop, not the queues (an overloaded tier
+//! would measure queue growth, not engine throughput).
+
+use std::time::Instant;
+
+use crate::config::GpuProfile;
+use crate::fleetsim::events::QueueImpl;
+use crate::fleetsim::fleet::{route_trace_tiered, route_trace_tiered_model};
+use crate::fleetsim::sim::{simulate_pool, SimConfig, SimRequest, SimResult};
+use crate::workload::arrivals::RateModel;
+use crate::workload::traces::{self, Workload};
+
+/// Stress-scenario shape. [`Default`] is the CI-gated 5M / 512-GPU / K=4
+/// configuration.
+#[derive(Clone, Debug)]
+pub struct StressConfig {
+    pub n_requests: usize,
+    /// Total GPUs, split across tiers proportionally to offered load.
+    pub n_gpus_total: u64,
+    /// K ascending context windows (K-1 boundaries + the long window).
+    pub windows: Vec<u32>,
+    /// Shared per-boundary compression bandwidth.
+    pub gamma: f64,
+    /// Diurnal relative amplitude in [0, 1).
+    pub diurnal_amp: f64,
+    /// Full diurnal cycles over the run horizon.
+    pub periods: f64,
+    /// Per-tier utilization target at the diurnal peak.
+    pub target_rho: f64,
+    pub seed: u64,
+    /// Scheduler backend (the heap oracle makes a before/after bench).
+    pub queue_impl: QueueImpl,
+}
+
+impl Default for StressConfig {
+    fn default() -> Self {
+        StressConfig {
+            n_requests: 5_000_000,
+            n_gpus_total: 512,
+            windows: vec![2048, 8192, 32_768, 65_536],
+            gamma: 1.5,
+            diurnal_amp: 0.4,
+            periods: 2.0,
+            target_rho: 0.7,
+            seed: 0x57E55,
+            queue_impl: QueueImpl::Calendar,
+        }
+    }
+}
+
+/// What the stress run measured.
+#[derive(Debug)]
+pub struct StressReport {
+    pub n_requests: u64,
+    pub completed: u64,
+    pub censored: u64,
+    /// Total discrete events processed across all tier simulations.
+    pub events: u64,
+    /// End-to-end wall time (pilot + trace generation + DES), seconds.
+    pub wall_s: f64,
+    /// Trace-generation and DES sub-timings, seconds.
+    pub gen_s: f64,
+    pub sim_s: f64,
+    pub lambda_base: f64,
+    pub horizon_s: f64,
+    /// GPUs per tier (sums to the configured total).
+    pub gpus: Vec<u64>,
+    pub utilization: Vec<f64>,
+    pub ttft_p99_s: Vec<f64>,
+    pub wait_p99_s: Vec<f64>,
+    pub n_compressed: u64,
+}
+
+impl StressReport {
+    /// Events per wall-second through the DES phase.
+    pub fn events_per_s(&self) -> f64 {
+        self.events as f64 / self.sim_s.max(1e-9)
+    }
+}
+
+/// Mean slot-seconds one request of `trace` occupies at `n_slots` (Eq. 4
+/// iterations x the Eq. 3 lockstep latency) — the sizing primitive shared
+/// with the `des_throughput` bench and the DES engine tests.
+pub fn mean_occupancy_s(trace: &[SimRequest], g: &GpuProfile, n_slots: u32) -> f64 {
+    if trace.is_empty() {
+        return 0.0;
+    }
+    let t_iter = g.t_iter_s(n_slots);
+    let total: f64 = trace
+        .iter()
+        .map(|r| ((r.l_in as u64).div_ceil(g.chunk as u64) + r.l_out as u64) as f64 * t_iter)
+        .sum();
+    total / trace.len() as f64
+}
+
+/// Run the stress scenario on the azure workload (the fat-tailed trace
+/// with full compressibility — every boundary band sees C&R traffic).
+pub fn run_stress(cfg: &StressConfig) -> StressReport {
+    assert!(cfg.windows.len() >= 2, "need K >= 2 windows");
+    assert!(
+        cfg.windows.windows(2).all(|w| w[1] > w[0]),
+        "windows must ascend"
+    );
+    assert!(cfg.n_requests > 0 && cfg.n_gpus_total as usize >= cfg.windows.len());
+    assert!((0.0..1.0).contains(&cfg.diurnal_amp));
+    assert!(cfg.target_rho > 0.0 && cfg.target_rho < 1.0);
+    let t_start = Instant::now();
+
+    let w: Workload = traces::azure();
+    let mut g = GpuProfile::a100_llama70b();
+    let k = cfg.windows.len();
+    g.c_max_long = cfg.windows[k - 1];
+    let boundaries: Vec<u32> = cfg.windows[..k - 1].to_vec();
+    let gammas = vec![cfg.gamma; k - 1];
+    let n_slots: Vec<u32> = cfg.windows.iter().map(|&win| g.n_max(win)).collect();
+
+    // Pilot: constant-rate sample to estimate per-tier share and mean
+    // occupancy (arrival times are irrelevant to both).
+    let n_pilot = 20_000.min(cfg.n_requests);
+    let pilot = route_trace_tiered(&w, 1000.0, n_pilot, &boundaries, &gammas, cfg.seed ^ 0x91);
+    let share: Vec<f64> = pilot
+        .tiers
+        .iter()
+        .map(|t| t.len() as f64 / n_pilot as f64)
+        .collect();
+    let occ: Vec<f64> = pilot
+        .tiers
+        .iter()
+        .zip(&n_slots)
+        .map(|(t, &s)| mean_occupancy_s(t, &g, s))
+        .collect();
+
+    // GPU split proportional to offered GPU-load (equalizes tier rho),
+    // largest-remainder rounding, one-GPU floor per tier.
+    let mut weights = vec![0.0f64; k];
+    for i in 0..k {
+        weights[i] = share[i] * occ[i] / n_slots[i] as f64;
+    }
+    let wsum: f64 = weights.iter().sum();
+    assert!(wsum > 0.0, "pilot produced no load");
+    let mut gpus: Vec<u64> = weights
+        .iter()
+        .map(|&wt| ((cfg.n_gpus_total as f64 * wt / wsum).floor() as u64).max(1))
+        .collect();
+    let mut assigned: u64 = gpus.iter().sum();
+    // Hand remaining GPUs to tiers by descending fractional remainder
+    // (deterministic: stable sort, index tiebreak).
+    let mut order: Vec<usize> = (0..k).collect();
+    order.sort_by(|&a, &b| {
+        let fa = cfg.n_gpus_total as f64 * weights[a] / wsum;
+        let fb = cfg.n_gpus_total as f64 * weights[b] / wsum;
+        (fb - fb.floor()).total_cmp(&(fa - fa.floor())).then(a.cmp(&b))
+    });
+    let mut oi = 0;
+    while assigned < cfg.n_gpus_total {
+        gpus[order[oi % k]] += 1;
+        assigned += 1;
+        oi += 1;
+    }
+    while assigned > cfg.n_gpus_total {
+        // Floors pushed us over: shave the largest tier.
+        let imax = (0..k).max_by_key(|&i| gpus[i]).expect("k >= 2");
+        assert!(gpus[imax] > 1, "cannot satisfy per-tier GPU floors");
+        gpus[imax] -= 1;
+        assigned -= 1;
+    }
+
+    // Base rate: the diurnal peak holds every tier at target_rho.
+    let mut lambda_peak = f64::INFINITY;
+    for i in 0..k {
+        if share[i] > 0.0 && occ[i] > 0.0 {
+            let cap = gpus[i] as f64 * n_slots[i] as f64 * cfg.target_rho / (share[i] * occ[i]);
+            lambda_peak = lambda_peak.min(cap);
+        }
+    }
+    assert!(lambda_peak.is_finite() && lambda_peak > 0.0);
+    let lambda_base = lambda_peak / (1.0 + cfg.diurnal_amp);
+    let horizon_s = cfg.n_requests as f64 / lambda_base;
+    let model = RateModel::Diurnal {
+        base: lambda_base,
+        amp: cfg.diurnal_amp,
+        period_s: horizon_s / cfg.periods,
+        phase: 0.0,
+    };
+
+    // Full trace + one DES per tier on scoped threads.
+    let t_gen = Instant::now();
+    let routed =
+        route_trace_tiered_model(&w, &model, cfg.n_requests, &boundaries, &gammas, cfg.seed);
+    let gen_s = t_gen.elapsed().as_secs_f64();
+    let t_sim = Instant::now();
+    let results: Vec<Option<SimResult>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = routed
+            .tiers
+            .iter()
+            .enumerate()
+            .map(|(ti, trace)| {
+                let gref = &g;
+                let n_gpus = gpus[ti];
+                let slots = n_slots[ti];
+                let queue_impl = cfg.queue_impl;
+                (!trace.is_empty()).then(|| {
+                    scope.spawn(move || {
+                        let mut sc = SimConfig::new(gref.clone(), n_gpus, slots);
+                        sc.queue_impl = queue_impl;
+                        simulate_pool(&sc, trace)
+                    })
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.map(|h| h.join().expect("stress tier DES panicked")))
+            .collect()
+    });
+    let sim_s = t_sim.elapsed().as_secs_f64();
+
+    let mut completed = 0u64;
+    let mut censored = 0u64;
+    let mut events = 0u64;
+    let mut utilization = Vec::with_capacity(k);
+    let mut ttft_p99_s = Vec::with_capacity(k);
+    let mut wait_p99_s = Vec::with_capacity(k);
+    for res in results {
+        match res {
+            Some(mut r) => {
+                completed += r.completed;
+                censored += r.censored;
+                events += r.events;
+                utilization.push(r.utilization);
+                ttft_p99_s.push(if r.ttft.is_empty() { 0.0 } else { r.ttft.p99() });
+                wait_p99_s.push(if r.wait.is_empty() { 0.0 } else { r.wait.p99() });
+            }
+            None => {
+                utilization.push(0.0);
+                ttft_p99_s.push(0.0);
+                wait_p99_s.push(0.0);
+            }
+        }
+    }
+    StressReport {
+        n_requests: cfg.n_requests as u64,
+        completed,
+        censored,
+        events,
+        wall_s: t_start.elapsed().as_secs_f64(),
+        gen_s,
+        sim_s,
+        lambda_base,
+        horizon_s,
+        gpus,
+        utilization,
+        ttft_p99_s,
+        wait_p99_s,
+        n_compressed: routed.n_compressed(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> StressConfig {
+        StressConfig {
+            n_requests: 15_000,
+            n_gpus_total: 24,
+            windows: vec![2048, 8192, 65_536],
+            periods: 1.0,
+            ..StressConfig::default()
+        }
+    }
+
+    #[test]
+    fn stress_completes_every_request() {
+        let rep = run_stress(&tiny());
+        assert_eq!(rep.completed, 15_000);
+        assert_eq!(rep.censored, 0);
+        assert_eq!(rep.gpus.iter().sum::<u64>(), 24);
+        assert!(rep.events > 15_000, "iterations must add events");
+        assert!(rep.lambda_base > 0.0 && rep.horizon_s > 0.0);
+        // Sized for target_rho at peak: no tier should run saturated.
+        for (ti, &u) in rep.utilization.iter().enumerate() {
+            assert!(u < 0.95, "tier {ti} saturated: rho {u}");
+        }
+    }
+
+    #[test]
+    fn stress_heap_oracle_matches_calendar() {
+        let cal = run_stress(&tiny());
+        let mut hcfg = tiny();
+        hcfg.queue_impl = QueueImpl::BinaryHeap;
+        let heap = run_stress(&hcfg);
+        assert_eq!(cal.completed, heap.completed);
+        assert_eq!(cal.events, heap.events);
+        for (a, b) in cal.utilization.iter().zip(&heap.utilization) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in cal.ttft_p99_s.iter().zip(&heap.ttft_p99_s) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

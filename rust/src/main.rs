@@ -25,7 +25,10 @@ use fleetopt::compress::extractive::compress;
 use fleetopt::compress::fidelity;
 use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
 use fleetopt::experiments;
-use fleetopt::fleetsim::{simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig};
+use fleetopt::fleetsim::{
+    run_stress, simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig, QueueImpl,
+    StressConfig,
+};
 use fleetopt::metrics::EpochMetrics;
 use fleetopt::planner::{
     candidate_boundaries, plan_fleet, plan_homogeneous, plan_spec_sweep_gamma, sweep_full,
@@ -46,6 +49,8 @@ USAGE:
   fleetopt sweep     --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
   fleetopt tables    [--only 1..9] [--fast]
   fleetopt simulate  --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
+  fleetopt simulate  --stress [--requests N] [--gpus N] [--queue calendar|heap] [--seed N]
+                     (fixed synthetic 5M-request/512-GPU/K=4 diurnal azure scenario)
   fleetopt autoscale --workload <name> [--config F.json] [--lambda N] [--requests N]
                      [--arrivals poisson|diurnal:amp=A,period=P|burst:high=H,low=L|schedule:F.json]
                      [--epoch S] [--window S] [--provision S] [--no-replan]
@@ -453,7 +458,86 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
     Ok(())
 }
 
+/// `fleetopt simulate --stress`: the 5M-request / 512-GPU / K=4 diurnal
+/// stress archetype (ROADMAP "DES performance"). Must complete in seconds
+/// in release — CI gates the same scenario through the des_throughput
+/// bench.
+fn cmd_stress(flags: &HashMap<String, String>) -> Result<()> {
+    // The stress archetype is a fixed synthetic azure scenario; refuse
+    // flags it would silently ignore rather than mislead.
+    for key in ["workload", "config", "lambda", "tiers", "gamma", "b-short"] {
+        if flags.contains_key(key) {
+            bail!(
+                "--stress runs the fixed synthetic azure scenario; --{key} is not \
+                 supported (tunables: --requests, --gpus, --queue, --seed)"
+            );
+        }
+    }
+    let defaults = StressConfig::default();
+    // Seeds are raw u64 (0 is valid; values above 2^53 must not round-trip
+    // through f64), so bypass the numeric-flag helpers.
+    let seed = match flags.get("seed") {
+        None => defaults.seed,
+        Some(v) => v.parse::<u64>().with_context(|| format!("--seed {v}"))?,
+    };
+    let cfg = StressConfig {
+        n_requests: flag_count(flags, "requests", defaults.n_requests as u64)? as usize,
+        n_gpus_total: flag_count(flags, "gpus", defaults.n_gpus_total)?,
+        seed,
+        queue_impl: match flags.get("queue").map(String::as_str) {
+            None | Some("calendar") => QueueImpl::Calendar,
+            Some("heap") => QueueImpl::BinaryHeap,
+            Some(other) => bail!("--queue must be `calendar` or `heap`, got `{other}`"),
+        },
+        ..defaults
+    };
+    println!(
+        "stress: {} requests, {} GPUs, K={} windows {:?}, diurnal amp {} ({} cycles), {:?}",
+        cfg.n_requests,
+        cfg.n_gpus_total,
+        cfg.windows.len(),
+        cfg.windows,
+        cfg.diurnal_amp,
+        cfg.periods,
+        cfg.queue_impl,
+    );
+    let rep = run_stress(&cfg);
+    println!(
+        "sized: lambda_base={:.1} req/s over {:.0} s horizon, gpus/tier {:?}",
+        rep.lambda_base, rep.horizon_s, rep.gpus
+    );
+    for ti in 0..rep.gpus.len() {
+        println!(
+            "tier {ti}: n={:4} rho={:.3} ttft99={:.0}ms wait99={:.0}ms",
+            rep.gpus[ti],
+            rep.utilization[ti],
+            rep.ttft_p99_s[ti] * 1e3,
+            rep.wait_p99_s[ti] * 1e3,
+        );
+    }
+    println!(
+        "completed {}/{} ({} censored, {} compressed), {} events in {:.2} s \
+         (gen {:.2} s + sim {:.2} s) = {:.2} M events/s",
+        rep.completed,
+        rep.n_requests,
+        rep.censored,
+        rep.n_compressed,
+        rep.events,
+        rep.wall_s,
+        rep.gen_s,
+        rep.sim_s,
+        rep.events_per_s() / 1e6,
+    );
+    if rep.completed != rep.n_requests {
+        bail!("{} request(s) never completed", rep.n_requests - rep.completed);
+    }
+    Ok(())
+}
+
 fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
+    if flags.contains_key("stress") {
+        return cmd_stress(flags);
+    }
     let w = workload_arg(flags)?;
     let lambda = flag_pos_f64(flags, "lambda", 1000.0)?;
     let n = flag_count(flags, "requests", 30_000)? as usize;

@@ -2,6 +2,83 @@
 //! controller record every controller period, and what the CI smoke run
 //! uploads as a JSON artifact.
 
+use crate::util::stats::{percentile_sorted, P2Quantile};
+
+/// Observations kept verbatim so ordinary epochs read an *exact* P99.
+/// The P² markers need hundreds of samples to adapt toward the 0.99 rank,
+/// and epoch SLO flags (and the CI smoke's violation budget, tuned
+/// against the exact metric) must not move on estimator error at normal
+/// traffic — a controller epoch at a few hundred req/s holds a few
+/// thousand samples. Only epochs beyond this head (the million-scale
+/// regimes the DES overhaul targets) use the streaming estimate. 16 KB
+/// per digest, allocated once and reused across epochs.
+const EXACT_HEAD: usize = 2048;
+
+/// Streaming per-epoch latency digest: an exact head buffer plus a P²
+/// P99 estimator — what the autoscale DES keeps per tier instead of an
+/// unbounded `Samples` buffer (§Perf: bounded memory per tier,
+/// allocation-free across epoch resets). Epochs with <= [`EXACT_HEAD`]
+/// observations report the exact sorted percentile (bit-identical to the
+/// former `Samples` path); larger epochs report the P² estimate, whose
+/// error against the exact sort is bounds-tested in
+/// `tests/des_engine.rs`. Final-table percentiles elsewhere stay exact.
+#[derive(Clone, Debug)]
+pub struct EpochDigest {
+    p99: P2Quantile,
+    head: Vec<f64>,
+}
+
+impl Default for EpochDigest {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EpochDigest {
+    pub fn new() -> Self {
+        EpochDigest {
+            p99: P2Quantile::new(0.99),
+            head: Vec::with_capacity(EXACT_HEAD),
+        }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.head.len() < EXACT_HEAD {
+            self.head.push(x);
+        }
+        self.p99.push(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.p99.count()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.p99.is_empty()
+    }
+
+    /// P99 over this epoch's observations: exact while the epoch holds at
+    /// most [`EXACT_HEAD`] samples, the streaming P² estimate beyond
+    /// (0.0 when empty). Sorts the head in place — no allocation.
+    pub fn p99(&mut self) -> f64 {
+        let n = self.p99.count() as usize;
+        if n == 0 {
+            return 0.0;
+        }
+        if n <= EXACT_HEAD {
+            self.head.sort_by(f64::total_cmp);
+            return percentile_sorted(&self.head, 0.99);
+        }
+        self.p99.value()
+    }
+
+    /// Clear for the next epoch, reusing markers and head capacity.
+    pub fn reset(&mut self) {
+        self.p99.reset();
+        self.head.clear();
+    }
+}
+
 /// One tier's measurements inside one controller epoch.
 #[derive(Clone, Debug)]
 pub struct EpochTierMetrics {
@@ -146,6 +223,42 @@ impl EpochMetrics {
 mod tests {
     use super::*;
     use crate::util::json::Json;
+    use crate::util::stats::Samples;
+
+    #[test]
+    fn digest_head_epochs_are_exact() {
+        // Up to the head size the digest must match `Samples` bitwise —
+        // epoch SLO flags at ordinary traffic cannot ride on P² error.
+        let mut d = EpochDigest::new();
+        let mut s = Samples::new();
+        assert_eq!(d.p99(), 0.0);
+        let mut x = 0.37;
+        for i in 0..EXACT_HEAD {
+            x = (x * 997.0 + 0.123).fract() * 3.0;
+            d.push(x);
+            s.push(x);
+            if i % 61 == 0 || i + 1 == EXACT_HEAD {
+                assert_eq!(
+                    d.p99().to_bits(),
+                    s.clone().p99().to_bits(),
+                    "diverged at n = {}",
+                    i + 1
+                );
+            }
+        }
+        assert_eq!(d.count(), EXACT_HEAD as u64);
+        // Past the head the digest switches to the P² estimate: still a
+        // sane value inside the observed range.
+        for _ in 0..20_000 {
+            x = (x * 997.0 + 0.123).fract() * 3.0;
+            d.push(x);
+        }
+        let est = d.p99();
+        assert!(est > 0.0 && est <= 3.0, "p2 estimate {est}");
+        d.reset();
+        assert!(d.is_empty());
+        assert_eq!(d.p99(), 0.0);
+    }
 
     fn sample() -> EpochMetrics {
         EpochMetrics {

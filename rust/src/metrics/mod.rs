@@ -4,7 +4,7 @@
 
 pub mod epoch;
 
-pub use epoch::{EpochMetrics, EpochTierMetrics};
+pub use epoch::{EpochDigest, EpochMetrics, EpochTierMetrics};
 
 use crate::coordinator::replica::FinishedRequest;
 use crate::util::stats::Samples;

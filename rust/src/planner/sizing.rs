@@ -7,6 +7,16 @@
 //! GPU count above the stability point (verified by test), so binary search
 //! is valid.
 //!
+//! §Perf: each feasibility probe evaluates Erlang-C at `(c, rho)` with
+//! c up to tens of thousands of slots — thousands of recurrence terms per
+//! probe — and the sweep layer re-runs identical inversions whenever two
+//! boundary combinations share a tier (same lambda, same calibration).
+//! Those evaluations now go through the thread-local memo in
+//! `queueing::erlang::erlang_c_cached` (via `kimura::w99`): bit-identical
+//! results, each distinct cell paid once per thread. The first-fill/warm
+//! cell wall times are tracked in `BENCH_planner.json`
+//! (`sizing_first_fill_ms` / `sizing_warm_ms`).
+//!
 //! ## SLO-budget note (paper inconsistency)
 //!
 //! Taken literally, Eq. 8's budget `T_slo - T_prefill^(99) - t_iter` is
@@ -182,6 +192,22 @@ mod tests {
         // Paper-consistent mode sizes by rho_max instead.
         let relaxed = min_gpus(500.0, &s, 0.5, 0.85, false).unwrap();
         assert!(relaxed > 0);
+    }
+
+    #[test]
+    fn inversion_is_stable_under_a_warm_erlang_memo() {
+        // The memoized Erlang-C path must leave the inversion bit-stable:
+        // repeating the same search (memo now warm) and interleaving
+        // foreign cells cannot change the result.
+        let s = svc(16);
+        let cold: Vec<u64> = (1..=6)
+            .map(|i| min_gpus(150.0 * i as f64, &s, 0.5, 0.85, false).unwrap())
+            .collect();
+        let _ = min_gpus(777.0, &s, 0.5, 0.85, false).unwrap();
+        let warm: Vec<u64> = (1..=6)
+            .map(|i| min_gpus(150.0 * i as f64, &s, 0.5, 0.85, false).unwrap())
+            .collect();
+        assert_eq!(cold, warm);
     }
 
     #[test]

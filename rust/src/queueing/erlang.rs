@@ -5,6 +5,20 @@
 //! c beyond ~170; the paper's Appendix-A reciprocal-sum form is evaluated
 //! with a downward term recurrence so it is stable to millions of slots
 //! and costs only as many iterations as there are non-negligible terms.
+//!
+//! §Perf: [`erlang_c_cached`] memoizes the recurrence per `(c, rho)`.
+//! The sizing inversion (`planner::sizing::min_gpus`) re-evaluates the
+//! tail at the same cells across its bisection steps and across sweep
+//! cells that share a tier (every K-subset containing boundary `B`
+//! re-sizes `B`'s tier at the identical lambda and calibration), and at
+//! c ~ 10^4 slots one evaluation walks thousands of recurrence terms.
+//! The memo is thread-local — the scoped sweep workers never contend —
+//! and returns the identical f64, so every planner output is
+//! bit-identical with or without it.
+
+use std::cell::RefCell;
+
+use crate::util::hash::FxHashMap;
 
 /// Natural log of the Gamma function (Lanczos approximation, g=7, n=9).
 /// Used by tests as an independent cross-check of the recurrence.
@@ -62,6 +76,62 @@ pub fn erlang_c(c: u64, rho: f64) -> f64 {
         k -= 1.0;
     }
     1.0 / (1.0 + (1.0 - rho) * sum)
+}
+
+#[derive(Default)]
+struct Memo {
+    map: FxHashMap<(u64, u64), f64>,
+    hits: u64,
+    misses: u64,
+}
+
+thread_local! {
+    static ERLANG_MEMO: RefCell<Memo> = RefCell::new(Memo::default());
+}
+
+/// Bound on the memo table: cleared wholesale past this. The planner's
+/// whole sweep grid is a few thousand cells, so 64K entries (~2 MB) cover
+/// every reuse pattern with room to spare while keeping the worst case
+/// small for long-lived threads whose rho is continuous (the live
+/// replanning loop re-estimates lambda every epoch, so its keys rarely
+/// repeat — the cap is what bounds that path's memory, not its hit rate).
+const MEMO_CAP: usize = 1 << 16;
+
+/// Memoized [`erlang_c`] — identical output, one recurrence evaluation
+/// per distinct `(c, rho)` per thread (see module docs). The degenerate
+/// regimes short-circuit without touching the table.
+pub fn erlang_c_cached(c: u64, rho: f64) -> f64 {
+    if rho >= 1.0 {
+        return 1.0;
+    }
+    if rho <= 0.0 {
+        return 0.0;
+    }
+    ERLANG_MEMO.with(|m| {
+        let mut m = m.borrow_mut();
+        let memo = &mut *m;
+        let key = (c, rho.to_bits());
+        if let Some(&v) = memo.map.get(&key) {
+            memo.hits += 1;
+            return v;
+        }
+        memo.misses += 1;
+        let v = erlang_c(c, rho);
+        // Evict only on the insert path, so a hit never wipes the table.
+        if memo.map.len() >= MEMO_CAP {
+            memo.map.clear();
+        }
+        memo.map.insert(key, v);
+        v
+    })
+}
+
+/// This thread's memo statistics `(hits, misses)` — bench diagnostics.
+pub fn erlang_cache_stats() -> (u64, u64) {
+    ERLANG_MEMO.with(|m| {
+        let m = m.borrow();
+        (m.hits, m.misses)
+    })
 }
 
 /// Erlang-C via the direct log-space sum (independent implementation used
@@ -201,5 +271,22 @@ mod tests {
     fn stable_at_extreme_scale() {
         let v = erlang_c(1_000_000, 0.999);
         assert!(v.is_finite() && (0.0..=1.0).contains(&v));
+    }
+
+    #[test]
+    fn cached_is_bit_identical_and_hits() {
+        let (h0, _) = erlang_cache_stats();
+        for &(c, rho) in &[(16u64, 0.85), (1000, 0.9), (32_592, 0.85)] {
+            let direct = erlang_c(c, rho);
+            let first = erlang_c_cached(c, rho);
+            let second = erlang_c_cached(c, rho);
+            assert_eq!(direct.to_bits(), first.to_bits(), "c={c} rho={rho}");
+            assert_eq!(first.to_bits(), second.to_bits());
+        }
+        let (h1, _) = erlang_cache_stats();
+        assert!(h1 >= h0 + 3, "repeat lookups must hit the memo");
+        // Degenerate regimes bypass the table entirely.
+        assert_eq!(erlang_c_cached(10, 1.5), 1.0);
+        assert_eq!(erlang_c_cached(10, 0.0), 0.0);
     }
 }

@@ -8,11 +8,13 @@
 //! less than a 1% chance of waiting at all, so the P99 wait is 0 — the
 //! "many-server regime" the paper's fleets operate in (§7.4).
 
-use crate::queueing::erlang::erlang_c;
+use crate::queueing::erlang::erlang_c_cached;
 
 /// P-quantile of the queue waiting time for an M/G/c with `c` servers,
 /// per-server rate `mu`, arrival rate `lambda`, and service-time SCV `cs2`.
-/// `p` is the tail mass (0.01 for P99).
+/// `p` is the tail mass (0.01 for P99). Erlang-C goes through the
+/// thread-local memo (§Perf: the sizing inversion revisits cells) —
+/// bit-identical to the direct recurrence.
 pub fn w_quantile(c: u64, mu: f64, lambda: f64, cs2: f64, p: f64) -> f64 {
     assert!(mu > 0.0 && lambda >= 0.0 && p > 0.0 && p < 1.0);
     let capacity = c as f64 * mu;
@@ -23,7 +25,7 @@ pub fn w_quantile(c: u64, mu: f64, lambda: f64, cs2: f64, p: f64) -> f64 {
         return 0.0;
     }
     let rho = lambda / capacity;
-    let c_wait = erlang_c(c, rho);
+    let c_wait = erlang_c_cached(c, rho);
     if c_wait <= p {
         return 0.0;
     }
@@ -42,7 +44,7 @@ pub fn w_mean(c: u64, mu: f64, lambda: f64, cs2: f64) -> f64 {
     if lambda >= capacity {
         return f64::INFINITY;
     }
-    erlang_c(c, lambda / capacity) * (1.0 + cs2) / (2.0 * (capacity - lambda))
+    erlang_c_cached(c, lambda / capacity) * (1.0 + cs2) / (2.0 * (capacity - lambda))
 }
 
 #[cfg(test)]

@@ -120,32 +120,32 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 }
 
 /// Sample accumulator with exact percentiles (stores all samples).
-/// The studies here are <= a few hundred thousand samples, so exactness
-/// beats a sketch; `sorted` caches the sort between reads.
+/// The studies here run up to millions of samples, so percentile reads use
+/// `select_nth_unstable` — O(n) exact order statistics, bit-identical to a
+/// full sort (§Perf: the DES's end-of-run P50/P99 no longer pay
+/// O(n log n) sorts). Sample order is unspecified after a percentile read.
 #[derive(Clone, Debug, Default)]
 pub struct Samples {
     data: Vec<f64>,
-    sorted: bool,
 }
 
 impl Samples {
     pub fn new() -> Self {
-        Samples {
-            data: Vec::new(),
-            sorted: true,
-        }
+        Samples { data: Vec::new() }
     }
 
     pub fn with_capacity(n: usize) -> Self {
         Samples {
             data: Vec::with_capacity(n),
-            sorted: true,
         }
     }
 
     pub fn push(&mut self, x: f64) {
+        // The old sort-based reads panicked loudly on NaN (partial_cmp
+        // unwrap); the selection path orders NaN last instead, so keep
+        // the loud failure at the write site in debug builds.
+        debug_assert!(!x.is_nan(), "NaN sample pushed into Samples");
         self.data.push(x);
-        self.sorted = false;
     }
 
     pub fn len(&self) -> usize {
@@ -164,17 +164,27 @@ impl Samples {
         }
     }
 
-    fn ensure_sorted(&mut self) {
-        if !self.sorted {
-            self.data.sort_by(|a, b| a.partial_cmp(b).unwrap());
-            self.sorted = true;
-        }
-    }
-
+    /// Exact q-quantile with linear interpolation — the same order
+    /// statistics (hence bit-identical values) as sorting and indexing,
+    /// via in-place selection. Reorders the underlying samples.
     pub fn percentile(&mut self, q: f64) -> f64 {
         assert!(!self.data.is_empty());
-        self.ensure_sorted();
-        percentile_sorted(&self.data, q)
+        assert!((0.0..=1.0).contains(&q));
+        let n = self.data.len();
+        if n == 1 {
+            return self.data[0];
+        }
+        let rank = q * (n - 1) as f64;
+        let lo = rank.floor() as usize;
+        let hi = rank.ceil() as usize;
+        let (_, &mut x_lo, rest) = self.data.select_nth_unstable_by(lo, f64::total_cmp);
+        if lo == hi {
+            return x_lo;
+        }
+        // hi == lo + 1: the next order statistic is the suffix minimum.
+        let x_hi = rest.iter().copied().fold(f64::INFINITY, f64::min);
+        let frac = rank - lo as f64;
+        x_lo * (1.0 - frac) + x_hi * frac
     }
 
     pub fn p50(&mut self) -> f64 {
@@ -190,12 +200,143 @@ impl Samples {
     }
 
     pub fn max(&mut self) -> f64 {
-        self.ensure_sorted();
-        *self.data.last().unwrap()
+        assert!(!self.data.is_empty());
+        self.data.iter().copied().fold(f64::NEG_INFINITY, f64::max)
     }
 
+    /// The raw samples, in unspecified order (percentile reads permute).
     pub fn values(&self) -> &[f64] {
         &self.data
+    }
+}
+
+/// Streaming single-quantile estimator — the P² algorithm (Jain &
+/// Chlamtac 1985). Five markers track {min, q/2, q, (1+q)/2, max} with
+/// parabolic height adjustment: O(1) memory and O(1) per observation,
+/// where an exact quantile stores every sample. Used for the per-epoch
+/// P99s in the autoscale DES (`metrics::EpochDigest`); the error against
+/// exact sorting is bounds-tested on all three traces in
+/// `tests/des_engine.rs`. Final-table percentiles stay exact (`Samples`).
+#[derive(Clone, Debug)]
+pub struct P2Quantile {
+    q: f64,
+    /// Marker heights (quantile estimates); the first `n` entries hold the
+    /// raw observations until five have arrived.
+    heights: [f64; 5],
+    /// Marker positions, 1-based ranks.
+    pos: [f64; 5],
+    /// Desired marker positions.
+    desired: [f64; 5],
+    /// Per-observation desired-position increments.
+    inc: [f64; 5],
+    n: u64,
+}
+
+impl P2Quantile {
+    pub fn new(q: f64) -> Self {
+        assert!(q > 0.0 && q < 1.0, "quantile must be interior, got {q}");
+        P2Quantile {
+            q,
+            heights: [0.0; 5],
+            pos: [1.0, 2.0, 3.0, 4.0, 5.0],
+            desired: [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0],
+            inc: [0.0, q / 2.0, q, (1.0 + q) / 2.0, 1.0],
+            n: 0,
+        }
+    }
+
+    /// Reset for reuse (epoch boundaries) — allocation-free.
+    pub fn reset(&mut self) {
+        let q = self.q;
+        self.pos = [1.0, 2.0, 3.0, 4.0, 5.0];
+        self.desired = [1.0, 1.0 + 2.0 * q, 1.0 + 4.0 * q, 3.0 + 2.0 * q, 5.0];
+        self.n = 0;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    pub fn push(&mut self, x: f64) {
+        if self.n < 5 {
+            self.heights[self.n as usize] = x;
+            self.n += 1;
+            if self.n == 5 {
+                self.heights.sort_by(f64::total_cmp);
+            }
+            return;
+        }
+        self.n += 1;
+        let h = &mut self.heights;
+        let k = if x < h[0] {
+            h[0] = x;
+            0
+        } else if x < h[1] {
+            0
+        } else if x < h[2] {
+            1
+        } else if x < h[3] {
+            2
+        } else if x <= h[4] {
+            3
+        } else {
+            h[4] = x;
+            3
+        };
+        for p in self.pos.iter_mut().skip(k + 1) {
+            *p += 1.0;
+        }
+        for (d, i) in self.desired.iter_mut().zip(&self.inc) {
+            *d += i;
+        }
+        for i in 1..4 {
+            let d = self.desired[i] - self.pos[i];
+            let room_up = self.pos[i + 1] - self.pos[i] > 1.0;
+            let room_down = self.pos[i - 1] - self.pos[i] < -1.0;
+            if (d >= 1.0 && room_up) || (d <= -1.0 && room_down) {
+                let d = d.signum();
+                let hp = self.parabolic(i, d);
+                self.heights[i] = if self.heights[i - 1] < hp && hp < self.heights[i + 1] {
+                    hp
+                } else {
+                    self.linear(i, d)
+                };
+                self.pos[i] += d;
+            }
+        }
+    }
+
+    fn parabolic(&self, i: usize, d: f64) -> f64 {
+        let (hm, hi, hp) = (self.heights[i - 1], self.heights[i], self.heights[i + 1]);
+        let (nm, ni, np) = (self.pos[i - 1], self.pos[i], self.pos[i + 1]);
+        hi + d / (np - nm)
+            * ((ni - nm + d) * (hp - hi) / (np - ni) + (np - ni - d) * (hi - hm) / (ni - nm))
+    }
+
+    fn linear(&self, i: usize, d: f64) -> f64 {
+        let j = if d > 0.0 { i + 1 } else { i - 1 };
+        self.heights[i] + d * (self.heights[j] - self.heights[i]) / (self.pos[j] - self.pos[i])
+    }
+
+    /// Current quantile estimate (exact while n <= 5 — at n == 5 the
+    /// markers are still the raw sorted observations; 0.0 when empty).
+    pub fn value(&self) -> f64 {
+        let m = self.n as usize;
+        match m {
+            0 => 0.0,
+            1..=5 => {
+                let mut v = [0.0; 5];
+                v[..m].copy_from_slice(&self.heights[..m]);
+                let v = &mut v[..m];
+                v.sort_by(f64::total_cmp);
+                percentile_sorted(v, self.q)
+            }
+            _ => self.heights[2],
+        }
     }
 }
 

@@ -7,6 +7,14 @@
 //! as an [`AnchoredCdf`] through empirical quantile anchors — the same
 //! piecewise log-linear type the offline traces use, so one planner serves
 //! both the offline tables and the live controller.
+//!
+//! §Perf (DES engine overhaul): the quantile anchors are **incremental**.
+//! A Fenwick tree over integer token lengths ([`LengthIndex`]) is updated
+//! O(log U) per arrival/eviction and answers order statistics and ranks
+//! directly, replacing the per-epoch copy + full sort of the window
+//! (every controller epoch used to re-sort ~rate x window samples). The
+//! anchors are the same order statistics the sort produced — bit-identical
+//! CDFs, property-tested in `tests/des_engine.rs`.
 
 use std::collections::VecDeque;
 
@@ -19,6 +27,88 @@ const ANCHOR_QS: [f64; 13] = [
     0.05, 0.10, 0.20, 0.30, 0.40, 0.50, 0.60, 0.70, 0.80, 0.90, 0.95, 0.98, 0.99,
 ];
 
+/// Upper bound on indexable token lengths. Lengths at or above this land
+/// in the top bucket *and are counted* ([`LengthIndex::n_clamped`]): while
+/// any such observation is inside the window, [`OnlineEstimator::empirical_cdf`]
+/// falls back to the exact copy-and-sort path, so the anchors stay
+/// bit-identical for arbitrary (e.g. user-config) workloads. The bundled
+/// trace CDFs top out at 64–131K tokens, far below; the tree costs 1 MB
+/// once per estimator.
+const MAX_LEN: usize = 1 << 18;
+
+/// Fenwick (binary-indexed) tree over integer token lengths: O(log U)
+/// add/remove, k-th order statistic, and rank queries over the current
+/// window — the incremental replacement for sorting the window per epoch.
+#[derive(Clone, Debug)]
+struct LengthIndex {
+    /// 1-based Fenwick array; slot `v + 1` counts observations of value v.
+    tree: Vec<u32>,
+    n: u64,
+    /// Observations currently clamped into the top bucket (value lost).
+    n_clamped: u64,
+}
+
+impl LengthIndex {
+    fn new() -> Self {
+        LengthIndex {
+            tree: vec![0; MAX_LEN + 1],
+            n: 0,
+            n_clamped: 0,
+        }
+    }
+
+    /// Fenwick slot for a token-length observation (values are whole
+    /// numbers: `l_total as f64`).
+    fn slot(l: f64) -> usize {
+        (l.max(0.0) as usize).min(MAX_LEN - 1) + 1
+    }
+
+    fn add(&mut self, l: f64, delta: i64) {
+        let mut i = Self::slot(l);
+        while i <= MAX_LEN {
+            self.tree[i] = (self.tree[i] as i64 + delta) as u32;
+            i += i & i.wrapping_neg();
+        }
+        self.n = (self.n as i64 + delta) as u64;
+        if l >= (MAX_LEN - 1) as f64 {
+            self.n_clamped = (self.n_clamped as i64 + delta) as u64;
+        }
+    }
+
+    /// Number of observations with value <= x.
+    fn rank_le(&self, x: f64) -> u64 {
+        let mut i = Self::slot(x);
+        let mut s = 0u64;
+        while i > 0 {
+            s += self.tree[i] as u64;
+            i &= i - 1;
+        }
+        s
+    }
+
+    /// The k-th smallest observation (1-based), as the stored f64 value.
+    fn kth(&self, k: u64) -> f64 {
+        debug_assert!(k >= 1 && k <= self.n, "k = {k} of {}", self.n);
+        let mut idx = 0usize;
+        let mut rem = k;
+        let mut bit = MAX_LEN; // power of two
+        while bit > 0 {
+            let next = idx + bit;
+            if next <= MAX_LEN {
+                let c = self.tree[next] as u64;
+                if c < rem {
+                    rem -= c;
+                    idx = next;
+                }
+            }
+            bit >>= 1;
+        }
+        // idx = largest prefix with cumulative count < k; slot idx+1 holds
+        // the k-th value, which is the slot's value idx.
+        idx as f64
+    }
+}
+
 /// Sliding-window estimator of the arrival rate and prompt-length CDF.
 /// Observations must be fed in non-decreasing arrival order (they come
 /// straight off the arrival stream).
@@ -27,6 +117,9 @@ pub struct OnlineEstimator {
     window_s: f64,
     /// (arrival_s, l_total) pairs inside the window, oldest first.
     buf: VecDeque<(f64, f64)>,
+    /// Order-statistics index over the window's lengths (kept in lockstep
+    /// with `buf`).
+    index: LengthIndex,
     n_seen: u64,
 }
 
@@ -36,6 +129,7 @@ impl OnlineEstimator {
         OnlineEstimator {
             window_s,
             buf: VecDeque::new(),
+            index: LengthIndex::new(),
             n_seen: 0,
         }
     }
@@ -61,15 +155,17 @@ impl OnlineEstimator {
     /// Record one arrival; evicts everything older than the window.
     pub fn observe(&mut self, arrival_s: f64, l_total: u32) {
         self.buf.push_back((arrival_s, l_total as f64));
+        self.index.add(l_total as f64, 1);
         self.n_seen += 1;
         self.evict(arrival_s);
     }
 
     fn evict(&mut self, now: f64) {
         let cutoff = now - self.window_s;
-        while let Some(&(t, _)) = self.buf.front() {
+        while let Some(&(t, l)) = self.buf.front() {
             if t < cutoff {
                 self.buf.pop_front();
+                self.index.add(l, -1);
             } else {
                 break;
             }
@@ -126,39 +222,27 @@ impl OnlineEstimator {
 
     /// Empirical prompt-length CDF over the window, anchored at the
     /// [`ANCHOR_QS`] quantiles. `None` with fewer than 8 observations —
-    /// too little signal to re-plan from.
+    /// too little signal to re-plan from. Anchors are exact window order
+    /// statistics, served by the incremental [`LengthIndex`] (no per-call
+    /// sort); a window containing lengths beyond the index's range falls
+    /// back to the exact sort, so the anchors are bit-identical to the
+    /// former copy-and-sort in every case.
     pub fn empirical_cdf(&self) -> Option<AnchoredCdf> {
-        if self.buf.len() < 8 {
+        let n = self.buf.len();
+        debug_assert_eq!(n as u64, self.index.n, "index out of lockstep");
+        if n < 8 {
             return None;
         }
-        let mut xs: Vec<f64> = self.buf.iter().map(|&(_, l)| l).collect();
-        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
-        let n = xs.len();
-        let hi = xs[n - 1];
-        // Support lower edge strictly below the smallest sample (AnchoredCdf
-        // requires F(first anchor) = 0 and x > 0; L_total >= 2 always).
-        let lo = (xs[0] - 1.0).max(1.0);
-        if hi <= lo {
-            return None;
+        if self.index.n_clamped > 0 {
+            let mut xs: Vec<f64> = self.buf.iter().map(|&(_, l)| l).collect();
+            xs.sort_by(f64::total_cmp);
+            return anchors_from(
+                |k| xs[k as usize - 1],
+                |x| xs.partition_point(|&v| v <= x) as u64,
+                n,
+            );
         }
-        let mut anchors: Vec<(f64, f64)> = vec![(lo, 0.0)];
-        for &q in &ANCHOR_QS {
-            let idx = ((q * (n - 1) as f64).round() as usize).min(n - 1);
-            let x = xs[idx];
-            let last = *anchors.last().expect("non-empty");
-            if x <= last.0 || x >= hi {
-                continue;
-            }
-            // Exact empirical mass at x, so anchors are self-consistent
-            // even when quantile ranks collide on duplicate lengths.
-            let f = xs.partition_point(|&v| v <= x) as f64 / n as f64;
-            if f <= last.1 || f >= 1.0 {
-                continue;
-            }
-            anchors.push((x, f));
-        }
-        anchors.push((hi, 1.0));
-        Some(AnchoredCdf::new(anchors))
+        anchors_from(|k| self.index.kth(k), |x| self.index.rank_le(x), n)
     }
 
     /// A re-plannable [`Workload`]: the template's categories, output
@@ -170,6 +254,42 @@ impl OnlineEstimator {
         w.cdf = cdf;
         Some(w)
     }
+}
+
+/// Build the anchored CDF from order-statistic (`kth`, 1-based rank in the
+/// window) and rank (`rank_le`, observations <= x) oracles — shared by the
+/// Fenwick fast path and the exact-sort fallback so both produce the same
+/// anchors by construction.
+fn anchors_from(
+    kth: impl Fn(u64) -> f64,
+    rank_le: impl Fn(f64) -> u64,
+    n: usize,
+) -> Option<AnchoredCdf> {
+    let hi = kth(n as u64);
+    // Support lower edge strictly below the smallest sample (AnchoredCdf
+    // requires F(first anchor) = 0 and x > 0; L_total >= 2 always).
+    let lo = (kth(1) - 1.0).max(1.0);
+    if hi <= lo {
+        return None;
+    }
+    let mut anchors: Vec<(f64, f64)> = vec![(lo, 0.0)];
+    for &q in &ANCHOR_QS {
+        let idx = ((q * (n - 1) as f64).round() as usize).min(n - 1);
+        let x = kth(idx as u64 + 1);
+        let last = *anchors.last().expect("non-empty");
+        if x <= last.0 || x >= hi {
+            continue;
+        }
+        // Exact empirical mass at x, so anchors are self-consistent even
+        // when quantile ranks collide on duplicate lengths.
+        let f = rank_le(x) as f64 / n as f64;
+        if f <= last.1 || f >= 1.0 {
+            continue;
+        }
+        anchors.push((x, f));
+    }
+    anchors.push((hi, 1.0));
+    Some(AnchoredCdf::new(anchors))
 }
 
 #[cfg(test)]
@@ -282,6 +402,101 @@ mod tests {
         }
         assert!(e.empirical_cdf().is_none());
         assert!(e.snapshot(&traces::azure()).is_none());
+    }
+
+    /// The pre-overhaul sort-based anchor computation, verbatim — the
+    /// equivalence oracle for the incremental Fenwick index.
+    fn sorted_reference_cdf(window: &[(f64, f64)]) -> Option<AnchoredCdf> {
+        if window.len() < 8 {
+            return None;
+        }
+        let mut xs: Vec<f64> = window.iter().map(|&(_, l)| l).collect();
+        xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let n = xs.len();
+        let hi = xs[n - 1];
+        let lo = (xs[0] - 1.0).max(1.0);
+        if hi <= lo {
+            return None;
+        }
+        let mut anchors: Vec<(f64, f64)> = vec![(lo, 0.0)];
+        for &q in &ANCHOR_QS {
+            let idx = ((q * (n - 1) as f64).round() as usize).min(n - 1);
+            let x = xs[idx];
+            let last = *anchors.last().expect("non-empty");
+            if x <= last.0 || x >= hi {
+                continue;
+            }
+            let f = xs.partition_point(|&v| v <= x) as f64 / n as f64;
+            if f <= last.1 || f >= 1.0 {
+                continue;
+            }
+            anchors.push((x, f));
+        }
+        anchors.push((hi, 1.0));
+        Some(AnchoredCdf::new(anchors))
+    }
+
+    #[test]
+    fn incremental_anchors_match_the_sorted_oracle_bitwise() {
+        // Sliding window with eviction churn on a fat-tailed stream: the
+        // Fenwick order statistics must reproduce the copy-and-sort CDF
+        // bit for bit at every probe.
+        let w = traces::agent_heavy();
+        let mut rng = Rng::new(77);
+        let mut est = OnlineEstimator::new(20.0);
+        let mut shadow: Vec<(f64, f64)> = Vec::new();
+        let mut t = 0.0;
+        for i in 0..30_000u32 {
+            t += rng.exp(150.0);
+            let l = w.cdf.sample(&mut rng).round().max(2.0) as u32;
+            est.observe(t, l);
+            shadow.push((t, l as f64));
+            if i % 2_500 == 0 {
+                let cutoff = t - 20.0;
+                let window: Vec<(f64, f64)> =
+                    shadow.iter().copied().filter(|&(ts, _)| ts >= cutoff).collect();
+                let want = sorted_reference_cdf(&window);
+                let got = est.empirical_cdf();
+                assert_eq!(want.is_some(), got.is_some(), "probe {i}");
+                if let (Some(a), Some(b)) = (want, got) {
+                    for q in [0.01, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99] {
+                        assert_eq!(
+                            a.quantile(q).to_bits(),
+                            b.quantile(q).to_bits(),
+                            "probe {i} q {q}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn out_of_range_lengths_fall_back_to_the_exact_sort() {
+        // Lengths beyond the Fenwick range (>= 2^18) must not silently
+        // clamp: the estimator switches to the sort path and still
+        // matches the reference bitwise.
+        let mut est = OnlineEstimator::new(1e9);
+        let mut shadow: Vec<(f64, f64)> = Vec::new();
+        let mut x = 7u64;
+        for i in 0..500u32 {
+            x = x.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            // Mix of ordinary and huge lengths (u32 range, above 2^18).
+            let l = if i % 7 == 0 {
+                300_000 + (x >> 40) as u32
+            } else {
+                2 + (x >> 48) as u32 % 9_000
+            };
+            est.observe(i as f64, l);
+            shadow.push((i as f64, l as f64));
+        }
+        let want = sorted_reference_cdf(&shadow).expect("reference cdf");
+        let got = est.empirical_cdf().expect("fallback cdf");
+        for q in [0.05, 0.5, 0.9, 0.99] {
+            assert_eq!(want.quantile(q).to_bits(), got.quantile(q).to_bits(), "q {q}");
+        }
+        // The support upper edge is the true maximum, not the clamp.
+        assert!(got.quantile(1.0) > (1u32 << 18) as f64);
     }
 
     #[test]

@@ -1,0 +1,552 @@
+//! DES engine overhaul regression gate (§Perf).
+//!
+//! * **Scheduler equivalence**: the calendar queue's pop sequence is
+//!   byte-identical to the `BinaryHeap` oracle under adversarial random
+//!   schedules — exact time ties, bursts, far-future jumps that force the
+//!   direct-search fallback, and full drains through resize churn.
+//! * **Simulator equivalence**: the overhauled `simulate_pool` (dense
+//!   slot slabs, idle bitset, recycled scratch) is bit-identical to the
+//!   **verbatim pre-overhaul implementation** (carried below as
+//!   `reference::simulate_pool_reference`, the same way
+//!   `tests/tier_equivalence.rs` carries the pre-tiering planner).
+//! * **P² error bounds**: the streaming per-epoch P99 stays within a
+//!   tested error bound of the exact sort on all three traces' TTFT
+//!   streams, and within tight bounds on smooth synthetic distributions.
+
+use fleetopt::config::GpuProfile;
+use fleetopt::fleetsim::{
+    simulate_pool, simulate_pool_with, EventQueue, QueueImpl, SimConfig, SimRequest, SimScratch,
+};
+use fleetopt::util::rng::Rng;
+use fleetopt::util::stats::{percentile, P2Quantile};
+use fleetopt::workload::arrivals::generate_trace;
+use fleetopt::workload::traces;
+
+// ---------------------------------------------------------------------------
+// scheduler pop-order equivalence
+// ---------------------------------------------------------------------------
+
+/// Drive both backends through an identical random schedule/pop script and
+/// assert byte-identical (time, payload) sequences.
+fn run_schedule_script(seed: u64, n_ops: usize, burst: usize) {
+    let mut cal: EventQueue<u64> = EventQueue::with_impl(QueueImpl::Calendar);
+    let mut heap: EventQueue<u64> = EventQueue::with_impl(QueueImpl::BinaryHeap);
+    let mut rng = Rng::new(seed);
+    let mut payload = 0u64;
+    let mut recent: Vec<f64> = Vec::new();
+    for _ in 0..n_ops {
+        match rng.below(10) {
+            // Schedule a burst of future events from a mix of gap shapes.
+            0..=5 => {
+                for _ in 0..rng.range(1, burst + 1) {
+                    let now = cal.now();
+                    let t = match rng.below(5) {
+                        // Exact tie with a previously scheduled time.
+                        0 if !recent.is_empty() => {
+                            let t = recent[rng.range(0, recent.len())];
+                            if t >= now {
+                                t
+                            } else {
+                                now
+                            }
+                        }
+                        // Tie with the current time.
+                        1 => now,
+                        // Tight cluster.
+                        2 => now + rng.f64() * 1e-6,
+                        // Far-future jump (forces direct search later).
+                        3 => now + 1e4 + rng.f64() * 1e7,
+                        // Typical exponential gap.
+                        _ => now + rng.exp(5.0),
+                    };
+                    recent.push(t);
+                    if recent.len() > 64 {
+                        recent.remove(0);
+                    }
+                    cal.schedule(t, payload);
+                    heap.schedule(t, payload);
+                    payload += 1;
+                }
+            }
+            // Pop a run of events.
+            _ => {
+                for _ in 0..rng.range(1, burst + 1) {
+                    let a = cal.pop();
+                    let b = heap.pop();
+                    match (a, b) {
+                        (None, None) => break,
+                        (Some((ta, pa)), Some((tb, pb))) => {
+                            assert_eq!(ta.to_bits(), tb.to_bits(), "times diverge (seed {seed})");
+                            assert_eq!(pa, pb, "tie order diverges at t={ta} (seed {seed})");
+                        }
+                        (a, b) => panic!("length diverges (seed {seed}): {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+        assert_eq!(cal.len(), heap.len());
+    }
+    // Full drain: every remaining event in identical order.
+    loop {
+        match (cal.pop(), heap.pop()) {
+            (None, None) => break,
+            (Some((ta, pa)), Some((tb, pb))) => {
+                assert_eq!(ta.to_bits(), tb.to_bits());
+                assert_eq!(pa, pb);
+            }
+            (a, b) => panic!("drain length diverges: {a:?} vs {b:?}"),
+        }
+    }
+}
+
+#[test]
+fn calendar_pop_order_matches_heap_oracle_under_random_schedules() {
+    for seed in [1u64, 7, 42, 0xCA1E, 0xDE5] {
+        run_schedule_script(seed, 3_000, 8);
+    }
+}
+
+#[test]
+fn calendar_pop_order_matches_heap_oracle_under_heavy_ties() {
+    // Only 4 distinct timestamps over thousands of events: tie-order is
+    // the whole signal.
+    let mut cal: EventQueue<u32> = EventQueue::with_impl(QueueImpl::Calendar);
+    let mut heap: EventQueue<u32> = EventQueue::with_impl(QueueImpl::BinaryHeap);
+    let mut rng = Rng::new(9);
+    for i in 0..5_000u32 {
+        let t = [0.0, 1.5, 1.5, 3.25][rng.range(0, 4)];
+        cal.schedule(t, i);
+        heap.schedule(t, i);
+    }
+    loop {
+        match (cal.pop(), heap.pop()) {
+            (None, None) => break,
+            (a, b) => assert_eq!(a, b),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the verbatim pre-overhaul simulator, as the bit-identity oracle
+// ---------------------------------------------------------------------------
+
+mod reference {
+    //! The pre-overhaul `fleetsim::{events, sim}` hot path, verbatim
+    //! (BinaryHeap scheduler, `Vec<Option<Active>>` slot scans, O(n_gpus)
+    //! wake scan, full-sort percentiles happen outside SimResult).
+
+    use std::cmp::Ordering;
+    use std::collections::BinaryHeap;
+
+    use fleetopt::fleetsim::{SimConfig, SimRequest};
+    use fleetopt::util::stats::Samples;
+
+    #[derive(Clone, Debug)]
+    struct Scheduled<E> {
+        time: f64,
+        seq: u64,
+        payload: E,
+    }
+
+    impl<E> PartialEq for Scheduled<E> {
+        fn eq(&self, other: &Self) -> bool {
+            self.time == other.time && self.seq == other.seq
+        }
+    }
+    impl<E> Eq for Scheduled<E> {}
+
+    impl<E> Ord for Scheduled<E> {
+        fn cmp(&self, other: &Self) -> Ordering {
+            other
+                .time
+                .total_cmp(&self.time)
+                .then_with(|| other.seq.cmp(&self.seq))
+        }
+    }
+    impl<E> PartialOrd for Scheduled<E> {
+        fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+            Some(self.cmp(other))
+        }
+    }
+
+    struct EventQueue<E> {
+        heap: BinaryHeap<Scheduled<E>>,
+        seq: u64,
+    }
+
+    impl<E> EventQueue<E> {
+        fn new() -> Self {
+            EventQueue {
+                heap: BinaryHeap::new(),
+                seq: 0,
+            }
+        }
+
+        fn schedule(&mut self, time: f64, payload: E) {
+            self.heap.push(Scheduled {
+                time,
+                seq: self.seq,
+                payload,
+            });
+            self.seq += 1;
+        }
+
+        fn pop(&mut self) -> Option<(f64, E)> {
+            self.heap.pop().map(|s| (s.time, s.payload))
+        }
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    struct Active {
+        req: usize,
+        prefill_left: u32,
+        iters_left: u32,
+        first_token_done: bool,
+    }
+
+    struct Gpu {
+        slots: Vec<Option<Active>>,
+        n_busy: u32,
+        iterating: bool,
+        busy_integral: f64,
+        last_change: f64,
+    }
+
+    impl Gpu {
+        fn new(n_slots: u32) -> Self {
+            Gpu {
+                slots: vec![None; n_slots as usize],
+                n_busy: 0,
+                iterating: false,
+                busy_integral: 0.0,
+                last_change: 0.0,
+            }
+        }
+
+        fn accumulate(&mut self, t: f64, window: (f64, f64)) {
+            let lo = self.last_change.max(window.0);
+            let hi = t.min(window.1);
+            if hi > lo {
+                self.busy_integral += self.n_busy as f64 * (hi - lo);
+            }
+            self.last_change = t;
+        }
+
+        fn free_slots(&self) -> u32 {
+            self.slots.len() as u32 - self.n_busy
+        }
+    }
+
+    #[derive(Clone, Copy, Debug)]
+    enum Ev {
+        Arrival(usize),
+        Iteration(usize),
+    }
+
+    pub struct RefResult {
+        pub utilization: f64,
+        pub ttft: Samples,
+        pub wait: Samples,
+        pub completed: u64,
+        pub censored: u64,
+    }
+
+    pub fn simulate_pool_reference(cfg: &SimConfig, requests: &[SimRequest]) -> RefResult {
+        assert!(cfg.n_gpus > 0 && cfg.n_slots > 0);
+        let n_req = requests.len();
+        let warm = (n_req as f64 * cfg.warmup_frac) as usize;
+        let window = if n_req == 0 {
+            (0.0, 0.0)
+        } else {
+            let lo = requests[warm.min(n_req - 1)].arrival_s.max(cfg.warmup_s);
+            let hi = requests[n_req - 1].arrival_s;
+            (lo.min(hi), hi)
+        };
+
+        let chunk = cfg.gpu.chunk;
+        let t_iter_full = cfg.gpu.t_iter_s(cfg.n_slots);
+
+        let mut gpus: Vec<Gpu> = (0..cfg.n_gpus).map(|_| Gpu::new(cfg.n_slots)).collect();
+        let mut queue: std::collections::VecDeque<usize> = Default::default();
+        let mut events: EventQueue<Ev> = EventQueue::new();
+        for (i, r) in requests.iter().enumerate() {
+            events.schedule(r.arrival_s, Ev::Arrival(i));
+        }
+
+        let mut ttft = Samples::with_capacity(n_req);
+        let mut wait = Samples::with_capacity(n_req);
+        let mut completed = 0u64;
+
+        let admit = |g: &mut Gpu,
+                     queue: &mut std::collections::VecDeque<usize>,
+                     t: f64,
+                     wait: &mut Samples,
+                     requests: &[SimRequest],
+                     warm: usize| {
+            while g.free_slots() > 0 {
+                let Some(req) = queue.pop_front() else { break };
+                let r = &requests[req];
+                let prefill = (r.l_in as u64).div_ceil(chunk as u64) as u32;
+                let slot = g.slots.iter().position(Option::is_none).unwrap();
+                g.slots[slot] = Some(Active {
+                    req,
+                    prefill_left: prefill,
+                    iters_left: prefill + r.l_out,
+                    first_token_done: false,
+                });
+                g.n_busy += 1;
+                if req >= warm {
+                    wait.push(t - r.arrival_s);
+                }
+            }
+        };
+
+        while let Some((t, ev)) = events.pop() {
+            if let Some(h) = cfg.horizon_s {
+                if t > h {
+                    break;
+                }
+            }
+            match ev {
+                Ev::Arrival(i) => {
+                    queue.push_back(i);
+                    if let Some(gi) = (0..gpus.len())
+                        .filter(|&gi| !gpus[gi].iterating)
+                        .max_by_key(|&gi| gpus[gi].free_slots())
+                    {
+                        let g = &mut gpus[gi];
+                        g.accumulate(t, window);
+                        admit(g, &mut queue, t, &mut wait, requests, warm);
+                        if g.n_busy > 0 {
+                            let dt = if cfg.lockstep_full {
+                                t_iter_full
+                            } else {
+                                cfg.gpu.t_iter_s(g.n_busy)
+                            };
+                            g.iterating = true;
+                            events.schedule(t + dt, Ev::Iteration(gi));
+                        }
+                    }
+                }
+                Ev::Iteration(gi) => {
+                    let g = &mut gpus[gi];
+                    g.accumulate(t, window);
+                    g.iterating = false;
+                    for slot in g.slots.iter_mut() {
+                        if let Some(a) = slot {
+                            a.iters_left -= 1;
+                            if a.prefill_left > 0 {
+                                a.prefill_left -= 1;
+                            } else if !a.first_token_done {
+                                a.first_token_done = true;
+                                if a.req >= warm {
+                                    ttft.push(t - requests[a.req].arrival_s);
+                                }
+                            }
+                            if a.iters_left == 0 {
+                                if !a.first_token_done && a.req >= warm {
+                                    ttft.push(t - requests[a.req].arrival_s);
+                                }
+                                *slot = None;
+                                g.n_busy -= 1;
+                                completed += 1;
+                            }
+                        }
+                    }
+                    admit(g, &mut queue, t, &mut wait, requests, warm);
+                    if g.n_busy > 0 {
+                        let dt = if cfg.lockstep_full {
+                            t_iter_full
+                        } else {
+                            cfg.gpu.t_iter_s(g.n_busy)
+                        };
+                        g.iterating = true;
+                        events.schedule(t + dt, Ev::Iteration(gi));
+                    }
+                }
+            }
+        }
+
+        let slot_time: f64 =
+            cfg.n_gpus as f64 * cfg.n_slots as f64 * (window.1 - window.0).max(1e-12);
+        let busy: f64 = gpus.iter().map(|g| g.busy_integral).sum();
+        RefResult {
+            utilization: busy / slot_time,
+            ttft,
+            wait,
+            completed,
+            censored: n_req as u64 - completed,
+        }
+    }
+}
+
+fn poisson_requests(lambda: f64, n: usize, seed: u64) -> Vec<SimRequest> {
+    generate_trace(&traces::azure(), lambda, n, seed)
+        .iter()
+        .map(|r| SimRequest {
+            arrival_s: r.arrival_s,
+            l_in: r.l_in,
+            l_out: r.l_out,
+        })
+        .collect()
+}
+
+/// Sorted-copy percentile of a sample set (the exact baseline).
+fn exact_p99(xs: &[f64]) -> f64 {
+    percentile(xs, 0.99)
+}
+
+#[test]
+fn overhauled_simulator_is_bit_identical_to_the_reference() {
+    let g = GpuProfile::a100_llama70b();
+    let mut scratch = SimScratch::new();
+    // (n_gpus, n_slots, lambda, n, lockstep, horizon)
+    let shapes: [(u64, u32, f64, usize, bool, Option<f64>); 5] = [
+        (2, 16, 6.0, 2_500, true, None),
+        (7, 64, 40.0, 4_000, true, None),
+        (1, 16, 30.0, 1_500, true, None), // overloaded: deep queueing
+        (3, 32, 15.0, 2_000, false, None), // occupancy-dependent t_iter
+        (4, 16, 12.0, 2_500, true, Some(120.0)), // horizon censoring
+    ];
+    for (i, &(n_gpus, n_slots, lambda, n, lockstep, horizon)) in shapes.iter().enumerate() {
+        let reqs = poisson_requests(lambda, n, 0xBEEF + i as u64);
+        let mut cfg = SimConfig::new(g.clone(), n_gpus, n_slots);
+        cfg.lockstep_full = lockstep;
+        cfg.horizon_s = horizon;
+        let want = reference::simulate_pool_reference(&cfg, &reqs);
+        for which in [QueueImpl::Calendar, QueueImpl::BinaryHeap] {
+            cfg.queue_impl = which;
+            let got = simulate_pool_with(&cfg, &reqs, &mut scratch);
+            assert_eq!(
+                want.utilization.to_bits(),
+                got.utilization.to_bits(),
+                "shape {i} {which:?}: utilization"
+            );
+            assert_eq!(want.completed, got.completed, "shape {i} {which:?}");
+            assert_eq!(want.censored, got.censored, "shape {i} {which:?}");
+            assert_eq!(want.ttft.len(), got.ttft.len(), "shape {i} {which:?}");
+            assert_eq!(want.wait.len(), got.wait.len(), "shape {i} {which:?}");
+            // Sample multisets are equal => every order statistic is
+            // bit-identical (insertion order is not part of the contract).
+            if !want.ttft.is_empty() {
+                for q in [0.0, 0.25, 0.5, 0.9, 0.99, 1.0] {
+                    let a = percentile(want.ttft.values(), q);
+                    let b = percentile(got.ttft.values(), q);
+                    assert_eq!(a.to_bits(), b.to_bits(), "shape {i} {which:?} ttft q={q}");
+                }
+            }
+            if !want.wait.is_empty() {
+                for q in [0.5, 0.99] {
+                    let a = percentile(want.wait.values(), q);
+                    let b = percentile(got.wait.values(), q);
+                    assert_eq!(a.to_bits(), b.to_bits(), "shape {i} {which:?} wait q={q}");
+                }
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// P² streaming percentile error bounds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn p2_is_tight_on_smooth_synthetic_distributions() {
+    let mut rng = Rng::new(3);
+    // Uniform [0, 1): P99 = 0.99.
+    let mut p2 = P2Quantile::new(0.99);
+    let mut xs = Vec::with_capacity(50_000);
+    for _ in 0..50_000 {
+        let x = rng.f64();
+        p2.push(x);
+        xs.push(x);
+    }
+    let exact = exact_p99(&xs);
+    assert!(
+        (p2.value() - exact).abs() / exact < 0.05,
+        "uniform: p2 {} vs exact {exact}",
+        p2.value()
+    );
+    // Exponential: heavier tail, still within 10%.
+    let mut p2 = P2Quantile::new(0.99);
+    let mut xs = Vec::with_capacity(100_000);
+    for _ in 0..100_000 {
+        let x = rng.exp(2.0);
+        p2.push(x);
+        xs.push(x);
+    }
+    let exact = exact_p99(&xs);
+    assert!(
+        (p2.value() - exact).abs() / exact < 0.10,
+        "exponential: p2 {} vs exact {exact}",
+        p2.value()
+    );
+    // Median on the uniform stream, as a second quantile sanity point.
+    let mut p50 = P2Quantile::new(0.5);
+    for &x in &xs {
+        p50.push(x);
+    }
+    let exact50 = percentile(&xs, 0.5);
+    assert!((p50.value() - exact50).abs() / exact50 < 0.05);
+}
+
+#[test]
+fn p2_small_counts_are_exact_and_reset_reuses() {
+    let mut p2 = P2Quantile::new(0.99);
+    assert!(p2.is_empty());
+    assert_eq!(p2.value(), 0.0);
+    for &x in &[5.0, 1.0, 3.0] {
+        p2.push(x);
+    }
+    // n <= 5: exact interpolated percentile of {1, 3, 5}.
+    assert_eq!(p2.value(), percentile(&[5.0, 1.0, 3.0], 0.99));
+    p2.reset();
+    assert!(p2.is_empty());
+    for &x in &[2.0, 2.0, 2.0, 2.0, 2.0, 2.0, 2.0] {
+        p2.push(x);
+    }
+    assert_eq!(p2.value(), 2.0, "degenerate stream must stay exact");
+}
+
+#[test]
+fn p2_epoch_p99_within_bounds_on_all_traces() {
+    // Epoch-sized chunks of real DES TTFT streams (the exact shape the
+    // autoscale digests see): the P² estimate must stay within a 25%
+    // relative / 100 ms absolute envelope of the exact sort, per chunk.
+    let g = GpuProfile::a100_llama70b();
+    for (wi, w) in traces::all().iter().enumerate() {
+        let reqs: Vec<SimRequest> = generate_trace(w, 400.0, 24_000, 0x99 + wi as u64)
+            .iter()
+            .map(|r| SimRequest {
+                arrival_s: r.arrival_s,
+                l_in: r.l_in,
+                l_out: r.l_out,
+            })
+            .collect();
+        // Size for moderate load from the trace's own occupancy.
+        let n_slots = 64u32;
+        let occ = fleetopt::fleetsim::mean_occupancy_s(&reqs, &g, n_slots);
+        let n_gpus = (400.0 * occ / (n_slots as f64 * 0.7)).ceil() as u64;
+        let cfg = SimConfig::new(g.clone(), n_gpus, n_slots);
+        let res = simulate_pool(&cfg, &reqs);
+        let stream = res.ttft.values();
+        assert!(stream.len() > 10_000, "{}: thin TTFT stream", w.name);
+        for (ci, chunk) in stream.chunks(2_000).enumerate() {
+            if chunk.len() < 100 {
+                continue;
+            }
+            let mut p2 = P2Quantile::new(0.99);
+            for &x in chunk {
+                p2.push(x);
+            }
+            let exact = exact_p99(chunk);
+            let err = (p2.value() - exact).abs();
+            assert!(
+                err <= (0.25 * exact).max(0.1),
+                "{} chunk {ci}: p2 {} vs exact {exact} (err {err})",
+                w.name,
+                p2.value()
+            );
+        }
+    }
+}
