@@ -11,12 +11,14 @@ use std::time::Instant;
 use fleetopt::config::GpuProfile;
 use fleetopt::experiments::table5_validate_replicated;
 use fleetopt::fleetsim::sim::{simulate_pool, simulate_pool_replications, SimConfig, SimRequest};
-use fleetopt::planner::sizing::min_gpus;
+use fleetopt::planner::replan::{ReplanConfig, Replanner};
+use fleetopt::planner::sizing::{clear_warm_hints, min_gpus, sizing_probe_stats};
 use fleetopt::planner::{
-    plan_fleet, sweep_full, sweep_full_serial, sweep_gamma, sweep_tiered, PlanInput,
+    plan_fleet, sweep_full, sweep_full_serial, sweep_gamma, sweep_tiered, sweep_tiered_pruned,
+    CalibCache, PlanInput,
 };
 use fleetopt::queueing::erlang::erlang_cache_stats;
-use fleetopt::queueing::service::calibrate;
+use fleetopt::queueing::service::{calibrate, MomentTable};
 use fleetopt::util::json::{obj, Json};
 use fleetopt::util::rng::Rng;
 use fleetopt::workload::traces;
@@ -29,13 +31,34 @@ fn time_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
     t0.elapsed().as_secs_f64() * 1e3 / reps as f64
 }
 
+/// Median per-rep wall time — the CI floor checks use medians so one
+/// scheduler hiccup on a shared runner cannot fail a hard gate.
+fn median_ms<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let mut times: Vec<f64> = (0..reps)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    times[times.len() / 2]
+}
+
 fn main() {
     let mut sweep_rows = Vec::new();
+    let mut plan_fleet_ms_max = 0.0f64;
     for w in traces::all() {
         let input = PlanInput::new(w.clone(), 1000.0);
         let cell = time_ms(10, || {
             std::hint::black_box(plan_fleet(&input, w.b_short, 1.5).unwrap());
         });
+        // The < 1 ms CI floor: one full Algorithm-1 cell (2 calibrations +
+        // 2 Erlang inversions), median over reps after one warm-up call.
+        let plan_fleet_ms = median_ms(21, || {
+            std::hint::black_box(plan_fleet(&input, w.b_short, 1.5).unwrap());
+        });
+        plan_fleet_ms_max = plan_fleet_ms_max.max(plan_fleet_ms);
         let gsweep = time_ms(5, || {
             std::hint::black_box(sweep_gamma(&input, w.b_short).unwrap());
         });
@@ -46,7 +69,8 @@ fn main() {
             std::hint::black_box(sweep_full(&input).unwrap());
         });
         println!(
-            "{:12} cell={cell:7.3} ms | gamma-sweep(11)={gsweep:8.3} ms | \
+            "{:12} cell={cell:7.3} ms (median {plan_fleet_ms:7.3}) | \
+             gamma-sweep(11)={gsweep:8.3} ms | \
              full-sweep serial={full_serial:8.3} ms parallel={full_par:8.3} ms \
              ({:.2}x)",
             w.name,
@@ -55,6 +79,7 @@ fn main() {
         sweep_rows.push(obj(vec![
             ("workload", Json::Str(w.name.into())),
             ("cell_ms", Json::Num(cell)),
+            ("plan_fleet_ms", Json::Num(plan_fleet_ms)),
             ("gamma_sweep_ms", Json::Num(gsweep)),
             ("full_sweep_serial_ms", Json::Num(full_serial)),
             ("full_sweep_parallel_ms", Json::Num(full_par)),
@@ -64,7 +89,7 @@ fn main() {
             ),
         ]));
     }
-    println!("paper §6: full sweep < 1 ms (target for the §Perf pass)");
+    println!("paper §6: plan_fleet < 1 ms (hard CI floor, median)");
 
     // --- Erlang-memo: the sizing inversion, first-fill vs warm (§Perf) ---
     // "First-fill" repetitions run on a fresh scoped thread each (fresh
@@ -112,25 +137,110 @@ fn main() {
     );
 
     // --- K-tier boundary-combination sweeps (Table 8 substrate) ----------
+    // `k3_sweep_ms` is the pre-PR full-evaluation sweep (the oracle);
+    // `k3_pruned_ms` is the bound-and-prune path that selects the
+    // bit-identical plan — the < 10 ms CI floor, measured with the
+    // one-time moment table warm (its build is reported separately).
     let mut tier_rows = Vec::new();
+    let mut table_build_ms = 0.0f64;
+    let mut k3_pruned_ms_max = 0.0f64;
+    let mut pruned_frac_min = 1.0f64;
+    let mut azure_k3_cold_ms = 0.0f64;
     for w in traces::all() {
         let input = PlanInput::new(w.clone(), 1000.0);
+        let t0 = Instant::now();
+        std::hint::black_box(MomentTable::for_workload(&input.workload, input.gpu.chunk));
+        table_build_ms += t0.elapsed().as_secs_f64() * 1e3;
         let k3 = time_ms(3, || {
             std::hint::black_box(sweep_tiered(&input, 3).unwrap());
         });
+        if w.name == "azure" {
+            azure_k3_cold_ms = k3;
+        }
         let k4 = time_ms(1, || {
             std::hint::black_box(sweep_tiered(&input, 4).unwrap());
         });
+        // Prune decisions race on the incumbent atomic (conservatively),
+        // so the fraction wobbles run-to-run — report the min over the
+        // reps, a stable lower bound paired with the median wall time.
+        let mut frac = 1.0f64;
+        let k3_pruned = median_ms(5, || {
+            let (best, stats) = sweep_tiered_pruned(&input, 3, &CalibCache::new()).unwrap();
+            std::hint::black_box(&best);
+            frac = frac.min(stats.pruned_frac());
+        });
+        k3_pruned_ms_max = k3_pruned_ms_max.max(k3_pruned);
+        pruned_frac_min = pruned_frac_min.min(frac);
         println!(
-            "{:12} K=3 sweep={k3:8.1} ms | K=4 sweep={k4:8.1} ms (acceptance: K=3 < 100 ms)",
-            w.name
+            "{:12} K=3 sweep={k3:8.1} ms | pruned={k3_pruned:7.2} ms \
+             ({:.0}% cells pruned) | K=4 sweep={k4:8.1} ms (floor: pruned K=3 < 10 ms)",
+            w.name,
+            frac * 100.0,
         );
         tier_rows.push(obj(vec![
             ("workload", Json::Str(w.name.into())),
             ("k3_sweep_ms", Json::Num(k3)),
+            ("k3_pruned_ms", Json::Num(k3_pruned)),
+            ("k3_pruned_frac", Json::Num(frac)),
             ("k4_sweep_ms", Json::Num(k4)),
         ]));
     }
+    println!("moment-table builds (one-time, all workloads): {table_build_ms:.1} ms");
+
+    // --- warm-vs-cold inversion probes + incremental replanner -----------
+    let wz2 = traces::azure();
+    let svc2 = calibrate(&wz2.cdf, &wz2.output, &GpuProfile::a100_llama70b(), 682, 10_000, 11);
+    let probe_lambdas: Vec<f64> = (1..=30).map(|i| 95.0 * i as f64).collect();
+    clear_warm_hints();
+    let (pc0, _) = sizing_probe_stats();
+    for &lam in &probe_lambdas {
+        clear_warm_hints();
+        std::hint::black_box(min_gpus(lam, &svc2, 0.5, 0.85, false).unwrap());
+    }
+    let (pc1, _) = sizing_probe_stats();
+    for &lam in &probe_lambdas {
+        std::hint::black_box(min_gpus(lam, &svc2, 0.5, 0.85, false).unwrap());
+    }
+    let (pc2, _) = sizing_probe_stats();
+    for &lam in &probe_lambdas {
+        std::hint::black_box(min_gpus(lam, &svc2, 0.5, 0.85, false).unwrap());
+    }
+    let (pc3, _) = sizing_probe_stats();
+    let probes_cold = (pc1 - pc0) as f64;
+    let probes_warm = (pc3 - pc2) as f64;
+    println!(
+        "inversion probes x{}: cold={probes_cold:.0} | warm={probes_warm:.0} \
+         ({:.2}x fewer)",
+        probe_lambdas.len(),
+        probes_cold / probes_warm.max(1.0),
+    );
+
+    // Incremental replanner: unchanged-fingerprint epochs against a warm
+    // cache + neighbourhood seeds, vs the cold full K=3 sweep baseline
+    // (>= 10x CI floor).
+    let input_rp = PlanInput::new(traces::azure(), 1000.0);
+    let (initial, _) = sweep_tiered_pruned(&input_rp, 3, &CalibCache::new()).unwrap();
+    let mut rp = Replanner::new(
+        ReplanConfig {
+            sweep_boundaries: true,
+            incremental: true,
+            ..ReplanConfig::default()
+        },
+        initial,
+    );
+    rp.replan(&input_rp).unwrap(); // warm the cache + fingerprint
+    let mut flip = false;
+    let replan_warm_ms = median_ms(7, || {
+        let mut pi = input_rp.clone();
+        pi.lambda = if flip { 1050.0 } else { 955.0 };
+        flip = !flip;
+        std::hint::black_box(rp.replan(&pi).unwrap());
+    });
+    let replan_speedup = azure_k3_cold_ms / replan_warm_ms.max(1e-9);
+    println!(
+        "replanner: warm incremental replan={replan_warm_ms:7.2} ms vs cold K=3 \
+         sweep={azure_k3_cold_ms:8.1} ms ({replan_speedup:.1}x; floor >= 10x)"
+    );
 
     // --- DES validation replications: sequential vs parallel -------------
     let w = traces::azure();
@@ -184,6 +294,15 @@ fn main() {
         ("bench", Json::Str("perf_planner".into())),
         ("sweeps", Json::Arr(sweep_rows)),
         ("tier_sweeps", Json::Arr(tier_rows)),
+        ("plan_fleet_ms_max", Json::Num(plan_fleet_ms_max)),
+        ("k3_pruned_ms_max", Json::Num(k3_pruned_ms_max)),
+        ("k3_pruned_frac_min", Json::Num(pruned_frac_min)),
+        ("moment_table_build_ms", Json::Num(table_build_ms)),
+        ("inversion_probes_cold", Json::Num(probes_cold)),
+        ("inversion_probes_warm", Json::Num(probes_warm)),
+        ("replan_warm_ms", Json::Num(replan_warm_ms)),
+        ("replan_cold_sweep_ms", Json::Num(azure_k3_cold_ms)),
+        ("replan_warm_speedup", Json::Num(replan_speedup)),
         ("sizing_first_fill_ms", Json::Num(sizing_first_fill_ms)),
         ("sizing_warm_ms", Json::Num(sizing_warm_ms)),
         (

@@ -289,6 +289,23 @@ impl Default for Slo {
     }
 }
 
+/// How the planner calibrates per-cell service stats (§Perf).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CellStatsMode {
+    /// Midpoint quadrature over the restricted quantile function — the
+    /// default and the bit-compatibility anchor: every pre-refactor plan
+    /// is reproduced exactly (`tests/tier_equivalence.rs`).
+    #[default]
+    Quadrature,
+    /// O(log n) moment-table lookups
+    /// ([`crate::queueing::service::MomentTable`]): the exact integerized
+    /// moments the quadrature converges to. Within the table's proven
+    /// error bound of the quadrature (tolerance-tested), but not
+    /// bit-identical — opt-in for latency-critical callers; the exact
+    /// sweep gets its speed from bound-and-prune instead.
+    MomentTable,
+}
+
 /// Planner settings (§4.1, §6).
 #[derive(Clone, Debug)]
 pub struct PlannerConfig {
@@ -300,6 +317,8 @@ pub struct PlannerConfig {
     pub mc_samples: usize,
     /// Seed for the calibration sampler (determinism).
     pub seed: u64,
+    /// Per-cell calibration path (quadrature default; see [`CellStatsMode`]).
+    pub cell_stats: CellStatsMode,
 }
 
 impl Default for PlannerConfig {
@@ -309,6 +328,7 @@ impl Default for PlannerConfig {
             gammas: (0..=10).map(|i| 1.0 + i as f64 * 0.1).collect(),
             mc_samples: 20_000,
             seed: 0xF1EE7,
+            cell_stats: CellStatsMode::default(),
         }
     }
 }

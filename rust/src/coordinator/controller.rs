@@ -41,6 +41,10 @@ pub struct ControllerConfig {
     /// live loop provisions with the identical upswing slack the
     /// simulator's acceptance numbers were produced with.
     pub target_headroom: f64,
+    /// Anticipatory scaling (off by default), mirroring
+    /// `AutoscaleConfig::forecast`: plan against `max(peak, one-epoch-
+    /// ahead linear forecast)` of the live estimator.
+    pub forecast: bool,
 }
 
 impl ControllerConfig {
@@ -70,6 +74,7 @@ impl ControllerConfig {
             gpus_per_replica: scale,
             max_replicas,
             target_headroom: 1.10,
+            forecast: false,
         }
     }
 }

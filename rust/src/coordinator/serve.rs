@@ -447,9 +447,14 @@ pub fn serve_autoscaled(
                 // exactly like the DES controller (`fleetsim::autoscale`):
                 // the mean estimate lags upswings by ~window/2.
                 let (lam, snap) = {
+                    // Anticipatory scaling: with the knob on, plan against
+                    // the larger of the peak window and the one-epoch-ahead
+                    // forecast — a single buffer pass inside the estimator
+                    // lock either way (ingest contends on it).
+                    let horizon = ctl.forecast.then_some(ctl.epoch_s);
                     let e = estimator.lock().unwrap();
                     (
-                        e.peak_rate(now_items, 4) * ctl.target_headroom,
+                        e.planning_rate(now_items, 4, horizon) * ctl.target_headroom,
                         e.snapshot(&ctl.input.workload),
                     )
                 };

@@ -67,6 +67,13 @@ pub struct AutoscaleConfig {
     /// `false` freezes the initial plan (the static baselines of Table 9
     /// run through the identical simulator, controller off).
     pub replanning: bool,
+    /// Anticipatory scaling (off by default): plan against
+    /// `max(peak-window, one-epoch-ahead linear forecast)` instead of the
+    /// peak alone ([`OnlineEstimator::forecast_rate`]) — cuts the
+    /// remaining upswing lag the reactive peak estimate cannot see.
+    /// Off, the controller is bit-identical to the reactive one
+    /// (property-tested: the knob only ever *raises* the planning rate).
+    pub forecast: bool,
 }
 
 impl Default for AutoscaleConfig {
@@ -79,6 +86,7 @@ impl Default for AutoscaleConfig {
             replan: ReplanConfig::default(),
             target_headroom: 1.10,
             replanning: true,
+            forecast: false,
         }
     }
 }
@@ -781,8 +789,11 @@ pub fn simulate_autoscale(
                 // Plan against the peak-tracking estimate (lag ~W/8 vs
                 // ~W/2 for the mean) scaled by the headroom knob: on an
                 // upswing, demand keeps growing for provision_delay_s
-                // after the decision.
-                let lambda_plan = estimator.peak_rate(t, 4) * cfg.target_headroom;
+                // after the decision. With `forecast` on, also anticipate
+                // one epoch ahead and take whichever is larger (one
+                // buffer pass either way).
+                let horizon = cfg.forecast.then_some(cfg.epoch_s);
+                let lambda_plan = estimator.planning_rate(t, 4, horizon) * cfg.target_headroom;
                 let mut switched = false;
                 if cfg.replanning && lambda_plan > 0.0 {
                     let mut pi = input.clone();

@@ -53,7 +53,7 @@ USAGE:
                      (fixed synthetic 5M-request/512-GPU/K=4 diurnal azure scenario)
   fleetopt autoscale --workload <name> [--config F.json] [--lambda N] [--requests N]
                      [--arrivals poisson|diurnal:amp=A,period=P|burst:high=H,low=L|schedule:F.json]
-                     [--epoch S] [--window S] [--provision S] [--no-replan]
+                     [--epoch S] [--window S] [--provision S] [--no-replan] [--forecast]
                      [--tiers W1,W2,..] [--out metrics.json] [--max-violation-frac F]
   fleetopt compress  [--tokens N] [--budget N] [--seed N]
   fleetopt serve     [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
@@ -403,6 +403,7 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
         window_s: flag_pos_f64(flags, "window", epoch_s * 2.0)?,
         provision_delay_s: flag_f64(flags, "provision", epoch_s * 0.5)?,
         replanning: !flags.contains_key("no-replan"),
+        forecast: flags.contains_key("forecast"),
         ..AutoscaleConfig::default()
     };
     if cfg.provision_delay_s < 0.0 {

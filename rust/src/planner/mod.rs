@@ -19,6 +19,7 @@ pub use sweep::{
     PlanInput, PoolPlan,
 };
 pub use tiered::{
-    plan_spec_sweep_gamma, plan_spec_sweep_gamma_cached, plan_tiers, sweep_tiered,
-    sweep_tiered_cached, sweep_tiered_serial, TierCell, TieredPlan,
+    layout_neighborhood, plan_spec_sweep_gamma, plan_spec_sweep_gamma_cached, plan_tiers,
+    sweep_tiered, sweep_tiered_cached, sweep_tiered_pruned, sweep_tiered_pruned_seeded,
+    sweep_tiered_serial, PruneStats, TierCell, TieredPlan,
 };

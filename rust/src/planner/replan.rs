@@ -24,30 +24,17 @@ use crate::planner::cost::fleet_cost_yr_tiered;
 use crate::planner::sizing::SizingError;
 use crate::planner::sweep::{CalibCache, PlanInput};
 use crate::planner::tiered::{
-    plan_spec_sweep_gamma_cached, plan_tiers, sweep_tiered_cached, TieredPlan,
+    layout_neighborhood, plan_spec_sweep_gamma_cached, plan_tiers, sweep_tiered_pruned,
+    sweep_tiered_pruned_seeded, TieredPlan,
 };
 use crate::workload::traces::Workload;
 
-/// FNV-1a over the workload features calibration depends on (CDF anchors
-/// and the output model). [`CalibCache`] keys memoized [`ServiceStats`]
-/// (crate::queueing::service::ServiceStats) by truncation cuts only, so a
-/// cache may only be reused while the underlying distribution is
-/// unchanged — a drifted empirical snapshot must invalidate it.
+/// [`Workload::fingerprint`]: [`CalibCache`] keys memoized service stats
+/// by truncation cuts only, so a cache may only be reused while the
+/// underlying distribution is unchanged — a drifted empirical snapshot
+/// must invalidate it (and does the same to the shared moment tables).
 fn workload_fingerprint(w: &Workload) -> u64 {
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    let mut mix = |b: u64| {
-        h ^= b;
-        h = h.wrapping_mul(0x0000_0100_0000_01b3);
-    };
-    for &(x, f) in w.cdf.anchors() {
-        mix(x.to_bits());
-        mix(f.to_bits());
-    }
-    mix(w.output.frac.to_bits());
-    mix(w.output.sigma.to_bits());
-    mix(w.output.min_tokens as u64);
-    mix(w.output.max_tokens as u64);
-    h
+    w.fingerprint()
 }
 
 /// Hysteresis configuration for online re-planning.
@@ -62,6 +49,16 @@ pub struct ReplanConfig {
     /// Also sweep the full boundary grid each epoch (more optimal, more
     /// expensive, and layout switches re-provision the whole fleet).
     pub sweep_boundaries: bool,
+    /// Incremental boundary sweeps (only meaningful with
+    /// `sweep_boundaries`): on an epoch whose workload fingerprint is
+    /// unchanged (pure rate drift — the warm-cache case), evaluate the
+    /// previous layout's grid neighbourhood first and let the
+    /// bound-and-prune pass dispose of the rest of the grid against that
+    /// incumbent. The adopted plan is **identical** to a full sweep's
+    /// (seeding never changes the pruned sweep's result — tested); only
+    /// the work shrinks, >= 10x vs a cold sweep in the bench. A drifted
+    /// fingerprint always falls back to the unseeded (full) sweep.
+    pub incremental: bool,
 }
 
 impl Default for ReplanConfig {
@@ -70,6 +67,7 @@ impl Default for ReplanConfig {
             switch_threshold: 0.05,
             scale_down_deadband: 0.10,
             sweep_boundaries: false,
+            incremental: true,
         }
     }
 }
@@ -126,7 +124,8 @@ impl Replanner {
     /// an [`crate::workload::online::OnlineEstimator`] snapshot.
     pub fn replan(&mut self, input: &PlanInput) -> Result<ReplanOutcome, SizingError> {
         let fp = workload_fingerprint(&input.workload);
-        if fp != self.cache_fp {
+        let warm = fp == self.cache_fp;
+        if !warm {
             self.cache = CalibCache::new();
             self.cache_fp = fp;
         }
@@ -139,7 +138,17 @@ impl Replanner {
         // Option 2: cheapest candidate layout under the drifted input.
         let mut candidate = plan_spec_sweep_gamma_cached(input, &cur.spec, &self.cache);
         if self.cfg.sweep_boundaries {
-            if let Ok((swept, _)) = sweep_tiered_cached(input, k, &self.cache) {
+            // Bound-and-prune sweep (argmin bit-identical to the full
+            // sweep). Unchanged fingerprint + incremental: re-sweep only
+            // the previous layout's neighbourhood exactly and prune the
+            // rest of the grid against it (same plan, ~10x less work).
+            let swept = if self.cfg.incremental && warm {
+                let seeds = layout_neighborhood(input, &cur);
+                sweep_tiered_pruned_seeded(input, k, &self.cache, &seeds)
+            } else {
+                sweep_tiered_pruned(input, k, &self.cache)
+            };
+            if let Ok((swept, _)) = swept {
                 let better = match &candidate {
                     Ok(c) => swept.cost_yr < c.cost_yr - 1e-9,
                     Err(_) => true,
@@ -276,6 +285,33 @@ mod tests {
         let mut rp = seeded(1000.0, ReplanConfig::default());
         let out = rp.replan(&input(650.0)).unwrap();
         assert!(out.candidate_cost_yr <= out.held_cost_yr + 1e-6);
+    }
+
+    #[test]
+    fn incremental_replans_match_full_sweeps() {
+        // Incremental (neighbourhood-seeded) boundary sweeps must adopt
+        // the identical plan as full sweeps at every epoch — the seeds
+        // only move work, never the argmin.
+        let mk = |incremental| {
+            seeded(
+                1000.0,
+                ReplanConfig {
+                    sweep_boundaries: true,
+                    incremental,
+                    ..ReplanConfig::default()
+                },
+            )
+        };
+        let mut inc = mk(true);
+        let mut full = mk(false);
+        for lam in [1000.0, 1050.0, 940.0, 700.0, 1300.0] {
+            let a = inc.replan(&input(lam)).unwrap();
+            let b = full.replan(&input(lam)).unwrap();
+            assert_eq!(a.plan.cost_yr.to_bits(), b.plan.cost_yr.to_bits(), "{lam}");
+            assert_eq!(a.plan.boundaries(), b.plan.boundaries(), "{lam}");
+            assert_eq!(a.plan.gpu_counts(), b.plan.gpu_counts(), "{lam}");
+            assert_eq!(a.switched_layout, b.switched_layout, "{lam}");
+        }
     }
 
     #[test]

@@ -17,6 +17,17 @@
 //! cell wall times are tracked in `BENCH_planner.json`
 //! (`sizing_first_fill_ms` / `sizing_warm_ms`).
 //!
+//! On top of the memo, the bisection **warm-starts its bracket** from the
+//! last inversion with the same slot shape on this thread (the sweep's
+//! neighbouring cell): feasibility is monotone non-decreasing in the GPU
+//! count — W99 is monotone non-increasing above the stability point (the
+//! `w99_monotone_in_n_above_stability` test) and utilization strictly
+//! decreasing — so a probe at the hint either tightens the upper or the
+//! lower end of the bracket and the bisection still lands on exactly the
+//! minimal feasible count. Results are bit-identical with hints on, off,
+//! stale, or wrong (property-tested); only the probe count changes
+//! (`inversion_probes_{cold,warm}` in `BENCH_planner.json`).
+//!
 //! ## SLO-budget note (paper inconsistency)
 //!
 //! Taken literally, Eq. 8's budget `T_slo - T_prefill^(99) - t_iter` is
@@ -64,6 +75,27 @@ impl std::fmt::Display for SizingError {
 
 impl std::error::Error for SizingError {}
 
+thread_local! {
+    /// Last inversion result per slot shape on this thread — the bracket
+    /// warm-start for the next cell sized at the same `n_slots` (see the
+    /// module §Perf note). Purely an accelerator: results are identical
+    /// whatever this holds.
+    static WARM_HINTS: std::cell::RefCell<crate::util::hash::FxHashMap<u32, u64>> =
+        std::cell::RefCell::new(crate::util::hash::FxHashMap::default());
+    /// (feasibility probes, inversions) on this thread — bench telemetry.
+    static PROBE_STATS: std::cell::Cell<(u64, u64)> = const { std::cell::Cell::new((0, 0)) };
+}
+
+/// This thread's cumulative `(feasibility probes, inversions)` counters.
+pub fn sizing_probe_stats() -> (u64, u64) {
+    PROBE_STATS.with(|c| c.get())
+}
+
+/// Drop this thread's warm-start hints (benches/tests measure cold runs).
+pub fn clear_warm_hints() {
+    WARM_HINTS.with(|h| h.borrow_mut().clear());
+}
+
 /// Minimum GPU count for a pool (Eq. 11). Zero-traffic pools need no GPUs.
 pub fn min_gpus(
     lambda: f64,
@@ -93,18 +125,57 @@ pub fn min_gpus(
     let hi = (10.0 * a.ceil()).max(lo as f64 + 1.0) as u64;
 
     let feasible = |n: u64| -> bool {
+        PROBE_STATS.with(|c| {
+            let (p, i) = c.get();
+            c.set((p + 1, i));
+        });
         let p = PoolModel::new(lambda, n, *svc);
         p.utilization() <= rho_max && p.w99() <= budget
     };
+    PROBE_STATS.with(|c| {
+        let (p, i) = c.get();
+        c.set((p, i + 1));
+    });
 
+    let hint = WARM_HINTS.with(|h| h.borrow().get(&svc.n_slots).copied());
+    let result = min_feasible(lo, hi, hint, &feasible);
+    if let Ok(n) = result {
+        WARM_HINTS.with(|h| {
+            h.borrow_mut().insert(svc.n_slots, n);
+        });
+    }
+    result
+}
+
+/// Bisect for the minimal feasible count in `[lo, hi]`, optionally
+/// tightening the initial bracket at a warm-start `hint` (see the module
+/// §Perf note). Requires `feasible` monotone non-decreasing in `n`; the
+/// returned minimum — and the `SearchExhausted` contract at `hi` — are
+/// then independent of the hint.
+fn min_feasible(
+    lo: u64,
+    hi: u64,
+    hint: Option<u64>,
+    feasible: &impl Fn(u64) -> bool,
+) -> Result<u64, SizingError> {
     if feasible(lo) {
         return Ok(lo);
     }
-    if !feasible(hi) {
-        return Err(SizingError::SearchExhausted { hi });
+    let (mut l, mut r) = (lo, 0u64);
+    if let Some(h) = hint.filter(|&h| h > lo && h < hi) {
+        if feasible(h) {
+            r = h;
+        } else {
+            l = h;
+        }
+    }
+    if r == 0 {
+        if !feasible(hi) {
+            return Err(SizingError::SearchExhausted { hi });
+        }
+        r = hi;
     }
     // Invariant: !feasible(l), feasible(r).
-    let (mut l, mut r) = (lo, hi);
     while r - l > 1 {
         let m = l + (r - l) / 2;
         if feasible(m) {
@@ -208,6 +279,68 @@ mod tests {
             .map(|i| min_gpus(150.0 * i as f64, &s, 0.5, 0.85, false).unwrap())
             .collect();
         assert_eq!(cold, warm);
+    }
+
+    #[test]
+    fn warm_hints_never_change_the_inversion() {
+        // The bracket warm-start is an accelerator only: cold (hints
+        // cleared before every call), warm (hints left from the previous
+        // call), and stale (hints poisoned by interleaved foreign sizes)
+        // inversions must return the identical GPU count.
+        let s = svc(16);
+        let lambdas: Vec<f64> = (1..=12).map(|i| 130.0 * i as f64).collect();
+        let cold: Vec<u64> = lambdas
+            .iter()
+            .map(|&lam| {
+                clear_warm_hints();
+                min_gpus(lam, &s, 0.5, 0.85, false).unwrap()
+            })
+            .collect();
+        clear_warm_hints();
+        let warm: Vec<u64> = lambdas
+            .iter()
+            .map(|&lam| min_gpus(lam, &s, 0.5, 0.85, false).unwrap())
+            .collect();
+        assert_eq!(cold, warm);
+        // Stale hints: size something far away at the same slot shape
+        // between every probe.
+        let stale: Vec<u64> = lambdas
+            .iter()
+            .map(|&lam| {
+                let _ = min_gpus(7.0, &s, 0.5, 0.85, false).unwrap();
+                min_gpus(lam, &s, 0.5, 0.85, false).unwrap()
+            })
+            .collect();
+        assert_eq!(cold, stale);
+    }
+
+    #[test]
+    fn warm_hints_cut_probe_counts() {
+        let s = svc(16);
+        let lambdas: Vec<f64> = (1..=10).map(|i| 140.0 * i as f64).collect();
+        clear_warm_hints();
+        let (p0, _) = sizing_probe_stats();
+        for &lam in &lambdas {
+            clear_warm_hints();
+            min_gpus(lam, &s, 0.5, 0.85, false).unwrap();
+        }
+        let (p1, _) = sizing_probe_stats();
+        // Re-run the identical grid twice so every cell has a one-off
+        // neighbour hint at the same slot shape.
+        for &lam in &lambdas {
+            min_gpus(lam, &s, 0.5, 0.85, false).unwrap();
+        }
+        let (p2, _) = sizing_probe_stats();
+        for &lam in &lambdas {
+            min_gpus(lam, &s, 0.5, 0.85, false).unwrap();
+        }
+        let (p3, _) = sizing_probe_stats();
+        let cold = p1 - p0;
+        let warm = p3 - p2;
+        assert!(
+            warm <= cold,
+            "warm probes {warm} must not exceed cold probes {cold}"
+        );
     }
 
     #[test]

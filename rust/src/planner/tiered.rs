@@ -22,7 +22,7 @@ use crate::planner::sizing::{min_gpus, SizingError};
 use crate::planner::sweep::{
     calibrated, candidate_boundaries, par_map, CalibCache, Plan, PlanInput, PoolPlan,
 };
-use crate::queueing::service::ServiceStats;
+use crate::queueing::service::{MomentTable, ServiceStats};
 use crate::workload::cdf::LengthDist;
 
 /// A provisioned K-tier fleet: the generalized planner's output tuple.
@@ -104,6 +104,81 @@ pub fn plan_tiers(
     recalibrate: bool,
     cache: Option<&CalibCache>,
 ) -> Result<TieredPlan, SizingError> {
+    let layout = cell_layout(input, spec, gammas, recalibrate);
+
+    // Erlang-C inversion for one sized tier (shared by every branch so the
+    // K = 2 path stays call-for-call identical to the pre-refactor code).
+    // Each tier sizes against its own P99 TTFT target when the spec sets
+    // one; the `None` default inherits the fleet SLO, making global-SLO
+    // configs bit-identical to the pre-refactor planner.
+    let size = |lambda_i: f64, svc: ServiceStats, slo_s: f64| -> Result<PoolPlan, SizingError> {
+        Ok(PoolPlan {
+            n_gpus: min_gpus(
+                lambda_i,
+                &svc,
+                slo_s,
+                input.cfg.rho_max,
+                input.strict_slo,
+            )?,
+            lambda: lambda_i,
+            svc: Some(svc),
+        })
+    };
+
+    let k = spec.k();
+    let mut tiers = Vec::with_capacity(k);
+    let mut counts = Vec::with_capacity(k);
+    for (i, &(lambda_i, cut)) in layout.tiers.iter().enumerate() {
+        let t = &spec.tiers[i];
+        let tier_slo = t.slo_or(input.slo.p99_ttft_s);
+        let pool = match cut {
+            Some((lo, hi)) => {
+                let svc = calibrated(input, cache, lo, hi, t.n_max);
+                size(lambda_i, svc, tier_slo)?
+            }
+            None => PoolPlan::empty(),
+        };
+        counts.push(pool.n_gpus);
+        tiers.push(pool);
+    }
+
+    let rates: Vec<f64> = spec.tiers.iter().map(|t| t.cost_hr).collect();
+    Ok(TieredPlan {
+        spec: spec.clone(),
+        gammas: layout.eff,
+        nat_below: layout.nat_below,
+        betas: layout.betas,
+        gains: layout.gains,
+        cost_yr: fleet_cost_yr_tiered(&counts, &rates),
+        tiers,
+    })
+}
+
+/// The cheap (no-quadrature, no-Erlang) prefix of [`plan_tiers`]: clamped
+/// gammas, boundary shares, per-tier arrival rates and calibration cuts.
+/// One definition shared by the exact cell evaluation and the
+/// bound-and-prune cost bound, so the two can never disagree on a cell's
+/// traffic split or truncation cuts — the bound's soundness rests on it.
+pub(crate) struct CellLayout {
+    /// Effective per-boundary gammas (band clamped at the next boundary).
+    pub eff: Vec<f64>,
+    /// `F(B_i)` per boundary.
+    pub nat_below: Vec<f64>,
+    /// Borderline band fraction per boundary.
+    pub betas: Vec<f64>,
+    /// Compressed share moved down per boundary (`beta_i * p_c`).
+    pub gains: Vec<f64>,
+    /// Per tier: arrival rate and the calibration cut `(lo, hi]`;
+    /// `None` = the tier is left unprovisioned ([`PoolPlan::empty`]).
+    pub tiers: Vec<(f64, Option<(f64, f64)>)>,
+}
+
+pub(crate) fn cell_layout(
+    input: &PlanInput,
+    spec: &FleetSpec,
+    gammas: &[f64],
+    recalibrate: bool,
+) -> CellLayout {
     let k = spec.k();
     assert!(k >= 2, "plan_tiers needs at least 2 tiers");
     assert_eq!(gammas.len(), k - 1, "one gamma per boundary");
@@ -141,31 +216,9 @@ pub fn plan_tiers(
         gains.push(beta_i * p_c);
     }
 
-    // Erlang-C inversion for one sized tier (shared by every branch so the
-    // K = 2 path stays call-for-call identical to the pre-refactor code).
-    // Each tier sizes against its own P99 TTFT target when the spec sets
-    // one; the `None` default inherits the fleet SLO, making global-SLO
-    // configs bit-identical to the pre-refactor planner.
-    let size = |lambda_i: f64, svc: ServiceStats, slo_s: f64| -> Result<PoolPlan, SizingError> {
-        Ok(PoolPlan {
-            n_gpus: min_gpus(
-                lambda_i,
-                &svc,
-                slo_s,
-                input.cfg.rho_max,
-                input.strict_slo,
-            )?,
-            lambda: lambda_i,
-            svc: Some(svc),
-        })
-    };
-
     let mut tiers = Vec::with_capacity(k);
-    let mut counts = Vec::with_capacity(k);
     let mut lambda_used = 0.0;
     for i in 0..k {
-        let t = &spec.tiers[i];
-        let tier_slo = t.slo_or(input.slo.p99_ttft_s);
         let last = i + 1 == k;
         // Lower calibration cut: the post-compression residual above the
         // boundary below (§6 recalibration), or the raw boundary in the
@@ -183,14 +236,14 @@ pub fn plan_tiers(
         let lo_f = if i == 0 { 0.0 } else { nat_below[i - 1] };
         let loss = if i == 0 { 0.0 } else { gains[i - 1] };
 
-        let pool = if last {
+        if last {
             let lambda_i = input.lambda - lambda_used;
-            if lambda_i > input.lambda * 1e-9 && w.cdf.cdf(cut_prev) < 1.0 - 1e-12 {
-                let svc = calibrated(input, cache, cut_prev.max(min_t), max_t, t.n_max);
-                size(lambda_i, svc, tier_slo)?
+            let cut = if lambda_i > input.lambda * 1e-9 && w.cdf.cdf(cut_prev) < 1.0 - 1e-12 {
+                Some((cut_prev.max(min_t), max_t))
             } else {
-                PoolPlan::empty()
-            }
+                None
+            };
+            tiers.push((lambda_i, cut));
         } else {
             let nat = nat_below[i] - lo_f;
             let share = ((nat_below[i] - lo_f) + gains[i]) - loss;
@@ -198,14 +251,13 @@ pub fn plan_tiers(
             lambda_used += lambda_i;
             let b = boundaries[i] as f64;
             let hi = b.min(max_t);
-            if i == 0 {
+            let cut = if i == 0 {
                 // Bit-for-bit the pre-refactor short pool: calibrate from
                 // F restricted to [min, B] whenever it has natural mass.
                 if lambda_i > 0.0 && nat > 0.0 {
-                    let svc = calibrated(input, cache, min_t, hi, t.n_max);
-                    size(lambda_i, svc, tier_slo)?
+                    Some((min_t, hi))
                 } else {
-                    PoolPlan::empty()
+                    None
                 }
             } else if lambda_i > 0.0 {
                 // Middle tier: the widest-information calibration range
@@ -219,37 +271,32 @@ pub fn plan_tiers(
                 let has_mass = |lo: f64| lo < hi && w.cdf.cdf(lo) < w.cdf.cdf(hi) - 1e-12;
                 let lo_recal = cut_prev.max(min_t);
                 let lo_nat = (boundaries[i - 1] as f64).max(min_t);
-                let svc = if has_mass(lo_recal) {
-                    calibrated(input, cache, lo_recal, hi, t.n_max)
+                if has_mass(lo_recal) {
+                    Some((lo_recal, hi))
                 } else if has_mass(lo_nat) {
-                    calibrated(input, cache, lo_nat, hi, t.n_max)
+                    Some((lo_nat, hi))
                 } else if has_mass(min_t) {
-                    calibrated(input, cache, min_t, hi, t.n_max)
+                    Some((min_t, hi))
                 } else {
                     // lambda_i > 0 with no mass below B_i forces
                     // gains[i] > 0, so the band (B_i, gamma_i B_i] has
                     // mass by construction.
-                    calibrated(input, cache, b.max(min_t), (eff[i] * b).min(max_t), t.n_max)
-                };
-                size(lambda_i, svc, tier_slo)?
+                    Some((b.max(min_t), (eff[i] * b).min(max_t)))
+                }
             } else {
-                PoolPlan::empty()
-            }
-        };
-        counts.push(pool.n_gpus);
-        tiers.push(pool);
+                None
+            };
+            tiers.push((lambda_i, cut));
+        }
     }
 
-    let rates: Vec<f64> = spec.tiers.iter().map(|t| t.cost_hr).collect();
-    Ok(TieredPlan {
-        spec: spec.clone(),
-        gammas: eff,
+    CellLayout {
+        eff,
         nat_below,
         betas,
         gains,
-        cost_yr: fleet_cost_yr_tiered(&counts, &rates),
         tiers,
-    })
+    }
 }
 
 /// One evaluated cell of the K-tier sweep grid.
@@ -366,6 +413,315 @@ fn sweep_tiered_impl(
     }
     let best = best.ok_or(SizingError::NoFeasibleTiering { k })?;
     Ok((best, grid))
+}
+
+/// Telemetry of one bound-and-prune sweep ([`sweep_tiered_pruned`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PruneStats {
+    /// Grid cells in the sweep.
+    pub cells: usize,
+    /// Cells skipped because their closed-form cost lower bound already
+    /// exceeded an exactly-evaluated incumbent.
+    pub pruned: usize,
+    /// Cells evaluated exactly (quadrature + Erlang inversion).
+    pub evaluated: usize,
+    /// Evaluated cells that turned out infeasible.
+    pub infeasible: usize,
+    /// Incumbent-seeding evaluations (caller seeds + cheapest-bound cell).
+    pub seeded: usize,
+}
+
+impl PruneStats {
+    /// Fraction of grid cells pruned (the bench's headline number).
+    pub fn pruned_frac(&self) -> f64 {
+        if self.cells == 0 {
+            0.0
+        } else {
+            self.pruned as f64 / self.cells as f64
+        }
+    }
+}
+
+/// A pruned cell must be worse than the incumbent by at least this much
+/// ($/yr) — dwarfs the selection rule's 1e-9 tie band (so pruning can
+/// never flip a tie) while being far below one GPU-hour.
+const PRUNE_MARGIN: f64 = 1.0;
+
+/// Strided parallel map: worker `w` takes items `w, w + W, w + 2W, ...`.
+/// Unlike [`par_map`]'s contiguous chunks this interleaves, which matters
+/// for the pruned sweep: the few cells that survive the bound cluster
+/// around the optimum in grid order, and contiguous sharding would hand
+/// the whole expensive cluster to one worker. Results come back in input
+/// order. Callers whose `f` races on shared state (the pruned sweep's
+/// incumbent atomic) own their own schedule-independence argument — there
+/// it is the prune-margin proof: *which* cells get pruned varies with the
+/// schedule; the selected plan provably cannot.
+fn par_map_strided<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    let workers = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items.len().div_ceil(4))
+        .min(16)
+        .max(1);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let fref = &f;
+    let shards: Vec<Vec<R>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    items.iter().skip(w).step_by(workers).map(fref).collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("sweep worker panicked"))
+            .collect()
+    });
+    let mut iters: Vec<_> = shards.into_iter().map(|s| s.into_iter()).collect();
+    (0..items.len())
+        .map(|i| iters[i % workers].next().expect("shard underflow"))
+        .collect()
+}
+
+/// Closed-form lower bound on one cell's annual cost: per tier, the
+/// stability bound `n_i >= ceil(a_i / rho_max)` priced at the tier rates —
+/// no Erlang-C, no quadrature. `a_i` uses the moment table's
+/// error-adjusted `E[S]` lower bound, so the result provably bounds the
+/// quadrature-evaluated cost from below (the SLO constraint only ever
+/// *adds* GPUs, and infeasible cells are skipped by the sweep anyway).
+/// `None` when a cut cannot be bounded (the cell is then evaluated).
+fn cell_cost_lb(
+    input: &PlanInput,
+    spec: &FleetSpec,
+    gammas: &[f64],
+    table: &MomentTable,
+    len_points: usize,
+) -> Option<f64> {
+    let layout = cell_layout(input, spec, gammas, true);
+    let mut counts = Vec::with_capacity(spec.k());
+    for (i, &(lambda_i, cut)) in layout.tiers.iter().enumerate() {
+        let n_lb = match cut {
+            Some((lo, hi)) if lambda_i > 0.0 => {
+                let m = table.cut_moments(lo, hi, len_points)?;
+                // Iterations >= 2 always (one prefill chunk + one decode).
+                let e_iter_lb = (m.e_iter - m.err_iter).max(1.0);
+                let n_slots = spec.tiers[i].n_max;
+                let e_s_lb = e_iter_lb * input.gpu.t_iter_s(n_slots);
+                let a_lb = lambda_i * e_s_lb / n_slots as f64;
+                (a_lb / input.cfg.rho_max).ceil().max(1.0) as u64
+            }
+            _ => 0,
+        };
+        counts.push(n_lb);
+    }
+    let rates: Vec<f64> = spec.tiers.iter().map(|t| t.cost_hr).collect();
+    Some(fleet_cost_yr_tiered(&counts, &rates))
+}
+
+/// Bound-and-prune K-tier sweep: **the same argmin as [`sweep_tiered`],
+/// bit-identical** (boundaries, gammas, per-tier GPU counts, cost —
+/// property-tested on all three traces at K = 2, 3, 4), at a fraction of
+/// the work. A cheap pass computes every cell's closed-form cost lower
+/// bound from the shared [`MomentTable`]; cells whose bound exceeds an
+/// exactly-evaluated incumbent by [`PRUNE_MARGIN`] are skipped — they can
+/// neither win nor influence the grid-order tie-break (the margin dwarfs
+/// the 1e-9 tie band). Surviving cells are evaluated through the verbatim
+/// [`plan_tiers`] path against the shared [`CalibCache`], and the final
+/// selection replays `sweep_tiered`'s sequential rule in grid order.
+/// Returns no cost grid — use [`sweep_tiered`] when the full grid matters
+/// (Table 8 reporting / the CLI sweep printout).
+pub fn sweep_tiered_pruned(
+    input: &PlanInput,
+    k: usize,
+    cache: &CalibCache,
+) -> Result<(TieredPlan, PruneStats), SizingError> {
+    sweep_tiered_pruned_seeded(input, k, cache, &[])
+}
+
+/// [`sweep_tiered_pruned`] with caller-provided incumbent seeds — cells
+/// evaluated exactly *before* the pruning pass. The online
+/// [`crate::planner::replan::Replanner`] seeds the neighbourhood of its
+/// previous layout: under an unchanged workload fingerprint the optimum
+/// rarely leaves it, so the incumbent is near-optimal immediately and the
+/// bound prunes almost the whole grid. Seeds never change the result
+/// (they only tighten the incumbent earlier).
+pub fn sweep_tiered_pruned_seeded(
+    input: &PlanInput,
+    k: usize,
+    cache: &CalibCache,
+    seeds: &[(Vec<u32>, f64)],
+) -> Result<(TieredPlan, PruneStats), SizingError> {
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    assert!(k >= 2, "sweep_tiered_pruned needs at least 2 tiers");
+    let cands = candidate_boundaries(input);
+    let combos = boundary_combos(&cands, k - 1);
+    if combos.is_empty() {
+        return Err(SizingError::NoFeasibleTiering { k });
+    }
+    let mut cells: Vec<(usize, &[u32], f64)> =
+        Vec::with_capacity(combos.len() * input.cfg.gammas.len());
+    for combo in &combos {
+        for &gamma in &input.cfg.gammas {
+            cells.push((cells.len(), combo.as_slice(), gamma));
+        }
+    }
+
+    let table = MomentTable::for_workload(&input.workload, input.gpu.chunk);
+    let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
+    let lbs: Vec<Option<f64>> = par_map_strided(&cells, |&(_, combo, gamma)| {
+        let spec = input.gpu.fleet_spec(combo);
+        cell_cost_lb(input, &spec, &vec![gamma; k - 1], &table, len_points)
+    });
+
+    let eval = |combo: &[u32], gamma: f64| -> Result<TieredPlan, SizingError> {
+        let spec = input.gpu.fleet_spec(combo);
+        plan_tiers(input, &spec, &vec![gamma; k - 1], true, Some(cache))
+    };
+
+    // Incumbent: caller seeds plus cheapest-lower-bound cells until one
+    // evaluates feasibly. Exact costs only — the prune proof needs the
+    // incumbent to be an achieved cell cost, never a bound. Positive f64
+    // bit patterns order like the values, so an atomic u64 min suffices.
+    // Seed results are kept by cell index so the main pass reuses them
+    // instead of re-running the sizing inversions.
+    let best_bits = AtomicU64::new(f64::INFINITY.to_bits());
+    let mut seed_plans: Vec<Option<TieredPlan>> = vec![None; cells.len()];
+    let mut seeded = 0usize;
+    let mut seed_cell = |i: usize, seeded: &mut usize| -> bool {
+        if seed_plans[i].is_some() {
+            return true;
+        }
+        let (_, combo, gamma) = cells[i];
+        if let Ok(p) = eval(combo, gamma) {
+            best_bits.fetch_min(p.cost_yr.to_bits(), Ordering::Relaxed);
+            seed_plans[i] = Some(p);
+            *seeded += 1;
+            return true;
+        }
+        false
+    };
+    for (combo, gamma) in seeds {
+        // Only grid cells may seed: an off-grid incumbent cheaper than
+        // every grid cell would let the bound prune the real winner (and
+        // a wrong-arity combo would not even size). Foreign seeds are
+        // ignored, which is merely slower.
+        let idx = cells
+            .iter()
+            .find(|&&(_, c, g)| c == combo.as_slice() && g.to_bits() == gamma.to_bits());
+        if let Some(&(i, _, _)) = idx {
+            seed_cell(i, &mut seeded);
+        }
+    }
+    let mut by_lb: Vec<usize> = (0..cells.len()).filter(|&i| lbs[i].is_some()).collect();
+    by_lb.sort_by(|&a, &b| lbs[a].partial_cmp(&lbs[b]).expect("finite bounds"));
+    for &i in by_lb.iter().take(8) {
+        if seed_cell(i, &mut seeded) {
+            break;
+        }
+    }
+
+    let pruned_n = AtomicUsize::new(0);
+    let infeasible_n = AtomicUsize::new(0);
+    let plans: Vec<Option<TieredPlan>> = par_map_strided(&cells, |&(i, combo, gamma)| {
+        if let Some(p) = &seed_plans[i] {
+            return Some(p.clone());
+        }
+        if let Some(lb) = lbs[i] {
+            let incumbent = f64::from_bits(best_bits.load(Ordering::Relaxed));
+            if lb >= incumbent + PRUNE_MARGIN {
+                pruned_n.fetch_add(1, Ordering::Relaxed);
+                return None;
+            }
+        }
+        match eval(combo, gamma) {
+            Ok(p) => {
+                best_bits.fetch_min(p.cost_yr.to_bits(), Ordering::Relaxed);
+                Some(p)
+            }
+            Err(_) => {
+                infeasible_n.fetch_add(1, Ordering::Relaxed);
+                None
+            }
+        }
+    });
+
+    // Verbatim `sweep_tiered` selection over the evaluated cells in grid
+    // order: first strictly-better (> 1e-9) wins, ties break earliest.
+    let mut best: Option<TieredPlan> = None;
+    let mut evaluated = 0usize;
+    for plan in plans.into_iter().flatten() {
+        evaluated += 1;
+        let better = match &best {
+            None => true,
+            Some(b) => plan.cost_yr < b.cost_yr - 1e-9,
+        };
+        if better {
+            best = Some(plan);
+        }
+    }
+    let stats = PruneStats {
+        cells: cells.len(),
+        pruned: pruned_n.load(Ordering::Relaxed),
+        evaluated,
+        infeasible: infeasible_n.load(Ordering::Relaxed),
+        seeded,
+    };
+    let best = best.ok_or(SizingError::NoFeasibleTiering { k })?;
+    Ok((best, stats))
+}
+
+/// The sweep-grid neighbourhood of an adopted layout: the layout's own
+/// boundary combo crossed with the full gamma grid, plus every one-grid-
+/// step single-boundary perturbation at the nearest grid gamma. The
+/// replanner evaluates these as incumbent seeds on unchanged-fingerprint
+/// epochs (see [`sweep_tiered_pruned_seeded`]). Empty when the layout's
+/// boundaries are no longer inside the candidate grid (drift changed the
+/// CDF support) — the sweep then runs unseeded, which is merely slower.
+pub fn layout_neighborhood(input: &PlanInput, plan: &TieredPlan) -> Vec<(Vec<u32>, f64)> {
+    let cands = candidate_boundaries(input);
+    let bounds = plan.boundaries();
+    let pos: Option<Vec<usize>> = bounds
+        .iter()
+        .map(|b| cands.iter().position(|c| c == b))
+        .collect();
+    let Some(pos) = pos else {
+        return Vec::new();
+    };
+    let mut seeds: Vec<(Vec<u32>, f64)> = Vec::new();
+    for &g in &input.cfg.gammas {
+        seeds.push((bounds.clone(), g));
+    }
+    let g0 = plan.gammas.first().copied().unwrap_or(1.0);
+    let nearest = input
+        .cfg
+        .gammas
+        .iter()
+        .copied()
+        .min_by(|a, b| {
+            (a - g0)
+                .abs()
+                .partial_cmp(&(b - g0).abs())
+                .expect("finite gammas")
+        })
+        .unwrap_or(1.0);
+    for (j, &p) in pos.iter().enumerate() {
+        for np in [p.wrapping_sub(1), p + 1] {
+            if np >= cands.len() {
+                continue;
+            }
+            let mut nb = bounds.clone();
+            nb[j] = cands[np];
+            let ascending = nb.windows(2).all(|w| w[1] > w[0]);
+            if ascending && !seeds.iter().any(|(s, g)| s == &nb && *g == nearest) {
+                seeds.push((nb, nearest));
+            }
+        }
+    }
+    seeds
 }
 
 /// Plan a fleet at a fixed [`FleetSpec`], sweeping the shared gamma grid
@@ -529,6 +885,64 @@ mod tests {
         let (c, gc) = sweep_tiered_cached(&input, 3, &cache).unwrap();
         assert_eq!(ga, gc);
         assert_eq!(a.gpu_counts(), c.gpu_counts());
+    }
+
+    #[test]
+    fn pruned_sweep_matches_full_sweep_bitwise() {
+        // The acceptance identity (also covered across all traces and
+        // K = 2..4 in `tests/planner_fastpath.rs`): bound-and-prune must
+        // select the exact cell, counts and cost of the full sweep.
+        let input = azure_input();
+        for k in [2usize, 3] {
+            let (full, _) = sweep_tiered(&input, k).unwrap();
+            let (fast, stats) = sweep_tiered_pruned(&input, k, &CalibCache::new()).unwrap();
+            assert_eq!(fast.cost_yr.to_bits(), full.cost_yr.to_bits(), "K={k}");
+            assert_eq!(fast.boundaries(), full.boundaries(), "K={k}");
+            assert_eq!(fast.gpu_counts(), full.gpu_counts(), "K={k}");
+            for (a, b) in fast.gammas.iter().zip(&full.gammas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "K={k}");
+            }
+            assert_eq!(stats.cells, stats.pruned + stats.evaluated + stats.infeasible);
+            assert!(stats.pruned > 0, "K={k}: bound never fired");
+        }
+    }
+
+    #[test]
+    fn cost_lower_bound_never_exceeds_exact_cost() {
+        // Soundness of the prune bound on a spread of evaluated cells.
+        let input = azure_input();
+        let table =
+            crate::queueing::service::MomentTable::for_workload(&input.workload, input.gpu.chunk);
+        let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
+        for b in [1024u32, 2048, 4096, 8192] {
+            for gamma in [1.0, 1.4, 2.0] {
+                let spec = input.gpu.fleet_spec(&[b]);
+                let Ok(plan) = plan_tiers(&input, &spec, &[gamma], true, None) else {
+                    continue;
+                };
+                let lb = cell_cost_lb(&input, &spec, &[gamma], &table, len_points)
+                    .expect("boundable cell");
+                assert!(
+                    lb <= plan.cost_yr + 1e-6,
+                    "B={b} gamma={gamma}: lb {lb} > cost {}",
+                    plan.cost_yr
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn seeded_pruned_sweep_is_seed_invariant() {
+        let input = azure_input();
+        let cache = CalibCache::new();
+        let (plain, _) = sweep_tiered_pruned(&input, 3, &cache).unwrap();
+        let seeds = layout_neighborhood(&input, &plain);
+        assert!(!seeds.is_empty());
+        let (seeded, stats) = sweep_tiered_pruned_seeded(&input, 3, &cache, &seeds).unwrap();
+        assert_eq!(seeded.cost_yr.to_bits(), plain.cost_yr.to_bits());
+        assert_eq!(seeded.boundaries(), plain.boundaries());
+        assert_eq!(seeded.gpu_counts(), plain.gpu_counts());
+        assert!(stats.seeded > seeds.len() / 2, "seeds must actually evaluate");
     }
 
     #[test]

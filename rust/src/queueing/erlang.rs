@@ -15,6 +15,14 @@
 //! The memo is thread-local — the scoped sweep workers never contend —
 //! and returns the identical f64, so every planner output is
 //! bit-identical with or without it.
+//!
+//! Two further layers keep most evaluations from happening at all: the
+//! inversion's bracket warm-start (`planner::sizing`) skips the expensive
+//! low-utilization `feasible(hi)` probe — at `rho ~ 0.1` the recurrence
+//! decays slowly and a single tail walk costs the most — and the sweep's
+//! bound-and-prune pass (`planner::tiered::sweep_tiered_pruned`) skips
+//! whole cells with a closed-form stability bound that needs no Erlang-C
+//! evaluation whatsoever. Neither changes a returned value.
 
 use std::cell::RefCell;
 

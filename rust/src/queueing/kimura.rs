@@ -14,7 +14,10 @@ use crate::queueing::erlang::erlang_c_cached;
 /// per-server rate `mu`, arrival rate `lambda`, and service-time SCV `cs2`.
 /// `p` is the tail mass (0.01 for P99). Erlang-C goes through the
 /// thread-local memo (§Perf: the sizing inversion revisits cells) —
-/// bit-identical to the direct recurrence.
+/// bit-identical to the direct recurrence. W99 is monotone non-increasing
+/// in `c` above the stability point (tested below and in
+/// `planner::sizing`) — the property that makes both the sizing bisection
+/// and its warm-started bracket exact.
 pub fn w_quantile(c: u64, mu: f64, lambda: f64, cs2: f64, p: f64) -> f64 {
     assert!(mu > 0.0 && lambda >= 0.0 && p > 0.0 && p < 1.0);
     let capacity = c as f64 * mu;

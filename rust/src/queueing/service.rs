@@ -6,11 +6,15 @@
 //! `t_iter = W + H * n_max` — all `n_max` slots advance together, so the
 //! iteration latency is evaluated at the configured slot count (§3.1).
 
+use std::sync::{Arc, Mutex, OnceLock};
+
 use crate::config::GpuProfile;
+use crate::util::hash::FxHashMap;
 use crate::util::rng::Rng;
 use crate::util::stats::{Samples, Welford};
-use crate::workload::cdf::LengthDist;
+use crate::workload::cdf::{AnchoredCdf, LengthDist};
 use crate::workload::request::OutputModel;
+use crate::workload::traces::Workload;
 
 /// Number of slot iterations a request occupies (Eq. 4's parenthesised term).
 pub fn slot_iterations(l_in: u32, l_out: u32, chunk: u32) -> u64 {
@@ -108,12 +112,48 @@ pub fn probit(p: f64) -> f64 {
     }
 }
 
-/// Deterministic quadrature calibration: the planner's fast path
+/// The lognormal-jitter factors the quadrature calibration enumerates —
+/// midpoint quantiles of the output model's jitter distribution. Shared by
+/// [`calibrate_quadrature`] and the [`MomentTable`] so both integrate the
+/// identical jitter grid.
+pub fn jitter_grid(output: &OutputModel, jitter_points: usize) -> Vec<f64> {
+    assert!(jitter_points >= 1);
+    (0..jitter_points)
+        .map(|j| {
+            if output.sigma == 0.0 || jitter_points == 1 {
+                1.0
+            } else {
+                let q = (j as f64 + 0.5) / jitter_points as f64;
+                (output.sigma * probit(q)).exp()
+            }
+        })
+        .collect()
+}
+
+/// The deterministic output split of one integerized request: given a
+/// (rounded, >= 2) total budget `l_total` and a jitter factor, the exact
+/// `(l_in, l_out)` the calibration uses — the single definition shared by
+/// the quadrature loop and the moment tables (bit-for-bit: the quadrature
+/// refactor onto this helper changes no float operation).
+#[inline]
+pub fn split_request(l_total: f64, jit: f64, output: &OutputModel) -> (u32, u32) {
+    let out = (output.frac * l_total * jit).round();
+    let l_out = (out as u32)
+        .clamp(output.min_tokens, output.max_tokens)
+        .min((l_total * 0.9) as u32)
+        .max(1);
+    let l_in = (l_total as u32).saturating_sub(l_out).max(1);
+    (l_in, l_out)
+}
+
+/// Deterministic quadrature calibration: the planner's exact path
 /// (§Perf). Replaces Monte-Carlo sampling with a midpoint rule over the
 /// length distribution's quantile function crossed with a small grid of
 /// lognormal-jitter quantiles for the output model. ~100x fewer
 /// distribution evaluations than the 20k-sample MC at matching accuracy
 /// (cross-validated in tests), and exactly reproducible with no seed.
+/// The [`MomentTable`] answers the same integral in O(log n) per cut with
+/// a provable error bound — this quadrature stays the equivalence oracle.
 pub fn calibrate_quadrature<D: LengthDist>(
     dist: &D,
     output: &OutputModel,
@@ -125,16 +165,7 @@ pub fn calibrate_quadrature<D: LengthDist>(
     assert!(len_points >= 16 && jitter_points >= 1);
     let t_iter = g.t_iter_s(n_slots);
     // Precompute jitter factors at midpoint quantiles.
-    let jitters: Vec<f64> = (0..jitter_points)
-        .map(|j| {
-            if output.sigma == 0.0 || jitter_points == 1 {
-                1.0
-            } else {
-                let q = (j as f64 + 0.5) / jitter_points as f64;
-                (output.sigma * probit(q)).exp()
-            }
-        })
-        .collect();
+    let jitters = jitter_grid(output, jitter_points);
 
     let mut w = Welford::new();
     let mut prefill = Samples::with_capacity(len_points * jitter_points);
@@ -142,12 +173,7 @@ pub fn calibrate_quadrature<D: LengthDist>(
         let q = (i as f64 + 0.5) / len_points as f64;
         let l_total = dist.quantile(q).round().max(2.0);
         for &jit in &jitters {
-            let out = (output.frac * l_total * jit).round();
-            let l_out = (out as u32)
-                .clamp(output.min_tokens, output.max_tokens)
-                .min((l_total * 0.9) as u32)
-                .max(1);
-            let l_in = (l_total as u32).saturating_sub(l_out).max(1);
+            let (l_in, l_out) = split_request(l_total, jit, output);
             w.push(slot_iterations(l_in, l_out, g.chunk) as f64 * t_iter);
             prefill.push(prefill_time_s(l_in, g, n_slots));
         }
@@ -195,10 +221,285 @@ pub fn calibrate<D: LengthDist>(
     }
 }
 
+/// Restricted service-time moments of one truncation cut, as served by a
+/// [`MomentTable`] — the exact integerized integral plus a *provable*
+/// bound on how far the `len_points`-point midpoint quadrature can sit
+/// from it (the bound the planner's bound-and-prune sweep leans on).
+#[derive(Clone, Copy, Debug)]
+pub struct CutMoments {
+    /// Parent-measure mass `F(hi) - F(lo)` of the cut.
+    pub mass: f64,
+    /// Exact `E[iterations | cut]` over the integerized distribution —
+    /// the `len_points -> inf` limit of [`calibrate_quadrature`]'s mean
+    /// (service time is `iterations * t_iter`, so `E[S] = e_iter * t_iter`).
+    pub e_iter: f64,
+    /// Exact `E[iterations^2 | cut]`.
+    pub e_iter2: f64,
+    /// Bound on `|quadrature_mean - e_iter|` at the given resolution:
+    /// the midpoint rule over a (near-)monotone step function is within
+    /// `(g_max - g_min) / N` of the integral; inflated 1.5x plus two
+    /// absolute iterations for the rare non-monotone rounding wiggles and
+    /// the Welford accumulation error.
+    pub err_iter: f64,
+}
+
+/// Precomputed moment tables over the integerized length distribution:
+/// one pass over the [`AnchoredCdf`] builds prefix sums of
+/// `mass(v) * E_jitter[iterations(v)]` (and squared) at every integer
+/// token value, so the restricted moments of **any** truncation cut
+/// `(lo, hi]` are two prefix lookups plus O(1) partial-bucket edge
+/// corrections — O(log n) CDF evaluations per query instead of a fresh
+/// `len_points x jitter_points` quadrature (§Perf; Token-Budget-Aware
+/// Pool Routing's budget-table formulation).
+///
+/// Exactness contract: the quadrature samples `round(Q(q)).max(2)` on a
+/// uniform midpoint grid of the cut's quantile space, so as the grid is
+/// refined it converges to exactly the integerized expectation this table
+/// computes; [`CutMoments::err_iter`] bounds the gap at finite resolution.
+/// The planner's *evaluated* cells keep the quadrature (bit-compatibility
+/// with the pre-refactor oracles); the table powers the provably-safe
+/// cost lower bounds of `planner::tiered::sweep_tiered_pruned` and the
+/// opt-in `CellStatsMode::MomentTable` approximation.
+#[derive(Clone, Debug)]
+pub struct MomentTable {
+    cdf: AnchoredCdf,
+    output: OutputModel,
+    chunk: u32,
+    /// Smallest / largest integer token value with table mass.
+    v0: u32,
+    v1: u32,
+    /// `cum_w1[j]` = sum over values `v0..=v0+j` of `mass(v) * gbar(v)`
+    /// where `mass(v)` is the parent measure rounding to `v` (the lowest
+    /// bucket absorbs everything below, mirroring the `.max(2.0)` clamp)
+    /// and `gbar` the jitter-averaged iteration count.
+    cum_w1: Vec<f64>,
+    /// Same, with `gbar2` (jitter-averaged squared iterations).
+    cum_w2: Vec<f64>,
+    jitters: Vec<f64>,
+}
+
+impl MomentTable {
+    /// One-time table build: O(support x jitter_points). Use
+    /// [`MomentTable::for_workload`] to share builds process-wide.
+    pub fn build(cdf: &AnchoredCdf, output: &OutputModel, chunk: u32) -> MomentTable {
+        let jitters = jitter_grid(output, 8);
+        let v0 = (cdf.min_tokens().round().max(2.0)) as u32;
+        let v1 = (cdf.max_tokens().round()).max(v0 as f64) as u32;
+        let len = (v1 - v0 + 1) as usize;
+        let mut cum_w1 = Vec::with_capacity(len);
+        let mut cum_w2 = Vec::with_capacity(len);
+        let (mut acc1, mut acc2) = (0.0f64, 0.0f64);
+        let mut f_prev = 0.0f64; // F below the lowest bucket = 0
+        for v in v0..=v1 {
+            let f_hi = if v == v1 { 1.0 } else { cdf.cdf(v as f64 + 0.5) };
+            let mass = (f_hi - f_prev).max(0.0);
+            if mass > 0.0 {
+                let (g1, g2) = gbar(v as f64, &jitters, output, chunk);
+                acc1 += mass * g1;
+                acc2 += mass * g2;
+            }
+            cum_w1.push(acc1);
+            cum_w2.push(acc2);
+            f_prev = f_hi;
+        }
+        MomentTable {
+            cdf: cdf.clone(),
+            output: *output,
+            chunk,
+            v0,
+            v1,
+            cum_w1,
+            cum_w2,
+            jitters,
+        }
+    }
+
+    /// Process-wide shared table for a workload (keyed by the workload's
+    /// calibration fingerprint and the chunk size; bounded registry).
+    pub fn for_workload(w: &Workload, chunk: u32) -> Arc<MomentTable> {
+        const TABLE_CACHE_CAP: usize = 16;
+        static TABLES: OnceLock<Mutex<FxHashMap<u64, Arc<MomentTable>>>> = OnceLock::new();
+        let key = w
+            .fingerprint()
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(chunk as u64);
+        let tables = TABLES.get_or_init(|| Mutex::new(FxHashMap::default()));
+        if let Some(t) = tables.lock().expect("table registry poisoned").get(&key) {
+            return t.clone();
+        }
+        // Build outside the lock (builds are ~ms); a racing duplicate
+        // build inserts an identical table and the first insert wins.
+        let built = Arc::new(MomentTable::build(&w.cdf, &w.output, chunk));
+        let mut m = tables.lock().expect("table registry poisoned");
+        if m.len() >= TABLE_CACHE_CAP {
+            // Drifting online CDF snapshots mint fresh fingerprints every
+            // epoch; clearing wholesale bounds the registry like the
+            // Erlang memo does.
+            m.clear();
+        }
+        m.entry(key).or_insert(built).clone()
+    }
+
+    fn idx(&self, v: u32) -> usize {
+        (v - self.v0) as usize
+    }
+
+    /// Jitter-averaged `(iterations, iterations^2)` at one integer length.
+    fn gbar_at(&self, v: u32) -> (f64, f64) {
+        gbar(v as f64, &self.jitters, &self.output, self.chunk)
+    }
+
+    /// Restricted moments over the cut `(lo, hi]` at the quadrature
+    /// resolution `len_points` (only [`CutMoments::err_iter`] depends on
+    /// it). `None` when the cut carries no parent mass.
+    pub fn cut_moments(&self, lo: f64, hi: f64, len_points: usize) -> Option<CutMoments> {
+        assert!(hi > lo && len_points >= 16);
+        let f_lo = self.cdf.cdf(lo);
+        let f_hi = self.cdf.cdf(hi);
+        let mass = f_hi - f_lo;
+        if mass <= 0.0 {
+            return None;
+        }
+        // Bucket of a value x is round(x) (clamped into [v0, v1]); the
+        // edge buckets are partially covered by the cut, every interior
+        // bucket fully — and `round(lo) - 0.5 <= lo`, so nothing in the
+        // cut rounds below `va` (resp. above `vb`).
+        let va = (lo.round().max(self.v0 as f64)) as u32;
+        let vb = (hi.round().clamp(self.v0 as f64, self.v1 as f64)) as u32;
+        let (ga1, ga2) = self.gbar_at(va);
+        let (s1, s2) = if va >= vb {
+            (mass * ga1, mass * ga2)
+        } else {
+            let (gb1, gb2) = self.gbar_at(vb);
+            let m_lo = (self.cdf.cdf((va as f64 + 0.5).min(hi)) - f_lo).max(0.0);
+            let m_hi = (f_hi - self.cdf.cdf((vb as f64 - 0.5).max(lo))).max(0.0);
+            let (i1, i2) = if vb > va + 1 {
+                (
+                    self.cum_w1[self.idx(vb - 1)] - self.cum_w1[self.idx(va)],
+                    self.cum_w2[self.idx(vb - 1)] - self.cum_w2[self.idx(va)],
+                )
+            } else {
+                (0.0, 0.0)
+            };
+            (m_lo * ga1 + i1 + m_hi * gb1, m_lo * ga2 + i2 + m_hi * gb2)
+        };
+        let e_iter = s1 / mass;
+        let e_iter2 = s2 / mass;
+        // Midpoint-rule gap bound for a monotone step function, inflated
+        // for the rare +-1 rounding wiggles (`split_request` keeps l_in
+        // and l_out non-decreasing in l_total for jitter factors <= 1 and
+        // under the 0.9 / max_tokens clamps beyond) and for the
+        // quadrature's sequential Welford accumulation.
+        let span = if va >= vb {
+            0.0
+        } else {
+            (self.gbar_at(vb).0 - ga1).max(0.0)
+        };
+        // Midpoint-rule term plus a float-cancellation term: the prefix
+        // difference loses absolute precision that `/ mass` amplifies on
+        // thin cuts, so thin cuts get a proportionally wider bound.
+        let err_iter = (span * 1.5 + 2.0) / len_points as f64
+            + (e_iter.abs() + 1.0) * 1e-9 / mass.max(1e-12);
+        Some(CutMoments {
+            mass,
+            e_iter,
+            e_iter2,
+            err_iter,
+        })
+    }
+
+    /// P99 prefill chunk count over the cut: the smallest chunk count `m`
+    /// whose restricted probability reaches 0.99, assuming `l_in` is
+    /// non-decreasing in the total budget per jitter (see
+    /// [`split_request`]). Approximate at bucket granularity — used only
+    /// by the opt-in table-stats mode, never by the exact sweep path.
+    fn p99_prefill_chunks(&self, lo: f64, hi: f64) -> Option<f64> {
+        let f_lo = self.cdf.cdf(lo);
+        let f_hi = self.cdf.cdf(hi);
+        let mass = f_hi - f_lo;
+        if mass <= 0.0 {
+            return None;
+        }
+        let va = (lo.round().max(self.v0 as f64)) as u32;
+        let vb = (hi.round().clamp(self.v0 as f64, self.v1 as f64)) as u32;
+        // P[chunks <= m | cut], averaged over the jitter grid
+        // (`ceil(l_in / chunk) <= m` iff `l_in <= m * chunk`).
+        let p_le = |m: u64| -> f64 {
+            let budget = m * self.chunk as u64;
+            let mut acc = 0.0;
+            for &jit in &self.jitters {
+                // Largest v in [va, vb] with l_in(v, jit) <= budget.
+                let (l_in_lo, _) = split_request(va as f64, jit, &self.output);
+                if l_in_lo as u64 > budget {
+                    continue;
+                }
+                let (mut l, mut r) = (va, vb);
+                while l < r {
+                    let mid = l + (r - l).div_ceil(2);
+                    let (l_in, _) = split_request(mid as f64, jit, &self.output);
+                    if l_in as u64 <= budget {
+                        l = mid;
+                    } else {
+                        r = mid - 1;
+                    }
+                }
+                let cover = (self.cdf.cdf((l as f64 + 0.5).min(hi)) - f_lo).max(0.0);
+                acc += (cover / mass).min(1.0);
+            }
+            acc / self.jitters.len() as f64
+        };
+        let (mut l, mut r) = (1u64, (self.v1 as u64).div_ceil(self.chunk as u64).max(1));
+        if p_le(r) < 0.99 {
+            return Some(r as f64);
+        }
+        while l < r {
+            let mid = l + (r - l) / 2;
+            if p_le(mid) >= 0.99 {
+                r = mid;
+            } else {
+                l = mid + 1;
+            }
+        }
+        Some(l as f64)
+    }
+
+    /// Approximate calibrated stats for a cut — the `CellStatsMode::
+    /// MomentTable` path. `E[S]`/SCV are the exact integerized integrals
+    /// (within [`CutMoments::err_iter`] of the quadrature); the P99
+    /// prefill is quantized to whole chunks. `None` on a massless cut.
+    pub fn stats(&self, lo: f64, hi: f64, n_slots: u32, g: &GpuProfile) -> Option<ServiceStats> {
+        let m = self.cut_moments(lo, hi, 64)?;
+        let t_iter = g.t_iter_s(n_slots);
+        let scv = (m.e_iter2 / (m.e_iter * m.e_iter) - 1.0).max(0.0);
+        let chunks99 = self.p99_prefill_chunks(lo, hi)?;
+        Some(ServiceStats {
+            e_s: m.e_iter * t_iter,
+            scv,
+            p99_prefill_s: chunks99 * t_iter,
+            t_iter_s: t_iter,
+            n_slots,
+        })
+    }
+}
+
+/// Jitter-averaged `(E[iterations], E[iterations^2])` at one integerized
+/// total budget — the same split and iteration count the quadrature path
+/// pushes into its Welford accumulator.
+fn gbar(l_total: f64, jitters: &[f64], output: &OutputModel, chunk: u32) -> (f64, f64) {
+    let (mut s1, mut s2) = (0.0f64, 0.0f64);
+    for &jit in jitters {
+        let (l_in, l_out) = split_request(l_total, jit, output);
+        let it = slot_iterations(l_in, l_out, chunk) as f64;
+        s1 += it;
+        s2 += it * it;
+    }
+    let n = jitters.len() as f64;
+    (s1 / n, s2 / n)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::workload::cdf::AnchoredCdf;
     use crate::workload::traces;
 
     fn g() -> GpuProfile {
@@ -324,6 +625,94 @@ mod tests {
         let b = calibrate_quadrature(&w.cdf, &w.output, &g(), 64, 96, 4);
         assert_eq!(a.e_s, b.e_s);
         assert_eq!(a.scv, b.scv);
+    }
+
+    #[test]
+    fn moment_table_tracks_the_quadrature_within_its_error_bound() {
+        // The table's E[iter] is the exact integerized integral; the
+        // N-point quadrature must sit within CutMoments::err_iter of it —
+        // the invariant the planner's prune bound is built on — and the
+        // gap must shrink at the ~1/N rate as the grid refines.
+        for w in [traces::azure(), traces::lmsys(), traces::agent_heavy()] {
+            let table = MomentTable::build(&w.cdf, &w.output, g().chunk);
+            let cuts = [
+                (w.cdf.min_tokens(), w.b_short as f64),
+                (w.b_short as f64 * 1.5, w.cdf.max_tokens()),
+                (w.cdf.min_tokens(), w.cdf.max_tokens()),
+                (1024.0, 3000.0),
+            ];
+            for &(lo, hi) in &cuts {
+                if w.cdf.cdf(hi) - w.cdf.cdf(lo) <= 1e-9 {
+                    continue;
+                }
+                let dist = crate::workload::cdf::TruncatedDist::new(w.cdf.clone(), lo, hi);
+                for n in [128usize, 512, 2048] {
+                    let m = table.cut_moments(lo, hi, n).expect("cut has mass");
+                    let quad = calibrate_quadrature(&dist, &w.output, &g(), 64, n, 8);
+                    let quad_iter = quad.e_s / quad.t_iter_s;
+                    assert!(
+                        (quad_iter - m.e_iter).abs() <= m.err_iter,
+                        "{} cut ({lo}, {hi}] N={n}: quad {quad_iter} vs table {} (err {})",
+                        w.name,
+                        m.e_iter,
+                        m.err_iter
+                    );
+                }
+                // SCV agrees loosely at high resolution (both estimate
+                // the same second moment).
+                let m = table.cut_moments(lo, hi, 2048).expect("mass");
+                let quad = calibrate_quadrature(&dist, &w.output, &g(), 64, 2048, 8);
+                let table_scv = (m.e_iter2 / (m.e_iter * m.e_iter) - 1.0).max(0.0);
+                assert!(
+                    (table_scv - quad.scv).abs() <= 0.05 * (1.0 + quad.scv),
+                    "{} cut ({lo}, {hi}]: scv table {table_scv} vs quad {}",
+                    w.name,
+                    quad.scv
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn moment_table_stats_mode_is_close_to_quadrature() {
+        // The opt-in CellStatsMode::MomentTable stats: E[S] within the
+        // declared bound of the default 512-point quadrature, P99 prefill
+        // within one chunk of it.
+        let w = traces::azure();
+        let table = MomentTable::build(&w.cdf, &w.output, g().chunk);
+        let cuts = [(16.0f64, 4096.0f64, 256u32), (6144.0, 65536.0, 16), (16.0, 65536.0, 16)];
+        for &(lo, hi, n_slots) in &cuts {
+            let s = table.stats(lo, hi, n_slots, &g()).expect("mass");
+            let dist = crate::workload::cdf::TruncatedDist::new(w.cdf.clone(), lo, hi);
+            let quad = calibrate_quadrature(&dist, &w.output, &g(), n_slots, 512, 8);
+            let m = table.cut_moments(lo, hi, 512).expect("mass");
+            assert!(
+                (s.e_s - quad.e_s).abs() <= m.err_iter * s.t_iter_s,
+                "cut ({lo}, {hi}]: e_s {} vs quad {}",
+                s.e_s,
+                quad.e_s
+            );
+            // P99 prefill: both quantize to whole chunks; near a quantile
+            // boundary the sample quantile can land a few thin tail bins
+            // away from the distributional one.
+            assert!(
+                (s.p99_prefill_s - quad.p99_prefill_s).abs()
+                    <= 3.0 * s.t_iter_s + 0.05 * quad.p99_prefill_s,
+                "cut ({lo}, {hi}]: p99 prefill {} vs quad {}",
+                s.p99_prefill_s,
+                quad.p99_prefill_s
+            );
+        }
+    }
+
+    #[test]
+    fn moment_table_registry_shares_builds() {
+        let w = traces::lmsys();
+        let a = MomentTable::for_workload(&w, g().chunk);
+        let b = MomentTable::for_workload(&w, g().chunk);
+        assert!(Arc::ptr_eq(&a, &b), "same workload must share one table");
+        let other = MomentTable::for_workload(&traces::azure(), g().chunk);
+        assert!(!Arc::ptr_eq(&a, &other));
     }
 
     #[test]

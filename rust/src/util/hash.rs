@@ -91,6 +91,24 @@ pub fn fnv1a(bytes: &[u8]) -> u64 {
     h
 }
 
+/// FNV-1a continuation over 64-bit words: fold `words` into a running
+/// hash `h` (seed with [`FNV_OFFSET`] to start a fresh fingerprint).
+/// One definition for every hand-rolled fingerprint — the workload
+/// calibration fingerprint and the planner's per-thread cell-cache key
+/// chain through this, so what they cover can never silently diverge in
+/// mixing.
+#[inline]
+pub fn fnv1a_words(mut h: u64, words: &[u64]) -> u64 {
+    for &w in words {
+        h ^= w;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
+}
+
+/// The FNV-1a offset basis (the seed for [`fnv1a_words`] chains).
+pub const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
 /// A per-process random 64-bit seed (std `RandomState` entropy, computed
 /// once). Structures that hash **untrusted** input — the gateway interner
 /// hashes attacker-controlled prompt words — mix this in so masked-bucket

@@ -109,11 +109,15 @@ impl LengthDist for AnchoredCdf {
         if q >= 1.0 {
             return self.max_tokens();
         }
-        // Find segment with f0 <= q < f1 (skip flat segments).
-        let mut i = 0;
-        while i + 2 < self.anchors.len() && self.anchors[i + 1].1 <= q {
-            i += 1;
-        }
+        // Segment with f0 <= q < f1 (skipping flat segments): the smallest
+        // i with F(anchors[i+1]) > q, clamped to the last segment. Found by
+        // binary search over the interior anchors — `cdf` already binary-
+        // searches, and `quantile` sits on the DES sample path and the
+        // gateway band checks. Bit-identical to the former linear scan
+        // (same i, same interpolation; property-tested in
+        // `tests/planner_fastpath.rs` against the verbatim scan).
+        let interior = &self.anchors[1..self.anchors.len() - 1];
+        let i = interior.partition_point(|&(_, f)| f <= q);
         let (x0, f0) = self.anchors[i];
         let (x1, f1) = self.anchors[i + 1];
         if f1 <= f0 {

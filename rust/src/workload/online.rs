@@ -192,17 +192,16 @@ impl OnlineEstimator {
         count as f64 / span
     }
 
-    /// Peak-tracking rate estimate: the window is split into `parts`
-    /// equal sub-intervals and the busiest one's rate is returned. Under
-    /// a ramp the mean-window estimate lags by ~window/2; the peak
-    /// estimate lags by ~window/(2*parts) and also captures bursts — the
-    /// controller provisions against this so upswings don't burn SLO.
-    /// Falls back to [`Self::rate`] semantics when the window is young.
-    pub fn peak_rate(&self, now: f64, parts: usize) -> f64 {
+    /// One O(window) pass bucketing the window into `parts` equal
+    /// sub-intervals: `(span, sub-interval width, per-interval counts)`,
+    /// or `None` before any time has elapsed. Shared by the peak,
+    /// forecast, and combined planning-rate estimators so a controller
+    /// epoch never scans the buffer twice.
+    fn sub_counts(&self, now: f64, parts: usize) -> Option<(f64, f64, Vec<u64>)> {
         assert!(parts >= 1);
         let span = self.window_s.min(now);
         if span <= 0.0 {
-            return 0.0;
+            return None;
         }
         let sub = span / parts as f64;
         let cutoff = now - span;
@@ -214,10 +213,81 @@ impl OnlineEstimator {
             let idx = (((t - cutoff) / sub) as usize).min(parts - 1);
             counts[idx] += 1;
         }
-        counts
-            .iter()
-            .map(|&c| c as f64 / sub)
-            .fold(0.0, f64::max)
+        Some((span, sub, counts))
+    }
+
+    /// The busiest sub-interval's rate from precomputed bucket counts.
+    fn peak_of(sub: f64, counts: &[u64]) -> f64 {
+        counts.iter().map(|&c| c as f64 / sub).fold(0.0, f64::max)
+    }
+
+    /// Least-squares linear extrapolation of the sub-interval rates to
+    /// `horizon_s` past the window end, floored at 0 (falls back to the
+    /// window mean on a degenerate fit).
+    fn forecast_of(span: f64, sub: f64, counts: &[u64], horizon_s: f64) -> f64 {
+        let n = counts.len() as f64;
+        let (mut sx, mut sy, mut sxx, mut sxy) = (0.0, 0.0, 0.0, 0.0);
+        for (i, &c) in counts.iter().enumerate() {
+            let x = (i as f64 + 0.5) * sub;
+            let y = c as f64 / sub;
+            sx += x;
+            sy += y;
+            sxx += x * x;
+            sxy += x * y;
+        }
+        let denom = n * sxx - sx * sx;
+        if denom <= 0.0 {
+            return sy / n;
+        }
+        let slope = (n * sxy - sx * sy) / denom;
+        let intercept = (sy - slope * sx) / n;
+        (intercept + slope * (span + horizon_s)).max(0.0)
+    }
+
+    /// Peak-tracking rate estimate: the window is split into `parts`
+    /// equal sub-intervals and the busiest one's rate is returned. Under
+    /// a ramp the mean-window estimate lags by ~window/2; the peak
+    /// estimate lags by ~window/(2*parts) and also captures bursts — the
+    /// controller provisions against this so upswings don't burn SLO.
+    /// Falls back to [`Self::rate`] semantics when the window is young.
+    pub fn peak_rate(&self, now: f64, parts: usize) -> f64 {
+        match self.sub_counts(now, parts) {
+            Some((_, sub, counts)) => Self::peak_of(sub, &counts),
+            None => 0.0,
+        }
+    }
+
+    /// One-step-ahead linear rate forecast: least-squares fit through the
+    /// window's `parts` sub-interval rates (the same sub-rates
+    /// [`Self::peak_rate`] maxes over), extrapolated `horizon_s` past
+    /// `now` and floored at 0. Under a ramp this anticipates the demand
+    /// the fleet will face one controller epoch out — the anticipatory-
+    /// scaling knob (`forecast` in the autoscale configs, off by
+    /// default); on a flat window the slope fits ~0 and the forecast
+    /// collapses to the window mean.
+    pub fn forecast_rate(&self, now: f64, horizon_s: f64, parts: usize) -> f64 {
+        assert!(parts >= 2, "a trend needs at least 2 sub-intervals");
+        assert!(horizon_s >= 0.0);
+        match self.sub_counts(now, parts) {
+            Some((span, sub, counts)) => Self::forecast_of(span, sub, &counts, horizon_s),
+            None => 0.0,
+        }
+    }
+
+    /// The controllers' planning-rate estimate in a single buffer pass:
+    /// the peak sub-rate, maxed with the `horizon_s`-ahead forecast when
+    /// anticipatory scaling is on. With `horizon_s == None` this is
+    /// exactly [`Self::peak_rate`] (the forecast-off no-op property).
+    pub fn planning_rate(&self, now: f64, parts: usize, horizon_s: Option<f64>) -> f64 {
+        assert!(parts >= 2);
+        let Some((span, sub, counts)) = self.sub_counts(now, parts) else {
+            return 0.0;
+        };
+        let peak = Self::peak_of(sub, &counts);
+        match horizon_s {
+            Some(h) => peak.max(Self::forecast_of(span, sub, &counts, h)),
+            None => peak,
+        }
     }
 
     /// Empirical prompt-length CDF over the window, anchored at the
@@ -338,6 +408,56 @@ mod tests {
         }
         let (m, p) = (c.rate(8.0), c.peak_rate(8.0, 4));
         assert!((p - m).abs() / m < 0.1, "mean {m} vs peak {p}");
+    }
+
+    #[test]
+    fn forecast_anticipates_a_ramp_and_matches_a_flat_window() {
+        // Linearly ramping arrivals: the one-epoch-ahead forecast must
+        // exceed both the window-mean and the current instantaneous-ish
+        // estimates (that's the point of anticipatory scaling).
+        let mut e = OnlineEstimator::new(16.0);
+        let mut t = 0.0;
+        while t < 16.0 {
+            // rate(t) ~ 10 + 5t req/s.
+            let r = 10.0 + 5.0 * t;
+            t += 1.0 / r;
+            e.observe(t, 200);
+        }
+        let mean = e.rate(16.0);
+        let fc = e.forecast_rate(16.0, 4.0, 4);
+        assert!(fc > mean, "forecast {fc} must exceed window mean {mean}");
+        // ~10 + 5*20 = 110 req/s expected 4 s out; generous tolerance.
+        assert!((80.0..150.0).contains(&fc), "forecast {fc}");
+        // The combined single-pass estimate: exactly the peak with the
+        // horizon off (the forecast-off no-op), >= both with it on.
+        assert_eq!(
+            e.planning_rate(16.0, 4, None).to_bits(),
+            e.peak_rate(16.0, 4).to_bits()
+        );
+        let combined = e.planning_rate(16.0, 4, Some(4.0));
+        assert!(combined >= e.peak_rate(16.0, 4) && combined >= fc);
+
+        // Flat window: the fitted slope is ~0 and the forecast collapses
+        // to the mean — no phantom headroom.
+        let mut c = OnlineEstimator::new(16.0);
+        let mut t = 0.0;
+        while t < 16.0 {
+            t += 0.05;
+            c.observe(t, 200);
+        }
+        let (m, f) = (c.rate(16.0), c.forecast_rate(16.0, 4.0, 4));
+        assert!((f - m).abs() / m < 0.1, "flat: mean {m} vs forecast {f}");
+        // Downward ramps floor at zero, never negative.
+        let mut d = OnlineEstimator::new(8.0);
+        let mut t = 0.0;
+        while t < 8.0 {
+            let r = (100.0 - 12.0 * t).max(1.0);
+            t += 1.0 / r;
+            d.observe(t, 200);
+        }
+        assert!(d.forecast_rate(8.0, 8.0, 4) >= 0.0);
+        // An empty estimator forecasts zero.
+        assert_eq!(OnlineEstimator::new(8.0).forecast_rate(0.0, 4.0, 4), 0.0);
     }
 
     #[test]

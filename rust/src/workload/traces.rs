@@ -77,6 +77,28 @@ impl Workload {
         }
     }
 
+    /// FNV-1a over the workload features service-time calibration depends
+    /// on (CDF anchors and the output model). The planner's calibration
+    /// cache and the shared moment-table registry key by truncation cuts
+    /// under this fingerprint: a drifted empirical CDF snapshot mints a
+    /// fresh fingerprint and so invalidates both.
+    pub fn fingerprint(&self) -> u64 {
+        use crate::util::hash::{fnv1a_words, FNV_OFFSET};
+        let mut h = FNV_OFFSET;
+        for &(x, f) in self.cdf.anchors() {
+            h = fnv1a_words(h, &[x.to_bits(), f.to_bits()]);
+        }
+        fnv1a_words(
+            h,
+            &[
+                self.output.frac.to_bits(),
+                self.output.sigma.to_bits(),
+                self.output.min_tokens as u64,
+                self.output.max_tokens as u64,
+            ],
+        )
+    }
+
     /// Draw one request (without arrival time; see [`super::arrivals`]).
     pub fn sample_request(&self, id: u64, arrival_s: f64, rng: &mut Rng) -> Request {
         let l_total = self.cdf.sample(rng).round().max(2.0);

@@ -1,0 +1,332 @@
+//! The sub-millisecond-planner PR's regression gates.
+//!
+//! * `AnchoredCdf::quantile` binary search vs the verbatim linear-scan
+//!   reference (bit-identical — it sits on the DES sample path).
+//! * Moment-table cell stats vs the quadrature oracle: the N-point
+//!   quadrature must sit within the table's *declared* error bound of the
+//!   exact integerized moments, on randomized cuts — the invariant the
+//!   bound-and-prune sweep's soundness rests on.
+//! * Prune-never-changes-argmin: `sweep_tiered_pruned` selects the
+//!   bit-identical plan (boundaries, gammas, per-tier GPU counts, cost)
+//!   as the full `sweep_tiered` on all three traces at K = 2, 3, 4 and
+//!   across arrival rates.
+//! * Incremental-vs-full `Replanner` plan equality under rate drift and
+//!   across a CDF-drift (fingerprint-invalidating) epoch.
+//! * The `forecast` knob is off by default and a disabled run is
+//!   bit-reproducible; an enabled run still conserves every request.
+//! * Release-mode wall-clock guard for the pruned K = 3 sweep (the hard
+//!   < 10 ms floor is enforced by CI on `BENCH_planner.json`).
+
+use fleetopt::config::{CellStatsMode, PlannerConfig};
+use fleetopt::fleetsim::{simulate_autoscale, AutoscaleConfig};
+use fleetopt::planner::replan::{ReplanConfig, Replanner};
+use fleetopt::planner::{
+    plan_fleet, plan_spec_sweep_gamma, sweep_tiered, sweep_tiered_pruned, CalibCache, PlanInput,
+};
+use fleetopt::queueing::service::MomentTable;
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::arrivals::RateModel;
+use fleetopt::workload::cdf::{AnchoredCdf, LengthDist, TruncatedDist};
+use fleetopt::workload::traces;
+
+fn fast_input(w: traces::Workload, lambda: f64, mc: usize) -> PlanInput {
+    let mut i = PlanInput::new(w, lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: mc,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+/// The pre-PR linear-scan quantile, verbatim (public API only).
+fn quantile_linear_reference(cdf: &AnchoredCdf, q: f64) -> f64 {
+    let anchors = cdf.anchors();
+    let q = q.clamp(0.0, 1.0);
+    if q <= 0.0 {
+        return cdf.min_tokens();
+    }
+    if q >= 1.0 {
+        return cdf.max_tokens();
+    }
+    let mut i = 0;
+    while i + 2 < anchors.len() && anchors[i + 1].1 <= q {
+        i += 1;
+    }
+    let (x0, f0) = anchors[i];
+    let (x1, f1) = anchors[i + 1];
+    if f1 <= f0 {
+        return x1;
+    }
+    let t = (q - f0) / (f1 - f0);
+    x0 * (x1 / x0).powf(t)
+}
+
+#[test]
+fn quantile_binary_search_bit_identical_to_linear_scan() {
+    let mut cdfs: Vec<AnchoredCdf> = traces::all().iter().map(|w| w.cdf.clone()).collect();
+    // Flat segments, duplicate F plateaus, and a minimal 2-anchor CDF.
+    cdfs.push(AnchoredCdf::new(vec![
+        (10.0, 0.0),
+        (100.0, 0.5),
+        (200.0, 0.5),
+        (400.0, 0.5),
+        (1000.0, 1.0),
+    ]));
+    cdfs.push(AnchoredCdf::new(vec![(8.0, 0.0), (64.0, 1.0)]));
+    // Randomized anchor sets with occasional plateaus.
+    let mut rng = Rng::new(0xFA57);
+    for _ in 0..32 {
+        let n = 3 + (rng.f64() * 10.0) as usize;
+        let mut x = 4.0 + rng.f64() * 16.0;
+        let mut f = 0.0;
+        let mut anchors = vec![(x, f)];
+        for j in 0..n {
+            x *= 1.2 + rng.f64() * 3.0;
+            f = if j + 1 == n {
+                1.0
+            } else if rng.f64() < 0.25 {
+                f // plateau
+            } else {
+                (f + rng.f64() * (1.0 - f) * 0.6).min(1.0)
+            };
+            anchors.push((x, f));
+        }
+        anchors.last_mut().unwrap().1 = 1.0;
+        cdfs.push(AnchoredCdf::new(anchors));
+    }
+
+    for cdf in &cdfs {
+        // Probe a dense grid plus every anchor F value exactly.
+        for i in 0..=2000 {
+            let q = i as f64 / 2000.0;
+            assert_eq!(
+                cdf.quantile(q).to_bits(),
+                quantile_linear_reference(cdf, q).to_bits(),
+                "q = {q}"
+            );
+        }
+        for &(_, f) in cdf.anchors() {
+            assert_eq!(
+                cdf.quantile(f).to_bits(),
+                quantile_linear_reference(cdf, f).to_bits(),
+                "anchor F = {f}"
+            );
+        }
+    }
+}
+
+#[test]
+fn moment_table_bound_holds_on_random_cuts() {
+    for w in traces::all() {
+        let table = MomentTable::build(&w.cdf, &w.output, 512);
+        let mut rng = Rng::new(0xB0B + w.b_short as u64);
+        let (min_t, max_t) = (w.cdf.min_tokens(), w.cdf.max_tokens());
+        for _ in 0..20 {
+            // Random log-spaced cut inside the support.
+            let a = min_t * (max_t / min_t).powf(rng.f64() * 0.8);
+            let b = a * (max_t / a).powf(0.2 + rng.f64() * 0.8);
+            let (lo, hi) = (a, b.min(max_t));
+            if w.cdf.cdf(hi) - w.cdf.cdf(lo) <= 1e-6 {
+                continue;
+            }
+            let dist = TruncatedDist::new(w.cdf.clone(), lo, hi);
+            let gpu = fleetopt::config::GpuProfile::a100_llama70b();
+            for n in [64usize, 512] {
+                let m = table.cut_moments(lo, hi, n).expect("cut has mass");
+                let quad = fleetopt::queueing::service::calibrate_quadrature(
+                    &dist, &w.output, &gpu, 64, n, 8,
+                );
+                let quad_iter = quad.e_s / quad.t_iter_s;
+                assert!(
+                    (quad_iter - m.e_iter).abs() <= m.err_iter,
+                    "{} cut ({lo:.1}, {hi:.1}] N={n}: quad {quad_iter} vs exact {} (err {})",
+                    w.name,
+                    m.e_iter,
+                    m.err_iter
+                );
+            }
+        }
+    }
+}
+
+/// The PR's headline acceptance gate: bound-and-prune selects the exact
+/// full-sweep plan on every trace at K = 2, 3, 4 (K = 4 on one trace in
+/// debug builds — the full K = 4 grid is quadratic-expensive unoptimized).
+#[test]
+fn pruned_sweep_never_changes_the_argmin() {
+    let heavy = !cfg!(debug_assertions);
+    for w in traces::all() {
+        for (k, lambdas) in [
+            (2usize, &[1000.0, 400.0][..]),
+            (3, &[1000.0][..]),
+            (4, &[1000.0][..]),
+        ] {
+            if k == 4 && !heavy && w.name != "azure" {
+                continue;
+            }
+            for &lambda in lambdas {
+                // Internal identity at reduced quadrature resolution keeps
+                // the debug-mode grid affordable; the identity argument is
+                // resolution-independent.
+                let mc = if k == 4 { 1_000 } else { 2_000 };
+                let input = fast_input(w.clone(), lambda, mc);
+                let (full, grid) = sweep_tiered(&input, k).unwrap();
+                let (fast, stats) = sweep_tiered_pruned(&input, k, &CalibCache::new()).unwrap();
+                assert!(!grid.is_empty());
+                let label = format!("{} K={k} lambda={lambda}", w.name);
+                assert_eq!(fast.cost_yr.to_bits(), full.cost_yr.to_bits(), "{label}");
+                assert_eq!(fast.boundaries(), full.boundaries(), "{label}");
+                assert_eq!(fast.gpu_counts(), full.gpu_counts(), "{label}");
+                for (a, b) in fast.gammas.iter().zip(&full.gammas) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{label}");
+                }
+                for (a, b) in fast.tiers.iter().zip(&full.tiers) {
+                    assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{label}");
+                }
+                assert_eq!(
+                    stats.cells,
+                    stats.pruned + stats.evaluated + stats.infeasible,
+                    "{label}"
+                );
+                assert!(
+                    stats.pruned * 2 > stats.cells,
+                    "{label}: only {} of {} cells pruned",
+                    stats.pruned,
+                    stats.cells
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn moment_table_mode_plans_land_within_tolerance() {
+    // The opt-in CellStatsMode::MomentTable is an approximation: it must
+    // never be *far* from the quadrature plan (the exact path keeps
+    // bit-identity; this guards the approximation's calibration quality).
+    for w in traces::all() {
+        let exact = fast_input(w.clone(), 1000.0, 8_000);
+        let mut approx = fast_input(w.clone(), 1000.0, 8_000);
+        approx.cfg.cell_stats = CellStatsMode::MomentTable;
+        for gamma in [1.0, 1.5] {
+            let a = plan_fleet(&exact, w.b_short, gamma).unwrap();
+            let b = plan_fleet(&approx, w.b_short, gamma).unwrap();
+            for (x, y, pool) in [
+                (a.short.n_gpus, b.short.n_gpus, "short"),
+                (a.long.n_gpus, b.long.n_gpus, "long"),
+            ] {
+                let tol = 2.0 + 0.025 * x as f64;
+                assert!(
+                    (x as f64 - y as f64).abs() <= tol,
+                    "{} {pool} gamma={gamma}: exact {x} vs table {y}",
+                    w.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn incremental_replanner_equals_full_across_rate_and_cdf_drift() {
+    // Same adopted plan at every epoch, including the epoch whose CDF
+    // snapshot (and so workload fingerprint) changes — incremental mode
+    // must fall back to the unseeded sweep there and still agree.
+    let base = traces::azure();
+    let mut drifted = traces::azure();
+    // A mildly different empirical snapshot: shift one interior anchor.
+    let mut anchors = drifted.cdf.anchors().to_vec();
+    anchors[5].1 = (anchors[5].1 + anchors[6].1) / 2.0;
+    drifted.cdf = AnchoredCdf::new(anchors);
+
+    let mk = |incremental| {
+        let inp = fast_input(base.clone(), 1000.0, 2_000);
+        let spec = inp.gpu.fleet_spec(&[base.b_short]);
+        let init = plan_spec_sweep_gamma(&inp, &spec).unwrap();
+        Replanner::new(
+            ReplanConfig {
+                sweep_boundaries: true,
+                incremental,
+                ..ReplanConfig::default()
+            },
+            init,
+        )
+    };
+    let mut inc = mk(true);
+    let mut full = mk(false);
+    let epochs: Vec<PlanInput> = vec![
+        fast_input(base.clone(), 950.0, 2_000),
+        fast_input(base.clone(), 1100.0, 2_000),
+        fast_input(drifted.clone(), 1080.0, 2_000), // fingerprint change
+        fast_input(drifted.clone(), 990.0, 2_000),
+        fast_input(base.clone(), 1000.0, 2_000), // and back
+    ];
+    for (e, input) in epochs.iter().enumerate() {
+        let a = inc.replan(input).unwrap();
+        let b = full.replan(input).unwrap();
+        assert_eq!(a.plan.cost_yr.to_bits(), b.plan.cost_yr.to_bits(), "epoch {e}");
+        assert_eq!(a.plan.boundaries(), b.plan.boundaries(), "epoch {e}");
+        assert_eq!(a.plan.gpu_counts(), b.plan.gpu_counts(), "epoch {e}");
+        assert_eq!(a.switched_layout, b.switched_layout, "epoch {e}");
+    }
+}
+
+#[test]
+fn forecast_knob_is_off_by_default_and_inert_when_disabled() {
+    let w = traces::azure();
+    let input = fast_input(w.clone(), 300.0, 4_000);
+    let spec = input.gpu.fleet_spec(&[w.b_short]);
+    let init = plan_spec_sweep_gamma(&input, &spec).unwrap();
+    let base = AutoscaleConfig {
+        epoch_s: 5.0,
+        window_s: 10.0,
+        provision_delay_s: 2.0,
+        ..AutoscaleConfig::default()
+    };
+    assert!(!base.forecast, "forecast must default off");
+    let mut disabled = base.clone();
+    disabled.forecast = false;
+    let model = RateModel::Diurnal {
+        base: 300.0,
+        amp: 0.5,
+        period_s: 60.0,
+        phase: 0.0,
+    };
+    let n = 6_000;
+    let a = simulate_autoscale(&w, model.clone(), n, &input, init.clone(), &base, 9);
+    let b = simulate_autoscale(&w, model.clone(), n, &input, init.clone(), &disabled, 9);
+    // Spelling the default out changes nothing, bit for bit.
+    assert_eq!(a.completed, b.completed);
+    assert_eq!(a.gpu_hours.to_bits(), b.gpu_hours.to_bits());
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+    assert_eq!(a.layout_switches, b.layout_switches);
+    assert_eq!(a.final_gpus, b.final_gpus);
+    // Enabled: the controller may only provision differently — every
+    // request still completes and accounting stays conserved.
+    let mut on = base.clone();
+    on.forecast = true;
+    let c = simulate_autoscale(&w, model, n, &input, init, &on, 9);
+    assert_eq!(c.completed, n as u64);
+    assert_eq!(c.censored, 0);
+}
+
+#[test]
+fn pruned_k3_sweep_meets_release_wall_clock_guard() {
+    // CI's hard floor is < 10 ms via BENCH_planner.json (warm moment
+    // table); this in-test guard is looser to absorb tier-1 runner noise
+    // and the one-time table build. Debug builds run it for coverage.
+    let input = PlanInput::new(traces::azure(), 1000.0);
+    // Warm the shared table (one-time, reported separately by the bench).
+    let _ = MomentTable::for_workload(&input.workload, input.gpu.chunk);
+    let t0 = std::time::Instant::now();
+    let (best, stats) = sweep_tiered_pruned(&input, 3, &CalibCache::new()).unwrap();
+    let elapsed = t0.elapsed();
+    assert!(best.total_gpus() > 0);
+    assert!(stats.pruned > 0);
+    if !cfg!(debug_assertions) {
+        assert!(
+            elapsed.as_secs_f64() < 0.025,
+            "pruned K=3 sweep took {:.2} ms (>= 25 ms in-test guard)",
+            elapsed.as_secs_f64() * 1e3
+        );
+    }
+}
