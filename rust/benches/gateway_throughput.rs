@@ -16,15 +16,17 @@
 use std::time::Instant;
 
 use fleetopt::compress::corpus;
-use fleetopt::compress::doc::Document;
+use fleetopt::compress::doc::{overlap, Document};
 use fleetopt::compress::extractive::compress_doc_with_mode;
 use fleetopt::compress::scratch::CompressScratch;
 use fleetopt::compress::textrank::{
     centrality_into, textrank_naive, SimilarityMode, TextrankScratch,
 };
+use fleetopt::compress::tfidf::sentence_scores_soa;
 use fleetopt::compress::tokenizer::count_tokens;
 use fleetopt::util::json::{obj, Json};
 use fleetopt::util::rng::Rng;
+use fleetopt::util::simd::{with_dispatch, Dispatch};
 use fleetopt::util::stats::Samples;
 use fleetopt::workload::traces;
 
@@ -121,6 +123,93 @@ fn main() {
     );
     println!("acceptance: similarity-stage speedup >= 5x on >=100-sentence docs");
 
+    // --- SIMD dispatch: scalar oracles vs vectorized kernels (PR 6) ------
+    // Selections must be byte-identical across dispatch modes before any
+    // speedup is reported (the tentpole identity policy).
+    for doc in &parsed {
+        let a = with_dispatch(Dispatch::ForceScalar, || {
+            compress_doc_with_mode(doc, budget, SimilarityMode::InvertedIndex)
+        });
+        let b = with_dispatch(Dispatch::ForceSimd, || {
+            compress_doc_with_mode(doc, budget, SimilarityMode::InvertedIndex)
+        });
+        assert_eq!(a.text, b.text, "dispatch mode must not change selection");
+        assert_eq!(a.selected, b.selected);
+    }
+
+    // Scoring stage (the CI-gated kernel): TF-IDF sentence salience,
+    // per-occurrence `ln` (scalar) vs per-distinct-word weight table.
+    let score_reps = 40usize;
+    let (mut df, mut tf, mut wt, mut scores) = (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+    let mut time_scoring = |mode: Dispatch| {
+        let parsed = &parsed;
+        let (df, tf, wt, scores) = (&mut df, &mut tf, &mut wt, &mut scores);
+        with_dispatch(mode, move || {
+            let t0 = Instant::now();
+            let mut checksum = 0.0f64;
+            for _ in 0..score_reps {
+                for doc in parsed {
+                    sentence_scores_soa(doc, df, tf, wt, scores);
+                    checksum += scores.last().copied().unwrap_or(0.0);
+                }
+            }
+            std::hint::black_box(checksum);
+            t0.elapsed().as_secs_f64() * 1e3 / (score_reps * parsed.len()) as f64
+        })
+    };
+    let scoring_scalar_ms = time_scoring(Dispatch::ForceScalar);
+    let scoring_simd_ms = time_scoring(Dispatch::ForceSimd);
+    let simd_speedup_scoring = scoring_scalar_ms / scoring_simd_ms.max(1e-9);
+
+    // Sorted-set intersection (gallop/AVX2 vs two-pointer merge).
+    let mut time_intersect = |mode: Dispatch| {
+        let parsed = &parsed;
+        with_dispatch(mode, move || {
+            let t0 = Instant::now();
+            let mut total = 0usize;
+            for _ in 0..reps {
+                for doc in parsed {
+                    let sets = &doc.word_sets;
+                    for i in 0..sets.len() {
+                        for j in (i + 1)..sets.len() {
+                            total += overlap(&sets[i], &sets[j]);
+                        }
+                    }
+                }
+            }
+            std::hint::black_box(total);
+            t0.elapsed().as_secs_f64() * 1e3 / (reps * parsed.len()) as f64
+        })
+    };
+    let intersect_scalar_ms = time_intersect(Dispatch::ForceScalar);
+    let intersect_simd_ms = time_intersect(Dispatch::ForceSimd);
+    let simd_speedup_intersect = intersect_scalar_ms / intersect_simd_ms.max(1e-9);
+
+    // TextRank power iteration (CSR SpMV vs edge-scatter).
+    let mut time_textrank = |mode: Dispatch| {
+        let parsed = &parsed;
+        let (ts, out) = (&mut ts, &mut out);
+        with_dispatch(mode, move || {
+            let t0 = Instant::now();
+            for _ in 0..reps {
+                for doc in parsed {
+                    centrality_into(doc, SimilarityMode::InvertedIndex, ts, out);
+                    std::hint::black_box(out.last().copied());
+                }
+            }
+            t0.elapsed().as_secs_f64() * 1e3 / (reps * parsed.len()) as f64
+        })
+    };
+    let textrank_scalar_ms = time_textrank(Dispatch::ForceScalar);
+    let textrank_simd_ms = time_textrank(Dispatch::ForceSimd);
+    let simd_speedup_textrank = textrank_scalar_ms / textrank_simd_ms.max(1e-9);
+
+    println!(
+        "simd vs scalar     : scoring {simd_speedup_scoring:5.2}x | intersect \
+         {simd_speedup_intersect:5.2}x | textrank {simd_speedup_textrank:5.2}x \
+         (selections byte-identical across modes)"
+    );
+
     let report = obj(vec![
         ("bench", Json::Str("gateway_throughput".into())),
         ("docs", Json::Num(n_docs as f64)),
@@ -138,6 +227,12 @@ fn main() {
         ("naive_p99_ms", Json::Num(naive_lat.p99())),
         ("fast_p50_ms", Json::Num(fast_lat.p50())),
         ("fast_p99_ms", Json::Num(fast_lat.p99())),
+        ("simd_selection_identical", Json::Bool(true)),
+        ("simd_scoring_scalar_ms", Json::Num(scoring_scalar_ms)),
+        ("simd_scoring_simd_ms", Json::Num(scoring_simd_ms)),
+        ("simd_speedup_scoring", Json::Num(simd_speedup_scoring)),
+        ("simd_speedup_intersect", Json::Num(simd_speedup_intersect)),
+        ("simd_speedup_textrank", Json::Num(simd_speedup_textrank)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gateway.json");
     std::fs::write(path, report.to_string_pretty() + "\n").expect("writing BENCH_gateway.json");

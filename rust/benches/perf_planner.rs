@@ -14,12 +14,13 @@ use fleetopt::fleetsim::sim::{simulate_pool, simulate_pool_replications, SimConf
 use fleetopt::planner::replan::{ReplanConfig, Replanner};
 use fleetopt::planner::sizing::{clear_warm_hints, min_gpus, sizing_probe_stats};
 use fleetopt::planner::{
-    plan_fleet, sweep_full, sweep_full_serial, sweep_gamma, sweep_tiered, sweep_tiered_pruned,
-    CalibCache, PlanInput,
+    plan_fleet, sweep_cell_bounds, sweep_full, sweep_full_serial, sweep_gamma, sweep_tiered,
+    sweep_tiered_pruned, CalibCache, PlanInput,
 };
 use fleetopt::queueing::erlang::erlang_cache_stats;
 use fleetopt::queueing::service::{calibrate, MomentTable};
 use fleetopt::util::json::{obj, Json};
+use fleetopt::util::par::set_thread_cap;
 use fleetopt::util::rng::Rng;
 use fleetopt::workload::traces;
 
@@ -187,6 +188,85 @@ fn main() {
     }
     println!("moment-table builds (one-time, all workloads): {table_build_ms:.1} ms");
 
+    // --- SIMD batched cell bounds vs per-cell scalar (PR 6, CI-gated) ----
+    // Thread cap pinned to 1 so the ratio reflects kernel work (cut-memo
+    // dedupe + lane-parallel stability counts), not spawn scheduling; the
+    // gate uses the *minimum* speedup across traces so no workload can
+    // hide a regression. Bounds are asserted bit-identical first.
+    set_thread_cap(1);
+    let mut cells_rows = Vec::new();
+    let mut simd_cells_scalar_ms = 0.0f64;
+    let mut simd_cells_batched_ms = 0.0f64;
+    let mut simd_speedup_cells = f64::INFINITY;
+    for w in traces::all() {
+        let input = PlanInput::new(w.clone(), 1000.0);
+        let scalar_bounds = sweep_cell_bounds(&input, 3, false);
+        let batched_bounds = sweep_cell_bounds(&input, 3, true);
+        assert_eq!(scalar_bounds.len(), batched_bounds.len(), "{}", w.name);
+        for (i, (s, b)) in scalar_bounds.iter().zip(&batched_bounds).enumerate() {
+            assert_eq!(
+                s.map(f64::to_bits),
+                b.map(f64::to_bits),
+                "{} cell {i}: batched bound must be bit-identical",
+                w.name
+            );
+        }
+        let cells_scalar_ms = median_ms(9, || {
+            std::hint::black_box(sweep_cell_bounds(&input, 3, false).len());
+        });
+        let cells_batched_ms = median_ms(9, || {
+            std::hint::black_box(sweep_cell_bounds(&input, 3, true).len());
+        });
+        let speedup = cells_scalar_ms / cells_batched_ms.max(1e-9);
+        simd_cells_scalar_ms = simd_cells_scalar_ms.max(cells_scalar_ms);
+        simd_cells_batched_ms = simd_cells_batched_ms.max(cells_batched_ms);
+        simd_speedup_cells = simd_speedup_cells.min(speedup);
+        println!(
+            "{:12} cell bounds: per-cell={cells_scalar_ms:8.2} ms | \
+             batched={cells_batched_ms:8.2} ms ({speedup:.2}x, bit-identical)",
+            w.name,
+        );
+        cells_rows.push(obj(vec![
+            ("workload", Json::Str(w.name.into())),
+            ("cells_scalar_ms", Json::Num(cells_scalar_ms)),
+            ("cells_batched_ms", Json::Num(cells_batched_ms)),
+            ("speedup", Json::Num(speedup)),
+        ]));
+    }
+    set_thread_cap(0);
+    println!("floor: batched cell evaluation >= 2x per-cell on >= 4-core runners");
+
+    // --- lane-parallel Erlang-C (ungated, informational) -----------------
+    #[cfg(feature = "simd")]
+    let simd_speedup_erlang_lanes = {
+        use fleetopt::queueing::erlang::erlang_c;
+        use fleetopt::queueing::simd::lanes::erlang_c_batch;
+        let points: Vec<(u64, f64)> = (0..4096u64)
+            .map(|i| (1 + (i % 512) * 4, 0.5 + 0.4999 * (i as f64 / 4096.0)))
+            .collect();
+        let erlang_scalar_ms = median_ms(9, || {
+            let mut acc = 0.0;
+            for &(c, rho) in &points {
+                acc += erlang_c(c, rho);
+            }
+            std::hint::black_box(acc);
+        });
+        let mut lanes_out = Vec::new();
+        let erlang_lanes_ms = median_ms(9, || {
+            erlang_c_batch(&points, &mut lanes_out);
+            std::hint::black_box(lanes_out.len());
+        });
+        let speedup = erlang_scalar_ms / erlang_lanes_ms.max(1e-9);
+        println!(
+            "erlang-C x{}    : scalar {erlang_scalar_ms:7.3} ms | \
+             lanes {erlang_lanes_ms:7.3} ms ({speedup:.2}x)",
+            points.len(),
+        );
+        speedup
+    };
+    #[cfg(not(feature = "simd"))]
+    let simd_speedup_erlang_lanes = 1.0;
+
     // --- warm-vs-cold inversion probes + incremental replanner -----------
     let wz2 = traces::azure();
     let svc2 = calibrate(&wz2.cdf, &wz2.output, &GpuProfile::a100_llama70b(), 682, 10_000, 11);
@@ -298,6 +378,12 @@ fn main() {
         ("k3_pruned_ms_max", Json::Num(k3_pruned_ms_max)),
         ("k3_pruned_frac_min", Json::Num(pruned_frac_min)),
         ("moment_table_build_ms", Json::Num(table_build_ms)),
+        ("cell_bounds", Json::Arr(cells_rows)),
+        ("simd_cells_identical", Json::Bool(true)),
+        ("simd_cells_scalar_ms", Json::Num(simd_cells_scalar_ms)),
+        ("simd_cells_batched_ms", Json::Num(simd_cells_batched_ms)),
+        ("simd_speedup_cells", Json::Num(simd_speedup_cells)),
+        ("simd_speedup_erlang_lanes", Json::Num(simd_speedup_erlang_lanes)),
         ("inversion_probes_cold", Json::Num(probes_cold)),
         ("inversion_probes_warm", Json::Num(probes_warm)),
         ("replan_warm_ms", Json::Num(replan_warm_ms)),

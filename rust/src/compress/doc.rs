@@ -232,7 +232,20 @@ impl Document {
 }
 
 /// Size of the intersection of two sorted, deduplicated id slices.
+///
+/// Dispatches to the galloping/AVX2 kernel (`compress::simd::intersect`)
+/// when SIMD is active; counts are integers, so the result is exactly
+/// [`overlap_scalar`]'s under every dispatch mode.
 pub fn overlap(a: &[u32], b: &[u32]) -> usize {
+    #[cfg(feature = "simd")]
+    if crate::util::simd::simd_active() {
+        return crate::compress::simd::intersect::intersect_count(a, b);
+    }
+    overlap_scalar(a, b)
+}
+
+/// The two-pointer merge oracle (and the scalar-dispatch path).
+pub fn overlap_scalar(a: &[u32], b: &[u32]) -> usize {
     let (mut i, mut j, mut n) = (0usize, 0usize, 0usize);
     while i < a.len() && j < b.len() {
         match a[i].cmp(&b[j]) {
@@ -279,6 +292,17 @@ mod tests {
         a.sort_unstable();
         b.sort_unstable();
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn overlap_dispatch_matches_scalar_oracle() {
+        use crate::util::simd::{with_dispatch, Dispatch};
+        let a: Vec<u32> = (0..97).map(|i| i * 5).collect();
+        let b: Vec<u32> = (0..140).map(|i| i * 3 + 1).collect();
+        let want = overlap_scalar(&a, &b);
+        for mode in [Dispatch::ForceScalar, Dispatch::ForceSimd] {
+            assert_eq!(with_dispatch(mode, || overlap(&a, &b)), want, "{mode:?}");
+        }
     }
 
     #[test]

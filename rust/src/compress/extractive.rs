@@ -102,6 +102,7 @@ pub fn compress_with(s: &mut CompressScratch, text: &str, budget_tokens: u32) ->
         composite,
         df,
         tf,
+        wt,
         order,
         selected,
         mandatory,
@@ -120,7 +121,7 @@ pub fn compress_with(s: &mut CompressScratch, text: &str, budget_tokens: u32) ->
             minmax_normalize_inplace(tr);
             position_scores_into(doc.n_sentences(), pos);
             minmax_normalize_inplace(pos);
-            crate::compress::tfidf::sentence_scores_into(doc, df, tf, tfv);
+            crate::compress::tfidf::sentence_scores_soa(doc, df, tf, wt, tfv);
             minmax_normalize_inplace(tfv);
             crate::compress::scoring::novelty_scores_into(doc, nov);
             minmax_normalize_inplace(nov);

@@ -17,6 +17,8 @@ pub mod gate;
 pub mod scoring;
 pub mod scratch;
 pub mod sentence;
+#[cfg(feature = "simd")]
+pub mod simd;
 pub mod textrank;
 pub mod tfidf;
 pub mod tokenizer;

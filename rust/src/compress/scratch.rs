@@ -32,6 +32,8 @@ pub struct CompressScratch {
     /// TF-IDF counting scratch.
     pub(crate) df: Vec<u32>,
     pub(crate) tf: Vec<u32>,
+    /// SoA per-word TF-IDF weight table (§Perf PR 6, `simd` dispatch).
+    pub(crate) wt: Vec<f64>,
     /// Selection state.
     pub(crate) order: Vec<usize>,
     pub(crate) selected: Vec<bool>,

@@ -1,0 +1,145 @@
+//! Sorted-u32 set intersection: galloping search over the longer list,
+//! with an AVX2 8-lane broadcast-compare advancing the gallop on x86_64
+//! (runtime `is_x86_feature_detected!`), and a blocked scalar gallop on
+//! other architectures. Counts are integers, so every path returns
+//! exactly what the two-pointer merge oracle
+//! (`compress::doc::overlap_scalar`) returns.
+//!
+//! Galloping wins over the merge when the two lists have very different
+//! lengths (a rare content word probing a long sentence's set) and loses
+//! nothing when they are similar: each probe advances through the longer
+//! list in 8-element blocks until the block containing the first element
+//! `>= x` is found, then finishes with at most 8 scalar steps.
+
+/// Intersection size of two sorted, deduplicated id slices, dispatched to
+/// the best available kernel for this CPU.
+pub fn intersect_count(a: &[u32], b: &[u32]) -> usize {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            // SAFETY: AVX2 availability just checked at runtime.
+            return unsafe { intersect_count_avx2(a, b) };
+        }
+    }
+    intersect_count_gallop(a, b)
+}
+
+/// Portable blocked gallop (also the non-x86_64 dispatch target): skip
+/// 8-element blocks of the longer list whose last element is still below
+/// the probe, then settle scalar.
+pub fn intersect_count_gallop(a: &[u32], b: &[u32]) -> usize {
+    let (small, big) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut count = 0usize;
+    let mut j = 0usize;
+    for &x in small {
+        while j + 8 <= big.len() && big[j + 7] < x {
+            j += 8;
+        }
+        while j < big.len() && big[j] < x {
+            j += 1;
+        }
+        if j < big.len() && big[j] == x {
+            count += 1;
+            j += 1;
+        }
+    }
+    count
+}
+
+/// AVX2 gallop: one unaligned 8-lane load per block, unsigned `>= x` via
+/// `max_epu32 == self`, movemask to locate the first qualifying lane.
+/// Probe order and the final scalar settle are identical to
+/// [`intersect_count_gallop`], so the count is exactly the oracle's.
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn intersect_count_avx2(a: &[u32], b: &[u32]) -> usize {
+    use std::arch::x86_64::{
+        _mm256_castsi256_ps, _mm256_cmpeq_epi32, _mm256_loadu_si256, _mm256_max_epu32,
+        _mm256_movemask_ps, _mm256_set1_epi32,
+    };
+    let (small, big) = if a.len() <= b.len() { (a, b) } else { (b, a) };
+    let mut count = 0usize;
+    let mut j = 0usize;
+    for &x in small {
+        let bx = _mm256_set1_epi32(x as i32);
+        while j + 8 <= big.len() {
+            // SAFETY: `j + 8 <= big.len()` bounds the 8-lane load.
+            let block = unsafe { _mm256_loadu_si256(big.as_ptr().add(j).cast()) };
+            // Lane l sets ge iff big[j+l] >= x (unsigned): max(v, x) == v.
+            let ge = _mm256_cmpeq_epi32(_mm256_max_epu32(block, bx), block);
+            let mask = _mm256_movemask_ps(_mm256_castsi256_ps(ge));
+            if mask != 0 {
+                j += mask.trailing_zeros() as usize;
+                break;
+            }
+            j += 8;
+        }
+        while j < big.len() && big[j] < x {
+            j += 1;
+        }
+        if j < big.len() && big[j] == x {
+            count += 1;
+            j += 1;
+        }
+    }
+    count
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::doc::overlap_scalar;
+    use crate::util::check::{ensure, forall};
+
+    fn sorted_set(rng: &mut crate::util::rng::Rng, max_len: usize, universe: u32) -> Vec<u32> {
+        let n = rng.range(0, max_len + 1);
+        let mut v: Vec<u32> = (0..n).map(|_| rng.below(universe as u64) as u32).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+
+    #[test]
+    fn matches_merge_oracle_on_randomized_sets() {
+        forall(
+            "intersect-vs-merge",
+            200,
+            |rng| {
+                let a = sorted_set(rng, 120, 300);
+                let b = sorted_set(rng, 120, 300);
+                (a, b)
+            },
+            |(a, b)| {
+                let want = overlap_scalar(a, b);
+                ensure(
+                    intersect_count(a, b) == want,
+                    format!("dispatched count != oracle {want}"),
+                )?;
+                ensure(
+                    intersect_count_gallop(a, b) == want,
+                    format!("gallop count != oracle {want}"),
+                )
+            },
+        );
+    }
+
+    #[test]
+    fn asymmetric_and_edge_cases() {
+        let empty: Vec<u32> = vec![];
+        let long: Vec<u32> = (0..1000).map(|i| i * 3).collect();
+        assert_eq!(intersect_count(&empty, &long), 0);
+        assert_eq!(intersect_count(&long, &empty), 0);
+        assert_eq!(intersect_count(&long, &long), long.len());
+        // Sparse probes deep into a long list (the gallop's home turf).
+        let probes: Vec<u32> = vec![3, 2_001, 2_998, 2_999];
+        assert_eq!(intersect_count(&probes, &long), overlap_scalar(&probes, &long));
+        // Disjoint interleaved.
+        let evens: Vec<u32> = (0..200).map(|i| i * 2).collect();
+        let odds: Vec<u32> = (0..200).map(|i| i * 2 + 1).collect();
+        assert_eq!(intersect_count(&evens, &odds), 0);
+        // Values above i32::MAX exercise the unsigned compare.
+        let hi_a: Vec<u32> = vec![1, u32::MAX - 9, u32::MAX - 1, u32::MAX];
+        let hi_b: Vec<u32> = (0..64).map(|i| u32::MAX - 63 + i).collect();
+        assert_eq!(intersect_count(&hi_a, &hi_b), overlap_scalar(&hi_a, &hi_b));
+    }
+}

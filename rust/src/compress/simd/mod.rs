@@ -1,0 +1,27 @@
+//! SoA/SIMD kernels for the gateway scoring pipeline (§Perf, PR 6;
+//! `simd` cargo feature, default on).
+//!
+//! Three of the compressor's four hottest inner loops live here or are
+//! restructured around the layouts defined here:
+//!
+//! * [`intersect`] — sorted-u32 postings/word-set intersection: galloping
+//!   search with an AVX2 8-lane broadcast-compare on x86_64 (runtime
+//!   feature detection), a blocked scalar gallop elsewhere. Consumed by
+//!   `compress::doc::overlap`, i.e. the novelty pass and the AllPairs
+//!   TextRank oracle.
+//! * [`spmv`] — the TextRank power-iteration step as a gather over a CSR
+//!   edge arena (SoA row-offset/column/weight arrays) instead of per-node
+//!   `Vec<(u32, f64)>` adjacency walks.
+//! * The TF-IDF SoA weight table lives in `compress::tfidf`
+//!   (`sentence_scores_soa`): one `tf/total * idf` per distinct word id,
+//!   gathered per occurrence.
+//!
+//! Identity policy: every kernel's shipped output is bit-identical to its
+//! scalar oracle — intersection counts are integers; the CSR gather adds
+//! the same f64 terms in the same order as the scalar scatter; the weight
+//! table stores the exact product the scalar path recomputes at every
+//! occurrence. Dispatch is `crate::util::simd::simd_active()` checked at
+//! each call site, so force-scalar always exercises the live fallback.
+
+pub mod intersect;
+pub mod spmv;

@@ -50,6 +50,22 @@ pub struct TextrankScratch {
     degree: Vec<f64>,
     score: Vec<f64>,
     next: Vec<f64>,
+    /// CSR edge arena for the SIMD-dispatch power iteration (§Perf PR 6).
+    #[cfg(feature = "simd")]
+    csr: CsrArena,
+}
+
+/// SoA transpose of the normalized adjacency: row `i` holds the inbound
+/// contributions to sentence `i` in ascending-source order (see
+/// [`power_iterate_csr`]). All buffers keep capacity across documents.
+#[cfg(feature = "simd")]
+#[derive(Clone, Debug, Default)]
+struct CsrArena {
+    row_off: Vec<u32>,
+    col: Vec<u32>,
+    w: Vec<f64>,
+    /// Per-row write cursors used during the counting-sort transpose.
+    fill: Vec<u32>,
 }
 
 /// Sentence centrality scores, one per sentence (non-negative, sum ~ n).
@@ -113,6 +129,12 @@ pub fn centrality_into(
         }
     }
 
+    #[cfg(feature = "simd")]
+    if crate::util::simd::simd_active() {
+        power_iterate_csr(ts, n, out);
+        return;
+    }
+
     ts.score.clear();
     ts.score.resize(n, 1.0);
     ts.next.clear();
@@ -125,6 +147,73 @@ pub fn centrality_into(
                 ts.next[i as usize] += w_norm * s;
             }
         }
+        let delta: f64 = ts
+            .score
+            .iter()
+            .zip(ts.next.iter())
+            .map(|(a, b)| (a - b).abs())
+            .sum();
+        std::mem::swap(&mut ts.score, &mut ts.next);
+        if delta < TOL * n as f64 {
+            break;
+        }
+    }
+    out.extend_from_slice(&ts.score[..n]);
+}
+
+/// SIMD-dispatch power iteration over the CSR edge arena (§Perf PR 6).
+///
+/// Transposes the normalized adjacency with a counting sort — entry
+/// `(t, w)` in `edges[j]` lands in CSR row `t` carrying source `j` and
+/// weight `w = sim / degree[j]`, rows filled in ascending `j` because the
+/// outer loop walks sources in order — then runs the damped iterations as
+/// gathers ([`crate::compress::simd::spmv::spmv_step`]). Row `t`'s adds
+/// are the scatter loop's adds into `next[t]` in the same order with the
+/// same operands, and the delta reduction below is the scalar loop's own
+/// sequential sum, so scores are bit-identical (property-tested).
+#[cfg(feature = "simd")]
+fn power_iterate_csr(ts: &mut TextrankScratch, n: usize, out: &mut Vec<f64>) {
+    let csr = &mut ts.csr;
+    csr.row_off.clear();
+    csr.row_off.resize(n + 1, 0);
+    for es in ts.edges[..n].iter() {
+        for &(t, _) in es {
+            csr.row_off[t as usize + 1] += 1;
+        }
+    }
+    for i in 0..n {
+        csr.row_off[i + 1] += csr.row_off[i];
+    }
+    let nnz = csr.row_off[n] as usize;
+    csr.col.clear();
+    csr.col.resize(nnz, 0);
+    csr.w.clear();
+    csr.w.resize(nnz, 0.0);
+    csr.fill.clear();
+    csr.fill.extend_from_slice(&csr.row_off[..n]);
+    for (j, es) in ts.edges[..n].iter().enumerate() {
+        for &(t, wv) in es {
+            let slot = csr.fill[t as usize] as usize;
+            csr.col[slot] = j as u32;
+            csr.w[slot] = wv;
+            csr.fill[t as usize] += 1;
+        }
+    }
+
+    ts.score.clear();
+    ts.score.resize(n, 1.0);
+    ts.next.clear();
+    ts.next.resize(n, 0.0);
+    for _ in 0..MAX_ITERS {
+        crate::compress::simd::spmv::spmv_step(
+            &ts.csr.row_off,
+            &ts.csr.col,
+            &ts.csr.w,
+            &ts.score[..n],
+            DAMPING,
+            1.0 - DAMPING,
+            &mut ts.next[..n],
+        );
         let delta: f64 = ts
             .score
             .iter()
@@ -301,6 +390,22 @@ mod tests {
         ] {
             let d = Document::parse(text);
             assert_eq!(textrank(&d), textrank_naive(&d), "text={text:?}");
+        }
+    }
+
+    #[test]
+    fn csr_dispatch_is_bit_identical_to_scatter() {
+        use crate::util::simd::{with_dispatch, Dispatch};
+        let text = (0..60)
+            .map(|i| format!("Sentence {i} covers topic {} and topic {}.", i % 7, i % 3))
+            .collect::<Vec<_>>()
+            .join(" ");
+        let d = Document::parse(&text);
+        let scalar = with_dispatch(Dispatch::ForceScalar, || textrank(&d));
+        let simd = with_dispatch(Dispatch::ForceSimd, || textrank(&d));
+        assert_eq!(scalar.len(), simd.len());
+        for (i, (a, b)) in scalar.iter().zip(&simd).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "sentence {i}: {a} vs {b}");
         }
     }
 

@@ -32,24 +32,7 @@ pub fn sentence_scores_into(
     if n == 0 {
         return;
     }
-    // Document frequency per word id.
-    df.clear();
-    df.resize(doc.vocab, 0);
-    for set in &doc.word_sets {
-        for &w in set {
-            df[w as usize] += 1;
-        }
-    }
-    // Term frequency over the whole document.
-    tf.clear();
-    tf.resize(doc.vocab, 0);
-    let mut total_words = 0u64;
-    for seq in &doc.word_seqs {
-        for &w in seq {
-            tf[w as usize] += 1;
-        }
-        total_words += seq.len() as u64;
-    }
+    let total_words = count_df_tf(doc, df, tf);
     let idf = |w: u32| ((n as f64 + 1.0) / (df[w as usize] as f64 + 0.5)).ln();
 
     out.extend(doc.word_seqs.iter().map(|seq| {
@@ -65,6 +48,77 @@ pub fn sentence_scores_into(
             .sum();
         sum / seq.len() as f64
     }));
+}
+
+/// Document frequency + whole-document term frequency per word id into
+/// caller scratch; returns the total word count.
+fn count_df_tf(doc: &Document, df: &mut Vec<u32>, tf: &mut Vec<u32>) -> u64 {
+    df.clear();
+    df.resize(doc.vocab, 0);
+    for set in &doc.word_sets {
+        for &w in set {
+            df[w as usize] += 1;
+        }
+    }
+    tf.clear();
+    tf.resize(doc.vocab, 0);
+    let mut total_words = 0u64;
+    for seq in &doc.word_seqs {
+        for &w in seq {
+            tf[w as usize] += 1;
+        }
+        total_words += seq.len() as u64;
+    }
+    total_words
+}
+
+/// SoA fast path of [`sentence_scores_into`] (§Perf PR 6, `simd`
+/// feature): the per-word weight `(tf_w / total) * idf_w` is computed
+/// once per distinct word id into the caller's `wt` table and gathered
+/// per occurrence.
+///
+/// Identity: the table entry is the exact f64 product the scalar path
+/// recomputes at every occurrence of word `w` (same two factors, same
+/// ops), and the per-sentence gather adds those values in the same
+/// sequence order with the same sequential `sum()`, so the output is
+/// bit-identical (property-tested). The win is one `ln` per *distinct*
+/// word instead of one per *occurrence* — corpus documents repeat a small
+/// vocabulary heavily, so the transcendental count drops by the
+/// occurrences-per-word ratio. Falls back to the scalar path when SIMD
+/// dispatch is off (`wt` is then left cleared).
+pub fn sentence_scores_soa(
+    doc: &Document,
+    df: &mut Vec<u32>,
+    tf: &mut Vec<u32>,
+    wt: &mut Vec<f64>,
+    out: &mut Vec<f64>,
+) {
+    wt.clear();
+    #[cfg(feature = "simd")]
+    if crate::util::simd::simd_active() {
+        out.clear();
+        let n = doc.n_sentences();
+        if n == 0 {
+            return;
+        }
+        let total_words = count_df_tf(doc, df, tf);
+        wt.resize(doc.vocab, 0.0);
+        for ((wt_w, &tf_w), &df_w) in wt.iter_mut().zip(tf.iter()).zip(df.iter()) {
+            if tf_w > 0 {
+                let tfw = tf_w as f64 / total_words.max(1) as f64;
+                *wt_w = tfw * (((n as f64 + 1.0) / (df_w as f64 + 0.5)).ln());
+            }
+        }
+        out.extend(doc.word_seqs.iter().map(|seq| {
+            if seq.is_empty() {
+                return 0.0;
+            }
+            let sum: f64 = seq.iter().map(|&w| wt[w as usize]).sum();
+            sum / seq.len() as f64
+        }));
+        return;
+    }
+    sentence_scores_into(doc, df, tf, out);
 }
 
 /// Sparse TF-IDF vector for a full text against its own sentence-level IDF.
@@ -154,6 +208,32 @@ mod tests {
         let d = Document::parse("");
         assert!(sentence_scores(&d).is_empty());
         assert!(doc_vector(&d).is_empty());
+    }
+
+    #[test]
+    fn weight_table_path_is_bit_identical() {
+        use crate::util::simd::{with_dispatch, Dispatch};
+        for text in [
+            "",
+            "Only one sentence here.",
+            "Routing moves traffic. Routing saves cost. \
+             Routing hyperparameter tuning dominates the outcome. \
+             Routing is simple. Repetition repetition repetition everywhere.",
+        ] {
+            let d = Document::parse(text);
+            let want = sentence_scores(&d);
+            let (mut df, mut tf, mut wt, mut out) =
+                (Vec::new(), Vec::new(), Vec::new(), Vec::new());
+            for mode in [Dispatch::ForceScalar, Dispatch::ForceSimd] {
+                with_dispatch(mode, || {
+                    sentence_scores_soa(&d, &mut df, &mut tf, &mut wt, &mut out)
+                });
+                assert_eq!(want.len(), out.len(), "{mode:?} text={text:?}");
+                for (i, (a, b)) in want.iter().zip(&out).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{mode:?} sentence {i}: {a} vs {b}");
+                }
+            }
+        }
     }
 
     #[test]

@@ -18,6 +18,7 @@ use crate::planner::{
     plan_fleet, plan_homogeneous, plan_spec_sweep_gamma, plan_spec_sweep_gamma_cached,
     sweep_gamma, sweep_tiered, CalibCache, Plan, PlanInput,
 };
+use crate::util::par::{par_map_each, thread_cap};
 use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 use crate::util::table::{fmt_int, fmt_pct, Table};
@@ -290,16 +291,7 @@ pub fn table5_validate_replicated(
             .map(|&s| table5_validate(w, lambda, n_per_pool, s))
             .collect();
     }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = seeds
-            .iter()
-            .map(|&seed| scope.spawn(move || table5_validate(w, lambda, n_per_pool, seed)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("DES validation replication panicked"))
-            .collect()
-    })
+    par_map_each(seeds, |&seed| table5_validate(w, lambda, n_per_pool, seed))
 }
 
 /// Paper Table 5: analytical vs DES GPU utilization (PR fleet, gamma = 1).
@@ -624,8 +616,8 @@ fn table9_row(
 /// online autoscaler (cold-started at the t = 0 rate). All three run on
 /// the same request stream per variant (same seed).
 ///
-/// §Perf: the (variant x policy) grid shards over `std::thread::scope`
-/// like the planner sweeps — each arrival variant runs on its own worker,
+/// §Perf: the (variant x policy) grid fans out over the shared
+/// [`par_map_each`] substrate (one capped worker per arrival variant),
 /// and within a variant the static-peak and autoscale simulations (which
 /// share nothing but the seed) run concurrently; the oracle follows the
 /// autoscaler because it bills over its epoch grid. Every simulation is
@@ -640,20 +632,8 @@ pub fn table9_rows(w: &Workload, n: usize, seed: u64) -> Vec<Table9Row> {
     let horizon_est = n as f64 / 400.0;
     let epoch_s = (horizon_est / 25.0).max(1.0);
     let scenarios = table9_scenarios(horizon_est);
-    let per_variant: Vec<Vec<Table9Row>> = std::thread::scope(|scope| {
-        let spec_ref = &spec;
-        let handles: Vec<_> = scenarios
-            .into_iter()
-            .map(|(variant, model)| {
-                scope.spawn(move || {
-                    table9_variant(w, n, seed, epoch_s, variant, model, spec_ref)
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("Table 9 variant worker panicked"))
-            .collect()
+    let per_variant: Vec<Vec<Table9Row>> = par_map_each(&scenarios, |sc| {
+        table9_variant(w, n, seed, epoch_s, sc.0, sc.1.clone(), &spec)
     });
     per_variant.into_iter().flatten().collect()
 }
@@ -681,29 +661,32 @@ fn table9_variant(
         ..AutoscaleConfig::default()
     };
 
-    let (rep_static, rep_auto) = std::thread::scope(|scope| {
-        // (1) static worst-case: provision the peak once, never touch it.
-        let h_static = scope.spawn(|| {
-            let input_peak = mk_input(model.peak_rate());
-            let static_plan = plan_spec_sweep_gamma(&input_peak, spec).expect("static plan");
-            let mut cfg_static = cfg.clone();
-            cfg_static.replanning = false;
-            simulate_autoscale(
-                w,
-                model.clone(),
-                n,
-                &input_peak,
-                static_plan,
-                &cfg_static,
-                seed,
-            )
-        });
-        // (3) online autoscaler, cold-started at the t = 0 rate.
+    // (1) static worst-case: provision the peak once, never touch it.
+    let run_static = || {
+        let input_peak = mk_input(model.peak_rate());
+        let static_plan = plan_spec_sweep_gamma(&input_peak, spec).expect("static plan");
+        let mut cfg_static = cfg.clone();
+        cfg_static.replanning = false;
+        simulate_autoscale(w, model.clone(), n, &input_peak, static_plan, &cfg_static, seed)
+    };
+    // (3) online autoscaler, cold-started at the t = 0 rate.
+    let run_auto = || {
         let input0 = mk_input(model.rate_hint());
         let init = plan_spec_sweep_gamma(&input0, spec).expect("initial plan");
-        let auto = simulate_autoscale(w, model.clone(), n, &input0, init, &cfg, seed);
-        (h_static.join().expect("static sim panicked"), auto)
-    });
+        simulate_autoscale(w, model.clone(), n, &input0, init, &cfg, seed)
+    };
+    // The pair overlaps on a scoped worker unless the process-wide cap
+    // (`--threads` / `FLEETOPT_THREADS`) forbids spawning; either way the
+    // two runs share nothing but the seed, so the reports are identical.
+    let (rep_static, rep_auto) = if thread_cap() <= 1 {
+        (run_static(), run_auto())
+    } else {
+        std::thread::scope(|scope| {
+            let h_static = scope.spawn(run_static);
+            let auto = run_auto();
+            (h_static.join().expect("static sim panicked"), auto)
+        })
+    };
 
     // (2) per-epoch oracle over the autoscaler's own epoch grid: the
     // hindsight-optimal plan at each epoch's realized rate, billed
@@ -772,17 +755,9 @@ pub fn table9(n: usize) -> Table {
         ],
     );
     let ws = traces::all();
-    let per_trace: Vec<Vec<Table9Row>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = ws
-            .iter()
-            .enumerate()
-            .map(|(i, w)| scope.spawn(move || table9_rows(w, n, 0x7AB9 + i as u64)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("Table 9 trace worker panicked"))
-            .collect()
-    });
+    let items: Vec<(usize, &Workload)> = ws.iter().enumerate().collect();
+    let per_trace: Vec<Vec<Table9Row>> =
+        par_map_each(&items, |&(i, w)| table9_rows(w, n, 0x7AB9 + i as u64));
     for rows in per_trace {
         for r in rows {
             t.row(&[

@@ -218,34 +218,24 @@ struct TierSimCfg {
     warmup_s: f64,
 }
 
-/// Simulate every tier of a routed trace, one scoped thread per tier
-/// (§Perf): the tiers' traces are disjoint and their simulations
-/// independent, so per-tier results are bit-identical to a sequential
-/// run. Tiers with no GPUs or no traffic are skipped (`None`).
+/// Simulate every tier of a routed trace, one capped worker per tier via
+/// the shared [`crate::util::par`] substrate (§Perf): the tiers' traces
+/// are disjoint and their simulations independent, so per-tier results
+/// are bit-identical to a sequential run. Tiers with no GPUs or no
+/// traffic are skipped (`None`).
 fn simulate_tiers(
     g: &GpuProfile,
     cfgs: &[TierSimCfg],
     traces: &[Vec<SimRequest>],
 ) -> Vec<Option<SimResult>> {
     assert_eq!(cfgs.len(), traces.len());
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = cfgs
-            .iter()
-            .zip(traces)
-            .map(|(tc, trace)| {
-                (tc.n_gpus > 0 && !trace.is_empty()).then(|| {
-                    scope.spawn(move || {
-                        let mut cfg = SimConfig::new(g.clone(), tc.n_gpus, tc.n_slots);
-                        cfg.warmup_s = tc.warmup_s;
-                        simulate_pool(&cfg, trace)
-                    })
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.map(|h| h.join().expect("tier DES panicked")))
-            .collect()
+    let items: Vec<(&TierSimCfg, &Vec<SimRequest>)> = cfgs.iter().zip(traces).collect();
+    crate::util::par::par_map_each(&items, |&(tc, trace)| {
+        (tc.n_gpus > 0 && !trace.is_empty()).then(|| {
+            let mut cfg = SimConfig::new(g.clone(), tc.n_gpus, tc.n_slots);
+            cfg.warmup_s = tc.warmup_s;
+            simulate_pool(&cfg, trace)
+        })
     })
 }
 

@@ -382,10 +382,11 @@ pub fn simulate_pool_with(
 }
 
 /// Run independent replications of one pool configuration in parallel
-/// (§Perf): each trace is simulated on its own scoped thread. Results are
-/// returned in input order and each is bit-identical to a sequential
-/// `simulate_pool` call — the simulator is deterministic and shares no
-/// mutable state across replications.
+/// (§Perf): traces fan out over the shared [`crate::util::par`] substrate
+/// (one capped worker per trace). Results are returned in input order and
+/// each is bit-identical to a sequential `simulate_pool` call — the
+/// simulator is deterministic and shares no mutable state across
+/// replications.
 pub fn simulate_pool_replications(
     cfg: &SimConfig,
     traces: &[Vec<SimRequest>],
@@ -397,16 +398,7 @@ pub fn simulate_pool_replications(
             .map(|t| simulate_pool_with(cfg, t, &mut scratch))
             .collect();
     }
-    std::thread::scope(|scope| {
-        let handles: Vec<_> = traces
-            .iter()
-            .map(|t| scope.spawn(move || simulate_pool(cfg, t)))
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("DES replication panicked"))
-            .collect()
-    })
+    crate::util::par::par_map_each(traces, |t| simulate_pool(cfg, t))
 }
 
 #[cfg(test)]

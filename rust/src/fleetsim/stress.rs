@@ -196,36 +196,21 @@ pub fn run_stress(cfg: &StressConfig) -> StressReport {
         phase: 0.0,
     };
 
-    // Full trace + one DES per tier on scoped threads.
+    // Full trace + one capped DES worker per tier (util::par substrate).
     let t_gen = Instant::now();
     let routed =
         route_trace_tiered_model(&w, &model, cfg.n_requests, &boundaries, &gammas, cfg.seed);
     let gen_s = t_gen.elapsed().as_secs_f64();
     let t_sim = Instant::now();
-    let results: Vec<Option<SimResult>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = routed
-            .tiers
-            .iter()
-            .enumerate()
-            .map(|(ti, trace)| {
-                let gref = &g;
-                let n_gpus = gpus[ti];
-                let slots = n_slots[ti];
-                let queue_impl = cfg.queue_impl;
-                (!trace.is_empty()).then(|| {
-                    scope.spawn(move || {
-                        let mut sc = SimConfig::new(gref.clone(), n_gpus, slots);
-                        sc.queue_impl = queue_impl;
-                        simulate_pool(&sc, trace)
-                    })
-                })
+    let items: Vec<(usize, &Vec<SimRequest>)> = routed.tiers.iter().enumerate().collect();
+    let results: Vec<Option<SimResult>> =
+        crate::util::par::par_map_each(&items, |&(ti, trace)| {
+            (!trace.is_empty()).then(|| {
+                let mut sc = SimConfig::new(g.clone(), gpus[ti], n_slots[ti]);
+                sc.queue_impl = cfg.queue_impl;
+                simulate_pool(&sc, trace)
             })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.map(|h| h.join().expect("stress tier DES panicked")))
-            .collect()
-    });
+        });
     let sim_s = t_sim.elapsed().as_secs_f64();
 
     let mut completed = 0u64;

@@ -61,6 +61,10 @@ USAGE:
   --tiers takes either K-1 boundaries plus the long window
   (e.g. 4096,16384,65536) or a bare fleet size K (2..=6) to sweep
   boundary combinations.
+
+  --threads N caps every internal thread fan-out (sweeps, DES
+  replications, table grids) at N workers; FLEETOPT_THREADS=N in the
+  environment does the same. FLEETOPT_SIMD=0 forces the scalar kernels.
 "
     );
     std::process::exit(2);
@@ -690,6 +694,10 @@ fn main() -> Result<()> {
         usage();
     }
     let (_pos, flags) = parse_args(&args[1..]);
+    if flags.contains_key("threads") {
+        let n = flag_count(&flags, "threads", 1)?;
+        fleetopt::util::par::set_thread_cap(n as usize);
+    }
     match args[0].as_str() {
         "plan" => cmd_plan(&flags),
         "sweep" => cmd_sweep(&flags),

@@ -20,6 +20,6 @@ pub use sweep::{
 };
 pub use tiered::{
     layout_neighborhood, plan_spec_sweep_gamma, plan_spec_sweep_gamma_cached, plan_tiers,
-    sweep_tiered, sweep_tiered_cached, sweep_tiered_pruned, sweep_tiered_pruned_seeded,
-    sweep_tiered_serial, PruneStats, TierCell, TieredPlan,
+    sweep_cell_bounds, sweep_tiered, sweep_tiered_cached, sweep_tiered_pruned,
+    sweep_tiered_pruned_seeded, sweep_tiered_serial, PruneStats, TierCell, TieredPlan,
 };

@@ -331,50 +331,22 @@ pub fn plan_homogeneous(input: &PlanInput) -> Result<Plan, SizingError> {
     })
 }
 
-/// Number of worker threads for a sweep of `cells` cells. Capped so each
-/// worker amortizes its spawn cost over >= 4 cells — the full sweep is
-/// only milliseconds, so oversharding on many-core hosts would give the
-/// gain back to thread startup.
-fn sweep_workers(cells: usize) -> usize {
-    std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(cells.div_ceil(4))
-        .min(16)
-        .max(1)
-}
-
 /// Generic sharded map for sweep grids: evaluate `f` over `items`,
-/// optionally split across `std::thread::scope` workers (§Perf). Results
-/// are returned in input order and are bit-identical to the serial
-/// evaluation whenever `f` is deterministic — the planner's shared
-/// [`CalibCache`] only memoizes values every worker would compute
-/// identically. Shared by the (B, gamma) sweep and the K-tier boundary
-/// sweep (`planner::tiered`).
+/// optionally split across workers (§Perf). Delegates to the shared
+/// [`crate::util::par::par_map`] substrate — contiguous chunks, >= 4
+/// cells per worker (the full sweep is only milliseconds, so oversharding
+/// would give the gain back to thread startup), capped by
+/// `FLEETOPT_THREADS` / `--threads`. Results are returned in input order
+/// and are bit-identical to the serial evaluation whenever `f` is
+/// deterministic — the planner's shared [`CalibCache`] only memoizes
+/// values every worker would compute identically. Shared by the
+/// (B, gamma) sweep and the K-tier boundary sweep (`planner::tiered`).
 pub(crate) fn par_map<T: Sync, R: Send>(
     items: &[T],
     parallel: bool,
     f: impl Fn(&T) -> Result<R, SizingError> + Sync,
 ) -> Result<Vec<R>, SizingError> {
-    let workers = if parallel { sweep_workers(items.len()) } else { 1 };
-    if workers <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    let chunk_len = items.len().div_ceil(workers);
-    let fref = &f;
-    let shards: Result<Vec<Vec<R>>, SizingError> = std::thread::scope(|scope| {
-        let handles: Vec<_> = items
-            .chunks(chunk_len)
-            .map(|shard| {
-                scope.spawn(move || shard.iter().map(fref).collect::<Result<Vec<R>, SizingError>>())
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("sweep worker panicked"))
-            .collect()
-    });
-    Ok(shards?.into_iter().flatten().collect())
+    crate::util::par::par_map(items, parallel, f)
 }
 
 /// Evaluate Algorithm-1 cells (recalibrating long pools) against one

@@ -22,7 +22,8 @@ use crate::planner::sizing::{min_gpus, SizingError};
 use crate::planner::sweep::{
     calibrated, candidate_boundaries, par_map, CalibCache, Plan, PlanInput, PoolPlan,
 };
-use crate::queueing::service::{MomentTable, ServiceStats};
+use crate::queueing::service::{CutMoments, MomentTable, ServiceStats};
+use crate::util::par::par_map_strided;
 use crate::workload::cdf::LengthDist;
 
 /// A provisioned K-tier fleet: the generalized planner's output tuple.
@@ -159,6 +160,7 @@ pub fn plan_tiers(
 /// One definition shared by the exact cell evaluation and the
 /// bound-and-prune cost bound, so the two can never disagree on a cell's
 /// traffic split or truncation cuts — the bound's soundness rests on it.
+#[derive(Default)]
 pub(crate) struct CellLayout {
     /// Effective per-boundary gammas (band clamped at the next boundary).
     pub eff: Vec<f64>,
@@ -179,6 +181,23 @@ pub(crate) fn cell_layout(
     gammas: &[f64],
     recalibrate: bool,
 ) -> CellLayout {
+    let mut out = CellLayout::default();
+    cell_layout_into(input, spec, gammas, recalibrate, &mut out);
+    out
+}
+
+/// [`cell_layout`] writing into caller-recycled buffers: the batched
+/// bound pass reuses one `CellLayout` per lane across every block it
+/// scores, so its steady-state layout work allocates (almost) nothing.
+/// Same single definition — the allocating wrapper above is the only
+/// other entry point.
+pub(crate) fn cell_layout_into(
+    input: &PlanInput,
+    spec: &FleetSpec,
+    gammas: &[f64],
+    recalibrate: bool,
+    out: &mut CellLayout,
+) {
     let k = spec.k();
     assert!(k >= 2, "plan_tiers needs at least 2 tiers");
     assert_eq!(gammas.len(), k - 1, "one gamma per boundary");
@@ -192,31 +211,31 @@ pub(crate) fn cell_layout(
     // and the share accounting below (adjacent-tier transfers only) would
     // not match the router. The last boundary is unclamped, so K = 2 is
     // Algorithm 1 verbatim.
-    let mut eff = Vec::with_capacity(k - 1);
+    out.eff.clear();
     for (i, &g_i) in gammas.iter().enumerate() {
         assert!(g_i >= 1.0);
-        eff.push(crate::compress::gate::clamp_gamma(
+        out.eff.push(crate::compress::gate::clamp_gamma(
             boundaries[i],
             boundaries.get(i + 1).copied(),
             g_i,
         ));
     }
 
-    let mut nat_below = Vec::with_capacity(k - 1);
-    let mut betas = Vec::with_capacity(k - 1);
-    let mut gains = Vec::with_capacity(k - 1);
+    out.nat_below.clear();
+    out.betas.clear();
+    out.gains.clear();
     for i in 0..k - 1 {
         let b = boundaries[i] as f64;
         let alpha_i = w.cdf.cdf(b);
-        let beta_i = w.cdf.cdf(eff[i] * b) - alpha_i;
+        let beta_i = w.cdf.cdf(out.eff[i] * b) - alpha_i;
         // Eq. 1: only an open band (gamma > 1) compresses.
-        let p_c = if eff[i] > 1.0 { w.p_c } else { 0.0 };
-        nat_below.push(alpha_i);
-        betas.push(beta_i);
-        gains.push(beta_i * p_c);
+        let p_c = if out.eff[i] > 1.0 { w.p_c } else { 0.0 };
+        out.nat_below.push(alpha_i);
+        out.betas.push(beta_i);
+        out.gains.push(beta_i * p_c);
     }
 
-    let mut tiers = Vec::with_capacity(k);
+    out.tiers.clear();
     let mut lambda_used = 0.0;
     for i in 0..k {
         let last = i + 1 == k;
@@ -228,13 +247,13 @@ pub(crate) fn cell_layout(
         } else {
             let bp = boundaries[i - 1] as f64;
             if recalibrate {
-                eff[i - 1] * bp
+                out.eff[i - 1] * bp
             } else {
                 bp
             }
         };
-        let lo_f = if i == 0 { 0.0 } else { nat_below[i - 1] };
-        let loss = if i == 0 { 0.0 } else { gains[i - 1] };
+        let lo_f = if i == 0 { 0.0 } else { out.nat_below[i - 1] };
+        let loss = if i == 0 { 0.0 } else { out.gains[i - 1] };
 
         if last {
             let lambda_i = input.lambda - lambda_used;
@@ -243,10 +262,10 @@ pub(crate) fn cell_layout(
             } else {
                 None
             };
-            tiers.push((lambda_i, cut));
+            out.tiers.push((lambda_i, cut));
         } else {
-            let nat = nat_below[i] - lo_f;
-            let share = ((nat_below[i] - lo_f) + gains[i]) - loss;
+            let nat = out.nat_below[i] - lo_f;
+            let share = ((out.nat_below[i] - lo_f) + out.gains[i]) - loss;
             let lambda_i = share * input.lambda;
             lambda_used += lambda_i;
             let b = boundaries[i] as f64;
@@ -281,21 +300,13 @@ pub(crate) fn cell_layout(
                     // lambda_i > 0 with no mass below B_i forces
                     // gains[i] > 0, so the band (B_i, gamma_i B_i] has
                     // mass by construction.
-                    Some((b.max(min_t), (eff[i] * b).min(max_t)))
+                    Some((b.max(min_t), (out.eff[i] * b).min(max_t)))
                 }
             } else {
                 None
             };
-            tiers.push((lambda_i, cut));
+            out.tiers.push((lambda_i, cut));
         }
-    }
-
-    CellLayout {
-        eff,
-        nat_below,
-        betas,
-        gains,
-        tiers,
     }
 }
 
@@ -447,45 +458,6 @@ impl PruneStats {
 /// never flip a tie) while being far below one GPU-hour.
 const PRUNE_MARGIN: f64 = 1.0;
 
-/// Strided parallel map: worker `w` takes items `w, w + W, w + 2W, ...`.
-/// Unlike [`par_map`]'s contiguous chunks this interleaves, which matters
-/// for the pruned sweep: the few cells that survive the bound cluster
-/// around the optimum in grid order, and contiguous sharding would hand
-/// the whole expensive cluster to one worker. Results come back in input
-/// order. Callers whose `f` races on shared state (the pruned sweep's
-/// incumbent atomic) own their own schedule-independence argument — there
-/// it is the prune-margin proof: *which* cells get pruned varies with the
-/// schedule; the selected plan provably cannot.
-fn par_map_strided<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
-    let workers = std::thread::available_parallelism()
-        .map(|n| n.get())
-        .unwrap_or(1)
-        .min(items.len().div_ceil(4))
-        .min(16)
-        .max(1);
-    if workers <= 1 {
-        return items.iter().map(&f).collect();
-    }
-    let fref = &f;
-    let shards: Vec<Vec<R>> = std::thread::scope(|scope| {
-        let handles: Vec<_> = (0..workers)
-            .map(|w| {
-                scope.spawn(move || {
-                    items.iter().skip(w).step_by(workers).map(fref).collect::<Vec<R>>()
-                })
-            })
-            .collect();
-        handles
-            .into_iter()
-            .map(|h| h.join().expect("sweep worker panicked"))
-            .collect()
-    });
-    let mut iters: Vec<_> = shards.into_iter().map(|s| s.into_iter()).collect();
-    (0..items.len())
-        .map(|i| iters[i % workers].next().expect("shard underflow"))
-        .collect()
-}
-
 /// Closed-form lower bound on one cell's annual cost: per tier, the
 /// stability bound `n_i >= ceil(a_i / rho_max)` priced at the tier rates —
 /// no Erlang-C, no quadrature. `a_i` uses the moment table's
@@ -493,19 +465,22 @@ fn par_map_strided<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) ->
 /// quadrature-evaluated cost from below (the SLO constraint only ever
 /// *adds* GPUs, and infeasible cells are skipped by the sweep anyway).
 /// `None` when a cut cannot be bounded (the cell is then evaluated).
-fn cell_cost_lb(
+/// The cut moments come through `cut` so the batched evaluator can route
+/// the identical arithmetic through its [`CutMemo`]-backed source.
+///
+/// [`CutMemo`]: crate::queueing::simd::cells::CutMemo
+fn cell_cost_lb_with(
     input: &PlanInput,
     spec: &FleetSpec,
     gammas: &[f64],
-    table: &MomentTable,
-    len_points: usize,
+    cut: &mut dyn FnMut(f64, f64) -> Option<CutMoments>,
 ) -> Option<f64> {
     let layout = cell_layout(input, spec, gammas, true);
     let mut counts = Vec::with_capacity(spec.k());
-    for (i, &(lambda_i, cut)) in layout.tiers.iter().enumerate() {
-        let n_lb = match cut {
+    for (i, &(lambda_i, cut_i)) in layout.tiers.iter().enumerate() {
+        let n_lb = match cut_i {
             Some((lo, hi)) if lambda_i > 0.0 => {
-                let m = table.cut_moments(lo, hi, len_points)?;
+                let m = cut(lo, hi)?;
                 // Iterations >= 2 always (one prefill chunk + one decode).
                 let e_iter_lb = (m.e_iter - m.err_iter).max(1.0);
                 let n_slots = spec.tiers[i].n_max;
@@ -519,6 +494,247 @@ fn cell_cost_lb(
     }
     let rates: Vec<f64> = spec.tiers.iter().map(|t| t.cost_hr).collect();
     Some(fleet_cost_yr_tiered(&counts, &rates))
+}
+
+/// [`cell_cost_lb_with`] reading cut moments straight off the table.
+fn cell_cost_lb(
+    input: &PlanInput,
+    spec: &FleetSpec,
+    gammas: &[f64],
+    table: &MomentTable,
+    len_points: usize,
+) -> Option<f64> {
+    cell_cost_lb_with(input, spec, gammas, &mut |lo, hi| {
+        table.cut_moments(lo, hi, len_points)
+    })
+}
+
+/// Lower-bound every cell of a sweep grid, in input order. `batched`
+/// routes through the lane-parallel evaluator
+/// ([`crate::queueing::simd::cells`]) when the `simd` feature is on: a
+/// per-worker `CutMemo` dedupes the pure `cut_moments` calls neighboring
+/// cells share, and the stability arithmetic runs up to `CELL_LANES`
+/// cells in lockstep. Both arms are bit-identical — each lane performs
+/// exactly the scalar [`cell_cost_lb`] operation sequence on its own
+/// operands, and the memo returns the identical `CutMoments` a direct
+/// call computes (property-tested in `tests/simd_dispatch.rs`).
+fn cell_bounds(
+    input: &PlanInput,
+    cells: &[(usize, &[u32], f64)],
+    k: usize,
+    table: &MomentTable,
+    len_points: usize,
+    batched: bool,
+) -> Vec<Option<f64>> {
+    #[cfg(feature = "simd")]
+    if batched {
+        return cell_bounds_batched(input, cells, k, table, len_points);
+    }
+    #[cfg(not(feature = "simd"))]
+    let _ = batched;
+    par_map_strided(cells, |&(_, combo, gamma)| {
+        let spec = input.gpu.fleet_spec(combo);
+        cell_cost_lb(input, &spec, &vec![gamma; k - 1], table, len_points)
+    })
+}
+
+/// Worker-local state for the batched bound pass: the cut-moment memo
+/// plus every buffer a block evaluation needs, recycled across blocks so
+/// the steady-state pass performs no heap allocation — the scalar
+/// per-cell path pays ~10 small allocations per cell.
+#[cfg(feature = "simd")]
+struct LbScratch {
+    memo: crate::queueing::simd::cells::CutMemo,
+    /// One recycled layout per lane.
+    layouts: Vec<CellLayout>,
+    /// Specs deduped by boundary combo (the grid is combo-major, so a
+    /// block usually spans one or two combos).
+    specs: Vec<FleetSpec>,
+    /// Per-cell gamma vector, refilled in place.
+    gbuf: Vec<f64>,
+    /// Flat `block.len() x k` stability counts.
+    counts: Vec<u64>,
+    /// Per-cell tier rates, refilled in place.
+    rates: Vec<f64>,
+}
+
+#[cfg(feature = "simd")]
+impl LbScratch {
+    fn new() -> Self {
+        Self {
+            memo: crate::queueing::simd::cells::CutMemo::new(),
+            layouts: Vec::new(),
+            specs: Vec::new(),
+            gbuf: Vec::new(),
+            counts: Vec::new(),
+            rates: Vec::new(),
+        }
+    }
+}
+
+/// The batched bound pass: cells are cut into `CELL_LANES`-cell blocks
+/// and the blocks fan out strided across capped workers, each worker
+/// owning its own [`LbScratch`]. The memo is deliberately worker-local —
+/// a shared one would serialize every lookup on a lock, and striding
+/// already lands neighboring blocks (which share most cuts) on the same
+/// worker in rotation.
+#[cfg(feature = "simd")]
+fn cell_bounds_batched(
+    input: &PlanInput,
+    cells: &[(usize, &[u32], f64)],
+    k: usize,
+    table: &MomentTable,
+    len_points: usize,
+) -> Vec<Option<f64>> {
+    use crate::queueing::simd::cells::CELL_LANES;
+
+    let blocks: Vec<&[(usize, &[u32], f64)]> = cells.chunks(CELL_LANES).collect();
+    let workers = crate::util::par::workers_for(blocks.len(), 2);
+    let shards: Vec<Vec<Vec<Option<f64>>>> = if workers <= 1 {
+        let mut scratch = LbScratch::new();
+        vec![blocks
+            .iter()
+            .map(|b| lb_block(input, b, k, table, len_points, &mut scratch))
+            .collect()]
+    } else {
+        let blocks_ref = &blocks;
+        std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..workers)
+                .map(|w| {
+                    scope.spawn(move || {
+                        let mut scratch = LbScratch::new();
+                        blocks_ref
+                            .iter()
+                            .skip(w)
+                            .step_by(workers)
+                            .map(|b| lb_block(input, b, k, table, len_points, &mut scratch))
+                            .collect::<Vec<Vec<Option<f64>>>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("bound worker panicked"))
+                .collect()
+        })
+    };
+    let mut iters: Vec<_> = shards.into_iter().map(|s| s.into_iter()).collect();
+    let mut out = Vec::with_capacity(cells.len());
+    for b in 0..blocks.len() {
+        out.extend(iters[b % workers].next().expect("bound shard underflow"));
+    }
+    out
+}
+
+/// Lower-bound one block of up to `CELL_LANES` cells through the
+/// lane-parallel stability evaluator. The per-tier lane fill replays
+/// [`cell_cost_lb_with`]'s match arm exactly: a lane is live iff the tier
+/// has a cut and traffic, an unboundable cut kills the whole cell (the
+/// scalar `?` — later tiers of a dead cell skip the memo, as the scalar
+/// early return does), and every other arm contributes a zero count.
+#[cfg(feature = "simd")]
+fn lb_block(
+    input: &PlanInput,
+    block: &[(usize, &[u32], f64)],
+    k: usize,
+    table: &MomentTable,
+    len_points: usize,
+    scratch: &mut LbScratch,
+) -> Vec<Option<f64>> {
+    use crate::queueing::simd::cells::{stability_counts_lanes, LaneInputs, CELL_LANES};
+
+    debug_assert!(block.len() <= CELL_LANES);
+    scratch.specs.clear();
+    while scratch.layouts.len() < block.len() {
+        scratch.layouts.push(CellLayout::default());
+    }
+    let mut spec_of = [0usize; CELL_LANES];
+    let mut last_combo: Option<&[u32]> = None;
+    for (j, &(_, combo, gamma)) in block.iter().enumerate() {
+        if last_combo != Some(combo) {
+            scratch.specs.push(input.gpu.fleet_spec(combo));
+            last_combo = Some(combo);
+        }
+        spec_of[j] = scratch.specs.len() - 1;
+        scratch.gbuf.clear();
+        scratch.gbuf.resize(k - 1, gamma);
+        cell_layout_into(
+            input,
+            &scratch.specs[spec_of[j]],
+            &scratch.gbuf,
+            true,
+            &mut scratch.layouts[j],
+        );
+    }
+    let mut dead = [false; CELL_LANES];
+    scratch.counts.clear();
+    scratch.counts.resize(k * block.len(), 0);
+    for t in 0..k {
+        let mut li = LaneInputs::default();
+        for (l, layout) in scratch.layouts[..block.len()].iter().enumerate() {
+            if dead[l] {
+                continue;
+            }
+            let (lambda_t, cut_t) = layout.tiers[t];
+            match cut_t {
+                Some((lo, hi)) if lambda_t > 0.0 => {
+                    match scratch.memo.cut(table, lo, hi, len_points) {
+                        Some(m) => {
+                            let n_slots = scratch.specs[spec_of[l]].tiers[t].n_max;
+                            li.live[l] = true;
+                            li.lambda[l] = lambda_t;
+                            li.e_iter[l] = m.e_iter;
+                            li.err_iter[l] = m.err_iter;
+                            li.t_iter[l] = input.gpu.t_iter_s(n_slots);
+                            li.n_slots[l] = n_slots as f64;
+                        }
+                        None => dead[l] = true,
+                    }
+                }
+                _ => {}
+            }
+        }
+        let mut n_lb = [0u64; CELL_LANES];
+        stability_counts_lanes(&li, input.cfg.rho_max, &mut n_lb);
+        for (l, &n) in n_lb[..block.len()].iter().enumerate() {
+            scratch.counts[l * k + t] = n;
+        }
+    }
+    (0..block.len())
+        .map(|l| {
+            if dead[l] {
+                return None;
+            }
+            scratch.rates.clear();
+            let spec = &scratch.specs[spec_of[l]];
+            scratch.rates.extend(spec.tiers.iter().map(|t| t.cost_hr));
+            Some(fleet_cost_yr_tiered(
+                &scratch.counts[l * k..(l + 1) * k],
+                &scratch.rates,
+            ))
+        })
+        .collect()
+}
+
+/// Every sweep cell's cost lower bound in grid order — the bound pass of
+/// [`sweep_tiered_pruned`] exposed on its own for the batched-vs-scalar
+/// identity property tests and the planner bench. `batched = true`
+/// selects the lane-parallel evaluator when the `simd` feature is on (a
+/// no-op fallback to scalar otherwise); both arms are bit-identical.
+pub fn sweep_cell_bounds(input: &PlanInput, k: usize, batched: bool) -> Vec<Option<f64>> {
+    assert!(k >= 2, "sweep_cell_bounds needs at least 2 tiers");
+    let cands = candidate_boundaries(input);
+    let combos = boundary_combos(&cands, k - 1);
+    let mut cells: Vec<(usize, &[u32], f64)> =
+        Vec::with_capacity(combos.len() * input.cfg.gammas.len());
+    for combo in &combos {
+        for &gamma in &input.cfg.gammas {
+            cells.push((cells.len(), combo.as_slice(), gamma));
+        }
+    }
+    let table = MomentTable::for_workload(&input.workload, input.gpu.chunk);
+    let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
+    cell_bounds(input, &cells, k, &table, len_points, batched)
 }
 
 /// Bound-and-prune K-tier sweep: **the same argmin as [`sweep_tiered`],
@@ -572,10 +788,8 @@ pub fn sweep_tiered_pruned_seeded(
 
     let table = MomentTable::for_workload(&input.workload, input.gpu.chunk);
     let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
-    let lbs: Vec<Option<f64>> = par_map_strided(&cells, |&(_, combo, gamma)| {
-        let spec = input.gpu.fleet_spec(combo);
-        cell_cost_lb(input, &spec, &vec![gamma; k - 1], &table, len_points)
-    });
+    let batched = crate::util::simd::simd_active();
+    let lbs: Vec<Option<f64>> = cell_bounds(input, &cells, k, &table, len_points, batched);
 
     let eval = |combo: &[u32], gamma: f64| -> Result<TieredPlan, SizingError> {
         let spec = input.gpu.fleet_spec(combo);
@@ -624,6 +838,11 @@ pub fn sweep_tiered_pruned_seeded(
         }
     }
 
+    // Strided fan-out: surviving cells cluster around the optimum in grid
+    // order, and contiguous sharding would hand the whole expensive
+    // cluster to one worker. Which cells get pruned varies with the
+    // worker schedule through the incumbent atomic; the prune-margin
+    // proof guarantees the *selected plan* cannot.
     let pruned_n = AtomicUsize::new(0);
     let infeasible_n = AtomicUsize::new(0);
     let plans: Vec<Option<TieredPlan>> = par_map_strided(&cells, |&(i, combo, gamma)| {
@@ -927,6 +1146,28 @@ mod tests {
                     "B={b} gamma={gamma}: lb {lb} > cost {}",
                     plan.cost_yr
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn batched_cell_bounds_match_scalar_bitwise() {
+        // The K4 acceptance identity at its source: the lane-parallel
+        // memoized bound pass must reproduce every scalar bound exactly
+        // (full trace coverage lives in `tests/simd_dispatch.rs`).
+        let input = azure_input();
+        for k in [2usize, 3] {
+            let scalar = sweep_cell_bounds(&input, k, false);
+            let batched = sweep_cell_bounds(&input, k, true);
+            assert_eq!(scalar.len(), batched.len(), "K={k}");
+            for (i, (s, b)) in scalar.iter().zip(&batched).enumerate() {
+                match (s, b) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.to_bits(), y.to_bits(), "cell {i} K={k}");
+                    }
+                    (None, None) => {}
+                    _ => panic!("cell {i} K={k}: bound presence differs"),
+                }
             }
         }
     }

@@ -6,3 +6,5 @@ pub mod erlang;
 pub mod kimura;
 pub mod mgc;
 pub mod service;
+#[cfg(feature = "simd")]
+pub mod simd;

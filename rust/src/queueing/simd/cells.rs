@@ -1,0 +1,157 @@
+//! Batched `MomentTable` cut evaluation for the bound-and-prune sweep
+//! (§Perf, PR 6): `sweep_tiered_pruned` scores surviving cell clusters
+//! [`CELL_LANES`] at a time instead of one `cut_moments` chain per cell.
+//!
+//! Two mechanisms, both value-preserving:
+//!
+//! * [`CutMemo`] — `MomentTable::cut_moments(lo, hi, len_points)` is a
+//!   pure function of the cut for a fixed table and resolution, and
+//!   neighboring sweep cells share most of their cuts (the tier-0 cut is
+//!   gamma-independent, so a whole gamma row reuses it; boundary combos
+//!   overlap pairwise). The memo returns the identical `CutMoments` the
+//!   per-cell path recomputes, trading ~70-90% of the quadrature walks
+//!   for hash lookups.
+//! * [`stability_counts_lanes`] — the per-tier stability lower-bound
+//!   arithmetic (`e_iter_lb -> a_lb -> ceil`) runs for up to 8 cells in
+//!   lane lockstep. Each live lane performs exactly the scalar
+//!   `cell_cost_lb` operation sequence on its own operands; lanes never
+//!   share an accumulator, so every lane is bit-identical to the scalar
+//!   bound (property-tested in `tests/simd_dispatch.rs`).
+
+use crate::queueing::service::{CutMoments, MomentTable};
+use crate::util::hash::FxHashMap;
+
+/// Lane width of the batched cell evaluator.
+pub const CELL_LANES: usize = 8;
+
+/// Per-sweep memo over `(lo, hi)` cut keys (bit-exact f64 keys; the table
+/// and `len_points` are fixed for the memo's lifetime by the sweep).
+#[derive(Default)]
+pub struct CutMemo {
+    map: FxHashMap<(u64, u64), Option<CutMoments>>,
+    /// Lookup counters (bench/diagnostic; no behavioral role).
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl CutMemo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Memoized `table.cut_moments(lo, hi, len_points)` — bit-identical
+    /// to the direct call (pure function, exact keys).
+    pub fn cut(
+        &mut self,
+        table: &MomentTable,
+        lo: f64,
+        hi: f64,
+        len_points: usize,
+    ) -> Option<CutMoments> {
+        let key = (lo.to_bits(), hi.to_bits());
+        if let Some(v) = self.map.get(&key) {
+            self.hits += 1;
+            return *v;
+        }
+        self.misses += 1;
+        let v = table.cut_moments(lo, hi, len_points);
+        self.map.insert(key, v);
+        v
+    }
+}
+
+/// One lane block of per-tier stability inputs; `live[l] = false` lanes
+/// are passed through as zero counts (the scalar path's "no cut or no
+/// traffic -> 0 GPUs" arm).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct LaneInputs {
+    pub lambda: [f64; CELL_LANES],
+    pub e_iter: [f64; CELL_LANES],
+    pub err_iter: [f64; CELL_LANES],
+    pub t_iter: [f64; CELL_LANES],
+    pub n_slots: [f64; CELL_LANES],
+    pub live: [bool; CELL_LANES],
+}
+
+/// Lane-blocked stability lower-bound GPU counts. Per live lane:
+///
+/// ```text
+/// e_iter_lb = max(e_iter - err_iter, 1)
+/// a_lb      = lambda * (e_iter_lb * t_iter) / n_slots
+/// n_lb      = max(ceil(a_lb / rho_max), 1)
+/// ```
+///
+/// — operation-for-operation the scalar `cell_cost_lb` tier arm, so each
+/// lane's count is exactly the scalar one.
+pub fn stability_counts_lanes(li: &LaneInputs, rho_max: f64, out: &mut [u64; CELL_LANES]) {
+    for l in 0..CELL_LANES {
+        out[l] = if li.live[l] {
+            let e_iter_lb = (li.e_iter[l] - li.err_iter[l]).max(1.0);
+            let e_s_lb = e_iter_lb * li.t_iter[l];
+            let a_lb = li.lambda[l] * e_s_lb / li.n_slots[l];
+            (a_lb / rho_max).ceil().max(1.0) as u64
+        } else {
+            0
+        };
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lane_arithmetic_matches_scalar_sequence() {
+        let mut li = LaneInputs::default();
+        let rho_max = 0.85;
+        let cases = [
+            (12.0, 900.0, 3.5, 0.04, 64.0),
+            (0.5, 30.0, 29.9, 0.01, 8.0), // e_iter_lb clamps to 1.0
+            (200.0, 5_000.0, 12.0, 0.08, 2_048.0),
+        ];
+        for (l, &(lambda, e_iter, err, t_iter, slots)) in cases.iter().enumerate() {
+            li.live[l] = true;
+            li.lambda[l] = lambda;
+            li.e_iter[l] = e_iter;
+            li.err_iter[l] = err;
+            li.t_iter[l] = t_iter;
+            li.n_slots[l] = slots;
+        }
+        let mut out = [0u64; CELL_LANES];
+        stability_counts_lanes(&li, rho_max, &mut out);
+        for (l, &(lambda, e_iter, err, t_iter, slots)) in cases.iter().enumerate() {
+            let e_iter_lb = (e_iter - err).max(1.0);
+            let a_lb = lambda * (e_iter_lb * t_iter) / slots;
+            let want = (a_lb / rho_max).ceil().max(1.0) as u64;
+            assert_eq!(out[l], want, "lane {l}");
+        }
+        for l in cases.len()..CELL_LANES {
+            assert_eq!(out[l], 0, "dead lane {l}");
+        }
+    }
+
+    #[test]
+    fn memo_returns_identical_moments() {
+        use crate::workload::traces;
+        let w = traces::azure();
+        let table = MomentTable::for_workload(&w, 512);
+        let mut memo = CutMemo::new();
+        let cuts = [(800.0, 6_000.0), (800.0, 6_000.0), (6_000.0, 32_000.0)];
+        for &(lo, hi) in &cuts {
+            let direct = table.cut_moments(lo, hi, 128);
+            let memoed = memo.cut(&table, lo, hi, 128);
+            match (direct, memoed) {
+                (Some(a), Some(b)) => {
+                    assert_eq!(a.mass.to_bits(), b.mass.to_bits());
+                    assert_eq!(a.e_iter.to_bits(), b.e_iter.to_bits());
+                    assert_eq!(a.e_iter2.to_bits(), b.e_iter2.to_bits());
+                    assert_eq!(a.err_iter.to_bits(), b.err_iter.to_bits());
+                }
+                (None, None) => {}
+                _ => panic!("memo changed presence for ({lo}, {hi})"),
+            }
+        }
+        assert_eq!(memo.misses, 2, "duplicate cut must hit the memo");
+        assert_eq!(memo.hits, 1);
+    }
+}

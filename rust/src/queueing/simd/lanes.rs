@@ -1,0 +1,216 @@
+//! Masked-lockstep Erlang-C / Kimura evaluation, [`LANES`] independent
+//! points per call (§Perf, PR 6).
+//!
+//! The scalar `erlang::erlang_c` recurrence has data-dependent control
+//! flow (a convergence break and the `k >= 1` bound), so naive batching
+//! would change per-point arithmetic. Here every lane carries its own
+//! live mask and the update is written as selects — a live lane performs
+//! exactly the scalar sequence `term *= k/a; sum += term;` with the same
+//! break conditions, a retired lane holds its state — which keeps each
+//! lane bit-identical to the scalar function (property-tested below)
+//! while the straight-line select body is vectorizable across lanes.
+
+use crate::queueing::erlang::erlang_c;
+
+/// Lane width of the batched evaluators.
+pub const LANES: usize = 8;
+
+/// `out[l] = erlang_c(c[l], rho[l])` for every lane, in masked lockstep.
+/// Requires `c[l] >= 1` (the scalar function's contract).
+pub fn erlang_c_lanes(c: &[u64; LANES], rho: &[f64; LANES]) -> [f64; LANES] {
+    let mut term = [0.0f64; LANES];
+    let mut sum = [0.0f64; LANES];
+    let mut k = [0.0f64; LANES];
+    let mut a = [1.0f64; LANES];
+    let mut live = [false; LANES];
+    for l in 0..LANES {
+        debug_assert!(c[l] >= 1, "need at least one server");
+        if rho[l] > 0.0 && rho[l] < 1.0 {
+            a[l] = c[l] as f64 * rho[l];
+            term[l] = 1.0 / rho[l];
+            sum[l] = term[l];
+            k[l] = (c[l] - 1) as f64;
+            live[l] = k[l] >= 1.0;
+        }
+    }
+    while live.iter().any(|&x| x) {
+        for l in 0..LANES {
+            // Select form of the scalar loop body: a retired lane keeps
+            // its state bit-for-bit; a live lane runs the exact scalar
+            // ops (t and s may be garbage for retired lanes — discarded).
+            let t = term[l] * (k[l] / a[l]);
+            let s = sum[l] + t;
+            let cont = live[l];
+            term[l] = if cont { t } else { term[l] };
+            sum[l] = if cont { s } else { sum[l] };
+            let stop = t < s * 1e-17 || k[l] - 1.0 < 1.0;
+            live[l] = cont && !stop;
+            k[l] = if cont { k[l] - 1.0 } else { k[l] };
+        }
+    }
+    let mut out = [0.0f64; LANES];
+    for l in 0..LANES {
+        out[l] = if rho[l] >= 1.0 {
+            1.0
+        } else if rho[l] <= 0.0 {
+            0.0
+        } else {
+            1.0 / (1.0 + (1.0 - rho[l]) * sum[l])
+        };
+    }
+    out
+}
+
+/// Lane-parallel Kimura P-quantile: `out[l] = kimura::w_quantile(c[l],
+/// mu, lambda[l], cs2, p)` with the Erlang-C stage batched through
+/// [`erlang_c_lanes`]. The scalar path's memo returns the identical f64
+/// the direct recurrence produces, so each lane is bit-identical to the
+/// scalar function.
+pub fn w_quantile_lanes(
+    c: &[u64; LANES],
+    mu: f64,
+    lambda: &[f64; LANES],
+    cs2: f64,
+    p: f64,
+) -> [f64; LANES] {
+    assert!(mu > 0.0 && p > 0.0 && p < 1.0);
+    let mut rho = [0.0f64; LANES];
+    let mut capacity = [0.0f64; LANES];
+    for l in 0..LANES {
+        assert!(lambda[l] >= 0.0);
+        capacity[l] = c[l] as f64 * mu;
+        // Unstable lanes get rho >= 1: erlang_c_lanes returns 1.0 there
+        // without running the recurrence, and the result is overridden
+        // with the scalar path's INFINITY below.
+        rho[l] = lambda[l] / capacity[l];
+    }
+    let c_wait = erlang_c_lanes(c, &rho);
+    let mut out = [0.0f64; LANES];
+    for l in 0..LANES {
+        out[l] = if lambda[l] >= capacity[l] {
+            f64::INFINITY
+        } else if lambda[l] == 0.0 || c_wait[l] <= p {
+            0.0
+        } else {
+            (c_wait[l] / p).ln() * (1.0 + cs2) / (2.0 * (capacity[l] - lambda[l]))
+        };
+    }
+    out
+}
+
+/// P99 batch form (`p = 0.01`), the planner's tail-SLO currency.
+pub fn w99_lanes(c: &[u64; LANES], mu: f64, lambda: &[f64; LANES], cs2: f64) -> [f64; LANES] {
+    w_quantile_lanes(c, mu, lambda, cs2, 0.01)
+}
+
+/// Convenience over arbitrary-length slices: batches full lane blocks,
+/// pads the tail block with the last point (padding lanes discarded).
+pub fn erlang_c_batch(points: &[(u64, f64)], out: &mut Vec<f64>) {
+    out.clear();
+    if points.is_empty() {
+        return;
+    }
+    let mut c = [1u64; LANES];
+    let mut rho = [0.0f64; LANES];
+    for block in points.chunks(LANES) {
+        for l in 0..LANES {
+            let &(ci, ri) = block.get(l).unwrap_or(&block[block.len() - 1]);
+            c[l] = ci;
+            rho[l] = ri;
+        }
+        let res = erlang_c_lanes(&c, &rho);
+        out.extend_from_slice(&res[..block.len()]);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queueing::kimura::w_quantile;
+    use crate::util::check::{ensure, forall};
+
+    #[test]
+    fn erlang_lanes_bit_identical_to_scalar() {
+        forall(
+            "erlang-lanes-vs-scalar",
+            50,
+            |rng| {
+                let mut c = [1u64; LANES];
+                let mut rho = [0.0f64; LANES];
+                for l in 0..LANES {
+                    c[l] = 1 + rng.below(20_000);
+                    rho[l] = match rng.below(10) {
+                        0 => 0.0,
+                        1 => 1.0 + rng.f64(),
+                        2 => -rng.f64(),
+                        _ => rng.uniform(1e-6, 0.999_999),
+                    };
+                }
+                (c, rho)
+            },
+            |&(c, rho)| {
+                let got = erlang_c_lanes(&c, &rho);
+                for l in 0..LANES {
+                    let want = erlang_c(c[l], rho[l]);
+                    ensure(
+                        got[l].to_bits() == want.to_bits(),
+                        format!("lane {l}: c={} rho={} got {} want {want}", c[l], rho[l], got[l]),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn kimura_lanes_bit_identical_to_scalar() {
+        forall(
+            "kimura-lanes-vs-scalar",
+            50,
+            |rng| {
+                let mu = rng.uniform(0.05, 4.0);
+                let cs2 = rng.uniform(0.0, 5.0);
+                let mut c = [1u64; LANES];
+                let mut lambda = [0.0f64; LANES];
+                for l in 0..LANES {
+                    c[l] = 1 + rng.below(5_000);
+                    lambda[l] = match rng.below(8) {
+                        0 => 0.0,
+                        1 => c[l] as f64 * mu * rng.uniform(1.0, 2.0), // unstable
+                        _ => c[l] as f64 * mu * rng.uniform(0.01, 0.999),
+                    };
+                }
+                (c, mu, lambda, cs2)
+            },
+            |&(c, mu, lambda, cs2)| {
+                let got = w99_lanes(&c, mu, &lambda, cs2);
+                for l in 0..LANES {
+                    let want = w_quantile(c[l], mu, lambda[l], cs2, 0.01);
+                    ensure(
+                        got[l].to_bits() == want.to_bits(),
+                        format!(
+                            "lane {l}: c={} lambda={} got {} want {want}",
+                            c[l], lambda[l], got[l]
+                        ),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn batch_handles_ragged_tails() {
+        let points: Vec<(u64, f64)> = (1..=11)
+            .map(|i| (i * 7, 0.8 + 0.01 * i as f64 / 11.0))
+            .collect();
+        let mut out = Vec::new();
+        erlang_c_batch(&points, &mut out);
+        assert_eq!(out.len(), points.len());
+        for (i, &(c, rho)) in points.iter().enumerate() {
+            assert_eq!(out[i].to_bits(), erlang_c(c, rho).to_bits(), "point {i}");
+        }
+        erlang_c_batch(&[], &mut out);
+        assert!(out.is_empty());
+    }
+}

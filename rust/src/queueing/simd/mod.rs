@@ -1,0 +1,23 @@
+//! Lane-parallel kernels for the planner's analytical core (§Perf, PR 6;
+//! `simd` cargo feature, default on).
+//!
+//! * [`lanes`] — masked-lockstep Erlang-C and Kimura quantile evaluation,
+//!   8 independent (c, rho) points per call. Every lane replays the
+//!   scalar recurrence's exact control flow (per-lane convergence break
+//!   and `k >= 1` bound), so each lane is bit-identical to
+//!   `erlang::erlang_c` / `kimura::w_quantile`.
+//! * [`cells`] — the batched `MomentTable` cut evaluator behind
+//!   `sweep_tiered_pruned`'s bound pass: a [`cells::CutMemo`] dedupes the
+//!   (pure, table-fixed) `cut_moments` calls that neighboring sweep cells
+//!   share, and [`cells::stability_counts_lanes`] runs the per-cell
+//!   stability lower-bound arithmetic for a cluster of up to 8 cells in
+//!   lane lockstep — per-lane ops exactly the scalar `cell_cost_lb`
+//!   sequence, no cross-lane reduction.
+//!
+//! Identity policy: nothing in this module reassociates a floating-point
+//! reduction; batching changes how many times pure functions are
+//! evaluated, never their values, so planner argmin / GPU counts / cost
+//! are bit-identical to the scalar sweep (property-tested).
+
+pub mod cells;
+pub mod lanes;

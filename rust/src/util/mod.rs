@@ -1,10 +1,13 @@
 //! Zero-dependency substrates shared across the stack (DESIGN.md §1):
 //! deterministic RNG, JSON, statistics, table rendering, fast
-//! non-cryptographic hashing, and the property-testing mini-harness.
+//! non-cryptographic hashing, the property-testing mini-harness, the
+//! scoped-thread fan-out helpers, and the SIMD runtime-dispatch shim.
 
 pub mod check;
 pub mod hash;
 pub mod json;
+pub mod par;
 pub mod rng;
+pub mod simd;
 pub mod stats;
 pub mod table;

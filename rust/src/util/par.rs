@@ -1,0 +1,194 @@
+//! Scoped-thread fan-out substrate (§Perf, PR 6).
+//!
+//! One generic family of parallel maps shared by the planner sweeps, the
+//! experiment grids, and the DES replication drivers (previously two
+//! near-identical private helpers plus six ad-hoc `thread::scope` sites),
+//! plus the process-wide worker cap — `FLEETOPT_THREADS` in the
+//! environment or `fleetopt --threads N` on the CLI — that every fan-out
+//! honors so bench runs are reproducible on shared CI runners.
+//!
+//! All maps return results in input order and are bit-identical to a
+//! serial evaluation whenever `f` is deterministic: the cap and the
+//! worker count change scheduling, never values (property-tested in
+//! `tests/perf_equivalence.rs` via the parallel-vs-serial sweeps).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// 0 = unset (fall back to the environment, then uncapped).
+static CAP: AtomicUsize = AtomicUsize::new(0);
+
+fn env_cap() -> usize {
+    static ENV: OnceLock<usize> = OnceLock::new();
+    *ENV.get_or_init(|| {
+        std::env::var("FLEETOPT_THREADS")
+            .ok()
+            .and_then(|v| v.trim().parse().ok())
+            .unwrap_or(0)
+    })
+}
+
+/// Cap every scoped-thread fan-out at `n` workers. `0` clears the
+/// programmatic cap, falling back to `FLEETOPT_THREADS` (or uncapped).
+pub fn set_thread_cap(n: usize) {
+    CAP.store(n, Ordering::Relaxed);
+}
+
+/// The effective worker cap: the last [`set_thread_cap`], else
+/// `FLEETOPT_THREADS`, else `usize::MAX` (uncapped).
+pub fn thread_cap() -> usize {
+    let cap = CAP.load(Ordering::Relaxed);
+    let cap = if cap > 0 { cap } else { env_cap() };
+    if cap > 0 {
+        cap
+    } else {
+        usize::MAX
+    }
+}
+
+/// Worker count for `items` work items where each worker should amortize
+/// its spawn over at least `per_worker` items: available parallelism,
+/// clamped by the item count, a hard ceiling of 16, and [`thread_cap`].
+pub fn workers_for(items: usize, per_worker: usize) -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(items.div_ceil(per_worker.max(1)))
+        .min(16)
+        .min(thread_cap())
+        .max(1)
+}
+
+/// Fallible parallel map over contiguous chunks (the planner-sweep
+/// shape): results in input order, first error wins. `parallel = false`
+/// or an effective worker count of 1 evaluates serially on the caller's
+/// thread — same values either way.
+pub fn par_map<T: Sync, R: Send, E: Send>(
+    items: &[T],
+    parallel: bool,
+    f: impl Fn(&T) -> Result<R, E> + Sync,
+) -> Result<Vec<R>, E> {
+    let workers = if parallel {
+        workers_for(items.len(), 4)
+    } else {
+        1
+    };
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let chunk_len = items.len().div_ceil(workers);
+    let f_ref = &f;
+    let shards: Result<Vec<Vec<R>>, E> = std::thread::scope(|scope| {
+        let handles: Vec<_> = items
+            .chunks(chunk_len)
+            .map(|shard| {
+                scope.spawn(move || shard.iter().map(f_ref).collect::<Result<Vec<R>, E>>())
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    Ok(shards?.into_iter().flatten().collect())
+}
+
+/// Infallible strided parallel map at ~4 items per worker. Work items
+/// whose cost varies by orders of magnitude across the input (e.g. pruned
+/// vs evaluated sweep cells) load-balance better striped than chunked:
+/// worker `w` takes items `w, w+workers, w+2*workers, ...`, and results
+/// are reassembled in input order.
+pub fn par_map_strided<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    par_map_strided_with(items, 4, f)
+}
+
+/// Strided map at one item per worker — for heavyweight items (whole DES
+/// replications, Table-9 variants) where the old code spawned one thread
+/// per item. With ≤ 16 items and no cap this spawns exactly as many
+/// workers as items, preserving that behavior while honoring the cap.
+pub fn par_map_each<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -> Vec<R> {
+    par_map_strided_with(items, 1, f)
+}
+
+fn par_map_strided_with<T: Sync, R: Send>(
+    items: &[T],
+    per_worker: usize,
+    f: impl Fn(&T) -> R + Sync,
+) -> Vec<R> {
+    let workers = workers_for(items.len(), per_worker);
+    if workers <= 1 {
+        return items.iter().map(&f).collect();
+    }
+    let f_ref = &f;
+    let shards: Vec<Vec<R>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|w| {
+                scope.spawn(move || {
+                    items
+                        .iter()
+                        .skip(w)
+                        .step_by(workers)
+                        .map(f_ref)
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map_strided worker panicked"))
+            .collect()
+    });
+    let mut iters: Vec<_> = shards.into_iter().map(|s| s.into_iter()).collect();
+    (0..items.len())
+        .map(|i| iters[i % workers].next().expect("stride shard underflow"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_map_preserves_order_and_values() {
+        let items: Vec<u64> = (0..103).collect();
+        let got = par_map(&items, true, |&x| Ok::<_, ()>(x * x)).unwrap();
+        let want: Vec<u64> = items.iter().map(|&x| x * x).collect();
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn par_map_propagates_errors() {
+        let items: Vec<u64> = (0..50).collect();
+        let got = par_map(&items, true, |&x| if x == 31 { Err(x) } else { Ok(x) });
+        assert_eq!(got, Err(31));
+    }
+
+    #[test]
+    fn strided_and_each_match_serial() {
+        for n in [0usize, 1, 2, 7, 16, 33, 64] {
+            let items: Vec<usize> = (0..n).collect();
+            let want: Vec<usize> = items.iter().map(|&x| x.wrapping_mul(7) ^ 5).collect();
+            assert_eq!(par_map_strided(&items, |&x| x.wrapping_mul(7) ^ 5), want);
+            assert_eq!(par_map_each(&items, |&x| x.wrapping_mul(7) ^ 5), want);
+        }
+    }
+
+    #[test]
+    fn thread_cap_forces_serial_with_identical_results() {
+        let items: Vec<u64> = (0..64).collect();
+        let uncapped = par_map_strided(&items, |&x| x as f64 * 0.1);
+        set_thread_cap(1);
+        assert_eq!(workers_for(64, 1), 1);
+        let capped = par_map_strided(&items, |&x| x as f64 * 0.1);
+        set_thread_cap(0);
+        assert_eq!(uncapped, capped);
+    }
+
+    #[test]
+    fn workers_for_respects_item_granularity() {
+        assert_eq!(workers_for(0, 4), 1);
+        assert_eq!(workers_for(1, 4), 1);
+        assert!(workers_for(4, 4) <= 1 + 4 / 4);
+        assert!(workers_for(1_000, 1) <= 16);
+    }
+}

@@ -1,0 +1,183 @@
+//! Runtime SIMD dispatch (§Perf, PR 6).
+//!
+//! One process-wide switch decides whether the vectorized kernels in
+//! `compress::simd` / `queueing::simd` run or their scalar oracles do.
+//! The switch exists even when the `simd` cargo feature is off (so call
+//! sites and tests compile in both configurations); with the feature off
+//! [`simd_active`] is constantly `false` and every dispatch point takes
+//! the scalar path.
+//!
+//! Identity policy (the PR 5 "fast paths never change evaluated values"
+//! discipline, extended): every kernel behind this switch produces
+//! **bit-identical** shipped values — gateway selections, planner
+//! argmin/GPU-counts/cost — under any dispatch mode. Horizontal SIMD-style
+//! reductions (which reassociate and therefore cannot be bit-identical)
+//! are never used for shipped values; the only blocked reduction in the
+//! tree is [`hsum_blocked`], confined to bench checksums and covered by a
+//! tested divergence bound. Because results are mode-independent, the
+//! global switch needs no synchronization with worker threads — a racing
+//! reader merely picks one of two bit-equal paths.
+
+use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+/// Which implementation family dispatch points select.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Dispatch {
+    /// Feature-gated default: SIMD when compiled in, scalar otherwise.
+    Auto,
+    /// Always the scalar oracle (bench baselines, equivalence tests).
+    ForceScalar,
+    /// Always the vectorized path where one exists.
+    ForceSimd,
+}
+
+const MODE_UNSET: u8 = u8::MAX;
+static MODE: AtomicU8 = AtomicU8::new(MODE_UNSET);
+
+fn encode(d: Dispatch) -> u8 {
+    match d {
+        Dispatch::Auto => 0,
+        Dispatch::ForceScalar => 1,
+        Dispatch::ForceSimd => 2,
+    }
+}
+
+/// `FLEETOPT_SIMD=0|off|scalar` forces scalar, `1|on|simd` forces SIMD,
+/// anything else (or unset) is [`Dispatch::Auto`]. Read once per process.
+fn env_default() -> Dispatch {
+    static ENV: OnceLock<Dispatch> = OnceLock::new();
+    *ENV.get_or_init(|| match std::env::var("FLEETOPT_SIMD").as_deref() {
+        Ok("0") | Ok("off") | Ok("scalar") => Dispatch::ForceScalar,
+        Ok("1") | Ok("on") | Ok("simd") => Dispatch::ForceSimd,
+        _ => Dispatch::Auto,
+    })
+}
+
+/// Current dispatch mode: the last [`set_dispatch`], else the
+/// `FLEETOPT_SIMD` environment default, else [`Dispatch::Auto`].
+pub fn dispatch() -> Dispatch {
+    match MODE.load(Ordering::Relaxed) {
+        0 => Dispatch::Auto,
+        1 => Dispatch::ForceScalar,
+        2 => Dispatch::ForceSimd,
+        _ => env_default(),
+    }
+}
+
+/// Set the process-wide dispatch mode (benches and the CLI; tests should
+/// prefer the scoped [`with_dispatch`]).
+pub fn set_dispatch(d: Dispatch) {
+    MODE.store(encode(d), Ordering::Relaxed);
+}
+
+/// Whether dispatch points should take their vectorized path. Always
+/// `false` without the `simd` cargo feature.
+pub fn simd_active() -> bool {
+    #[cfg(feature = "simd")]
+    {
+        dispatch() != Dispatch::ForceScalar
+    }
+    #[cfg(not(feature = "simd"))]
+    {
+        false
+    }
+}
+
+/// Run `f` under dispatch mode `d`, restoring the previous mode after.
+///
+/// A process-wide mutex serializes concurrent `with_dispatch` calls so
+/// dispatch-toggling tests cannot interleave their set/restore pairs;
+/// code *outside* the mutex observing the temporary mode is benign by the
+/// identity policy (both paths are bit-identical).
+pub fn with_dispatch<R>(d: Dispatch, f: impl FnOnce() -> R) -> R {
+    static LOCK: Mutex<()> = Mutex::new(());
+    let _guard = LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
+    let prev = dispatch();
+    set_dispatch(d);
+    let out = f();
+    set_dispatch(prev);
+    out
+}
+
+/// Blocked 4-accumulator sum — the shape a horizontal SIMD reduction
+/// produces. NOT bit-identical to the sequential `iter().sum()` (the
+/// accumulators reassociate the adds); for same-sign inputs the divergence
+/// is bounded by the standard recursive-summation bound of roughly
+/// `2(n-1)` ulps and measures ~1 ulp in practice (see the policy test in
+/// `tests/simd_dispatch.rs`). Per the identity policy this function is
+/// never used for shipped values — its consumers are bench checksums.
+pub fn hsum_blocked(xs: &[f64]) -> f64 {
+    let mut acc = [0.0f64; 4];
+    let mut chunks = xs.chunks_exact(4);
+    for c in &mut chunks {
+        acc[0] += c[0];
+        acc[1] += c[1];
+        acc[2] += c[2];
+        acc[3] += c[3];
+    }
+    let mut tail = 0.0;
+    for &x in chunks.remainder() {
+        tail += x;
+    }
+    (acc[0] + acc[2]) + (acc[1] + acc[3]) + tail
+}
+
+/// Distance in units-in-the-last-place between two finite f64s (the
+/// currency of the reassociation-bound policy test). Total-orders the
+/// bit patterns so the distance is well-defined across signs.
+pub fn ulp_distance(a: f64, b: f64) -> u64 {
+    fn ordered(x: f64) -> u64 {
+        let bits = x.to_bits();
+        if bits >> 63 == 1 {
+            !bits
+        } else {
+            bits | 0x8000_0000_0000_0000
+        }
+    }
+    ordered(a).abs_diff(ordered(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn with_dispatch_restores_previous_mode() {
+        let before = dispatch();
+        let seen = with_dispatch(Dispatch::ForceScalar, dispatch);
+        assert_eq!(seen, Dispatch::ForceScalar);
+        assert_eq!(dispatch(), before);
+        let seen = with_dispatch(Dispatch::ForceSimd, dispatch);
+        assert_eq!(seen, Dispatch::ForceSimd);
+        assert_eq!(dispatch(), before);
+    }
+
+    #[test]
+    fn simd_active_tracks_feature_and_mode() {
+        with_dispatch(Dispatch::ForceScalar, || {
+            assert!(!simd_active());
+        });
+        with_dispatch(Dispatch::ForceSimd, || {
+            assert_eq!(simd_active(), cfg!(feature = "simd"));
+        });
+    }
+
+    #[test]
+    fn hsum_blocked_matches_sequential_closely() {
+        let xs: Vec<f64> = (0..37).map(|i| 0.5 + (i as f64) * 0.013).collect();
+        let seq: f64 = xs.iter().sum();
+        let blk = hsum_blocked(&xs);
+        // Provably safe reassociation bound (see doc comment); measured
+        // divergence on this input is 0-1 ulp.
+        assert!(ulp_distance(seq, blk) <= 4 * xs.len() as u64);
+    }
+
+    #[test]
+    fn ulp_distance_basics() {
+        assert_eq!(ulp_distance(1.0, 1.0), 0);
+        assert_eq!(ulp_distance(1.0, f64::from_bits(1.0f64.to_bits() + 1)), 1);
+        assert_eq!(ulp_distance(-0.0, 0.0), 1);
+        assert!(ulp_distance(1.0, 2.0) > 1_000_000);
+    }
+}

@@ -9,7 +9,7 @@
 //!   release mode (regression smoke for the "<1 ms planner" claim, §6).
 
 use fleetopt::compress::corpus::{self, CorpusConfig};
-use fleetopt::compress::doc::Document;
+use fleetopt::compress::doc::{Document, ParseScratch};
 use fleetopt::compress::extractive::{compress, compress_doc_with_mode};
 use fleetopt::compress::scratch::CompressScratch;
 use fleetopt::compress::textrank::{textrank_naive, textrank_with_mode, SimilarityMode};
@@ -132,6 +132,113 @@ fn parallel_sweeps_bit_identical_to_serial() {
         assert_eq!(gp.cost_yr, gs.cost_yr, "{}", w.name);
         assert_eq!(gp.gamma, gs.gamma, "{}", w.name);
     }
+}
+
+// ---------------------------------------------------------------------------
+// Edge-input pinning (§Perf, PR 6 satellite): the SIMD kernels use the
+// scalar path as their oracle, so the scalar interner/tokenizer/selection
+// behavior is pinned here on degenerate and non-ASCII inputs *before* any
+// dispatch comparison runs (`tests/simd_dispatch.rs`).
+// ---------------------------------------------------------------------------
+
+fn edge_texts() -> Vec<&'static str> {
+    vec![
+        "",
+        " ",
+        "\n\n\t ",
+        "word",
+        "Only one sentence here.",
+        "the the the the. the the the. the of and to the.",
+        "Zwölf Boxkämpfer jagen Viktor quer über den großen Sylter Deich.",
+        "すもももももももものうち。隣の客はよく柿食う客だ。",
+        "Οι ταχείες καφετιές αλεπούδες πηδούν. Πάνω από τον τεμπέλη σκύλο.",
+        "🚀🚀🚀 emoji only 🚀🚀🚀",
+        "Ünïçödé wörds mïxed with plain words. Plain words repeat plain words.",
+    ]
+}
+
+#[test]
+fn reparse_matches_parse_on_edge_inputs() {
+    // One long-lived Document + ParseScratch reparsed across wildly
+    // different inputs must leave no stale state behind: every public
+    // field equals a fresh parse, field by field.
+    let mut doc = Document::default();
+    let mut scratch = ParseScratch::default();
+    for (i, text) in edge_texts().iter().enumerate() {
+        let fresh = Document::parse(text);
+        doc.reparse(text, &mut scratch);
+        assert_eq!(fresh.sentences, doc.sentences, "text {i}: sentences");
+        assert_eq!(fresh.word_seqs, doc.word_seqs, "text {i}: word_seqs");
+        assert_eq!(fresh.word_sets, doc.word_sets, "text {i}: word_sets");
+        assert_eq!(fresh.signatures, doc.signatures, "text {i}: signatures");
+        assert_eq!(fresh.content_sets, doc.content_sets, "text {i}: content_sets");
+        assert_eq!(fresh.token_counts, doc.token_counts, "text {i}: token_counts");
+        assert_eq!(fresh.vocab, doc.vocab, "text {i}: vocab");
+    }
+}
+
+#[test]
+fn compression_is_stable_on_edge_inputs() {
+    let mut scratch = CompressScratch::new();
+    for (i, text) in edge_texts().iter().enumerate() {
+        for budget in [1u32, 8, 10_000] {
+            let fresh = compress(text, budget);
+            let reused = scratch.compress(text, budget);
+            assert_eq!(fresh.text, reused.text, "text {i} budget {budget}");
+            assert_eq!(fresh.selected, reused.selected, "text {i} budget {budget}");
+            assert_eq!(fresh.ok, reused.ok, "text {i} budget {budget}");
+            assert_eq!(fresh.compressed_tokens, reused.compressed_tokens, "text {i}");
+        }
+    }
+}
+
+#[test]
+fn similarity_backends_agree_on_edge_inputs() {
+    for (i, text) in edge_texts().iter().enumerate() {
+        let doc = Document::parse(text);
+        let budget = count_tokens(text).max(1);
+        let a = compress_doc_with_mode(&doc, budget, SimilarityMode::AllPairs);
+        let b = compress_doc_with_mode(&doc, budget, SimilarityMode::InvertedIndex);
+        assert_eq!(a.text, b.text, "text {i}");
+        assert_eq!(a.selected, b.selected, "text {i}");
+        assert_eq!(a.ok, b.ok, "text {i}");
+    }
+}
+
+#[test]
+fn randomized_unicode_documents_compress_identically() {
+    let words = ["alpha", "Zwölf", "柿食う", "Ünïçödé", "σκύλο", "🚀", "plain", "words"];
+    let mut scratch = CompressScratch::new();
+    forall(
+        "unicode-scratch-vs-one-shot",
+        20,
+        |rng| {
+            let n_sent = rng.range(0, 7);
+            let mut text = String::new();
+            for _ in 0..n_sent {
+                let n_words = rng.range(1, 9);
+                for k in 0..n_words {
+                    if k > 0 {
+                        text.push(' ');
+                    }
+                    text.push_str(rng.choice(&words));
+                }
+                text.push_str(". ");
+            }
+            (text, rng.range(1, 64) as u32)
+        },
+        |(text, budget)| {
+            let fresh = compress(text, *budget);
+            let reused = scratch.compress(text, *budget);
+            ensure(fresh.text == reused.text, "scratch text differs")?;
+            ensure(fresh.selected == reused.selected, "scratch selection differs")?;
+            let doc = Document::parse(text);
+            let ap = compress_doc_with_mode(&doc, *budget, SimilarityMode::AllPairs);
+            let ii = compress_doc_with_mode(&doc, *budget, SimilarityMode::InvertedIndex);
+            ensure(ap.text == ii.text, "backend text differs")?;
+            ensure(ap.selected == ii.selected, "backend selection differs")
+        },
+    );
 }
 
 #[test]

@@ -1,0 +1,189 @@
+//! Runtime-dispatch coverage (§Perf, PR 6): force-scalar vs force-SIMD
+//! on randomized inputs must agree bit-for-bit on every shipped value —
+//! gateway selections and component scores, planner cell bounds, and the
+//! full pruned-sweep plan. Under `--no-default-features` the SIMD paths
+//! compile out and both modes pin the scalar path, so the identities
+//! (trivially) still hold and this suite doubles as the scalar-build
+//! smoke test in CI. The one tolerated divergence — the blocked bench
+//! checksum reduction — is covered by an explicit ulp-bound policy test.
+
+use fleetopt::compress::corpus::{self, CorpusConfig};
+use fleetopt::compress::doc::{overlap, overlap_scalar, Document};
+use fleetopt::compress::extractive::compress_doc_with_mode;
+use fleetopt::compress::textrank::{textrank_with_mode, SimilarityMode};
+use fleetopt::compress::tokenizer::count_tokens;
+use fleetopt::planner::{sweep_cell_bounds, sweep_tiered_pruned, CalibCache, PlanInput};
+use fleetopt::util::check::{ensure, forall};
+use fleetopt::util::rng::Rng;
+use fleetopt::util::simd::{hsum_blocked, ulp_distance, with_dispatch, Dispatch};
+use fleetopt::workload::traces;
+
+#[test]
+fn gateway_selection_identical_across_dispatch_modes() {
+    forall(
+        "selection-across-dispatch",
+        10,
+        |rng| {
+            let target = rng.range(200, 2_000) as u32;
+            (target, rng.uniform(0.3, 1.0), rng.next_u64())
+        },
+        |&(target, frac, seed)| {
+            let mut rng = Rng::new(seed);
+            let text = corpus::generate_document(
+                &CorpusConfig {
+                    target_tokens: target,
+                    ..Default::default()
+                },
+                &mut rng,
+            );
+            let doc = Document::parse(&text);
+            let budget = (count_tokens(&text) as f64 * frac) as u32;
+            let scalar = with_dispatch(Dispatch::ForceScalar, || {
+                compress_doc_with_mode(&doc, budget, SimilarityMode::InvertedIndex)
+            });
+            let simd = with_dispatch(Dispatch::ForceSimd, || {
+                compress_doc_with_mode(&doc, budget, SimilarityMode::InvertedIndex)
+            });
+            ensure(scalar.text == simd.text, "selected text differs")?;
+            ensure(scalar.selected == simd.selected, "selection differs")?;
+            ensure(scalar.ok == simd.ok, "feasibility flag differs")?;
+            let tr_scalar = with_dispatch(Dispatch::ForceScalar, || {
+                textrank_with_mode(&doc, SimilarityMode::InvertedIndex)
+            });
+            let tr_simd = with_dispatch(Dispatch::ForceSimd, || {
+                textrank_with_mode(&doc, SimilarityMode::InvertedIndex)
+            });
+            for (i, (a, b)) in tr_scalar.iter().zip(&tr_simd).enumerate() {
+                ensure(
+                    a.to_bits() == b.to_bits(),
+                    format!("textrank score {i}: scalar {a} vs simd {b}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn overlap_dispatch_matches_scalar_on_random_sets() {
+    fn sorted_set(rng: &mut Rng, max_len: usize, universe: u64) -> Vec<u32> {
+        let n = rng.range(0, max_len + 1);
+        let mut v: Vec<u32> = (0..n).map(|_| rng.below(universe) as u32).collect();
+        v.sort_unstable();
+        v.dedup();
+        v
+    }
+    forall(
+        "overlap-across-dispatch",
+        100,
+        |rng| (sorted_set(rng, 150, 500), sorted_set(rng, 150, 500)),
+        |(a, b)| {
+            let want = overlap_scalar(a, b);
+            let scalar = with_dispatch(Dispatch::ForceScalar, || overlap(a, b));
+            let simd = with_dispatch(Dispatch::ForceSimd, || overlap(a, b));
+            ensure(scalar == want, format!("forced-scalar overlap {scalar} != {want}"))?;
+            ensure(simd == want, format!("forced-simd overlap {simd} != {want}"))
+        },
+    );
+}
+
+#[test]
+fn batched_cell_bounds_identical_on_all_traces() {
+    for w in traces::all() {
+        let mut input = PlanInput::new(w.clone(), 1000.0);
+        input.cfg.mc_samples = 8_000;
+        for k in [2usize, 3] {
+            let scalar = sweep_cell_bounds(&input, k, false);
+            let batched = sweep_cell_bounds(&input, k, true);
+            assert_eq!(scalar.len(), batched.len(), "{} K={k}", w.name);
+            for (i, (s, b)) in scalar.iter().zip(&batched).enumerate() {
+                match (s, b) {
+                    (Some(x), Some(y)) => {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{} K={k} cell {i}", w.name);
+                    }
+                    (None, None) => {}
+                    _ => panic!("{} K={k} cell {i}: bound presence differs", w.name),
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pruned_sweep_plan_identical_across_dispatch_modes() {
+    // The planner acceptance identity: argmin cell, per-tier GPU counts,
+    // gammas, and cost must not move by a single bit when the batched
+    // bound pass replaces the scalar one.
+    let mut input = PlanInput::new(traces::azure(), 1000.0);
+    input.cfg.mc_samples = 8_000;
+    for k in [2usize, 3] {
+        let (ps, _) = with_dispatch(Dispatch::ForceScalar, || {
+            sweep_tiered_pruned(&input, k, &CalibCache::new()).unwrap()
+        });
+        let (pv, _) = with_dispatch(Dispatch::ForceSimd, || {
+            sweep_tiered_pruned(&input, k, &CalibCache::new()).unwrap()
+        });
+        assert_eq!(ps.cost_yr.to_bits(), pv.cost_yr.to_bits(), "K={k}");
+        assert_eq!(ps.boundaries(), pv.boundaries(), "K={k}");
+        assert_eq!(ps.gpu_counts(), pv.gpu_counts(), "K={k}");
+        for (a, b) in ps.gammas.iter().zip(&pv.gammas) {
+            assert_eq!(a.to_bits(), b.to_bits(), "K={k}");
+        }
+    }
+}
+
+#[test]
+fn hsum_blocked_divergence_stays_within_documented_bound() {
+    // The single tolerated non-identity: the blocked (SIMD-shaped) bench
+    // checksum reduction. Its reassociation error against the sequential
+    // sum is bounded for same-sign inputs; 4n ulps is the documented,
+    // deliberately loose ceiling (measured divergence is 0-2 ulps).
+    forall(
+        "hsum-ulp-policy",
+        50,
+        |rng| {
+            let n = rng.range(1, 513);
+            (0..n).map(|_| rng.uniform(0.0, 1.0)).collect::<Vec<f64>>()
+        },
+        |xs| {
+            let seq: f64 = xs.iter().sum();
+            let blk = hsum_blocked(xs);
+            let d = ulp_distance(seq, blk);
+            let bound = 4 * xs.len() as u64;
+            ensure(
+                d <= bound,
+                format!("n={}: {d} ulps exceeds documented bound {bound}", xs.len()),
+            )
+        },
+    );
+}
+
+#[cfg(feature = "simd")]
+#[test]
+fn erlang_batch_matches_scalar_on_randomized_grid() {
+    use fleetopt::queueing::erlang::erlang_c;
+    use fleetopt::queueing::simd::lanes::erlang_c_batch;
+    forall(
+        "erlang-batch-vs-scalar",
+        30,
+        |rng| {
+            let n = rng.range(1, 40);
+            (0..n)
+                .map(|_| (1 + rng.below(10_000), rng.uniform(0.01, 0.999)))
+                .collect::<Vec<(u64, f64)>>()
+        },
+        |points| {
+            let mut out = Vec::new();
+            erlang_c_batch(points, &mut out);
+            ensure(out.len() == points.len(), "length mismatch")?;
+            for (i, (&(c, rho), &got)) in points.iter().zip(&out).enumerate() {
+                let want = erlang_c(c, rho);
+                ensure(
+                    got.to_bits() == want.to_bits(),
+                    format!("point {i}: c={c} rho={rho} got {got} want {want}"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
