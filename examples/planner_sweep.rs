@@ -1,17 +1,20 @@
 //! Planner deep-dive: the full Algorithm-1 sweep, the marginal-cost (FOC)
 //! profile behind Proposition 1, the mu_l-recalibration ablation the
 //! paper calls "critical" (§6), the K-tier boundary sweeps behind Table 8,
-//! and a 3-tier fleet loaded from `examples/configs/three_tier.json`.
+//! a 3-tier fleet loaded from `examples/configs/three_tier.json`, and the
+//! heterogeneous-SKU planner: a mixed-SKU plan from
+//! `examples/configs/sku_catalog.json` printed next to the single-SKU one.
 //!
 //! ```bash
 //! cargo run --release --example planner_sweep
 //! ```
 
-use fleetopt::config::FleetSpec;
+use fleetopt::config::{FleetSpec, SkuCatalog};
 use fleetopt::planner::marginal::foc_profile;
 use fleetopt::planner::{
-    candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_spec_sweep_gamma,
-    sweep_full, sweep_tiered, PlanInput,
+    anytime_search, candidate_boundaries, plan_fleet, plan_fleet_no_recalibration,
+    plan_spec_sweep_gamma, sweep_full, sweep_tiered, sweep_tiered_pruned, AnytimeConfig,
+    CalibCache, Deadline, PlanInput,
 };
 use fleetopt::util::json::Json;
 use fleetopt::workload::traces::{self, Workload};
@@ -99,6 +102,56 @@ fn main() -> anyhow::Result<()> {
             best.gammas,
             best.gpu_counts(),
             best.cost_yr / 1e3,
+        );
+    }
+
+    // Heterogeneous SKUs: plan the azure K=3 fleet twice — pinned to the
+    // base A100 profile, then over `sku_catalog.json` with the anytime
+    // planner under a 50 ms budget — and print them side by side. The
+    // catalog contains the base SKU, so mixed never costs more.
+    let catalog_path = concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/../examples/configs/sku_catalog.json"
+    );
+    if std::path::Path::new(catalog_path).exists() {
+        println!("\n=== sku_catalog.json (azure, K=3) ===");
+        let catalog = SkuCatalog::from_file(catalog_path)?;
+        let input = PlanInput::new(traces::azure(), 1000.0);
+        let (single, _) = sweep_tiered_pruned(&input, 3, &CalibCache::new())?;
+        println!(
+            "single-SKU (a100):  B*={:?} gpus={:?} -> ${:.0}K/yr",
+            single.boundaries(),
+            single.gpu_counts(),
+            single.cost_yr / 1e3,
+        );
+        let res = anytime_search(
+            &input,
+            3,
+            Some(&catalog),
+            &CalibCache::new(),
+            Deadline::after_ms(50),
+            &AnytimeConfig::default(),
+        )?;
+        let skus: Vec<&str> = res
+            .plan
+            .spec
+            .tiers
+            .iter()
+            .map(|t| match t.sku_index() {
+                Some(i) => catalog.skus[i].name.as_str(),
+                None => "a100",
+            })
+            .collect();
+        println!(
+            "mixed-SKU catalog:  B*={:?} gpus={:?} skus={skus:?} -> ${:.0}K/yr \
+             ({} cells, gap {:.2}%, exact={}, saving {:+.1}%)",
+            res.plan.boundaries(),
+            res.plan.gpu_counts(),
+            res.plan.cost_yr / 1e3,
+            res.cells_evaluated,
+            res.bound_gap_pct,
+            res.exact,
+            (1.0 - res.plan.cost_yr / single.cost_yr) * 100.0,
         );
     }
     Ok(())

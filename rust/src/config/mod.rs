@@ -29,6 +29,219 @@ pub struct GpuProfile {
     pub cost_long_hr: f64,
 }
 
+/// One GPU SKU of a heterogeneous catalog (H100/A100/L40S-class): its own
+/// slots-per-window calibration, a service-rate multiplier against the
+/// base [`GpuProfile`] timing model, and on-demand/spot pricing.
+#[derive(Clone, Debug, PartialEq)]
+pub struct GpuSku {
+    /// Display name ("a100", "h100-spot", ...). Unique within a catalog.
+    pub name: String,
+    /// Slots-per-window calibration at `GpuProfile::c_calib` tokens —
+    /// this SKU's KV budget expressed in the shared calibration frame, so
+    /// `n_max(C) = n_max_calib * c_calib / C` per SKU.
+    pub n_max_calib: u32,
+    /// Service-rate multiplier mu' = mu_scale * mu vs the base profile:
+    /// every iteration runs `1/mu_scale` as long (> 1 = faster silicon).
+    pub mu_scale: f64,
+    /// On-demand price, $/GPU-hr.
+    pub cost_hr: f64,
+    /// Spot discount in [0, 1); applied only when `preemptible`.
+    pub spot_discount: f64,
+    /// Spot/preemptible capacity: priced at the discount, and flagged so
+    /// reliability-aware layers can treat the tier as evictable.
+    pub preemptible: bool,
+}
+
+impl GpuSku {
+    /// The price the planner optimizes against: the spot discount applies
+    /// iff the SKU is preemptible.
+    pub fn effective_cost_hr(&self) -> f64 {
+        if self.preemptible {
+            self.cost_hr * (1.0 - self.spot_discount)
+        } else {
+            self.cost_hr
+        }
+    }
+}
+
+/// An ordered set of GPU SKUs a planner cell may assign per tier. The
+/// single-SKU world is the catalog-of-one projection ([`SkuCatalog::single`]):
+/// planning against it reproduces the plain [`GpuProfile`] plan exactly.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SkuCatalog {
+    pub skus: Vec<GpuSku>,
+}
+
+impl SkuCatalog {
+    pub fn len(&self) -> usize {
+        self.skus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.skus.is_empty()
+    }
+
+    /// The catalog-of-one projection of a base profile: one SKU whose
+    /// resolved tier values (slots, price, unit rate) are exactly the
+    /// profile's own — the bit-identity anchor for the SKU generalization.
+    /// A SKU carries one price, so the projection is exact when the
+    /// profile prices both pools equally (`phi = 1`, as the paper's A100
+    /// calibration does); a `cost_long_hr != cost_short_hr` profile has no
+    /// single-SKU equivalent.
+    pub fn single(gpu: &GpuProfile) -> SkuCatalog {
+        SkuCatalog {
+            skus: vec![GpuSku {
+                name: "base".to_string(),
+                n_max_calib: gpu.n_max_calib,
+                mu_scale: 1.0,
+                cost_hr: gpu.cost_short_hr,
+                spot_discount: 0.0,
+                preemptible: false,
+            }],
+        }
+    }
+
+    /// A three-SKU demo catalog around the paper's A100 calibration:
+    /// the A100 itself, an H100-class SKU (more KV, faster, pricier) and
+    /// a preemptible L40S-class SKU (less KV, slower, discounted). Shared
+    /// by Table 10, the planner bench, the example config and the CLI
+    /// docs so they all speak about the same fleet.
+    pub fn demo(gpu: &GpuProfile) -> SkuCatalog {
+        let mut c = SkuCatalog::single(gpu);
+        c.skus[0].name = "a100".to_string();
+        c.skus.push(GpuSku {
+            name: "h100".to_string(),
+            n_max_calib: 192,
+            mu_scale: 1.7,
+            cost_hr: 3.93,
+            spot_discount: 0.0,
+            preemptible: false,
+        });
+        c.skus.push(GpuSku {
+            name: "l40s-spot".to_string(),
+            n_max_calib: 48,
+            mu_scale: 0.6,
+            cost_hr: 1.9,
+            spot_discount: 0.45,
+            preemptible: true,
+        });
+        c
+    }
+
+    /// Reject malformed catalogs with messages that name the offending
+    /// entry and index: non-positive prices or slot calibrations,
+    /// non-positive/non-finite rate multipliers, out-of-range spot
+    /// discounts, and duplicate names.
+    pub fn validate(&self) -> anyhow::Result<()> {
+        if self.skus.is_empty() {
+            anyhow::bail!("SKU catalog is empty: at least one SKU is required");
+        }
+        for (i, s) in self.skus.iter().enumerate() {
+            if s.name.is_empty() {
+                anyhow::bail!("sku {i}: empty name");
+            }
+            if !s.cost_hr.is_finite() || s.cost_hr <= 0.0 {
+                anyhow::bail!(
+                    "sku {i} (\"{}\"): cost_hr must be positive, got {}",
+                    s.name,
+                    s.cost_hr
+                );
+            }
+            if s.n_max_calib == 0 {
+                anyhow::bail!(
+                    "sku {i} (\"{}\"): n_max_calib must be a positive slot count",
+                    s.name
+                );
+            }
+            if !s.mu_scale.is_finite() || s.mu_scale <= 0.0 {
+                anyhow::bail!(
+                    "sku {i} (\"{}\"): mu_scale must be positive, got {}",
+                    s.name,
+                    s.mu_scale
+                );
+            }
+            if !s.spot_discount.is_finite() || !(0.0..1.0).contains(&s.spot_discount) {
+                anyhow::bail!(
+                    "sku {i} (\"{}\"): spot_discount must be in [0, 1), got {}",
+                    s.name,
+                    s.spot_discount
+                );
+            }
+            if let Some(j) = self.skus[..i].iter().position(|p| p.name == s.name) {
+                anyhow::bail!(
+                    "sku {i} (\"{}\") duplicates the name of sku {j}",
+                    s.name
+                );
+            }
+        }
+        Ok(())
+    }
+
+    /// Parse from JSON: either `{"skus": [...]}` or a bare array. Each
+    /// entry needs `name`, `n_max_calib` and `cost_hr`; `mu_scale`
+    /// defaults to 1.0, `spot_discount` to 0.0, `preemptible` to false.
+    pub fn from_json(j: &Json) -> anyhow::Result<SkuCatalog> {
+        let arr = j
+            .get("skus")
+            .and_then(Json::as_arr)
+            .or_else(|| j.as_arr())
+            .ok_or_else(|| anyhow::anyhow!("SKU catalog must be `{{\"skus\": [...]}}` or a JSON array"))?;
+        let mut skus = Vec::with_capacity(arr.len());
+        for (i, s) in arr.iter().enumerate() {
+            let name = s
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("sku {i}: missing `name`"))?
+                .to_string();
+            let calib = s
+                .get("n_max_calib")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("sku {i} (\"{name}\"): missing `n_max_calib`"))?;
+            if !calib.is_finite() || calib < 1.0 || calib.fract() != 0.0 || calib > u32::MAX as f64
+            {
+                anyhow::bail!(
+                    "sku {i} (\"{name}\"): n_max_calib must be a positive whole slot count, got {calib}"
+                );
+            }
+            let cost_hr = s
+                .get("cost_hr")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("sku {i} (\"{name}\"): missing `cost_hr`"))?;
+            skus.push(GpuSku {
+                name,
+                n_max_calib: calib as u32,
+                mu_scale: s.get("mu_scale").and_then(Json::as_f64).unwrap_or(1.0),
+                cost_hr,
+                spot_discount: s.get("spot_discount").and_then(Json::as_f64).unwrap_or(0.0),
+                preemptible: s.get("preemptible").and_then(Json::as_bool).unwrap_or(false),
+            });
+        }
+        let c = SkuCatalog { skus };
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Load and validate a catalog from a JSON file.
+    pub fn from_file(path: &str) -> anyhow::Result<SkuCatalog> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("reading SKU catalog {path}: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{path}: {e}"))?;
+        Self::from_json(&j).map_err(|e| anyhow::anyhow!("{path}: {e}"))
+    }
+}
+
+/// A tier's resolved SKU choice. `TierSpec` is `Copy`, so the choice is
+/// an index into the originating [`SkuCatalog`] plus the one SKU property
+/// the sizing math needs beyond the already-resolved `n_max`/`cost_hr`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SkuChoice {
+    /// Index into the originating catalog (display / round-trips).
+    pub index: u16,
+    /// The SKU's service-rate multiplier, resolved here so the planner
+    /// never needs catalog access on the sizing path.
+    pub mu_scale: f64,
+}
+
 /// One tier of a K-tier fleet: a context window, the KV-slot count that
 /// window yields on this hardware, and the tier's GPU price.
 ///
@@ -50,12 +263,27 @@ pub struct TierSpec {
     /// fleet-level [`Slo`] — exactly the pre-refactor global-SLO
     /// behaviour, so configs without per-tier targets plan identically.
     pub p99_ttft_s: Option<f64>,
+    /// Which catalog SKU this tier runs on. `None` is the base
+    /// [`GpuProfile`] hardware — the single-SKU world, planned
+    /// bit-identically to the pre-catalog code.
+    pub sku: Option<SkuChoice>,
 }
 
 impl TierSpec {
     /// This tier's effective P99 TTFT target given the fleet default.
     pub fn slo_or(&self, fleet_default_s: f64) -> f64 {
         self.p99_ttft_s.unwrap_or(fleet_default_s)
+    }
+
+    /// This tier's service-rate multiplier vs the base profile (1.0 when
+    /// no SKU is assigned).
+    pub fn mu_scale(&self) -> f64 {
+        self.sku.map(|s| s.mu_scale).unwrap_or(1.0)
+    }
+
+    /// The tier's catalog SKU index, if a SKU is assigned.
+    pub fn sku_index(&self) -> Option<usize> {
+        self.sku.map(|s| s.index as usize)
     }
 }
 
@@ -113,6 +341,15 @@ impl FleetSpec {
                     );
                 }
             }
+            if let Some(s) = t.sku {
+                if !s.mu_scale.is_finite() || s.mu_scale <= 0.0 {
+                    anyhow::bail!(
+                        "tier at {} tokens has non-positive SKU mu_scale {}",
+                        t.c_max,
+                        s.mu_scale
+                    );
+                }
+            }
         }
         for t in &self.tiers[..self.tiers.len() - 1] {
             if t.n_max <= last.n_max {
@@ -158,6 +395,7 @@ impl FleetSpec {
                     n_max: gpu.n_max(c_max),
                     cost_hr: default_cost,
                     p99_ttft_s: None,
+                    sku: None,
                 }
             } else {
                 let c_max = t
@@ -173,6 +411,7 @@ impl FleetSpec {
                     },
                     cost_hr: t.get("cost_hr").and_then(Json::as_f64).unwrap_or(default_cost),
                     p99_ttft_s: t.get("p99_ttft_s").and_then(Json::as_f64),
+                    sku: None,
                 }
             };
             tiers.push(tier);
@@ -224,6 +463,7 @@ impl GpuProfile {
                 n_max: self.n_max(b),
                 cost_hr: self.cost_short_hr,
                 p99_ttft_s: None,
+                sku: None,
             })
             .collect();
         tiers.push(TierSpec {
@@ -231,7 +471,70 @@ impl GpuProfile {
             n_max: self.n_max_long(),
             cost_hr: self.cost_long_hr,
             p99_ttft_s: None,
+            sku: None,
         });
+        FleetSpec { tiers }
+    }
+
+    /// Slots per GPU at window `c_max` for a SKU calibrated to
+    /// `n_max_calib` slots at the shared `c_calib` window — the per-SKU
+    /// generalization of [`GpuProfile::n_max`] (identical for the base
+    /// calibration, by the same integer arithmetic).
+    pub fn n_max_with(&self, c_max: u32, n_max_calib: u32) -> u32 {
+        ((n_max_calib as u64 * self.c_calib as u64) / c_max as u64).max(1) as u32
+    }
+
+    /// The profile with every iteration `1/mu_scale` as long — the DES's
+    /// view of a SKU's service-rate multiplier. `mu_scale = 1` returns the
+    /// profile unchanged (bit-identical single-SKU timing).
+    pub fn scaled_mu(&self, mu_scale: f64) -> GpuProfile {
+        if mu_scale == 1.0 {
+            return self.clone();
+        }
+        GpuProfile {
+            w_ms: self.w_ms / mu_scale,
+            h_ms_per_slot: self.h_ms_per_slot / mu_scale,
+            ..self.clone()
+        }
+    }
+
+    /// Build a K-tier [`FleetSpec`] with a per-tier SKU assignment:
+    /// `assignment[i]` indexes `catalog.skus`, one entry per tier
+    /// (boundaries plus the long tier). Slots come from each SKU's own
+    /// `n_max_calib`, prices from its effective (spot-discounted) rate,
+    /// and the choice is recorded on the tier. Assigning the
+    /// [`SkuCatalog::single`] base SKU everywhere resolves to exactly the
+    /// values of [`GpuProfile::fleet_spec`] (tested).
+    pub fn fleet_spec_skus(
+        &self,
+        boundaries: &[u32],
+        catalog: &SkuCatalog,
+        assignment: &[usize],
+    ) -> FleetSpec {
+        assert_eq!(
+            assignment.len(),
+            boundaries.len() + 1,
+            "one SKU per tier (K-1 boundaries + the long tier)"
+        );
+        let tier = |c_max: u32, sku_idx: usize| -> TierSpec {
+            let sku = &catalog.skus[sku_idx];
+            TierSpec {
+                c_max,
+                n_max: self.n_max_with(c_max, sku.n_max_calib),
+                cost_hr: sku.effective_cost_hr(),
+                p99_ttft_s: None,
+                sku: Some(SkuChoice {
+                    index: sku_idx as u16,
+                    mu_scale: sku.mu_scale,
+                }),
+            }
+        };
+        let mut tiers: Vec<TierSpec> = boundaries
+            .iter()
+            .zip(assignment)
+            .map(|(&b, &s)| tier(b, s))
+            .collect();
+        tiers.push(tier(self.c_max_long, assignment[boundaries.len()]));
         FleetSpec { tiers }
     }
 
@@ -448,6 +751,96 @@ mod tests {
         )
         .unwrap();
         assert!(FleetSpec::from_json(&j, &g).is_err());
+    }
+
+    #[test]
+    fn sku_catalog_of_one_projects_bit_identically() {
+        // The SKU generalization's bit-identity anchor: the base SKU
+        // assigned everywhere resolves to exactly the plain fleet spec's
+        // slots, prices and unit rate.
+        let g = GpuProfile::a100_llama70b();
+        let catalog = SkuCatalog::single(&g);
+        catalog.validate().unwrap();
+        for bounds in [&[4096u32][..], &[2048, 8192][..]] {
+            let plain = g.fleet_spec(bounds);
+            let skued = g.fleet_spec_skus(bounds, &catalog, &vec![0; bounds.len() + 1]);
+            assert_eq!(plain.k(), skued.k());
+            for (a, b) in plain.tiers.iter().zip(&skued.tiers) {
+                assert_eq!(a.c_max, b.c_max);
+                assert_eq!(a.n_max, b.n_max);
+                assert_eq!(a.cost_hr.to_bits(), b.cost_hr.to_bits());
+                assert_eq!(b.mu_scale().to_bits(), 1.0f64.to_bits());
+                assert_eq!(b.sku_index(), Some(0));
+            }
+        }
+    }
+
+    #[test]
+    fn sku_catalog_validation_names_entry_and_index() {
+        let g = GpuProfile::a100_llama70b();
+        let mut dup = SkuCatalog::demo(&g);
+        dup.skus[2].name = "h100".to_string();
+        let err = dup.validate().unwrap_err().to_string();
+        assert!(err.contains("sku 2") && err.contains("h100") && err.contains("sku 1"), "{err}");
+
+        let mut free = SkuCatalog::demo(&g);
+        free.skus[1].cost_hr = 0.0;
+        let err = free.validate().unwrap_err().to_string();
+        assert!(err.contains("sku 1") && err.contains("cost_hr"), "{err}");
+
+        let mut slotless = SkuCatalog::demo(&g);
+        slotless.skus[0].n_max_calib = 0;
+        let err = slotless.validate().unwrap_err().to_string();
+        assert!(err.contains("sku 0") && err.contains("n_max_calib"), "{err}");
+
+        let mut frozen = SkuCatalog::demo(&g);
+        frozen.skus[1].mu_scale = -0.5;
+        assert!(frozen.validate().unwrap_err().to_string().contains("mu_scale"));
+
+        let mut deep = SkuCatalog::demo(&g);
+        deep.skus[2].spot_discount = 1.0;
+        assert!(deep.validate().unwrap_err().to_string().contains("spot_discount"));
+
+        SkuCatalog::demo(&g).validate().unwrap();
+    }
+
+    #[test]
+    fn sku_catalog_json_parses_defaults_and_spot() {
+        let j = Json::parse(
+            r#"{"skus": [
+                {"name": "a100", "n_max_calib": 128, "cost_hr": 2.21},
+                {"name": "h100", "n_max_calib": 192, "mu_scale": 1.7, "cost_hr": 3.93},
+                {"name": "l40s-spot", "n_max_calib": 48, "mu_scale": 0.6, "cost_hr": 1.9,
+                 "spot_discount": 0.45, "preemptible": true}
+            ]}"#,
+        )
+        .unwrap();
+        let c = SkuCatalog::from_json(&j).unwrap();
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.skus[0].mu_scale, 1.0);
+        assert!(!c.skus[0].preemptible);
+        assert_eq!(c.skus[2].effective_cost_hr(), 1.9 * 0.55);
+        // On-demand SKUs ignore any stray discount.
+        assert_eq!(c.skus[1].effective_cost_hr(), 3.93);
+        // A bare array parses too.
+        let j = Json::parse(r#"[{"name": "x", "n_max_calib": 64, "cost_hr": 1.0}]"#).unwrap();
+        assert_eq!(SkuCatalog::from_json(&j).unwrap().len(), 1);
+        // Fractional slot calibrations are rejected with the entry named.
+        let j = Json::parse(r#"[{"name": "x", "n_max_calib": 64.5, "cost_hr": 1.0}]"#).unwrap();
+        let err = SkuCatalog::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("sku 0") && err.contains("\"x\""), "{err}");
+    }
+
+    #[test]
+    fn scaled_mu_profile_is_identity_at_one() {
+        let g = GpuProfile::a100_llama70b();
+        let same = g.scaled_mu(1.0);
+        assert_eq!(same, g);
+        let fast = g.scaled_mu(2.0);
+        assert_eq!(fast.w_ms, 4.0);
+        assert!((fast.t_iter_s(16) - g.t_iter_s(16) / 2.0).abs() < 1e-15);
+        // Slots are a KV property, not a speed property.
+        assert_eq!(fast.n_max(4096), g.n_max(4096));
     }
 
     #[test]

@@ -210,12 +210,14 @@ impl TieredSimResult {
     }
 }
 
-/// One tier's DES shape: GPU count, slots per GPU, and the warm-up before
-/// the utilization window opens.
+/// One tier's DES shape: GPU count, slots per GPU, the warm-up before
+/// the utilization window opens, and the tier SKU's service-rate
+/// multiplier against the shared base profile.
 struct TierSimCfg {
     n_gpus: u64,
     n_slots: u32,
     warmup_s: f64,
+    mu_scale: f64,
 }
 
 /// Simulate every tier of a routed trace, one capped worker per tier via
@@ -232,7 +234,11 @@ fn simulate_tiers(
     let items: Vec<(&TierSimCfg, &Vec<SimRequest>)> = cfgs.iter().zip(traces).collect();
     crate::util::par::par_map_each(&items, |&(tc, trace)| {
         (tc.n_gpus > 0 && !trace.is_empty()).then(|| {
-            let mut cfg = SimConfig::new(g.clone(), tc.n_gpus, tc.n_slots);
+            // A SKU tier sees the base profile uniformly time-dilated;
+            // `scaled_mu(1.0)` clones unchanged, so single-SKU fleets
+            // simulate bit-identically to the pre-catalog DES.
+            let tier_g = g.scaled_mu(tc.mu_scale);
+            let mut cfg = SimConfig::new(tier_g, tc.n_gpus, tc.n_slots);
             cfg.warmup_s = tc.warmup_s;
             simulate_pool(&cfg, trace)
         })
@@ -262,11 +268,13 @@ pub fn simulate_fleet(
             n_gpus: plan.short.n_gpus,
             n_slots: g.n_max(plan.b_short),
             warmup_s: warmup_s(&plan.short.svc),
+            mu_scale: 1.0,
         },
         TierSimCfg {
             n_gpus: plan.long.n_gpus,
             n_slots: g.n_max_long(),
             warmup_s: warmup_s(&plan.long.svc),
+            mu_scale: 1.0,
         },
     ];
     let mut routed = route_trace_tiered(w, lambda, n, &[plan.b_short], &[plan.gamma], seed);
@@ -289,9 +297,10 @@ pub fn simulate_fleet(
 
 /// Simulate a planned K-tier fleet against a freshly sampled trace of `n`
 /// requests: route across every boundary, then run one DES per tier on
-/// scoped threads. Slot counts come from the plan's [`FleetSpec`]
-/// (`crate::config::FleetSpec`); `g` supplies the iteration-latency model
-/// shared by every tier.
+/// scoped threads. Slot counts and SKU rate multipliers come from the
+/// plan's [`FleetSpec`] (`crate::config::FleetSpec`); `g` supplies the
+/// base iteration-latency model, per-tier time-dilated by each recorded
+/// SKU choice (identity for plain single-SKU plans).
 pub fn simulate_fleet_tiered(
     w: &Workload,
     plan: &TieredPlan,
@@ -310,6 +319,9 @@ pub fn simulate_fleet_tiered(
             n_gpus: pool.n_gpus,
             n_slots: tier.n_max,
             warmup_s: warmup_s(&pool.svc),
+            // Mixed-SKU plans record each tier's rate multiplier on the
+            // spec; plain plans default to 1.0 (identity profile).
+            mu_scale: tier.mu_scale(),
         })
         .collect();
     let results = simulate_tiers(g, &cfgs, &routed.tiers);

@@ -5,6 +5,10 @@
 //! nonstationary arrivals with a replanning controller in the loop, and
 //! the million-scale [`stress`] archetype the overhauled engine (calendar
 //! queue, allocation-free loop — see [`events`], [`idle`]) is gated on.
+//! Heterogeneous-SKU plans simulate with each tier's GPU timing dilated by
+//! its SKU's rate multiplier ([`fleet::simulate_fleet_tiered`]), so the
+//! Table-10 mixed fleets are validated by the same DES as the single-SKU
+//! ones (bit-identical at `mu_scale = 1`).
 
 pub mod autoscale;
 pub mod events;

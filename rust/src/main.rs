@@ -4,8 +4,10 @@
 //!   plan      — plan a fleet for one workload (Algorithm 1 at a fixed B,
 //!               or K-tier at fixed `--tiers` windows)
 //!   sweep     — full Algorithm-1 sweep over candidate boundaries
-//!               (`--tiers K` or a window list sweeps K-tier fleets)
-//!   tables    — regenerate the paper's evaluation tables (1–8)
+//!               (`--tiers K` or a window list sweeps K-tier fleets;
+//!               `--sku-catalog` adds per-tier GPU SKU assignment and
+//!               `--budget-ms` bounds the search with the anytime planner)
+//!   tables    — regenerate the paper's evaluation tables (1–10)
 //!   simulate  — DES validation of the analytical model (Table 5; K-tier
 //!               with `--tiers`)
 //!   compress  — compress a borderline sample and report fidelity
@@ -21,6 +23,7 @@ use std::collections::HashMap;
 use anyhow::{bail, Context, Result};
 
 use fleetopt::compress::corpus::{self, CorpusConfig};
+use fleetopt::config::SkuCatalog;
 use fleetopt::compress::extractive::compress;
 use fleetopt::compress::fidelity;
 use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
@@ -31,8 +34,9 @@ use fleetopt::fleetsim::{
 };
 use fleetopt::metrics::EpochMetrics;
 use fleetopt::planner::{
-    candidate_boundaries, plan_fleet, plan_homogeneous, plan_spec_sweep_gamma, sweep_full,
-    sweep_gamma, sweep_tiered, Plan, PlanInput, TieredPlan,
+    anytime_search, candidate_boundaries, plan_fleet, plan_homogeneous, plan_spec_sweep_gamma,
+    sweep_full, sweep_gamma, sweep_tiered, AnytimeConfig, AnytimeResult, CalibCache, Deadline,
+    Plan, PlanInput, TieredPlan,
 };
 use fleetopt::router::GatewayConfig;
 use fleetopt::util::rng::Rng;
@@ -46,8 +50,10 @@ fn usage() -> ! {
 
 USAGE:
   fleetopt plan      --workload <azure|lmsys|agent> [--config F.json] [--lambda N] [--gamma G] [--b-short B] [--tiers W1,W2,..|K]
+                     [--sku-catalog F.json] [--budget-ms N]
   fleetopt sweep     --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
-  fleetopt tables    [--only 1..9] [--fast]
+                     [--sku-catalog F.json] [--budget-ms N]
+  fleetopt tables    [--only 1..10] [--fast]
   fleetopt simulate  --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
   fleetopt simulate  --stress [--requests N] [--gpus N] [--queue calendar|heap] [--seed N]
                      (fixed synthetic 5M-request/512-GPU/K=4 diurnal azure scenario)
@@ -61,6 +67,12 @@ USAGE:
   --tiers takes either K-1 boundaries plus the long window
   (e.g. 4096,16384,65536) or a bare fleet size K (2..=6) to sweep
   boundary combinations.
+
+  --sku-catalog F.json loads a heterogeneous GPU SKU catalog (see
+  examples/configs/sku_catalog.json) and searches per-tier SKU
+  assignments alongside boundaries; it needs the `--tiers K` form.
+  --budget-ms N bounds that search with the anytime planner, which
+  returns the best incumbent found within the deadline.
 
   --threads N caps every internal thread fan-out (sweeps, DES
   replications, table grids) at N workers; FLEETOPT_THREADS=N in the
@@ -178,6 +190,23 @@ fn tiers_arg(flags: &HashMap<String, String>) -> Result<Option<TiersArg>> {
     }
 }
 
+/// `--sku-catalog F.json`: an optional heterogeneous GPU catalog for the
+/// mixed-SKU planner paths.
+fn sku_catalog_arg(flags: &HashMap<String, String>) -> Result<Option<SkuCatalog>> {
+    match flags.get("sku-catalog") {
+        None => Ok(None),
+        Some(path) => Ok(Some(SkuCatalog::from_file(path)?)),
+    }
+}
+
+/// `--budget-ms N`: an optional wall-clock deadline for the anytime planner.
+fn deadline_arg(flags: &HashMap<String, String>) -> Result<Deadline> {
+    match flags.get("budget-ms") {
+        None => Ok(Deadline::none()),
+        Some(_) => Ok(Deadline::after_ms(flag_count(flags, "budget-ms", 50)?)),
+    }
+}
+
 fn workload_arg(flags: &HashMap<String, String>) -> Result<fleetopt::workload::traces::Workload> {
     if let Some(path) = flags.get("config") {
         return fleetopt::workload::traces::Workload::from_config_file(path);
@@ -205,7 +234,7 @@ fn print_plan(label: &str, p: &Plan, baseline: Option<f64>) {
     );
 }
 
-fn print_tiered(label: &str, p: &TieredPlan, baseline: Option<f64>) {
+fn print_tiered(label: &str, p: &TieredPlan, baseline: Option<f64>, catalog: Option<&SkuCatalog>) {
     let savings = baseline
         .map(|b| format!(" savings={:.1}%", (1.0 - p.cost_yr / b) * 100.0))
         .unwrap_or_default();
@@ -223,8 +252,17 @@ fn print_tiered(label: &str, p: &TieredPlan, baseline: Option<f64>) {
         savings,
     );
     for (i, (pool, tier)) in p.tiers.iter().zip(&p.spec.tiers).enumerate() {
+        // Mixed-SKU plans carry a per-tier SKU choice; name it from the
+        // catalog when one is loaded, else fall back to the index.
+        let sku = match tier.sku_index() {
+            None => String::new(),
+            Some(si) => match catalog.and_then(|c| c.skus.get(si)) {
+                Some(s) => format!(" sku={}", s.name),
+                None => format!(" sku=#{si}"),
+            },
+        };
         println!(
-            "  tier {i}: window={:6} slots/gpu={:4} n={:5} lambda={:7.1} rho={:.3} ttft99={:.0}ms",
+            "  tier {i}: window={:6} slots/gpu={:4} n={:5} lambda={:7.1} rho={:.3} ttft99={:.0}ms{sku}",
             tier.c_max,
             tier.n_max,
             pool.n_gpus,
@@ -233,6 +271,29 @@ fn print_tiered(label: &str, p: &TieredPlan, baseline: Option<f64>) {
             pool.ttft_p99() * 1e3,
         );
     }
+}
+
+/// Run the deadline-bounded anytime planner (`--sku-catalog`/`--budget-ms`)
+/// and report its search statistics before returning the incumbent.
+fn run_anytime(
+    input: &PlanInput,
+    k: usize,
+    catalog: Option<&SkuCatalog>,
+    flags: &HashMap<String, String>,
+) -> Result<AnytimeResult> {
+    let deadline = deadline_arg(flags)?;
+    let cache = CalibCache::new();
+    let t0 = std::time::Instant::now();
+    let res = anytime_search(input, k, catalog, &cache, deadline, &AnytimeConfig::default())?;
+    let dt = t0.elapsed();
+    println!(
+        "anytime: {} cells evaluated in {:.1} ms, bound gap {:.2}%, exact={}",
+        res.cells_evaluated,
+        dt.as_secs_f64() * 1e3,
+        res.bound_gap_pct,
+        res.exact,
+    );
+    Ok(res)
 }
 
 /// Plan a K-tier fleet at fixed windows (the `--tiers W1,..` form): the
@@ -255,11 +316,27 @@ fn cmd_plan(flags: &HashMap<String, String>) -> Result<()> {
 
     if let Some(tiers) = tiers_arg(flags)? {
         print_plan("homogeneous", &homo, None);
+        let catalog = sku_catalog_arg(flags)?;
         let best = match tiers {
-            TiersArg::Windows(windows) => plan_fixed_windows(&input, &windows)?,
-            TiersArg::K(k) => sweep_tiered(&input, k)?.0,
+            TiersArg::Windows(windows) => {
+                if catalog.is_some() || flags.contains_key("budget-ms") {
+                    bail!(
+                        "--sku-catalog/--budget-ms search SKU assignments and boundaries, \
+                         so they need the `--tiers K` fleet-size form, not fixed windows"
+                    );
+                }
+                plan_fixed_windows(&input, &windows)?
+            }
+            TiersArg::K(k) => {
+                if catalog.is_some() || flags.contains_key("budget-ms") {
+                    let res = run_anytime(&input, k, catalog.as_ref(), flags)?;
+                    res.plan
+                } else {
+                    sweep_tiered(&input, k)?.0
+                }
+            }
         };
-        print_tiered("fleetopt K-tier", &best, Some(homo.cost_yr));
+        print_tiered("fleetopt K-tier", &best, Some(homo.cost_yr), catalog.as_ref());
         return Ok(());
     }
 
@@ -294,6 +371,18 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             TiersArg::Windows(ws) => ws.len(),
             TiersArg::K(k) => *k,
         };
+        let catalog = sku_catalog_arg(flags)?;
+        if catalog.is_some() || flags.contains_key("budget-ms") {
+            if matches!(tiers, TiersArg::Windows(_)) {
+                bail!(
+                    "--sku-catalog/--budget-ms search SKU assignments and boundaries, \
+                     so they need the `--tiers K` fleet-size form, not fixed windows"
+                );
+            }
+            let res = run_anytime(&input, k, catalog.as_ref(), flags)?;
+            print_tiered("incumbent", &res.plan, None, catalog.as_ref());
+            return Ok(());
+        }
         let t0 = std::time::Instant::now();
         let (best, grid) = sweep_tiered(&input, k)?;
         let dt = t0.elapsed();
@@ -302,10 +391,10 @@ fn cmd_sweep(flags: &HashMap<String, String>) -> Result<()> {
             grid.len(),
             dt.as_secs_f64() * 1e3
         );
-        print_tiered("optimum", &best, None);
+        print_tiered("optimum", &best, None, None);
         if let TiersArg::Windows(windows) = tiers {
             let fixed = plan_fixed_windows(&input, &windows)?;
-            print_tiered("fixed --tiers windows", &fixed, Some(best.cost_yr));
+            print_tiered("fixed --tiers windows", &fixed, Some(best.cost_yr), None);
         }
         return Ok(());
     }
@@ -337,8 +426,8 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     let fast = flags.contains_key("fast");
     let only: Option<u32> = flags.get("only").map(|s| s.parse()).transpose()?;
     if let Some(n) = only {
-        if !(1..=9).contains(&n) {
-            bail!("--only must name a table in 1..=9, got {n}");
+        if !(1..=10).contains(&n) {
+            bail!("--only must name a table in 1..=10, got {n}");
         }
     }
     let want = |n: u32| only.is_none() || only == Some(n);
@@ -371,6 +460,9 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     }
     if want(9) {
         experiments::table9(auto_n).print();
+    }
+    if want(10) {
+        experiments::table10(1000.0, des_n).print();
     }
     Ok(())
 }
@@ -553,7 +645,7 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             TiersArg::Windows(windows) => plan_fixed_windows(&input, &windows)?,
             TiersArg::K(k) => sweep_tiered(&input, k)?.0,
         };
-        print_tiered("K-tier plan", &plan, None);
+        print_tiered("K-tier plan", &plan, None, None);
         let sim = simulate_fleet_tiered(&w, &plan, &input.gpu, lambda, n, 42);
         for (i, (pool, res)) in plan.tiers.iter().zip(&sim.tiers).enumerate() {
             match res {

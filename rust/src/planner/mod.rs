@@ -5,6 +5,7 @@
 //! case, and the online incremental replanner with hysteresis ([`replan`])
 //! that turns the one-shot plan into a control loop.
 
+pub mod anytime;
 pub mod cost;
 pub mod marginal;
 pub mod replan;
@@ -12,6 +13,7 @@ pub mod sizing;
 pub mod sweep;
 pub mod tiered;
 
+pub use anytime::{anytime_search, AnytimeConfig, AnytimeResult, Deadline};
 pub use replan::{ReplanConfig, ReplanOutcome, Replanner};
 pub use sweep::{
     candidate_boundaries, plan_fleet, plan_fleet_no_recalibration, plan_homogeneous,
@@ -20,6 +22,7 @@ pub use sweep::{
 };
 pub use tiered::{
     layout_neighborhood, plan_spec_sweep_gamma, plan_spec_sweep_gamma_cached, plan_tiers,
-    sweep_cell_bounds, sweep_tiered, sweep_tiered_cached, sweep_tiered_pruned,
-    sweep_tiered_pruned_seeded, sweep_tiered_serial, PruneStats, TierCell, TieredPlan,
+    sku_assignments, sku_sweep_space, sweep_cell_bounds, sweep_tiered, sweep_tiered_cached,
+    sweep_tiered_pruned, sweep_tiered_pruned_seeded, sweep_tiered_serial,
+    sweep_tiered_skus_pruned, PruneStats, TierCell, TieredPlan,
 };

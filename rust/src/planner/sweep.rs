@@ -67,6 +67,13 @@ use crate::workload::traces::Workload;
 /// threads: calibration is deterministic, so whichever worker computes a
 /// cell first inserts the exact value every other worker would have —
 /// results are bit-identical to the serial sweep regardless of schedule.
+///
+/// The key is deliberately SKU-free: calibration always runs at the base
+/// profile's unit rate, and a tier's SKU rate multiplier is applied as a
+/// pure time dilation *after* lookup ([`ServiceStats::scaled_mu`], an
+/// identity at `mu_scale = 1`). Tiers on different SKUs with the same cut
+/// and slot shape therefore share one cached calibration, and mixing SKUs
+/// into a sweep can never perturb a single-SKU cell's cached value.
 #[derive(Debug, Default)]
 pub struct CalibCache {
     map: Mutex<FxHashMap<(u64, u64, u32, u8), ServiceStats>>,

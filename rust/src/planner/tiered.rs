@@ -16,7 +16,7 @@
 //! `plan_cell`, and `planner::sweep` routes `plan_fleet`/`sweep_full`
 //! through it (property-tested in `tests/tier_equivalence.rs`).
 
-use crate::config::FleetSpec;
+use crate::config::{FleetSpec, SkuCatalog};
 use crate::planner::cost::fleet_cost_yr_tiered;
 use crate::planner::sizing::{min_gpus, SizingError};
 use crate::planner::sweep::{
@@ -134,7 +134,12 @@ pub fn plan_tiers(
         let tier_slo = t.slo_or(input.slo.p99_ttft_s);
         let pool = match cut {
             Some((lo, hi)) => {
-                let svc = calibrated(input, cache, lo, hi, t.n_max);
+                // Base-rate calibration (SKU-independent, so the cache
+                // stays keyed by cut and slot count alone), then the
+                // tier's SKU rate multiplier as a uniform time dilation.
+                // `scaled_mu(1.0)` is the identity, so single-SKU tiers
+                // are sized bit-identically to the pre-catalog planner.
+                let svc = calibrated(input, cache, lo, hi, t.n_max).scaled_mu(t.mu_scale());
                 size(lambda_i, svc, tier_slo)?
             }
             None => PoolPlan::empty(),
@@ -319,7 +324,7 @@ pub struct TierCell {
 }
 
 /// Ascending `choose`-combinations of the candidate boundary grid.
-fn boundary_combos(cands: &[u32], choose: usize) -> Vec<Vec<u32>> {
+pub(crate) fn boundary_combos(cands: &[u32], choose: usize) -> Vec<Vec<u32>> {
     fn rec(cands: &[u32], need: usize, start: usize, cur: &mut Vec<u32>, out: &mut Vec<Vec<u32>>) {
         if need == 0 {
             out.push(cur.clone());
@@ -337,6 +342,45 @@ fn boundary_combos(cands: &[u32], choose: usize) -> Vec<Vec<u32>> {
     let mut out = Vec::new();
     rec(cands, choose, 0, &mut Vec::with_capacity(choose), &mut out);
     out
+}
+
+/// Every per-tier SKU assignment for a K-tier fleet over a catalog of
+/// `s` SKUs: `s^k` rows, lexicographic with the last tier fastest-
+/// varying. The catalog-of-one space is the single all-zero row, which
+/// is how the SKU-generalized sweep degenerates onto the plain grid.
+pub fn sku_assignments(s: usize, k: usize) -> Vec<Vec<usize>> {
+    assert!(s >= 1 && k >= 1, "need a non-empty catalog and >= 1 tier");
+    let mut out = Vec::with_capacity(s.saturating_pow(k as u32));
+    let mut cur = vec![0usize; k];
+    'rows: loop {
+        out.push(cur.clone());
+        // Odometer increment, last digit fastest.
+        let mut i = k;
+        while i > 0 {
+            i -= 1;
+            cur[i] += 1;
+            if cur[i] < s {
+                continue 'rows;
+            }
+            cur[i] = 0;
+        }
+        return out;
+    }
+}
+
+/// Cell count of the SKU-generalized sweep grid for `k` tiers over
+/// `catalog`: boundary combos x gammas x per-tier SKU assignments
+/// (saturating — the whole point is that this overflows usefulness long
+/// before it overflows usize). The anytime optimizer compares it against
+/// its exhaustive budget to decide whether the exact oracle is
+/// affordable.
+pub fn sku_sweep_space(input: &PlanInput, k: usize, catalog: &SkuCatalog) -> usize {
+    assert!(k >= 2, "sku_sweep_space needs at least 2 tiers");
+    let cands = candidate_boundaries(input);
+    boundary_combos(&cands, k - 1)
+        .len()
+        .saturating_mul(input.cfg.gammas.len())
+        .saturating_mul(catalog.len().saturating_pow(k as u32))
 }
 
 /// Full K-tier Algorithm-1 sweep: every ascending (K−1)-subset of the
@@ -469,6 +513,23 @@ const PRUNE_MARGIN: f64 = 1.0;
 /// the identical arithmetic through its [`CutMemo`]-backed source.
 ///
 /// [`CutMemo`]: crate::queueing::simd::cells::CutMemo
+/// Per-iteration latency of tier `i` under its SKU rate multiplier. The
+/// `== 1.0` arm returns the base value untouched — not `base / 1.0` — so
+/// the plain grid's bounds stay bit-identical by construction rather than
+/// by IEEE accident. Mirrors `scaled_mu` on the exact path: both divide
+/// every base-rate time quantity by `mu_scale`, so the bound's soundness
+/// argument carries over per SKU.
+fn tier_t_iter_s(input: &PlanInput, spec: &FleetSpec, i: usize) -> f64 {
+    let t = &spec.tiers[i];
+    let base = input.gpu.t_iter_s(t.n_max);
+    let ms = t.mu_scale();
+    if ms == 1.0 {
+        base
+    } else {
+        base / ms
+    }
+}
+
 fn cell_cost_lb_with(
     input: &PlanInput,
     spec: &FleetSpec,
@@ -484,7 +545,7 @@ fn cell_cost_lb_with(
                 // Iterations >= 2 always (one prefill chunk + one decode).
                 let e_iter_lb = (m.e_iter - m.err_iter).max(1.0);
                 let n_slots = spec.tiers[i].n_max;
-                let e_s_lb = e_iter_lb * input.gpu.t_iter_s(n_slots);
+                let e_s_lb = e_iter_lb * tier_t_iter_s(input, spec, i);
                 let a_lb = lambda_i * e_s_lb / n_slots as f64;
                 (a_lb / input.cfg.rho_max).ceil().max(1.0) as u64
             }
@@ -497,7 +558,9 @@ fn cell_cost_lb_with(
 }
 
 /// [`cell_cost_lb_with`] reading cut moments straight off the table.
-fn cell_cost_lb(
+/// `pub(crate)` for the anytime optimizer's frontier ordering and its
+/// reported bound gap.
+pub(crate) fn cell_cost_lb(
     input: &PlanInput,
     spec: &FleetSpec,
     gammas: &[f64],
@@ -518,9 +581,49 @@ fn cell_cost_lb(
 /// exactly the scalar [`cell_cost_lb`] operation sequence on its own
 /// operands, and the memo returns the identical `CutMoments` a direct
 /// call computes (property-tested in `tests/simd_dispatch.rs`).
+/// One sweep cell: grid index, boundary combo, shared gamma, and the
+/// index of the cell's per-tier SKU assignment row (always 0 on the
+/// plain single-SKU grid).
+pub(crate) type SweepCell<'a> = (usize, &'a [u32], f64, u32);
+
+/// How a sweep cell's [`FleetSpec`] is built: the plain single-SKU grid
+/// (`skus: None` — the verbatim pre-catalog builder, so plain sweeps are
+/// untouched bit-for-bit) or a SKU catalog plus the enumerated per-tier
+/// assignment rows a cell's fourth coordinate indexes into.
+pub(crate) struct CellCtx<'a> {
+    pub input: &'a PlanInput,
+    pub skus: Option<(&'a SkuCatalog, &'a [Vec<usize>])>,
+}
+
+impl CellCtx<'_> {
+    fn spec(&self, combo: &[u32], asg: u32) -> FleetSpec {
+        match self.skus {
+            None => self.input.gpu.fleet_spec(combo),
+            Some((catalog, rows)) => {
+                self.input
+                    .gpu
+                    .fleet_spec_skus(combo, catalog, &rows[asg as usize])
+            }
+        }
+    }
+
+    /// A mixed assignment can hand an upper tier no more KV slots than
+    /// the last tier holds; such a spec violates the fleet's
+    /// slot-monotonicity rule ([`FleetSpec::validate`]) and its cell is
+    /// infeasible — the tier would buy nothing over the long tier. Plain
+    /// cells (one SKU, slots inverse in window) satisfy it structurally.
+    fn spec_feasible(&self, spec: &FleetSpec) -> bool {
+        if self.skus.is_none() {
+            return true;
+        }
+        let last = spec.tiers[spec.k() - 1].n_max;
+        spec.tiers[..spec.k() - 1].iter().all(|t| t.n_max > last)
+    }
+}
+
 fn cell_bounds(
-    input: &PlanInput,
-    cells: &[(usize, &[u32], f64)],
+    ctx: &CellCtx,
+    cells: &[SweepCell],
     k: usize,
     table: &MomentTable,
     len_points: usize,
@@ -528,13 +631,13 @@ fn cell_bounds(
 ) -> Vec<Option<f64>> {
     #[cfg(feature = "simd")]
     if batched {
-        return cell_bounds_batched(input, cells, k, table, len_points);
+        return cell_bounds_batched(ctx, cells, k, table, len_points);
     }
     #[cfg(not(feature = "simd"))]
     let _ = batched;
-    par_map_strided(cells, |&(_, combo, gamma)| {
-        let spec = input.gpu.fleet_spec(combo);
-        cell_cost_lb(input, &spec, &vec![gamma; k - 1], table, len_points)
+    par_map_strided(cells, |&(_, combo, gamma, asg)| {
+        let spec = ctx.spec(combo, asg);
+        cell_cost_lb(ctx.input, &spec, &vec![gamma; k - 1], table, len_points)
     })
 }
 
@@ -547,8 +650,8 @@ struct LbScratch {
     memo: crate::queueing::simd::cells::CutMemo,
     /// One recycled layout per lane.
     layouts: Vec<CellLayout>,
-    /// Specs deduped by boundary combo (the grid is combo-major, so a
-    /// block usually spans one or two combos).
+    /// Specs deduped by (boundary combo, SKU assignment) — the grid is
+    /// combo-major, so a block usually spans one or two spec keys.
     specs: Vec<FleetSpec>,
     /// Per-cell gamma vector, refilled in place.
     gbuf: Vec<f64>,
@@ -580,21 +683,21 @@ impl LbScratch {
 /// worker in rotation.
 #[cfg(feature = "simd")]
 fn cell_bounds_batched(
-    input: &PlanInput,
-    cells: &[(usize, &[u32], f64)],
+    ctx: &CellCtx,
+    cells: &[SweepCell],
     k: usize,
     table: &MomentTable,
     len_points: usize,
 ) -> Vec<Option<f64>> {
     use crate::queueing::simd::cells::CELL_LANES;
 
-    let blocks: Vec<&[(usize, &[u32], f64)]> = cells.chunks(CELL_LANES).collect();
+    let blocks: Vec<&[SweepCell]> = cells.chunks(CELL_LANES).collect();
     let workers = crate::util::par::workers_for(blocks.len(), 2);
     let shards: Vec<Vec<Vec<Option<f64>>>> = if workers <= 1 {
         let mut scratch = LbScratch::new();
         vec![blocks
             .iter()
-            .map(|b| lb_block(input, b, k, table, len_points, &mut scratch))
+            .map(|b| lb_block(ctx, b, k, table, len_points, &mut scratch))
             .collect()]
     } else {
         let blocks_ref = &blocks;
@@ -607,7 +710,7 @@ fn cell_bounds_batched(
                             .iter()
                             .skip(w)
                             .step_by(workers)
-                            .map(|b| lb_block(input, b, k, table, len_points, &mut scratch))
+                            .map(|b| lb_block(ctx, b, k, table, len_points, &mut scratch))
                             .collect::<Vec<Vec<Option<f64>>>>()
                     })
                 })
@@ -634,8 +737,8 @@ fn cell_bounds_batched(
 /// early return does), and every other arm contributes a zero count.
 #[cfg(feature = "simd")]
 fn lb_block(
-    input: &PlanInput,
-    block: &[(usize, &[u32], f64)],
+    ctx: &CellCtx,
+    block: &[SweepCell],
     k: usize,
     table: &MomentTable,
     len_points: usize,
@@ -643,17 +746,18 @@ fn lb_block(
 ) -> Vec<Option<f64>> {
     use crate::queueing::simd::cells::{stability_counts_lanes, LaneInputs, CELL_LANES};
 
+    let input = ctx.input;
     debug_assert!(block.len() <= CELL_LANES);
     scratch.specs.clear();
     while scratch.layouts.len() < block.len() {
         scratch.layouts.push(CellLayout::default());
     }
     let mut spec_of = [0usize; CELL_LANES];
-    let mut last_combo: Option<&[u32]> = None;
-    for (j, &(_, combo, gamma)) in block.iter().enumerate() {
-        if last_combo != Some(combo) {
-            scratch.specs.push(input.gpu.fleet_spec(combo));
-            last_combo = Some(combo);
+    let mut last_key: Option<(&[u32], u32)> = None;
+    for (j, &(_, combo, gamma, asg)) in block.iter().enumerate() {
+        if last_key != Some((combo, asg)) {
+            scratch.specs.push(ctx.spec(combo, asg));
+            last_key = Some((combo, asg));
         }
         spec_of[j] = scratch.specs.len() - 1;
         scratch.gbuf.clear();
@@ -680,12 +784,13 @@ fn lb_block(
                 Some((lo, hi)) if lambda_t > 0.0 => {
                     match scratch.memo.cut(table, lo, hi, len_points) {
                         Some(m) => {
-                            let n_slots = scratch.specs[spec_of[l]].tiers[t].n_max;
+                            let spec = &scratch.specs[spec_of[l]];
+                            let n_slots = spec.tiers[t].n_max;
                             li.live[l] = true;
                             li.lambda[l] = lambda_t;
                             li.e_iter[l] = m.e_iter;
                             li.err_iter[l] = m.err_iter;
-                            li.t_iter[l] = input.gpu.t_iter_s(n_slots);
+                            li.t_iter[l] = tier_t_iter_s(input, spec, t);
                             li.n_slots[l] = n_slots as f64;
                         }
                         None => dead[l] = true,
@@ -725,16 +830,16 @@ pub fn sweep_cell_bounds(input: &PlanInput, k: usize, batched: bool) -> Vec<Opti
     assert!(k >= 2, "sweep_cell_bounds needs at least 2 tiers");
     let cands = candidate_boundaries(input);
     let combos = boundary_combos(&cands, k - 1);
-    let mut cells: Vec<(usize, &[u32], f64)> =
-        Vec::with_capacity(combos.len() * input.cfg.gammas.len());
+    let mut cells: Vec<SweepCell> = Vec::with_capacity(combos.len() * input.cfg.gammas.len());
     for combo in &combos {
         for &gamma in &input.cfg.gammas {
-            cells.push((cells.len(), combo.as_slice(), gamma));
+            cells.push((cells.len(), combo.as_slice(), gamma, 0));
         }
     }
     let table = MomentTable::for_workload(&input.workload, input.gpu.chunk);
     let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
-    cell_bounds(input, &cells, k, &table, len_points, batched)
+    let ctx = CellCtx { input, skus: None };
+    cell_bounds(&ctx, &cells, k, &table, len_points, batched)
 }
 
 /// Bound-and-prune K-tier sweep: **the same argmin as [`sweep_tiered`],
@@ -770,29 +875,90 @@ pub fn sweep_tiered_pruned_seeded(
     cache: &CalibCache,
     seeds: &[(Vec<u32>, f64)],
 ) -> Result<(TieredPlan, PruneStats), SizingError> {
-    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-
     assert!(k >= 2, "sweep_tiered_pruned needs at least 2 tiers");
     let cands = candidate_boundaries(input);
     let combos = boundary_combos(&cands, k - 1);
     if combos.is_empty() {
         return Err(SizingError::NoFeasibleTiering { k });
     }
-    let mut cells: Vec<(usize, &[u32], f64)> =
-        Vec::with_capacity(combos.len() * input.cfg.gammas.len());
+    let mut cells: Vec<SweepCell> = Vec::with_capacity(combos.len() * input.cfg.gammas.len());
     for combo in &combos {
         for &gamma in &input.cfg.gammas {
-            cells.push((cells.len(), combo.as_slice(), gamma));
+            cells.push((cells.len(), combo.as_slice(), gamma, 0));
         }
     }
+    let ctx = CellCtx { input, skus: None };
+    sweep_pruned_cells(&ctx, k, &cells, cache, seeds)
+}
 
+/// Bound-and-prune over the SKU-generalized grid: every ascending
+/// boundary combo crossed with the gamma grid crossed with every
+/// per-tier SKU assignment over `catalog` ([`sku_assignments`] order —
+/// the grid stays combo-major, then gamma, then assignment, so the
+/// grid-order tie-break extends the plain sweep's). Assignments whose
+/// spec breaks the fleet's slot-monotonicity rule are infeasible cells,
+/// and the same closed-form bound prices each SKU's rate and cost before
+/// any Erlang-C inversion. With the catalog-of-one
+/// ([`SkuCatalog::single`]) the grid collapses onto the plain sweep's
+/// and the selected plan matches [`sweep_tiered_pruned`] bit-for-bit on
+/// everything but the recorded SKU choice (tested). This is the anytime
+/// optimizer's small-space exhaustive oracle; the space grows as
+/// `|catalog|^K`, which is exactly why [`crate::planner::anytime`]
+/// exists for the rest.
+pub fn sweep_tiered_skus_pruned(
+    input: &PlanInput,
+    k: usize,
+    catalog: &SkuCatalog,
+    cache: &CalibCache,
+) -> Result<(TieredPlan, PruneStats), SizingError> {
+    assert!(k >= 2, "sweep_tiered_skus_pruned needs at least 2 tiers");
+    let cands = candidate_boundaries(input);
+    let combos = boundary_combos(&cands, k - 1);
+    if combos.is_empty() {
+        return Err(SizingError::NoFeasibleTiering { k });
+    }
+    let rows = sku_assignments(catalog.len(), k);
+    let mut cells: Vec<SweepCell> =
+        Vec::with_capacity(combos.len() * input.cfg.gammas.len() * rows.len());
+    for combo in &combos {
+        for &gamma in &input.cfg.gammas {
+            for a in 0..rows.len() as u32 {
+                cells.push((cells.len(), combo.as_slice(), gamma, a));
+            }
+        }
+    }
+    let ctx = CellCtx {
+        input,
+        skus: Some((catalog, &rows)),
+    };
+    sweep_pruned_cells(&ctx, k, &cells, cache, &[])
+}
+
+/// The shared bound-and-prune engine behind [`sweep_tiered_pruned_seeded`]
+/// and [`sweep_tiered_skus_pruned`]: bound every cell, seed an incumbent,
+/// evaluate the survivors, replay the grid-order selection. On the plain
+/// grid (`ctx.skus == None`, assignment column all zero) this body is the
+/// pre-catalog sweep verbatim.
+fn sweep_pruned_cells(
+    ctx: &CellCtx,
+    k: usize,
+    cells: &[SweepCell],
+    cache: &CalibCache,
+    seeds: &[(Vec<u32>, f64)],
+) -> Result<(TieredPlan, PruneStats), SizingError> {
+    use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+
+    let input = ctx.input;
     let table = MomentTable::for_workload(&input.workload, input.gpu.chunk);
     let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
     let batched = crate::util::simd::simd_active();
-    let lbs: Vec<Option<f64>> = cell_bounds(input, &cells, k, &table, len_points, batched);
+    let lbs: Vec<Option<f64>> = cell_bounds(ctx, cells, k, &table, len_points, batched);
 
-    let eval = |combo: &[u32], gamma: f64| -> Result<TieredPlan, SizingError> {
-        let spec = input.gpu.fleet_spec(combo);
+    let eval = |combo: &[u32], gamma: f64, asg: u32| -> Result<TieredPlan, SizingError> {
+        let spec = ctx.spec(combo, asg);
+        if !ctx.spec_feasible(&spec) {
+            return Err(SizingError::NoFeasibleTiering { k });
+        }
         plan_tiers(input, &spec, &vec![gamma; k - 1], true, Some(cache))
     };
 
@@ -809,8 +975,8 @@ pub fn sweep_tiered_pruned_seeded(
         if seed_plans[i].is_some() {
             return true;
         }
-        let (_, combo, gamma) = cells[i];
-        if let Ok(p) = eval(combo, gamma) {
+        let (_, combo, gamma, asg) = cells[i];
+        if let Ok(p) = eval(combo, gamma, asg) {
             best_bits.fetch_min(p.cost_yr.to_bits(), Ordering::Relaxed);
             seed_plans[i] = Some(p);
             *seeded += 1;
@@ -825,8 +991,8 @@ pub fn sweep_tiered_pruned_seeded(
         // ignored, which is merely slower.
         let idx = cells
             .iter()
-            .find(|&&(_, c, g)| c == combo.as_slice() && g.to_bits() == gamma.to_bits());
-        if let Some(&(i, _, _)) = idx {
+            .find(|&&(_, c, g, _)| c == combo.as_slice() && g.to_bits() == gamma.to_bits());
+        if let Some(&(i, _, _, _)) = idx {
             seed_cell(i, &mut seeded);
         }
     }
@@ -845,7 +1011,7 @@ pub fn sweep_tiered_pruned_seeded(
     // proof guarantees the *selected plan* cannot.
     let pruned_n = AtomicUsize::new(0);
     let infeasible_n = AtomicUsize::new(0);
-    let plans: Vec<Option<TieredPlan>> = par_map_strided(&cells, |&(i, combo, gamma)| {
+    let plans: Vec<Option<TieredPlan>> = par_map_strided(cells, |&(i, combo, gamma, asg)| {
         if let Some(p) = &seed_plans[i] {
             return Some(p.clone());
         }
@@ -856,7 +1022,7 @@ pub fn sweep_tiered_pruned_seeded(
                 return None;
             }
         }
-        match eval(combo, gamma) {
+        match eval(combo, gamma, asg) {
             Ok(p) => {
                 best_bits.fetch_min(p.cost_yr.to_bits(), Ordering::Relaxed);
                 Some(p)
@@ -1202,5 +1368,129 @@ mod tests {
         );
         assert_eq!(boundary_combos(&[1, 2], 3), Vec::<Vec<u32>>::new());
         assert_eq!(boundary_combos(&[1, 2], 1), vec![vec![1], vec![2]]);
+    }
+
+    #[test]
+    fn sku_assignments_enumerate_odometer_order() {
+        assert_eq!(sku_assignments(1, 3), vec![vec![0, 0, 0]]);
+        assert_eq!(
+            sku_assignments(2, 2),
+            vec![vec![0, 0], vec![0, 1], vec![1, 0], vec![1, 1]]
+        );
+        let rows = sku_assignments(3, 3);
+        assert_eq!(rows.len(), 27);
+        assert_eq!(rows[0], vec![0, 0, 0]);
+        assert_eq!(rows[26], vec![2, 2, 2]);
+        // Strictly lexicographic: each row sorts after its predecessor.
+        assert!(rows.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn catalog_of_one_sku_sweep_matches_plain_sweep_bitwise() {
+        // The tentpole's bit-identity pin: on the single-SKU projection
+        // the generalized sweep must select the exact plain-sweep cell —
+        // same boundaries, counts, gammas and cost to the bit.
+        let input = azure_input();
+        let catalog = crate::config::SkuCatalog::single(&input.gpu);
+        for k in [2usize, 3] {
+            let (plain, _) = sweep_tiered_pruned(&input, k, &CalibCache::new()).unwrap();
+            let (skus, stats) =
+                sweep_tiered_skus_pruned(&input, k, &catalog, &CalibCache::new()).unwrap();
+            assert_eq!(skus.cost_yr.to_bits(), plain.cost_yr.to_bits(), "K={k}");
+            assert_eq!(skus.boundaries(), plain.boundaries(), "K={k}");
+            assert_eq!(skus.gpu_counts(), plain.gpu_counts(), "K={k}");
+            for (a, b) in skus.gammas.iter().zip(&plain.gammas) {
+                assert_eq!(a.to_bits(), b.to_bits(), "K={k}");
+            }
+            // Same grid, one assignment row each — and every tier records
+            // the catalog-of-one choice.
+            assert_eq!(stats.cells, plain_grid_cells(&input, k), "K={k}");
+            assert!(skus.spec.tiers.iter().all(|t| t.sku_index() == Some(0)));
+        }
+    }
+
+    fn plain_grid_cells(input: &PlanInput, k: usize) -> usize {
+        let cands = candidate_boundaries(input);
+        boundary_combos(&cands, k - 1).len() * input.cfg.gammas.len()
+    }
+
+    #[test]
+    fn mixed_sku_sweep_never_loses_to_single_sku() {
+        // The demo catalog contains the base SKU, so the uniform-base
+        // assignment is in the mixed grid: its optimum can only improve
+        // on the plain sweep's.
+        let input = azure_input();
+        let catalog = crate::config::SkuCatalog::demo(&input.gpu);
+        let (plain, _) = sweep_tiered_pruned(&input, 2, &CalibCache::new()).unwrap();
+        let (mixed, stats) =
+            sweep_tiered_skus_pruned(&input, 2, &catalog, &CalibCache::new()).unwrap();
+        assert!(
+            mixed.cost_yr <= plain.cost_yr + 1e-9,
+            "mixed {} vs single {}",
+            mixed.cost_yr,
+            plain.cost_yr
+        );
+        assert_eq!(stats.cells, plain_grid_cells(&input, 2) * 9);
+        assert_eq!(stats.cells, stats.pruned + stats.evaluated + stats.infeasible);
+        // Traffic conservation still holds under a mixed assignment.
+        let total: f64 = mixed.tiers.iter().map(|t| t.lambda).sum();
+        assert!((total - 1000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn sku_cost_lower_bound_never_exceeds_exact_cost() {
+        // Prune-bound soundness on mu-scaled, re-slotted SKU specs — the
+        // mixed-grid analog of `cost_lower_bound_never_exceeds_exact_cost`.
+        let input = azure_input();
+        let catalog = crate::config::SkuCatalog::demo(&input.gpu);
+        let table =
+            crate::queueing::service::MomentTable::for_workload(&input.workload, input.gpu.chunk);
+        let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
+        let mut checked = 0usize;
+        for b in [2048u32, 4096, 8192] {
+            for asg in sku_assignments(catalog.len(), 2) {
+                for gamma in [1.0, 1.4] {
+                    let spec = input.gpu.fleet_spec_skus(&[b], &catalog, &asg);
+                    let Ok(plan) = plan_tiers(&input, &spec, &[gamma], true, None) else {
+                        continue;
+                    };
+                    let lb = cell_cost_lb(&input, &spec, &[gamma], &table, len_points)
+                        .expect("boundable cell");
+                    assert!(
+                        lb <= plan.cost_yr + 1e-6,
+                        "B={b} asg={asg:?} gamma={gamma}: lb {lb} > cost {}",
+                        plan.cost_yr
+                    );
+                    checked += 1;
+                }
+            }
+        }
+        assert!(checked >= 12, "too few feasible SKU cells: {checked}");
+    }
+
+    #[test]
+    fn mu_scaled_tier_sizes_like_a_faster_gpu() {
+        // A uniformly faster SKU (same slots, higher mu) can never need
+        // more GPUs in any tier, and its t_iter bound input shrinks.
+        let input = azure_input();
+        let mut catalog = crate::config::SkuCatalog::single(&input.gpu);
+        catalog.skus[0].mu_scale = 2.0;
+        let spec = input.gpu.fleet_spec(&[4096]);
+        let fast = input.gpu.fleet_spec_skus(&[4096], &catalog, &[0, 0]);
+        let base_plan = plan_tiers(&input, &spec, &[1.5], true, None).unwrap();
+        let fast_plan = plan_tiers(&input, &fast, &[1.5], true, None).unwrap();
+        for (b, f) in base_plan.tiers.iter().zip(&fast_plan.tiers) {
+            assert!(f.n_gpus <= b.n_gpus, "fast {} vs base {}", f.n_gpus, b.n_gpus);
+            // Identical traffic split: mu scaling touches service only.
+            assert_eq!(b.lambda.to_bits(), f.lambda.to_bits());
+        }
+        assert_eq!(tier_t_iter_s(&input, &spec, 0).to_bits(), {
+            let t = input.gpu.t_iter_s(spec.tiers[0].n_max);
+            t.to_bits()
+        });
+        assert_eq!(
+            tier_t_iter_s(&input, &fast, 0).to_bits(),
+            (input.gpu.t_iter_s(fast.tiers[0].n_max) / 2.0).to_bits()
+        );
     }
 }

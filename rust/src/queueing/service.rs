@@ -59,6 +59,26 @@ impl ServiceStats {
     pub fn mu_gpu(&self) -> f64 {
         self.n_slots as f64 / self.e_s
     }
+
+    /// These stats on silicon `mu_scale` times as fast: a proportional
+    /// service-rate multiplier is a uniform time dilation, so every time
+    /// quantity divides by it exactly while `scv` (dimensionless) and the
+    /// slot count are invariant. `mu_scale = 1` returns `self` unchanged —
+    /// the single-SKU path stays bit-identical by construction, and the
+    /// calibration cache can keep storing base-rate stats keyed only by
+    /// `(cut, n_slots)`.
+    pub fn scaled_mu(self, mu_scale: f64) -> ServiceStats {
+        if mu_scale == 1.0 {
+            return self;
+        }
+        ServiceStats {
+            e_s: self.e_s / mu_scale,
+            scv: self.scv,
+            p99_prefill_s: self.p99_prefill_s / mu_scale,
+            t_iter_s: self.t_iter_s / mu_scale,
+            n_slots: self.n_slots,
+        }
+    }
 }
 
 /// Inverse standard-normal CDF (Acklam's rational approximation,

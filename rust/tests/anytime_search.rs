@@ -1,0 +1,255 @@
+//! The heterogeneous-SKU anytime planner's regression gates.
+//!
+//! * Single-SKU spaces: `anytime_search` with no catalog must return the
+//!   `sweep_tiered_pruned` argmin bit-identically (boundaries, gammas,
+//!   per-tier GPU counts, cost) on all three traces at K = 2, 3 — the
+//!   acceptance pin this PR's dispatch rests on. K = 4 in release.
+//! * Small mixed spaces: within `exhaustive_cells` and deadline-free the
+//!   search must equal the exhaustive `sweep_tiered_skus_pruned` oracle.
+//! * Mixed never loses: with the demo catalog (which contains the base
+//!   SKU) the incumbent's cost is at or below the single-SKU optimum.
+//! * Determinism: the sampled path is a pure function of the seed and
+//!   budgets — two runs agree bit for bit, including the evaluated-cell
+//!   count (no wall-clock dependence when no deadline is set).
+//! * Deadlines truncate rather than hang: an over-budgeted search under a
+//!   tight deadline still returns a valid plan promptly.
+//! * Catalog validation names the offending entry and index.
+
+use fleetopt::config::{GpuSku, PlannerConfig, SkuCatalog};
+use fleetopt::planner::{
+    anytime_search, sweep_tiered_pruned, sweep_tiered_skus_pruned, AnytimeConfig, CalibCache,
+    Deadline, PlanInput,
+};
+use fleetopt::workload::traces;
+
+fn fast_input(w: traces::Workload, lambda: f64, mc: usize) -> PlanInput {
+    let mut i = PlanInput::new(w, lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: mc,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+fn assert_plans_bit_identical(
+    a: &fleetopt::planner::TieredPlan,
+    b: &fleetopt::planner::TieredPlan,
+    label: &str,
+) {
+    assert_eq!(a.cost_yr.to_bits(), b.cost_yr.to_bits(), "{label}");
+    assert_eq!(a.boundaries(), b.boundaries(), "{label}");
+    assert_eq!(a.gpu_counts(), b.gpu_counts(), "{label}");
+    for (x, y) in a.gammas.iter().zip(&b.gammas) {
+        assert_eq!(x.to_bits(), y.to_bits(), "{label}");
+    }
+    for (x, y) in a.spec.tiers.iter().zip(&b.spec.tiers) {
+        assert_eq!(x.sku_index(), y.sku_index(), "{label}");
+    }
+}
+
+/// The acceptance pin: on single-SKU spaces the anytime entry point IS
+/// the pruned sweep, bit for bit, across traces and fleet sizes.
+#[test]
+fn anytime_returns_the_pruned_sweep_argmin_on_single_sku_spaces() {
+    let heavy = !cfg!(debug_assertions);
+    for w in traces::all() {
+        for k in [2usize, 3, 4] {
+            if k == 4 && !heavy && w.name != "azure" {
+                continue;
+            }
+            let mc = if k == 4 { 1_000 } else { 2_000 };
+            let input = fast_input(w.clone(), 1000.0, mc);
+            let (oracle, _) = sweep_tiered_pruned(&input, k, &CalibCache::new()).unwrap();
+            let res = anytime_search(
+                &input,
+                k,
+                None,
+                &CalibCache::new(),
+                Deadline::none(),
+                &AnytimeConfig::default(),
+            )
+            .unwrap();
+            let label = format!("{} K={k}", w.name);
+            assert!(res.exact, "{label}: single-SKU result must be exact");
+            assert_eq!(res.bound_gap_pct.to_bits(), 0.0f64.to_bits(), "{label}");
+            assert_plans_bit_identical(&res.plan, &oracle, &label);
+        }
+    }
+}
+
+/// Small mixed spaces (demo catalog at K = 2: 3^2 assignments over the
+/// plain grid, well under the default `exhaustive_cells`) delegate to the
+/// exhaustive SKU sweep and therefore equal its argmin exactly.
+#[test]
+fn anytime_is_exact_on_small_mixed_spaces() {
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0, 1_500);
+        let catalog = SkuCatalog::demo(&input.gpu);
+        let (oracle, _) =
+            sweep_tiered_skus_pruned(&input, 2, &catalog, &CalibCache::new()).unwrap();
+        let res = anytime_search(
+            &input,
+            2,
+            Some(&catalog),
+            &CalibCache::new(),
+            Deadline::none(),
+            &AnytimeConfig::default(),
+        )
+        .unwrap();
+        let label = format!("{} K=2 mixed", w.name);
+        assert!(res.exact, "{label}: small space must take the oracle path");
+        assert_plans_bit_identical(&res.plan, &oracle, &label);
+        // The demo catalog contains the base SKU, so mixed never loses to
+        // the single-SKU optimum (Table 10's headline inequality).
+        let (single, _) = sweep_tiered_pruned(&input, 2, &CalibCache::new()).unwrap();
+        assert!(
+            res.plan.cost_yr <= single.cost_yr + 1e-9,
+            "{label}: mixed ${:.2} must not exceed single-SKU ${:.2}",
+            res.plan.cost_yr,
+            single.cost_yr
+        );
+    }
+}
+
+/// The sampled path (forced by `exhaustive_cells: 0`) is a pure function
+/// of (seed, budgets): two deadline-free runs agree bit for bit, down to
+/// the number of cells evaluated — no wall-clock leaks into the search.
+#[test]
+fn sampled_search_is_seed_deterministic() {
+    let input = fast_input(traces::azure(), 1000.0, 1_500);
+    let catalog = SkuCatalog::demo(&input.gpu);
+    let cfg = AnytimeConfig {
+        explore_cells: 24,
+        compress_rounds: 3,
+        exhaustive_cells: 0, // force the sampled path even on K = 2
+        ..AnytimeConfig::default()
+    };
+    let run = || {
+        anytime_search(
+            &input,
+            2,
+            Some(&catalog),
+            &CalibCache::new(),
+            Deadline::none(),
+            &cfg,
+        )
+        .unwrap()
+    };
+    let a = run();
+    let b = run();
+    assert!(!a.exact, "exhaustive_cells: 0 must force the sampled path");
+    assert_eq!(a.cells_evaluated, b.cells_evaluated);
+    assert_eq!(a.bound_gap_pct.to_bits(), b.bound_gap_pct.to_bits());
+    assert_plans_bit_identical(&a.plan, &b.plan, "azure K=2 sampled");
+
+    // A different seed may pick a different incumbent, but must still be
+    // internally deterministic.
+    let cfg2 = AnytimeConfig { seed: 7, ..cfg };
+    let c = anytime_search(
+        &input,
+        2,
+        Some(&catalog),
+        &CalibCache::new(),
+        Deadline::none(),
+        &cfg2,
+    )
+    .unwrap();
+    let d = anytime_search(
+        &input,
+        2,
+        Some(&catalog),
+        &CalibCache::new(),
+        Deadline::none(),
+        &cfg2,
+    )
+    .unwrap();
+    assert_eq!(c.cells_evaluated, d.cells_evaluated);
+    assert_plans_bit_identical(&c.plan, &d.plan, "azure K=2 sampled seed=7");
+}
+
+/// A tight deadline truncates the search instead of hanging: a grossly
+/// over-budgeted exploration under a few-ms deadline still returns a
+/// valid plan in bounded wall time.
+#[test]
+fn deadline_truncates_an_over_budgeted_search() {
+    let input = fast_input(traces::azure(), 1000.0, 1_500);
+    let catalog = SkuCatalog::demo(&input.gpu);
+    let cfg = AnytimeConfig {
+        explore_cells: usize::MAX / 8,
+        compress_rounds: 64,
+        exhaustive_cells: 0,
+        ..AnytimeConfig::default()
+    };
+    let t0 = std::time::Instant::now();
+    let res = anytime_search(
+        &input,
+        3,
+        Some(&catalog),
+        &CalibCache::new(),
+        Deadline::after_ms(5),
+        &cfg,
+    )
+    .unwrap();
+    // Generous bound: the deadline only gates between evaluations, so one
+    // in-flight batch may overrun it — but never by tens of seconds.
+    assert!(
+        t0.elapsed().as_secs_f64() < 30.0,
+        "deadline-bounded search ran {:.1} s",
+        t0.elapsed().as_secs_f64()
+    );
+    assert_eq!(res.plan.k(), 3);
+    assert!(res.plan.total_gpus() > 0);
+    assert!(res.plan.cost_yr.is_finite());
+}
+
+/// Catalog validation points at the offending entry by index and name.
+#[test]
+fn catalog_validation_names_entry_and_index() {
+    let sku = |name: &str| GpuSku {
+        name: name.to_string(),
+        n_max_calib: 128,
+        mu_scale: 1.0,
+        cost_hr: 2.0,
+        spot_discount: 0.0,
+        preemptible: false,
+    };
+
+    let empty = SkuCatalog { skus: vec![] };
+    let err = empty.validate().unwrap_err().to_string();
+    assert!(err.contains("empty"), "{err}");
+
+    let mut bad_cost = SkuCatalog { skus: vec![sku("a100"), sku("h100")] };
+    bad_cost.skus[1].cost_hr = 0.0;
+    let err = bad_cost.validate().unwrap_err().to_string();
+    assert!(err.contains("sku 1") && err.contains("h100"), "{err}");
+    assert!(err.contains("cost_hr"), "{err}");
+
+    let mut bad_slots = SkuCatalog { skus: vec![sku("a100")] };
+    bad_slots.skus[0].n_max_calib = 0;
+    let err = bad_slots.validate().unwrap_err().to_string();
+    assert!(err.contains("sku 0") && err.contains("a100"), "{err}");
+    assert!(err.contains("n_max_calib"), "{err}");
+
+    let mut bad_mu = SkuCatalog { skus: vec![sku("a100"), sku("l40s")] };
+    bad_mu.skus[1].mu_scale = -0.5;
+    let err = bad_mu.validate().unwrap_err().to_string();
+    assert!(err.contains("sku 1") && err.contains("l40s"), "{err}");
+    assert!(err.contains("mu_scale"), "{err}");
+
+    let mut bad_spot = SkuCatalog { skus: vec![sku("a100")] };
+    bad_spot.skus[0].spot_discount = 1.0;
+    let err = bad_spot.validate().unwrap_err().to_string();
+    assert!(err.contains("sku 0") && err.contains("spot_discount"), "{err}");
+
+    let dup = SkuCatalog { skus: vec![sku("a100"), sku("h100"), sku("a100")] };
+    let err = dup.validate().unwrap_err().to_string();
+    assert!(
+        err.contains("sku 2") && err.contains("duplicates") && err.contains("sku 0"),
+        "{err}"
+    );
+
+    // The demo catalog itself must of course validate.
+    SkuCatalog::demo(&fleetopt::config::GpuProfile::a100_llama70b())
+        .validate()
+        .unwrap();
+}

@@ -411,6 +411,52 @@ fn table8_acceptance_k3_at_most_k2_on_some_trace() {
 }
 
 #[test]
+fn sku_catalog_of_one_plans_bit_identical_to_plain_specs() {
+    // The heterogeneous-SKU generalization's K-tier pin: planning against
+    // the catalog-of-one spec (base SKU assigned to every tier) reproduces
+    // the plain `fleet_spec` plan bit for bit — sizes, lambdas, gammas and
+    // cost. The paper's A100 profile prices both pools equally (phi = 1),
+    // which is exactly when the projection is defined.
+    use fleetopt::config::SkuCatalog;
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let catalog = SkuCatalog::single(&input.gpu);
+        for bounds in [&[w.b_short][..], &[2048, 16384][..]] {
+            let plain_spec = input.gpu.fleet_spec(bounds);
+            let sku_spec =
+                input
+                    .gpu
+                    .fleet_spec_skus(bounds, &catalog, &vec![0; bounds.len() + 1]);
+            let gammas = vec![1.5; bounds.len()];
+            let a = plan_tiers(&input, &plain_spec, &gammas, true, None);
+            let b = plan_tiers(&input, &sku_spec, &gammas, true, None);
+            let label = format!("{} bounds={bounds:?}", w.name);
+            match (a, b) {
+                (Ok(a), Ok(b)) => {
+                    assert_eq!(a.cost_yr.to_bits(), b.cost_yr.to_bits(), "{label}");
+                    assert_eq!(a.gpu_counts(), b.gpu_counts(), "{label}");
+                    for (x, y) in a.tiers.iter().zip(&b.tiers) {
+                        assert_eq!(x.lambda.to_bits(), y.lambda.to_bits(), "{label}");
+                    }
+                    for t in &b.spec.tiers {
+                        assert_eq!(t.sku_index(), Some(0), "{label}");
+                    }
+                }
+                // Both paths must agree on feasibility too.
+                (Err(ea), Err(eb)) => {
+                    assert_eq!(format!("{ea:?}"), format!("{eb:?}"), "{label}")
+                }
+                (a, b) => panic!(
+                    "{label}: feasibility diverged (plain ok={}, catalog-of-one ok={})",
+                    a.is_ok(),
+                    b.is_ok()
+                ),
+            }
+        }
+    }
+}
+
+#[test]
 fn k3_sweep_meets_release_wall_clock_bound() {
     // Acceptance: the full K=3 boundary-combination sweep finishes inside
     // 100 ms in release mode (debug builds run it for coverage only).
