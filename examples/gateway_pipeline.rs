@@ -1,0 +1,97 @@
+//! Sharded gateway admission + route memo close-up (PR 8): replay a
+//! duplicate-heavy borderline trace through `route_batch_with_opts`,
+//! compare serial/uncached against sharded/memoized, and print the shard
+//! count, per-stage admission latency, and cache hit rate.
+//!
+//! Like the other files in `examples/`, this is library-API reference
+//! source (the crate lives in `rust/`, which declares no example
+//! targets). The runnable equivalent is the serve CLI:
+//!
+//! ```bash
+//! cargo run --release --manifest-path rust/Cargo.toml -- \
+//!     serve --requests 200 --gateway-workers 0 --route-cache-cap 1024
+//! cargo run --release --manifest-path rust/Cargo.toml -- \
+//!     serve --trace my_trace.jsonl --gateway-workers 4
+//! ```
+
+use std::time::Instant;
+
+use fleetopt::compress::corpus;
+use fleetopt::router::memo::RouteCache;
+use fleetopt::router::{effective_workers, Gateway, GatewayConfig};
+use fleetopt::util::rng::Rng;
+use fleetopt::workload::traces;
+
+fn main() {
+    // A templated production-style trace: 8 unique borderline prompts,
+    // each replayed 25 times (round-robin), plus the agent-heavy two-pool
+    // config so most of them cross the C&R band and compress.
+    let w = traces::agent_heavy();
+    let cfg = GatewayConfig::two_tier(w.b_short, w.gamma, true);
+    let mut rng = Rng::new(0x9A7E);
+    let unique: Vec<String> = (0..8)
+        .map(|_| corpus::generate_borderline_for(&w, &mut rng))
+        .collect();
+    let batch: Vec<(&str, u32)> = (0..200)
+        .map(|k| (unique[k % unique.len()].as_str(), 512u32))
+        .collect();
+
+    // Baseline: the serial uncached loop (workers=1, no cache).
+    let mut serial_gw = Gateway::new(cfg.clone());
+    let t0 = Instant::now();
+    let serial_out = serial_gw.route_batch(&batch);
+    let serial_s = t0.elapsed().as_secs_f64();
+
+    // Sharded + memoized: auto worker count, 1024-entry route cache.
+    let workers = effective_workers(0, batch.len());
+    let mut gw = Gateway::new(cfg);
+    let mut cache = RouteCache::new(1024);
+    let mut out = Vec::with_capacity(batch.len());
+    let t0 = Instant::now();
+    gw.route_batch_with_opts(&batch, 0, Some(&mut cache), |_, r| out.push(r));
+    let fast_s = t0.elapsed().as_secs_f64();
+
+    // The determinism contract: everything but wall-clock `gateway_s` is
+    // bit-identical to the serial uncached loop.
+    assert_eq!(serial_out.len(), out.len());
+    for (a, b) in serial_out.iter().zip(&out) {
+        assert_eq!(a.tier, b.tier);
+        assert_eq!(a.text, b.text);
+        assert_eq!(a.prompt_tokens, b.prompt_tokens);
+        assert_eq!(a.estimated_l_total, b.estimated_l_total);
+        assert_eq!(a.compressed, b.compressed);
+    }
+    assert_eq!(serial_gw.metrics(), gw.metrics());
+    assert_eq!(serial_gw.estimator.c_hat_bits(), gw.estimator.c_hat_bits());
+
+    println!("gateway admission pipeline — {} requests, {} unique prompts", batch.len(), unique.len());
+    println!(
+        "  serial uncached : {:7.1} req/s",
+        batch.len() as f64 / serial_s
+    );
+    println!(
+        "  sharded + memo  : {:7.1} req/s ({workers} workers, {:.2}x)",
+        batch.len() as f64 / fast_s,
+        serial_s / fast_s.max(1e-9)
+    );
+    println!(
+        "  route cache     : {} / {} entries | {:.1}% hits ({} hits, {} misses, {} evictions)",
+        cache.len(),
+        cache.capacity(),
+        cache.stats.hit_rate() * 100.0,
+        cache.stats.hits,
+        cache.stats.misses,
+        cache.stats.evictions
+    );
+    if let Some(t) = gw.last_shard {
+        println!(
+            "  last batch      : workers={} features={:.2}ms fold={:.2}ms ladder={:.2}ms emit={:.2}ms",
+            t.workers,
+            t.features_s * 1e3,
+            t.fold_s * 1e3,
+            t.ladder_s * 1e3,
+            t.emit_s * 1e3
+        );
+    }
+    println!("  identity        : outputs, counters, and estimator bits match the serial loop");
+}

@@ -16,6 +16,8 @@
 use std::time::Instant;
 
 use fleetopt::compress::corpus;
+use fleetopt::router::memo::RouteCache;
+use fleetopt::router::{effective_workers, Gateway, GatewayConfig, RoutedRequest};
 use fleetopt::compress::doc::{overlap, Document};
 use fleetopt::compress::extractive::compress_doc_with_mode;
 use fleetopt::compress::scratch::CompressScratch;
@@ -210,6 +212,118 @@ fn main() {
          (selections byte-identical across modes)"
     );
 
+    // --- sharded admission vs the serial gateway loop (PR 8) -------------
+    // Full-pipeline routing (classify + estimate + C&R) over a borderline
+    // batch: serial single-scratch loop vs the sharded pipeline at the
+    // auto worker count. Outputs are asserted identical (every field but
+    // the wall-clock `gateway_s`) before any speedup is reported.
+    let gw_cfg = GatewayConfig::two_tier(w.b_short, w.gamma, true);
+    let batch_owned: Vec<(String, u32)> = docs
+        .iter()
+        .cycle()
+        .take(2 * n_docs)
+        .map(|d| (d.clone(), 512u32))
+        .collect();
+    let batch: Vec<(&str, u32)> = batch_owned.iter().map(|(t, m)| (t.as_str(), *m)).collect();
+    let route_all = |workers: usize, cache: Option<&mut RouteCache>| {
+        let mut gw = Gateway::new(gw_cfg.clone());
+        let mut out: Vec<Option<RoutedRequest>> = vec![None; batch.len()];
+        let t0 = Instant::now();
+        gw.route_batch_with_opts(&batch, workers, cache, |i, r| out[i] = Some(r));
+        let dt = t0.elapsed().as_secs_f64();
+        let out: Vec<RoutedRequest> = out.into_iter().map(Option::unwrap).collect();
+        (out, gw, dt)
+    };
+    let identical = |a: &[RoutedRequest], b: &[RoutedRequest]| {
+        a.len() == b.len()
+            && a.iter().zip(b).all(|(x, y)| {
+                x.tier == y.tier
+                    && x.text == y.text
+                    && x.prompt_tokens == y.prompt_tokens
+                    && x.max_output_tokens == y.max_output_tokens
+                    && x.category == y.category
+                    && x.estimated_l_total == y.estimated_l_total
+                    && x.compressed == y.compressed
+            })
+    };
+
+    let shard_workers = effective_workers(0, batch.len());
+    let (mut serial_best, mut sharded_best) = (f64::MAX, f64::MAX);
+    let mut shard_identical = true;
+    for rep in 0..3 {
+        let (serial_out, serial_gw, serial_dt) = route_all(1, None);
+        let (sharded_out, sharded_gw, sharded_dt) = route_all(0, None);
+        if rep == 0 {
+            shard_identical = identical(&serial_out, &sharded_out)
+                && serial_gw.metrics() == sharded_gw.metrics()
+                && serial_gw.estimator.c_hat_bits() == sharded_gw.estimator.c_hat_bits();
+            assert!(shard_identical, "sharded output diverged from serial");
+        }
+        serial_best = serial_best.min(serial_dt);
+        sharded_best = sharded_best.min(sharded_dt);
+    }
+    let shard_serial_rps = batch.len() as f64 / serial_best;
+    let shard_parallel_rps = batch.len() as f64 / sharded_best;
+    let shard_speedup = shard_parallel_rps / shard_serial_rps.max(1e-9);
+    println!(
+        "sharded admission  : serial {shard_serial_rps:7.1} req/s | {shard_workers} workers \
+         {shard_parallel_rps:7.1} req/s | speedup {shard_speedup:5.2}x (outputs identical)"
+    );
+
+    // --- fingerprint-keyed route memo (PR 8) -----------------------------
+    // Duplicate-heavy trace (production prompts are templated): a small
+    // unique pool replayed many times. Hits must be byte-identical to
+    // cold routing, and a hostile all-unique trace must stay capacity-
+    // bounded with zero hits.
+    let n_unique = 8usize.min(n_docs);
+    let dup_owned: Vec<(String, u32)> = (0..25 * n_unique)
+        .map(|k| (docs[k % n_unique].clone(), 512u32))
+        .collect();
+    let dup_batch: Vec<(&str, u32)> = dup_owned.iter().map(|(t, m)| (t.as_str(), *m)).collect();
+    let route_dup = |cache: Option<&mut RouteCache>| {
+        let mut gw = Gateway::new(gw_cfg.clone());
+        let mut out: Vec<Option<RoutedRequest>> = vec![None; dup_batch.len()];
+        let t0 = Instant::now();
+        gw.route_batch_with_opts(&dup_batch, 1, cache, |i, r| out[i] = Some(r));
+        let dt = t0.elapsed().as_secs_f64();
+        let out: Vec<RoutedRequest> = out.into_iter().map(Option::unwrap).collect();
+        (out, gw, dt)
+    };
+    let (cold_out, cold_gw, cold_dt) = route_dup(None);
+    let mut cache = RouteCache::new(512);
+    let (warm_out, warm_gw, warm_dt) = route_dup(Some(&mut cache));
+    let memo_identical = identical(&cold_out, &warm_out)
+        && cold_gw.metrics() == warm_gw.metrics()
+        && cold_gw.estimator.c_hat_bits() == warm_gw.estimator.c_hat_bits();
+    assert!(memo_identical, "memoized output diverged from cold routing");
+    let memo_hit_rate_dup = cache.stats.hit_rate();
+    let memo_cold_rps = dup_batch.len() as f64 / cold_dt;
+    let memo_warm_rps = dup_batch.len() as f64 / warm_dt;
+    let memo_speedup = memo_warm_rps / memo_cold_rps.max(1e-9);
+    println!(
+        "route memo (dup)   : cold {memo_cold_rps:7.1} req/s | warm {memo_warm_rps:7.1} req/s | \
+         hit rate {:.1}% | speedup {memo_speedup:5.2}x (hits byte-identical)",
+        memo_hit_rate_dup * 100.0
+    );
+
+    let mut unique_cache = RouteCache::new(16);
+    {
+        let mut gw = Gateway::new(gw_cfg.clone());
+        let unique_batch: Vec<(&str, u32)> =
+            docs.iter().map(|d| (d.as_str(), 512u32)).collect();
+        gw.route_batch_with_opts(&unique_batch, 1, Some(&mut unique_cache), |_, _| {});
+    }
+    let route_cache_capacity_ok = unique_cache.len() <= unique_cache.capacity();
+    assert!(route_cache_capacity_ok, "cache grew past capacity");
+    let memo_hit_rate_unique = unique_cache.stats.hit_rate();
+    assert_eq!(unique_cache.stats.hits, 0, "all-unique trace must never hit");
+    println!(
+        "route memo (unique): {} entries / cap {} after {n_docs} unique docs | hit rate {:.1}%",
+        unique_cache.len(),
+        unique_cache.capacity(),
+        memo_hit_rate_unique * 100.0
+    );
+
     let report = obj(vec![
         ("bench", Json::Str("gateway_throughput".into())),
         ("docs", Json::Num(n_docs as f64)),
@@ -233,6 +347,18 @@ fn main() {
         ("simd_speedup_scoring", Json::Num(simd_speedup_scoring)),
         ("simd_speedup_intersect", Json::Num(simd_speedup_intersect)),
         ("simd_speedup_textrank", Json::Num(simd_speedup_textrank)),
+        ("shard_workers", Json::Num(shard_workers as f64)),
+        ("shard_serial_rps", Json::Num(shard_serial_rps)),
+        ("shard_parallel_rps", Json::Num(shard_parallel_rps)),
+        ("shard_speedup", Json::Num(shard_speedup)),
+        ("shard_identical", Json::Bool(shard_identical)),
+        ("memo_cold_rps", Json::Num(memo_cold_rps)),
+        ("memo_warm_rps", Json::Num(memo_warm_rps)),
+        ("memo_speedup", Json::Num(memo_speedup)),
+        ("memo_hit_rate_dup", Json::Num(memo_hit_rate_dup)),
+        ("memo_hit_rate_unique", Json::Num(memo_hit_rate_unique)),
+        ("memo_identical", Json::Bool(memo_identical)),
+        ("route_cache_capacity_ok", Json::Bool(route_cache_capacity_ok)),
     ]);
     let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_gateway.json");
     std::fs::write(path, report.to_string_pretty() + "\n").expect("writing BENCH_gateway.json");

@@ -17,7 +17,8 @@ use anyhow::{bail, Result};
 use crate::coordinator::controller::{replica_targets, ControllerConfig, LiveEpoch};
 use crate::coordinator::replica::{FinishedRequest, LiveRequest, Replica};
 use crate::metrics::PoolMetrics;
-use crate::router::{Gateway, GatewayConfig};
+use crate::router::memo::{CacheStats, RouteCache};
+use crate::router::{Gateway, GatewayConfig, RoutedRequest};
 use crate::runtime::{ModelRuntime, PoolKind};
 use crate::workload::online::OnlineEstimator;
 
@@ -35,6 +36,118 @@ impl ServeConfig {
         ServeConfig {
             gateway,
             replicas: vec![replicas_short, replicas_long],
+        }
+    }
+}
+
+/// Ingress concurrency/caching knobs (§Perf, PR 8), shared by [`serve`]
+/// and [`serve_autoscaled`] through the common admission helper. The
+/// default is the legacy serial, uncached ingress.
+#[derive(Clone, Copy, Debug)]
+pub struct AdmissionOpts {
+    /// Gateway shard workers per due-batch: 1 = serial streaming ingress
+    /// (each request enqueued the moment it routes), 0 = auto (available
+    /// parallelism, capped by `FLEETOPT_THREADS`/`--threads`), N = exactly
+    /// N workers. Routing outputs are bit-identical for every setting.
+    pub gateway_workers: usize,
+    /// Route-memo capacity in entries (0 = memoization off).
+    pub route_cache_cap: usize,
+}
+
+impl Default for AdmissionOpts {
+    fn default() -> Self {
+        AdmissionOpts {
+            gateway_workers: 1,
+            route_cache_cap: 0,
+        }
+    }
+}
+
+/// The shared admission pipeline: gateway (+ optional route memo), the
+/// paced-arrival driver loop, and the enqueue/wake dispatch. One
+/// implementation serves both drivers — `serve` passes a no-op observer,
+/// `serve_autoscaled` feeds its online estimator per routed request.
+struct Admission {
+    gateway: Gateway,
+    cache: Option<RouteCache>,
+    workers: usize,
+    /// Summed per-request gateway seconds (for `mean_gateway_s`).
+    total_s: f64,
+}
+
+impl Admission {
+    fn new(gateway_cfg: &GatewayConfig, opts: AdmissionOpts) -> Self {
+        Admission {
+            gateway: Gateway::new(gateway_cfg.clone()),
+            cache: (opts.route_cache_cap > 0).then(|| RouteCache::new(opts.route_cache_cap)),
+            workers: opts.gateway_workers,
+            total_s: 0.0,
+        }
+    }
+
+    fn cache_stats(&self) -> CacheStats {
+        self.cache.as_ref().map(|c| c.stats).unwrap_or_default()
+    }
+
+    /// Route + feed with paced arrivals. Arrivals that are already due
+    /// when the driver wakes are routed together through the gateway's
+    /// batch API (§Perf) — one warm pass over the compression scratches
+    /// (sharded across workers when `gateway_workers != 1`) instead of
+    /// per-request cold calls, exactly the burst shape where gateway
+    /// latency matters most. Each request is enqueued (and its tier
+    /// woken) as soon as its result is emitted; `observe` sees every
+    /// routed request with its global item index before dispatch.
+    fn drive(
+        &mut self,
+        items: &[ServeItem],
+        time_scale: f64,
+        start: Instant,
+        vocab: u32,
+        pools: &[Arc<PoolState>],
+        in_flight: &AtomicU64,
+        mut observe: impl FnMut(usize, &RoutedRequest),
+    ) {
+        let mut next = 0usize;
+        while next < items.len() {
+            let target = items[next].arrival_offset_s * time_scale;
+            let elapsed = start.elapsed().as_secs_f64();
+            if target > elapsed {
+                std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
+            }
+            // Gather every item that is due by now into one batch.
+            let now = start.elapsed().as_secs_f64();
+            let mut end = next + 1;
+            while end < items.len() && items[end].arrival_offset_s * time_scale <= now {
+                end += 1;
+            }
+            let batch: Vec<(&str, u32)> = items[next..end]
+                .iter()
+                .map(|it| (it.text.as_str(), it.max_output))
+                .collect();
+            let base = next;
+            let Admission {
+                gateway,
+                cache,
+                workers,
+                total_s,
+            } = self;
+            gateway.route_batch_with_opts(&batch, *workers, cache.as_mut(), |idx, routed| {
+                *total_s += routed.gateway_s;
+                observe(base + idx, &routed);
+                let req = LiveRequest {
+                    id: (base + idx) as u64,
+                    tokens: crate::compress::tokenizer::hash_tokens(&routed.text, vocab),
+                    max_output: routed.max_output_tokens,
+                    arrival: Instant::now(),
+                };
+                in_flight.fetch_add(1, Ordering::AcqRel);
+                {
+                    let mut q = pools[routed.tier].queue.lock().unwrap();
+                    q.push_back(req);
+                }
+                pools[routed.tier].wake.notify_all();
+            });
+            next = end;
         }
     }
 }
@@ -69,6 +182,13 @@ pub struct ServeReport {
     pub n_routed: Vec<u64>,
     /// Mean gateway (routing + compression) overhead per request, seconds.
     pub mean_gateway_s: f64,
+    /// Route-memo counters for the run (all-zero when caching was off).
+    pub route_cache: CacheStats,
+    /// Configured gateway shard workers (1 = serial, 0 = auto).
+    pub gateway_workers: usize,
+    /// Per-stage timings of the last sharded ingress batch (None when
+    /// every batch ran serially).
+    pub shard_timing: Option<crate::router::ShardTiming>,
 }
 
 impl ServeReport {
@@ -151,6 +271,17 @@ pub fn serve(
     items: Vec<ServeItem>,
     time_scale: f64,
 ) -> Result<ServeReport> {
+    serve_with(artifacts_dir, cfg, AdmissionOpts::default(), items, time_scale)
+}
+
+/// [`serve`] with explicit ingress concurrency/caching ([`AdmissionOpts`]).
+pub fn serve_with(
+    artifacts_dir: &std::path::Path,
+    cfg: &ServeConfig,
+    opts: AdmissionOpts,
+    items: Vec<ServeItem>,
+    time_scale: f64,
+) -> Result<ServeReport> {
     let k = cfg.gateway.n_tiers();
     if cfg.replicas.len() != k {
         bail!(
@@ -207,55 +338,12 @@ pub fn serve(
         }
     }
 
-    // Driver: route + feed with paced arrivals. Arrivals that are already
-    // due when the driver wakes are routed together through the gateway's
-    // batch API (§Perf): one warm pass over the shared compression scratch
-    // instead of per-request cold calls — exactly the burst shape where
-    // gateway latency matters most.
-    let mut gateway = Gateway::new(cfg.gateway.clone());
+    // Driver: the shared admission pipeline (no per-request observer).
+    let mut admission = Admission::new(&cfg.gateway, opts);
     let vocab = manifest.model.vocab as u32;
     let start = Instant::now();
-    let mut gateway_total_s = 0.0;
     let n_items = items.len() as u64;
-    let mut next = 0usize;
-    while next < items.len() {
-        let target = items[next].arrival_offset_s * time_scale;
-        let elapsed = start.elapsed().as_secs_f64();
-        if target > elapsed {
-            std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
-        }
-        // Gather every item that is due by now into one batch.
-        let now = start.elapsed().as_secs_f64();
-        let mut end = next + 1;
-        while end < items.len() && items[end].arrival_offset_s * time_scale <= now {
-            end += 1;
-        }
-        let batch: Vec<(&str, u32)> = items[next..end]
-            .iter()
-            .map(|it| (it.text.as_str(), it.max_output))
-            .collect();
-        // Streaming sink: each request is enqueued (and its tier woken)
-        // the moment it is routed, while later batch members are still in
-        // the gateway — no head-of-line blocking behind a slow
-        // compression, and per-item arrival stamps keep the latency
-        // metrics comparable to per-item routing.
-        gateway.route_batch_with(&batch, |idx, routed| {
-            gateway_total_s += routed.gateway_s;
-            let req = LiveRequest {
-                id: (next + idx) as u64,
-                tokens: crate::compress::tokenizer::hash_tokens(&routed.text, vocab),
-                max_output: routed.max_output_tokens,
-                arrival: Instant::now(),
-            };
-            in_flight.fetch_add(1, Ordering::AcqRel);
-            {
-                let mut q = pools[routed.tier].queue.lock().unwrap();
-                q.push_back(req);
-            }
-            pools[routed.tier].wake.notify_all();
-        });
-        next = end;
-    }
+    admission.drive(&items, time_scale, start, vocab, &pools, &in_flight, |_, _| {});
     done_feeding.store(true, Ordering::Release);
     for p in &pools {
         p.wake.notify_all();
@@ -281,9 +369,12 @@ pub fn serve(
         tiers,
         duration_s,
         throughput_rps: completed as f64 / duration_s.max(1e-9),
-        n_compressed: gateway.n_compressed,
-        n_routed: gateway.n_routed.clone(),
-        mean_gateway_s: gateway_total_s / n_items.max(1) as f64,
+        n_compressed: admission.gateway.n_compressed,
+        n_routed: admission.gateway.n_routed.clone(),
+        mean_gateway_s: admission.total_s / n_items.max(1) as f64,
+        route_cache: admission.cache_stats(),
+        gateway_workers: opts.gateway_workers,
+        shard_timing: admission.gateway.last_shard,
     })
 }
 
@@ -369,6 +460,25 @@ pub fn serve_autoscaled(
     artifacts_dir: &std::path::Path,
     cfg: &ServeConfig,
     ctl: &ControllerConfig,
+    items: Vec<ServeItem>,
+    time_scale: f64,
+) -> Result<AutoscaledServeReport> {
+    serve_autoscaled_with(
+        artifacts_dir,
+        cfg,
+        ctl,
+        AdmissionOpts::default(),
+        items,
+        time_scale,
+    )
+}
+
+/// [`serve_autoscaled`] with explicit ingress concurrency/caching.
+pub fn serve_autoscaled_with(
+    artifacts_dir: &std::path::Path,
+    cfg: &ServeConfig,
+    ctl: &ControllerConfig,
+    opts: AdmissionOpts,
     items: Vec<ServeItem>,
     time_scale: f64,
 ) -> Result<AutoscaledServeReport> {
@@ -492,53 +602,27 @@ pub fn serve_autoscaled(
         })
     };
 
-    // Driver: identical batch-routing ingress to `serve`, plus estimator
-    // feeding (the controller's eyes).
-    let mut gateway = Gateway::new(cfg.gateway.clone());
+    // Driver: the shared admission pipeline; the observer feeds the
+    // controller's estimator the *pre-compression* length estimate — the
+    // planner applies its own band-compression accounting, so feeding it
+    // post-compression lengths would double-count C&R.
+    let mut admission = Admission::new(&cfg.gateway, opts);
     let vocab = manifest.model.vocab as u32;
-    let mut gateway_total_s = 0.0;
     let n_items = items.len() as u64;
-    let mut next = 0usize;
-    while next < items.len() {
-        let target = items[next].arrival_offset_s * time_scale;
-        let elapsed = start.elapsed().as_secs_f64();
-        if target > elapsed {
-            std::thread::sleep(std::time::Duration::from_secs_f64(target - elapsed));
-        }
-        let now = start.elapsed().as_secs_f64();
-        let mut end = next + 1;
-        while end < items.len() && items[end].arrival_offset_s * time_scale <= now {
-            end += 1;
-        }
-        let batch: Vec<(&str, u32)> = items[next..end]
-            .iter()
-            .map(|it| (it.text.as_str(), it.max_output))
-            .collect();
-        let offsets: Vec<f64> = items[next..end].iter().map(|it| it.arrival_offset_s).collect();
-        gateway.route_batch_with(&batch, |idx, routed| {
-            gateway_total_s += routed.gateway_s;
-            // Observe the *pre-compression* length estimate: the planner
-            // applies its own band-compression accounting, so feeding it
-            // post-compression lengths would double-count C&R.
+    admission.drive(
+        &items,
+        time_scale,
+        start,
+        vocab,
+        &ctx.pools,
+        &ctx.in_flight,
+        |i, routed| {
             estimator
                 .lock()
                 .unwrap()
-                .observe(offsets[idx], routed.estimated_l_total);
-            let req = LiveRequest {
-                id: (next + idx) as u64,
-                tokens: crate::compress::tokenizer::hash_tokens(&routed.text, vocab),
-                max_output: routed.max_output_tokens,
-                arrival: Instant::now(),
-            };
-            ctx.in_flight.fetch_add(1, Ordering::AcqRel);
-            {
-                let mut q = ctx.pools[routed.tier].queue.lock().unwrap();
-                q.push_back(req);
-            }
-            ctx.pools[routed.tier].wake.notify_all();
-        });
-        next = end;
-    }
+                .observe(items[i].arrival_offset_s, routed.estimated_l_total);
+        },
+    );
     ctx.done_feeding.store(true, Ordering::Release);
     for p in ctx.pools.iter() {
         p.wake.notify_all();
@@ -597,9 +681,12 @@ pub fn serve_autoscaled(
             tiers,
             duration_s,
             throughput_rps: completed as f64 / duration_s.max(1e-9),
-            n_compressed: gateway.n_compressed,
-            n_routed: gateway.n_routed.clone(),
-            mean_gateway_s: gateway_total_s / n_items.max(1) as f64,
+            n_compressed: admission.gateway.n_compressed,
+            n_routed: admission.gateway.n_routed.clone(),
+            mean_gateway_s: admission.total_s / n_items.max(1) as f64,
+            route_cache: admission.cache_stats(),
+            gateway_workers: opts.gateway_workers,
+            shard_timing: admission.gateway.last_shard,
         },
         epochs: std::mem::take(&mut *epochs.lock().unwrap()),
     })

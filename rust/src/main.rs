@@ -26,7 +26,7 @@ use fleetopt::compress::corpus::{self, CorpusConfig};
 use fleetopt::config::SkuCatalog;
 use fleetopt::compress::extractive::compress;
 use fleetopt::compress::fidelity;
-use fleetopt::coordinator::{serve, ServeConfig, ServeItem};
+use fleetopt::coordinator::{serve_with, AdmissionOpts, ServeConfig, ServeItem};
 use fleetopt::experiments;
 use fleetopt::fleetsim::{
     run_stress, simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig, QueueImpl,
@@ -63,6 +63,7 @@ USAGE:
                      [--tiers W1,W2,..] [--out metrics.json] [--max-violation-frac F]
   fleetopt compress  [--tokens N] [--budget N] [--seed N]
   fleetopt serve     [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
+                     [--trace F.jsonl] [--gateway-workers N] [--route-cache-cap N]
 
   --tiers takes either K-1 boundaries plus the long window
   (e.g. 4096,16384,65536) or a bare fleet size K (2..=6) to sweep
@@ -77,6 +78,13 @@ USAGE:
   --threads N caps every internal thread fan-out (sweeps, DES
   replications, table grids) at N workers; FLEETOPT_THREADS=N in the
   environment does the same. FLEETOPT_SIMD=0 forces the scalar kernels.
+
+  serve --trace F.jsonl replays a JSONL text trace (one
+  {{\"text\", \"max_output\", \"arrival_s\"}} object per line, streamed
+  from disk) instead of the synthetic workload. --gateway-workers N
+  shards batch admission across N workers (0 = auto, 1 = serial;
+  bit-identical output either way); --route-cache-cap N bounds the C&R
+  route memo (0 = off).
 "
     );
     std::process::exit(2);
@@ -126,6 +134,16 @@ fn flag_count(flags: &HashMap<String, String>, key: &str, default: u64) -> Resul
     let v = flag_pos_f64(flags, key, default as f64)?;
     if v.fract() != 0.0 {
         bail!("--{key} must be a whole number, got {v}");
+    }
+    Ok(v as u64)
+}
+
+/// A non-negative whole-number flag, where 0 selects a feature-specific
+/// default (auto worker count, cache off).
+fn flag_count0(flags: &HashMap<String, String>, key: &str, default: u64) -> Result<u64> {
+    let v = flag_f64(flags, key, default as f64)?;
+    if !v.is_finite() || v < 0.0 || v.fract() != 0.0 {
+        bail!("--{key} must be a non-negative whole number, got {v}");
     }
     Ok(v as u64)
 }
@@ -739,34 +757,58 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
     };
     let k = gateway.n_tiers();
 
-    let mut rng = Rng::new(11);
-    let mut t = 0.0;
-    let items: Vec<ServeItem> = (0..n)
-        .map(|i| {
-            t += rng.exp(rate);
-            let target = match i % 10 {
-                0..=6 => rng.range(40, 150) as u32,
-                7 | 8 => rng.range(240, 320) as u32,
-                _ => rng.range(400, 700) as u32,
-            };
-            ServeItem {
-                text: corpus::generate_document(
-                    &CorpusConfig {
-                        target_tokens: target,
-                        ..Default::default()
-                    },
-                    &mut rng,
-                ),
-                max_output: 16,
-                arrival_offset_s: t,
-            }
-        })
-        .collect();
+    // Ingress concurrency/caching (§Perf, PR 8): default shards batch
+    // admission automatically and memoizes 1024 routing decisions; both
+    // settings are bit-identical to `--gateway-workers 1` without a cache.
+    let opts = AdmissionOpts {
+        gateway_workers: flag_count0(flags, "gateway-workers", 0)? as usize,
+        route_cache_cap: flag_count0(flags, "route-cache-cap", 1024)? as usize,
+    };
+
+    let items: Vec<ServeItem> = match flags.get("trace") {
+        // Replay a JSONL text trace, streamed from disk line by line.
+        Some(path) => traces::load_text_trace(path)?
+            .into_iter()
+            .map(|t| ServeItem {
+                text: t.text,
+                max_output: t.max_output,
+                arrival_offset_s: t.arrival_s,
+            })
+            .collect(),
+        None => {
+            let mut rng = Rng::new(11);
+            let mut t = 0.0;
+            (0..n)
+                .map(|i| {
+                    t += rng.exp(rate);
+                    let target = match i % 10 {
+                        0..=6 => rng.range(40, 150) as u32,
+                        7 | 8 => rng.range(240, 320) as u32,
+                        _ => rng.range(400, 700) as u32,
+                    };
+                    ServeItem {
+                        text: corpus::generate_document(
+                            &CorpusConfig {
+                                target_tokens: target,
+                                ..Default::default()
+                            },
+                            &mut rng,
+                        ),
+                        max_output: 16,
+                        arrival_offset_s: t,
+                    }
+                })
+                .collect()
+        }
+    };
+    if items.is_empty() {
+        bail!("no requests to serve (empty trace?)");
+    }
     let cfg = ServeConfig {
         gateway,
         replicas: vec![1; k],
     };
-    let mut report = serve(&dir, &cfg, items, 0.05)?;
+    let mut report = serve_with(&dir, &cfg, opts, items, 0.05)?;
     for tier in &mut report.tiers {
         println!("{}", tier.summary());
     }
@@ -777,6 +819,30 @@ fn cmd_serve(flags: &HashMap<String, String>) -> Result<()> {
         report.throughput_rps,
         report.mean_gateway_s * 1e3
     );
+    let cs = report.route_cache;
+    println!(
+        "admission: workers={} route-cache cap={} hits={} misses={} rate={:.1}% evictions={}",
+        if opts.gateway_workers == 0 {
+            "auto".to_string()
+        } else {
+            opts.gateway_workers.to_string()
+        },
+        opts.route_cache_cap,
+        cs.hits,
+        cs.misses,
+        cs.hit_rate() * 100.0,
+        cs.evictions,
+    );
+    if let Some(t) = report.shard_timing {
+        println!(
+            "last sharded batch: workers={} features={:.2}ms fold={:.2}ms ladder={:.2}ms emit={:.2}ms",
+            t.workers,
+            t.features_s * 1e3,
+            t.fold_s * 1e3,
+            t.ladder_s * 1e3,
+            t.emit_s * 1e3
+        );
+    }
     Ok(())
 }
 

@@ -70,6 +70,17 @@ impl TokenEstimator {
     pub fn update_count(&self, c: Category) -> u64 {
         self.updates[idx(c)]
     }
+
+    /// Raw bit pattern of the per-category EMA state — for bit-identity
+    /// assertions (cached/sharded routing must not drift the estimator).
+    pub fn c_hat_bits(&self) -> [u64; 4] {
+        [
+            self.c_hat[0].to_bits(),
+            self.c_hat[1].to_bits(),
+            self.c_hat[2].to_bits(),
+            self.c_hat[3].to_bits(),
+        ]
+    }
 }
 
 #[cfg(test)]

@@ -6,13 +6,23 @@
 //! and routed *into tier i* (the "virtual pool", per boundary); everything
 //! else falls through to the last (full-context) tier. With a single
 //! boundary this is the paper's two-pool gateway, decision for decision.
+//!
+//! §Perf (PR 8): routing decomposes into a *pure ladder*
+//! ([`route_ladder`] — a function of config, text, output budget, and the
+//! estimate's decision signature only) plus a cheap serial fold (EMA
+//! estimate/update, counters). That split is what makes the sharded
+//! pipeline (`router::shard`) and the route memo (`router::memo`)
+//! bit-identical to this serial path by construction.
 
 use crate::compress::extractive::compress_with;
-use crate::compress::gate::{clamp_gamma, compression_budget, gate, GateDecision};
+use crate::compress::gate::{band_hi, clamp_gamma, compression_budget, gate, GateDecision};
 use crate::compress::scratch::CompressScratch;
 use crate::compress::tokenizer::count_tokens;
 use crate::router::classify::classify;
 use crate::router::estimator::TokenEstimator;
+use crate::router::memo::{CacheKey, Lookup, RouteCache};
+use crate::router::shard::{self, ScratchPool, ShardTiming};
+use crate::util::hash::{fnv1a_words, FNV_OFFSET};
 use crate::workload::request::Category;
 
 /// One routing boundary: requests at or below `boundary` fit this tier;
@@ -74,6 +84,59 @@ impl GatewayConfig {
     pub fn b_short(&self) -> u32 {
         self.tiers[0].boundary
     }
+
+    /// FNV-1a fingerprint of every config input a routing decision reads:
+    /// per-tier `(boundary, gamma bits)` and the C&R switch. The route
+    /// memo binds its entries to this value, so a replanned or
+    /// hot-reloaded boundary/gamma mints a fresh fingerprint and
+    /// invalidates every cached decision ([`RouteCache::ensure_config`]).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = fnv1a_words(
+            FNV_OFFSET,
+            &[self.tiers.len() as u64, self.enable_cr as u64],
+        );
+        for tr in &self.tiers {
+            h = fnv1a_words(h, &[tr.boundary as u64, tr.gamma.to_bits()]);
+        }
+        h
+    }
+
+    /// The effective (re-clamped) gamma the ladder uses at `tier`.
+    fn effective_gamma(&self, tier: usize) -> f64 {
+        let tr = self.tiers[tier];
+        let gamma = if self.enable_cr { tr.gamma } else { 1.0 };
+        // Re-clamp at use: `tiers` is public, so a hand-built config may
+        // carry unclamped gammas (no-op otherwise).
+        clamp_gamma(
+            tr.boundary,
+            self.tiers.get(tier + 1).map(|t| t.boundary),
+            gamma,
+        )
+    }
+
+    /// The decision signature of an estimated `L_total` under this
+    /// config: at every boundary, which of the three gate regions the
+    /// estimate falls in (at-or-below / inside the C&R band / above),
+    /// folded base-3 in tier order. Routing outcomes are a pure function
+    /// of `(text, max_output_tokens, signature)` — the signature captures
+    /// every comparison [`gate`] can make against the estimate — so the
+    /// route memo keys on it instead of the raw estimate: shared-EMA
+    /// drift that does not flip any gate comparison still hits.
+    pub fn decision_signature(&self, est_total: u32) -> u64 {
+        let mut sig = 0u64;
+        for tier in 0..self.tiers.len() {
+            let boundary = self.tiers[tier].boundary;
+            let region = if est_total <= boundary {
+                0u64
+            } else if est_total <= band_hi(boundary, self.effective_gamma(tier)) {
+                1
+            } else {
+                2
+            };
+            sig = sig.wrapping_mul(3).wrapping_add(region);
+        }
+        sig
+    }
 }
 
 /// A routed request, ready for an engine pool.
@@ -94,17 +157,163 @@ pub struct RoutedRequest {
     pub gateway_s: f64,
 }
 
+/// The memoizable part of a routing decision: everything [`route_ladder`]
+/// produces. Pure in `(config, text, max_output_tokens, decision
+/// signature)`, so it is what [`RouteCache`] stores and what the sharded
+/// pipeline computes in parallel.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RouteOutcome {
+    pub tier: usize,
+    /// Final prompt text (compressed when C&R fired).
+    pub text: String,
+    pub prompt_tokens: u32,
+    /// Uncompressed token count of the *original* text — replayed into
+    /// the EMA estimator on cache hits so estimator state stays
+    /// bit-identical to cold routing.
+    pub actual_prompt: u32,
+    pub category: Category,
+    pub compressed: bool,
+    /// Band tiers where compression was attempted and failed (or had no
+    /// feasible budget) before this outcome was reached.
+    pub n_compress_failed: u32,
+}
+
+/// The tier ladder (the decision core of [`Gateway::route`]): walk the
+/// boundaries in order, compressing into the first band that accepts.
+/// Pure in its arguments — no estimator, no counters — which is the
+/// property the memo and the shard pipeline rely on.
+pub(crate) fn route_ladder(
+    cfg: &GatewayConfig,
+    scratch: &mut CompressScratch,
+    text: &str,
+    max_output_tokens: u32,
+    category: Category,
+    actual_prompt: u32,
+    est_total: u32,
+) -> RouteOutcome {
+    let last_tier = cfg.tiers.len();
+    let mut n_compress_failed = 0u32;
+    for tier in 0..last_tier {
+        let boundary = cfg.tiers[tier].boundary;
+        match gate(est_total, boundary, cfg.effective_gamma(tier), category) {
+            GateDecision::RouteShort => {
+                return RouteOutcome {
+                    tier,
+                    text: text.to_string(),
+                    prompt_tokens: actual_prompt,
+                    actual_prompt,
+                    category,
+                    compressed: false,
+                    n_compress_failed,
+                };
+            }
+            GateDecision::CompressAndRoute => {
+                match compression_budget(boundary, max_output_tokens) {
+                    Some(budget) => {
+                        let c = compress_with(scratch, text, budget);
+                        if c.ok {
+                            return RouteOutcome {
+                                tier,
+                                prompt_tokens: count_tokens(&c.text),
+                                text: c.text,
+                                actual_prompt,
+                                category,
+                                compressed: true,
+                                n_compress_failed,
+                            };
+                        }
+                        // Compression failed: fall through to the next
+                        // tier up (at K = 2, the long pool).
+                        n_compress_failed += 1;
+                    }
+                    None => {
+                        n_compress_failed += 1;
+                    }
+                }
+            }
+            GateDecision::BandButUnsafe | GateDecision::RouteLong => {}
+        }
+    }
+    RouteOutcome {
+        tier: last_tier,
+        text: text.to_string(),
+        prompt_tokens: actual_prompt,
+        actual_prompt,
+        category,
+        compressed: false,
+        n_compress_failed,
+    }
+}
+
+/// Assemble the engine-facing request from a ladder outcome.
+pub(crate) fn finish_request(
+    out: RouteOutcome,
+    max_output_tokens: u32,
+    est_total: u32,
+    gateway_s: f64,
+) -> RoutedRequest {
+    RoutedRequest {
+        tier: out.tier,
+        text: out.text,
+        prompt_tokens: out.prompt_tokens,
+        max_output_tokens,
+        category: out.category,
+        estimated_l_total: est_total,
+        compressed: out.compressed,
+        gateway_s,
+    }
+}
+
+/// Gateway routing counters, decoupled from the [`Gateway`] so they can
+/// be compared, merged (order-independent sums), and reported uniformly
+/// by the serial path, the sharded pipeline, and the benches.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct GatewayMetrics {
+    /// Requests routed to each tier (len K).
+    pub n_routed: Vec<u64>,
+    pub n_compressed: u64,
+    pub n_compress_failed: u64,
+}
+
+impl GatewayMetrics {
+    /// Elementwise counter sum (tier vectors are length-matched by
+    /// zero-extension). Summation commutes, so any merge order over any
+    /// sharding of the same requests yields identical totals.
+    pub fn merge(&mut self, other: &GatewayMetrics) {
+        if other.n_routed.len() > self.n_routed.len() {
+            self.n_routed.resize(other.n_routed.len(), 0);
+        }
+        for (a, b) in self.n_routed.iter_mut().zip(&other.n_routed) {
+            *a += b;
+        }
+        self.n_compressed += other.n_compressed;
+        self.n_compress_failed += other.n_compress_failed;
+    }
+
+    /// Total requests routed.
+    pub fn n_total(&self) -> u64 {
+        self.n_routed.iter().sum()
+    }
+}
+
 /// The stateful gateway (one per deployment; EMA state is shared across
 /// requests exactly as in §2.1).
 ///
 /// §Perf: the gateway owns a [`CompressScratch`] so every C&R compression
 /// reuses the same parse/score/select buffers — steady-state routing
-/// performs no heap allocation beyond the returned `RoutedRequest`.
+/// performs no heap allocation beyond the returned `RoutedRequest`. The
+/// sharded batch path keeps one warm scratch per worker in `shard_pool`.
 #[derive(Debug)]
 pub struct Gateway {
     pub cfg: GatewayConfig,
     pub estimator: TokenEstimator,
     scratch: CompressScratch,
+    /// Per-worker scratch arenas for the sharded batch path, kept warm
+    /// across batches.
+    pub(crate) shard_pool: ScratchPool,
+    /// Stage timings of the most recent sharded batch (None until the
+    /// sharded path has run).
+    pub last_shard: Option<ShardTiming>,
     /// Requests routed to each tier (len K).
     pub n_routed: Vec<u64>,
     pub n_compressed: u64,
@@ -118,6 +327,8 @@ impl Gateway {
             cfg,
             estimator: TokenEstimator::default(),
             scratch: CompressScratch::new(),
+            shard_pool: ScratchPool::default(),
+            last_shard: None,
             n_routed: vec![0; k],
             n_compressed: 0,
             n_compress_failed: 0,
@@ -134,6 +345,24 @@ impl Gateway {
         *self.n_routed.last().expect("at least two tiers")
     }
 
+    /// Snapshot of the routing counters.
+    pub fn metrics(&self) -> GatewayMetrics {
+        GatewayMetrics {
+            n_routed: self.n_routed.clone(),
+            n_compressed: self.n_compressed,
+            n_compress_failed: self.n_compress_failed,
+        }
+    }
+
+    /// Apply a ladder outcome to the counters (one request routed).
+    pub(crate) fn absorb_outcome(&mut self, out: &RouteOutcome) {
+        self.n_routed[out.tier] += 1;
+        if out.compressed {
+            self.n_compressed += 1;
+        }
+        self.n_compress_failed += u64::from(out.n_compress_failed);
+    }
+
     /// Route one request. The returned `text` is what the engine prefills.
     pub fn route(&mut self, text: &str, max_output_tokens: u32) -> RoutedRequest {
         let t0 = std::time::Instant::now();
@@ -148,78 +377,69 @@ impl Gateway {
         let actual_prompt = count_tokens(text);
         self.estimator.update(text.len(), actual_prompt, category);
 
-        let last_tier = self.cfg.tiers.len();
-        let mut routed = None;
-        for tier in 0..last_tier {
-            let tr = self.cfg.tiers[tier]; // Copy: no borrow held across the mutating compress call
-            let gamma = if self.cfg.enable_cr { tr.gamma } else { 1.0 };
-            // Re-clamp at use: `cfg.tiers` is public, so a hand-built
-            // config may carry unclamped gammas (no-op otherwise, and
-            // identical to the pre-refactor path at K = 2).
-            let gamma = clamp_gamma(
-                tr.boundary,
-                self.cfg.tiers.get(tier + 1).map(|t| t.boundary),
-                gamma,
-            );
-            match gate(est_total, tr.boundary, gamma, category) {
-                GateDecision::RouteShort => {
-                    routed = Some(RoutedRequest {
-                        tier,
-                        text: text.to_string(),
-                        prompt_tokens: actual_prompt,
-                        max_output_tokens,
-                        category,
-                        estimated_l_total: est_total,
-                        compressed: false,
-                        gateway_s: 0.0,
-                    });
-                    break;
-                }
-                GateDecision::CompressAndRoute => {
-                    match compression_budget(tr.boundary, max_output_tokens) {
-                        Some(budget) => {
-                            let c = compress_with(&mut self.scratch, text, budget);
-                            if c.ok {
-                                self.n_compressed += 1;
-                                routed = Some(RoutedRequest {
-                                    tier,
-                                    prompt_tokens: count_tokens(&c.text),
-                                    text: c.text,
-                                    max_output_tokens,
-                                    category,
-                                    estimated_l_total: est_total,
-                                    compressed: true,
-                                    gateway_s: 0.0,
-                                });
-                                break;
-                            }
-                            // Compression failed: fall through to the next
-                            // tier up (at K = 2, the long pool).
-                            self.n_compress_failed += 1;
-                        }
-                        None => {
-                            self.n_compress_failed += 1;
-                        }
-                    }
-                }
-                GateDecision::BandButUnsafe | GateDecision::RouteLong => {}
-            }
-        }
-        let routed = routed.unwrap_or_else(|| RoutedRequest {
-            tier: last_tier,
-            text: text.to_string(),
-            prompt_tokens: actual_prompt,
+        let out = route_ladder(
+            &self.cfg,
+            &mut self.scratch,
+            text,
             max_output_tokens,
             category,
-            estimated_l_total: est_total,
-            compressed: false,
-            gateway_s: 0.0,
-        });
-        self.n_routed[routed.tier] += 1;
-        RoutedRequest {
-            gateway_s: t0.elapsed().as_secs_f64(),
-            ..routed
+            actual_prompt,
+            est_total,
+        );
+        self.absorb_outcome(&out);
+        finish_request(out, max_output_tokens, est_total, t0.elapsed().as_secs_f64())
+    }
+
+    /// Route one request through a [`RouteCache`]. Hits replay the stored
+    /// outcome byte-for-byte — including the EMA update from the cached
+    /// uncompressed token count — so estimator state, counters, and every
+    /// `RoutedRequest` field except `gateway_s` are bit-identical to
+    /// [`Gateway::route`] on the same request sequence.
+    pub fn route_cached(
+        &mut self,
+        cache: &mut RouteCache,
+        text: &str,
+        max_output_tokens: u32,
+    ) -> RoutedRequest {
+        let t0 = std::time::Instant::now();
+        cache.ensure_config(self.cfg.fingerprint());
+        let category = classify(text);
+        let est_prompt = self
+            .estimator
+            .estimate_prompt_tokens(text.len(), category);
+        let est_total = est_prompt + max_output_tokens;
+        let key = CacheKey::new(
+            text,
+            max_output_tokens,
+            self.cfg.decision_signature(est_total),
+        );
+        if let Lookup::Hit(out) = cache.lookup(key, text) {
+            self.estimator.update(text.len(), out.actual_prompt, category);
+            self.absorb_outcome(&out);
+            return finish_request(
+                out,
+                max_output_tokens,
+                est_total,
+                t0.elapsed().as_secs_f64(),
+            );
         }
+        // Miss (or a stale pending reservation): compute and (re)fill.
+        let actual_prompt = count_tokens(text);
+        self.estimator.update(text.len(), actual_prompt, category);
+        let out = route_ladder(
+            &self.cfg,
+            &mut self.scratch,
+            text,
+            max_output_tokens,
+            category,
+            actual_prompt,
+            est_total,
+        );
+        if let Some(slot) = cache.reserve(key, text, usize::MAX) {
+            cache.fill(slot, out.clone());
+        }
+        self.absorb_outcome(&out);
+        finish_request(out, max_output_tokens, est_total, t0.elapsed().as_secs_f64())
     }
 
     /// Route a batch of `(text, max_output_tokens)` requests, streaming
@@ -232,11 +452,39 @@ impl Gateway {
     pub fn route_batch_with(
         &mut self,
         batch: &[(&str, u32)],
+        sink: impl FnMut(usize, RoutedRequest),
+    ) {
+        self.route_batch_with_opts(batch, 1, None, sink);
+    }
+
+    /// [`Gateway::route_batch_with`] with explicit concurrency and
+    /// memoization. `workers` = 0 picks an automatic shard count (like
+    /// [`crate::util::par::workers_for`]); any effective count ≤ 1 runs
+    /// the serial loop. Outputs (every `RoutedRequest` field except the
+    /// wall-clock `gateway_s`), counters, estimator state, and cache
+    /// stats are bit-identical for every worker count and cache setting
+    /// (`tests/gateway_concurrency.rs`); `sink` is always called in
+    /// request order on the sharded path, since results are reassembled
+    /// before emission.
+    pub fn route_batch_with_opts(
+        &mut self,
+        batch: &[(&str, u32)],
+        workers: usize,
+        mut cache: Option<&mut RouteCache>,
         mut sink: impl FnMut(usize, RoutedRequest),
     ) {
-        for (k, &(text, max_output)) in batch.iter().enumerate() {
-            sink(k, self.route(text, max_output));
+        let w = shard::effective_workers(workers, batch.len());
+        if w <= 1 {
+            for (k, &(text, max_output)) in batch.iter().enumerate() {
+                let routed = match cache.as_deref_mut() {
+                    Some(c) => self.route_cached(c, text, max_output),
+                    None => self.route(text, max_output),
+                };
+                sink(k, routed);
+            }
+            return;
         }
+        shard::route_batch_sharded(self, batch, w, cache, sink);
     }
 
     /// Collecting wrapper over [`Gateway::route_batch_with`].
@@ -416,5 +664,61 @@ mod tests {
         let r = g.route(&huge, 64);
         assert_eq!(r.tier, 2);
         assert_eq!(g.n_routed, vec![0, 2, 1]);
+    }
+
+    #[test]
+    fn fingerprint_moves_with_every_config_input() {
+        let base = GatewayConfig::tiered(&[512, 2048], 1.5, true);
+        let fp = base.fingerprint();
+        assert_eq!(fp, base.clone().fingerprint());
+        let mut b = base.clone();
+        b.tiers[0].boundary = 513;
+        assert_ne!(fp, b.fingerprint());
+        let mut g = base.clone();
+        g.tiers[1].gamma = 1.25;
+        assert_ne!(fp, g.fingerprint());
+        let mut cr = base.clone();
+        cr.enable_cr = false;
+        assert_ne!(fp, cr.fingerprint());
+    }
+
+    #[test]
+    fn decision_signature_separates_gate_regions() {
+        let cfg = GatewayConfig::two_tier(1000, 1.5, true);
+        // Regions: <=1000, (1000, 1500], >1500.
+        assert_eq!(cfg.decision_signature(900), cfg.decision_signature(1000));
+        assert_eq!(cfg.decision_signature(1001), cfg.decision_signature(1500));
+        assert_eq!(cfg.decision_signature(1501), cfg.decision_signature(9000));
+        assert_ne!(cfg.decision_signature(1000), cfg.decision_signature(1001));
+        assert_ne!(cfg.decision_signature(1500), cfg.decision_signature(1501));
+    }
+
+    #[test]
+    fn cached_routing_is_identical_to_cold() {
+        let mut rng = Rng::new(11);
+        let texts: Vec<String> = (0..4)
+            .map(|i| doc(if i % 2 == 0 { 400 } else { 2600 }, &mut rng))
+            .collect();
+        // Replay the 4 docs 3 times: 8 misses counted once, then hits.
+        let seq: Vec<&String> = (0..12).map(|i| &texts[i % 4]).collect();
+        let mut cold = gw(2048, true);
+        let mut warm = gw(2048, true);
+        let mut cache = RouteCache::new(64);
+        for text in seq {
+            let a = cold.route(text, 64);
+            let b = warm.route_cached(&mut cache, text, 64);
+            assert_eq!(a.tier, b.tier);
+            assert_eq!(a.text, b.text);
+            assert_eq!(a.prompt_tokens, b.prompt_tokens);
+            assert_eq!(a.compressed, b.compressed);
+            assert_eq!(a.estimated_l_total, b.estimated_l_total);
+        }
+        assert_eq!(cold.metrics(), warm.metrics());
+        assert_eq!(
+            cold.estimator.c_hat_bits(),
+            warm.estimator.c_hat_bits(),
+            "EMA state must not drift on cache hits"
+        );
+        assert!(cache.stats.hits >= 8, "replays should hit: {:?}", cache.stats);
     }
 }

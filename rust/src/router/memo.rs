@@ -1,0 +1,456 @@
+//! Fingerprint-keyed C&R route memoization (§Perf, PR 8).
+//!
+//! Production traces are heavily templated: the same prompt shows up
+//! thousands of times, and every occurrence pays the full
+//! classify → tokenize → score → select gateway cost. [`RouteCache`] is a
+//! bounded LRU over *routing outcomes*: a hit replays the stored
+//! tier/compressed-text/token-count decision byte-for-byte and skips the
+//! entire compression pipeline.
+//!
+//! Correctness is by construction, not by hoping keys never collide:
+//!
+//! - **Key** = `(fnv1a(text), max_output_tokens, decision signature)`.
+//!   The decision signature ([`GatewayConfig::decision_signature`]) is
+//!   the vector of gate regions the request's estimated `L_total` falls
+//!   into at every boundary — the *only* way the shared EMA estimator
+//!   state can influence a routing outcome. Two requests with the same
+//!   text, output budget, and signature take identical gate branches at
+//!   every tier, so their outcomes are byte-identical; EMA drift that
+//!   does not flip any gate comparison keeps hitting.
+//! - **Collisions**: each slot stores the full original text and a probe
+//!   verifies it byte-for-byte; a 64-bit hash match with different bytes
+//!   counts as [`CacheStats::collisions`] and misses.
+//! - **Config fingerprint**: the cache remembers the
+//!   [`GatewayConfig::fingerprint`] it was filled under
+//!   ([`RouteCache::ensure_config`]); a replan or hot-reload that moves
+//!   any boundary/gamma clears every entry (counted as an invalidation).
+//! - **Capacity**: `len() <= capacity()` always — an all-unique
+//!   adversarial trace evicts in LRU order instead of growing.
+//!
+//! Slots are generation-counted so the sharded pipeline can *reserve* a
+//! slot during its serial decision fold and *fill* it after the parallel
+//! compression stage: if the reservation was evicted in between (capacity
+//! smaller than a batch's unique set), the stale fill is dropped instead
+//! of resurrecting the entry. All probe/reserve operations happen in
+//! request order on one thread, so hit/miss stats, eviction victims, and
+//! LRU order are identical for every worker count (`tests/
+//! gateway_concurrency.rs` pins this against a serial oracle).
+
+use crate::router::gateway::RouteOutcome;
+use crate::util::hash::{fnv1a, FxHashMap};
+
+/// Memoization key: text identity (64-bit FNV + byte verification at the
+/// slot), the output budget, and the decision signature of the estimate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct CacheKey {
+    pub text_hash: u64,
+    pub max_output_tokens: u32,
+    /// Per-boundary gate region of the estimated `L_total`
+    /// ([`crate::router::gateway::GatewayConfig::decision_signature`]).
+    pub signature: u64,
+}
+
+impl CacheKey {
+    pub fn new(text: &str, max_output_tokens: u32, signature: u64) -> Self {
+        CacheKey {
+            text_hash: fnv1a(text.as_bytes()),
+            max_output_tokens,
+            signature,
+        }
+    }
+}
+
+/// Order-independent cache counters (summed, never averaged, so they
+/// merge across batches and report identically for any worker count).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub inserts: u64,
+    pub evictions: u64,
+    /// Full-cache clears due to a config fingerprint change.
+    pub invalidations: u64,
+    /// 64-bit hash matches whose stored text differed byte-wise (counted
+    /// as misses; the entry is left in place for its true owner).
+    pub collisions: u64,
+}
+
+impl CacheStats {
+    /// Hit fraction over all lookups (0 when the cache was never probed).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+}
+
+/// A reserved slot handle: `fill` succeeds only while the slot still
+/// holds the same generation (i.e. the reservation was not evicted).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct SlotRef {
+    idx: usize,
+    gen: u32,
+}
+
+/// Probe result. `HitPending` carries the tag passed to
+/// [`RouteCache::reserve`] — the sharded pipeline uses the reserving
+/// request's index so in-batch duplicates can copy its outcome once the
+/// parallel stage computes it.
+#[derive(Clone, Debug)]
+pub enum Lookup {
+    Hit(RouteOutcome),
+    HitPending(usize),
+    Miss,
+}
+
+#[derive(Clone, Debug)]
+enum SlotState {
+    /// Reserved during a batch's decision fold; filled after compute.
+    Pending(usize),
+    Filled(RouteOutcome),
+}
+
+#[derive(Clone, Debug)]
+struct Slot {
+    key: CacheKey,
+    /// Full original text, for byte-exact collision rejection.
+    text: String,
+    state: SlotState,
+    gen: u32,
+    /// Intrusive LRU list links (`NIL` = end).
+    prev: usize,
+    next: usize,
+}
+
+const NIL: usize = usize::MAX;
+
+/// Bounded LRU of routing outcomes. See the module docs for the
+/// correctness contract.
+#[derive(Debug, Default)]
+pub struct RouteCache {
+    capacity: usize,
+    slots: Vec<Slot>,
+    /// Key → slot index. Kept in lockstep with `slots`.
+    index: FxHashMap<CacheKey, usize>,
+    /// Most- and least-recently-used ends of the intrusive list.
+    head: usize,
+    tail: usize,
+    free: Vec<usize>,
+    /// Config fingerprint the current entries were routed under.
+    config_fp: Option<u64>,
+    pub stats: CacheStats,
+}
+
+impl RouteCache {
+    /// A cache holding at most `capacity` outcomes (0 = always-miss).
+    pub fn new(capacity: usize) -> Self {
+        RouteCache {
+            capacity,
+            slots: Vec::with_capacity(capacity.min(4096)),
+            index: FxHashMap::default(),
+            head: NIL,
+            tail: NIL,
+            free: Vec::new(),
+            config_fp: None,
+            stats: CacheStats::default(),
+        }
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Live entries (pending + filled).
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    /// Bind the cache to a config fingerprint, clearing every entry if it
+    /// differs from the one the entries were filled under (replan /
+    /// hot-reload invalidation). Stats survive; entries do not.
+    pub fn ensure_config(&mut self, fingerprint: u64) {
+        if self.config_fp == Some(fingerprint) {
+            return;
+        }
+        if self.config_fp.is_some() && !self.index.is_empty() {
+            self.stats.invalidations += 1;
+        }
+        self.clear();
+        self.config_fp = Some(fingerprint);
+    }
+
+    /// Drop every entry (keeps capacity, stats, and fingerprint binding).
+    pub fn clear(&mut self) {
+        self.slots.clear();
+        self.index.clear();
+        self.free.clear();
+        self.head = NIL;
+        self.tail = NIL;
+    }
+
+    /// Probe for `key`, verifying `text` byte-for-byte. Counts one hit or
+    /// one miss; a filled hit is moved to the front of the LRU list.
+    pub fn lookup(&mut self, key: CacheKey, text: &str) -> Lookup {
+        let Some(&idx) = self.index.get(&key) else {
+            self.stats.misses += 1;
+            return Lookup::Miss;
+        };
+        if self.slots[idx].text != text {
+            // Same 64-bit hash, different bytes: never serve it.
+            self.stats.collisions += 1;
+            self.stats.misses += 1;
+            return Lookup::Miss;
+        }
+        self.detach(idx);
+        self.attach_front(idx);
+        self.stats.hits += 1;
+        match &self.slots[idx].state {
+            SlotState::Filled(out) => Lookup::Hit(out.clone()),
+            SlotState::Pending(tag) => Lookup::HitPending(*tag),
+        }
+    }
+
+    /// Reserve a slot for `key` (a pending entry tagged `tag`), evicting
+    /// the LRU tail at capacity. Returns `None` when `capacity == 0`. If
+    /// the key is already present (collision owner or a re-route after a
+    /// stale pending), the slot is re-reserved in place.
+    pub fn reserve(&mut self, key: CacheKey, text: &str, tag: usize) -> Option<SlotRef> {
+        if self.capacity == 0 {
+            return None;
+        }
+        if let Some(&idx) = self.index.get(&key) {
+            let slot = &mut self.slots[idx];
+            slot.text.clear();
+            slot.text.push_str(text);
+            slot.state = SlotState::Pending(tag);
+            slot.gen = slot.gen.wrapping_add(1);
+            let gen = slot.gen;
+            self.detach(idx);
+            self.attach_front(idx);
+            self.stats.inserts += 1;
+            return Some(SlotRef { idx, gen });
+        }
+        if self.index.len() >= self.capacity {
+            self.evict_tail();
+        }
+        let idx = match self.free.pop() {
+            Some(idx) => {
+                let slot = &mut self.slots[idx];
+                slot.key = key;
+                slot.text.clear();
+                slot.text.push_str(text);
+                slot.state = SlotState::Pending(tag);
+                slot.gen = slot.gen.wrapping_add(1);
+                idx
+            }
+            None => {
+                self.slots.push(Slot {
+                    key,
+                    text: text.to_string(),
+                    state: SlotState::Pending(tag),
+                    gen: 0,
+                    prev: NIL,
+                    next: NIL,
+                });
+                self.slots.len() - 1
+            }
+        };
+        self.index.insert(key, idx);
+        self.attach_front(idx);
+        self.stats.inserts += 1;
+        Some(SlotRef {
+            idx,
+            gen: self.slots[idx].gen,
+        })
+    }
+
+    /// Fill a reserved slot with its computed outcome. A stale handle
+    /// (the reservation was evicted, or the slot re-reserved) is a no-op:
+    /// the outcome is simply not cached.
+    pub fn fill(&mut self, slot: SlotRef, outcome: RouteOutcome) {
+        let Some(s) = self.slots.get_mut(slot.idx) else {
+            return;
+        };
+        if s.gen != slot.gen || !matches!(s.state, SlotState::Pending(_)) {
+            return;
+        }
+        s.state = SlotState::Filled(outcome);
+    }
+
+    /// Keys from most- to least-recently used (test/diagnostic surface).
+    pub fn keys_lru_order(&self) -> Vec<CacheKey> {
+        let mut out = Vec::with_capacity(self.index.len());
+        let mut idx = self.head;
+        while idx != NIL {
+            out.push(self.slots[idx].key);
+            idx = self.slots[idx].next;
+        }
+        out
+    }
+
+    fn evict_tail(&mut self) {
+        let idx = self.tail;
+        if idx == NIL {
+            return;
+        }
+        self.detach(idx);
+        let slot = &mut self.slots[idx];
+        slot.gen = slot.gen.wrapping_add(1);
+        let key = slot.key;
+        self.index.remove(&key);
+        self.free.push(idx);
+        self.stats.evictions += 1;
+    }
+
+    fn detach(&mut self, idx: usize) {
+        let (prev, next) = (self.slots[idx].prev, self.slots[idx].next);
+        if prev != NIL {
+            self.slots[prev].next = next;
+        } else if self.head == idx {
+            self.head = next;
+        }
+        if next != NIL {
+            self.slots[next].prev = prev;
+        } else if self.tail == idx {
+            self.tail = prev;
+        }
+        self.slots[idx].prev = NIL;
+        self.slots[idx].next = NIL;
+    }
+
+    fn attach_front(&mut self, idx: usize) {
+        self.slots[idx].prev = NIL;
+        self.slots[idx].next = self.head;
+        if self.head != NIL {
+            self.slots[self.head].prev = idx;
+        }
+        self.head = idx;
+        if self.tail == NIL {
+            self.tail = idx;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::request::Category;
+
+    fn outcome(tier: usize, text: &str) -> RouteOutcome {
+        RouteOutcome {
+            tier,
+            text: text.to_string(),
+            prompt_tokens: text.len() as u32,
+            actual_prompt: text.len() as u32,
+            category: Category::Conversational,
+            compressed: false,
+            n_compress_failed: 0,
+        }
+    }
+
+    fn put(c: &mut RouteCache, text: &str, sig: u64) {
+        let key = CacheKey::new(text, 64, sig);
+        if let Some(slot) = c.reserve(key, text, 0) {
+            c.fill(slot, outcome(0, text));
+        }
+    }
+
+    #[test]
+    fn hit_returns_filled_outcome() {
+        let mut c = RouteCache::new(4);
+        c.ensure_config(7);
+        put(&mut c, "alpha", 1);
+        match c.lookup(CacheKey::new("alpha", 64, 1), "alpha") {
+            Lookup::Hit(out) => assert_eq!(out.text, "alpha"),
+            other => panic!("expected hit, got {other:?}"),
+        }
+        assert_eq!(c.stats.hits, 1);
+    }
+
+    #[test]
+    fn capacity_bound_holds_and_evicts_lru() {
+        let mut c = RouteCache::new(2);
+        c.ensure_config(7);
+        put(&mut c, "a", 1);
+        put(&mut c, "b", 1);
+        // Touch "a" so "b" is the LRU victim.
+        assert!(matches!(c.lookup(CacheKey::new("a", 64, 1), "a"), Lookup::Hit(_)));
+        put(&mut c, "c", 1);
+        assert_eq!(c.len(), 2);
+        assert!(matches!(c.lookup(CacheKey::new("b", 64, 1), "b"), Lookup::Miss));
+        assert!(matches!(c.lookup(CacheKey::new("a", 64, 1), "a"), Lookup::Hit(_)));
+        assert!(matches!(c.lookup(CacheKey::new("c", 64, 1), "c"), Lookup::Hit(_)));
+        assert_eq!(c.stats.evictions, 1);
+    }
+
+    #[test]
+    fn fingerprint_change_clears_entries() {
+        let mut c = RouteCache::new(4);
+        c.ensure_config(7);
+        put(&mut c, "a", 1);
+        c.ensure_config(7);
+        assert_eq!(c.len(), 1);
+        c.ensure_config(8);
+        assert_eq!(c.len(), 0);
+        assert_eq!(c.stats.invalidations, 1);
+        assert!(matches!(c.lookup(CacheKey::new("a", 64, 1), "a"), Lookup::Miss));
+    }
+
+    #[test]
+    fn hash_collision_is_rejected_bytewise() {
+        let mut c = RouteCache::new(4);
+        c.ensure_config(7);
+        put(&mut c, "a", 1);
+        // Forge a key with "a"'s hash but different text bytes.
+        let forged = CacheKey::new("a", 64, 1);
+        assert!(matches!(c.lookup(forged, "z"), Lookup::Miss));
+        assert_eq!(c.stats.collisions, 1);
+    }
+
+    #[test]
+    fn stale_fill_after_eviction_is_dropped() {
+        let mut c = RouteCache::new(1);
+        c.ensure_config(7);
+        let ka = CacheKey::new("a", 64, 1);
+        let slot_a = c.reserve(ka, "a", 0).unwrap();
+        // "b" evicts pending "a"; the late fill must not resurrect it.
+        let kb = CacheKey::new("b", 64, 1);
+        let slot_b = c.reserve(kb, "b", 1).unwrap();
+        c.fill(slot_a, outcome(0, "a"));
+        c.fill(slot_b, outcome(1, "b"));
+        assert_eq!(c.len(), 1);
+        assert!(matches!(c.lookup(ka, "a"), Lookup::Miss));
+        match c.lookup(kb, "b") {
+            Lookup::Hit(out) => assert_eq!(out.tier, 1),
+            other => panic!("expected hit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn zero_capacity_never_stores() {
+        let mut c = RouteCache::new(0);
+        c.ensure_config(7);
+        assert!(c.reserve(CacheKey::new("a", 64, 1), "a", 0).is_none());
+        assert!(matches!(c.lookup(CacheKey::new("a", 64, 1), "a"), Lookup::Miss));
+        assert_eq!(c.len(), 0);
+    }
+
+    #[test]
+    fn pending_lookup_reports_reserving_tag() {
+        let mut c = RouteCache::new(4);
+        c.ensure_config(7);
+        let k = CacheKey::new("a", 64, 1);
+        c.reserve(k, "a", 42).unwrap();
+        match c.lookup(k, "a") {
+            Lookup::HitPending(tag) => assert_eq!(tag, 42),
+            other => panic!("expected pending hit, got {other:?}"),
+        }
+    }
+}

@@ -1,11 +1,17 @@
 //! The gateway router (paper §2.1, §5.1): per-category token-budget
 //! estimation (EMA), content classification, and pool routing with
-//! Compress-and-Route inline on the request path.
+//! Compress-and-Route inline on the request path — plus the sharded
+//! admission pipeline (`shard`) and the fingerprint-keyed route memo
+//! (`memo`) layered on top (§Perf, PR 8).
 
 pub mod classify;
 pub mod estimator;
 pub mod gateway;
+pub mod memo;
+pub mod shard;
 
 pub use classify::classify;
 pub use estimator::TokenEstimator;
-pub use gateway::{Gateway, GatewayConfig, RoutedRequest, TierRoute};
+pub use gateway::{Gateway, GatewayConfig, GatewayMetrics, RoutedRequest, TierRoute};
+pub use memo::{CacheKey, CacheStats, Lookup, RouteCache};
+pub use shard::{effective_workers, ScratchPool, ShardTiming};

@@ -1,0 +1,229 @@
+//! Sharded gateway admission (§Perf, PR 8): fan a batch across
+//! `util::par` workers, each with its own warm [`CompressScratch`],
+//! bit-identical to the serial [`Gateway::route`] loop.
+//!
+//! The serial gateway is not embarrassingly parallel: request k's
+//! estimate reads EMA state folded from requests 0..k−1, and the route
+//! memo's hit/miss pattern is defined by probe order. The pipeline
+//! therefore splits each batch into alternating parallel/serial stages,
+//! putting every order-sensitive operation on one thread in request
+//! order and every expensive pure computation on the workers:
+//!
+//! 1. **Features** (parallel): `classify` + `count_tokens` per request —
+//!    pure functions of the text.
+//! 2. **Decision fold** (serial, request order): estimate from
+//!    pre-update EMA state, fold the exact count into the EMA, probe /
+//!    reserve the route cache. Exactly the serial path's op order, so
+//!    estimator state, cache stats, eviction victims, and LRU order are
+//!    identical for every worker count.
+//! 3. **Ladder** (parallel): [`route_ladder`] — compression and all — for
+//!    the cache misses, strided across workers with one scratch each.
+//!    Pure in `(config, text, budget, signature)`, so placement cannot
+//!    change a byte.
+//! 4. **Emit** (serial, request order): fill reservations, copy in-batch
+//!    duplicate outcomes, apply counters, and stream to the sink.
+//!
+//! The stage split is also why cache-on equals cache-off byte-for-byte:
+//! a hit replays a `RouteOutcome` the ladder would have recomputed
+//! identically.
+
+use std::time::Instant;
+
+use crate::compress::scratch::CompressScratch;
+use crate::compress::tokenizer::count_tokens;
+use crate::router::classify::classify;
+use crate::router::gateway::{finish_request, route_ladder, Gateway, RouteOutcome, RoutedRequest};
+use crate::router::memo::{CacheKey, Lookup, RouteCache, SlotRef};
+use crate::util::par;
+use crate::workload::request::Category;
+
+/// Per-worker compression scratches, grown on demand and kept warm
+/// across batches — steady-state sharded admission allocates no arenas.
+#[derive(Clone, Debug, Default)]
+pub struct ScratchPool {
+    scratches: Vec<CompressScratch>,
+}
+
+impl ScratchPool {
+    /// At least `n` scratches, as a mutable slice for the fan-out.
+    pub fn take(&mut self, n: usize) -> &mut [CompressScratch] {
+        if self.scratches.len() < n {
+            self.scratches.resize_with(n, CompressScratch::new);
+        }
+        &mut self.scratches[..n]
+    }
+
+    /// Warm scratches currently pooled.
+    pub fn len(&self) -> usize {
+        self.scratches.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.scratches.is_empty()
+    }
+}
+
+/// Wall-clock seconds per pipeline stage for one sharded batch
+/// (diagnostics surface for the CLI/example; never compared in tests).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardTiming {
+    /// Effective worker count the batch ran with.
+    pub workers: usize,
+    pub features_s: f64,
+    pub fold_s: f64,
+    pub ladder_s: f64,
+    pub emit_s: f64,
+}
+
+/// The worker count a batch actually runs with: `requested` (0 = auto
+/// from available parallelism at ≥ 2 items per worker), clamped by the
+/// item count, a hard ceiling of 16, and the process-wide
+/// [`par::thread_cap`] (`FLEETOPT_THREADS` / `--threads`).
+pub fn effective_workers(requested: usize, items: usize) -> usize {
+    let base = if requested == 0 {
+        std::thread::available_parallelism()
+            .map(|n| n.get())
+            .unwrap_or(1)
+            .min(items.div_ceil(2))
+    } else {
+        requested.min(items)
+    };
+    base.min(16).min(par::thread_cap()).max(1)
+}
+
+/// How one request's outcome is produced.
+enum Resolution {
+    /// Served from the route cache.
+    Ready(RouteOutcome),
+    /// In-batch duplicate of the request at this index (its reservation
+    /// was pending when we probed): copy that outcome after stage 3.
+    Dup(usize),
+    /// Computed by the parallel ladder stage (index into `pending`).
+    Compute(usize),
+}
+
+/// Sharded batch routing; `workers` must already be effective (> 1).
+/// See the module docs for the stage contract; `gateway.rs` documents
+/// the bit-identity guarantee this upholds.
+pub(crate) fn route_batch_sharded(
+    gw: &mut Gateway,
+    batch: &[(&str, u32)],
+    workers: usize,
+    mut cache: Option<&mut RouteCache>,
+    mut sink: impl FnMut(usize, RoutedRequest),
+) {
+    let n = batch.len();
+    let mut timing = ShardTiming {
+        workers,
+        ..Default::default()
+    };
+
+    // Stage 1 — features (parallel, pure).
+    let t0 = Instant::now();
+    let mut unit = vec![(); workers];
+    let pre: Vec<(Category, u32)> =
+        par::par_map_with(batch, &mut unit, |_, &(text, _)| {
+            (classify(text), count_tokens(text))
+        });
+    timing.features_s = t0.elapsed().as_secs_f64();
+
+    // Stage 2 — decision fold (serial, request order: EMA + cache ops).
+    let t0 = Instant::now();
+    if let Some(c) = cache.as_deref_mut() {
+        c.ensure_config(gw.cfg.fingerprint());
+    }
+    let mut est_totals = vec![0u32; n];
+    let mut resolution: Vec<Resolution> = Vec::with_capacity(n);
+    let mut pending: Vec<(usize, Option<SlotRef>)> = Vec::new();
+    for i in 0..n {
+        let (text, max_output) = batch[i];
+        let (category, actual_prompt) = pre[i];
+        let est_total = gw
+            .estimator
+            .estimate_prompt_tokens(text.len(), category)
+            + max_output;
+        est_totals[i] = est_total;
+        gw.estimator.update(text.len(), actual_prompt, category);
+        let res = match cache.as_deref_mut() {
+            None => {
+                pending.push((i, None));
+                Resolution::Compute(pending.len() - 1)
+            }
+            Some(c) => {
+                let key =
+                    CacheKey::new(text, max_output, gw.cfg.decision_signature(est_total));
+                match c.lookup(key, text) {
+                    Lookup::Hit(out) => Resolution::Ready(out),
+                    Lookup::HitPending(tag)
+                        if matches!(resolution.get(tag), Some(Resolution::Compute(_))) =>
+                    {
+                        Resolution::Dup(tag)
+                    }
+                    // Miss — or a pending tag from an earlier batch whose
+                    // fill never landed (evicted reservation): recompute.
+                    Lookup::HitPending(_) | Lookup::Miss => {
+                        let slot = c.reserve(key, text, i);
+                        pending.push((i, slot));
+                        Resolution::Compute(pending.len() - 1)
+                    }
+                }
+            }
+        };
+        resolution.push(res);
+    }
+    timing.fold_s = t0.elapsed().as_secs_f64();
+
+    // Stage 3 — ladder (parallel, pure; one warm scratch per worker).
+    let t0 = Instant::now();
+    let cfg = &gw.cfg;
+    let scratches = gw.shard_pool.take(workers);
+    let computed: Vec<(RouteOutcome, f64)> =
+        par::par_map_with(&pending, scratches, |scratch, &(i, _)| {
+            let (text, max_output) = batch[i];
+            let (category, actual_prompt) = pre[i];
+            let t = Instant::now();
+            let out = route_ladder(
+                cfg,
+                scratch,
+                text,
+                max_output,
+                category,
+                actual_prompt,
+                est_totals[i],
+            );
+            (out, t.elapsed().as_secs_f64())
+        });
+    timing.ladder_s = t0.elapsed().as_secs_f64();
+
+    // Stage 4 — emit (serial, request order).
+    let t0 = Instant::now();
+    let mut outcome_by_req: Vec<Option<RouteOutcome>> = vec![None; n];
+    for (p, &(i, slot)) in pending.iter().enumerate() {
+        if let (Some(c), Some(slot)) = (cache.as_deref_mut(), slot) {
+            c.fill(slot, computed[p].0.clone());
+        }
+        outcome_by_req[i] = Some(computed[p].0.clone());
+    }
+    for (i, res) in resolution.into_iter().enumerate() {
+        let (out, gateway_s) = match res {
+            Resolution::Ready(out) => (out, 0.0),
+            Resolution::Dup(j) => (
+                outcome_by_req[j]
+                    .clone()
+                    .expect("duplicate of a computed request"),
+                0.0,
+            ),
+            Resolution::Compute(p) => (
+                outcome_by_req[i].clone().expect("computed request outcome"),
+                computed[p].1,
+            ),
+        };
+        gw.absorb_outcome(&out);
+        sink(
+            i,
+            finish_request(out, batch[i].1, est_totals[i], gateway_s),
+        );
+    }
+    timing.emit_s = t0.elapsed().as_secs_f64();
+    gw.last_shard = Some(timing);
+}

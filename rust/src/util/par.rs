@@ -110,6 +110,56 @@ pub fn par_map_each<T: Sync, R: Send>(items: &[T], f: impl Fn(&T) -> R + Sync) -
     par_map_strided_with(items, 1, f)
 }
 
+/// Strided parallel map with per-worker mutable state (the gateway
+/// scratch-pool shape): worker `w` evaluates items `w, w+W, w+2W, ...`
+/// with exclusive access to `states[w]`, and results are reassembled in
+/// input order. `states.len()` IS the worker count — callers size it
+/// with [`workers_for`] or an explicit request already clamped by
+/// [`thread_cap`]; one state (or ≤ 1 item) runs serially on the caller's
+/// thread. Values are independent of the worker count whenever `f`'s
+/// output does not depend on its state argument's history (scratch
+/// buffers, not accumulators) — the property the gateway pins in
+/// `tests/gateway_concurrency.rs`.
+pub fn par_map_with<T: Sync, R: Send, S: Send>(
+    items: &[T],
+    states: &mut [S],
+    f: impl Fn(&mut S, &T) -> R + Sync,
+) -> Vec<R> {
+    let workers = states.len().min(items.len());
+    if workers <= 1 {
+        let Some(s0) = states.first_mut() else {
+            assert!(items.is_empty(), "par_map_with needs at least one state");
+            return Vec::new();
+        };
+        return items.iter().map(|t| f(s0, t)).collect();
+    }
+    let f_ref = &f;
+    let shards: Vec<Vec<R>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = states[..workers]
+            .iter_mut()
+            .enumerate()
+            .map(|(w, state)| {
+                scope.spawn(move || {
+                    items
+                        .iter()
+                        .skip(w)
+                        .step_by(workers)
+                        .map(|t| f_ref(state, t))
+                        .collect::<Vec<R>>()
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map_with worker panicked"))
+            .collect()
+    });
+    let mut iters: Vec<_> = shards.into_iter().map(|s| s.into_iter()).collect();
+    (0..items.len())
+        .map(|i| iters[i % workers].next().expect("stride shard underflow"))
+        .collect()
+}
+
 fn par_map_strided_with<T: Sync, R: Send>(
     items: &[T],
     per_worker: usize,
@@ -182,6 +232,23 @@ mod tests {
         let capped = par_map_strided(&items, |&x| x as f64 * 0.1);
         set_thread_cap(0);
         assert_eq!(uncapped, capped);
+    }
+
+    #[test]
+    fn par_map_with_matches_serial_and_touches_state() {
+        for n in [0usize, 1, 2, 7, 33, 64] {
+            for w in [1usize, 2, 5, 8] {
+                let items: Vec<usize> = (0..n).collect();
+                let mut states = vec![0u64; w];
+                let got = par_map_with(&items, &mut states, |s, &x| {
+                    *s += 1; // per-worker tally; must not affect values
+                    x.wrapping_mul(7) ^ 5
+                });
+                let want: Vec<usize> = items.iter().map(|&x| x.wrapping_mul(7) ^ 5).collect();
+                assert_eq!(got, want, "n={n} w={w}");
+                assert_eq!(states.iter().sum::<u64>(), n as u64);
+            }
+        }
     }
 
     #[test]

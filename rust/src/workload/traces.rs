@@ -293,6 +293,96 @@ impl Workload {
     }
 }
 
+/// One replayable request from a JSONL text trace: the prompt itself,
+/// the output budget, and the arrival offset from trace start. This is
+/// the live-gateway analog of [`Workload::sample_request`] — real text
+/// instead of sampled token counts — and what `fleetopt serve --trace`
+/// feeds through the admission pipeline.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceItem {
+    pub text: String,
+    pub max_output: u32,
+    pub arrival_s: f64,
+}
+
+/// Parse one trace line: `{"text": "...", "max_output": 64,
+/// "arrival_s": 1.25}` (`max_output` defaults to 64, `arrival_s` to 0).
+/// Blank lines and `#` comments yield `None`.
+pub fn parse_trace_line(line: &str) -> anyhow::Result<Option<TraceItem>> {
+    use crate::util::json::Json;
+    let t = line.trim();
+    if t.is_empty() || t.starts_with('#') {
+        return Ok(None);
+    }
+    let j = Json::parse(t).map_err(|e| anyhow::anyhow!("bad trace line: {e}"))?;
+    let text = j
+        .get("text")
+        .and_then(Json::as_str)
+        .ok_or_else(|| anyhow::anyhow!("trace line missing `text`"))?
+        .to_string();
+    let max_output = j
+        .get("max_output")
+        .and_then(Json::as_f64)
+        .unwrap_or(64.0) as u32;
+    let arrival_s = j.get("arrival_s").and_then(Json::as_f64).unwrap_or(0.0);
+    if max_output == 0 {
+        anyhow::bail!("trace line has max_output = 0");
+    }
+    if !arrival_s.is_finite() || arrival_s < 0.0 {
+        anyhow::bail!("trace line has bad arrival_s {arrival_s}");
+    }
+    Ok(Some(TraceItem {
+        text,
+        max_output,
+        arrival_s,
+    }))
+}
+
+/// Whole-buffer parse, the oracle the streaming loader is pinned to
+/// (`streamed_trace_loading_matches_whole_file_parse` below).
+pub fn parse_text_trace(text: &str) -> anyhow::Result<Vec<TraceItem>> {
+    let mut out = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if let Some(item) =
+            parse_trace_line(line).map_err(|e| anyhow::anyhow!("line {}: {e}", i + 1))?
+        {
+            out.push(item);
+        }
+    }
+    Ok(out)
+}
+
+/// Stream a JSONL text trace from disk: `BufRead` line iteration with one
+/// reused line buffer, so peak memory is one line (plus the parsed
+/// items), not the whole file — traces at "millions of users" scale are
+/// far bigger than any single prompt. Parses identically to
+/// [`parse_text_trace`] line for line.
+pub fn load_text_trace(path: &str) -> anyhow::Result<Vec<TraceItem>> {
+    use std::io::BufRead;
+    let file =
+        std::fs::File::open(path).map_err(|e| anyhow::anyhow!("opening {path}: {e}"))?;
+    let mut reader = std::io::BufReader::new(file);
+    let mut line = String::new();
+    let mut out = Vec::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .map_err(|e| anyhow::anyhow!("reading {path}: {e}"))?;
+        if n == 0 {
+            break;
+        }
+        lineno += 1;
+        if let Some(item) =
+            parse_trace_line(&line).map_err(|e| anyhow::anyhow!("{path}:{lineno}: {e}"))?
+        {
+            out.push(item);
+        }
+    }
+    Ok(out)
+}
+
 /// All three evaluation workloads in paper order.
 pub fn all() -> Vec<Workload> {
     vec![azure(), lmsys(), agent_heavy()]
@@ -433,6 +523,42 @@ mod tests {
         assert!(std::panic::catch_unwind(|| Workload::from_json(&j)).is_err());
         let j = crate::util::json::Json::parse(r#"{"b_short": 10}"#).unwrap();
         assert!(Workload::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn streamed_trace_loading_matches_whole_file_parse() {
+        let body = concat!(
+            "# replayable text trace\n",
+            r#"{"text": "short question about rust", "max_output": 32, "arrival_s": 0.0}"#,
+            "\n",
+            "\n",
+            r#"{"text": "a much longer prompt body with \"quotes\" and unicode é", "arrival_s": 1.5}"#,
+            "\n",
+            r#"{"text": "defaults only"}"#,
+            "\n",
+        );
+        let path = std::env::temp_dir().join("fleetopt_trace_stream_test.jsonl");
+        std::fs::write(&path, body).unwrap();
+        let streamed = load_text_trace(path.to_str().unwrap()).unwrap();
+        let whole = parse_text_trace(body).unwrap();
+        std::fs::remove_file(&path).ok();
+        assert_eq!(streamed, whole);
+        assert_eq!(streamed.len(), 3);
+        assert_eq!(streamed[0].max_output, 32);
+        assert_eq!(streamed[1].text, "a much longer prompt body with \"quotes\" and unicode é");
+        assert!((streamed[1].arrival_s - 1.5).abs() < 1e-12);
+        assert_eq!(streamed[2].max_output, 64);
+        assert!((streamed[2].arrival_s - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trace_lines_reject_bad_fields() {
+        assert!(parse_trace_line(r#"{"max_output": 5}"#).is_err());
+        assert!(parse_trace_line(r#"{"text": "x", "max_output": 0}"#).is_err());
+        assert!(parse_trace_line(r#"{"text": "x", "arrival_s": -1}"#).is_err());
+        assert!(parse_trace_line("not json").is_err());
+        assert!(parse_trace_line("").unwrap().is_none());
+        assert!(parse_trace_line("# comment").unwrap().is_none());
     }
 
     #[test]

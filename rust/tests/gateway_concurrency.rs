@@ -1,0 +1,460 @@
+//! Sharded/memoized gateway admission vs the serial oracle (PR 8).
+//!
+//! `OracleGateway::route` below is a **verbatim transcription of the
+//! pre-refactor serial `Gateway::route`** — one gateway, one scratch, one
+//! request at a time. Every test pins the production path (decomposed
+//! ladder, sharded batches, route memo) against it: all `RoutedRequest`
+//! fields except the wall-clock `gateway_s`, the merged counters, and the
+//! EMA estimator bits must be identical for every worker count, cache
+//! capacity, and batch decomposition.
+
+use fleetopt::compress::corpus::{self, CorpusConfig};
+use fleetopt::compress::extractive::compress_with;
+use fleetopt::compress::gate::{clamp_gamma, compression_budget, gate, GateDecision};
+use fleetopt::compress::scratch::CompressScratch;
+use fleetopt::compress::tokenizer::count_tokens;
+use fleetopt::router::classify::classify;
+use fleetopt::router::memo::{CacheKey, Lookup, RouteCache};
+use fleetopt::router::{
+    effective_workers, Gateway, GatewayConfig, GatewayMetrics, RoutedRequest, TokenEstimator,
+};
+use fleetopt::util::check::{ensure, forall};
+use fleetopt::util::par::set_thread_cap;
+use fleetopt::util::rng::Rng;
+use fleetopt::util::simd::{with_dispatch, Dispatch};
+use fleetopt::workload::request::Category;
+
+// ---------------------------------------------------------------------------
+// The serial oracle (pre-refactor Gateway::route, kept verbatim).
+
+struct OracleGateway {
+    cfg: GatewayConfig,
+    estimator: TokenEstimator,
+    scratch: CompressScratch,
+    n_routed: Vec<u64>,
+    n_compressed: u64,
+    n_compress_failed: u64,
+}
+
+struct OracleRouted {
+    tier: usize,
+    text: String,
+    prompt_tokens: u32,
+    max_output_tokens: u32,
+    category: Category,
+    estimated_l_total: u32,
+    compressed: bool,
+}
+
+impl OracleGateway {
+    fn new(cfg: GatewayConfig) -> Self {
+        let k = cfg.n_tiers();
+        OracleGateway {
+            cfg,
+            estimator: TokenEstimator::default(),
+            scratch: CompressScratch::new(),
+            n_routed: vec![0; k],
+            n_compressed: 0,
+            n_compress_failed: 0,
+        }
+    }
+
+    fn route(&mut self, text: &str, max_output_tokens: u32) -> OracleRouted {
+        let category = classify(text);
+        let est_prompt = self.estimator.estimate_prompt_tokens(text.len(), category);
+        let est_total = est_prompt + max_output_tokens;
+        let actual_prompt = count_tokens(text);
+        self.estimator.update(text.len(), actual_prompt, category);
+
+        let last_tier = self.cfg.tiers.len();
+        let mut routed = None;
+        for tier in 0..last_tier {
+            let tr = self.cfg.tiers[tier];
+            let gamma = if self.cfg.enable_cr { tr.gamma } else { 1.0 };
+            let gamma = clamp_gamma(
+                tr.boundary,
+                self.cfg.tiers.get(tier + 1).map(|t| t.boundary),
+                gamma,
+            );
+            match gate(est_total, tr.boundary, gamma, category) {
+                GateDecision::RouteShort => {
+                    routed = Some(OracleRouted {
+                        tier,
+                        text: text.to_string(),
+                        prompt_tokens: actual_prompt,
+                        max_output_tokens,
+                        category,
+                        estimated_l_total: est_total,
+                        compressed: false,
+                    });
+                    break;
+                }
+                GateDecision::CompressAndRoute => {
+                    match compression_budget(tr.boundary, max_output_tokens) {
+                        Some(budget) => {
+                            let c = compress_with(&mut self.scratch, text, budget);
+                            if c.ok {
+                                self.n_compressed += 1;
+                                routed = Some(OracleRouted {
+                                    tier,
+                                    prompt_tokens: count_tokens(&c.text),
+                                    text: c.text,
+                                    max_output_tokens,
+                                    category,
+                                    estimated_l_total: est_total,
+                                    compressed: true,
+                                });
+                                break;
+                            }
+                            self.n_compress_failed += 1;
+                        }
+                        None => {
+                            self.n_compress_failed += 1;
+                        }
+                    }
+                }
+                GateDecision::BandButUnsafe | GateDecision::RouteLong => {}
+            }
+        }
+        let routed = routed.unwrap_or_else(|| OracleRouted {
+            tier: last_tier,
+            text: text.to_string(),
+            prompt_tokens: actual_prompt,
+            max_output_tokens,
+            category,
+            estimated_l_total: est_total,
+            compressed: false,
+        });
+        self.n_routed[routed.tier] += 1;
+        routed
+    }
+
+    fn metrics(&self) -> GatewayMetrics {
+        GatewayMetrics {
+            n_routed: self.n_routed.clone(),
+            n_compressed: self.n_compressed,
+            n_compress_failed: self.n_compress_failed,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Traces: three mixed workloads (short / borderline prose / borderline
+// code / long / in-trace duplicates), sized for debug-build test budgets.
+
+fn doc(tokens: u32, rng: &mut Rng) -> String {
+    corpus::generate_document(
+        &CorpusConfig {
+            target_tokens: tokens,
+            ..Default::default()
+        },
+        rng,
+    )
+}
+
+/// (config, requests) — requests share texts (duplicates) on purpose.
+fn trace(kind: usize) -> (GatewayConfig, Vec<(String, u32)>) {
+    let mut rng = Rng::new(100 + kind as u64);
+    let cfg = match kind {
+        0 => GatewayConfig::two_tier(512, 1.5, true),
+        1 => GatewayConfig::tiered(&[256, 768], 1.5, true),
+        _ => GatewayConfig::two_tier(640, 1.4, true),
+    };
+    // A small unique pool with short, borderline-prose, borderline-code,
+    // and long docs; the trace resamples it with repeats.
+    let b = cfg.b_short();
+    let mut pool: Vec<(String, u32)> = Vec::new();
+    for i in 0..4 {
+        pool.push((doc(120 + 40 * i, &mut rng), 16));
+    }
+    for i in 0..4 {
+        // Land inside the band of some boundary: est ~ [B+eps, 1.4 B].
+        pool.push((doc(b + 30 + 60 * i, &mut rng), 32));
+    }
+    pool.push((corpus::generate_code(b + 100, &mut rng), 32));
+    pool.push((doc(3 * b, &mut rng), 64));
+    // One band request with an output budget >= boundary (no feasible
+    // compression budget -> fail-safe fall-through).
+    pool.push((doc(b / 4, &mut rng), b + 50));
+    let mut requests = Vec::new();
+    for k in 0..28 {
+        let pick = (k * 7 + kind) % pool.len();
+        requests.push(pool[pick].clone());
+    }
+    (cfg, requests)
+}
+
+fn collect(
+    gw: &mut Gateway,
+    batch: &[(&str, u32)],
+    workers: usize,
+    cache: Option<&mut RouteCache>,
+) -> Vec<RoutedRequest> {
+    let mut out: Vec<Option<RoutedRequest>> = vec![None; batch.len()];
+    gw.route_batch_with_opts(batch, workers, cache, |i, r| out[i] = Some(r));
+    out.into_iter().map(|r| r.expect("sink saw every index")).collect()
+}
+
+fn assert_matches_oracle(kind: usize, got: &[RoutedRequest], oracle: &[OracleRouted]) {
+    assert_eq!(got.len(), oracle.len());
+    for (i, (g, o)) in got.iter().zip(oracle).enumerate() {
+        assert_eq!(g.tier, o.tier, "trace {kind} req {i} tier");
+        assert_eq!(g.text, o.text, "trace {kind} req {i} text bytes");
+        assert_eq!(g.prompt_tokens, o.prompt_tokens, "trace {kind} req {i}");
+        assert_eq!(g.max_output_tokens, o.max_output_tokens, "trace {kind} req {i}");
+        assert_eq!(g.category, o.category, "trace {kind} req {i}");
+        assert_eq!(g.estimated_l_total, o.estimated_l_total, "trace {kind} req {i}");
+        assert_eq!(g.compressed, o.compressed, "trace {kind} req {i}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Tentpole identity: every worker count x cache setting == serial oracle.
+
+#[test]
+fn sharded_routing_matches_serial_oracle_all_traces() {
+    for kind in 0..3 {
+        let (cfg, requests) = trace(kind);
+        let batch: Vec<(&str, u32)> = requests.iter().map(|(t, m)| (t.as_str(), *m)).collect();
+        let mut oracle = OracleGateway::new(cfg.clone());
+        let oracle_out: Vec<OracleRouted> =
+            batch.iter().map(|&(t, m)| oracle.route(t, m)).collect();
+
+        for workers in [1usize, 2, 8] {
+            for cache_cap in [0usize, 1024, 4] {
+                let mut gw = Gateway::new(cfg.clone());
+                let mut cache = (cache_cap > 0).then(|| RouteCache::new(cache_cap));
+                let got = collect(&mut gw, &batch, workers, cache.as_mut());
+                assert_matches_oracle(kind, &got, &oracle_out);
+                assert_eq!(
+                    gw.metrics(),
+                    oracle.metrics(),
+                    "trace {kind} workers {workers} cache {cache_cap}: merged counters"
+                );
+                assert_eq!(
+                    gw.estimator.c_hat_bits(),
+                    oracle.estimator.c_hat_bits(),
+                    "trace {kind} workers {workers} cache {cache_cap}: EMA bits"
+                );
+                if let Some(c) = &cache {
+                    assert!(c.len() <= c.capacity(), "capacity bound");
+                }
+            }
+        }
+    }
+}
+
+/// Cache state (stats, LRU order) and outputs must not depend on how a
+/// request stream is chopped into batches or on the worker count.
+#[test]
+fn batch_decomposition_and_worker_count_leave_cache_state_invariant() {
+    let (cfg, requests) = trace(0);
+    let batch: Vec<(&str, u32)> = requests.iter().map(|(t, m)| (t.as_str(), *m)).collect();
+
+    let mut reference: Option<(Vec<RoutedRequest>, _, Vec<CacheKey>)> = None;
+    for (workers, splits) in [(1usize, 1usize), (2, 1), (8, 1), (2, 3), (8, 4)] {
+        let mut gw = Gateway::new(cfg.clone());
+        let mut cache = RouteCache::new(64);
+        let mut got = Vec::new();
+        let per = batch.len().div_ceil(splits);
+        for chunk in batch.chunks(per) {
+            got.extend(collect(&mut gw, chunk, workers, Some(&mut cache)));
+        }
+        let state = (got, cache.stats, cache.keys_lru_order());
+        if let Some((ref_out, ref_stats, ref_lru)) = &reference {
+            for (g, r) in state.0.iter().zip(ref_out) {
+                assert_eq!(g.tier, r.tier, "workers {workers} splits {splits}");
+                assert_eq!(g.text, r.text, "workers {workers} splits {splits}");
+                assert_eq!(g.prompt_tokens, r.prompt_tokens);
+                assert_eq!(g.compressed, r.compressed);
+                assert_eq!(g.estimated_l_total, r.estimated_l_total);
+            }
+            assert_eq!(
+                state.1, *ref_stats,
+                "workers {workers} splits {splits}: cache stats"
+            );
+            assert_eq!(
+                state.2, *ref_lru,
+                "workers {workers} splits {splits}: LRU order"
+            );
+        } else {
+            reference = Some(state);
+        }
+    }
+}
+
+#[test]
+fn thread_cap_forces_serial_sharding() {
+    // Pin the cap explicitly so the asserts hold regardless of any
+    // ambient FLEETOPT_THREADS in the environment.
+    set_thread_cap(16);
+    assert_eq!(effective_workers(64, 1000), 16, "hard ceiling");
+    assert_eq!(effective_workers(3, 2), 2, "never more workers than items");
+    assert_eq!(effective_workers(1, 100), 1);
+    set_thread_cap(1);
+    assert_eq!(effective_workers(8, 100), 1, "--threads 1 forces serial");
+    assert_eq!(effective_workers(0, 100), 1, "auto honors the cap too");
+    set_thread_cap(0);
+}
+
+// ---------------------------------------------------------------------------
+// Memo satellites: eviction order, capacity, invalidation, dispatch modes.
+
+/// LRU behaviour against a straight `Vec`-based reference model, over
+/// random op sequences on a small key space.
+#[test]
+fn memo_eviction_order_matches_reference_lru() {
+    forall(
+        "route-cache-lru",
+        60,
+        |rng| {
+            let cap = rng.range(1, 5);
+            let ops: Vec<(usize, bool)> = (0..40)
+                .map(|_| (rng.range(0, 8), rng.bool(0.5)))
+                .collect();
+            (cap, ops)
+        },
+        |(cap, ops)| {
+            let texts: Vec<String> = (0..8).map(|i| format!("request-text-{i}")).collect();
+            let mut cache = RouteCache::new(*cap);
+            cache.ensure_config(1);
+            // Reference: MRU-first vec of key ids.
+            let mut model: Vec<usize> = Vec::new();
+            for &(id, probe_only) in ops {
+                let key = CacheKey::new(&texts[id], 64, 0);
+                let model_hit = model.iter().position(|&k| k == id);
+                let got = cache.lookup(key, &texts[id]);
+                match (model_hit, &got) {
+                    (Some(pos), Lookup::Hit(out)) => {
+                        ensure(out.text == texts[id], "hit returned wrong entry")?;
+                        model.remove(pos);
+                        model.insert(0, id);
+                    }
+                    (None, Lookup::Miss) => {
+                        if !probe_only {
+                            if let Some(slot) = cache.reserve(key, &texts[id], 0) {
+                                cache.fill(
+                                    slot,
+                                    fleetopt::router::gateway::RouteOutcome {
+                                        tier: 0,
+                                        text: texts[id].clone(),
+                                        prompt_tokens: 1,
+                                        actual_prompt: 1,
+                                        category: Category::Conversational,
+                                        compressed: false,
+                                        n_compress_failed: 0,
+                                    },
+                                );
+                            }
+                            if model.len() == *cap {
+                                model.pop();
+                            }
+                            model.insert(0, id);
+                        }
+                    }
+                    _ => {
+                        return Err(format!(
+                            "model/cache disagree on {id}: model {model_hit:?} cache {got:?}"
+                        ))
+                    }
+                }
+                let want: Vec<u64> =
+                    model.iter().map(|&k| CacheKey::new(&texts[k], 64, 0).text_hash).collect();
+                let got_order: Vec<u64> =
+                    cache.keys_lru_order().iter().map(|k| k.text_hash).collect();
+                ensure(
+                    got_order == want,
+                    format!("LRU order {got_order:?} != model {want:?}"),
+                )?;
+                ensure(cache.len() <= *cap, "capacity bound violated")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+/// An all-unique adversarial trace must not grow the cache past capacity
+/// and must never hit.
+#[test]
+fn memo_capacity_bound_under_all_unique_trace() {
+    let cfg = GatewayConfig::two_tier(512, 1.5, true);
+    let mut rng = Rng::new(7);
+    let texts: Vec<String> = (0..60).map(|i| doc(80 + (i % 13) * 9, &mut rng)).collect();
+    let batch: Vec<(&str, u32)> = texts.iter().map(|t| (t.as_str(), 16)).collect();
+    let mut gw = Gateway::new(cfg);
+    let mut cache = RouteCache::new(16);
+    let _ = collect(&mut gw, &batch, 2, Some(&mut cache));
+    assert!(cache.len() <= 16, "len {} > cap", cache.len());
+    assert_eq!(cache.stats.hits, 0);
+    assert_eq!(cache.stats.misses, 60);
+    assert_eq!(cache.stats.evictions, 60 - 16);
+}
+
+/// A replan/hot-reload that moves any boundary or gamma must invalidate
+/// every memoized decision.
+#[test]
+fn memo_invalidates_on_boundary_and_gamma_change() {
+    let mut rng = Rng::new(8);
+    let text = doc(300, &mut rng);
+    let mut cache = RouteCache::new(32);
+
+    let mut g1 = Gateway::new(GatewayConfig::two_tier(512, 1.5, true));
+    g1.route_cached(&mut cache, &text, 16);
+    g1.route_cached(&mut cache, &text, 16);
+    assert_eq!(cache.stats.hits, 1, "same config: second route hits");
+
+    // Replan moves the boundary: the entry must not survive.
+    let mut g2 = Gateway::new(GatewayConfig::two_tier(520, 1.5, true));
+    g2.route_cached(&mut cache, &text, 16);
+    assert_eq!(cache.stats.hits, 1, "boundary change: cold again");
+    assert_eq!(cache.stats.invalidations, 1);
+
+    // Hot-reload moves gamma: invalidated again.
+    let mut g3 = Gateway::new(GatewayConfig::two_tier(520, 1.4, true));
+    g3.route_cached(&mut cache, &text, 16);
+    assert_eq!(cache.stats.hits, 1, "gamma change: cold again");
+    assert_eq!(cache.stats.invalidations, 2);
+
+    // And back to g2's config: fingerprints differ from g3, cold again —
+    // then warm within the same config.
+    let mut g4 = Gateway::new(GatewayConfig::two_tier(520, 1.5, true));
+    g4.route_cached(&mut cache, &text, 16);
+    g4.route_cached(&mut cache, &text, 16);
+    assert_eq!(cache.stats.invalidations, 3);
+    assert_eq!(cache.stats.hits, 2);
+}
+
+/// Cache hits must be byte-identical to cold routing in *both* SIMD
+/// dispatch modes: the doubled trace's second half is served from cache
+/// under ForceSimd and compared to a scalar, uncached oracle.
+#[test]
+fn memo_hits_bit_identical_across_dispatch_modes() {
+    let (cfg, requests) = trace(1);
+    let mut doubled = requests.clone();
+    doubled.extend(requests.clone());
+    let batch: Vec<(&str, u32)> = doubled.iter().map(|(t, m)| (t.as_str(), *m)).collect();
+
+    let scalar_cold = with_dispatch(Dispatch::ForceScalar, || {
+        let mut gw = Gateway::new(cfg.clone());
+        collect(&mut gw, &batch, 1, None)
+    });
+    for dispatch in [Dispatch::ForceScalar, Dispatch::ForceSimd] {
+        let (cached, stats) = with_dispatch(dispatch, || {
+            let mut gw = Gateway::new(cfg.clone());
+            let mut cache = RouteCache::new(256);
+            let out = collect(&mut gw, &batch, 2, Some(&mut cache));
+            (out, cache.stats)
+        });
+        for (i, (c, s)) in cached.iter().zip(&scalar_cold).enumerate() {
+            assert_eq!(c.tier, s.tier, "{dispatch:?} req {i}");
+            assert_eq!(c.text, s.text, "{dispatch:?} req {i}: text bytes");
+            assert_eq!(c.prompt_tokens, s.prompt_tokens, "{dispatch:?} req {i}");
+            assert_eq!(c.compressed, s.compressed, "{dispatch:?} req {i}");
+            assert_eq!(c.estimated_l_total, s.estimated_l_total, "{dispatch:?} req {i}");
+        }
+        assert!(
+            stats.hits >= requests.len() as u64 / 2,
+            "{dispatch:?}: duplicate-heavy trace should mostly hit, stats {stats:?}"
+        );
+    }
+}
