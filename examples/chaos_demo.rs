@@ -1,0 +1,103 @@
+//! Failure injection end to end: the diurnal Azure scenario from
+//! `autoscale_demo.rs`, now with the standard fault plan armed — per-replica
+//! crash–restart churn plus a whole-tier-0 outage dropped right on the
+//! diurnal peak (t = 62 s..74 s of the ~100 s horizon). Two policies run
+//! under the identical fault trace:
+//!
+//! * **none** — the planner's exact sizing, no spares, no failover: the
+//!   outage epochs blow the queue-wait SLO.
+//! * **N+1 + failover** — one spare per provisioned tier
+//!   (`input.redundancy = vec![1]`) and degraded-capacity spill
+//!   (`FailoverConfig`): while tier 0 is below its capacity watermark the
+//!   gateway routes its traffic up the ladder, and the hysteresis band
+//!   restores the planned boundaries once replicas are back.
+//!
+//! Like the other files in `examples/`, this is library-API reference
+//! source (the crate lives in `rust/`, which declares no example targets).
+//! The runnable equivalent is the CLI command CI smokes:
+//!
+//! ```bash
+//! cargo run --release --manifest-path rust/Cargo.toml -- \
+//!     autoscale --workload azure --arrivals diurnal:amp=0.6,period=300 \
+//!     --chaos examples/configs/chaos_plan.json \
+//!     --redundancy 1 --failover --out CHAOS_epochs.json
+//! ```
+
+use fleetopt::fleetsim::{simulate_autoscale_chaos, AutoscaleConfig, ChaosOpts, FaultPlan};
+use fleetopt::metrics::EpochMetrics;
+use fleetopt::planner::{plan_spec_sweep_gamma, PlanInput};
+use fleetopt::router::failover::FailoverConfig;
+use fleetopt::workload::arrivals::RateModel;
+use fleetopt::workload::traces;
+
+fn main() -> anyhow::Result<()> {
+    let w = traces::azure();
+    let model = RateModel::Diurnal {
+        base: 400.0,
+        amp: 0.6,
+        period_s: 300.0,
+        phase: 0.0,
+    };
+    let n = 40_000;
+    let faults = FaultPlan::from_file("examples/configs/chaos_plan.json")?;
+    let outage = faults.outages[0];
+    let cfg = AutoscaleConfig {
+        epoch_s: 4.0,
+        window_s: 8.0,
+        provision_delay_s: 2.0,
+        ..AutoscaleConfig::default()
+    };
+
+    // Policy 1: exact sizing, crashes land on a fleet with zero slack.
+    let input = PlanInput::new(w.clone(), model.rate_hint());
+    let spec = input.gpu.fleet_spec(&[w.b_short]);
+    let init = plan_spec_sweep_gamma(&input, &spec)?;
+    let bare = ChaosOpts {
+        faults: Some(faults.clone()),
+        failover: None,
+    };
+    let rep_none =
+        simulate_autoscale_chaos(&w, model.clone(), n, &input, init, &cfg, 42, &bare);
+
+    // Policy 2: N+1 spares sized through the planner's lower bound, plus
+    // cross-tier spill while tier 0 sits below its capacity watermark.
+    let mut input_k = input.clone();
+    input_k.redundancy = vec![1];
+    let init_k = plan_spec_sweep_gamma(&input_k, &spec)?;
+    let chaos = ChaosOpts {
+        faults: Some(faults),
+        failover: Some(FailoverConfig::default()),
+    };
+    let rep = simulate_autoscale_chaos(&w, model, n, &input_k, init_k, &cfg, 42, &chaos);
+
+    for e in &rep.epochs {
+        let hit = e.t_start_s < outage.start_s + outage.duration_s
+            && e.t_end_s > outage.start_s;
+        let marker = if hit { "  <- tier-0 outage" } else { "" };
+        println!("{}{}", e.summary_line(), marker);
+    }
+    println!(
+        "\nchaos trace: {} crash(es), {} in-flight kill(s) -> {} retry(ies), \
+         {} route(s) spilled across the degraded boundary",
+        rep.crashes, rep.killed_in_flight, rep.retries_total, rep.spilled
+    );
+    println!(
+        "none       : slo-ok {:3.0}% of {} epochs, {:.2} GPU-hours (${:.2})",
+        rep_none.slo_ok_frac * 100.0,
+        rep_none.epochs.len(),
+        rep_none.gpu_hours,
+        rep_none.cost
+    );
+    println!(
+        "n+1 + fo   : slo-ok {:3.0}% of {} epochs, {:.2} GPU-hours (${:.2}, \
+         +{:.1}% for the spares)",
+        rep.slo_ok_frac * 100.0,
+        rep.epochs.len(),
+        rep.gpu_hours,
+        rep.cost,
+        (rep.cost / rep_none.cost - 1.0) * 100.0
+    );
+    std::fs::write("chaos_epochs.json", EpochMetrics::series_to_json(&rep.epochs))?;
+    println!("per-epoch series written to chaos_epochs.json");
+    Ok(())
+}

@@ -240,6 +240,10 @@ pub struct SkuChoice {
     /// The SKU's service-rate multiplier, resolved here so the planner
     /// never needs catalog access on the sizing path.
     pub mu_scale: f64,
+    /// Spot-preemptible SKU: chaos runs draw preemption events against
+    /// tiers running on it (resolved here so the DES never needs catalog
+    /// access either).
+    pub preemptible: bool,
 }
 
 /// One tier of a K-tier fleet: a context window, the KV-slot count that
@@ -526,6 +530,7 @@ impl GpuProfile {
                 sku: Some(SkuChoice {
                     index: sku_idx as u16,
                     mu_scale: sku.mu_scale,
+                    preemptible: sku.preemptible,
                 }),
             }
         };

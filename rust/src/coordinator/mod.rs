@@ -10,6 +10,6 @@ pub mod serve;
 pub use controller::{replica_targets, ControllerConfig, LiveEpoch};
 pub use replica::{FinishedRequest, LiveRequest, Replica};
 pub use serve::{
-    serve, serve_autoscaled, serve_autoscaled_with, serve_with, AdmissionOpts,
-    AutoscaledServeReport, ServeConfig, ServeItem, ServeReport,
+    serve, serve_autoscaled, serve_autoscaled_with, serve_failover_with, serve_with,
+    AdmissionOpts, AutoscaledServeReport, FailoverOpts, ServeConfig, ServeItem, ServeReport,
 };

@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 use crate::coordinator::controller::{replica_targets, ControllerConfig, LiveEpoch};
 use crate::coordinator::replica::{FinishedRequest, LiveRequest, Replica};
 use crate::metrics::PoolMetrics;
+use crate::router::failover::{effective_gateway_config, FailoverConfig};
 use crate::router::memo::{CacheStats, RouteCache};
 use crate::router::{Gateway, GatewayConfig, RoutedRequest};
 use crate::runtime::{ModelRuntime, PoolKind};
@@ -63,6 +64,19 @@ impl Default for AdmissionOpts {
     }
 }
 
+/// Operator-declared degraded tiers for a live run (a zone outage, a SKU
+/// recall): routing runs on the failover-effective ladder — degraded
+/// boundaries dropped, the seam gamma tightened by `cfg.gamma_boost` —
+/// and every admitted request is remapped onto the surviving original
+/// tier's queue. With no tier degraded the routing is bit-identical to
+/// the plain serve path.
+#[derive(Clone, Debug)]
+pub struct FailoverOpts {
+    /// One flag per tier; `true` marks the tier's capacity as unusable.
+    pub degraded: Vec<bool>,
+    pub cfg: FailoverConfig,
+}
+
 /// The shared admission pipeline: gateway (+ optional route memo), the
 /// paced-arrival driver loop, and the enqueue/wake dispatch. One
 /// implementation serves both drivers — `serve` passes a no-op observer,
@@ -73,15 +87,38 @@ struct Admission {
     workers: usize,
     /// Summed per-request gateway seconds (for `mean_gateway_s`).
     total_s: f64,
+    /// Effective-tier → original-tier remap under degraded-capacity
+    /// failover (None = identity: the gateway routes on the full ladder).
+    tier_map: Option<Vec<usize>>,
 }
 
 impl Admission {
-    fn new(gateway_cfg: &GatewayConfig, opts: AdmissionOpts) -> Self {
+    fn new(
+        gateway_cfg: &GatewayConfig,
+        opts: AdmissionOpts,
+        tier_map: Option<Vec<usize>>,
+    ) -> Self {
         Admission {
             gateway: Gateway::new(gateway_cfg.clone()),
             cache: (opts.route_cache_cap > 0).then(|| RouteCache::new(opts.route_cache_cap)),
             workers: opts.gateway_workers,
             total_s: 0.0,
+            tier_map,
+        }
+    }
+
+    /// Per-original-tier routed counts: the gateway counts per *effective*
+    /// tier, so under failover the counts are folded back through the map.
+    fn n_routed(&self, k: usize) -> Vec<u64> {
+        match &self.tier_map {
+            Some(map) => {
+                let mut v = vec![0u64; k];
+                for (ei, &n) in self.gateway.n_routed.iter().enumerate() {
+                    v[map[ei]] += n;
+                }
+                v
+            }
+            None => self.gateway.n_routed.clone(),
         }
     }
 
@@ -130,6 +167,7 @@ impl Admission {
                 cache,
                 workers,
                 total_s,
+                tier_map,
             } = self;
             gateway.route_batch_with_opts(&batch, *workers, cache.as_mut(), |idx, routed| {
                 *total_s += routed.gateway_s;
@@ -140,12 +178,15 @@ impl Admission {
                     max_output: routed.max_output_tokens,
                     arrival: Instant::now(),
                 };
+                // Under failover the gateway routed on the effective ladder;
+                // land the request on the surviving original tier's queue.
+                let dest = tier_map.as_ref().map_or(routed.tier, |m| m[routed.tier]);
                 in_flight.fetch_add(1, Ordering::AcqRel);
                 {
-                    let mut q = pools[routed.tier].queue.lock().unwrap();
+                    let mut q = pools[dest].queue.lock().unwrap();
                     q.push_back(req);
                 }
-                pools[routed.tier].wake.notify_all();
+                pools[dest].wake.notify_all();
             });
             next = end;
         }
@@ -282,6 +323,33 @@ pub fn serve_with(
     items: Vec<ServeItem>,
     time_scale: f64,
 ) -> Result<ServeReport> {
+    serve_impl(artifacts_dir, cfg, opts, None, items, time_scale)
+}
+
+/// [`serve_with`] under degraded-capacity failover: tiers flagged in
+/// `fo.degraded` are dropped from the routing ladder and their traffic
+/// spills onto the survivors (down-spill re-qualified through C&R at the
+/// tightened seam gamma, up-spill admitted as-is). Their replica sets
+/// still start — a degraded tier's queue simply never receives work.
+pub fn serve_failover_with(
+    artifacts_dir: &std::path::Path,
+    cfg: &ServeConfig,
+    opts: AdmissionOpts,
+    fo: &FailoverOpts,
+    items: Vec<ServeItem>,
+    time_scale: f64,
+) -> Result<ServeReport> {
+    serve_impl(artifacts_dir, cfg, opts, Some(fo), items, time_scale)
+}
+
+fn serve_impl(
+    artifacts_dir: &std::path::Path,
+    cfg: &ServeConfig,
+    opts: AdmissionOpts,
+    fo: Option<&FailoverOpts>,
+    items: Vec<ServeItem>,
+    time_scale: f64,
+) -> Result<ServeReport> {
     let k = cfg.gateway.n_tiers();
     if cfg.replicas.len() != k {
         bail!(
@@ -289,6 +357,23 @@ pub fn serve_with(
             cfg.replicas.len()
         );
     }
+    let (route_cfg, tier_map) = match fo {
+        Some(f) => {
+            if f.degraded.len() != k {
+                bail!(
+                    "degraded flags ({}) must match tier count ({k})",
+                    f.degraded.len()
+                );
+            }
+            if f.degraded.iter().any(|&d| d) {
+                let (eff, map) = effective_gateway_config(&cfg.gateway, &f.degraded, &f.cfg);
+                (eff, Some(map))
+            } else {
+                (cfg.gateway.clone(), None)
+            }
+        }
+        None => (cfg.gateway.clone(), None),
+    };
     let manifest = crate::runtime::Manifest::load(artifacts_dir)?;
     check_boundaries_fit(&cfg.gateway, &manifest, k)?;
     let pools: Vec<Arc<PoolState>> = (0..k).map(|_| Arc::new(PoolState::new())).collect();
@@ -339,7 +424,7 @@ pub fn serve_with(
     }
 
     // Driver: the shared admission pipeline (no per-request observer).
-    let mut admission = Admission::new(&cfg.gateway, opts);
+    let mut admission = Admission::new(&route_cfg, opts, tier_map);
     let vocab = manifest.model.vocab as u32;
     let start = Instant::now();
     let n_items = items.len() as u64;
@@ -370,7 +455,7 @@ pub fn serve_with(
         duration_s,
         throughput_rps: completed as f64 / duration_s.max(1e-9),
         n_compressed: admission.gateway.n_compressed,
-        n_routed: admission.gateway.n_routed.clone(),
+        n_routed: admission.n_routed(k),
         mean_gateway_s: admission.total_s / n_items.max(1) as f64,
         route_cache: admission.cache_stats(),
         gateway_workers: opts.gateway_workers,
@@ -606,7 +691,7 @@ pub fn serve_autoscaled_with(
     // controller's estimator the *pre-compression* length estimate — the
     // planner applies its own band-compression accounting, so feeding it
     // post-compression lengths would double-count C&R.
-    let mut admission = Admission::new(&cfg.gateway, opts);
+    let mut admission = Admission::new(&cfg.gateway, opts, None);
     let vocab = manifest.model.vocab as u32;
     let n_items = items.len() as u64;
     admission.drive(

@@ -12,8 +12,12 @@ use crate::compress::extractive::compress;
 use crate::compress::fidelity;
 use crate::compress::tokenizer::count_tokens;
 use crate::config::{FleetSpec, GpuProfile, SkuCatalog};
-use crate::fleetsim::autoscale::{simulate_autoscale, AutoscaleConfig, AutoscaleReport};
+use crate::fleetsim::autoscale::{
+    simulate_autoscale, simulate_autoscale_chaos, AutoscaleConfig, AutoscaleReport, ChaosOpts,
+};
+use crate::fleetsim::faults::{FaultPlan, ReplicaFaults, TierOutage};
 use crate::fleetsim::fleet::{simulate_fleet_tiered, FleetSimResult};
+use crate::router::failover::FailoverConfig;
 use crate::fleetsim::sim::{simulate_pool, SimConfig};
 use crate::model::kv::cliff_row;
 use crate::planner::{
@@ -907,6 +911,182 @@ pub fn table10(lambda: f64, n_sim: usize) -> Table {
 }
 
 // ---------------------------------------------------------------------------
+// Table 11: redundancy policies under failure injection (chaos)
+// ---------------------------------------------------------------------------
+
+/// One Table-11 row: one (trace, fault intensity, policy) cell of the
+/// chaos study — SLO outcome, fault counters, and the GPU-cost premium
+/// the policy pays over the no-redundancy baseline on the *same* fault
+/// trace (identical plan seed, identical per-GPU failure streams).
+pub struct Table11Row {
+    pub workload: &'static str,
+    pub intensity: &'static str,
+    pub policy: &'static str,
+    pub slo_ok_frac: f64,
+    pub crashes: u64,
+    pub preemptions: u64,
+    pub killed: u64,
+    pub spilled: u64,
+    pub gpu_hours: f64,
+    pub cost: f64,
+    /// `cost / cost(no-redundancy) − 1` within the same intensity cell.
+    pub added_cost: f64,
+}
+
+/// The standard Table-11 fault plan at one of two intensities, scaled to
+/// the run horizon: `moderate` is replica churn alone (each replica
+/// expects ~1 crash per run), `heavy` triples the crash rate and takes
+/// the whole short tier out across the diurnal peak — the scenario the
+/// ROADMAP reliability item names.
+pub fn table11_faults(horizon_s: f64, heavy: bool, seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        replica: Some(ReplicaFaults {
+            mtbf_s: if heavy { horizon_s / 3.0 } else { horizon_s },
+            mttr_s: horizon_s / 50.0,
+        }),
+        spot: None,
+        outages: if heavy {
+            vec![TierOutage {
+                tier: 0,
+                start_s: horizon_s * 0.45,
+                duration_s: horizon_s * 0.10,
+            }]
+        } else {
+            Vec::new()
+        },
+    }
+}
+
+/// One fault intensity's three Table-11 rows: the same diurnal stream and
+/// the same fault plan under (1) no redundancy, (2) N+1 sizing, and
+/// (3) N+1 plus cross-tier failover. Policies share nothing but the seed,
+/// so they fan out over scoped workers like the Table-9 methods do.
+fn table11_intensity(
+    w: &Workload,
+    n: usize,
+    seed: u64,
+    epoch_s: f64,
+    model: &RateModel,
+    spec: &FleetSpec,
+    intensity: &'static str,
+    heavy: bool,
+) -> Vec<Table11Row> {
+    let horizon_est = n as f64 / 400.0;
+    let faults = table11_faults(horizon_est, heavy, seed);
+    let cfg = AutoscaleConfig {
+        epoch_s,
+        window_s: epoch_s * 2.0,
+        provision_delay_s: epoch_s * 0.5,
+        ..AutoscaleConfig::default()
+    };
+    let run = |redundancy: &[u64], failover: bool| {
+        let mut input0 = PlanInput::new(w.clone(), model.rate_hint());
+        input0.cfg.mc_samples = 8_000;
+        input0.redundancy = redundancy.to_vec();
+        let init = plan_spec_sweep_gamma(&input0, spec).expect("initial plan");
+        let chaos = ChaosOpts {
+            faults: Some(faults.clone()),
+            failover: failover.then(FailoverConfig::default),
+        };
+        simulate_autoscale_chaos(w, model.clone(), n, &input0, init, &cfg, seed, &chaos)
+    };
+    let policies: [(&'static str, &[u64], bool); 3] = [
+        ("none", &[], false),
+        ("n+1", &[1], false),
+        ("n+1+fo", &[1], true),
+    ];
+    let reps: Vec<AutoscaleReport> =
+        par_map_each(&policies, |&(_, red, fo)| run(red, fo));
+    let base_cost = reps[0].cost;
+    policies
+        .iter()
+        .zip(&reps)
+        .map(|(&(policy, _, _), r)| Table11Row {
+            workload: w.name,
+            intensity,
+            policy,
+            slo_ok_frac: r.slo_ok_frac,
+            crashes: r.crashes,
+            preemptions: r.preemptions,
+            killed: r.killed_in_flight,
+            spilled: r.spilled,
+            gpu_hours: r.gpu_hours,
+            cost: r.cost,
+            added_cost: r.cost / base_cost.max(1e-12) - 1.0,
+        })
+        .collect()
+}
+
+/// Compute the Table-11 rows for one workload: the Table-9 diurnal
+/// variant (one full cycle over the run) under the standard fault plan at
+/// both intensities. Deterministic per seed — the two intensity cells
+/// shard over the capped worker pool and keep their serial order.
+pub fn table11_rows(w: &Workload, n: usize, seed: u64) -> Vec<Table11Row> {
+    let spec = GpuProfile::a100_llama70b().fleet_spec(&[w.b_short]);
+    let horizon_est = n as f64 / 400.0;
+    let epoch_s = (horizon_est / 25.0).max(1.0);
+    let model = RateModel::Diurnal {
+        base: 400.0,
+        amp: 0.6,
+        period_s: horizon_est,
+        phase: 0.0,
+    };
+    let cells = [("moderate", false), ("heavy", true)];
+    let per_cell: Vec<Vec<Table11Row>> = par_map_each(&cells, |&(label, heavy)| {
+        table11_intensity(w, n, seed, epoch_s, &model, &spec, label, heavy)
+    });
+    per_cell.into_iter().flatten().collect()
+}
+
+/// Table 11 — what does surviving failures cost? No-redundancy vs N+1
+/// sizing vs N+1 with cross-tier failover, on identical fault traces.
+/// Acceptance (ROADMAP "Reliability"): with N+1 + failover the fleet
+/// holds the SLO budget through crashes and a whole-tier outage at a
+/// bounded GPU-cost premium over the no-redundancy baseline (the CI
+/// chaos smoke gates the same scenario end to end).
+pub fn table11(n: usize) -> Table {
+    let mut t = Table::new(
+        &format!(
+            "Table 11 — redundancy policies under failure injection ({n} requests/cell, diurnal arrivals)"
+        ),
+        &[
+            "Workload",
+            "Faults",
+            "Policy",
+            "SLO-ok epochs",
+            "Crashes",
+            "Killed",
+            "Spilled",
+            "GPU-hours",
+            "Cost ($)",
+            "Added cost",
+        ],
+    );
+    let ws = traces::all();
+    let items: Vec<(usize, &Workload)> = ws.iter().enumerate().collect();
+    let per_trace: Vec<Vec<Table11Row>> =
+        par_map_each(&items, |&(i, w)| table11_rows(w, n, 0x7AB11 + i as u64));
+    for rows in per_trace {
+        for r in rows {
+            t.row(&[
+                r.workload.to_string(),
+                r.intensity.to_string(),
+                r.policy.to_string(),
+                fmt_pct(r.slo_ok_frac),
+                r.crashes.to_string(),
+                r.killed.to_string(),
+                r.spilled.to_string(),
+                format!("{:.2}", r.gpu_hours),
+                format!("{:.2}", r.cost),
+                fmt_pct(r.added_cost),
+            ]);
+        }
+    }
+    t
+}
+
+// ---------------------------------------------------------------------------
 // helpers used by benches
 // ---------------------------------------------------------------------------
 
@@ -1044,6 +1224,32 @@ mod tests {
         assert!(r.rho_err_max < 0.25, "rho err {}", r.rho_err_max);
         // The rendered K = 3 table across all traces is exercised by the
         // CI `tables --only 10 --fast` run, not here (debug-mode cost).
+    }
+
+    #[test]
+    fn table11_policies_pay_for_redundancy_and_spill_under_outage() {
+        let w = traces::azure();
+        let rows = table11_rows(&w, 4_000, 7);
+        assert_eq!(rows.len(), 6, "2 intensities x 3 policies");
+        let policies: Vec<&str> = rows.iter().map(|r| r.policy).collect();
+        assert_eq!(policies, vec!["none", "n+1", "n+1+fo", "none", "n+1", "n+1+fo"]);
+        for r in &rows {
+            assert!(r.gpu_hours > 0.0, "{}/{}", r.intensity, r.policy);
+            assert!((0.0..=1.0).contains(&r.slo_ok_frac));
+            assert!(r.crashes > 0, "the fault plan must actually fire");
+        }
+        for chunk in rows.chunks(3) {
+            // The baseline defines the premium; spares never come free.
+            assert!(chunk[0].added_cost.abs() < 1e-12);
+            assert!(chunk[1].cost >= chunk[0].cost, "{}", chunk[1].intensity);
+            assert!(chunk[1].added_cost >= 0.0);
+        }
+        // The heavy cell's whole-tier outage must push traffic across the
+        // boundary when failover is armed — and only then.
+        let heavy_fo = &rows[5];
+        assert_eq!((heavy_fo.intensity, heavy_fo.policy), ("heavy", "n+1+fo"));
+        assert!(heavy_fo.spilled > 0, "outage with failover must spill");
+        assert_eq!(rows[4].spilled, 0, "no failover => no spill counting");
     }
 
     #[test]

@@ -35,10 +35,12 @@
 use std::collections::VecDeque;
 
 use crate::fleetsim::events::EventQueue;
+use crate::fleetsim::faults::FaultPlan;
 use crate::fleetsim::idle::IdleSet;
 use crate::metrics::{EpochDigest, EpochMetrics, EpochTierMetrics};
 use crate::planner::replan::{ReplanConfig, Replanner};
 use crate::planner::{PlanInput, TieredPlan};
+use crate::router::failover::{effective_routes, FailoverConfig, FailoverState};
 use crate::util::rng::Rng;
 use crate::workload::arrivals::{ArrivalProcess, NonstationaryArrivals, RateModel};
 use crate::workload::online::OnlineEstimator;
@@ -91,6 +93,21 @@ impl Default for AutoscaleConfig {
     }
 }
 
+/// Chaos options for [`simulate_autoscale_chaos`]: failure injection and
+/// the failure response. The default (no faults, no failover) keeps the
+/// simulation bit-identical to [`simulate_autoscale`] — chaos is a pure
+/// extension, never a behavior change (tested in
+/// `tests/chaos_conservation.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct ChaosOpts {
+    /// Seeded failure processes to inject (None = immortal fleet).
+    pub faults: Option<FaultPlan>,
+    /// Degraded-capacity failover: spill borderline traffic across tier
+    /// boundaries while a tier sits below its capacity watermark
+    /// (None = route on the planned boundaries regardless of health).
+    pub failover: Option<FailoverConfig>,
+}
+
 /// Whole-run results of an autoscaled simulation.
 #[derive(Debug)]
 pub struct AutoscaleReport {
@@ -118,6 +135,22 @@ pub struct AutoscaleReport {
     /// and were clamped to the current time (and logged) — 0 in a healthy
     /// run. Previously a `debug_assert` compiled out of release builds.
     pub time_travel_events: u64,
+    /// Replica crash events that struck a serving GPU (chaos runs only).
+    pub crashes: u64,
+    /// Spot preemptions that struck a serving GPU (chaos runs only).
+    pub preemptions: u64,
+    /// In-flight requests killed by a crash/preemption/outage and requeued
+    /// at the head of their tier's queue.
+    pub killed_in_flight: u64,
+    /// Total retry attempts across all requests; exactly equals
+    /// `killed_in_flight` (every kill is one retry — the conservation
+    /// identity `tests/chaos_conservation.rs` pins).
+    pub retries_total: u64,
+    /// Largest per-request retry count.
+    pub max_retry: u32,
+    /// Arrivals routed to a different tier than the healthy ladder would
+    /// have chosen, because failover dropped or tightened a boundary.
+    pub spilled: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -136,6 +169,19 @@ struct AGpu {
     draining: bool,
     alive: bool,
     t_iter: f64,
+    /// Crashed / preempted / in an outage: still provisioned (and billed —
+    /// a rebooting machine is not returned to the provider) but not
+    /// serving. Distinct from `!alive`, which means retired for good.
+    down: bool,
+    /// Bumped on every kill; events stamped with an older generation are
+    /// stale and ignored (a pending iteration or crash that outlived the
+    /// GPU state it was scheduled against). Always 0 with faults off.
+    gen: u32,
+    /// This GPU's independent failure stream (chaos runs only).
+    frng: Option<Rng>,
+    /// Repair time / classification of the next drawn failure.
+    fail_mttr: f64,
+    fail_preempt: bool,
 }
 
 impl AGpu {
@@ -147,6 +193,11 @@ impl AGpu {
             draining: false,
             alive: true,
             t_iter,
+            down: false,
+            gen: 0,
+            frng: None,
+            fail_mttr: 0.0,
+            fail_preempt: false,
         }
     }
 
@@ -203,6 +254,12 @@ struct Tier {
     // Whole-run counters.
     completed_total: u64,
     arrivals_total: u64,
+    /// Nested-outage depth (> 0 while a scheduled whole-tier outage is in
+    /// force; per-GPU restores are deferred until it lifts).
+    outage_depth: u32,
+    /// Whether this tier's SKU is spot-preemptible (chaos runs draw
+    /// preemption events only against preemptible tiers).
+    preemptible: bool,
 }
 
 impl Tier {
@@ -244,6 +301,8 @@ impl Tier {
             arrivals_epoch: 0,
             completed_total: 0,
             arrivals_total: 0,
+            outage_depth: 0,
+            preemptible: false,
         }
     }
 
@@ -261,11 +320,11 @@ impl Tier {
         self.last_t = t;
     }
 
-    /// Alive GPUs that are accepting work (not draining).
+    /// Alive GPUs that are accepting work (not draining, not down).
     fn n_active(&self) -> u64 {
         self.gpus
             .iter()
-            .filter(|g| g.alive && !g.draining)
+            .filter(|g| g.alive && !g.down && !g.draining)
             .count() as u64
     }
 
@@ -273,7 +332,8 @@ impl Tier {
     /// idempotent, called after any state change touching the GPU.
     fn sync_idle(&mut self, gi: usize) {
         let g = &self.gpus[gi];
-        self.idle.set(gi, g.alive && !g.draining && !g.iterating);
+        self.idle
+            .set(gi, g.alive && !g.down && !g.draining && !g.iterating);
     }
 
     /// The idle-most admitting GPU, if any (the arrival wake target). All
@@ -306,7 +366,7 @@ impl Tier {
         loop {
             {
                 let g = &self.gpus[gi];
-                if !g.alive || g.draining || g.free_slots() == 0 {
+                if !g.alive || g.down || g.draining || g.free_slots() == 0 {
                     return;
                 }
             }
@@ -373,16 +433,53 @@ impl Tier {
             }
         }
     }
+
+    /// Take GPU `gi` down: kill its in-flight requests (requeued at the
+    /// head of the tier queue in request order, each counted as a retry),
+    /// invalidate its pending events via the generation bump, and drop it
+    /// from the admitting set. The GPU stays provisioned (and billed)
+    /// until restored or retired. Returns the number of kills.
+    fn take_down(&mut self, gi: usize, retries: &mut [u32]) -> u64 {
+        let g = &mut self.gpus[gi];
+        debug_assert!(g.alive && !g.down, "taking down a dead/down GPU");
+        let mut killed: Vec<usize> = g.active.iter().map(|a| a.req).collect();
+        g.active.clear();
+        g.iterating = false;
+        g.gen = g.gen.wrapping_add(1);
+        g.down = true;
+        killed.sort_unstable();
+        // push_front in descending request order leaves the queue head at
+        // the lowest request index — retried work goes back first-in-line.
+        for &req in killed.iter().rev() {
+            self.queue.push_front(req);
+            retries[req] += 1;
+        }
+        self.busy_slots -= killed.len() as u64;
+        self.sync_idle(gi);
+        killed.len() as u64
+    }
 }
 
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrival(usize),
-    /// (tier, gpu index)
-    Iteration(usize, usize),
+    /// (tier, gpu index, generation) — stale generations are skipped
+    /// (the GPU was killed after this iteration was scheduled). The
+    /// generation is always 0 with faults off, so the fault-free event
+    /// stream is unchanged payload-for-payload.
+    Iteration(usize, usize, u32),
     /// (tier, GPU count) — scale-up materializing after the delay.
     Provision(usize, u64),
     Epoch,
+    /// (tier, gpu, generation) — a drawn crash/preemption strikes. Never
+    /// scheduled with faults off.
+    Crash(usize, usize, u32),
+    /// (tier, gpu, generation) — a killed GPU rejoins after its repair
+    /// time plus the provisioning (cold-start) delay.
+    Restore(usize, usize, u32),
+    /// Scheduled whole-tier outage window opens / closes.
+    OutageStart(usize),
+    OutageEnd(usize),
 }
 
 /// The queue-wait budget a tier's SLO check compares against — the exact
@@ -421,15 +518,72 @@ fn maybe_schedule_iteration(
     ti: usize,
     gi: usize,
 ) {
-    let (alive, busy, iterating, t_iter) = {
+    let (alive, busy, iterating, t_iter, gen) = {
         let g = &tiers[ti].gpus[gi];
-        (g.alive, g.n_busy(), g.iterating, g.t_iter)
+        (
+            g.alive && !g.down,
+            g.n_busy(),
+            g.iterating,
+            g.t_iter,
+            g.gen,
+        )
     };
     if alive && busy > 0 && !iterating {
         tiers[ti].gpus[gi].iterating = true;
-        events.schedule(t + t_iter, Ev::Iteration(ti, gi));
+        events.schedule(t + t_iter, Ev::Iteration(ti, gi, gen));
     }
     tiers[ti].sync_idle(gi);
+}
+
+/// Draw GPU `gi`'s next failure from its seeded stream and schedule the
+/// crash, creating the stream on first touch. No-op when no failure
+/// process applies to this tier.
+fn arm_gpu_fault(
+    tier: &mut Tier,
+    events: &mut EventQueue<Ev>,
+    t: f64,
+    ti: usize,
+    gi: usize,
+    fp: &FaultPlan,
+    time_travel: &mut u64,
+) {
+    let preemptible = tier.preemptible;
+    let g = &mut tier.gpus[gi];
+    if g.frng.is_none() {
+        g.frng = Some(fp.gpu_rng(ti, gi as u64));
+    }
+    let rng = g.frng.as_mut().expect("just set");
+    let Some(d) = fp.draw(rng, preemptible) else {
+        return;
+    };
+    g.fail_mttr = d.mttr_s;
+    g.fail_preempt = d.preemption;
+    let gen = g.gen;
+    schedule_logged(events, t + d.dt_s, Ev::Crash(ti, gi, gen), time_travel);
+}
+
+/// Re-derive the failover state and the effective routing vectors after a
+/// capacity or boundary change. `None` in `eff` means "route on the
+/// planned vectors" — the case whenever failover is disabled or every
+/// tier is healthy, so an armed-but-never-engaged failover routes
+/// bit-identically to no failover at all.
+#[allow(clippy::type_complexity)]
+fn refresh_failover(
+    tiers: &[Tier],
+    boundaries: &[u32],
+    gammas: &[f64],
+    fo: Option<&FailoverConfig>,
+    st: &mut FailoverState,
+    eff: &mut Option<(Vec<u32>, Vec<f64>, Vec<usize>)>,
+) {
+    let Some(cfg) = fo else {
+        return;
+    };
+    let mut any = false;
+    for (ti, tier) in tiers.iter().enumerate() {
+        any |= st.observe(ti, tier.n_active(), tier.target.max(1), cfg);
+    }
+    *eff = any.then(|| effective_routes(boundaries, gammas, st.degraded(), cfg.gamma_boost));
 }
 
 /// Rescale the fleet to a freshly adopted plan. Routing flips to the new
@@ -464,6 +618,7 @@ fn apply_scaling(
         if switched {
             tier.slo_s = spec_t.slo_or(slo_default_s);
             tier.cost_hr = spec_t.cost_hr;
+            tier.preemptible = spec_t.sku.is_some_and(|s| s.preemptible);
         }
         // Re-derive the epoch SLO's wait budget from this replan's
         // calibration (the residual distribution shifts with gamma).
@@ -607,9 +762,43 @@ pub fn simulate_autoscale(
     cfg: &AutoscaleConfig,
     seed: u64,
 ) -> AutoscaleReport {
+    simulate_autoscale_chaos(w, model, n, input, initial, cfg, seed, &ChaosOpts::default())
+}
+
+/// [`simulate_autoscale`] with failure injection and failover response
+/// (see [`ChaosOpts`]). With the default opts this *is*
+/// `simulate_autoscale`, bit for bit: no fault event is ever scheduled,
+/// every generation stamp stays 0, and routing never leaves the planned
+/// boundaries.
+///
+/// Under a fault plan: a crash/preemption/outage kills the victim GPU's
+/// in-flight requests (requeued at the head of their tier queue with a
+/// retry count — conservation holds exactly: every request completes once
+/// and `retries_total == killed_in_flight`), the machine stays billed
+/// while down, and a restore pays the drawn repair time *plus* the
+/// provisioning cold-start delay before serving again. With failover on,
+/// arrivals route on the degraded effective ladder
+/// ([`crate::router::failover::effective_routes`]) while any tier sits
+/// below its watermark, with hysteresis on recovery.
+///
+/// A negative `provision_delay_s` is deliberately *not* rejected here:
+/// it aims controller events into the past, which the checked scheduler
+/// refuses and re-files at the current time, incrementing
+/// [`AutoscaleReport::time_travel_events`] — the unit-testable error
+/// path the CLI and CI gate on (the CLI validates user input separately).
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_autoscale_chaos(
+    w: &Workload,
+    model: RateModel,
+    n: usize,
+    input: &PlanInput,
+    initial: TieredPlan,
+    cfg: &AutoscaleConfig,
+    seed: u64,
+    chaos: &ChaosOpts,
+) -> AutoscaleReport {
     assert!(n > 0, "need at least one request");
     assert!(cfg.epoch_s > 0.0 && cfg.window_s > 0.0);
-    assert!(cfg.provision_delay_s >= 0.0);
     assert!(
         cfg.min_gpus_per_tier >= 1,
         "a zero-GPU tier floor can starve queued traffic"
@@ -642,14 +831,16 @@ pub fn simulate_autoscale(
         .map(|(pool, ts)| {
             let n0 = pool.n_gpus.max(cfg.min_gpus_per_tier);
             let slo = ts.slo_or(input.slo.p99_ttft_s);
-            Tier::new(
+            let mut tier = Tier::new(
                 n0,
                 ts.n_max,
                 gpu_prof.t_iter_s(ts.n_max),
                 ts.cost_hr,
                 slo,
                 wait_budget_s(slo, &pool.svc),
-            )
+            );
+            tier.preemptible = ts.sku.is_some_and(|s| s.preemptible);
+            tier
         })
         .collect();
 
@@ -659,6 +850,42 @@ pub fn simulate_autoscale(
         events.schedule(r.arrival_s, Ev::Arrival(i));
     }
     schedule_logged(&mut events, cfg.epoch_s, Ev::Epoch, &mut time_travel);
+
+    // Chaos wiring: arm every initial GPU's failure stream and schedule
+    // the planned outage windows. None of this runs with faults off, so
+    // the event sequence (and hence every tie-break) is unchanged.
+    let faults = chaos.faults.as_ref();
+    let fo_cfg = chaos.failover.as_ref();
+    let mut fo_state = FailoverState::new(k);
+    let mut eff: Option<(Vec<u32>, Vec<f64>, Vec<usize>)> = None;
+    let mut retries: Vec<u32> = vec![0; n];
+    let mut crashes = 0u64;
+    let mut preemptions = 0u64;
+    let mut killed_in_flight = 0u64;
+    let mut spilled = 0u64;
+    if let Some(fp) = faults {
+        for ti in 0..tiers.len() {
+            for gi in 0..tiers[ti].gpus.len() {
+                arm_gpu_fault(&mut tiers[ti], &mut events, 0.0, ti, gi, fp, &mut time_travel);
+            }
+        }
+        for o in &fp.outages {
+            if o.tier < k {
+                schedule_logged(
+                    &mut events,
+                    o.start_s,
+                    Ev::OutageStart(o.tier),
+                    &mut time_travel,
+                );
+                schedule_logged(
+                    &mut events,
+                    o.start_s + o.duration_s,
+                    Ev::OutageEnd(o.tier),
+                    &mut time_travel,
+                );
+            }
+        }
+    }
 
     let mut estimator = OnlineEstimator::new(cfg.window_s);
     let mut replanner = Replanner::new(cfg.replan.clone(), initial);
@@ -673,11 +900,17 @@ pub fn simulate_autoscale(
 
     while let Some((t, ev)) = events.pop() {
         if completed_total == n as u64 {
-            // All work done: trailing controller/provision events are
-            // inert (capacity added after the horizon would cost money
-            // for no traffic — and would skew the GPU-hour integrals).
+            // All work done: trailing controller/provision/fault events
+            // are inert (capacity added after the horizon would cost
+            // money for no traffic — and a crash-restore cycle with no
+            // traffic left would never terminate).
             match ev {
-                Ev::Epoch | Ev::Provision(..) => continue,
+                Ev::Epoch
+                | Ev::Provision(..)
+                | Ev::Crash(..)
+                | Ev::Restore(..)
+                | Ev::OutageStart(_)
+                | Ev::OutageEnd(_) => continue,
                 _ => {}
             }
         }
@@ -686,14 +919,43 @@ pub fn simulate_autoscale(
             Ev::Arrival(i) => {
                 estimator.observe(t, requests[i].l_total);
                 let r = &requests[i];
-                let (ti, l_in, comp) = crate::fleetsim::fleet::route_request(
-                    r.l_total,
-                    r.l_in,
-                    r.l_out,
-                    r.category.compressible(),
-                    &boundaries,
-                    &gammas,
-                );
+                let (ti, l_in, comp) = match &eff {
+                    // Degraded ladder in force: route on the effective
+                    // vectors, map back to the physical tier, and count
+                    // the spill against what the healthy ladder would
+                    // have chosen.
+                    Some((eb, eg, map)) => {
+                        let (eti, l_in, comp) = crate::fleetsim::fleet::route_request(
+                            r.l_total,
+                            r.l_in,
+                            r.l_out,
+                            r.category.compressible(),
+                            eb,
+                            eg,
+                        );
+                        let ti = map[eti];
+                        let (oti, _, _) = crate::fleetsim::fleet::route_request(
+                            r.l_total,
+                            r.l_in,
+                            r.l_out,
+                            r.category.compressible(),
+                            &boundaries,
+                            &gammas,
+                        );
+                        if oti != ti {
+                            spilled += 1;
+                        }
+                        (ti, l_in, comp)
+                    }
+                    None => crate::fleetsim::fleet::route_request(
+                        r.l_total,
+                        r.l_in,
+                        r.l_out,
+                        r.category.compressible(),
+                        &boundaries,
+                        &gammas,
+                    ),
+                };
                 l_in_routed[i] = l_in;
                 if comp {
                     n_compressed += 1;
@@ -711,7 +973,11 @@ pub fn simulate_autoscale(
                     maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
                 }
             }
-            Ev::Iteration(ti, gi) => {
+            Ev::Iteration(ti, gi, gen) => {
+                if tiers[ti].gpus[gi].gen != gen {
+                    // Scheduled against a GPU state a kill invalidated.
+                    continue;
+                }
                 let tier = &mut tiers[ti];
                 tier.integrate(t);
                 let gpu = &mut tier.gpus[gi];
@@ -777,9 +1043,155 @@ pub fn simulate_autoscale(
                 };
                 let len = tiers[ti].gpus.len();
                 for gi in len - added..len {
+                    if tiers[ti].outage_depth > 0 {
+                        // Born into a tier-wide outage: provisioned (and
+                        // billed) but down until the window lifts.
+                        tiers[ti].gpus[gi].down = true;
+                        tiers[ti].sync_idle(gi);
+                        continue;
+                    }
+                    if let Some(fp) = faults {
+                        arm_gpu_fault(&mut tiers[ti], &mut events, t, ti, gi, fp, &mut time_travel);
+                    }
                     tiers[ti].admit_into(gi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
                     maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
                 }
+                refresh_failover(&tiers, &boundaries, &gammas, fo_cfg, &mut fo_state, &mut eff);
+            }
+            Ev::Crash(ti, gi, gen) => {
+                let (alive, down, cur_gen, draining, preempt, mttr) = {
+                    let g = &tiers[ti].gpus[gi];
+                    (g.alive, g.down, g.gen, g.draining, g.fail_preempt, g.fail_mttr)
+                };
+                if !alive || down || cur_gen != gen {
+                    // A retire, an earlier kill, or an outage beat us here.
+                    continue;
+                }
+                if preempt {
+                    preemptions += 1;
+                } else {
+                    crashes += 1;
+                }
+                tiers[ti].integrate(t);
+                killed_in_flight += tiers[ti].take_down(gi, &mut retries);
+                if draining {
+                    // The scale-down victim died before draining: it can
+                    // retire on the spot, nothing left to serve out.
+                    tiers[ti].gpus[gi].down = false;
+                    tiers[ti].retire(gi);
+                } else if tiers[ti].outage_depth == 0 {
+                    // Restart pays the repair time plus the same cold
+                    // provisioning delay as a fresh scale-up. During an
+                    // outage the tier-wide OutageEnd revives instead.
+                    let new_gen = tiers[ti].gpus[gi].gen;
+                    schedule_logged(
+                        &mut events,
+                        t + mttr + cfg.provision_delay_s,
+                        Ev::Restore(ti, gi, new_gen),
+                        &mut time_travel,
+                    );
+                }
+                // The kill may have stranded requeued work while other
+                // GPUs sit idle (idle GPUs are only woken by arrivals):
+                // wake them now.
+                while !tiers[ti].queue.is_empty() {
+                    let Some(wi) = tiers[ti].wake_candidate() else {
+                        break;
+                    };
+                    tiers[ti].admit_into(wi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
+                    if tiers[ti].gpus[wi].n_busy() == 0 {
+                        break;
+                    }
+                    maybe_schedule_iteration(&mut tiers, &mut events, t, ti, wi);
+                }
+                refresh_failover(&tiers, &boundaries, &gammas, fo_cfg, &mut fo_state, &mut eff);
+            }
+            Ev::Restore(ti, gi, gen) => {
+                let (alive, down, cur_gen, draining) = {
+                    let g = &tiers[ti].gpus[gi];
+                    (g.alive, g.down, g.gen, g.draining)
+                };
+                if !alive || !down || cur_gen != gen {
+                    continue;
+                }
+                if tiers[ti].outage_depth > 0 {
+                    // Personal restore landing inside a tier-wide outage
+                    // window defers to OutageEnd's mass revive.
+                    continue;
+                }
+                tiers[ti].integrate(t);
+                tiers[ti].gpus[gi].down = false;
+                if draining {
+                    // Marked for scale-down while it was dead: it comes
+                    // back empty, so it retires immediately.
+                    tiers[ti].retire(gi);
+                } else {
+                    tiers[ti].sync_idle(gi);
+                    if let Some(fp) = faults {
+                        arm_gpu_fault(&mut tiers[ti], &mut events, t, ti, gi, fp, &mut time_travel);
+                    }
+                    tiers[ti].admit_into(gi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
+                    maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
+                }
+                refresh_failover(&tiers, &boundaries, &gammas, fo_cfg, &mut fo_state, &mut eff);
+            }
+            Ev::OutageStart(ti) => {
+                tiers[ti].outage_depth += 1;
+                if tiers[ti].outage_depth == 1 {
+                    tiers[ti].integrate(t);
+                    for gi in 0..tiers[ti].gpus.len() {
+                        let (alive, down, draining) = {
+                            let g = &tiers[ti].gpus[gi];
+                            (g.alive, g.down, g.draining)
+                        };
+                        if !alive || down {
+                            continue;
+                        }
+                        killed_in_flight += tiers[ti].take_down(gi, &mut retries);
+                        if draining {
+                            tiers[ti].gpus[gi].down = false;
+                            tiers[ti].retire(gi);
+                        }
+                    }
+                }
+                refresh_failover(&tiers, &boundaries, &gammas, fo_cfg, &mut fo_state, &mut eff);
+            }
+            Ev::OutageEnd(ti) => {
+                if tiers[ti].outage_depth > 0 {
+                    tiers[ti].outage_depth -= 1;
+                }
+                if tiers[ti].outage_depth == 0 {
+                    tiers[ti].integrate(t);
+                    for gi in 0..tiers[ti].gpus.len() {
+                        let (alive, down, draining) = {
+                            let g = &tiers[ti].gpus[gi];
+                            (g.alive, g.down, g.draining)
+                        };
+                        if !alive || !down {
+                            continue;
+                        }
+                        tiers[ti].gpus[gi].down = false;
+                        if draining {
+                            tiers[ti].retire(gi);
+                            continue;
+                        }
+                        tiers[ti].sync_idle(gi);
+                        if let Some(fp) = faults {
+                            arm_gpu_fault(
+                                &mut tiers[ti],
+                                &mut events,
+                                t,
+                                ti,
+                                gi,
+                                fp,
+                                &mut time_travel,
+                            );
+                        }
+                        tiers[ti].admit_into(gi, t, &arrival_of, &l_in_routed, &l_out_of, chunk);
+                        maybe_schedule_iteration(&mut tiers, &mut events, t, ti, gi);
+                    }
+                }
+                refresh_failover(&tiers, &boundaries, &gammas, fo_cfg, &mut fo_state, &mut eff);
             }
             Ev::Epoch => {
                 for tier in tiers.iter_mut() {
@@ -817,6 +1229,16 @@ pub fn simulate_autoscale(
                             &mut gammas,
                             input.slo.p99_ttft_s,
                             &mut time_travel,
+                        );
+                        // Boundaries, gammas, and targets may all have
+                        // moved; re-derive the failover view against them.
+                        refresh_failover(
+                            &tiers,
+                            &boundaries,
+                            &gammas,
+                            fo_cfg,
+                            &mut fo_state,
+                            &mut eff,
                         );
                     }
                 }
@@ -888,5 +1310,11 @@ pub fn simulate_autoscale(
         final_gpus: tiers.iter().map(|x| x.n_alive).collect(),
         epochs,
         time_travel_events,
+        crashes,
+        preemptions,
+        killed_in_flight,
+        retries_total: retries.iter().map(|&r| r as u64).sum(),
+        max_retry: retries.iter().copied().max().unwrap_or(0),
+        spilled,
     }
 }

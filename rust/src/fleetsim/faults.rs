@@ -1,0 +1,396 @@
+//! Deterministic failure injection for the fleet DES (chaos testing).
+//!
+//! A [`FaultPlan`] is a pure description of the failure processes a run
+//! injects: per-replica crash–restart (exponential MTBF/MTTR), scheduled
+//! whole-tier outages, and spot preemptions for `preemptible` SKUs. It is
+//! deterministic by construction — every GPU draws its failure times from
+//! its own seeded stream keyed by `(plan seed, tier, gpu index)`, so the
+//! same plan against the same fleet produces the same fault trace
+//! regardless of event interleaving, and a disabled plan injects nothing
+//! (the DES is then bit-identical to a run without chaos wired in at all;
+//! property-tested in `tests/chaos_conservation.rs`).
+//!
+//! GPU slots in the simulators are append-only (retired GPUs keep their
+//! index), so the `(tier, gpu index)` key never aliases two machines.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Per-replica crash–restart process: exponential time-to-failure with
+/// mean `mtbf_s`, fixed repair time `mttr_s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ReplicaFaults {
+    pub mtbf_s: f64,
+    pub mttr_s: f64,
+}
+
+/// Spot-preemption process, applied only to GPUs on `preemptible` SKUs:
+/// exponential time-to-preemption with mean `mtbp_s`, reclaim `mttr_s`.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpotFaults {
+    pub mtbp_s: f64,
+    pub mttr_s: f64,
+}
+
+/// One scheduled whole-tier outage window.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct TierOutage {
+    pub tier: usize,
+    pub start_s: f64,
+    pub duration_s: f64,
+}
+
+/// A seeded, deterministic fault plan (see module docs).
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub replica: Option<ReplicaFaults>,
+    pub spot: Option<SpotFaults>,
+    pub outages: Vec<TierOutage>,
+}
+
+/// One drawn failure: it strikes `dt_s` after the draw point and takes
+/// `mttr_s` to repair (restart additionally pays the simulator's
+/// provisioning delay where one exists).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailureDraw {
+    pub dt_s: f64,
+    pub mttr_s: f64,
+    /// True for a spot preemption, false for a replica crash.
+    pub preemption: bool,
+}
+
+fn fault_f64(j: &Json, key: &str) -> Result<f64> {
+    let v = j
+        .get(key)
+        .with_context(|| format!("fault plan: missing `{key}`"))?
+        .as_f64()
+        .with_context(|| format!("fault plan: `{key}` must be a number"))?;
+    if !(v > 0.0) || !v.is_finite() {
+        bail!("fault plan: `{key}` must be finite and > 0, got {v}");
+    }
+    Ok(v)
+}
+
+impl FaultPlan {
+    /// Parse the chaos-plan JSON schema (see `examples/configs/
+    /// chaos_plan.json` and the README "Failure model" section):
+    ///
+    /// ```json
+    /// {
+    ///   "seed": 7,
+    ///   "replica": {"mtbf_s": 300.0, "mttr_s": 5.0},
+    ///   "spot":    {"mtbp_s": 600.0, "mttr_s": 20.0},
+    ///   "outages": [{"tier": 1, "start_s": 60.0, "duration_s": 20.0}]
+    /// }
+    /// ```
+    ///
+    /// `replica`, `spot`, and `outages` are each optional; an empty object
+    /// is a valid (inert) plan.
+    pub fn from_json(j: &Json) -> Result<FaultPlan> {
+        let seed = j.get("seed").and_then(|s| s.as_f64()).unwrap_or(0.0) as u64;
+        let replica = match j.get("replica") {
+            Some(r) => Some(ReplicaFaults {
+                mtbf_s: fault_f64(r, "mtbf_s")?,
+                mttr_s: fault_f64(r, "mttr_s")?,
+            }),
+            None => None,
+        };
+        let spot = match j.get("spot") {
+            Some(s) => Some(SpotFaults {
+                mtbp_s: fault_f64(s, "mtbp_s")?,
+                mttr_s: fault_f64(s, "mttr_s")?,
+            }),
+            None => None,
+        };
+        let mut outages = Vec::new();
+        if let Some(arr) = j.get("outages") {
+            let arr = arr
+                .as_arr()
+                .context("fault plan: `outages` must be an array")?;
+            for o in arr {
+                let tier = o
+                    .get("tier")
+                    .and_then(|t| t.as_usize())
+                    .context("fault plan: outage needs an integer `tier`")?;
+                let start_s = o
+                    .get("start_s")
+                    .and_then(|t| t.as_f64())
+                    .context("fault plan: outage needs `start_s`")?;
+                if start_s < 0.0 || !start_s.is_finite() {
+                    bail!("fault plan: outage start_s must be >= 0, got {start_s}");
+                }
+                outages.push(TierOutage {
+                    tier,
+                    start_s,
+                    duration_s: fault_f64(o, "duration_s")?,
+                });
+            }
+        }
+        Ok(FaultPlan {
+            seed,
+            replica,
+            spot,
+            outages,
+        })
+    }
+
+    /// Load a plan from a JSON file (the `--chaos` CLI path).
+    pub fn from_file(path: &str) -> Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading fault plan {path}"))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {path}: {e}"))?;
+        FaultPlan::from_json(&j)
+    }
+
+    /// Whether any GPU-level process applies to a GPU on a tier with the
+    /// given preemptibility.
+    pub fn has_gpu_faults(&self, preemptible: bool) -> bool {
+        self.replica.is_some() || (preemptible && self.spot.is_some())
+    }
+
+    /// The independent failure stream for GPU `gpu` of tier `tier` —
+    /// FNV-1a over the key, xored into the plan seed. GPU indices are
+    /// append-only in both simulators, so streams never alias.
+    pub fn gpu_rng(&self, tier: usize, gpu: u64) -> Rng {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for b in (tier as u64)
+            .to_le_bytes()
+            .iter()
+            .chain(gpu.to_le_bytes().iter())
+        {
+            h = (h ^ *b as u64).wrapping_mul(0x0000_0100_0000_01b3);
+        }
+        Rng::new(self.seed ^ h)
+    }
+
+    /// Draw the next failure on one GPU's stream: the superposition of the
+    /// replica-crash and (when `preemptible`) spot-preemption processes,
+    /// classified by a Bernoulli split of the combined rate. Returns
+    /// `None` when no process applies. Exactly two variates are consumed
+    /// per draw, so streams stay aligned across configurations with the
+    /// same set of active processes.
+    pub fn draw(&self, rng: &mut Rng, preemptible: bool) -> Option<FailureDraw> {
+        let r_crash = self.replica.map_or(0.0, |r| 1.0 / r.mtbf_s);
+        let r_spot = if preemptible {
+            self.spot.map_or(0.0, |s| 1.0 / s.mtbp_s)
+        } else {
+            0.0
+        };
+        let rate = r_crash + r_spot;
+        if rate <= 0.0 {
+            return None;
+        }
+        let dt_s = rng.exp(rate);
+        let preemption = rng.bool(r_spot / rate);
+        let mttr_s = if preemption {
+            self.spot.expect("spot rate > 0").mttr_s
+        } else {
+            self.replica.expect("crash rate > 0").mttr_s
+        };
+        Some(FailureDraw {
+            dt_s,
+            mttr_s,
+            preemption,
+        })
+    }
+
+    /// Outages scheduled against tier `tier`, in start order.
+    pub fn tier_outages(&self, tier: usize) -> Vec<TierOutage> {
+        let mut v: Vec<TierOutage> = self
+            .outages
+            .iter()
+            .copied()
+            .filter(|o| o.tier == tier)
+            .collect();
+        v.sort_by(|a, b| a.start_s.total_cmp(&b.start_s));
+        v
+    }
+
+    /// Project the plan onto a single pool (tier `tier`) for the one-pool
+    /// simulator: `None` when nothing in the plan can touch that pool, so
+    /// the caller keeps the verbatim fault-free path.
+    pub fn pool(&self, tier: usize, preemptible: bool) -> Option<PoolFaultPlan> {
+        let outages = self.tier_outages(tier);
+        if !self.has_gpu_faults(preemptible) && outages.is_empty() {
+            return None;
+        }
+        Some(PoolFaultPlan {
+            plan: FaultPlan {
+                seed: self.seed,
+                replica: self.replica,
+                spot: if preemptible { self.spot } else { None },
+                outages,
+            },
+            tier,
+            preemptible,
+        })
+    }
+
+    /// Serialize back to the JSON schema (round-trips `from_json`).
+    pub fn to_json(&self) -> Json {
+        let mut m = BTreeMap::new();
+        m.insert("seed".to_string(), Json::Num(self.seed as f64));
+        if let Some(r) = self.replica {
+            let mut rm = BTreeMap::new();
+            rm.insert("mtbf_s".to_string(), Json::Num(r.mtbf_s));
+            rm.insert("mttr_s".to_string(), Json::Num(r.mttr_s));
+            m.insert("replica".to_string(), Json::Obj(rm));
+        }
+        if let Some(s) = self.spot {
+            let mut sm = BTreeMap::new();
+            sm.insert("mtbp_s".to_string(), Json::Num(s.mtbp_s));
+            sm.insert("mttr_s".to_string(), Json::Num(s.mttr_s));
+            m.insert("spot".to_string(), Json::Obj(sm));
+        }
+        if !self.outages.is_empty() {
+            let arr = self
+                .outages
+                .iter()
+                .map(|o| {
+                    let mut om = BTreeMap::new();
+                    om.insert("tier".to_string(), Json::Num(o.tier as f64));
+                    om.insert("start_s".to_string(), Json::Num(o.start_s));
+                    om.insert("duration_s".to_string(), Json::Num(o.duration_s));
+                    Json::Obj(om)
+                })
+                .collect();
+            m.insert("outages".to_string(), Json::Arr(arr));
+        }
+        Json::Obj(m)
+    }
+}
+
+/// A [`FaultPlan`] projected onto one pool (see [`FaultPlan::pool`]): the
+/// single-pool simulator's view — GPU streams stay keyed by the original
+/// tier index so they match the fleet-level plan machine for machine.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PoolFaultPlan {
+    plan: FaultPlan,
+    tier: usize,
+    preemptible: bool,
+}
+
+impl PoolFaultPlan {
+    pub fn gpu_rng(&self, gpu: u64) -> Rng {
+        self.plan.gpu_rng(self.tier, gpu)
+    }
+
+    pub fn draw(&self, rng: &mut Rng) -> Option<FailureDraw> {
+        self.plan.draw(rng, self.preemptible)
+    }
+
+    /// This pool's outage windows, start-ordered.
+    pub fn outages(&self) -> &[TierOutage] {
+        &self.plan.outages
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn plan() -> FaultPlan {
+        FaultPlan {
+            seed: 7,
+            replica: Some(ReplicaFaults {
+                mtbf_s: 300.0,
+                mttr_s: 5.0,
+            }),
+            spot: Some(SpotFaults {
+                mtbp_s: 600.0,
+                mttr_s: 20.0,
+            }),
+            outages: vec![TierOutage {
+                tier: 1,
+                start_s: 60.0,
+                duration_s: 20.0,
+            }],
+        }
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let p = plan();
+        let q = FaultPlan::from_json(&p.to_json()).expect("round trip");
+        assert_eq!(p, q);
+        let empty = FaultPlan::from_json(&Json::parse("{}").unwrap()).expect("empty plan");
+        assert_eq!(empty, FaultPlan::default());
+        assert!(!empty.has_gpu_faults(true));
+        assert!(empty.pool(0, true).is_none());
+    }
+
+    #[test]
+    fn invalid_plans_are_rejected() {
+        let bad = Json::parse(r#"{"replica": {"mtbf_s": -1.0, "mttr_s": 5.0}}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"replica": {"mtbf_s": 10.0}}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+        let bad = Json::parse(r#"{"outages": [{"tier": 0, "duration_s": 1.0}]}"#).unwrap();
+        assert!(FaultPlan::from_json(&bad).is_err());
+    }
+
+    #[test]
+    fn draws_are_deterministic_per_gpu_stream() {
+        let p = plan();
+        let mut a = p.gpu_rng(0, 3);
+        let mut b = p.gpu_rng(0, 3);
+        let da = p.draw(&mut a, false).expect("crash process active");
+        let db = p.draw(&mut b, false).expect("crash process active");
+        assert_eq!(da, db);
+        assert!(!da.preemption, "non-preemptible tiers never see spot events");
+        assert_eq!(da.mttr_s, 5.0);
+        // Distinct GPUs get distinct streams.
+        let mut c = p.gpu_rng(0, 4);
+        let dc = p.draw(&mut c, false).expect("crash process active");
+        assert_ne!(da.dt_s, dc.dt_s);
+        // Distinct tiers too.
+        let mut d = p.gpu_rng(1, 3);
+        let dd = p.draw(&mut d, false).expect("crash process active");
+        assert_ne!(da.dt_s, dd.dt_s);
+    }
+
+    #[test]
+    fn preemptible_draws_mix_both_processes() {
+        let p = plan();
+        let mut rng = p.gpu_rng(2, 0);
+        let (mut crashes, mut preempts) = (0u32, 0u32);
+        for _ in 0..200 {
+            let d = p.draw(&mut rng, true).expect("both processes active");
+            if d.preemption {
+                preempts += 1;
+                assert_eq!(d.mttr_s, 20.0);
+            } else {
+                crashes += 1;
+                assert_eq!(d.mttr_s, 5.0);
+            }
+        }
+        // rate split is 2:1 crash:preempt; both must appear.
+        assert!(crashes > preempts && preempts > 20, "{crashes}/{preempts}");
+    }
+
+    #[test]
+    fn pool_projection_filters_by_tier_and_preemptibility() {
+        let p = plan();
+        let pool1 = p.pool(1, false).expect("tier 1 has faults");
+        assert_eq!(pool1.outages().len(), 1);
+        let pool0 = p.pool(0, false).expect("replica faults apply");
+        assert!(pool0.outages().is_empty());
+        // Pool streams match the fleet-level streams for the same tier.
+        let mut fleet_rng = p.gpu_rng(1, 5);
+        let mut pool_rng = pool1.gpu_rng(5);
+        assert_eq!(
+            p.draw(&mut fleet_rng, false),
+            pool1.draw(&mut pool_rng),
+            "pool projection must preserve per-GPU streams"
+        );
+        // Non-preemptible projection strips the spot process.
+        let no_spot = p.pool(0, false).unwrap();
+        let mut r = no_spot.gpu_rng(0);
+        assert!(!no_spot.draw(&mut r).unwrap().preemption);
+    }
+}

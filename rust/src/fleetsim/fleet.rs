@@ -6,6 +6,7 @@
 //! (`tests/tier_equivalence.rs`).
 
 use crate::config::GpuProfile;
+use crate::fleetsim::faults::{FaultPlan, PoolFaultPlan};
 use crate::fleetsim::sim::{simulate_pool, SimConfig, SimRequest, SimResult};
 use crate::planner::{Plan, TieredPlan};
 use crate::util::rng::Rng;
@@ -211,13 +212,15 @@ impl TieredSimResult {
 }
 
 /// One tier's DES shape: GPU count, slots per GPU, the warm-up before
-/// the utilization window opens, and the tier SKU's service-rate
-/// multiplier against the shared base profile.
+/// the utilization window opens, the tier SKU's service-rate multiplier
+/// against the shared base profile, and any failure processes projected
+/// onto this tier (chaos runs only).
 struct TierSimCfg {
     n_gpus: u64,
     n_slots: u32,
     warmup_s: f64,
     mu_scale: f64,
+    faults: Option<PoolFaultPlan>,
 }
 
 /// Simulate every tier of a routed trace, one capped worker per tier via
@@ -240,6 +243,7 @@ fn simulate_tiers(
             let tier_g = g.scaled_mu(tc.mu_scale);
             let mut cfg = SimConfig::new(tier_g, tc.n_gpus, tc.n_slots);
             cfg.warmup_s = tc.warmup_s;
+            cfg.faults = tc.faults.clone();
             simulate_pool(&cfg, trace)
         })
     })
@@ -269,12 +273,14 @@ pub fn simulate_fleet(
             n_slots: g.n_max(plan.b_short),
             warmup_s: warmup_s(&plan.short.svc),
             mu_scale: 1.0,
+            faults: None,
         },
         TierSimCfg {
             n_gpus: plan.long.n_gpus,
             n_slots: g.n_max_long(),
             warmup_s: warmup_s(&plan.long.svc),
             mu_scale: 1.0,
+            faults: None,
         },
     ];
     let mut routed = route_trace_tiered(w, lambda, n, &[plan.b_short], &[plan.gamma], seed);
@@ -309,19 +315,38 @@ pub fn simulate_fleet_tiered(
     n: usize,
     seed: u64,
 ) -> TieredSimResult {
+    simulate_fleet_tiered_chaos(w, plan, g, lambda, n, seed, &FaultPlan::default())
+}
+
+/// [`simulate_fleet_tiered`] with failure injection: `faults` is
+/// projected onto each tier ([`FaultPlan::pool`]), so a tier nothing in
+/// the plan touches runs the verbatim fault-free path. The default
+/// (empty) plan projects to `None` everywhere — bit-identical to
+/// `simulate_fleet_tiered`, which delegates here.
+pub fn simulate_fleet_tiered_chaos(
+    w: &Workload,
+    plan: &TieredPlan,
+    g: &GpuProfile,
+    lambda: f64,
+    n: usize,
+    seed: u64,
+    faults: &FaultPlan,
+) -> TieredSimResult {
     let boundaries = plan.boundaries();
     let routed = route_trace_tiered(w, lambda, n, &boundaries, &plan.gammas, seed);
     let cfgs: Vec<TierSimCfg> = plan
         .tiers
         .iter()
         .zip(&plan.spec.tiers)
-        .map(|(pool, tier)| TierSimCfg {
+        .enumerate()
+        .map(|(ti, (pool, tier))| TierSimCfg {
             n_gpus: pool.n_gpus,
             n_slots: tier.n_max,
             warmup_s: warmup_s(&pool.svc),
             // Mixed-SKU plans record each tier's rate multiplier on the
             // spec; plain plans default to 1.0 (identity profile).
             mu_scale: tier.mu_scale(),
+            faults: faults.pool(ti, tier.sku.is_some_and(|s| s.preemptible)),
         })
         .collect();
     let results = simulate_tiers(g, &cfgs, &routed.tiers);

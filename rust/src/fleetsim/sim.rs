@@ -26,7 +26,9 @@ use std::collections::VecDeque;
 
 use crate::config::GpuProfile;
 use crate::fleetsim::events::{EventQueue, QueueImpl};
+use crate::fleetsim::faults::PoolFaultPlan;
 use crate::fleetsim::idle::IdleSet;
+use crate::util::rng::Rng;
 use crate::util::stats::Samples;
 
 /// One simulated request (already routed to this pool; lengths are
@@ -67,6 +69,15 @@ pub struct SimConfig {
     /// heap is the bit-identical oracle (tests, the `des_throughput`
     /// bench's before/after comparison).
     pub queue_impl: QueueImpl,
+    /// Failure injection projected onto this pool
+    /// ([`crate::fleetsim::faults::FaultPlan::pool`]). `None` (the
+    /// default) schedules no fault events at all, so the run is
+    /// bit-identical to the pre-chaos simulator. A crash/preemption/outage
+    /// kills the victim GPU's in-flight requests — they requeue at the
+    /// *head* of the shared FCFS queue — and the GPU rejoins after the
+    /// drawn repair time (no provisioning delay at pool level; the
+    /// autoscale DES adds one).
+    pub faults: Option<PoolFaultPlan>,
 }
 
 impl SimConfig {
@@ -80,6 +91,7 @@ impl SimConfig {
             warmup_s: 0.0,
             horizon_s: None,
             queue_impl: QueueImpl::Calendar,
+            faults: None,
         }
     }
 }
@@ -103,9 +115,19 @@ pub struct SimResult {
     pub censored: u64,
     /// Measurement window (s).
     pub window: (f64, f64),
-    /// Discrete events processed (arrivals + GPU iterations) — the
-    /// numerator of the `des_throughput` bench's events/s metric.
+    /// Discrete events processed (arrivals + GPU iterations; fault events
+    /// are not counted) — the numerator of the `des_throughput` bench's
+    /// events/s metric.
     pub events: u64,
+    /// Replica crashes that struck this pool (0 with faults off).
+    pub crashes: u64,
+    /// Spot preemptions that struck this pool (0 with faults off).
+    pub preemptions: u64,
+    /// In-flight requests killed by a fault and requeued at the queue
+    /// head — each kill is exactly one retry, so this doubles as the
+    /// pool's retry count (the conservation identity
+    /// `tests/chaos_conservation.rs` pins).
+    pub killed_in_flight: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -130,6 +152,16 @@ struct Gpu {
     /// Integral of busy slots over time, clipped to the window.
     busy_integral: f64,
     last_change: f64,
+    /// Crashed / preempted / in an outage: provisioned but not serving.
+    down: bool,
+    /// Bumped on every kill; events stamped with an older generation are
+    /// stale and skipped. Always 0 with faults off.
+    gen: u32,
+    /// This GPU's seeded failure stream (chaos runs only).
+    frng: Option<Rng>,
+    /// Repair time / classification of the next drawn failure.
+    fail_mttr: f64,
+    fail_preempt: bool,
 }
 
 impl Gpu {
@@ -140,6 +172,11 @@ impl Gpu {
             iterating: false,
             busy_integral: 0.0,
             last_change: 0.0,
+            down: false,
+            gen: 0,
+            frng: None,
+            fail_mttr: 0.0,
+            fail_preempt: false,
         }
     }
 
@@ -151,6 +188,11 @@ impl Gpu {
         self.iterating = false;
         self.busy_integral = 0.0;
         self.last_change = 0.0;
+        self.down = false;
+        self.gen = 0;
+        self.frng = None;
+        self.fail_mttr = 0.0;
+        self.fail_preempt = false;
     }
 
     fn n_busy(&self) -> u32 {
@@ -174,7 +216,17 @@ impl Gpu {
 #[derive(Clone, Copy, Debug)]
 enum Ev {
     Arrival(usize),
-    Iteration(usize), // gpu index
+    /// (gpu index, generation) — stale generations (the GPU was killed
+    /// after scheduling) are skipped. Always 0 with faults off, so the
+    /// fault-free event stream is unchanged payload-for-payload.
+    Iteration(usize, u32),
+    /// (gpu index, generation) — a drawn crash/preemption strikes.
+    Crash(usize, u32),
+    /// (gpu index, generation) — repair completes.
+    Restore(usize, u32),
+    /// A scheduled pool-wide outage window opens / closes.
+    OutageStart,
+    OutageEnd,
 }
 
 /// Recyclable per-run state for [`simulate_pool_with`] (§Perf): event
@@ -220,6 +272,49 @@ fn admit(
             wait.push(t - r.arrival_s);
         }
     }
+}
+
+/// Draw GPU `gi`'s next failure from its seeded stream and schedule the
+/// crash, creating the stream on first touch.
+fn arm_fault(g: &mut Gpu, events: &mut EventQueue<Ev>, t: f64, gi: usize, fp: &PoolFaultPlan) {
+    if g.frng.is_none() {
+        g.frng = Some(fp.gpu_rng(gi as u64));
+    }
+    let rng = g.frng.as_mut().expect("just set");
+    let Some(d) = fp.draw(rng) else {
+        return;
+    };
+    g.fail_mttr = d.mttr_s;
+    g.fail_preempt = d.preemption;
+    events.schedule(t + d.dt_s, Ev::Crash(gi, g.gen));
+}
+
+/// Take GPU `gi` down: kill its in-flight requests (requeued at the head
+/// of the shared FCFS queue in request order), invalidate its pending
+/// events via the generation bump, and drop it from the idle set. Returns
+/// the number of kills.
+fn take_down(
+    g: &mut Gpu,
+    queue: &mut VecDeque<usize>,
+    idle: &mut IdleSet,
+    gi: usize,
+    t: f64,
+    window: (f64, f64),
+) -> u64 {
+    g.accumulate(t, window);
+    let mut killed: Vec<usize> = g.active.iter().map(|a| a.req).collect();
+    g.active.clear();
+    g.iterating = false;
+    g.gen = g.gen.wrapping_add(1);
+    g.down = true;
+    killed.sort_unstable();
+    // push_front in descending request order leaves the queue head at the
+    // lowest request index — retried work goes back first-in-line.
+    for &req in killed.iter().rev() {
+        queue.push_front(req);
+    }
+    idle.remove(gi);
+    killed.len() as u64
 }
 
 /// Simulate one pool over a request list (must be arrival-sorted).
@@ -284,11 +379,27 @@ pub fn simulate_pool_with(
     for (i, r) in requests.iter().enumerate() {
         events.schedule(r.arrival_s, Ev::Arrival(i));
     }
+    // Chaos wiring: arm every GPU's failure stream and schedule this
+    // pool's outage windows. None of this runs with faults off, so the
+    // event sequence (and hence every tie-break) is unchanged.
+    if let Some(fp) = &cfg.faults {
+        for (gi, g) in gpus.iter_mut().enumerate() {
+            arm_fault(g, events, 0.0, gi, fp);
+        }
+        for o in fp.outages() {
+            events.schedule(o.start_s, Ev::OutageStart);
+            events.schedule(o.start_s + o.duration_s, Ev::OutageEnd);
+        }
+    }
 
     let mut ttft = Samples::with_capacity(n_req);
     let mut wait = Samples::with_capacity(n_req);
     let mut completed = 0u64;
     let mut n_events = 0u64;
+    let mut crashes = 0u64;
+    let mut preemptions = 0u64;
+    let mut killed_in_flight = 0u64;
+    let mut outage_depth = 0u32;
 
     while let Some((t, ev)) = events.pop() {
         if let Some(h) = cfg.horizon_s {
@@ -296,7 +407,18 @@ pub fn simulate_pool_with(
                 break;
             }
         }
-        n_events += 1;
+        if completed == n_req as u64 {
+            // All work done: a crash-restore cycle with no traffic left
+            // would re-arm forever and never terminate.
+            match ev {
+                Ev::Crash(..) | Ev::Restore(..) | Ev::OutageStart | Ev::OutageEnd => continue,
+                _ => {}
+            }
+        }
+        match ev {
+            Ev::Arrival(_) | Ev::Iteration(..) => n_events += 1,
+            _ => {}
+        }
         match ev {
             Ev::Arrival(i) => {
                 queue.push_back(i);
@@ -317,12 +439,16 @@ pub fn simulate_pool_with(
                         };
                         g.iterating = true;
                         idle.remove(gi);
-                        events.schedule(t + dt, Ev::Iteration(gi));
+                        events.schedule(t + dt, Ev::Iteration(gi, g.gen));
                     }
                 }
             }
-            Ev::Iteration(gi) => {
+            Ev::Iteration(gi, gen) => {
                 let g = &mut gpus[gi];
+                if g.gen != gen {
+                    // Scheduled against a GPU state a kill invalidated.
+                    continue;
+                }
                 g.accumulate(t, window);
                 g.iterating = false;
                 // Advance every busy slot by one iteration (swap-remove on
@@ -359,9 +485,119 @@ pub fn simulate_pool_with(
                         cfg.gpu.t_iter_s(g.n_busy())
                     };
                     g.iterating = true;
-                    events.schedule(t + dt, Ev::Iteration(gi));
+                    events.schedule(t + dt, Ev::Iteration(gi, g.gen));
                 } else {
                     idle.insert(gi);
+                }
+            }
+            Ev::Crash(gi, gen) => {
+                let g = &mut gpus[gi];
+                if g.down || g.gen != gen {
+                    // An earlier kill or an outage beat this draw here.
+                    continue;
+                }
+                if g.fail_preempt {
+                    preemptions += 1;
+                } else {
+                    crashes += 1;
+                }
+                let mttr = g.fail_mttr;
+                killed_in_flight += take_down(g, queue, idle, gi, t, window);
+                let restore_gen = g.gen;
+                if outage_depth == 0 {
+                    // During an outage the pool-wide OutageEnd revives.
+                    events.schedule(t + mttr, Ev::Restore(gi, restore_gen));
+                }
+                // The kill may have stranded requeued work while other
+                // GPUs sit idle (idle GPUs are only woken by arrivals):
+                // wake them now.
+                while !queue.is_empty() {
+                    let Some(wi) = idle.max() else { break };
+                    let g = &mut gpus[wi];
+                    debug_assert!(!g.iterating && g.active.is_empty() && !g.down);
+                    g.accumulate(t, window);
+                    admit(g, queue, t, &mut wait, requests, warm, chunk);
+                    if g.n_busy() == 0 {
+                        break;
+                    }
+                    let dt = if cfg.lockstep_full {
+                        t_iter_full
+                    } else {
+                        cfg.gpu.t_iter_s(g.n_busy())
+                    };
+                    g.iterating = true;
+                    idle.remove(wi);
+                    events.schedule(t + dt, Ev::Iteration(wi, g.gen));
+                }
+            }
+            Ev::Restore(gi, gen) => {
+                let g = &mut gpus[gi];
+                if !g.down || g.gen != gen {
+                    continue;
+                }
+                if outage_depth > 0 {
+                    // Personal restore inside an outage window defers to
+                    // OutageEnd's mass revive.
+                    continue;
+                }
+                g.accumulate(t, window);
+                g.down = false;
+                if let Some(fp) = &cfg.faults {
+                    arm_fault(g, events, t, gi, fp);
+                }
+                admit(g, queue, t, &mut wait, requests, warm, chunk);
+                if g.n_busy() > 0 {
+                    let dt = if cfg.lockstep_full {
+                        t_iter_full
+                    } else {
+                        cfg.gpu.t_iter_s(g.n_busy())
+                    };
+                    g.iterating = true;
+                    events.schedule(t + dt, Ev::Iteration(gi, g.gen));
+                } else {
+                    idle.insert(gi);
+                }
+            }
+            Ev::OutageStart => {
+                outage_depth += 1;
+                if outage_depth == 1 {
+                    for gi in 0..n_gpus {
+                        let g = &mut gpus[gi];
+                        if g.down {
+                            continue;
+                        }
+                        killed_in_flight += take_down(g, queue, idle, gi, t, window);
+                    }
+                }
+            }
+            Ev::OutageEnd => {
+                if outage_depth > 0 {
+                    outage_depth -= 1;
+                }
+                if outage_depth == 0 {
+                    for gi in 0..n_gpus {
+                        let g = &mut gpus[gi];
+                        if !g.down {
+                            continue;
+                        }
+                        g.accumulate(t, window);
+                        g.down = false;
+                        if let Some(fp) = &cfg.faults {
+                            arm_fault(g, events, t, gi, fp);
+                        }
+                        admit(g, queue, t, &mut wait, requests, warm, chunk);
+                        if g.n_busy() > 0 {
+                            let dt = if cfg.lockstep_full {
+                                t_iter_full
+                            } else {
+                                cfg.gpu.t_iter_s(g.n_busy())
+                            };
+                            g.iterating = true;
+                            events.schedule(t + dt, Ev::Iteration(gi, g.gen));
+                        } else {
+                            idle.insert(gi);
+                        }
+                    }
                 }
             }
         }
@@ -378,6 +614,9 @@ pub fn simulate_pool_with(
         censored: n_req as u64 - completed,
         window,
         events: n_events,
+        crashes,
+        preemptions,
+        killed_in_flight,
     }
 }
 

@@ -29,8 +29,8 @@ use fleetopt::compress::fidelity;
 use fleetopt::coordinator::{serve_with, AdmissionOpts, ServeConfig, ServeItem};
 use fleetopt::experiments;
 use fleetopt::fleetsim::{
-    run_stress, simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig, QueueImpl,
-    StressConfig,
+    run_stress, simulate_autoscale_chaos, simulate_fleet_tiered_chaos, AutoscaleConfig,
+    ChaosOpts, FaultPlan, QueueImpl, StressConfig,
 };
 use fleetopt::metrics::EpochMetrics;
 use fleetopt::planner::{
@@ -38,6 +38,7 @@ use fleetopt::planner::{
     sweep_full, sweep_gamma, sweep_tiered, AnytimeConfig, AnytimeResult, CalibCache, Deadline,
     Plan, PlanInput, TieredPlan,
 };
+use fleetopt::router::failover::FailoverConfig;
 use fleetopt::router::GatewayConfig;
 use fleetopt::util::rng::Rng;
 use fleetopt::util::table::fmt_int;
@@ -53,14 +54,17 @@ USAGE:
                      [--sku-catalog F.json] [--budget-ms N]
   fleetopt sweep     --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
                      [--sku-catalog F.json] [--budget-ms N]
-  fleetopt tables    [--only 1..10] [--fast]
+  fleetopt tables    [--only 1..11] [--fast]
   fleetopt simulate  --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
+                     [--chaos plan.json]
   fleetopt simulate  --stress [--requests N] [--gpus N] [--queue calendar|heap] [--seed N]
                      (fixed synthetic 5M-request/512-GPU/K=4 diurnal azure scenario)
   fleetopt autoscale --workload <name> [--config F.json] [--lambda N] [--requests N]
                      [--arrivals poisson|diurnal:amp=A,period=P|burst:high=H,low=L|schedule:F.json]
                      [--epoch S] [--window S] [--provision S] [--no-replan] [--forecast]
                      [--tiers W1,W2,..] [--out metrics.json] [--max-violation-frac F]
+                     [--chaos plan.json] [--redundancy k|k1,k2,..] [--failover]
+                     [--spill-watermark F] [--recover-watermark F] [--gamma-boost G]
   fleetopt compress  [--tokens N] [--budget N] [--seed N]
   fleetopt serve     [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
                      [--trace F.jsonl] [--gateway-workers N] [--route-cache-cap N]
@@ -78,6 +82,14 @@ USAGE:
   --threads N caps every internal thread fan-out (sweeps, DES
   replications, table grids) at N workers; FLEETOPT_THREADS=N in the
   environment does the same. FLEETOPT_SIMD=0 forces the scalar kernels.
+
+  --chaos plan.json injects deterministic failures (per-replica
+  crash-restart, scheduled tier outages, spot preemption on preemptible
+  SKUs; see examples/configs/chaos_plan.json). --redundancy sizes each
+  tier with k hot spares (N+k); --failover spills routing across tier
+  boundaries when a tier's live capacity drops below --spill-watermark
+  (recovering at --recover-watermark, down-spill re-qualified through
+  C&R at gamma x --gamma-boost).
 
   serve --trace F.jsonl replays a JSONL text trace (one
   {{\"text\", \"max_output\", \"arrival_s\"}} object per line, streamed
@@ -444,8 +456,8 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     let fast = flags.contains_key("fast");
     let only: Option<u32> = flags.get("only").map(|s| s.parse()).transpose()?;
     if let Some(n) = only {
-        if !(1..=10).contains(&n) {
-            bail!("--only must name a table in 1..=10, got {n}");
+        if !(1..=11).contains(&n) {
+            bail!("--only must name a table in 1..=11, got {n}");
         }
     }
     let want = |n: u32| only.is_none() || only == Some(n);
@@ -482,7 +494,66 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     if want(10) {
         experiments::table10(1000.0, des_n).print();
     }
+    if want(11) {
+        experiments::table11(auto_n).print();
+    }
     Ok(())
+}
+
+/// `--redundancy k|k1,k2,..`: per-tier N+k hot-spare counts (a single
+/// value broadcasts to every tier).
+fn redundancy_arg(flags: &HashMap<String, String>) -> Result<Vec<u64>> {
+    let Some(s) = flags.get("redundancy") else {
+        return Ok(Vec::new());
+    };
+    let mut ks = Vec::new();
+    for part in s.split(',') {
+        let v: u64 = part
+            .trim()
+            .parse()
+            .with_context(|| format!("--redundancy entry `{part}`"))?;
+        ks.push(v);
+    }
+    Ok(ks)
+}
+
+/// Chaos/failover flags shared semantics: `--chaos plan.json` loads a
+/// deterministic fault plan; `--failover` (plus optional watermark knobs)
+/// arms cross-tier spill routing.
+fn chaos_arg(flags: &HashMap<String, String>) -> Result<ChaosOpts> {
+    let faults = match flags.get("chaos") {
+        None => None,
+        Some(path) => Some(FaultPlan::from_file(path)?),
+    };
+    let wants_failover = flags.contains_key("failover")
+        || flags.contains_key("spill-watermark")
+        || flags.contains_key("recover-watermark")
+        || flags.contains_key("gamma-boost");
+    let failover = if wants_failover {
+        let d = FailoverConfig::default();
+        let cfg = FailoverConfig {
+            spill_watermark: flag_f64(flags, "spill-watermark", d.spill_watermark)?,
+            recover_watermark: flag_f64(flags, "recover-watermark", d.recover_watermark)?,
+            gamma_boost: flag_f64(flags, "gamma-boost", d.gamma_boost)?,
+        };
+        if !(0.0..=1.0).contains(&cfg.spill_watermark)
+            || !(0.0..=1.0).contains(&cfg.recover_watermark)
+            || cfg.recover_watermark < cfg.spill_watermark
+        {
+            bail!(
+                "watermarks must satisfy 0 <= spill <= recover <= 1, got spill={} recover={}",
+                cfg.spill_watermark,
+                cfg.recover_watermark
+            );
+        }
+        if !(1.0..=2.0).contains(&cfg.gamma_boost) {
+            bail!("--gamma-boost must be within [1.0, 2.0], got {}", cfg.gamma_boost);
+        }
+        Some(cfg)
+    } else {
+        None
+    };
+    Ok(ChaosOpts { faults, failover })
 }
 
 fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
@@ -510,6 +581,8 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
     fleet_spec.validate()?;
     let mut input0 = input0;
     input0.gpu.c_max_long = fleet_spec.tiers[fleet_spec.k() - 1].c_max;
+    input0.redundancy = redundancy_arg(flags)?;
+    let chaos = chaos_arg(flags)?;
 
     let epoch_s = flag_pos_f64(flags, "epoch", 10.0)?;
     let cfg = AutoscaleConfig {
@@ -530,10 +603,22 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
         input0.lambda,
         initial.gpu_counts()
     );
-    let report = simulate_autoscale(&w, model, n, &input0, initial, &cfg, 42);
+    let report = simulate_autoscale_chaos(&w, model, n, &input0, initial, &cfg, 42, &chaos);
 
     for e in &report.epochs {
         println!("{}", e.summary_line());
+    }
+    if chaos.faults.is_some() {
+        println!(
+            "chaos: {} crash(es), {} preemption(s), {} in-flight kill(s), \
+             {} retry(ies) (max {} per request), {} spilled route(s)",
+            report.crashes,
+            report.preemptions,
+            report.killed_in_flight,
+            report.retries_total,
+            report.max_retry,
+            report.spilled,
+        );
     }
     let violated = 1.0 - report.slo_ok_frac;
     println!(
@@ -558,6 +643,15 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
     }
     if report.censored != 0 {
         bail!("{} request(s) never completed", report.censored);
+    }
+    // A clamped (past-scheduled) event means the controller computed an
+    // impossible schedule; that must fail the run — and the CI smoke job
+    // that wraps it — not silently round time forward.
+    if report.time_travel_events != 0 {
+        bail!(
+            "{} event(s) were scheduled in the past and clamped",
+            report.time_travel_events
+        );
     }
     let budget = flag_f64(flags, "max-violation-frac", 1.0)?;
     if !(0.0..=1.0).contains(&budget) {
@@ -656,6 +750,10 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     let w = workload_arg(flags)?;
     let lambda = flag_pos_f64(flags, "lambda", 1000.0)?;
     let n = flag_count(flags, "requests", 30_000)? as usize;
+    let faults = match flags.get("chaos") {
+        None => FaultPlan::default(),
+        Some(path) => FaultPlan::from_file(path)?,
+    };
 
     if let Some(tiers) = tiers_arg(flags)? {
         let input = PlanInput::new(w.clone(), lambda);
@@ -664,13 +762,21 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             TiersArg::K(k) => sweep_tiered(&input, k)?.0,
         };
         print_tiered("K-tier plan", &plan, None, None);
-        let sim = simulate_fleet_tiered(&w, &plan, &input.gpu, lambda, n, 42);
+        let sim = simulate_fleet_tiered_chaos(&w, &plan, &input.gpu, lambda, n, 42, &faults);
         for (i, (pool, res)) in plan.tiers.iter().zip(&sim.tiers).enumerate() {
             match res {
                 Some(r) => {
                     let mut ttft = r.ttft.clone();
+                    let chaos = if r.crashes + r.preemptions > 0 {
+                        format!(
+                            " crashes={} preempt={} killed={}",
+                            r.crashes, r.preemptions, r.killed_in_flight
+                        )
+                    } else {
+                        String::new()
+                    };
                     println!(
-                        "tier {i}: n={:5} rho_ana={:.3} rho_des={:.3} err={:+.1}% ttft99 des={:.0}ms",
+                        "tier {i}: n={:5} rho_ana={:.3} rho_des={:.3} err={:+.1}% ttft99 des={:.0}ms{chaos}",
                         pool.n_gpus,
                         pool.rho_ana(),
                         r.utilization,
@@ -686,6 +792,9 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             sim.routed.n_compressed_at, sim.routed.n_total
         );
         return Ok(());
+    }
+    if flags.contains_key("chaos") {
+        bail!("simulate --chaos needs a K-tier fleet (add --tiers)");
     }
 
     let (rows, _) = experiments::table5_validate(&w, lambda, n, 42);

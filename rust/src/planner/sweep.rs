@@ -113,6 +113,14 @@ pub struct PlanInput {
     pub cfg: PlannerConfig,
     /// Eq. 8 verbatim vs paper-consistent sizing (see `planner::sizing`).
     pub strict_slo: bool,
+    /// N+k redundancy per tier: `redundancy[i]` spare GPUs are added to
+    /// tier `i`'s sized count so the tier survives that many concurrent
+    /// failures at full capacity. Empty (the default) means k = 0
+    /// everywhere — bit-identical to the pre-redundancy planner; a single
+    /// entry broadcasts to every tier. Spares are priced through the same
+    /// closed-form lower bound the sweep prunes with, so pruning stays
+    /// exact (`tests/planner_fastpath.rs` idiom).
+    pub redundancy: Vec<u64>,
 }
 
 impl PlanInput {
@@ -124,6 +132,7 @@ impl PlanInput {
             gpu: GpuProfile::a100_llama70b(),
             cfg: PlannerConfig::default(),
             strict_slo: false,
+            redundancy: Vec::new(),
         }
     }
 }

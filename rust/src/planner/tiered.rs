@@ -140,7 +140,12 @@ pub fn plan_tiers(
                 // `scaled_mu(1.0)` is the identity, so single-SKU tiers
                 // are sized bit-identically to the pre-catalog planner.
                 let svc = calibrated(input, cache, lo, hi, t.n_max).scaled_mu(t.mu_scale());
-                size(lambda_i, svc, tier_slo)?
+                let mut pool = size(lambda_i, svc, tier_slo)?;
+                // N+k survivability: k spares on top of the sized count,
+                // so the tier still meets its SLO with k machines down.
+                // k = 0 (the default) adds nothing — bit-identical.
+                pool.n_gpus += tier_redundancy(input, i);
+                pool
             }
             None => PoolPlan::empty(),
         };
@@ -530,6 +535,19 @@ fn tier_t_iter_s(input: &PlanInput, spec: &FleetSpec, i: usize) -> f64 {
     }
 }
 
+/// Tier `t`'s N+k spare count from [`PlanInput::redundancy`]: empty means
+/// 0 everywhere (the bit-identical default), a single entry broadcasts to
+/// every tier, anything longer is per-tier (missing trailing entries are
+/// 0). Shared by the exact evaluation and both bound paths so the spares
+/// are priced identically everywhere and pruning stays exact.
+pub(crate) fn tier_redundancy(input: &PlanInput, t: usize) -> u64 {
+    match input.redundancy.as_slice() {
+        [] => 0,
+        [k] => *k,
+        ks => ks.get(t).copied().unwrap_or(0),
+    }
+}
+
 fn cell_cost_lb_with(
     input: &PlanInput,
     spec: &FleetSpec,
@@ -547,7 +565,10 @@ fn cell_cost_lb_with(
                 let n_slots = spec.tiers[i].n_max;
                 let e_s_lb = e_iter_lb * tier_t_iter_s(input, spec, i);
                 let a_lb = lambda_i * e_s_lb / n_slots as f64;
-                (a_lb / input.cfg.rho_max).ceil().max(1.0) as u64
+                // N+k spares are a constant add on every provisioned
+                // tier, on the bound exactly as on the exact path — the
+                // bound-gap argument is unchanged.
+                (a_lb / input.cfg.rho_max).ceil().max(1.0) as u64 + tier_redundancy(input, i)
             }
             _ => 0,
         };
@@ -801,8 +822,11 @@ fn lb_block(
         }
         let mut n_lb = [0u64; CELL_LANES];
         stability_counts_lanes(&li, input.cfg.rho_max, &mut n_lb);
+        // N+k spares land on live lanes only — exactly the scalar bound's
+        // `+ tier_redundancy` in its Some-with-traffic arm.
+        let red_t = tier_redundancy(input, t);
         for (l, &n) in n_lb[..block.len()].iter().enumerate() {
-            scratch.counts[l * k + t] = n;
+            scratch.counts[l * k + t] = n + if li.live[l] { red_t } else { 0 };
         }
     }
     (0..block.len())

@@ -1,0 +1,263 @@
+//! Degraded-capacity failover for the tier router (chaos response).
+//!
+//! When a tier's live capacity drops below a watermark of its target, its
+//! routing boundary is *removed* from the effective ladder rather than
+//! zeroed: zeroing would make [`crate::compress::gate::clamp_gamma`]
+//! collapse the band below it, while removal gives exactly the spill the
+//! paper's boundary structure implies —
+//!
+//! * **up-spill** (always admissible): traffic that natively fit the
+//!   degraded tier's window falls through to the next longer-context tier
+//!   (a longer window always fits it);
+//! * **down-spill** (through the existing C&R ladder only): the boundary
+//!   *below* the degraded tier keeps its band and gets a tightened
+//!   (boosted, clamp-capped) gamma, so borderline compressible traffic is
+//!   pulled down across the boundary instead of burdening the longer tier.
+//!
+//! A degraded **last** tier cannot be dropped (it is the ladder's
+//! fallback); it only gets the gamma boost at the boundary below.
+//! Hysteresis ([`FailoverState::observe`]) separates the degrade and
+//! recover watermarks so capacity flapping near the threshold does not
+//! flap the routing config. With no tier degraded the effective config is
+//! the original, verbatim — failover wired in but never engaged is
+//! bit-identical to no failover at all (tested here and in the DES).
+
+use crate::router::gateway::{GatewayConfig, TierRoute};
+
+/// Failover policy knobs.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FailoverConfig {
+    /// A tier degrades when live/target capacity falls strictly below
+    /// this fraction.
+    pub spill_watermark: f64,
+    /// A degraded tier recovers when live/target rises to at least this
+    /// fraction (must be >= `spill_watermark` for hysteresis).
+    pub recover_watermark: f64,
+    /// Multiplier applied to the gamma of a boundary whose next tier up
+    /// is degraded (down-spill tightening), capped at 2.0 and re-clamped
+    /// against the next boundary by the router as usual.
+    pub gamma_boost: f64,
+}
+
+impl Default for FailoverConfig {
+    fn default() -> Self {
+        FailoverConfig {
+            spill_watermark: 0.7,
+            recover_watermark: 0.9,
+            gamma_boost: 1.25,
+        }
+    }
+}
+
+/// Per-tier hysteretic degradation tracker.
+#[derive(Clone, Debug, Default)]
+pub struct FailoverState {
+    degraded: Vec<bool>,
+}
+
+impl FailoverState {
+    pub fn new(k: usize) -> Self {
+        FailoverState {
+            degraded: vec![false; k],
+        }
+    }
+
+    /// Feed one tier's live (serving) and target capacity; returns the
+    /// tier's updated degraded flag. The two watermarks form the
+    /// hysteresis band: a healthy tier degrades only below
+    /// `spill_watermark`, a degraded one recovers only at or above
+    /// `recover_watermark`. A zero-target tier is never degraded.
+    pub fn observe(&mut self, tier: usize, live: u64, target: u64, cfg: &FailoverConfig) -> bool {
+        if tier >= self.degraded.len() {
+            self.degraded.resize(tier + 1, false);
+        }
+        if target == 0 {
+            self.degraded[tier] = false;
+            return false;
+        }
+        let frac = live as f64 / target as f64;
+        let d = self.degraded[tier];
+        self.degraded[tier] = if d {
+            frac < cfg.recover_watermark
+        } else {
+            frac < cfg.spill_watermark
+        };
+        self.degraded[tier]
+    }
+
+    pub fn degraded(&self) -> &[bool] {
+        &self.degraded
+    }
+
+    pub fn any_degraded(&self) -> bool {
+        self.degraded.iter().any(|&d| d)
+    }
+}
+
+/// Derive the effective routing vectors under a degradation mask.
+///
+/// `boundaries`/`gammas` are the K−1 original boundary windows and bands;
+/// `degraded` has one flag per tier (len K; shorter is zero-extended).
+/// Returns `(eff_boundaries, eff_gammas, tier_map)` where `tier_map[e]`
+/// is the *original* tier index effective tier `e` routes to
+/// (`tier_map.len() == eff_boundaries.len() + 1`). With no degraded tier
+/// the originals come back verbatim and the map is the identity.
+pub fn effective_routes(
+    boundaries: &[u32],
+    gammas: &[f64],
+    degraded: &[bool],
+    gamma_boost: f64,
+) -> (Vec<u32>, Vec<f64>, Vec<usize>) {
+    assert_eq!(boundaries.len(), gammas.len());
+    let k = boundaries.len() + 1;
+    let is_down = |t: usize| degraded.get(t).copied().unwrap_or(false);
+    if (0..k).all(|t| !is_down(t)) {
+        return (
+            boundaries.to_vec(),
+            gammas.to_vec(),
+            (0..k).collect(),
+        );
+    }
+    // Kept tiers: every healthy tier, plus the last tier unconditionally
+    // (it is the ladder's fallback and has no boundary to drop).
+    let kept: Vec<usize> = (0..k).filter(|&t| t == k - 1 || !is_down(t)).collect();
+    let mut eff_b = Vec::with_capacity(kept.len() - 1);
+    let mut eff_g = Vec::with_capacity(kept.len() - 1);
+    for &t in &kept[..kept.len() - 1] {
+        // Boost this boundary's band when the original next tier up is
+        // degraded (including a degraded-but-kept last tier): borderline
+        // traffic compresses down instead of spilling up. The cap keeps
+        // the boost inside the gate's sane range; the router re-clamps
+        // against the next *effective* boundary as always.
+        let boosted = is_down(t + 1);
+        let g = if boosted {
+            (gammas[t] * gamma_boost).min(2.0)
+        } else {
+            gammas[t]
+        };
+        eff_b.push(boundaries[t]);
+        eff_g.push(g);
+    }
+    (eff_b, eff_g, kept)
+}
+
+/// [`effective_routes`] lifted to a [`GatewayConfig`]: the degraded
+/// config has fewer `TierRoute`s, so its fingerprint differs from the
+/// healthy one and the route memo invalidates itself on the flip (and
+/// again on recovery). Routed tiers must be mapped back through the
+/// returned map before enqueueing to physical pools.
+pub fn effective_gateway_config(
+    cfg: &GatewayConfig,
+    degraded: &[bool],
+    fo: &FailoverConfig,
+) -> (GatewayConfig, Vec<usize>) {
+    let boundaries: Vec<u32> = cfg.tiers.iter().map(|t| t.boundary).collect();
+    let gammas: Vec<f64> = cfg.tiers.iter().map(|t| t.gamma).collect();
+    let (eff_b, eff_g, map) =
+        effective_routes(&boundaries, &gammas, degraded, fo.gamma_boost);
+    let eff = GatewayConfig {
+        tiers: eff_b
+            .iter()
+            .zip(&eff_g)
+            .map(|(&boundary, &gamma)| TierRoute { boundary, gamma })
+            .collect(),
+        enable_cr: cfg.enable_cr,
+    };
+    (eff, map)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn healthy_mask_is_identity() {
+        let b = vec![512u32, 2048];
+        let g = vec![1.5, 1.4];
+        let (eb, eg, map) = effective_routes(&b, &g, &[false, false, false], 1.25);
+        assert_eq!(eb, b);
+        assert_eq!(eg, g);
+        assert_eq!(map, vec![0, 1, 2]);
+        // Empty mask too (zero-extension).
+        let (eb2, eg2, map2) = effective_routes(&b, &g, &[], 1.25);
+        assert_eq!((eb2, eg2, map2), (b, g, vec![0, 1, 2]));
+    }
+
+    #[test]
+    fn degraded_middle_tier_drops_its_boundary() {
+        let b = vec![512u32, 2048];
+        let g = vec![1.5, 1.4];
+        // Tier 1 down: its 2048 boundary vanishes (up-spill of (512, 2048]
+        // traffic to tier 2), and boundary 0's gamma is boosted so
+        // borderline traffic down-spills into tier 0 through C&R.
+        let (eb, eg, map) = effective_routes(&b, &g, &[false, true, false], 1.25);
+        assert_eq!(eb, vec![512]);
+        assert_eq!(eg, vec![(1.5f64 * 1.25).min(2.0)]);
+        assert_eq!(map, vec![0, 2]);
+    }
+
+    #[test]
+    fn degraded_first_tier_up_spills() {
+        let b = vec![512u32, 2048];
+        let g = vec![1.5, 1.4];
+        let (eb, eg, map) = effective_routes(&b, &g, &[true, false, false], 1.25);
+        assert_eq!(eb, vec![2048]);
+        assert_eq!(eg, vec![1.4], "no boost: tier above the cut is healthy");
+        assert_eq!(map, vec![1, 2]);
+    }
+
+    #[test]
+    fn degraded_last_tier_is_kept_with_boosted_band() {
+        let b = vec![512u32, 2048];
+        let g = vec![1.5, 1.4];
+        let (eb, eg, map) = effective_routes(&b, &g, &[false, false, true], 1.5);
+        assert_eq!(eb, b, "the fallback tier cannot be dropped");
+        assert_eq!(eg[0], 1.5, "boundary below a healthy tier is untouched");
+        assert_eq!(eg[1], (1.4f64 * 1.5).min(2.0));
+        assert_eq!(map, vec![0, 1, 2]);
+    }
+
+    #[test]
+    fn everything_degraded_routes_to_fallback_only() {
+        let b = vec![512u32, 2048];
+        let g = vec![1.5, 1.4];
+        let (eb, _eg, map) = effective_routes(&b, &g, &[true, true, true], 1.25);
+        assert!(eb.is_empty());
+        assert_eq!(map, vec![2]);
+    }
+
+    #[test]
+    fn observe_hysteresis() {
+        let cfg = FailoverConfig::default();
+        let mut st = FailoverState::new(2);
+        // 10 live of 10 target: healthy.
+        assert!(!st.observe(0, 10, 10, &cfg));
+        // 7/10 = 0.7 is *at* the spill watermark — not degraded (strict).
+        assert!(!st.observe(0, 7, 10, &cfg));
+        // 6/10 < 0.7: degrade.
+        assert!(st.observe(0, 6, 10, &cfg));
+        // Back to 8/10 = 0.8: inside the hysteresis band, stays degraded.
+        assert!(st.observe(0, 8, 10, &cfg));
+        assert!(st.any_degraded());
+        // 9/10 >= 0.9: recover.
+        assert!(!st.observe(0, 9, 10, &cfg));
+        assert!(!st.any_degraded());
+        // Zero-target tiers never degrade (a drained tier is not a fault).
+        assert!(!st.observe(1, 0, 0, &cfg));
+    }
+
+    #[test]
+    fn gateway_config_fingerprint_flips_with_degradation() {
+        let cfg = GatewayConfig::tiered(&[512, 2048], 1.5, true);
+        let fo = FailoverConfig::default();
+        let (healthy, map_h) =
+            effective_gateway_config(&cfg, &[false, false, false], &fo);
+        assert_eq!(healthy.fingerprint(), cfg.fingerprint());
+        assert_eq!(map_h, vec![0, 1, 2]);
+        let (degraded, map_d) =
+            effective_gateway_config(&cfg, &[false, true, false], &fo);
+        assert_ne!(degraded.fingerprint(), cfg.fingerprint());
+        assert_eq!(degraded.n_tiers(), 2);
+        assert_eq!(map_d, vec![0, 2]);
+    }
+}

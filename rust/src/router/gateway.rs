@@ -318,6 +318,10 @@ pub struct Gateway {
     pub n_routed: Vec<u64>,
     pub n_compressed: u64,
     pub n_compress_failed: u64,
+    /// Failover re-route decisions ([`Gateway::reroute_failed`]) — kept
+    /// out of `n_routed`/[`GatewayMetrics`] so a retry storm leaves the
+    /// first-attempt accounting (and the EMA estimator) untouched.
+    pub n_rerouted: u64,
 }
 
 impl Gateway {
@@ -332,6 +336,7 @@ impl Gateway {
             n_routed: vec![0; k],
             n_compressed: 0,
             n_compress_failed: 0,
+            n_rerouted: 0,
         }
     }
 
@@ -387,6 +392,38 @@ impl Gateway {
             est_total,
         );
         self.absorb_outcome(&out);
+        finish_request(out, max_output_tokens, est_total, t0.elapsed().as_secs_f64())
+    }
+
+    /// Re-route a request whose first attempt died downstream (a replica
+    /// crash killed it in flight). The decision runs the same ladder as
+    /// [`Gateway::route`] against the gateway's *current* config — which
+    /// under failover may differ from the one the first attempt saw — but
+    /// it is accounting-neutral: **no** EMA estimator update (the first
+    /// attempt already folded this prompt's true token count in — a retry
+    /// storm must not double-weight its text), **no** `n_routed`/
+    /// compression counters, and **no** route-memo interaction (the memo
+    /// keyed the first decision; re-reserving would evict live entries).
+    /// Only `n_rerouted` moves. Pinned by the retry-storm regression in
+    /// `tests/gateway_concurrency.rs`.
+    pub fn reroute_failed(&mut self, text: &str, max_output_tokens: u32) -> RoutedRequest {
+        let t0 = std::time::Instant::now();
+        let category = classify(text);
+        let est_prompt = self
+            .estimator
+            .estimate_prompt_tokens(text.len(), category);
+        let est_total = est_prompt + max_output_tokens;
+        let actual_prompt = count_tokens(text);
+        let out = route_ladder(
+            &self.cfg,
+            &mut self.scratch,
+            text,
+            max_output_tokens,
+            category,
+            actual_prompt,
+            est_total,
+        );
+        self.n_rerouted += 1;
         finish_request(out, max_output_tokens, est_total, t0.elapsed().as_secs_f64())
     }
 

@@ -2,16 +2,21 @@
 //! estimation (EMA), content classification, and pool routing with
 //! Compress-and-Route inline on the request path — plus the sharded
 //! admission pipeline (`shard`) and the fingerprint-keyed route memo
-//! (`memo`) layered on top (§Perf, PR 8).
+//! (`memo`) layered on top (§Perf, PR 8), and degraded-capacity failover
+//! (`failover`): hysteretic tier-drop + gamma-boost spill for chaos runs.
 
 pub mod classify;
 pub mod estimator;
+pub mod failover;
 pub mod gateway;
 pub mod memo;
 pub mod shard;
 
 pub use classify::classify;
 pub use estimator::TokenEstimator;
+pub use failover::{
+    effective_gateway_config, effective_routes, FailoverConfig, FailoverState,
+};
 pub use gateway::{Gateway, GatewayConfig, GatewayMetrics, RoutedRequest, TierRoute};
 pub use memo::{CacheKey, CacheStats, Lookup, RouteCache};
 pub use shard::{effective_workers, ScratchPool, ShardTiming};

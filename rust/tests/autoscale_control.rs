@@ -14,7 +14,8 @@
 
 use fleetopt::config::PlannerConfig;
 use fleetopt::fleetsim::{
-    route_trace_tiered, simulate_autoscale, simulate_fleet_tiered, AutoscaleConfig,
+    route_trace_tiered, simulate_autoscale, simulate_autoscale_chaos, simulate_fleet_tiered,
+    AutoscaleConfig, ChaosOpts,
 };
 use fleetopt::planner::{plan_spec_sweep_gamma, plan_tiers, PlanInput, ReplanConfig};
 use fleetopt::workload::arrivals::{
@@ -216,6 +217,52 @@ fn autoscale_beats_static_peak_on_a_step_down() {
         rep_auto.cost,
         rep_static.cost
     );
+}
+
+#[test]
+fn clamped_schedule_increments_time_travel_events() {
+    // The CLI rejects a negative --provision up front, but the chaos
+    // entry point deliberately lets one through so the accounting is
+    // testable: a scale-up then schedules Provision events in the past,
+    // the event queue clamps them to "now", and `time_travel_events`
+    // counts every clamp — the counter `fleetopt autoscale` (and the CI
+    // autoscale smoke wrapping it) now fails hard on.
+    let input = fast_input(150.0);
+    let spec = input.gpu.fleet_spec(&[4096]);
+    let plan = plan_spec_sweep_gamma(&input, &spec).unwrap();
+    // A hard step up forces the controller to provision new GPUs mid-run.
+    let model = RateModel::Schedule(vec![(0.0, 150.0), (15.0, 500.0)]);
+    let cfg = AutoscaleConfig {
+        epoch_s: 5.0,
+        window_s: 10.0,
+        provision_delay_s: -3.0,
+        ..AutoscaleConfig::default()
+    };
+    let n = 10_000;
+    let rep = simulate_autoscale_chaos(
+        &input.workload,
+        model.clone(),
+        n,
+        &input,
+        plan.clone(),
+        &cfg,
+        9,
+        &ChaosOpts::default(),
+    );
+    assert!(
+        rep.time_travel_events > 0,
+        "negative provisioning delay never produced a clamped event"
+    );
+    assert_eq!(rep.completed, n as u64, "clamping must not lose requests");
+
+    // The same scenario with a sane delay clamps nothing.
+    let cfg_ok = AutoscaleConfig {
+        provision_delay_s: 2.5,
+        ..cfg
+    };
+    let rep_ok = simulate_autoscale(&input.workload, model, n, &input, plan, &cfg_ok, 9);
+    assert_eq!(rep_ok.time_travel_events, 0, "sane schedule must not clamp");
+    assert_eq!(rep_ok.completed, n as u64);
 }
 
 #[test]

@@ -1,0 +1,289 @@
+//! Conservation under failure injection (chaos), the tentpole's safety
+//! net (ISSUE 9 satellite):
+//!
+//! * **Exact accounting**: under seeded fault plans — replica crashes,
+//!   spot preemptions, whole-tier outages — every generated request
+//!   still completes exactly once, across all three traces and fleet
+//!   sizes K ∈ {2, 3, 4}; every in-flight kill is exactly one retry.
+//! * **Drain x crash interleavings**: a deep scale-down with faults
+//!   firing never strands work or a GPU (the engines' internal
+//!   dense-slab/idle-bitset debug asserts run under these tests too).
+//! * **Inert plans are invisible**: a `FaultPlan` whose processes never
+//!   fire leaves the autoscale DES bit-identical to a run with no chaos
+//!   wired in at all — per-epoch metrics compared as serialized JSON.
+//! * **Determinism**: the same plan and seed reproduce the same fault
+//!   trace and the same per-epoch series, run to run.
+
+use fleetopt::config::PlannerConfig;
+use fleetopt::fleetsim::{
+    simulate_autoscale, simulate_autoscale_chaos, simulate_fleet_tiered_chaos, AutoscaleConfig,
+    ChaosOpts, FaultPlan, ReplicaFaults, SpotFaults, TierOutage,
+};
+use fleetopt::metrics::EpochMetrics;
+use fleetopt::planner::{plan_spec_sweep_gamma, PlanInput, TieredPlan};
+use fleetopt::router::failover::FailoverConfig;
+use fleetopt::workload::arrivals::RateModel;
+use fleetopt::workload::traces::{self, Workload};
+
+fn fast_input(w: &Workload, lambda: f64) -> PlanInput {
+    let mut i = PlanInput::new(w.clone(), lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: 8_000,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+/// K-1 boundaries for a K-tier fleet (K in 2..=4).
+fn boundaries_for(k: usize) -> &'static [u32] {
+    match k {
+        2 => &[4096],
+        3 => &[2048, 16384],
+        4 => &[1024, 4096, 16384],
+        _ => unreachable!("tests cover K in 2..=4"),
+    }
+}
+
+fn plan_for(input: &PlanInput, k: usize) -> TieredPlan {
+    let spec = input.gpu.fleet_spec(boundaries_for(k));
+    plan_spec_sweep_gamma(input, &spec).expect("plan")
+}
+
+/// A fault plan that genuinely fires at test scale: per-replica crashes
+/// every ~horizon/2, spot preemptions on preemptible SKUs, and one
+/// outage window on the named tier.
+fn stormy_plan(horizon_s: f64, outage_tier: usize, seed: u64) -> FaultPlan {
+    FaultPlan {
+        seed,
+        replica: Some(ReplicaFaults {
+            mtbf_s: horizon_s / 2.0,
+            mttr_s: horizon_s / 40.0,
+        }),
+        spot: Some(SpotFaults {
+            mtbp_s: horizon_s,
+            mttr_s: horizon_s / 30.0,
+        }),
+        outages: vec![TierOutage {
+            tier: outage_tier,
+            start_s: horizon_s * 0.4,
+            duration_s: horizon_s * 0.1,
+        }],
+    }
+}
+
+#[test]
+fn autoscale_conserves_every_request_under_faults() {
+    // Seeded fault plans x all three traces x K in {2,3,4}: exact
+    // accounting — completed == n, zero censored, and the kill/retry
+    // identity holds (every in-flight kill is requeued exactly once).
+    let n = 4_000;
+    let base = 300.0;
+    let horizon = n as f64 / base;
+    for (wi, w) in traces::all().iter().enumerate() {
+        for k in 2..=4usize {
+            let seed = 0xC0_05 + (wi * 8 + k) as u64;
+            let input = fast_input(w, base);
+            let plan = plan_for(&input, k);
+            let model = RateModel::Diurnal {
+                base,
+                amp: 0.5,
+                period_s: horizon,
+                phase: 0.0,
+            };
+            let cfg = AutoscaleConfig {
+                epoch_s: horizon / 10.0,
+                window_s: horizon / 5.0,
+                provision_delay_s: horizon / 20.0,
+                ..AutoscaleConfig::default()
+            };
+            let chaos = ChaosOpts {
+                faults: Some(stormy_plan(horizon, k - 1, seed)),
+                failover: Some(FailoverConfig::default()),
+            };
+            let rep =
+                simulate_autoscale_chaos(w, model, n, &input, plan, &cfg, seed, &chaos);
+            let label = format!("{} K={k}", w.name);
+            assert_eq!(rep.completed, n as u64, "{label}: lost requests");
+            assert_eq!(rep.censored, 0, "{label}: censored under faults");
+            assert!(
+                rep.crashes + rep.preemptions > 0,
+                "{label}: fault plan never fired"
+            );
+            assert_eq!(
+                rep.retries_total, rep.killed_in_flight,
+                "{label}: kill/retry identity broken"
+            );
+            assert_eq!(rep.time_travel_events, 0, "{label}: clamped events");
+            // Per-tier flow balance over the epoch series: every arrival
+            // into a tier completes in that tier.
+            for ti in 0..k {
+                let arr: u64 = rep.epochs.iter().map(|e| e.tiers[ti].arrivals).sum();
+                let done: u64 = rep.epochs.iter().map(|e| e.tiers[ti].completed).sum();
+                assert_eq!(arr, done, "{label}: tier {ti} unbalanced");
+            }
+        }
+    }
+}
+
+#[test]
+fn drain_and_crash_interleavings_never_strand_work() {
+    // A hard step down forces deep draining exactly while crashes and an
+    // outage are killing GPUs — the nastiest interleaving for the
+    // dense-slab/idle-bitset bookkeeping. Everything must still drain.
+    let w = traces::azure();
+    let input = fast_input(&w, 400.0);
+    let plan = plan_for(&input, 3);
+    let n = 10_000;
+    let horizon = 35.0; // ~400 req/s head, 120 req/s tail
+    let model = RateModel::Schedule(vec![(0.0, 400.0), (horizon * 0.4, 120.0)]);
+    let cfg = AutoscaleConfig {
+        epoch_s: 4.0,
+        window_s: 8.0,
+        provision_delay_s: 2.0,
+        ..AutoscaleConfig::default()
+    };
+    for seed in [3u64, 7, 0xBAD] {
+        let chaos = ChaosOpts {
+            faults: Some(stormy_plan(horizon, 0, seed)),
+            failover: Some(FailoverConfig::default()),
+        };
+        let rep = simulate_autoscale_chaos(
+            &w,
+            model.clone(),
+            n,
+            &input,
+            plan.clone(),
+            &cfg,
+            seed,
+            &chaos,
+        );
+        assert_eq!(rep.completed, n as u64, "seed {seed}: lost requests");
+        assert_eq!(rep.censored, 0, "seed {seed}");
+        assert!(rep.crashes > 0, "seed {seed}: no crashes fired");
+        assert_eq!(rep.retries_total, rep.killed_in_flight, "seed {seed}");
+        // The controller did scale down through the chaos.
+        let first = rep.epochs.first().unwrap().total_gpus();
+        let last = rep.epochs.last().unwrap().total_gpus();
+        assert!(last < first, "seed {seed}: no scale-down {first} -> {last}");
+    }
+}
+
+#[test]
+fn inert_fault_plan_is_bit_identical_to_no_chaos() {
+    // A plan with no failure processes (and an outage aimed past the
+    // fleet) schedules zero events: the chaos engine must reproduce the
+    // plain autoscale run bit for bit, failover armed or not.
+    let w = traces::lmsys();
+    let input = fast_input(&w, 250.0);
+    let plan = plan_for(&input, 2);
+    let n = 6_000;
+    let model = RateModel::Diurnal {
+        base: 250.0,
+        amp: 0.6,
+        period_s: 24.0,
+        phase: 0.0,
+    };
+    let cfg = AutoscaleConfig {
+        epoch_s: 3.0,
+        window_s: 6.0,
+        provision_delay_s: 1.5,
+        ..AutoscaleConfig::default()
+    };
+    let plain = simulate_autoscale(&w, model.clone(), n, &input, plan.clone(), &cfg, 23);
+    let inert = ChaosOpts {
+        faults: Some(FaultPlan {
+            seed: 99,
+            replica: None,
+            spot: None,
+            outages: vec![TierOutage {
+                tier: 7, // past the K = 2 fleet: never scheduled
+                start_s: 1.0,
+                duration_s: 1.0,
+            }],
+        }),
+        failover: Some(FailoverConfig::default()),
+    };
+    let chaos = simulate_autoscale_chaos(&w, model, n, &input, plan, &cfg, 23, &inert);
+    assert_eq!(chaos.crashes, 0);
+    assert_eq!(chaos.preemptions, 0);
+    assert_eq!(chaos.killed_in_flight, 0);
+    assert_eq!(chaos.spilled, 0);
+    assert_eq!(plain.completed, chaos.completed);
+    assert_eq!(plain.cost.to_bits(), chaos.cost.to_bits(), "cost diverged");
+    assert_eq!(
+        plain.gpu_hours.to_bits(),
+        chaos.gpu_hours.to_bits(),
+        "gpu-hours diverged"
+    );
+    assert_eq!(
+        EpochMetrics::series_to_json(&plain.epochs),
+        EpochMetrics::series_to_json(&chaos.epochs),
+        "per-epoch series diverged"
+    );
+}
+
+#[test]
+fn chaos_runs_are_deterministic_per_seed() {
+    let w = traces::agent_heavy();
+    let input = fast_input(&w, 200.0);
+    let plan = plan_for(&input, 2);
+    let n = 5_000;
+    let horizon = n as f64 / 200.0;
+    let model = RateModel::Constant(200.0);
+    let cfg = AutoscaleConfig {
+        epoch_s: horizon / 8.0,
+        window_s: horizon / 4.0,
+        provision_delay_s: horizon / 16.0,
+        ..AutoscaleConfig::default()
+    };
+    let chaos = ChaosOpts {
+        faults: Some(stormy_plan(horizon, 1, 0xD5)),
+        failover: Some(FailoverConfig::default()),
+    };
+    let a = simulate_autoscale_chaos(&w, model.clone(), n, &input, plan.clone(), &cfg, 6, &chaos);
+    let b = simulate_autoscale_chaos(&w, model, n, &input, plan, &cfg, 6, &chaos);
+    assert_eq!(a.crashes, b.crashes);
+    assert_eq!(a.preemptions, b.preemptions);
+    assert_eq!(a.killed_in_flight, b.killed_in_flight);
+    assert_eq!(a.spilled, b.spilled);
+    assert_eq!(a.cost.to_bits(), b.cost.to_bits());
+    assert_eq!(
+        EpochMetrics::series_to_json(&a.epochs),
+        EpochMetrics::series_to_json(&b.epochs)
+    );
+}
+
+#[test]
+fn pool_level_chaos_conserves_and_projects_per_tier() {
+    // The offline tiered DES under the same plan shape: completions plus
+    // censoring account for every routed request, and fault counters only
+    // land on tiers the plan can actually touch.
+    let w = traces::azure();
+    let input = fast_input(&w, 300.0);
+    let plan = plan_for(&input, 3);
+    let n = 6_000;
+    let horizon = n as f64 / 300.0;
+    let faults = stormy_plan(horizon, 1, 0xF00D);
+    let sim = simulate_fleet_tiered_chaos(&w, &plan, &input.gpu, 300.0, n, 21, &faults);
+    let completed: u64 = sim.tiers.iter().flatten().map(|r| r.completed).sum();
+    assert_eq!(completed + sim.censored_total(), n as u64);
+    let crashes: u64 = sim.tiers.iter().flatten().map(|r| r.crashes).sum();
+    assert!(crashes > 0, "pool-level fault plan never fired");
+    // Default-profile tiers are not preemptible: the spot process must
+    // not have produced a single preemption anywhere.
+    let preempts: u64 = sim.tiers.iter().flatten().map(|r| r.preemptions).sum();
+    assert_eq!(preempts, 0, "non-preemptible tiers saw spot preemptions");
+    // The fault-free projection (default plan) is the verbatim path.
+    let a = simulate_fleet_tiered_chaos(&w, &plan, &input.gpu, 300.0, n, 21, &FaultPlan::default());
+    let b = simulate_fleet_tiered_chaos(&w, &plan, &input.gpu, 300.0, n, 21, &FaultPlan::default());
+    for (ra, rb) in a.tiers.iter().zip(&b.tiers) {
+        match (ra, rb) {
+            (Some(ra), Some(rb)) => {
+                assert_eq!(ra.completed, rb.completed);
+                assert_eq!(ra.utilization.to_bits(), rb.utilization.to_bits());
+            }
+            (None, None) => {}
+            _ => panic!("tier provisioning diverged between identical runs"),
+        }
+    }
+}

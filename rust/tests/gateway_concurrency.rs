@@ -298,6 +298,70 @@ fn thread_cap_forces_serial_sharding() {
 }
 
 // ---------------------------------------------------------------------------
+// Failover-retry satellite: rerouting a failed request must be
+// side-effect-free on first-attempt state (ISSUE 9).
+
+/// A crash-failover retry storm must leave the gateway's first-attempt
+/// accounting untouched: the EMA estimator bits, the per-tier routed
+/// counters, and the route memo (stats *and* LRU order) are pinned before
+/// and after hammering `reroute_failed` — a retried request is a routing
+/// decision replay, not a new observation.
+#[test]
+fn failover_retries_leave_estimator_and_memo_untouched() {
+    for kind in 0..3 {
+        let (cfg, requests) = trace(kind);
+        let batch: Vec<(&str, u32)> = requests.iter().map(|(t, m)| (t.as_str(), *m)).collect();
+        let mut gw = Gateway::new(cfg.clone());
+        let mut cache = RouteCache::new(64);
+        // Warm pass: populates the estimator, counters, and memo.
+        let _warm = collect(&mut gw, &batch, 2, Some(&mut cache));
+
+        let ema = gw.estimator.c_hat_bits();
+        let metrics = gw.metrics();
+        let stats = cache.stats;
+        let lru = cache.keys_lru_order();
+        assert_eq!(gw.n_rerouted, 0);
+
+        // The storm: every request fails over three times, interleaved so
+        // any accidental state mutation would compound across requests.
+        let mut retried: Vec<Vec<RoutedRequest>> = vec![Vec::new(); batch.len()];
+        for _round in 0..3 {
+            for (i, &(text, max_out)) in batch.iter().enumerate() {
+                retried[i].push(gw.reroute_failed(text, max_out));
+            }
+        }
+
+        assert_eq!(gw.estimator.c_hat_bits(), ema, "trace {kind}: EMA moved");
+        assert_eq!(gw.metrics(), metrics, "trace {kind}: first-attempt counters moved");
+        assert_eq!(cache.stats, stats, "trace {kind}: memo stats moved");
+        assert_eq!(cache.keys_lru_order(), lru, "trace {kind}: memo LRU moved");
+        assert_eq!(gw.n_rerouted, 3 * batch.len() as u64, "trace {kind}");
+
+        // Retries are deterministic replays: all three rounds agree with
+        // each other, and the decision matches the first attempt whenever
+        // the first attempt ran on the same estimator state (i.e. for
+        // every request, the retry uses the *final* EMA — so at minimum
+        // the three retry rounds must be bit-identical among themselves).
+        for (i, rounds) in retried.iter().enumerate() {
+            for r in &rounds[1..] {
+                assert_eq!(r.tier, rounds[0].tier, "trace {kind} req {i}");
+                assert_eq!(r.text, rounds[0].text, "trace {kind} req {i}: text bytes");
+                assert_eq!(r.prompt_tokens, rounds[0].prompt_tokens, "trace {kind} req {i}");
+                assert_eq!(r.compressed, rounds[0].compressed, "trace {kind} req {i}");
+                assert_eq!(
+                    r.estimated_l_total, rounds[0].estimated_l_total,
+                    "trace {kind} req {i}"
+                );
+            }
+        }
+        // And the storm's replies still carry routable tiers.
+        for (i, rounds) in retried.iter().enumerate() {
+            assert!(rounds[0].tier < cfg.n_tiers(), "trace {kind} req {i}");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // Memo satellites: eviction order, capacity, invalidation, dispatch modes.
 
 /// LRU behaviour against a straight `Vec`-based reference model, over

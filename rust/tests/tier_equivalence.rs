@@ -457,6 +457,57 @@ fn sku_catalog_of_one_plans_bit_identical_to_plain_specs() {
 }
 
 #[test]
+fn zero_redundancy_is_bit_identical_and_spares_add_exactly_k() {
+    // The N+k sizing constraint's identity pin: k = 0 — spelled as the
+    // empty default, an explicit [0; K], or a broadcast [0] — must leave
+    // every planner output bit-identical, sweeps included (the spares
+    // ride the same closed-form lower bound, so pruning decisions cannot
+    // move either). And k > 0 adds exactly k GPUs to each provisioned
+    // tier at unchanged boundaries/gammas.
+    for w in traces::all() {
+        let input = fast_input(w.clone(), 1000.0);
+        let spec = input.gpu.fleet_spec(&[w.b_short]);
+        let base = plan_tiers(&input, &spec, &[1.5], true, None).unwrap();
+        for zero in [vec![], vec![0], vec![0, 0]] {
+            let mut iz = input.clone();
+            iz.redundancy = zero.clone();
+            let pz = plan_tiers(&iz, &spec, &[1.5], true, None).unwrap();
+            assert_eq!(pz.gpu_counts(), base.gpu_counts(), "{} {zero:?}", w.name);
+            assert_eq!(pz.cost_yr.to_bits(), base.cost_yr.to_bits(), "{} {zero:?}", w.name);
+            let (sz, _) = sweep_tiered(&iz, 2).unwrap();
+            let (sb, _) = sweep_tiered(&input, 2).unwrap();
+            assert_eq!(sz.cost_yr.to_bits(), sb.cost_yr.to_bits(), "{} {zero:?}", w.name);
+            assert_eq!(sz.boundaries(), sb.boundaries(), "{} {zero:?}", w.name);
+            assert_eq!(sz.gpu_counts(), sb.gpu_counts(), "{} {zero:?}", w.name);
+        }
+        // Broadcast N+1: every provisioned tier gains exactly one spare.
+        let mut i1 = input.clone();
+        i1.redundancy = vec![1];
+        let p1 = plan_tiers(&i1, &spec, &[1.5], true, None).unwrap();
+        for (ti, (a, b)) in base.tiers.iter().zip(&p1.tiers).enumerate() {
+            let want = if a.n_gpus > 0 { a.n_gpus + 1 } else { 0 };
+            assert_eq!(b.n_gpus, want, "{} tier {ti}", w.name);
+            assert_eq!(a.lambda.to_bits(), b.lambda.to_bits(), "{} tier {ti}", w.name);
+        }
+        // Per-tier spec: spares land only on the named tier.
+        let mut ip = input.clone();
+        ip.redundancy = vec![2, 0];
+        let pp = plan_tiers(&ip, &spec, &[1.5], true, None).unwrap();
+        let want0 = if base.tiers[0].n_gpus > 0 { base.tiers[0].n_gpus + 2 } else { 0 };
+        assert_eq!(pp.tiers[0].n_gpus, want0, "{}", w.name);
+        assert_eq!(pp.tiers[1].n_gpus, base.tiers[1].n_gpus, "{}", w.name);
+        // The sweep stays exact with spares priced into its bound: its
+        // incumbent must match the fixed-boundary plan at the incumbent's
+        // own cell.
+        let (s1, _) = sweep_tiered(&i1, 2).unwrap();
+        let spec1 = input.gpu.fleet_spec(&s1.boundaries());
+        let check = plan_tiers(&i1, &spec1, &s1.gammas, true, None).unwrap();
+        assert_eq!(s1.cost_yr.to_bits(), check.cost_yr.to_bits(), "{}", w.name);
+        assert_eq!(s1.gpu_counts(), check.gpu_counts(), "{}", w.name);
+    }
+}
+
+#[test]
 fn k3_sweep_meets_release_wall_clock_bound() {
     // Acceptance: the full K=3 boundary-combination sweep finishes inside
     // 100 ms in release mode (debug builds run it for coverage only).
