@@ -1,4 +1,4 @@
-//! Experiment drivers: one function per evaluation table (1–11), shared by
+//! Experiment drivers: one function per evaluation table (1–12), shared by
 //! the CLI (`fleetopt tables`) and the bench binaries (`cargo bench`). Each
 //! regenerates the corresponding table's rows from this implementation so
 //! measured values can be laid side-by-side with the published ones

@@ -40,10 +40,14 @@ use crate::fleetsim::idle::IdleSet;
 use crate::metrics::{EpochDigest, EpochMetrics, EpochTierMetrics};
 use crate::planner::replan::{ReplanConfig, Replanner};
 use crate::planner::{PlanInput, TieredPlan};
+use crate::queueing::kv::KvPlanPolicy;
+use crate::router::admit::{
+    decide, tightened_gammas, AdmitConfig, AdmitCounters, AdmitDecision, AdmitState,
+};
 use crate::router::failover::{effective_routes, FailoverConfig, FailoverState};
 use crate::util::rng::Rng;
 use crate::workload::arrivals::{ArrivalProcess, NonstationaryArrivals, RateModel};
-use crate::workload::online::OnlineEstimator;
+use crate::workload::online::{OnlineEstimator, SeasonalEstimator};
 use crate::workload::request::Request;
 use crate::workload::traces::Workload;
 
@@ -76,6 +80,19 @@ pub struct AutoscaleConfig {
     /// Off, the controller is bit-identical to the reactive one
     /// (property-tested: the knob only ever *raises* the planning rate).
     pub forecast: bool,
+    /// Crash-retry budget per request (chaos runs): a request killed more
+    /// than this many times is dropped — accounted in
+    /// [`AutoscaleReport::dropped_retries`], never requeued again.
+    /// `None` (default) retries forever, bit-identical to the pre-budget
+    /// engine (tested in `tests/chaos_conservation.rs`).
+    pub max_retries: Option<u32>,
+    /// Period of the seasonal (period-aware) forecaster, seconds
+    /// (`None` = off, bit-identical). When set, each epoch's windowed
+    /// rate is folded into a phase bin of the period
+    /// ([`SeasonalEstimator`]) and planning uses the larger of the
+    /// reactive estimate and the next epoch's same-phase seasonal mean —
+    /// like `forecast`, the knob only ever *raises* the planning rate.
+    pub seasonal_period_s: Option<f64>,
 }
 
 impl Default for AutoscaleConfig {
@@ -89,6 +106,8 @@ impl Default for AutoscaleConfig {
             target_headroom: 1.10,
             replanning: true,
             forecast: false,
+            max_retries: None,
+            seasonal_period_s: None,
         }
     }
 }
@@ -108,14 +127,36 @@ pub struct ChaosOpts {
     pub failover: Option<FailoverConfig>,
 }
 
+/// KV-cache options for [`simulate_autoscale_kv`]: the decode-phase
+/// memory ledger and the admission controller in front of the ladder.
+/// The default (no cap, no admission) keeps the simulation bit-identical
+/// to [`simulate_autoscale_chaos`] — KV modeling is a pure extension,
+/// never a behavior change (tested in `tests/kv_stability.rs` and
+/// `tests/admission_control.rs`).
+#[derive(Clone, Debug, Default)]
+pub struct KvFleetOpts {
+    /// Fraction of each tier's `n_max * c_max` token budget available to
+    /// request KV ([`KvPlanPolicy`]); per-GPU caps are re-derived on
+    /// every layout switch. `None` = no KV bookkeeping.
+    pub cap_frac: Option<f64>,
+    /// Watermark-hysteresis admission control (admit / compress-harder /
+    /// defer / shed) driven by per-tier projected KV occupancy. `None` =
+    /// every arrival admits exactly as before. Only meaningful together
+    /// with `cap_frac` — without a cap every occupancy reads 0.0 and the
+    /// controller never engages.
+    pub admit: Option<AdmitConfig>,
+}
+
 /// Whole-run results of an autoscaled simulation.
 #[derive(Debug)]
 pub struct AutoscaleReport {
     pub epochs: Vec<EpochMetrics>,
     pub n_total: u64,
     pub completed: u64,
-    /// Requests never completed (0 unless the run was cut short — the
-    /// conservation property the drain logic is tested against).
+    /// Requests never completed, shed, or dropped (0 unless the run was
+    /// cut short — the conservation property the drain logic is tested
+    /// against: `completed + admit.shed + dropped_retries + censored ==
+    /// n_total`).
     pub censored: u64,
     /// Requests compressed down across a boundary (C&R).
     pub n_compressed: u64,
@@ -151,6 +192,21 @@ pub struct AutoscaleReport {
     /// Arrivals routed to a different tier than the healthy ladder would
     /// have chosen, because failover dropped or tightened a boundary.
     pub spilled: u64,
+    /// Requests dropped after exhausting the crash-retry budget
+    /// ([`AutoscaleConfig::max_retries`]; always 0 when unbounded).
+    pub dropped_retries: u64,
+    /// Admission-controller decision counters (all zero with admission
+    /// off; `admitted + recompressed + admit.shed` tallies each offered
+    /// request once by its terminal decision, `deferred` counts retry
+    /// deadlines granted along the way).
+    pub admit: AdmitCounters,
+    /// Head-of-line admissions blocked on the KV gate (KV runs only).
+    pub kv_blocked: u64,
+    /// Reservations that exceeded a GPU's KV capacity — impossible by
+    /// construction except for a single request larger than the whole
+    /// per-GPU cap, which is admitted onto an empty GPU (blocking would
+    /// deadlock) and counted here. The CI overload gate requires 0.
+    pub kv_violations: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -182,6 +238,9 @@ struct AGpu {
     /// Repair time / classification of the next drawn failure.
     fail_mttr: f64,
     fail_preempt: bool,
+    /// KV tokens reserved by in-flight requests (full-residency
+    /// `l_in + l_out` reservations; always 0 with KV bookkeeping off).
+    kv_reserved: u64,
 }
 
 impl AGpu {
@@ -198,6 +257,7 @@ impl AGpu {
             frng: None,
             fail_mttr: 0.0,
             fail_preempt: false,
+            kv_reserved: 0,
         }
     }
 
@@ -260,6 +320,17 @@ struct Tier {
     /// Whether this tier's SKU is spot-preemptible (chaos runs draw
     /// preemption events only against preemptible tiers).
     preemptible: bool,
+    /// Per-GPU KV token capacity (None = no KV bookkeeping). Re-derived
+    /// from the tier spec on every layout switch.
+    kv_cap: Option<u64>,
+    /// KV tokens the queued (not yet admitted) requests will reserve —
+    /// the "projected" part of the admission watermark's occupancy.
+    kv_queued: u64,
+    /// Head-of-line admissions blocked on the KV gate.
+    kv_blocked: u64,
+    /// Oversized reservations admitted past the cap (see
+    /// [`AutoscaleReport::kv_violations`]).
+    kv_violations: u64,
 }
 
 impl Tier {
@@ -303,6 +374,10 @@ impl Tier {
             arrivals_total: 0,
             outage_depth: 0,
             preemptible: false,
+            kv_cap: None,
+            kv_queued: 0,
+            kv_blocked: 0,
+            kv_violations: 0,
         }
     }
 
@@ -318,6 +393,29 @@ impl Tier {
         self.gpu_acc += self.n_alive as f64 * dt;
         self.gpu_total += self.n_alive as f64 * dt;
         self.last_t = t;
+    }
+
+    /// Projected KV occupancy: reserved tokens on serving GPUs plus the
+    /// queue's outstanding demand, over serving KV capacity. 0.0 with KV
+    /// bookkeeping off; 1.0 when the tier has KV demand but no serving
+    /// capacity at all (every watermark reads saturated).
+    fn kv_occupancy(&self) -> f64 {
+        let Some(cap) = self.kv_cap else {
+            return 0.0;
+        };
+        let mut reserved = self.kv_queued;
+        let mut n_serving = 0u64;
+        for g in &self.gpus {
+            if g.alive && !g.down {
+                reserved += g.kv_reserved;
+                n_serving += 1;
+            }
+        }
+        let denom = n_serving * cap;
+        if denom == 0 {
+            return if reserved > 0 { 1.0 } else { 0.0 };
+        }
+        reserved as f64 / denom as f64
     }
 
     /// Alive GPUs that are accepting work (not draining, not down).
@@ -370,9 +468,27 @@ impl Tier {
                     return;
                 }
             }
-            let Some(req) = self.queue.pop_front() else {
+            let Some(&req) = self.queue.front() else {
                 return;
             };
+            // KV gate (head-of-line, FCFS preserved — no overtaking): the
+            // front request reserves its full-residency `l_in + l_out`
+            // tokens, or the whole queue waits for completions to free
+            // them. An oversized request on an *empty* GPU admits anyway
+            // (blocking would deadlock) and trips the violation counter.
+            if let Some(cap) = self.kv_cap {
+                let need = l_in_routed[req] as u64 + l_out_of[req] as u64;
+                if self.gpus[gi].kv_reserved + need > cap {
+                    if self.gpus[gi].kv_reserved > 0 {
+                        self.kv_blocked += 1;
+                        return;
+                    }
+                    self.kv_violations += 1;
+                }
+                self.gpus[gi].kv_reserved += need;
+                self.kv_queued = self.kv_queued.saturating_sub(need);
+            }
+            self.queue.pop_front();
             self.wait_epoch.push(t - arrival_of[req]);
             let g = &mut self.gpus[gi];
             let prefill = (l_in_routed[req] as u64).div_ceil(chunk as u64) as u32;
@@ -438,8 +554,19 @@ impl Tier {
     /// head of the tier queue in request order, each counted as a retry),
     /// invalidate its pending events via the generation bump, and drop it
     /// from the admitting set. The GPU stays provisioned (and billed)
-    /// until restored or retired. Returns the number of kills.
-    fn take_down(&mut self, gi: usize, retries: &mut [u32]) -> u64 {
+    /// until restored or retired. A request whose retry count exceeds
+    /// `max_retries` is dropped instead of requeued (`None` = unbounded).
+    /// Returns the number of kills.
+    #[allow(clippy::too_many_arguments)]
+    fn take_down(
+        &mut self,
+        gi: usize,
+        retries: &mut [u32],
+        l_in_routed: &[u32],
+        l_out_of: &[u32],
+        max_retries: Option<u32>,
+        dropped: &mut u64,
+    ) -> u64 {
         let g = &mut self.gpus[gi];
         debug_assert!(g.alive && !g.down, "taking down a dead/down GPU");
         let mut killed: Vec<usize> = g.active.iter().map(|a| a.req).collect();
@@ -447,12 +574,20 @@ impl Tier {
         g.iterating = false;
         g.gen = g.gen.wrapping_add(1);
         g.down = true;
+        g.kv_reserved = 0;
         killed.sort_unstable();
         // push_front in descending request order leaves the queue head at
         // the lowest request index — retried work goes back first-in-line.
         for &req in killed.iter().rev() {
-            self.queue.push_front(req);
             retries[req] += 1;
+            if max_retries.is_some_and(|budget| retries[req] > budget) {
+                *dropped += 1;
+                continue;
+            }
+            self.queue.push_front(req);
+            if self.kv_cap.is_some() {
+                self.kv_queued += l_in_routed[req] as u64 + l_out_of[req] as u64;
+            }
         }
         self.busy_slots -= killed.len() as u64;
         self.sync_idle(gi);
@@ -480,6 +615,9 @@ enum Ev {
     /// Scheduled whole-tier outage window opens / closes.
     OutageStart(usize),
     OutageEnd(usize),
+    /// A deferred arrival re-entering admission after its deadline.
+    /// Never scheduled with admission control off.
+    AdmitRetry(usize),
 }
 
 /// The queue-wait budget a tier's SLO check compares against — the exact
@@ -606,6 +744,7 @@ fn apply_scaling(
     gammas: &mut Vec<f64>,
     slo_default_s: f64,
     time_travel: &mut u64,
+    kv: Option<KvPlanPolicy>,
 ) {
     if switched {
         *boundaries = plan.boundaries();
@@ -619,6 +758,8 @@ fn apply_scaling(
             tier.slo_s = spec_t.slo_or(slo_default_s);
             tier.cost_hr = spec_t.cost_hr;
             tier.preemptible = spec_t.sku.is_some_and(|s| s.preemptible);
+            // The per-GPU KV cap follows the tier's slot shape.
+            tier.kv_cap = kv.map(|p| p.cap_tokens(spec_t.n_max, spec_t.c_max));
         }
         // Re-derive the epoch SLO's wait budget from this replan's
         // calibration (the residual distribution shifts with gamma).
@@ -765,6 +906,36 @@ pub fn simulate_autoscale(
     simulate_autoscale_chaos(w, model, n, input, initial, cfg, seed, &ChaosOpts::default())
 }
 
+/// [`simulate_autoscale_chaos`] with decode-phase KV-cache modeling and
+/// stability-guarded admission control (see [`KvFleetOpts`]). With the
+/// default opts this *is* `simulate_autoscale_chaos`, bit for bit: no
+/// reservation is ever taken, no occupancy observed, no retry event
+/// scheduled.
+///
+/// With a cap: every admitted request reserves `l_in + l_out` KV tokens
+/// on its GPU for its full residency; admission blocks head-of-line when
+/// the reservation would not fit (requests queue rather than
+/// oversubscribe — KV violations are impossible by construction, modulo
+/// a single request larger than the whole per-GPU cap). With admission
+/// control on top, each arrival is held against its target tier's
+/// projected occupancy and escalates engage-side through compress-harder
+/// (gamma-tightened ladder), defer-with-deadline, and shed as the last
+/// resort — 429-style accounting in [`AutoscaleReport::admit`].
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_autoscale_kv(
+    w: &Workload,
+    model: RateModel,
+    n: usize,
+    input: &PlanInput,
+    initial: TieredPlan,
+    cfg: &AutoscaleConfig,
+    seed: u64,
+    chaos: &ChaosOpts,
+    kv: &KvFleetOpts,
+) -> AutoscaleReport {
+    simulate_autoscale_impl(w, model, n, input, initial, cfg, seed, chaos, kv)
+}
+
 /// [`simulate_autoscale`] with failure injection and failover response
 /// (see [`ChaosOpts`]). With the default opts this *is*
 /// `simulate_autoscale`, bit for bit: no fault event is ever scheduled,
@@ -797,6 +968,31 @@ pub fn simulate_autoscale_chaos(
     seed: u64,
     chaos: &ChaosOpts,
 ) -> AutoscaleReport {
+    simulate_autoscale_impl(
+        w,
+        model,
+        n,
+        input,
+        initial,
+        cfg,
+        seed,
+        chaos,
+        &KvFleetOpts::default(),
+    )
+}
+
+#[allow(clippy::too_many_arguments)]
+fn simulate_autoscale_impl(
+    w: &Workload,
+    model: RateModel,
+    n: usize,
+    input: &PlanInput,
+    initial: TieredPlan,
+    cfg: &AutoscaleConfig,
+    seed: u64,
+    chaos: &ChaosOpts,
+    kv: &KvFleetOpts,
+) -> AutoscaleReport {
     assert!(n > 0, "need at least one request");
     assert!(cfg.epoch_s > 0.0 && cfg.window_s > 0.0);
     assert!(
@@ -805,6 +1001,17 @@ pub fn simulate_autoscale_chaos(
     );
     let k = initial.k();
     assert!(k >= 2);
+    let kv_policy = kv.cap_frac.map(|f| {
+        assert!(
+            f.is_finite() && f > 0.0 && f <= 1.0,
+            "kv cap_frac must be inside (0, 1], got {f}"
+        );
+        KvPlanPolicy { cap_frac: f }
+    });
+    let admit_cfg = kv.admit;
+    if let Some(a) = &admit_cfg {
+        a.validate().expect("invalid admission config");
+    }
 
     // Trace: seeded exactly like `route_trace_tiered` so the stationary
     // projection routes bit-identically.
@@ -840,6 +1047,7 @@ pub fn simulate_autoscale_chaos(
                 wait_budget_s(slo, &pool.svc),
             );
             tier.preemptible = ts.sku.is_some_and(|s| s.preemptible);
+            tier.kv_cap = kv_policy.map(|p| p.cap_tokens(ts.n_max, ts.c_max));
             tier
         })
         .collect();
@@ -888,7 +1096,14 @@ pub fn simulate_autoscale_chaos(
     }
 
     let mut estimator = OnlineEstimator::new(cfg.window_s);
+    let mut seasonal = cfg.seasonal_period_s.map(|p| SeasonalEstimator::new(p, 16));
     let mut replanner = Replanner::new(cfg.replan.clone(), initial);
+    let mut admit_state = AdmitState::default();
+    let mut admit_counters = AdmitCounters::default();
+    // Per-request defer counts, allocated only when admission is on.
+    let mut defers: Vec<u32> = if admit_cfg.is_some() { vec![0; n] } else { Vec::new() };
+    let mut shed_total = 0u64;
+    let mut dropped_total = 0u64;
     let mut done = vec![false; n];
     let mut completed_total = 0u64;
     let mut n_compressed = 0u64;
@@ -899,7 +1114,7 @@ pub fn simulate_autoscale_chaos(
     let mut t_last = 0.0;
 
     while let Some((t, ev)) = events.pop() {
-        if completed_total == n as u64 {
+        if completed_total + shed_total + dropped_total == n as u64 {
             // All work done: trailing controller/provision/fault events
             // are inert (capacity added after the horizon would cost
             // money for no traffic — and a crash-restore cycle with no
@@ -916,10 +1131,13 @@ pub fn simulate_autoscale_chaos(
         }
         t_last = t;
         match ev {
-            Ev::Arrival(i) => {
-                estimator.observe(t, requests[i].l_total);
+            Ev::Arrival(i) | Ev::AdmitRetry(i) => {
+                let is_first = matches!(ev, Ev::Arrival(_));
+                if is_first {
+                    estimator.observe(t, requests[i].l_total);
+                }
                 let r = &requests[i];
-                let (ti, l_in, comp) = match &eff {
+                let (mut ti, mut l_in, mut comp) = match &eff {
                     // Degraded ladder in force: route on the effective
                     // vectors, map back to the physical tier, and count
                     // the spill against what the healthy ladder would
@@ -942,7 +1160,7 @@ pub fn simulate_autoscale_chaos(
                             &boundaries,
                             &gammas,
                         );
-                        if oti != ti {
+                        if oti != ti && is_first {
                             spilled += 1;
                         }
                         (ti, l_in, comp)
@@ -956,6 +1174,64 @@ pub fn simulate_autoscale_chaos(
                         &gammas,
                     ),
                 };
+                // Stability-guarded admission: hold the arrival against
+                // its target tier's projected KV occupancy and escalate
+                // engage-side through the paper-ordered ladder. Off
+                // (`admit: None`), the arrival takes the exact
+                // pre-admission path above.
+                if let Some(acfg) = &admit_cfg {
+                    let occ = tiers[ti].kv_occupancy();
+                    let engaged = admit_state.observe(ti, occ, acfg);
+                    let defers_used = defers[i];
+                    // Compress-harder is terminal (it admits into a
+                    // tightened band), so it is attempted at most once.
+                    let can_recompress = defers_used == 0
+                        && acfg.gamma_tighten > 1.0
+                        && r.category.compressible();
+                    match decide(engaged, can_recompress, defers_used, acfg) {
+                        AdmitDecision::Admit => admit_counters.admitted += 1,
+                        AdmitDecision::Recompress => {
+                            admit_counters.recompressed += 1;
+                            // Re-route on the gamma-tightened ladder the
+                            // arrival would otherwise have used.
+                            let (eb, eg): (&[u32], &[f64]) = match &eff {
+                                Some((eb, eg, _)) => (eb, eg),
+                                None => (&boundaries, &gammas),
+                            };
+                            let tg = tightened_gammas(eg, acfg.gamma_tighten);
+                            let (nti, nl_in, ncomp) = crate::fleetsim::fleet::route_request(
+                                r.l_total,
+                                r.l_in,
+                                r.l_out,
+                                true,
+                                eb,
+                                &tg,
+                            );
+                            ti = match &eff {
+                                Some((_, _, map)) => map[nti],
+                                None => nti,
+                            };
+                            l_in = nl_in;
+                            comp = ncomp;
+                        }
+                        AdmitDecision::Defer => {
+                            admit_counters.deferred += 1;
+                            defers[i] += 1;
+                            schedule_logged(
+                                &mut events,
+                                t + acfg.defer_s,
+                                Ev::AdmitRetry(i),
+                                &mut time_travel,
+                            );
+                            continue;
+                        }
+                        AdmitDecision::Shed => {
+                            admit_counters.shed += 1;
+                            shed_total += 1;
+                            continue;
+                        }
+                    }
+                }
                 l_in_routed[i] = l_in;
                 if comp {
                     n_compressed += 1;
@@ -965,6 +1241,9 @@ pub fn simulate_autoscale_chaos(
                     tier.integrate(t);
                     tier.arrivals_epoch += 1;
                     tier.arrivals_total += 1;
+                    if tier.kv_cap.is_some() {
+                        tier.kv_queued += l_in as u64 + l_out_of[i] as u64;
+                    }
                     tier.queue.push_back(i);
                     tier.wake_candidate()
                 };
@@ -1004,6 +1283,12 @@ pub fn simulate_autoscale_chaos(
                         assert!(!done[req], "request {req} completed twice");
                         done[req] = true;
                         gpu.active.swap_remove(s);
+                        if tier.kv_cap.is_some() {
+                            // Release the full-residency KV reservation.
+                            gpu.kv_reserved = gpu
+                                .kv_reserved
+                                .saturating_sub(l_in_routed[req] as u64 + l_out_of[req] as u64);
+                        }
                         completed_total += 1;
                         tier.completed_epoch += 1;
                         tier.completed_total += 1;
@@ -1073,7 +1358,14 @@ pub fn simulate_autoscale_chaos(
                     crashes += 1;
                 }
                 tiers[ti].integrate(t);
-                killed_in_flight += tiers[ti].take_down(gi, &mut retries);
+                killed_in_flight += tiers[ti].take_down(
+                    gi,
+                    &mut retries,
+                    &l_in_routed,
+                    &l_out_of,
+                    cfg.max_retries,
+                    &mut dropped_total,
+                );
                 if draining {
                     // The scale-down victim died before draining: it can
                     // retire on the spot, nothing left to serve out.
@@ -1147,7 +1439,14 @@ pub fn simulate_autoscale_chaos(
                         if !alive || down {
                             continue;
                         }
-                        killed_in_flight += tiers[ti].take_down(gi, &mut retries);
+                        killed_in_flight += tiers[ti].take_down(
+                            gi,
+                            &mut retries,
+                            &l_in_routed,
+                            &l_out_of,
+                            cfg.max_retries,
+                            &mut dropped_total,
+                        );
                         if draining {
                             tiers[ti].gpus[gi].down = false;
                             tiers[ti].retire(gi);
@@ -1205,7 +1504,19 @@ pub fn simulate_autoscale_chaos(
                 // one epoch ahead and take whichever is larger (one
                 // buffer pass either way).
                 let horizon = cfg.forecast.then_some(cfg.epoch_s);
-                let lambda_plan = estimator.planning_rate(t, 4, horizon) * cfg.target_headroom;
+                let mut lambda_plan =
+                    estimator.planning_rate(t, 4, horizon) * cfg.target_headroom;
+                // Seasonal (period-aware) anticipation: fold this epoch's
+                // windowed rate into its phase bin, then raise the plan to
+                // the next epoch's same-phase historical mean if that is
+                // larger. First pass through the period has no history and
+                // leaves the reactive estimate untouched.
+                if let Some(se) = &mut seasonal {
+                    se.observe(t, lambda_est);
+                    if let Some(f) = se.forecast(t + cfg.epoch_s) {
+                        lambda_plan = lambda_plan.max(f * cfg.target_headroom);
+                    }
+                }
                 let mut switched = false;
                 if cfg.replanning && lambda_plan > 0.0 {
                     let mut pi = input.clone();
@@ -1229,6 +1540,7 @@ pub fn simulate_autoscale_chaos(
                             &mut gammas,
                             input.slo.p99_ttft_s,
                             &mut time_travel,
+                            kv_policy,
                         );
                         // Boundaries, gammas, and targets may all have
                         // moved; re-derive the failover view against them.
@@ -1252,7 +1564,7 @@ pub fn simulate_autoscale_chaos(
                 ));
                 epoch_idx += 1;
                 epoch_start = t;
-                if completed_total < n as u64 {
+                if completed_total + shed_total + dropped_total < n as u64 {
                     schedule_logged(&mut events, t + cfg.epoch_s, Ev::Epoch, &mut time_travel);
                 }
             }
@@ -1300,7 +1612,7 @@ pub fn simulate_autoscale_chaos(
     AutoscaleReport {
         n_total: n as u64,
         completed: completed_total,
-        censored: n as u64 - completed_total,
+        censored: n as u64 - completed_total - shed_total - dropped_total,
         n_compressed,
         gpu_hours,
         cost,
@@ -1316,5 +1628,9 @@ pub fn simulate_autoscale_chaos(
         retries_total: retries.iter().map(|&r| r as u64).sum(),
         max_retry: retries.iter().copied().max().unwrap_or(0),
         spilled,
+        dropped_retries: dropped_total,
+        admit: admit_counters,
+        kv_blocked: tiers.iter().map(|x| x.kv_blocked).sum(),
+        kv_violations: tiers.iter().map(|x| x.kv_violations).sum(),
     }
 }

@@ -221,6 +221,9 @@ struct TierSimCfg {
     warmup_s: f64,
     mu_scale: f64,
     faults: Option<PoolFaultPlan>,
+    /// Per-GPU KV token cap for this tier (`None` = no KV bookkeeping —
+    /// the bit-identical slot-only engine).
+    kv_cap: Option<u64>,
 }
 
 /// Simulate every tier of a routed trace, one capped worker per tier via
@@ -244,6 +247,7 @@ fn simulate_tiers(
             let mut cfg = SimConfig::new(tier_g, tc.n_gpus, tc.n_slots);
             cfg.warmup_s = tc.warmup_s;
             cfg.faults = tc.faults.clone();
+            cfg.kv_cap_tokens = tc.kv_cap;
             simulate_pool(&cfg, trace)
         })
     })
@@ -274,6 +278,7 @@ pub fn simulate_fleet(
             warmup_s: warmup_s(&plan.short.svc),
             mu_scale: 1.0,
             faults: None,
+            kv_cap: None,
         },
         TierSimCfg {
             n_gpus: plan.long.n_gpus,
@@ -281,6 +286,7 @@ pub fn simulate_fleet(
             warmup_s: warmup_s(&plan.long.svc),
             mu_scale: 1.0,
             faults: None,
+            kv_cap: None,
         },
     ];
     let mut routed = route_trace_tiered(w, lambda, n, &[plan.b_short], &[plan.gamma], seed);
@@ -332,6 +338,25 @@ pub fn simulate_fleet_tiered_chaos(
     seed: u64,
     faults: &FaultPlan,
 ) -> TieredSimResult {
+    simulate_fleet_tiered_kv(w, plan, g, lambda, n, seed, faults, None)
+}
+
+/// [`simulate_fleet_tiered_chaos`] with per-tier KV caps: `kv` is the
+/// fraction of each tier's `n_max * c_max` token budget available to
+/// request KV ([`crate::queueing::kv::KvPlanPolicy`]). `None` performs no
+/// KV bookkeeping — bit-identical to the slot-only engines, which is why
+/// the chaos/plain entry points delegate here with `None`.
+#[allow(clippy::too_many_arguments)]
+pub fn simulate_fleet_tiered_kv(
+    w: &Workload,
+    plan: &TieredPlan,
+    g: &GpuProfile,
+    lambda: f64,
+    n: usize,
+    seed: u64,
+    faults: &FaultPlan,
+    kv: Option<crate::queueing::kv::KvPlanPolicy>,
+) -> TieredSimResult {
     let boundaries = plan.boundaries();
     let routed = route_trace_tiered(w, lambda, n, &boundaries, &plan.gammas, seed);
     let cfgs: Vec<TierSimCfg> = plan
@@ -347,6 +372,7 @@ pub fn simulate_fleet_tiered_chaos(
             // spec; plain plans default to 1.0 (identity profile).
             mu_scale: tier.mu_scale(),
             faults: faults.pool(ti, tier.sku.is_some_and(|s| s.preemptible)),
+            kv_cap: kv.map(|p| p.cap_tokens(tier.n_max, tier.c_max)),
         })
         .collect();
     let results = simulate_tiers(g, &cfgs, &routed.tiers);

@@ -19,14 +19,15 @@ pub mod sim;
 pub mod stress;
 
 pub use autoscale::{
-    simulate_autoscale, simulate_autoscale_chaos, AutoscaleConfig, AutoscaleReport, ChaosOpts,
+    simulate_autoscale, simulate_autoscale_chaos, simulate_autoscale_kv, AutoscaleConfig,
+    AutoscaleReport, ChaosOpts, KvFleetOpts,
 };
 pub use events::{EventQueue, PastScheduleError, QueueImpl};
 pub use faults::{FailureDraw, FaultPlan, PoolFaultPlan, ReplicaFaults, SpotFaults, TierOutage};
 pub use fleet::{
     route_request, route_trace, route_trace_tiered, route_trace_tiered_model, simulate_fleet,
-    simulate_fleet_tiered, simulate_fleet_tiered_chaos, FleetSimResult, RoutedTrace,
-    TieredSimResult, TieredTrace,
+    simulate_fleet_tiered, simulate_fleet_tiered_chaos, simulate_fleet_tiered_kv, FleetSimResult,
+    RoutedTrace, TieredSimResult, TieredTrace,
 };
 pub use sim::{simulate_pool, simulate_pool_with, SimConfig, SimRequest, SimResult, SimScratch};
 pub use stress::{mean_occupancy_s, run_stress, StressConfig, StressReport};

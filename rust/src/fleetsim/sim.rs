@@ -78,6 +78,19 @@ pub struct SimConfig {
     /// drawn repair time (no provisioning delay at pool level; the
     /// autoscale DES adds one).
     pub faults: Option<PoolFaultPlan>,
+    /// Per-GPU KV capacity in tokens. A request reserves `l_in + l_out`
+    /// tokens for its whole residency at admission (the engine can never
+    /// be forced to evict mid-decode); admission blocks head-of-line when
+    /// the reservation would exceed the cap, so requests queue rather
+    /// than oversubscribe. `None` (the default) performs no KV
+    /// bookkeeping in the admission path — bit-identical to the
+    /// slot-only engine (`tests/kv_stability.rs`).
+    pub kv_cap_tokens: Option<u64>,
+    /// Crash-retry budget per request: a kill beyond this many retries
+    /// drops the request into [`SimResult::dropped_retries`] instead of
+    /// requeueing it. `None` (the default) retries without bound —
+    /// bit-identical to the pre-budget engine.
+    pub max_retries: Option<u32>,
 }
 
 impl SimConfig {
@@ -92,6 +105,8 @@ impl SimConfig {
             horizon_s: None,
             queue_impl: QueueImpl::Calendar,
             faults: None,
+            kv_cap_tokens: None,
+            max_retries: None,
         }
     }
 }
@@ -128,6 +143,23 @@ pub struct SimResult {
     /// pool's retry count (the conservation identity
     /// `tests/chaos_conservation.rs` pins).
     pub killed_in_flight: u64,
+    /// Requests whose crash-retry budget ([`SimConfig::max_retries`]) was
+    /// exhausted: dropped, never completed. Conservation becomes
+    /// `completed + censored + dropped_retries == n`; always 0 with an
+    /// unbounded budget.
+    pub dropped_retries: u64,
+    /// Mean KV occupancy over the measurement window as a fraction of
+    /// `n_gpus * kv_cap_tokens` (0.0 with KV tracking off) — the DES
+    /// measurement the analytical `rho_kv` is validated against
+    /// (Table 12).
+    pub kv_util: f64,
+    /// Admission attempts blocked by the KV cap while slots were free —
+    /// the signature of a KV-bound (rather than slot-bound) pool.
+    pub kv_blocked: u64,
+    /// Ledger violations (reserved tokens above the cap). Zero by
+    /// construction — reservation admission never oversubscribes — and
+    /// kept as a tripwire for the CI overload gate.
+    pub kv_violations: u64,
 }
 
 #[derive(Clone, Copy, Debug)]
@@ -139,6 +171,9 @@ struct Active {
     iters_left: u32,
     /// Whether TTFT has been recorded.
     first_token_done: bool,
+    /// KV tokens reserved for this request (`l_in + l_out`; 0 with KV
+    /// tracking off), released at completion or kill.
+    kv_tokens: u32,
 }
 
 struct Gpu {
@@ -151,6 +186,11 @@ struct Gpu {
     iterating: bool,
     /// Integral of busy slots over time, clipped to the window.
     busy_integral: f64,
+    /// KV tokens currently reserved (sum of active `kv_tokens`; always 0
+    /// with KV tracking off).
+    kv_reserved: u64,
+    /// Integral of reserved KV tokens over time, clipped to the window.
+    kv_integral: f64,
     last_change: f64,
     /// Crashed / preempted / in an outage: provisioned but not serving.
     down: bool,
@@ -171,6 +211,8 @@ impl Gpu {
             n_slots,
             iterating: false,
             busy_integral: 0.0,
+            kv_reserved: 0,
+            kv_integral: 0.0,
             last_change: 0.0,
             down: false,
             gen: 0,
@@ -187,6 +229,8 @@ impl Gpu {
         self.n_slots = n_slots;
         self.iterating = false;
         self.busy_integral = 0.0;
+        self.kv_reserved = 0;
+        self.kv_integral = 0.0;
         self.last_change = 0.0;
         self.down = false;
         self.gen = 0;
@@ -204,6 +248,8 @@ impl Gpu {
         let hi = t.min(window.1);
         if hi > lo {
             self.busy_integral += self.n_busy() as f64 * (hi - lo);
+            // Zero forever with KV tracking off (kv_reserved stays 0).
+            self.kv_integral += self.kv_reserved as f64 * (hi - lo);
         }
         self.last_change = t;
     }
@@ -239,6 +285,8 @@ pub struct SimScratch {
     queue: VecDeque<usize>,
     events: Option<EventQueue<Ev>>,
     idle: IdleSet,
+    /// Per-request kill counts (allocated only under a retry budget).
+    retries: Vec<u32>,
 }
 
 impl SimScratch {
@@ -247,8 +295,18 @@ impl SimScratch {
     }
 }
 
+/// The per-run KV ledger counters threaded through admission.
+#[derive(Clone, Copy, Default)]
+struct KvLedger {
+    cap: Option<u64>,
+    blocked: u64,
+    violations: u64,
+}
+
 /// FCFS admission: fill `g`'s free slots from the shared queue, recording
-/// each admission's queue wait (measured requests only).
+/// each admission's queue wait (measured requests only). Under a KV cap
+/// the head of line must also fit the GPU's remaining token budget —
+/// requests behind it wait (FCFS is preserved; no overtaking).
 fn admit(
     g: &mut Gpu,
     queue: &mut VecDeque<usize>,
@@ -257,16 +315,31 @@ fn admit(
     requests: &[SimRequest],
     warm: usize,
     chunk: u32,
+    kv: &mut KvLedger,
 ) {
     while g.free_slots() > 0 {
-        let Some(req) = queue.pop_front() else { break };
+        let Some(&req) = queue.front() else { break };
         let r = &requests[req];
+        let mut kv_tokens = 0u32;
+        if let Some(cap) = kv.cap {
+            kv_tokens = r.l_in + r.l_out;
+            if g.kv_reserved + kv_tokens as u64 > cap {
+                kv.blocked += 1;
+                break;
+            }
+            g.kv_reserved += kv_tokens as u64;
+            if g.kv_reserved > cap {
+                kv.violations += 1;
+            }
+        }
+        queue.pop_front();
         let prefill = (r.l_in as u64).div_ceil(chunk as u64) as u32;
         g.active.push(Active {
             req,
             prefill_left: prefill,
             iters_left: prefill + r.l_out,
             first_token_done: false,
+            kv_tokens,
         });
         if req >= warm {
             wait.push(t - r.arrival_s);
@@ -291,8 +364,10 @@ fn arm_fault(g: &mut Gpu, events: &mut EventQueue<Ev>, t: f64, gi: usize, fp: &P
 
 /// Take GPU `gi` down: kill its in-flight requests (requeued at the head
 /// of the shared FCFS queue in request order), invalidate its pending
-/// events via the generation bump, and drop it from the idle set. Returns
-/// the number of kills.
+/// events via the generation bump, and drop it from the idle set. Under a
+/// retry budget, a kill beyond `max_retries` drops the request instead of
+/// requeueing it (counted in `dropped`). Returns the number of kills.
+#[allow(clippy::too_many_arguments)]
 fn take_down(
     g: &mut Gpu,
     queue: &mut VecDeque<usize>,
@@ -300,10 +375,14 @@ fn take_down(
     gi: usize,
     t: f64,
     window: (f64, f64),
+    max_retries: Option<u32>,
+    retries: &mut [u32],
+    dropped: &mut u64,
 ) -> u64 {
     g.accumulate(t, window);
     let mut killed: Vec<usize> = g.active.iter().map(|a| a.req).collect();
     g.active.clear();
+    g.kv_reserved = 0;
     g.iterating = false;
     g.gen = g.gen.wrapping_add(1);
     g.down = true;
@@ -311,6 +390,13 @@ fn take_down(
     // push_front in descending request order leaves the queue head at the
     // lowest request index — retried work goes back first-in-line.
     for &req in killed.iter().rev() {
+        if let Some(budget) = max_retries {
+            retries[req] += 1;
+            if retries[req] > budget {
+                *dropped += 1;
+                continue;
+            }
+        }
         queue.push_front(req);
     }
     idle.remove(gi);
@@ -360,6 +446,10 @@ pub fn simulate_pool_with(
     scratch.gpus.truncate(n_gpus);
     scratch.queue.clear();
     scratch.idle.reset(n_gpus);
+    scratch.retries.clear();
+    if cfg.max_retries.is_some() {
+        scratch.retries.resize(n_req, 0);
+    }
     let reuse = matches!(&scratch.events, Some(q) if q.queue_impl() == cfg.queue_impl);
     if reuse {
         scratch.events.as_mut().expect("checked").reset();
@@ -371,6 +461,7 @@ pub fn simulate_pool_with(
         queue,
         events,
         idle,
+        retries,
     } = scratch;
     let events = events.as_mut().expect("just set");
     for gi in 0..n_gpus {
@@ -399,6 +490,11 @@ pub fn simulate_pool_with(
     let mut crashes = 0u64;
     let mut preemptions = 0u64;
     let mut killed_in_flight = 0u64;
+    let mut dropped_retries = 0u64;
+    let mut kv = KvLedger {
+        cap: cfg.kv_cap_tokens,
+        ..KvLedger::default()
+    };
     let mut outage_depth = 0u32;
 
     while let Some((t, ev)) = events.pop() {
@@ -407,7 +503,7 @@ pub fn simulate_pool_with(
                 break;
             }
         }
-        if completed == n_req as u64 {
+        if completed + dropped_retries == n_req as u64 {
             // All work done: a crash-restore cycle with no traffic left
             // would re-arm forever and never terminate.
             match ev {
@@ -430,7 +526,7 @@ pub fn simulate_pool_with(
                     let g = &mut gpus[gi];
                     debug_assert!(!g.iterating && g.active.is_empty());
                     g.accumulate(t, window);
-                    admit(g, queue, t, &mut wait, requests, warm, chunk);
+                    admit(g, queue, t, &mut wait, requests, warm, chunk, &mut kv);
                     if g.n_busy() > 0 {
                         let dt = if cfg.lockstep_full {
                             t_iter_full
@@ -471,13 +567,14 @@ pub fn simulate_pool_with(
                             // Degenerate L_out: first token == last.
                             ttft.push(t - requests[a.req].arrival_s);
                         }
-                        g.active.swap_remove(s);
+                        let done = g.active.swap_remove(s);
+                        g.kv_reserved -= done.kv_tokens as u64;
                         completed += 1;
                     } else {
                         s += 1;
                     }
                 }
-                admit(g, queue, t, &mut wait, requests, warm, chunk);
+                admit(g, queue, t, &mut wait, requests, warm, chunk, &mut kv);
                 if g.n_busy() > 0 {
                     let dt = if cfg.lockstep_full {
                         t_iter_full
@@ -502,7 +599,17 @@ pub fn simulate_pool_with(
                     crashes += 1;
                 }
                 let mttr = g.fail_mttr;
-                killed_in_flight += take_down(g, queue, idle, gi, t, window);
+                killed_in_flight += take_down(
+                    g,
+                    queue,
+                    idle,
+                    gi,
+                    t,
+                    window,
+                    cfg.max_retries,
+                    retries,
+                    &mut dropped_retries,
+                );
                 let restore_gen = g.gen;
                 if outage_depth == 0 {
                     // During an outage the pool-wide OutageEnd revives.
@@ -516,7 +623,7 @@ pub fn simulate_pool_with(
                     let g = &mut gpus[wi];
                     debug_assert!(!g.iterating && g.active.is_empty() && !g.down);
                     g.accumulate(t, window);
-                    admit(g, queue, t, &mut wait, requests, warm, chunk);
+                    admit(g, queue, t, &mut wait, requests, warm, chunk, &mut kv);
                     if g.n_busy() == 0 {
                         break;
                     }
@@ -545,7 +652,7 @@ pub fn simulate_pool_with(
                 if let Some(fp) = &cfg.faults {
                     arm_fault(g, events, t, gi, fp);
                 }
-                admit(g, queue, t, &mut wait, requests, warm, chunk);
+                admit(g, queue, t, &mut wait, requests, warm, chunk, &mut kv);
                 if g.n_busy() > 0 {
                     let dt = if cfg.lockstep_full {
                         t_iter_full
@@ -566,7 +673,17 @@ pub fn simulate_pool_with(
                         if g.down {
                             continue;
                         }
-                        killed_in_flight += take_down(g, queue, idle, gi, t, window);
+                        killed_in_flight += take_down(
+                            g,
+                            queue,
+                            idle,
+                            gi,
+                            t,
+                            window,
+                            cfg.max_retries,
+                            retries,
+                            &mut dropped_retries,
+                        );
                     }
                 }
             }
@@ -585,7 +702,7 @@ pub fn simulate_pool_with(
                         if let Some(fp) = &cfg.faults {
                             arm_fault(g, events, t, gi, fp);
                         }
-                        admit(g, queue, t, &mut wait, requests, warm, chunk);
+                        admit(g, queue, t, &mut wait, requests, warm, chunk, &mut kv);
                         if g.n_busy() > 0 {
                             let dt = if cfg.lockstep_full {
                                 t_iter_full
@@ -606,17 +723,29 @@ pub fn simulate_pool_with(
     let slot_time: f64 =
         cfg.n_gpus as f64 * cfg.n_slots as f64 * (window.1 - window.0).max(1e-12);
     let busy: f64 = gpus.iter().map(|g| g.busy_integral).sum();
+    let kv_util = match cfg.kv_cap_tokens {
+        Some(cap) if cap > 0 => {
+            let kv_token_time: f64 =
+                cfg.n_gpus as f64 * cap as f64 * (window.1 - window.0).max(1e-12);
+            gpus.iter().map(|g| g.kv_integral).sum::<f64>() / kv_token_time
+        }
+        _ => 0.0,
+    };
     SimResult {
         utilization: busy / slot_time,
         ttft,
         wait,
         completed,
-        censored: n_req as u64 - completed,
+        censored: n_req as u64 - completed - dropped_retries,
         window,
         events: n_events,
         crashes,
         preemptions,
         killed_in_flight,
+        dropped_retries,
+        kv_util,
+        kv_blocked: kv.blocked,
+        kv_violations: kv.violations,
     }
 }
 
@@ -821,6 +950,83 @@ mod tests {
             assert_eq!(p.utilization, seq.utilization);
             assert_eq!(p.completed, seq.completed);
         }
+    }
+
+    #[test]
+    fn unbinding_kv_cap_is_bit_identical_to_off() {
+        // A cap no request population can reach changes no admission
+        // decision: every observable except the KV diagnostics matches
+        // the tracking-off engine bit-for-bit.
+        let reqs = poisson_requests(10.0, 1_500, 1200, 60, 31);
+        let off = simulate_pool(&SimConfig::new(gpu(), 3, 16), &reqs);
+        let mut cfg = SimConfig::new(gpu(), 3, 16);
+        cfg.kv_cap_tokens = Some(u64::MAX / 2);
+        let on = simulate_pool(&cfg, &reqs);
+        assert_eq!(on.utilization.to_bits(), off.utilization.to_bits());
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.events, off.events);
+        let (mut a, mut b) = (on.ttft, off.ttft);
+        assert_eq!(a.p99().to_bits(), b.p99().to_bits());
+        assert_eq!(on.kv_blocked, 0);
+        assert_eq!(on.kv_violations, 0);
+        assert!(on.kv_util > 0.0, "ledger measured under Some cap");
+        assert_eq!(off.kv_util, 0.0, "no ledger without a cap");
+    }
+
+    #[test]
+    fn kv_cap_blocks_head_of_line_without_violations() {
+        // Cap fits ~4 of the 16-slot GPU's requests: KV (not slots) is
+        // the binding resource. The run still drains — requests queue
+        // rather than oversubscribe — and the ledger never exceeds cap.
+        let mut cfg = SimConfig::new(gpu(), 1, 16);
+        let reqs = poisson_requests(3.0, 600, 2048, 100, 32);
+        cfg.kv_cap_tokens = Some(4 * 2148 + 100);
+        let res = simulate_pool(&cfg, &reqs);
+        assert_eq!(res.completed, 600);
+        assert_eq!(res.censored, 0);
+        assert!(res.kv_blocked > 0, "cap must have bound");
+        assert_eq!(res.kv_violations, 0);
+        assert!(res.kv_util <= 1.0 + 1e-9, "kv_util {}", res.kv_util);
+        // Tighter decode memory means strictly more queueing than slots
+        // alone would produce.
+        let open = simulate_pool(&SimConfig::new(gpu(), 1, 16), &reqs);
+        let (mut capped, mut free) = (res.wait, open.wait);
+        assert!(capped.p99() >= free.p99());
+    }
+
+    #[test]
+    fn kv_utilization_matches_littles_law() {
+        // Deterministic sizes: E[(l_in+l_out) * T] * t_iter is exact, so
+        // the measured mean reserved tokens must match lambda * e_kv_s.
+        let mut cfg = SimConfig::new(gpu(), 4, 16);
+        let cap = 50_000u64;
+        cfg.kv_cap_tokens = Some(cap);
+        let l_in = 1024u32; // 2 chunks
+        let l_out = 98u32; // T = 100 iterations
+        let t_iter = cfg.gpu.t_iter_s(16);
+        let lambda = 20.0;
+        let e_kv_s = (l_in + l_out) as f64 * 100.0 * t_iter;
+        let rho_kv_expect = lambda * e_kv_s / (4.0 * cap as f64);
+        let reqs = poisson_requests(lambda, 20_000, l_in, l_out, 33);
+        let res = simulate_pool(&cfg, &reqs);
+        assert!(
+            (res.kv_util - rho_kv_expect).abs() / rho_kv_expect < 0.03,
+            "kv_util {} vs analytical {rho_kv_expect}",
+            res.kv_util
+        );
+    }
+
+    #[test]
+    fn retry_budget_without_faults_is_bit_identical() {
+        let reqs = poisson_requests(9.0, 1_000, 900, 50, 34);
+        let off = simulate_pool(&SimConfig::new(gpu(), 2, 16), &reqs);
+        let mut cfg = SimConfig::new(gpu(), 2, 16);
+        cfg.max_retries = Some(0);
+        let on = simulate_pool(&cfg, &reqs);
+        assert_eq!(on.utilization.to_bits(), off.utilization.to_bits());
+        assert_eq!(on.completed, off.completed);
+        assert_eq!(on.events, off.events);
+        assert_eq!(on.dropped_retries, 0, "no faults, nothing to drop");
     }
 
     #[test]

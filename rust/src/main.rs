@@ -7,7 +7,7 @@
 //!               (`--tiers K` or a window list sweeps K-tier fleets;
 //!               `--sku-catalog` adds per-tier GPU SKU assignment and
 //!               `--budget-ms` bounds the search with the anytime planner)
-//!   tables    — regenerate the paper's evaluation tables (1–10)
+//!   tables    — regenerate the paper's evaluation tables (1–12)
 //!   simulate  — DES validation of the analytical model (Table 5; K-tier
 //!               with `--tiers`)
 //!   compress  — compress a borderline sample and report fidelity
@@ -29,8 +29,8 @@ use fleetopt::compress::fidelity;
 use fleetopt::coordinator::{serve_with, AdmissionOpts, ServeConfig, ServeItem};
 use fleetopt::experiments;
 use fleetopt::fleetsim::{
-    run_stress, simulate_autoscale_chaos, simulate_fleet_tiered_chaos, AutoscaleConfig,
-    ChaosOpts, FaultPlan, QueueImpl, StressConfig,
+    run_stress, simulate_autoscale_kv, simulate_fleet_tiered_kv, AutoscaleConfig, ChaosOpts,
+    FaultPlan, KvFleetOpts, QueueImpl, StressConfig,
 };
 use fleetopt::metrics::EpochMetrics;
 use fleetopt::planner::{
@@ -38,6 +38,8 @@ use fleetopt::planner::{
     sweep_full, sweep_gamma, sweep_tiered, AnytimeConfig, AnytimeResult, CalibCache, Deadline,
     Plan, PlanInput, TieredPlan,
 };
+use fleetopt::queueing::kv::KvPlanPolicy;
+use fleetopt::router::admit::AdmitConfig;
 use fleetopt::router::failover::FailoverConfig;
 use fleetopt::router::GatewayConfig;
 use fleetopt::util::rng::Rng;
@@ -54,9 +56,9 @@ USAGE:
                      [--sku-catalog F.json] [--budget-ms N]
   fleetopt sweep     --workload <name> [--config F.json] [--lambda N] [--tiers W1,W2,..|K]
                      [--sku-catalog F.json] [--budget-ms N]
-  fleetopt tables    [--only 1..11] [--fast]
+  fleetopt tables    [--only 1..12] [--fast]
   fleetopt simulate  --workload <name> [--lambda N] [--requests N] [--tiers W1,W2,..|K]
-                     [--chaos plan.json]
+                     [--chaos plan.json] [--kv FRAC]
   fleetopt simulate  --stress [--requests N] [--gpus N] [--queue calendar|heap] [--seed N]
                      (fixed synthetic 5M-request/512-GPU/K=4 diurnal azure scenario)
   fleetopt autoscale --workload <name> [--config F.json] [--lambda N] [--requests N]
@@ -65,6 +67,9 @@ USAGE:
                      [--tiers W1,W2,..] [--out metrics.json] [--max-violation-frac F]
                      [--chaos plan.json] [--redundancy k|k1,k2,..] [--failover]
                      [--spill-watermark F] [--recover-watermark F] [--gamma-boost G]
+                     [--kv FRAC] [--admit] [--admit-high F] [--admit-low F]
+                     [--defer-s S] [--max-defers N] [--gamma-tighten G]
+                     [--max-shed-frac F] [--max-retries N] [--forecast-seasonal P]
   fleetopt compress  [--tokens N] [--budget N] [--seed N]
   fleetopt serve     [--requests N] [--rate R] [--no-cr] [--artifacts DIR] [--tiers W1,W2,..]
                      [--trace F.jsonl] [--gateway-workers N] [--route-cache-cap N]
@@ -90,6 +95,18 @@ USAGE:
   boundaries when a tier's live capacity drops below --spill-watermark
   (recovering at --recover-watermark, down-spill re-qualified through
   C&R at gamma x --gamma-boost).
+
+  --kv FRAC turns on per-GPU KV-token bookkeeping in the DES, capping
+  each tier at FRAC of its slot token budget (n_slots x c_max); off,
+  the engines are bit-identical to the slot-only model. --admit (plus
+  knobs) arms the stability-guarded admission controller in front of
+  the C&R ladder: above --admit-high projected occupancy it escalates
+  recompress -> defer -> shed, releasing below --admit-low.
+  --max-shed-frac F fails the run if more than F of the offered load
+  is shed; KV-ledger violations always fail it. --max-retries N drops
+  a request after N crash retries (counted in dropped_retries);
+  --forecast-seasonal P blends a period-P per-phase forecast into the
+  autoscaler's planning rate.
 
   serve --trace F.jsonl replays a JSONL text trace (one
   {{\"text\", \"max_output\", \"arrival_s\"}} object per line, streamed
@@ -456,8 +473,8 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     let fast = flags.contains_key("fast");
     let only: Option<u32> = flags.get("only").map(|s| s.parse()).transpose()?;
     if let Some(n) = only {
-        if !(1..=11).contains(&n) {
-            bail!("--only must name a table in 1..=11, got {n}");
+        if !(1..=12).contains(&n) {
+            bail!("--only must name a table in 1..=12, got {n}");
         }
     }
     let want = |n: u32| only.is_none() || only == Some(n);
@@ -497,7 +514,50 @@ fn cmd_tables(flags: &HashMap<String, String>) -> Result<()> {
     if want(11) {
         experiments::table11(auto_n).print();
     }
+    if want(12) {
+        experiments::table12(des_n).print();
+    }
     Ok(())
+}
+
+/// `--kv FRAC` plus the admission knobs shared by simulate and autoscale.
+/// Returns default (all-off) opts when neither is given — the engines'
+/// bit-identical path.
+fn kv_arg(flags: &HashMap<String, String>) -> Result<KvFleetOpts> {
+    let cap_frac = match flags.get("kv") {
+        None => None,
+        Some(v) => {
+            let f: f64 = v.parse().with_context(|| format!("--kv {v}"))?;
+            if !f.is_finite() || f <= 0.0 || f > 1.0 {
+                bail!("--kv must be a fraction inside (0, 1], got {f}");
+            }
+            Some(f)
+        }
+    };
+    let wants_admit = flags.contains_key("admit")
+        || flags.contains_key("admit-high")
+        || flags.contains_key("admit-low")
+        || flags.contains_key("defer-s")
+        || flags.contains_key("max-defers")
+        || flags.contains_key("gamma-tighten");
+    let admit = if wants_admit {
+        if cap_frac.is_none() {
+            bail!("--admit watches KV occupancy; add --kv FRAC to enable the ledger");
+        }
+        let d = AdmitConfig::default();
+        let cfg = AdmitConfig {
+            high_watermark: flag_f64(flags, "admit-high", d.high_watermark)?,
+            low_watermark: flag_f64(flags, "admit-low", d.low_watermark)?,
+            defer_s: flag_f64(flags, "defer-s", d.defer_s)?,
+            max_defers: flag_count(flags, "max-defers", d.max_defers as u64)? as u32,
+            gamma_tighten: flag_f64(flags, "gamma-tighten", d.gamma_tighten)?,
+        };
+        cfg.validate()?;
+        Some(cfg)
+    } else {
+        None
+    };
+    Ok(KvFleetOpts { cap_frac, admit })
 }
 
 /// `--redundancy k|k1,k2,..`: per-tier N+k hot-spare counts (a single
@@ -583,7 +643,28 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
     input0.gpu.c_max_long = fleet_spec.tiers[fleet_spec.k() - 1].c_max;
     input0.redundancy = redundancy_arg(flags)?;
     let chaos = chaos_arg(flags)?;
+    let kv = kv_arg(flags)?;
+    if let Some(f) = kv.cap_frac {
+        let policy = KvPlanPolicy { cap_frac: f };
+        for (i, t) in fleet_spec.tiers.iter().enumerate() {
+            policy.validate(i, t.n_max, t.c_max)?;
+        }
+    }
 
+    let max_retries = flags
+        .get("max-retries")
+        .map(|v| v.parse::<u32>().with_context(|| format!("--max-retries {v}")))
+        .transpose()?;
+    let seasonal_period_s = match flags.get("forecast-seasonal") {
+        None => None,
+        Some(v) => {
+            let p: f64 = v.parse().with_context(|| format!("--forecast-seasonal {v}"))?;
+            if !p.is_finite() || p <= 0.0 {
+                bail!("--forecast-seasonal must be a positive period in seconds, got {p}");
+            }
+            Some(p)
+        }
+    };
     let epoch_s = flag_pos_f64(flags, "epoch", 10.0)?;
     let cfg = AutoscaleConfig {
         epoch_s,
@@ -591,6 +672,8 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
         provision_delay_s: flag_f64(flags, "provision", epoch_s * 0.5)?,
         replanning: !flags.contains_key("no-replan"),
         forecast: flags.contains_key("forecast"),
+        max_retries,
+        seasonal_period_s,
         ..AutoscaleConfig::default()
     };
     if cfg.provision_delay_s < 0.0 {
@@ -603,7 +686,7 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
         input0.lambda,
         initial.gpu_counts()
     );
-    let report = simulate_autoscale_chaos(&w, model, n, &input0, initial, &cfg, 42, &chaos);
+    let report = simulate_autoscale_kv(&w, model, n, &input0, initial, &cfg, 42, &chaos, &kv);
 
     for e in &report.epochs {
         println!("{}", e.summary_line());
@@ -611,13 +694,26 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
     if chaos.faults.is_some() {
         println!(
             "chaos: {} crash(es), {} preemption(s), {} in-flight kill(s), \
-             {} retry(ies) (max {} per request), {} spilled route(s)",
+             {} retry(ies) (max {} per request), {} dropped, {} spilled route(s)",
             report.crashes,
             report.preemptions,
             report.killed_in_flight,
             report.retries_total,
             report.max_retry,
+            report.dropped_retries,
             report.spilled,
+        );
+    }
+    if kv.cap_frac.is_some() {
+        println!(
+            "kv admission: {} admitted, {} deferred, {} recompressed, {} shed, \
+             {} kv-blocked, {} kv violation(s)",
+            report.admit.admitted,
+            report.admit.deferred,
+            report.admit.recompressed,
+            report.admit.shed,
+            report.kv_blocked,
+            report.kv_violations,
         );
     }
     let violated = 1.0 - report.slo_ok_frac;
@@ -662,6 +758,26 @@ fn cmd_autoscale(flags: &HashMap<String, String>) -> Result<()> {
             "SLO violated in {:.0}% of epochs (budget {:.0}%)",
             violated * 100.0,
             budget * 100.0
+        );
+    }
+    // KV-ledger violations are a correctness failure (the reservation
+    // admission must never oversubscribe), not a tunable budget.
+    if report.kv_violations != 0 {
+        bail!(
+            "{} KV-capacity violation(s) in the DES ledger",
+            report.kv_violations
+        );
+    }
+    let shed_budget = flag_f64(flags, "max-shed-frac", 1.0)?;
+    if !(0.0..=1.0).contains(&shed_budget) {
+        bail!("--max-shed-frac must be in [0, 1], got {shed_budget}");
+    }
+    let shed_frac = report.admit.shed as f64 / report.n_total.max(1) as f64;
+    if shed_frac > shed_budget + 1e-12 {
+        bail!(
+            "shed {:.2}% of offered load (budget {:.2}%)",
+            shed_frac * 100.0,
+            shed_budget * 100.0
         );
     }
     Ok(())
@@ -747,6 +863,11 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
     if flags.contains_key("stress") {
         return cmd_stress(flags);
     }
+    for key in ["admit", "admit-high", "admit-low", "defer-s", "max-defers", "gamma-tighten"] {
+        if flags.contains_key(key) {
+            bail!("--{key} is an autoscale flag (the offline tiered DES has no admission loop)");
+        }
+    }
     let w = workload_arg(flags)?;
     let lambda = flag_pos_f64(flags, "lambda", 1000.0)?;
     let n = flag_count(flags, "requests", 30_000)? as usize;
@@ -761,8 +882,14 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             TiersArg::Windows(windows) => plan_fixed_windows(&input, &windows)?,
             TiersArg::K(k) => sweep_tiered(&input, k)?.0,
         };
+        let kv_policy = kv_arg(flags)?.cap_frac.map(|f| KvPlanPolicy { cap_frac: f });
+        if let Some(policy) = &kv_policy {
+            for (i, t) in plan.spec.tiers.iter().enumerate() {
+                policy.validate(i, t.n_max, t.c_max)?;
+            }
+        }
         print_tiered("K-tier plan", &plan, None, None);
-        let sim = simulate_fleet_tiered_chaos(&w, &plan, &input.gpu, lambda, n, 42, &faults);
+        let sim = simulate_fleet_tiered_kv(&w, &plan, &input.gpu, lambda, n, 42, &faults, kv_policy);
         for (i, (pool, res)) in plan.tiers.iter().zip(&sim.tiers).enumerate() {
             match res {
                 Some(r) => {
@@ -791,10 +918,32 @@ fn cmd_simulate(flags: &HashMap<String, String>) -> Result<()> {
             "compressed at boundaries: {:?} of {} requests",
             sim.routed.n_compressed_at, sim.routed.n_total
         );
+        if kv_policy.is_some() {
+            let utils: Vec<String> = sim
+                .tiers
+                .iter()
+                .flatten()
+                .map(|r| format!("{:.3}", r.kv_util))
+                .collect();
+            let blocked: u64 = sim.tiers.iter().flatten().map(|r| r.kv_blocked).sum();
+            let viol: u64 = sim.tiers.iter().flatten().map(|r| r.kv_violations).sum();
+            println!(
+                "kv: per-tier util [{}], {} blocked admission(s), {} violation(s)",
+                utils.join(", "),
+                blocked,
+                viol
+            );
+            if viol != 0 {
+                bail!("{viol} KV-capacity violation(s) in the DES ledger");
+            }
+        }
         return Ok(());
     }
     if flags.contains_key("chaos") {
         bail!("simulate --chaos needs a K-tier fleet (add --tiers)");
+    }
+    if flags.contains_key("kv") {
+        bail!("simulate --kv needs a K-tier fleet (add --tiers)");
     }
 
     let (rows, _) = experiments::table5_validate(&w, lambda, n, 42);

@@ -121,6 +121,15 @@ pub struct PlanInput {
     /// closed-form lower bound the sweep prunes with, so pruning stays
     /// exact (`tests/planner_fastpath.rs` idiom).
     pub redundancy: Vec<u64>,
+    /// KV-capacity-aware sizing: each tier's GPU count is floored at the
+    /// closed-form stability bound `rho_kv < rho_max` (Little's law over
+    /// full-residency `l_in + l_out` reservations — see
+    /// [`crate::queueing::kv`]), with per-GPU capacity
+    /// `cap_frac * n_max * c_max` tokens. `None` (the default) skips the
+    /// floor — bit-identical to the KV-unconstrained planner. The floor
+    /// only ever *raises* exact per-cell costs, so the KV-blind
+    /// closed-form lower bound stays admissible and pruning stays exact.
+    pub kv: Option<crate::queueing::kv::KvPlanPolicy>,
 }
 
 impl PlanInput {
@@ -133,6 +142,7 @@ impl PlanInput {
             cfg: PlannerConfig::default(),
             strict_slo: false,
             redundancy: Vec::new(),
+            kv: None,
         }
     }
 }

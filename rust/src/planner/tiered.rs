@@ -141,6 +141,16 @@ pub fn plan_tiers(
                 // are sized bit-identically to the pre-catalog planner.
                 let svc = calibrated(input, cache, lo, hi, t.n_max).scaled_mu(t.mu_scale());
                 let mut pool = size(lambda_i, svc, tier_slo)?;
+                // KV stability floor (closed-form, Little's law over
+                // full-residency reservations): the Erlang-C count alone
+                // can leave `rho_kv >= rho_max` on decode-heavy traffic.
+                // `kv: None` (the default) skips this — bit-identical to
+                // the KV-unconstrained planner.
+                if let Some(policy) = input.kv {
+                    pool.n_gpus = pool.n_gpus.max(tier_kv_floor(
+                        input, policy, lambda_i, lo, hi, t.n_max, t.c_max, t.mu_scale(),
+                    ));
+                }
                 // N+k survivability: k spares on top of the sized count,
                 // so the tier still meets its SLO with k machines down.
                 // k = 0 (the default) adds nothing — bit-identical.
@@ -512,10 +522,13 @@ const PRUNE_MARGIN: f64 = 1.0;
 /// no Erlang-C, no quadrature. `a_i` uses the moment table's
 /// error-adjusted `E[S]` lower bound, so the result provably bounds the
 /// quadrature-evaluated cost from below (the SLO constraint only ever
-/// *adds* GPUs, and infeasible cells are skipped by the sweep anyway).
-/// `None` when a cut cannot be bounded (the cell is then evaluated).
-/// The cut moments come through `cut` so the batched evaluator can route
-/// the identical arithmetic through its [`CutMemo`]-backed source.
+/// *adds* GPUs, and infeasible cells are skipped by the sweep anyway;
+/// likewise the KV stability floor of [`PlanInput::kv`] only ever
+/// *raises* a tier's exact count, so this KV-blind bound stays
+/// admissible unchanged). `None` when a cut cannot be bounded (the cell
+/// is then evaluated). The cut moments come through `cut` so the batched
+/// evaluator can route the identical arithmetic through its
+/// [`CutMemo`]-backed source.
 ///
 /// [`CutMemo`]: crate::queueing::simd::cells::CutMemo
 /// Per-iteration latency of tier `i` under its SKU rate multiplier. The
@@ -533,6 +546,37 @@ fn tier_t_iter_s(input: &PlanInput, spec: &FleetSpec, i: usize) -> f64 {
     } else {
         base / ms
     }
+}
+
+/// Tier `i`'s KV-stability GPU floor: the smallest count keeping
+/// `rho_kv = lambda_i * E[(l_in + l_out) * T] * t_iter / (n * cap)` below
+/// `rho_max`, with the tier's per-GPU capacity
+/// `cap_frac * n_max * c_max` tokens and the KV load integrated over the
+/// *same* truncated distribution and quadrature grids as the tier's
+/// service calibration (so the analytical boundary and the DES agree —
+/// Table 12). The SKU rate multiplier dilates iteration time exactly as
+/// in [`calibrated`].
+#[allow(clippy::too_many_arguments)]
+fn tier_kv_floor(
+    input: &PlanInput,
+    policy: crate::queueing::kv::KvPlanPolicy,
+    lambda_i: f64,
+    lo: f64,
+    hi: f64,
+    n_slots: u32,
+    c_max: u32,
+    mu_scale: f64,
+) -> u64 {
+    use crate::workload::cdf::TruncatedDist;
+    let w = &input.workload;
+    let dist = TruncatedDist::new(w.cdf.clone(), lo, hi);
+    let len_points = (input.cfg.mc_samples / 8).clamp(64, 512);
+    let kv = crate::queueing::kv::calibrate_kv_quadrature(
+        &dist, &w.output, &input.gpu, n_slots, len_points, 8,
+    )
+    .scaled_mu(mu_scale);
+    let cap = policy.cap_tokens(n_slots, c_max);
+    crate::queueing::kv::min_gpus_kv(lambda_i, cap, input.cfg.rho_max, &kv)
 }
 
 /// Tier `t`'s N+k spare count from [`PlanInput::redundancy`]: empty means
@@ -756,6 +800,8 @@ fn cell_bounds_batched(
 /// has a cut and traffic, an unboundable cut kills the whole cell (the
 /// scalar `?` — later tiers of a dead cell skip the memo, as the scalar
 /// early return does), and every other arm contributes a zero count.
+/// Like the scalar bound, this is KV-blind and stays admissible under
+/// [`PlanInput::kv`]: the KV floor only ever raises exact cell costs.
 #[cfg(feature = "simd")]
 fn lb_block(
     ctx: &CellCtx,

@@ -1,0 +1,283 @@
+//! KV-occupancy service model and the closed-form KV stability boundary
+//! (ROADMAP item 4). The slot model (Eq. 3–4) counts *slots*; this module
+//! counts *tokens*: a request that is resident for `T = ceil(L_in/chunk)
+//! + L_out` lockstep iterations holds a KV reservation of `L_in + L_out`
+//! tokens for all of them (the engines reserve the full decode budget at
+//! admission, so a request can never be evicted mid-decode — see
+//! `fleetsim`). By Little's law the steady-state expected reserved tokens
+//! per pool are `lambda * E[(L_in + L_out) * T] * t_iter`, which against a
+//! per-GPU capacity of `cap_tokens` gives the utilization
+//!
+//! ```text
+//! rho_kv = lambda * E[(L_in + L_out) * T] * t_iter / (n_gpus * cap_tokens)
+//! ```
+//!
+//! and the stability boundary `rho_kv < 1` ("A Queueing-Theoretic
+//! Framework for Stability Analysis of LLM Inference with KV Cache Memory
+//! Constraints", PAPERS.md). The calibration below integrates the exact
+//! same `(len_points x jitter_points)` midpoint grids as
+//! [`calibrate_quadrature`](crate::queueing::service::calibrate_quadrature),
+//! so the analytical boundary and the slot stats describe one and the
+//! same integerized request population.
+
+use crate::config::GpuProfile;
+use crate::util::stats::Welford;
+use crate::workload::cdf::LengthDist;
+use crate::workload::request::OutputModel;
+
+use super::service::{jitter_grid, slot_iterations, split_request};
+
+/// Calibrated KV-occupancy statistics for one pool. Plain scalar data
+/// (`Copy`), mirroring [`ServiceStats`](super::service::ServiceStats).
+#[derive(Clone, Copy, Debug)]
+pub struct KvStats {
+    /// `E[(L_in + L_out) * T]` in token-iterations: the mean KV
+    /// reservation (tokens) times the iterations it is held.
+    pub e_kv_iter: f64,
+    /// `E[T]` — mean resident iterations (the slot model's `e_s / t_iter`).
+    pub e_iter: f64,
+    /// `E[L_in + L_out]` — mean reserved tokens per request.
+    pub e_tokens: f64,
+    /// Iteration latency at the pool's configured slot count, seconds.
+    pub t_iter_s: f64,
+    /// Slots per GPU in this pool.
+    pub n_slots: u32,
+}
+
+impl KvStats {
+    /// Mean KV token-seconds one request contributes:
+    /// `E[(L_in + L_out) * T] * t_iter`.
+    pub fn e_kv_s(&self) -> f64 {
+        self.e_kv_iter * self.t_iter_s
+    }
+
+    /// These stats on silicon `mu_scale` times as fast — the same uniform
+    /// time dilation as [`ServiceStats::scaled_mu`]: only `t_iter_s`
+    /// divides; token and iteration counts are invariant. `mu_scale = 1`
+    /// returns `self` unchanged (single-SKU bit-identity by construction).
+    pub fn scaled_mu(self, mu_scale: f64) -> KvStats {
+        if mu_scale == 1.0 {
+            return self;
+        }
+        KvStats {
+            t_iter_s: self.t_iter_s / mu_scale,
+            ..self
+        }
+    }
+}
+
+/// Deterministic quadrature calibration of the KV moments over the same
+/// midpoint grids as the slot-stats quadrature: `len_points` quantile
+/// midpoints of the length distribution crossed with the output model's
+/// lognormal-jitter grid, split by [`split_request`]. Seedless and
+/// exactly reproducible.
+pub fn calibrate_kv_quadrature<D: LengthDist>(
+    dist: &D,
+    output: &OutputModel,
+    g: &GpuProfile,
+    n_slots: u32,
+    len_points: usize,
+    jitter_points: usize,
+) -> KvStats {
+    assert!(len_points >= 16 && jitter_points >= 1);
+    let jitters = jitter_grid(output, jitter_points);
+    let mut kv = Welford::new();
+    let mut iters = Welford::new();
+    let mut toks = Welford::new();
+    for i in 0..len_points {
+        let q = (i as f64 + 0.5) / len_points as f64;
+        let l_total = dist.quantile(q).round().max(2.0);
+        for &jit in &jitters {
+            let (l_in, l_out) = split_request(l_total, jit, output);
+            let t = slot_iterations(l_in, l_out, g.chunk) as f64;
+            let tokens = (l_in + l_out) as f64;
+            kv.push(tokens * t);
+            iters.push(t);
+            toks.push(tokens);
+        }
+    }
+    KvStats {
+        e_kv_iter: kv.mean(),
+        e_iter: iters.mean(),
+        e_tokens: toks.mean(),
+        t_iter_s: g.t_iter_s(n_slots),
+        n_slots,
+    }
+}
+
+/// KV utilization `rho_kv` of a pool of `n_gpus` GPUs, each with
+/// `cap_tokens` of KV capacity, under arrival rate `lambda` (req/s).
+pub fn rho_kv(lambda: f64, n_gpus: u64, cap_tokens: u64, kv: &KvStats) -> f64 {
+    if n_gpus == 0 || cap_tokens == 0 {
+        return f64::INFINITY;
+    }
+    lambda * kv.e_kv_s() / (n_gpus as f64 * cap_tokens as f64)
+}
+
+/// The KV stability boundary `lambda*`: the arrival rate at which
+/// `rho_kv = 1` for the given pool. Queues grow without bound beyond it.
+pub fn lambda_star(n_gpus: u64, cap_tokens: u64, kv: &KvStats) -> f64 {
+    n_gpus as f64 * cap_tokens as f64 / kv.e_kv_s()
+}
+
+/// Minimum GPUs to keep `rho_kv <= rho_max` at arrival rate `lambda` —
+/// the closed-form KV sizing floor the planner takes a `max` with
+/// (never replacing the slot-model Erlang sizing, only raising it).
+pub fn min_gpus_kv(lambda: f64, cap_tokens: u64, rho_max: f64, kv: &KvStats) -> u64 {
+    if lambda <= 0.0 {
+        return 0;
+    }
+    assert!(rho_max > 0.0 && cap_tokens > 0);
+    (lambda * kv.e_kv_s() / (rho_max * cap_tokens as f64)).ceil() as u64
+}
+
+/// Planner-facing KV capacity policy: what fraction of a GPU's
+/// calibration token budget (`n_max_calib * c_calib` slots-times-context,
+/// i.e. the KV footprint the profile was calibrated at) is actually
+/// available to request KV. The derate models weights, activations, and
+/// fragmentation; at `cap_frac = 1.0` the token budget equals the slot
+/// budget and KV never binds before slots do.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct KvPlanPolicy {
+    pub cap_frac: f64,
+}
+
+impl Default for KvPlanPolicy {
+    fn default() -> Self {
+        KvPlanPolicy { cap_frac: 1.0 }
+    }
+}
+
+impl KvPlanPolicy {
+    /// Per-GPU KV capacity in tokens for a tier shaped `n_slots x c_max`.
+    /// (`n_max(c) * c ~= n_max_calib * c_calib`, so every tier of a
+    /// profile carries the same token budget before the derate.)
+    pub fn cap_tokens(&self, n_slots: u32, c_max: u32) -> u64 {
+        (self.cap_frac * n_slots as f64 * c_max as f64).floor() as u64
+    }
+
+    /// Validate against a tier shape: the cap must admit the largest
+    /// request the router can send (`c_max` tokens), or an empty GPU
+    /// could block forever on one request (and the DES ledger could
+    /// never be violation-free by construction).
+    pub fn validate(&self, tier: usize, n_slots: u32, c_max: u32) -> anyhow::Result<()> {
+        if !self.cap_frac.is_finite() || self.cap_frac <= 0.0 || self.cap_frac > 1.0 {
+            anyhow::bail!(
+                "kv policy: cap_frac must be inside (0, 1], got {}",
+                self.cap_frac
+            );
+        }
+        let cap = self.cap_tokens(n_slots, c_max);
+        if cap < c_max as u64 {
+            anyhow::bail!(
+                "kv policy: tier {tier}: cap_frac {} gives {} KV tokens/GPU, below the \
+                 tier's c_max {} — a full-context request could never be admitted",
+                self.cap_frac,
+                cap,
+                c_max
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::queueing::service::calibrate_quadrature;
+    use crate::workload::traces;
+
+    fn g() -> GpuProfile {
+        GpuProfile::a100_llama70b()
+    }
+
+    #[test]
+    fn kv_quadrature_is_deterministic_and_seedless() {
+        let w = traces::azure();
+        let a = calibrate_kv_quadrature(&w.cdf, &w.output, &g(), 64, 128, 8);
+        let b = calibrate_kv_quadrature(&w.cdf, &w.output, &g(), 64, 128, 8);
+        assert_eq!(a.e_kv_iter, b.e_kv_iter);
+        assert_eq!(a.e_iter, b.e_iter);
+        assert_eq!(a.e_tokens, b.e_tokens);
+    }
+
+    #[test]
+    fn kv_iterations_match_slot_quadrature() {
+        // Same grids, same split: E[T] here integrates the identical
+        // sample set as the slot quadrature's e_s / t_iter (only the
+        // t_iter scaling differs, so agreement is to float accumulation
+        // error, not model error).
+        for w in [traces::azure(), traces::agent_heavy()] {
+            for n_slots in [16u32, 128] {
+                let kv = calibrate_kv_quadrature(&w.cdf, &w.output, &g(), n_slots, 128, 8);
+                let s = calibrate_quadrature(&w.cdf, &w.output, &g(), n_slots, 128, 8);
+                assert_eq!(kv.t_iter_s.to_bits(), s.t_iter_s.to_bits());
+                assert!(
+                    (kv.e_iter * s.t_iter_s - s.e_s).abs() < 1e-9 * s.e_s.abs(),
+                    "{} n_slots {n_slots}",
+                    w.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn kv_moment_dominates_product_of_means() {
+        // (L_in + L_out) and T are positively associated (both increase
+        // with L_total), so E[tokens * T] >= E[tokens] * E[T].
+        let w = traces::agent_heavy();
+        let kv = calibrate_kv_quadrature(&w.cdf, &w.output, &g(), 16, 256, 8);
+        assert!(kv.e_kv_iter >= kv.e_tokens * kv.e_iter * (1.0 - 1e-12));
+    }
+
+    #[test]
+    fn scaled_mu_identity_and_dilation() {
+        let w = traces::azure();
+        let kv = calibrate_kv_quadrature(&w.cdf, &w.output, &g(), 64, 64, 4);
+        let same = kv.scaled_mu(1.0);
+        assert_eq!(same.t_iter_s.to_bits(), kv.t_iter_s.to_bits());
+        assert_eq!(same.e_kv_iter.to_bits(), kv.e_kv_iter.to_bits());
+        let fast = kv.scaled_mu(2.0);
+        assert_eq!(fast.t_iter_s, kv.t_iter_s / 2.0);
+        assert_eq!(fast.e_kv_iter, kv.e_kv_iter);
+        assert_eq!(fast.e_kv_s(), kv.e_kv_s() / 2.0);
+    }
+
+    #[test]
+    fn rho_and_boundary_are_consistent() {
+        let w = traces::azure();
+        let kv = calibrate_kv_quadrature(&w.cdf, &w.output, &g(), 128, 128, 8);
+        let cap = 1 << 20;
+        let n = 8u64;
+        let ls = lambda_star(n, cap, &kv);
+        assert!((rho_kv(ls, n, cap, &kv) - 1.0).abs() < 1e-12);
+        assert!(rho_kv(0.5 * ls, n, cap, &kv) < 1.0);
+        assert!(rho_kv(1.5 * ls, n, cap, &kv) > 1.0);
+        // Sizing floor inverts rho: at the returned GPU count rho <= rho_max,
+        // one fewer GPU exceeds it.
+        let lam = 0.9 * ls;
+        let need = min_gpus_kv(lam, cap, 0.85, &kv);
+        assert!(rho_kv(lam, need, cap, &kv) <= 0.85 + 1e-12);
+        if need > 1 {
+            assert!(rho_kv(lam, need - 1, cap, &kv) > 0.85);
+        }
+        assert_eq!(min_gpus_kv(0.0, cap, 0.85, &kv), 0);
+    }
+
+    #[test]
+    fn plan_policy_cap_and_validation() {
+        let p = KvPlanPolicy { cap_frac: 0.5 };
+        assert_eq!(p.cap_tokens(128, 8192), (0.5f64 * 128.0 * 8192.0) as u64);
+        assert!(p.validate(0, 128, 8192).is_ok());
+        // A cap below c_max is rejected, naming the tier.
+        let tight = KvPlanPolicy { cap_frac: 0.01 };
+        let err = tight.validate(2, 16, 65536).unwrap_err().to_string();
+        assert!(err.contains("tier 2"), "{err}");
+        assert!(err.contains("c_max"), "{err}");
+        for bad in [0.0, -0.5, 1.5, f64::NAN] {
+            let p = KvPlanPolicy { cap_frac: bad };
+            assert!(p.validate(0, 128, 8192).is_err(), "cap_frac {bad}");
+        }
+        assert_eq!(KvPlanPolicy::default().cap_frac, 1.0);
+    }
+}

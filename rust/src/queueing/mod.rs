@@ -4,6 +4,7 @@
 
 pub mod erlang;
 pub mod kimura;
+pub mod kv;
 pub mod mgc;
 pub mod service;
 #[cfg(feature = "simd")]

@@ -1,0 +1,390 @@
+//! Stability-guarded admission control in front of the routing ladder
+//! (ROADMAP item 4). Projected-KV occupancy per tier drives a watermark
+//! pair with hysteresis (the same shape as `router::failover`'s): above
+//! the high watermark a tier *engages* and stays engaged until occupancy
+//! falls back below the low watermark. An engaged tier escalates through
+//! the paper-ordered ladder of graceful degradation — compress harder
+//! (tightened gamma within the C&R [1, 2] clamp), defer with a deadline,
+//! and only then shed with 429-style accounting — so one long-decode
+//! burst cannot destabilize a tier ("Dual-Pool Token-Budget Routing",
+//! PAPERS.md). Every decision is counted: `admitted + deferred +
+//! recompressed + shed` conserves the offered load.
+//!
+//! Identity discipline: a disabled controller (`cfg: None`) routes
+//! byte-for-byte through [`Gateway::route`] — pinned by
+//! `tests/admission_control.rs` with the same verbatim-oracle policy as
+//! `tests/gateway_concurrency.rs`.
+
+use crate::compress::gate::band_hi;
+use crate::router::classify::classify;
+use crate::router::gateway::{Gateway, RoutedRequest};
+
+/// Admission-controller tuning. Occupancies are fractions of a tier's KV
+/// capacity in [0, 1]; `high_watermark` engages the controller,
+/// `low_watermark` disengages it (hysteresis band between them).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmitConfig {
+    /// Engage at or above this projected-KV occupancy.
+    pub high_watermark: f64,
+    /// Disengage strictly below this occupancy (must be <= high).
+    pub low_watermark: f64,
+    /// Deadline granted to a deferred request before it is re-decided.
+    pub defer_s: f64,
+    /// Defers granted per request before shedding (the last resort).
+    pub max_defers: u32,
+    /// Gamma multiplier for the compress-harder escalation; each
+    /// boundary's band is re-clamped into [1, 2] after tightening.
+    pub gamma_tighten: f64,
+}
+
+impl Default for AdmitConfig {
+    fn default() -> Self {
+        AdmitConfig {
+            high_watermark: 0.85,
+            low_watermark: 0.70,
+            defer_s: 1.0,
+            max_defers: 3,
+            gamma_tighten: 1.25,
+        }
+    }
+}
+
+impl AdmitConfig {
+    /// Validate, naming the offending field (SkuCatalog error style).
+    pub fn validate(&self) -> anyhow::Result<()> {
+        let in_unit = |x: f64| x.is_finite() && (0.0..=1.0).contains(&x);
+        if !in_unit(self.low_watermark) || !in_unit(self.high_watermark) {
+            anyhow::bail!(
+                "admit config: watermarks must be inside [0, 1], got low {} high {}",
+                self.low_watermark,
+                self.high_watermark
+            );
+        }
+        if self.low_watermark > self.high_watermark {
+            anyhow::bail!(
+                "admit config: low_watermark ({}) must be <= high_watermark ({})",
+                self.low_watermark,
+                self.high_watermark
+            );
+        }
+        if !self.defer_s.is_finite() || self.defer_s <= 0.0 {
+            anyhow::bail!(
+                "admit config: defer_s must be positive, got {}",
+                self.defer_s
+            );
+        }
+        if !self.gamma_tighten.is_finite() || !(1.0..=2.0).contains(&self.gamma_tighten) {
+            anyhow::bail!(
+                "admit config: gamma_tighten must be inside [1, 2], got {}",
+                self.gamma_tighten
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-tier engagement state with hysteresis. Engagement latches at
+/// `occupancy >= high_watermark` and releases at `occupancy <
+/// low_watermark`; any constant occupancy therefore settles after one
+/// observation and never flaps (pinned in tests).
+#[derive(Clone, Debug, Default)]
+pub struct AdmitState {
+    engaged: Vec<bool>,
+}
+
+impl AdmitState {
+    /// Fold one occupancy observation for `tier`; returns the (possibly
+    /// updated) engagement.
+    pub fn observe(&mut self, tier: usize, occupancy: f64, cfg: &AdmitConfig) -> bool {
+        if self.engaged.len() <= tier {
+            self.engaged.resize(tier + 1, false);
+        }
+        let next = if self.engaged[tier] {
+            occupancy >= cfg.low_watermark
+        } else {
+            occupancy >= cfg.high_watermark
+        };
+        self.engaged[tier] = next;
+        next
+    }
+
+    /// Current engagement of `tier` (false if never observed).
+    pub fn engaged(&self, tier: usize) -> bool {
+        self.engaged.get(tier).copied().unwrap_or(false)
+    }
+}
+
+/// What the controller decided for one request attempt.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AdmitDecision {
+    /// Routed normally.
+    Admit,
+    /// Routed through a gamma-tightened ladder (compress harder).
+    Recompress,
+    /// Not routed; retry after `defer_s`.
+    Defer,
+    /// Not routed and never will be (429-style rejection).
+    Shed,
+}
+
+/// The escalation ladder, pure in its inputs: a disengaged tier admits;
+/// an engaged tier first compresses harder (when the request is
+/// compressible and the tightening is real), then defers up to
+/// `max_defers`, and sheds only when both escalations are exhausted.
+pub fn decide(
+    engaged: bool,
+    can_recompress: bool,
+    defers_used: u32,
+    cfg: &AdmitConfig,
+) -> AdmitDecision {
+    if !engaged {
+        return AdmitDecision::Admit;
+    }
+    if can_recompress {
+        return AdmitDecision::Recompress;
+    }
+    if defers_used < cfg.max_defers {
+        return AdmitDecision::Defer;
+    }
+    AdmitDecision::Shed
+}
+
+/// The compress-harder gammas: each boundary's gamma times `tighten`,
+/// capped at the C&R envelope's 2.0 (per-boundary next-tier re-clamping
+/// happens where the gammas are consumed, as in `GatewayConfig::tiered`).
+pub fn tightened_gammas(gammas: &[f64], tighten: f64) -> Vec<f64> {
+    gammas.iter().map(|g| (g * tighten).min(2.0)).collect()
+}
+
+/// Decision counters; `total()` conserves the offered load.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct AdmitCounters {
+    pub admitted: u64,
+    pub deferred: u64,
+    pub recompressed: u64,
+    pub shed: u64,
+}
+
+impl AdmitCounters {
+    /// Terminal decisions plus outstanding defers — equals the number of
+    /// attempts when every deferred request is eventually re-decided.
+    pub fn total(&self) -> u64 {
+        self.admitted + self.deferred + self.recompressed + self.shed
+    }
+}
+
+/// The tier the ladder would choose for this request *if admitted*,
+/// computed read-only from the estimator (no EMA update, no counters):
+/// the first tier whose boundary fits the estimate, or whose band could
+/// absorb a compressible request. This is the occupancy the admission
+/// decision is held against.
+pub fn predict_tier(gw: &Gateway, text: &str, max_output_tokens: u32) -> usize {
+    let category = classify(text);
+    let est_total = gw
+        .estimator
+        .estimate_prompt_tokens(text.len(), category)
+        + max_output_tokens;
+    for (i, tr) in gw.cfg.tiers.iter().enumerate() {
+        if est_total <= tr.boundary {
+            return i;
+        }
+        let gamma = if gw.cfg.enable_cr { tr.gamma } else { 1.0 };
+        if category.compressible() && est_total <= band_hi(tr.boundary, gamma) {
+            return i;
+        }
+    }
+    gw.cfg.tiers.len()
+}
+
+/// The stateful admission controller wrapping one [`Gateway`]. `cfg:
+/// None` disables it: every request takes [`Gateway::route`] verbatim
+/// (bit-identical routing, estimator, and counters — the oracle-pinned
+/// contract).
+#[derive(Debug, Default)]
+pub struct AdmissionController {
+    pub cfg: Option<AdmitConfig>,
+    pub state: AdmitState,
+    pub counters: AdmitCounters,
+}
+
+impl AdmissionController {
+    pub fn new(cfg: Option<AdmitConfig>) -> Self {
+        AdmissionController {
+            cfg,
+            state: AdmitState::default(),
+            counters: AdmitCounters::default(),
+        }
+    }
+
+    /// Decide-and-route one request attempt. `occupancy[tier]` is the
+    /// projected KV occupancy per tier (missing tiers read 0.0);
+    /// `defers_used` is how many times this request was already
+    /// deferred. Deferred and shed requests return no route; the caller
+    /// re-submits a deferred request after `defer_s`.
+    pub fn route(
+        &mut self,
+        gw: &mut Gateway,
+        text: &str,
+        max_output_tokens: u32,
+        occupancy: &[f64],
+        defers_used: u32,
+    ) -> (AdmitDecision, Option<RoutedRequest>) {
+        let Some(cfg) = self.cfg else {
+            self.counters.admitted += 1;
+            return (AdmitDecision::Admit, Some(gw.route(text, max_output_tokens)));
+        };
+        let tier = predict_tier(gw, text, max_output_tokens);
+        let occ = occupancy.get(tier).copied().unwrap_or(0.0);
+        let engaged = self.state.observe(tier, occ, &cfg);
+        // Compress-harder is a terminal escalation: it admits (into a
+        // tightened band), so it is attempted at most once per request.
+        let can_recompress = defers_used == 0
+            && cfg.gamma_tighten > 1.0
+            && gw.cfg.enable_cr
+            && classify(text).compressible();
+        match decide(engaged, can_recompress, defers_used, &cfg) {
+            AdmitDecision::Admit => {
+                self.counters.admitted += 1;
+                (AdmitDecision::Admit, Some(gw.route(text, max_output_tokens)))
+            }
+            AdmitDecision::Recompress => {
+                self.counters.recompressed += 1;
+                (
+                    AdmitDecision::Recompress,
+                    Some(gw.route_tightened(text, max_output_tokens, cfg.gamma_tighten)),
+                )
+            }
+            AdmitDecision::Defer => {
+                self.counters.deferred += 1;
+                (AdmitDecision::Defer, None)
+            }
+            AdmitDecision::Shed => {
+                self.counters.shed += 1;
+                (AdmitDecision::Shed, None)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_config_is_valid() {
+        AdmitConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn validation_names_the_offending_field() {
+        let base = AdmitConfig::default();
+        let cases: [(AdmitConfig, &str); 4] = [
+            (
+                AdmitConfig {
+                    high_watermark: 1.5,
+                    ..base
+                },
+                "watermarks",
+            ),
+            (
+                AdmitConfig {
+                    low_watermark: 0.9,
+                    high_watermark: 0.8,
+                    ..base
+                },
+                "low_watermark",
+            ),
+            (
+                AdmitConfig {
+                    defer_s: 0.0,
+                    ..base
+                },
+                "defer_s",
+            ),
+            (
+                AdmitConfig {
+                    gamma_tighten: 2.5,
+                    ..base
+                },
+                "gamma_tighten",
+            ),
+        ];
+        for (bad, field) in cases {
+            let err = bad.validate().unwrap_err().to_string();
+            assert!(err.contains(field), "{err}");
+        }
+    }
+
+    #[test]
+    fn observe_hysteresis_never_flaps_on_constant_occupancy() {
+        let cfg = AdmitConfig::default();
+        // For ANY constant occupancy, state settles after one observation
+        // and stays put forever — including inside the hysteresis band.
+        for occ100 in 0..=100 {
+            let occ = occ100 as f64 / 100.0;
+            let mut st = AdmitState::default();
+            let first = st.observe(0, occ, &cfg);
+            for _ in 0..50 {
+                assert_eq!(st.observe(0, occ, &cfg), first, "occ {occ}");
+            }
+        }
+    }
+
+    #[test]
+    fn observe_engages_high_releases_low() {
+        let cfg = AdmitConfig::default();
+        let mut st = AdmitState::default();
+        assert!(!st.observe(0, 0.84, &cfg), "below high: stays out");
+        assert!(st.observe(0, 0.85, &cfg), "at high: engages");
+        assert!(st.observe(0, 0.75, &cfg), "inside band: stays engaged");
+        assert!(st.observe(0, 0.70, &cfg), "at low: still engaged");
+        assert!(!st.observe(0, 0.69, &cfg), "below low: releases");
+        assert!(!st.observe(0, 0.80, &cfg), "band from below: stays out");
+        // Tiers are independent.
+        assert!(st.observe(2, 0.9, &cfg));
+        assert!(!st.engaged(0));
+        assert!(st.engaged(2));
+        assert!(!st.engaged(7), "unobserved tier reads disengaged");
+    }
+
+    #[test]
+    fn decision_ladder_ordering() {
+        let cfg = AdmitConfig::default(); // max_defers = 3
+        assert_eq!(decide(false, true, 0, &cfg), AdmitDecision::Admit);
+        assert_eq!(decide(false, false, 99, &cfg), AdmitDecision::Admit);
+        // Engaged: recompress first when available...
+        assert_eq!(decide(true, true, 0, &cfg), AdmitDecision::Recompress);
+        // ...then defer until the budget is exhausted...
+        for d in 0..3 {
+            assert_eq!(decide(true, false, d, &cfg), AdmitDecision::Defer);
+        }
+        // ...and shed only as the last resort.
+        assert_eq!(decide(true, false, 3, &cfg), AdmitDecision::Shed);
+        let no_defers = AdmitConfig {
+            max_defers: 0,
+            ..cfg
+        };
+        assert_eq!(decide(true, false, 0, &no_defers), AdmitDecision::Shed);
+    }
+
+    #[test]
+    fn tightened_gammas_respect_the_clamp() {
+        let g = tightened_gammas(&[1.5, 1.9, 1.0], 1.25);
+        assert!((g[0] - 1.875).abs() < 1e-12);
+        assert!((g[1] - 2.0).abs() < 1e-12, "capped at 2");
+        assert!((g[2] - 1.25).abs() < 1e-12);
+        // tighten = 1 is the identity.
+        assert_eq!(tightened_gammas(&[1.5, 1.2], 1.0), vec![1.5, 1.2]);
+    }
+
+    #[test]
+    fn counters_total_sums_all_decisions() {
+        let c = AdmitCounters {
+            admitted: 5,
+            deferred: 3,
+            recompressed: 2,
+            shed: 1,
+        };
+        assert_eq!(c.total(), 11);
+    }
+}

@@ -395,6 +395,60 @@ impl Gateway {
         finish_request(out, max_output_tokens, est_total, t0.elapsed().as_secs_f64())
     }
 
+    /// Route one request through a gamma-tightened view of the config —
+    /// the admission controller's compress-harder escalation
+    /// (`router::admit`). Every boundary's gamma is multiplied by
+    /// `tighten` and re-clamped into the C&R band's [1, 2] envelope and
+    /// at the next boundary up (exactly like [`GatewayConfig::tiered`]),
+    /// so a pressured tier pulls more borderline traffic down the ladder
+    /// without ever widening a band past what the planner's
+    /// adjacent-transfer accounting allows. Estimator update and
+    /// counters behave exactly like [`Gateway::route`]; `tighten = 1`
+    /// routes bit-identically to it.
+    pub fn route_tightened(
+        &mut self,
+        text: &str,
+        max_output_tokens: u32,
+        tighten: f64,
+    ) -> RoutedRequest {
+        let t0 = std::time::Instant::now();
+        let category = classify(text);
+        let est_prompt = self
+            .estimator
+            .estimate_prompt_tokens(text.len(), category);
+        let est_total = est_prompt + max_output_tokens;
+        let actual_prompt = count_tokens(text);
+        self.estimator.update(text.len(), actual_prompt, category);
+        let tight = GatewayConfig {
+            tiers: self
+                .cfg
+                .tiers
+                .iter()
+                .enumerate()
+                .map(|(i, tr)| TierRoute {
+                    boundary: tr.boundary,
+                    gamma: clamp_gamma(
+                        tr.boundary,
+                        self.cfg.tiers.get(i + 1).map(|t| t.boundary),
+                        (tr.gamma * tighten).min(2.0),
+                    ),
+                })
+                .collect(),
+            enable_cr: self.cfg.enable_cr,
+        };
+        let out = route_ladder(
+            &tight,
+            &mut self.scratch,
+            text,
+            max_output_tokens,
+            category,
+            actual_prompt,
+            est_total,
+        );
+        self.absorb_outcome(&out);
+        finish_request(out, max_output_tokens, est_total, t0.elapsed().as_secs_f64())
+    }
+
     /// Re-route a request whose first attempt died downstream (a replica
     /// crash killed it in flight). The decision runs the same ladder as
     /// [`Gateway::route`] against the gateway's *current* config — which

@@ -3,8 +3,11 @@
 //! Compress-and-Route inline on the request path — plus the sharded
 //! admission pipeline (`shard`) and the fingerprint-keyed route memo
 //! (`memo`) layered on top (§Perf, PR 8), and degraded-capacity failover
-//! (`failover`): hysteretic tier-drop + gamma-boost spill for chaos runs.
+//! (`failover`): hysteretic tier-drop + gamma-boost spill for chaos runs,
+//! and KV-pressure admission control (`admit`): watermark-hysteresis
+//! admit / compress-harder / defer / shed in front of the ladder.
 
+pub mod admit;
 pub mod classify;
 pub mod estimator;
 pub mod failover;
@@ -12,6 +15,10 @@ pub mod gateway;
 pub mod memo;
 pub mod shard;
 
+pub use admit::{
+    decide, tightened_gammas, AdmissionController, AdmitConfig, AdmitCounters,
+    AdmitDecision, AdmitState,
+};
 pub use classify::classify;
 pub use estimator::TokenEstimator;
 pub use failover::{

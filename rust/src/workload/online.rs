@@ -326,6 +326,56 @@ impl OnlineEstimator {
     }
 }
 
+/// Period-aware (seasonal) rate forecaster: per-phase-bin running means
+/// of observed rates over a known period (diurnal, weekly, ...). The
+/// sliding-window [`OnlineEstimator`] forgets everything older than its
+/// window; this keeps one scalar mean per phase bin instead, so a
+/// controller can anticipate a recurring ramp it has seen on previous
+/// periods — before the reactive window can. Consumed by the autoscale
+/// controllers behind `seasonal_period_s` (off by default): planning
+/// takes `max(reactive, seasonal forecast)`, so the knob only ever
+/// raises the planning rate (the same no-op contract as `forecast`).
+#[derive(Clone, Debug)]
+pub struct SeasonalEstimator {
+    period_s: f64,
+    /// Per-bin running sums/counts of observed rates.
+    sums: Vec<f64>,
+    counts: Vec<u64>,
+}
+
+impl SeasonalEstimator {
+    pub fn new(period_s: f64, bins: usize) -> Self {
+        assert!(period_s > 0.0 && period_s.is_finite(), "period must be positive");
+        assert!(bins >= 2, "need at least 2 phase bins");
+        SeasonalEstimator {
+            period_s,
+            sums: vec![0.0; bins],
+            counts: vec![0; bins],
+        }
+    }
+
+    /// The phase bin time `t` falls into.
+    fn bin(&self, t: f64) -> usize {
+        let phase = t.rem_euclid(self.period_s) / self.period_s;
+        ((phase * self.sums.len() as f64) as usize).min(self.sums.len() - 1)
+    }
+
+    /// Fold one rate observation taken at time `t` into its phase bin.
+    pub fn observe(&mut self, t: f64, rate: f64) {
+        let b = self.bin(t);
+        self.sums[b] += rate;
+        self.counts[b] += 1;
+    }
+
+    /// The mean observed rate at the phase of time `t`, or `None` when
+    /// that phase has no history yet (first pass through the period) —
+    /// the caller then keeps its reactive estimate.
+    pub fn forecast(&self, t: f64) -> Option<f64> {
+        let b = self.bin(t);
+        (self.counts[b] > 0).then(|| self.sums[b] / self.counts[b] as f64)
+    }
+}
+
 /// Build the anchored CDF from order-statistic (`kth`, 1-based rank in the
 /// window) and rank (`rank_le`, observations <= x) oracles — shared by the
 /// Fenwick fast path and the exact-sort fallback so both produce the same
@@ -617,6 +667,54 @@ mod tests {
         }
         // The support upper edge is the true maximum, not the clamp.
         assert!(got.quantile(1.0) > (1u32 << 18) as f64);
+    }
+
+    #[test]
+    fn seasonal_anticipates_a_diurnal_ramp() {
+        // A sinusoidal "day": rate(t) = 100 + 80 sin(2 pi t / P). After
+        // two full periods of epoch observations, the forecast one epoch
+        // ahead of the trough's rising edge must see the coming ramp —
+        // i.e. exceed the rate observed *at* that time — and the forecast
+        // at any phase must track the true rate closely.
+        let period = 86_400.0;
+        let epoch = period / 48.0; // 30-minute epochs
+        let rate_at = |t: f64| 100.0 + 80.0 * (2.0 * std::f64::consts::PI * t / period).sin();
+        let mut se = SeasonalEstimator::new(period, 16);
+        let mut t = 0.0;
+        while t < 2.0 * period {
+            se.observe(t, rate_at(t));
+            t += epoch;
+        }
+        // Third day, early rising edge: the same-phase history anticipates.
+        let probe = 2.0 * period + period / 16.0;
+        let fc = se.forecast(probe + epoch).expect("two days of history");
+        assert!(fc > rate_at(probe), "forecast {fc} vs current {}", rate_at(probe));
+        for i in 0..16 {
+            let tp = 2.0 * period + (i as f64 + 0.5) / 16.0 * period;
+            let f = se.forecast(tp).expect("full history");
+            let truth = rate_at(tp);
+            assert!((f - truth).abs() < 0.2 * truth + 5.0, "phase {i}: {f} vs {truth}");
+        }
+    }
+
+    #[test]
+    fn seasonal_is_flat_on_a_flat_window_and_none_without_history() {
+        let mut se = SeasonalEstimator::new(1000.0, 8);
+        assert_eq!(se.forecast(0.0), None, "no history yet");
+        for i in 0..200 {
+            se.observe(i as f64 * 10.0, 42.0);
+        }
+        // A constant rate forecasts exactly itself at every phase — no
+        // phantom headroom for the max(reactive, seasonal) combiner.
+        for i in 0..20 {
+            let f = se.forecast(i as f64 * 137.0).expect("history");
+            assert!((f - 42.0).abs() < 1e-9, "{f}");
+        }
+        // A phase never observed still reads None.
+        let mut sparse = SeasonalEstimator::new(1000.0, 8);
+        sparse.observe(0.0, 10.0);
+        assert!(sparse.forecast(0.0).is_some());
+        assert_eq!(sparse.forecast(500.0), None);
     }
 
     #[test]

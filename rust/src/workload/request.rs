@@ -31,6 +31,27 @@ impl Category {
             Category::ToolUse => "tool_use",
         }
     }
+
+    /// Stable index for per-category arrays (same order as
+    /// [`Category::ALL`] and the workloads' `category_mix`).
+    pub fn index(self) -> usize {
+        match self {
+            Category::Conversational => 0,
+            Category::Rag => 1,
+            Category::Code => 2,
+            Category::ToolUse => 3,
+        }
+    }
+}
+
+impl Category {
+    /// Every category, in `category_mix` / [`Category::index`] order.
+    pub const ALL: [Category; 4] = [
+        Category::Conversational,
+        Category::Rag,
+        Category::Code,
+        Category::ToolUse,
+    ];
 }
 
 /// A serving request as seen by the gateway.
@@ -97,6 +118,35 @@ impl OutputModel {
             .min(l_total * 0.9)
             .max(1.0)
     }
+
+    /// Validate the model's fields, naming the offending field in `ctx`
+    /// (the caller supplies "output model" or "output model \"code\"
+    /// (index 2)" — same error style as `SkuCatalog::validate`).
+    pub fn validate(&self, ctx: &str) -> anyhow::Result<()> {
+        if !self.frac.is_finite() || self.frac <= 0.0 || self.frac >= 1.0 {
+            anyhow::bail!("{ctx}: frac must be inside (0, 1), got {}", self.frac);
+        }
+        if !self.sigma.is_finite() || self.sigma < 0.0 {
+            anyhow::bail!(
+                "{ctx}: sigma must be finite and non-negative, got {}",
+                self.sigma
+            );
+        }
+        if self.min_tokens < 1 {
+            anyhow::bail!(
+                "{ctx}: min_tokens must be at least 1, got {}",
+                self.min_tokens
+            );
+        }
+        if self.max_tokens < self.min_tokens {
+            anyhow::bail!(
+                "{ctx}: max_tokens ({}) must be >= min_tokens ({})",
+                self.max_tokens,
+                self.min_tokens
+            );
+        }
+        Ok(())
+    }
 }
 
 #[cfg(test)]
@@ -137,6 +187,47 @@ mod tests {
         for _ in 0..10_000 {
             let out = m.sample_l_out(4000.0, &mut rng);
             assert!((16..=2048).contains(&out));
+        }
+    }
+
+    #[test]
+    fn category_index_matches_all_order() {
+        for (i, c) in Category::ALL.iter().enumerate() {
+            assert_eq!(c.index(), i);
+        }
+    }
+
+    #[test]
+    fn output_model_validation_names_field_and_context() {
+        let ok = OutputModel {
+            frac: 0.15,
+            sigma: 0.3,
+            min_tokens: 16,
+            max_tokens: 2048,
+        };
+        assert!(ok.validate("output model").is_ok());
+        // Each rejection path names the bad field and echoes the context.
+        let cases: [(OutputModel, &str); 5] = [
+            (OutputModel { frac: 0.0, ..ok }, "frac"),
+            (OutputModel { frac: 1.5, ..ok }, "frac"),
+            (OutputModel { sigma: -0.1, ..ok }, "sigma"),
+            (OutputModel { min_tokens: 0, ..ok }, "min_tokens"),
+            (
+                OutputModel {
+                    min_tokens: 100,
+                    max_tokens: 50,
+                    ..ok
+                },
+                "max_tokens",
+            ),
+        ];
+        for (bad, field) in cases {
+            let err = bad
+                .validate("output model \"code\" (index 2)")
+                .unwrap_err()
+                .to_string();
+            assert!(err.contains(field), "{err}");
+            assert!(err.contains("index 2"), "{err}");
         }
     }
 

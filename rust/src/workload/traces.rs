@@ -29,6 +29,14 @@ pub struct Workload {
     /// Unconditional category weights: (conversational, rag, code, tool_use).
     pub category_mix: [f64; 4],
     pub output: OutputModel,
+    /// Per-archetype output models, indexed by [`Category::index`]. `None`
+    /// (every built-in evaluation trace) keeps the single shared `output`
+    /// model and the historical RNG draw order — bit-identical sampling.
+    /// `Some` draws the category *before* the output length so each
+    /// archetype can decode-skew differently (the "agentic" trace);
+    /// `output` then serves as the blended analytic stand-in for
+    /// calibrations that integrate one model.
+    pub output_by_category: Option<[OutputModel; 4]>,
 }
 
 impl Workload {
@@ -88,7 +96,7 @@ impl Workload {
         for &(x, f) in self.cdf.anchors() {
             h = fnv1a_words(h, &[x.to_bits(), f.to_bits()]);
         }
-        fnv1a_words(
+        h = fnv1a_words(
             h,
             &[
                 self.output.frac.to_bits(),
@@ -96,15 +104,46 @@ impl Workload {
                 self.output.min_tokens as u64,
                 self.output.max_tokens as u64,
             ],
-        )
+        );
+        // Absorb per-category models only when present, so every workload
+        // without them keeps its pre-existing fingerprint (cache keys and
+        // moment-table registry entries survive the field's addition).
+        if let Some(models) = &self.output_by_category {
+            for m in models {
+                h = fnv1a_words(
+                    h,
+                    &[
+                        m.frac.to_bits(),
+                        m.sigma.to_bits(),
+                        m.min_tokens as u64,
+                        m.max_tokens as u64,
+                    ],
+                );
+            }
+        }
+        h
     }
 
     /// Draw one request (without arrival time; see [`super::arrivals`]).
     pub fn sample_request(&self, id: u64, arrival_s: f64, rng: &mut Rng) -> Request {
         let l_total = self.cdf.sample(rng).round().max(2.0);
-        let l_out = self.output.sample_l_out(l_total, rng);
-        let category = self.sample_category(l_total, self.gamma, rng);
-        Request::new(id, l_total as u32, l_out, category, arrival_s)
+        match &self.output_by_category {
+            // Identity discipline: without per-category models the draw
+            // order (length, output jitter, category) is the historical
+            // stream — bit-identical requests under any seed.
+            None => {
+                let l_out = self.output.sample_l_out(l_total, rng);
+                let category = self.sample_category(l_total, self.gamma, rng);
+                Request::new(id, l_total as u32, l_out, category, arrival_s)
+            }
+            // The opt-in path must know the category before drawing the
+            // output length, so it reorders to (length, category, output).
+            Some(models) => {
+                let category = self.sample_category(l_total, self.gamma, rng);
+                let l_out = models[category.index()].sample_l_out(l_total, rng);
+                Request::new(id, l_total as u32, l_out, category, arrival_s)
+            }
+        }
     }
 }
 
@@ -143,6 +182,7 @@ pub fn azure() -> Workload {
             min_tokens: 16,
             max_tokens: 2048,
         },
+        output_by_category: None,
     }
 }
 
@@ -177,6 +217,7 @@ pub fn lmsys() -> Workload {
             min_tokens: 16,
             max_tokens: 1024,
         },
+        output_by_category: None,
     }
 }
 
@@ -212,6 +253,58 @@ pub fn agent_heavy() -> Workload {
             min_tokens: 16,
             max_tokens: 2048,
         },
+        output_by_category: None,
+    }
+}
+
+/// Long-decode "agentic" variant of the Agent-heavy trace (ROADMAP item
+/// 4): the same prompt-length CDF and category structure, but decode
+/// budgets dominated by multi-step tool loops — per-archetype output
+/// models with 2.5–3.5x the base decode fraction, so decode-phase KV
+/// growth (not prompt length) is the binding resource. The shared
+/// `output` model is the mixture's analytic stand-in for single-model
+/// calibrations; the DES samples the per-category models.
+pub fn agentic() -> Workload {
+    let base = agent_heavy();
+    Workload {
+        name: "agentic",
+        output: OutputModel {
+            frac: 0.30,
+            sigma: 0.45,
+            min_tokens: 64,
+            max_tokens: 4096,
+        },
+        output_by_category: Some([
+            // Conversational: shorter summarize/answer turns.
+            OutputModel {
+                frac: 0.25,
+                sigma: 0.4,
+                min_tokens: 64,
+                max_tokens: 2048,
+            },
+            // RAG: grounded synthesis over retrieved context.
+            OutputModel {
+                frac: 0.28,
+                sigma: 0.4,
+                min_tokens: 64,
+                max_tokens: 4096,
+            },
+            // Code: multi-file edit streams — the decode-heaviest class.
+            OutputModel {
+                frac: 0.35,
+                sigma: 0.5,
+                min_tokens: 128,
+                max_tokens: 4096,
+            },
+            // Tool use: long call/observation loops.
+            OutputModel {
+                frac: 0.32,
+                sigma: 0.5,
+                min_tokens: 64,
+                max_tokens: 4096,
+            },
+        ]),
+        ..base
     }
 }
 
@@ -265,6 +358,37 @@ impl Workload {
             .unwrap_or([0.7, 0.2, 0.1, 0.0]);
         let out = j.get("output");
         let of = |k: &str, d: f64| out.and_then(|o| o.get(k)).and_then(Json::as_f64).unwrap_or(d);
+        let output = OutputModel {
+            frac: of("frac", 0.15),
+            sigma: of("sigma", 0.3),
+            min_tokens: of("min_tokens", 16.0) as u32,
+            max_tokens: of("max_tokens", 2048.0) as u32,
+        };
+        output.validate("output model")?;
+        // Optional per-archetype override block, keyed by category name;
+        // absent categories inherit the base model, and every model is
+        // validated with its category name and index in the error.
+        let output_by_category = match j.get("output_by_category") {
+            None => None,
+            Some(per) => {
+                let mut models = [output; 4];
+                for (i, c) in Category::ALL.iter().enumerate() {
+                    if let Some(o) = per.get(c.name()) {
+                        let g =
+                            |k: &str, d: f64| o.get(k).and_then(Json::as_f64).unwrap_or(d);
+                        models[i] = OutputModel {
+                            frac: g("frac", output.frac),
+                            sigma: g("sigma", output.sigma),
+                            min_tokens: g("min_tokens", output.min_tokens as f64) as u32,
+                            max_tokens: g("max_tokens", output.max_tokens as f64) as u32,
+                        };
+                    }
+                    models[i]
+                        .validate(&format!("output model \"{}\" (index {i})", c.name()))?;
+                }
+                Some(models)
+            }
+        };
         Ok(Workload {
             // Config-loaded workloads live for the process lifetime.
             name: Box::leak(name.into_boxed_str()),
@@ -274,12 +398,8 @@ impl Workload {
             p_c: f("p_c", 1.0),
             borderline_code_frac: f("borderline_code_frac", 0.0),
             category_mix: mix,
-            output: OutputModel {
-                frac: of("frac", 0.15),
-                sigma: of("sigma", 0.3),
-                min_tokens: of("min_tokens", 16.0) as u32,
-                max_tokens: of("max_tokens", 2048.0) as u32,
-            },
+            output,
+            output_by_category,
         })
     }
 
@@ -393,6 +513,9 @@ pub fn by_name(name: &str) -> Option<Workload> {
         "azure" => Some(azure()),
         "lmsys" => Some(lmsys()),
         "agent-heavy" | "agent" => Some(agent_heavy()),
+        // Not part of `all()`: the evaluation tables iterate the paper's
+        // three traces; the agentic variant is the KV-overload scenario.
+        "agentic" | "agent-decode" => Some(agentic()),
         _ => None,
     }
 }
@@ -566,6 +689,116 @@ mod tests {
         for w in all() {
             assert_eq!(by_name(w.name).unwrap().name, w.name);
         }
+        assert_eq!(by_name("agentic").unwrap().name, "agentic");
+        assert_eq!(by_name("agent-decode").unwrap().name, "agentic");
         assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn agentic_trace_is_decode_heavy_but_not_in_all() {
+        let w = agentic();
+        assert!(w.output_by_category.is_some());
+        // Same length structure as agent-heavy, heavier decode.
+        assert!((w.alpha() - agent_heavy().alpha()).abs() < 1e-12);
+        let mut rng = Rng::new(11);
+        let n = 20_000;
+        let mean_out: f64 = (0..n)
+            .map(|i| w.sample_request(i, 0.0, &mut rng).l_out as f64)
+            .sum::<f64>()
+            / n as f64;
+        let mut rng = Rng::new(11);
+        let mean_base: f64 = (0..n)
+            .map(|i| agent_heavy().sample_request(i, 0.0, &mut rng).l_out as f64)
+            .sum::<f64>()
+            / n as f64;
+        assert!(
+            mean_out > 2.0 * mean_base,
+            "agentic mean l_out {mean_out} vs agent-heavy {mean_base}"
+        );
+        // Not an evaluation trace: the paper tables iterate all() as-is.
+        assert!(all().iter().all(|t| t.name != "agentic"));
+    }
+
+    #[test]
+    fn fingerprint_ignores_absent_category_models() {
+        // Adding the field changed no existing fingerprint (calibration
+        // caches survive), while Some(models) mints a fresh one.
+        let base = agent_heavy();
+        let mut with = base.clone();
+        with.output_by_category = Some([base.output; 4]);
+        assert_eq!(base.fingerprint(), agent_heavy().fingerprint());
+        assert_ne!(base.fingerprint(), with.fingerprint());
+        assert_ne!(agentic().fingerprint(), base.fingerprint());
+    }
+
+    #[test]
+    fn sampling_without_category_models_is_order_preserving() {
+        // The None arm draws (length, output, category) exactly as before
+        // the field existed: pin against a hand-rolled replay of that
+        // order on a shared RNG stream.
+        let w = azure();
+        let mut rng = Rng::new(42);
+        let mut oracle = Rng::new(42);
+        for i in 0..5_000 {
+            let r = w.sample_request(i, 0.0, &mut rng);
+            let l_total = w.cdf.sample(&mut oracle).round().max(2.0);
+            let l_out = w.output.sample_l_out(l_total, &mut oracle);
+            let category = w.sample_category(l_total, w.gamma, &mut oracle);
+            let want = Request::new(i, l_total as u32, l_out, category, 0.0);
+            assert_eq!(r.l_total, want.l_total);
+            assert_eq!(r.l_out, want.l_out);
+            assert_eq!(r.category, want.category);
+        }
+    }
+
+    #[test]
+    fn from_json_parses_per_category_output_models() {
+        let src = r#"{
+          "cdf": [[16, 0.0], [2048, 0.7], [65536, 1.0]],
+          "output": {"frac": 0.2, "sigma": 0.1, "min_tokens": 8, "max_tokens": 512},
+          "output_by_category": {
+            "code": {"frac": 0.4, "max_tokens": 4096},
+            "tool_use": {"frac": 0.35}
+          }
+        }"#;
+        let j = crate::util::json::Json::parse(src).unwrap();
+        let w = Workload::from_json(&j).unwrap();
+        let models = w.output_by_category.expect("per-category block parsed");
+        // Overridden fields land on the named category...
+        assert!((models[Category::Code.index()].frac - 0.4).abs() < 1e-12);
+        assert_eq!(models[Category::Code.index()].max_tokens, 4096);
+        assert!((models[Category::ToolUse.index()].frac - 0.35).abs() < 1e-12);
+        // ...unspecified fields and categories inherit the base model.
+        assert!((models[Category::Code.index()].sigma - 0.1).abs() < 1e-12);
+        assert_eq!(models[Category::Rag.index()].max_tokens, 512);
+    }
+
+    #[test]
+    fn from_json_rejects_bad_output_models_naming_field_and_index() {
+        let base = r#""cdf": [[16, 0.0], [65536, 1.0]]"#;
+        // Bad base model: field named, no index.
+        let j = crate::util::json::Json::parse(&format!(
+            r#"{{{base}, "output": {{"frac": 1.5}}}}"#
+        ))
+        .unwrap();
+        let err = Workload::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("frac"), "{err}");
+        // Bad per-category model: category name and index both named.
+        let j = crate::util::json::Json::parse(&format!(
+            r#"{{{base}, "output_by_category": {{"code": {{"min_tokens": 0}}}}}}"#
+        ))
+        .unwrap();
+        let err = Workload::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("min_tokens"), "{err}");
+        assert!(err.contains("\"code\""), "{err}");
+        assert!(err.contains("index 2"), "{err}");
+        // max < min across inherited fields is still caught.
+        let j = crate::util::json::Json::parse(&format!(
+            r#"{{{base}, "output_by_category": {{"rag": {{"min_tokens": 9000}}}}}}"#
+        ))
+        .unwrap();
+        let err = Workload::from_json(&j).unwrap_err().to_string();
+        assert!(err.contains("max_tokens"), "{err}");
+        assert!(err.contains("index 1"), "{err}");
     }
 }

@@ -13,6 +13,10 @@
 //!   wired in at all — per-epoch metrics compared as serialized JSON.
 //! * **Determinism**: the same plan and seed reproduce the same fault
 //!   trace and the same per-epoch series, run to run.
+//! * **Bounded retries** (ISSUE 10 satellite): with a crash-retry budget
+//!   the conservation law extends to
+//!   `completed + dropped_retries == n`; `--max-retries` unset (or large
+//!   enough to never bind) stays bit-identical to the unbounded engine.
 
 use fleetopt::config::PlannerConfig;
 use fleetopt::fleetsim::{
@@ -250,6 +254,70 @@ fn chaos_runs_are_deterministic_per_seed() {
     assert_eq!(
         EpochMetrics::series_to_json(&a.epochs),
         EpochMetrics::series_to_json(&b.epochs)
+    );
+}
+
+#[test]
+fn retry_budget_extends_conservation_to_dropped_requests() {
+    // Budget 0: the first kill drops the request instead of requeueing
+    // it. The books must still balance exactly — every request completes
+    // or is dropped, never both, never neither — and the kill/retry
+    // identity survives (the attempt is counted even when the budget
+    // refuses the requeue).
+    let w = traces::azure();
+    let base = 300.0;
+    let n = 5_000;
+    let horizon = n as f64 / base;
+    let input = fast_input(&w, base);
+    let plan = plan_for(&input, 2);
+    let model = RateModel::Constant(base);
+    let base_cfg = AutoscaleConfig {
+        epoch_s: horizon / 10.0,
+        window_s: horizon / 5.0,
+        provision_delay_s: horizon / 20.0,
+        ..AutoscaleConfig::default()
+    };
+    let chaos = ChaosOpts {
+        faults: Some(stormy_plan(horizon, 1, 0x5EED)),
+        failover: Some(FailoverConfig::default()),
+    };
+    let run = |max_retries: Option<u32>| {
+        let cfg = AutoscaleConfig {
+            max_retries,
+            ..base_cfg.clone()
+        };
+        simulate_autoscale_chaos(&w, model.clone(), n, &input, plan.clone(), &cfg, 13, &chaos)
+    };
+    let strict = run(Some(0));
+    assert!(strict.dropped_retries > 0, "budget 0 never dropped a kill");
+    assert_eq!(
+        strict.completed + strict.dropped_retries,
+        n as u64,
+        "completed {} + dropped {} must cover the trace",
+        strict.completed,
+        strict.dropped_retries
+    );
+    assert_eq!(strict.censored, 0);
+    assert_eq!(
+        strict.retries_total, strict.killed_in_flight,
+        "kill/retry identity must survive the budget"
+    );
+    // With budget 0 every kill is a drop: the two tallies coincide.
+    assert_eq!(strict.dropped_retries, strict.killed_in_flight);
+
+    // None (unbounded) and a budget too large to ever bind are the same
+    // engine, bit for bit.
+    let unbounded = run(None);
+    let huge = run(Some(u32::MAX));
+    assert_eq!(unbounded.dropped_retries, 0);
+    assert_eq!(huge.dropped_retries, 0);
+    assert_eq!(unbounded.completed, n as u64);
+    assert_eq!(huge.completed, unbounded.completed);
+    assert_eq!(huge.cost.to_bits(), unbounded.cost.to_bits());
+    assert_eq!(
+        EpochMetrics::series_to_json(&huge.epochs),
+        EpochMetrics::series_to_json(&unbounded.epochs),
+        "non-binding budget diverged from the unbounded engine"
     );
 }
 

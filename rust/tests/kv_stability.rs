@@ -1,0 +1,197 @@
+//! KV-cache decode modeling: identity discipline and stability (ISSUE 10).
+//!
+//! * **Off == bit-identical**: `simulate_fleet_tiered_kv(.., None)` IS
+//!   `simulate_fleet_tiered_chaos` (delegation pinned), and a
+//!   `cap_frac = 1.0` policy — provably non-binding, since K requests of
+//!   at most `c_max` tokens can never exceed `n_slots * c_max` while a
+//!   slot is free — changes no admission decision.
+//! * **Binding caps are safe**: a tight cap queues requests instead of
+//!   oversubscribing (zero ledger violations), still completes the trace,
+//!   and strictly increases waiting.
+//! * **Planner floor**: `PlanInput::kv` only ever raises tier counts
+//!   (`kv: None` is the bit-identical baseline), and the sized fleet
+//!   respects the closed-form `rho_kv <= rho_max` bound per tier.
+
+use fleetopt::config::PlannerConfig;
+use fleetopt::fleetsim::{
+    simulate_fleet_tiered_chaos, simulate_fleet_tiered_kv, FaultPlan, TieredSimResult,
+};
+use fleetopt::planner::{plan_spec_sweep_gamma, plan_tiers, PlanInput, TieredPlan};
+use fleetopt::queueing::kv::KvPlanPolicy;
+use fleetopt::workload::traces::{self, Workload};
+
+fn fast_input(w: &Workload, lambda: f64) -> PlanInput {
+    let mut i = PlanInput::new(w.clone(), lambda);
+    i.cfg = PlannerConfig {
+        mc_samples: 8_000,
+        ..PlannerConfig::default()
+    };
+    i
+}
+
+fn plan_for(input: &PlanInput, boundaries: &[u32]) -> TieredPlan {
+    let spec = input.gpu.fleet_spec(boundaries);
+    plan_spec_sweep_gamma(input, &spec).expect("plan")
+}
+
+fn assert_tiers_identical(a: &TieredSimResult, b: &TieredSimResult, label: &str) {
+    assert_eq!(a.tiers.len(), b.tiers.len(), "{label}");
+    for (ti, (ra, rb)) in a.tiers.iter().zip(&b.tiers).enumerate() {
+        match (ra, rb) {
+            (Some(ra), Some(rb)) => {
+                assert_eq!(ra.completed, rb.completed, "{label} tier {ti}");
+                assert_eq!(ra.events, rb.events, "{label} tier {ti}");
+                assert_eq!(
+                    ra.utilization.to_bits(),
+                    rb.utilization.to_bits(),
+                    "{label} tier {ti}: utilization bits"
+                );
+                let (mut ta, mut tb) = (ra.ttft.clone(), rb.ttft.clone());
+                assert_eq!(
+                    ta.p99().to_bits(),
+                    tb.p99().to_bits(),
+                    "{label} tier {ti}: ttft bits"
+                );
+            }
+            (None, None) => {}
+            _ => panic!("{label} tier {ti}: provisioning diverged"),
+        }
+    }
+}
+
+#[test]
+fn kv_none_is_the_chaos_engine_verbatim() {
+    let w = traces::azure();
+    let input = fast_input(&w, 300.0);
+    let plan = plan_for(&input, &[2048, 16384]);
+    let n = 5_000;
+    let faults = FaultPlan::default();
+    let a = simulate_fleet_tiered_chaos(&w, &plan, &input.gpu, 300.0, n, 9, &faults);
+    let b = simulate_fleet_tiered_kv(&w, &plan, &input.gpu, 300.0, n, 9, &faults, None);
+    assert_tiers_identical(&a, &b, "kv=None");
+}
+
+#[test]
+fn non_binding_cap_changes_no_admission_decision() {
+    // cap_frac = 1.0: the per-GPU cap equals the tier's full slot token
+    // budget, which resident requests (each <= c_max) cannot exceed while
+    // a slot is free. Every observable except the KV diagnostics matches
+    // the cap-less run bit for bit.
+    let w = traces::lmsys();
+    let input = fast_input(&w, 250.0);
+    let plan = plan_for(&input, &[1536]);
+    let n = 5_000;
+    let faults = FaultPlan::default();
+    let off = simulate_fleet_tiered_kv(&w, &plan, &input.gpu, 250.0, n, 3, &faults, None);
+    let policy = KvPlanPolicy { cap_frac: 1.0 };
+    for (ti, t) in plan.spec.tiers.iter().enumerate() {
+        policy.validate(ti, t.n_max, t.c_max).expect("full budget is valid");
+    }
+    let on = simulate_fleet_tiered_kv(&w, &plan, &input.gpu, 250.0, n, 3, &faults, Some(policy));
+    assert_tiers_identical(&off, &on, "cap_frac=1.0");
+    for r in on.tiers.iter().flatten() {
+        assert_eq!(r.kv_blocked, 0, "full-budget cap must never bind");
+        assert_eq!(r.kv_violations, 0);
+        assert!(r.kv_util > 0.0, "ledger must have measured under Some cap");
+    }
+    for r in off.tiers.iter().flatten() {
+        assert_eq!(r.kv_util, 0.0, "no ledger without a cap");
+    }
+}
+
+#[test]
+fn binding_cap_queues_rather_than_oversubscribes() {
+    let w = traces::azure();
+    let input = fast_input(&w, 300.0);
+    let plan = plan_for(&input, &[4096]);
+    let n = 6_000;
+    let faults = FaultPlan::default();
+    let open = simulate_fleet_tiered_kv(&w, &plan, &input.gpu, 300.0, n, 4, &faults, None);
+    // Tight but deadlock-free (cap >= c_max holds whenever n_slots >= 5).
+    let policy = KvPlanPolicy { cap_frac: 0.2 };
+    for (ti, t) in plan.spec.tiers.iter().enumerate() {
+        policy.validate(ti, t.n_max, t.c_max).expect("cap above c_max");
+    }
+    let capped = simulate_fleet_tiered_kv(&w, &plan, &input.gpu, 300.0, n, 4, &faults, Some(policy));
+    let completed: u64 = capped.tiers.iter().flatten().map(|r| r.completed).sum();
+    assert_eq!(completed + capped.censored_total(), n as u64, "conservation");
+    assert_eq!(capped.censored_total(), 0, "no horizon: the run must drain");
+    let blocked: u64 = capped.tiers.iter().flatten().map(|r| r.kv_blocked).sum();
+    assert!(blocked > 0, "a 20% cap must actually bind somewhere");
+    for (ti, r) in capped.tiers.iter().flatten().enumerate() {
+        assert_eq!(r.kv_violations, 0, "tier {ti}: ledger oversubscribed");
+        assert!(r.kv_util <= 1.0 + 1e-9, "tier {ti}: kv_util {}", r.kv_util);
+    }
+    // Tighter decode memory means at least as much queueing.
+    let wait = |s: &TieredSimResult| -> f64 {
+        s.tiers
+            .iter()
+            .flatten()
+            .map(|r| {
+                let mut w = r.wait.clone();
+                w.p99()
+            })
+            .fold(0.0, f64::max)
+    };
+    assert!(wait(&capped) >= wait(&open), "cap cannot reduce waiting");
+}
+
+#[test]
+fn planner_kv_floor_only_raises_tier_counts() {
+    // Fixed gammas via `plan_tiers`, so the tier cuts and per-tier rates
+    // are pinned and the only degree of freedom is the KV floor itself:
+    // `kv: None` must be bit-identical, a derated budget can only raise
+    // per-tier counts, tighter budgets dominate looser ones, and a
+    // near-zero budget must actually bind.
+    for w in traces::all() {
+        let input = fast_input(&w, 800.0);
+        let spec = input.gpu.fleet_spec(&[w.b_short]);
+        let plan = |kv: Option<KvPlanPolicy>| {
+            let mut i = fast_input(&w, 800.0);
+            i.kv = kv;
+            plan_tiers(&i, &spec, &[1.5], true, None).expect("plan")
+        };
+        let baseline = plan(None);
+        let same = plan(None);
+        assert_eq!(baseline.gpu_counts(), same.gpu_counts(), "{}", w.name);
+        assert_eq!(
+            baseline.cost_yr.to_bits(),
+            same.cost_yr.to_bits(),
+            "{}: kv None must be deterministic and bit-identical",
+            w.name
+        );
+        let loose = plan(Some(KvPlanPolicy { cap_frac: 0.25 }));
+        let tight = plan(Some(KvPlanPolicy { cap_frac: 0.02 }));
+        for ti in 0..baseline.tiers.len() {
+            let (b, l, t) = (
+                baseline.tiers[ti].n_gpus,
+                loose.tiers[ti].n_gpus,
+                tight.tiers[ti].n_gpus,
+            );
+            assert!(
+                l >= b,
+                "{} tier {ti}: KV floor lowered the count {b} -> {l}",
+                w.name
+            );
+            assert!(
+                t >= l,
+                "{} tier {ti}: tighter budget shrank the fleet {l} -> {t}",
+                w.name
+            );
+        }
+        assert!(loose.cost_yr >= baseline.cost_yr, "{}", w.name);
+        assert!(tight.cost_yr >= loose.cost_yr, "{}", w.name);
+        // 2% of the slot token budget is far below the mean resident
+        // footprint on every trace: the floor must dominate Erlang-C.
+        let total = |p: &fleetopt::planner::TieredPlan| -> u64 {
+            p.gpu_counts().iter().sum()
+        };
+        assert!(
+            total(&tight) > total(&baseline),
+            "{}: a 2% KV budget never bound ({} vs {})",
+            w.name,
+            total(&tight),
+            total(&baseline)
+        );
+    }
+}
